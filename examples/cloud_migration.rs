@@ -1,0 +1,139 @@
+//! Cloud-to-cloud migration over the REST API (§7.3.2, Fig 5 scenario).
+//!
+//! Two independent CACS instances ("CACS-Snooze" and "CACS-OpenStack" in
+//! the paper) run as separate REST services.  This binary is the analog
+//! of the paper's 90-line Python migration script: for each application
+//! it checkpoints on the source, pulls the images over HTTP, pushes them
+//! to the destination, and restarts there — then verifies the clone
+//! resumed from the source's iteration.
+//!
+//!   cargo run --release --example cloud_migration [-- --apps 8]
+
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::storage::mem::MemStore;
+use cacs::util::args::Args;
+use cacs::util::http::Client;
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn start_service(name: &str) -> (cacs::util::http::Server, Client) {
+    let svc = CacsService::new(Arc::new(MemStore::new()), ServiceConfig::default());
+    svc.start_monitor();
+    let server = rest::serve(svc, "127.0.0.1:0", 4).unwrap();
+    let client = Client::new(&server.addr().to_string());
+    println!("{name}: REST API on http://{}", server.addr());
+    (server, client)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_apps = args.usize_or("apps", 8);
+
+    let (_src_server, src) = start_service("CACS-Snooze");
+    let (_dst_server, dst) = start_service("CACS-OpenStack");
+
+    // start n applications on the source cloud
+    let mut apps = vec![];
+    for k in 0..n_apps {
+        let asr = Json::object([
+            ("name", format!("dmtcp1-{k}").into()),
+            ("workload", Json::object([("kind", "dmtcp1".into()), ("n", 512u64.into())])),
+            ("n_vms", 1u64.into()),
+        ]);
+        let resp = src.post("/coordinators", &asr)?;
+        anyhow::ensure!(resp.status == 201, "submit failed");
+        apps.push(resp.json().unwrap().get("id").as_str().unwrap().to_string());
+    }
+    std::thread::sleep(Duration::from_millis(400));
+
+    // ---- the migration script (paper §7.3.2) ----
+    let t0 = Instant::now();
+    let mut migrated = 0usize;
+    let mut bytes_moved = 0usize;
+    for src_id in &apps {
+        // 1. checkpoint on the source cloud
+        let ck = src.post(&format!("/coordinators/{src_id}/checkpoints"), &Json::Null)?;
+        anyhow::ensure!(ck.status == 201, "checkpoint failed for {src_id}");
+        let ckj = ck.json().unwrap();
+        let seq = ckj.get("seq").as_u64().unwrap();
+        let src_iter = ckj.get("iteration").as_u64().unwrap();
+
+        // 2. create the destination coordinator
+        let info = src.get(&format!("/coordinators/{src_id}"))?.json().unwrap();
+        let asr = Json::object([
+            ("name", format!("{}-migrated", info.get("name").as_str().unwrap()).into()),
+            ("workload", info.get("workload").clone()),
+            ("n_vms", info.get("n_vms").clone()),
+        ]);
+        let created = dst.post("/coordinators", &asr)?;
+        let dst_id = created.json().unwrap().get("id").as_str().unwrap().to_string();
+
+        // 3. move the image set (GET from source, POST upload to dest)
+        let img = src.get(&format!("/coordinators/{src_id}/checkpoints/{seq}?proc=0"))?;
+        anyhow::ensure!(img.status == 200, "image download failed");
+        bytes_moved += img.body.len();
+        // raw upload with the octet-stream variant of the checkpoints POST
+        let mut stream = std::net::TcpStream::connect(dst.base())?;
+        upload_image(&mut stream, &dst_id, seq, 0, &img.body)?;
+
+        // 4. restart on the destination (triggers passive recovery, §5.3)
+        let rs = dst.post(&format!("/coordinators/{dst_id}/checkpoints/{seq}"), &Json::Null)?;
+        anyhow::ensure!(rs.status == 200, "restart failed: {}", String::from_utf8_lossy(&rs.body));
+
+        // 5. verify the clone resumed at (or past) the source's iteration
+        std::thread::sleep(Duration::from_millis(30));
+        let dj = dst.get(&format!("/coordinators/{dst_id}"))?.json().unwrap();
+        let dst_iter = dj.get("iteration").as_u64().unwrap();
+        anyhow::ensure!(
+            dst_iter >= src_iter,
+            "{dst_id} at iter {dst_iter} < source {src_iter}"
+        );
+        // 6. terminate on the source: clone becomes a migration
+        let del = src.delete(&format!("/coordinators/{src_id}"))?;
+        anyhow::ensure!(del.status == 204);
+        migrated += 1;
+    }
+    let elapsed = t0.elapsed();
+
+    let remaining = src.get("/coordinators")?.json().unwrap();
+    let arrived = dst.get("/coordinators")?.json().unwrap();
+    println!(
+        "migrated {migrated}/{n_apps} applications in {elapsed:?} ({} of images moved)",
+        cacs::util::benchkit::fmt_bytes(bytes_moved as f64)
+    );
+    println!(
+        "source now hosts {} apps; destination hosts {}",
+        remaining.as_arr().unwrap().len(),
+        arrived.as_arr().unwrap().len()
+    );
+    anyhow::ensure!(remaining.as_arr().unwrap().is_empty());
+    anyhow::ensure!(arrived.as_arr().unwrap().len() == n_apps);
+    println!("cloud_migration OK");
+    Ok(())
+}
+
+// -- tiny helper so the "script" stays dependency-free ----------------------
+
+fn upload_image(
+    stream: &mut std::net::TcpStream,
+    dst_id: &str,
+    seq: u64,
+    proc: usize,
+    body: &[u8],
+) -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let head = format!(
+        "POST /coordinators/{dst_id}/checkpoints HTTP/1.1\r\nhost: x\r\ncontent-type: application/octet-stream\r\nx-ckpt-seq: {seq}\r\nx-proc-index: {proc}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status = String::new();
+    reader.read_line(&mut status)?;
+    anyhow::ensure!(status.contains("201"), "upload rejected: {status}");
+    Ok(())
+}

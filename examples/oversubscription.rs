@@ -1,0 +1,85 @@
+//! Over-subscription / backfill (§1(b), §2.2 use case 4): a uniform
+//! checkpointing service lets the provider swap low-priority jobs out to
+//! stable storage when higher-priority work arrives, and swap them back
+//! in when CPU is idle again — opportunistic leases à la Marshall et al.
+//!
+//! Scenario: three low-priority LU jobs fill the "cluster".  A
+//! high-priority job arrives: CACS checkpoints the low-priority jobs,
+//! suspends them (releasing their resources), runs the urgent job, then
+//! restores the preempted jobs from their images — all making progress
+//! from exactly where they stopped.
+//!
+//!   cargo run --release --example oversubscription
+
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::storage::mem::MemStore;
+use cacs::util::ids::AppId;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn iteration(svc: &CacsService, id: AppId) -> u64 {
+    svc.info(id)
+        .map(|j| j.get("iteration").as_u64().unwrap_or(0))
+        .unwrap_or(0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let svc = CacsService::new(Arc::new(MemStore::new()), ServiceConfig::default());
+    svc.start_monitor();
+
+    // three low-priority jobs
+    let mut low = vec![];
+    for k in 0..3 {
+        let id = svc.submit(
+            Asr::new(
+                &format!("low-{k}"),
+                WorkloadSpec::Lu { nz: 8, ny: 16, nx: 16 },
+                2,
+            ),
+        )?;
+        low.push(id);
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    // high-priority job arrives: swap the low-priority jobs out
+    println!("high-priority job arrives — preempting {} low-priority jobs", low.len());
+    let mut parked = vec![];
+    for &id in &low {
+        let ck = svc.checkpoint(id)?;
+        svc.pause(id)?; // release "CPU" (the app thread idles)
+        parked.push((id, ck.seq, ck.iteration));
+        println!("  parked {id} at iteration {} (ckpt seq {})", ck.iteration, ck.seq);
+    }
+
+    let urgent = svc.submit(Asr::new("urgent", WorkloadSpec::Dmtcp1 { n: 4096 }, 1))?;
+    std::thread::sleep(Duration::from_millis(400));
+    let urgent_iters = iteration(&svc, urgent);
+    println!("urgent job ran to iteration {urgent_iters}");
+    anyhow::ensure!(urgent_iters > 0);
+    svc.delete(urgent)?;
+
+    // low-priority jobs must not have progressed while parked
+    for &(id, _seq, it) in &parked {
+        let now = iteration(&svc, id);
+        anyhow::ensure!(now == it, "{id} progressed while parked: {it} -> {now}");
+    }
+
+    // idle again: swap everything back in from the images
+    println!("cluster idle — resuming preempted jobs from their checkpoints");
+    for &(id, seq, it) in &parked {
+        svc.resume(id)?;
+        let used = svc.restart(id, Some(seq))?;
+        anyhow::ensure!(used == seq);
+        std::thread::sleep(Duration::from_millis(150));
+        let now = iteration(&svc, id);
+        anyhow::ensure!(now > it, "{id} must progress after resume ({it} -> {now})");
+        println!("  resumed {id}: iteration {it} -> {now}");
+    }
+
+    for &(id, ..) in &parked {
+        svc.delete(id)?;
+    }
+    println!("oversubscription OK — preempt, run urgent, resume from images");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: the CACS service end to end in ~60 lines of API use.
+//!
+//! Starts an in-process CACS (real mode, in-memory store), submits a
+//! lightweight application, takes a user-initiated checkpoint (§5.2 mode
+//! 1), lets the app run on, then restarts it from the image (§5.3) and
+//! shows that state rolled back.
+//!
+//!   cargo run --release --example quickstart
+
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::storage::mem::MemStore;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(MemStore::new());
+    let svc = CacsService::new(store, ServiceConfig::default());
+    svc.start_monitor();
+
+    // 1. submit (POST /coordinators)
+    let app = svc.submit(Asr::new("quickstart", WorkloadSpec::Dmtcp1 { n: 1024 }, 1))?;
+    println!("submitted {app}: state={:?}", svc.state(app).unwrap().to_string());
+    std::thread::sleep(Duration::from_millis(300));
+
+    // 2. checkpoint (POST /coordinators/:id/checkpoints)
+    let ck = svc.checkpoint(app)?;
+    println!(
+        "checkpoint seq={} at iteration {} ({} bytes)",
+        ck.seq, ck.iteration, ck.total_bytes
+    );
+
+    // 3. keep computing
+    std::thread::sleep(Duration::from_millis(300));
+    let before = svc.info(app)?;
+    let iter_before = before.get("iteration").as_u64().unwrap();
+    println!("progressed to iteration {iter_before}");
+    assert!(iter_before > ck.iteration);
+
+    // 4. restart from the checkpoint (POST .../checkpoints/:seq)
+    let used = svc.restart(app, Some(ck.seq))?;
+    let after = svc.info(app)?;
+    let iter_after = after.get("iteration").as_u64().unwrap();
+    println!("restarted from seq={used}; iteration now {iter_after}");
+    assert!(iter_after < iter_before, "state must have rolled back");
+
+    // 5. terminate (DELETE /coordinators/:id)
+    svc.delete(app)?;
+    assert!(svc.list().is_empty());
+    println!("terminated; quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,158 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's runtime
+(xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly.  See /opt/xla-example/README.
+
+Run via `make artifacts`:
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one .hlo.txt per (function, shape) plus manifest.json, which the
+Rust runtime (rust/src/runtime/artifacts.rs) reads to discover available
+executables and their I/O signatures.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Slab shapes (nzl, ny, nx) emitted by default.  Chosen so that one global
+# 32x32x32 problem can be decomposed over 1, 2, 4 or 8 worker processes
+# (DESIGN.md §4), plus tiny shapes for fast Rust unit tests.
+DEFAULT_LU_SHAPES = [
+    (32, 32, 32),
+    (16, 32, 32),
+    (8, 32, 32),
+    (4, 32, 32),
+    (4, 8, 8),
+    (2, 8, 8),
+]
+# lu_fused (single-proc fast path): (shape, n_iters)
+DEFAULT_FUSED = [((32, 32, 32), 4), ((4, 8, 8), 2)]
+DEFAULT_DMTCP1_SIZES = [256, 4096]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, whatever the output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(shapes_dtypes):
+    return [{"shape": list(s), "dtype": d} for (s, d) in shapes_dtypes]
+
+
+def build_entries(lu_shapes, fused, dmtcp1_sizes, omega, h2):
+    """Yield (name, fn, arg_specs, input_sig, output_sig, meta)."""
+    for (nzl, ny, nx) in lu_shapes:
+        slab = ((nzl, ny, nx), "f32")
+        plane = ((ny, nx), "f32")
+        scalar_i = ((), "i32")
+        scalar_f = ((), "f32")
+
+        def sweep(u, lo, hi, f, color, _omega=omega, _h2=h2):
+            return model.lu_sweep(u, lo, hi, f, color, omega=_omega, h2=_h2)
+
+        yield (
+            f"lu_sweep_{nzl}x{ny}x{nx}", sweep,
+            [spec((nzl, ny, nx), F32), spec((ny, nx), F32),
+             spec((ny, nx), F32), spec((nzl, ny, nx), F32), spec((), I32)],
+            _sig([slab, plane, plane, slab, scalar_i]), _sig([slab]),
+            {"kind": "lu_sweep", "shape": [nzl, ny, nx],
+             "omega": omega, "h2": h2},
+        )
+
+        def resid(u, lo, hi, f, _h2=h2):
+            return model.lu_resid(u, lo, hi, f, h2=_h2)
+
+        yield (
+            f"lu_resid_{nzl}x{ny}x{nx}", resid,
+            [spec((nzl, ny, nx), F32), spec((ny, nx), F32),
+             spec((ny, nx), F32), spec((nzl, ny, nx), F32)],
+            _sig([slab, plane, plane, slab]), _sig([scalar_f]),
+            {"kind": "lu_resid", "shape": [nzl, ny, nx], "h2": h2},
+        )
+
+    for ((nzl, ny, nx), n_iters) in fused:
+        slab = ((nzl, ny, nx), "f32")
+
+        def fusedfn(u, f, _n=n_iters, _omega=omega, _h2=h2):
+            return model.lu_fused(u, f, n_iters=_n, omega=_omega, h2=_h2)
+
+        yield (
+            f"lu_fused_{nzl}x{ny}x{nx}_i{n_iters}", fusedfn,
+            [spec((nzl, ny, nx), F32), spec((nzl, ny, nx), F32)],
+            _sig([slab, slab]), _sig([slab, ((), "f32")]),
+            {"kind": "lu_fused", "shape": [nzl, ny, nx],
+             "n_iters": n_iters, "omega": omega, "h2": h2},
+        )
+
+    for n in dmtcp1_sizes:
+        yield (
+            f"dmtcp1_{n}", model.dmtcp1_step,
+            [spec((n,), F32), spec((), I32)],
+            _sig([((n,), "f32"), ((), "i32")]),
+            _sig([((n,), "f32"), ((), "i32")]),
+            {"kind": "dmtcp1", "n": n},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower L2 graphs to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes only (CI / smoke)")
+    ap.add_argument("--omega", type=float, default=model.DEFAULT_OMEGA)
+    ap.add_argument("--h2", type=float, default=1.0)
+    args = ap.parse_args()
+
+    lu_shapes = [(4, 8, 8), (2, 8, 8)] if args.quick else DEFAULT_LU_SHAPES
+    fused = [((4, 8, 8), 2)] if args.quick else DEFAULT_FUSED
+    sizes = [256] if args.quick else DEFAULT_DMTCP1_SIZES
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "omega": args.omega, "h2": args.h2,
+                "artifacts": []}
+    for (name, fn, specs, in_sig, out_sig, meta) in build_entries(
+            lu_shapes, fused, sizes, args.omega, args.h2):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as fh:
+            fh.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append({
+            "name": name, "file": fname, "inputs": in_sig,
+            "outputs": out_sig, "sha256_16": digest, **meta,
+        })
+        print(f"  aot: {fname}  ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"  aot: manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""L1 — Pallas kernel for the `dmtcp1` lightweight application.
+
+The paper's resource-consumption and migration experiments (§7.2, §7.3.2)
+use `dmtcp1`, a single-process lightweight app from the DMTCP test suite.
+Our analog carries a small float vector plus a step counter; the per-step
+update is a trivially cheap elementwise decay+oscillation, expressed as a
+Pallas kernel so that even the "lightweight" app exercises the full
+L1→L2→HLO→PJRT path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_DECAY = 0.999
+
+
+def _dmtcp1_kernel(x_ref, t_ref, ox_ref, ot_ref, *, decay: float):
+    t = t_ref[0]
+    x = x_ref[...]
+    n = x.shape[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n,), 0).astype(jnp.float32)
+    phase = t.astype(jnp.float32) + idx
+    ox_ref[...] = decay * x + 0.001 * jnp.sin(0.01 * phase)
+    ot_ref[0] = t + 1
+
+
+def dmtcp1_step(x: jax.Array, t: jax.Array, *, decay: float = DEFAULT_DECAY,
+                interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """One step of the lightweight app: (x, t) -> (x', t+1)."""
+    n = x.shape[0]
+    t1 = jnp.asarray(t, jnp.int32).reshape(1)
+    ox, ot = pl.pallas_call(
+        functools.partial(_dmtcp1_kernel, decay=decay),
+        in_specs=[
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, t1)
+    return ox, ot[0]

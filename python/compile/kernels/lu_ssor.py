@@ -1,0 +1,144 @@
+"""L1 — Pallas kernel: red-black SOR sweep for the LU-class workload.
+
+The paper's scalability workload is NAS MPI LU (class C), an SSOR solver for
+3-D Navier-Stokes.  We reproduce its *systems role* (long-running, domain-
+decomposed iterative FP compute with halo exchange and per-process state
+that shrinks as 1/nprocs) with a red-black SOR relaxation of a 7-point
+Poisson stencil on a 3-D grid — the parallel (colourable) variant of SSOR.
+
+TPU adaptation (DESIGN.md §2): the sweep is expressed over z-planes.  Each
+pallas grid instance pulls three adjacent padded planes (z-1, z, z+1) from
+HBM into VMEM via three BlockSpec views of the same padded array, updates
+the interior cells of one colour, and writes one unpadded plane back.  The
+(ny, nx) plane is the vector dimension (lanes along x); per-instance VMEM
+footprint is 3*(ny+2)*(nx+2)*4 B for u plus (ny*nx)*4 B each for f and the
+output — documented in DESIGN.md §8.
+
+Correctness is validated under interpret=True against kernels/ref.py
+(real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# SOR relaxation factor used across the repo (tests override it).
+DEFAULT_OMEGA = 1.2
+
+
+def _rb_plane_kernel(color_ref, lo_ref, mid_ref, hi_ref, f_ref, out_ref, *,
+                     omega: float, h2: float, zoff: int):
+    """Update one z-plane's cells of one colour.
+
+    color_ref : (1, 1) int32 — the colour (0 or 1) being swept.
+    lo/mid/hi : (1, ny+2, nx+2) padded planes z-1, z, z+1 (global z-pad).
+    f_ref     : (1, ny, nx) source term for this plane.
+    out_ref   : (1, ny, nx) updated plane (interior only).
+    """
+    z = pl.program_id(0)
+    color = color_ref[0, 0]
+
+    mid = mid_ref[0]                       # (ny+2, nx+2)
+    u = mid[1:-1, 1:-1]                    # (ny, nx) current interior
+    north = mid[:-2, 1:-1]
+    south = mid[2:, 1:-1]
+    west = mid[1:-1, :-2]
+    east = mid[1:-1, 2:]
+    down = lo_ref[0][1:-1, 1:-1]
+    up = hi_ref[0][1:-1, 1:-1]
+    f = f_ref[0]
+
+    # Gauss-Seidel value for every interior cell of this plane.
+    gs = (north + south + west + east + down + up - h2 * f) * (1.0 / 6.0)
+    new = (1.0 - omega) * u + omega * gs
+
+    ny, nx = f.shape
+    iy = jax.lax.broadcasted_iota(jnp.int32, (ny, nx), 0)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (ny, nx), 1)
+    # Global parity of the cell: slab offset zoff is baked in at lowering
+    # time; z is the local plane index.
+    parity = (z + zoff + iy + ix) % 2
+    mask = parity == color
+
+    out_ref[0] = jnp.where(mask, new, u)
+
+
+def rb_sweep(u_pad: jax.Array, f: jax.Array, color: jax.Array, *,
+             omega: float = DEFAULT_OMEGA, h2: float = 1.0,
+             zoff: int = 0, interpret: bool = True) -> jax.Array:
+    """One red-black half-sweep over a padded slab.
+
+    u_pad : (nzl+2, ny+2, nx+2) slab with halo planes already applied
+            (z-halos from neighbour processes, y/x-halos are the global
+            Dirichlet boundary).
+    f     : (nzl, ny, nx) source term.
+    color : scalar int32 (0 or 1) — which colour to update.
+
+    Returns the updated interior slab (nzl, ny, nx).
+    """
+    nzp, nyp, nxp = u_pad.shape
+    nzl, ny, nx = nzp - 2, nyp - 2, nxp - 2
+    if f.shape != (nzl, ny, nx):
+        raise ValueError(f"f shape {f.shape} != {(nzl, ny, nx)}")
+
+    kernel = functools.partial(_rb_plane_kernel, omega=omega, h2=h2,
+                               zoff=zoff)
+    color2d = jnp.asarray(color, jnp.int32).reshape(1, 1)
+
+    plane = (1, nyp, nxp)
+    return pl.pallas_call(
+        kernel,
+        grid=(nzl,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda z: (0, 0)),        # colour scalar
+            pl.BlockSpec(plane, lambda z: (z, 0, 0)),      # plane z-1
+            pl.BlockSpec(plane, lambda z: (z + 1, 0, 0)),  # plane z
+            pl.BlockSpec(plane, lambda z: (z + 2, 0, 0)),  # plane z+1
+            pl.BlockSpec((1, ny, nx), lambda z: (z, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ny, nx), lambda z: (z, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nzl, ny, nx), u_pad.dtype),
+        interpret=interpret,
+    )(color2d, u_pad, u_pad, u_pad, f)
+
+
+def _resid_plane_kernel(lo_ref, mid_ref, hi_ref, f_ref, out_ref, *,
+                        h2: float):
+    """Per-plane squared residual of the 7-point operator: r = A u - f."""
+    mid = mid_ref[0]
+    u = mid[1:-1, 1:-1]
+    lap = (mid[:-2, 1:-1] + mid[2:, 1:-1] + mid[1:-1, :-2] + mid[1:-1, 2:]
+           + lo_ref[0][1:-1, 1:-1] + hi_ref[0][1:-1, 1:-1] - 6.0 * u)
+    r = lap * (1.0 / h2) - f_ref[0]
+    out_ref[0, 0] = jnp.sum(r * r)
+
+
+def residual_sumsq(u_pad: jax.Array, f: jax.Array, *, h2: float = 1.0,
+                   interpret: bool = True) -> jax.Array:
+    """Sum of squared residuals over the slab interior (scalar f32).
+
+    The per-plane partial sums are produced by a pallas kernel over the
+    same three-plane VMEM schedule as the sweep; the final reduction over
+    planes happens in jnp (L2) so the whole thing fuses into one HLO.
+    """
+    nzp, nyp, nxp = u_pad.shape
+    nzl, ny, nx = nzp - 2, nyp - 2, nxp - 2
+    plane = (1, nyp, nxp)
+    partial = pl.pallas_call(
+        functools.partial(_resid_plane_kernel, h2=h2),
+        grid=(nzl,),
+        in_specs=[
+            pl.BlockSpec(plane, lambda z: (z, 0, 0)),
+            pl.BlockSpec(plane, lambda z: (z + 1, 0, 0)),
+            pl.BlockSpec(plane, lambda z: (z + 2, 0, 0)),
+            pl.BlockSpec((1, ny, nx), lambda z: (z, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda z: (z, 0)),
+        out_shape=jax.ShapeDtypeStruct((nzl, 1), u_pad.dtype),
+        interpret=interpret,
+    )(u_pad, u_pad, u_pad, f)
+    return jnp.sum(partial)

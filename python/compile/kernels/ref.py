@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy, no pallas.  pytest (and hypothesis sweeps) assert
+allclose between kernel and oracle across shapes, colours and relaxation
+factors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rb_sweep_ref(u_pad: jax.Array, f: jax.Array, color, *,
+                 omega: float = 1.2, h2: float = 1.0,
+                 zoff: int = 0) -> jax.Array:
+    """Reference red-black SOR half-sweep.  Same contract as lu_ssor.rb_sweep."""
+    nzl, ny, nx = f.shape
+    u = u_pad[1:-1, 1:-1, 1:-1]
+    nbr = (u_pad[:-2, 1:-1, 1:-1] + u_pad[2:, 1:-1, 1:-1]
+           + u_pad[1:-1, :-2, 1:-1] + u_pad[1:-1, 2:, 1:-1]
+           + u_pad[1:-1, 1:-1, :-2] + u_pad[1:-1, 1:-1, 2:])
+    gs = (nbr - h2 * f) / 6.0
+    new = (1.0 - omega) * u + omega * gs
+
+    iz = jax.lax.broadcasted_iota(jnp.int32, (nzl, ny, nx), 0)
+    iy = jax.lax.broadcasted_iota(jnp.int32, (nzl, ny, nx), 1)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (nzl, ny, nx), 2)
+    mask = (iz + zoff + iy + ix) % 2 == jnp.asarray(color, jnp.int32)
+    return jnp.where(mask, new, u)
+
+
+def residual_sumsq_ref(u_pad: jax.Array, f: jax.Array, *,
+                       h2: float = 1.0) -> jax.Array:
+    """Reference sum of squared residuals of the 7-point operator."""
+    u = u_pad[1:-1, 1:-1, 1:-1]
+    lap = (u_pad[:-2, 1:-1, 1:-1] + u_pad[2:, 1:-1, 1:-1]
+           + u_pad[1:-1, :-2, 1:-1] + u_pad[1:-1, 2:, 1:-1]
+           + u_pad[1:-1, 1:-1, :-2] + u_pad[1:-1, 1:-1, 2:] - 6.0 * u)
+    r = lap / h2 - f
+    return jnp.sum(r * r)
+
+
+def dmtcp1_step_ref(x: jax.Array, t: jax.Array, *,
+                    decay: float = 0.999) -> tuple[jax.Array, jax.Array]:
+    """Reference for the dmtcp1 lightweight-app step."""
+    phase = (t.astype(jnp.float32) + jnp.arange(x.shape[0], dtype=jnp.float32))
+    x2 = decay * x + 0.001 * jnp.sin(0.01 * phase)
+    return x2, t + 1

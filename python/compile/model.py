@@ -1,0 +1,160 @@
+"""L2 — JAX compute graphs for the checkpointable workloads.
+
+Build-time only: these functions are lowered once by `aot.py` to HLO text
+and executed from the Rust runtime (rust/src/runtime) via PJRT.  Python is
+never on the request path.
+
+The LU-class workload (DESIGN.md §1) is a domain-decomposed red-black SOR
+solver.  Each worker process owns a z-slab `u: (nzl, ny, nx)` plus the
+source term `f`.  Halo planes from the z-neighbours are explicit inputs so
+the Rust side can perform the exchange (the paper's MPI messaging) between
+half-sweeps:
+
+    sweep(color=0) -> exchange halos -> sweep(color=1) -> exchange -> ...
+
+Artifacts emitted per slab shape:
+  lu_sweep   (u, halo_lo, halo_hi, f, color) -> (u',)
+  lu_resid   (u, halo_lo, halo_hi, f)        -> (sumsq,)
+  lu_fused   (u, f; n_iters baked)           -> (u', sumsq)   # 1-proc fast path
+  dmtcp1     (x, t)                          -> (x', t')
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lu_ssor
+from .kernels import dmtcp1 as dmtcp1_kernel
+
+DEFAULT_OMEGA = lu_ssor.DEFAULT_OMEGA
+
+
+def pad_with_halos(u: jax.Array, halo_lo: jax.Array,
+                   halo_hi: jax.Array) -> jax.Array:
+    """Embed a slab into its (nzl+2, ny+2, nx+2) padded form.
+
+    y/x pads are the global Dirichlet boundary (zero); the z pads carry the
+    neighbour halo planes (zero for the boundary processes).
+    """
+    up = jnp.pad(u, ((1, 1), (1, 1), (1, 1)))
+    up = up.at[0, 1:-1, 1:-1].set(halo_lo)
+    up = up.at[-1, 1:-1, 1:-1].set(halo_hi)
+    return up
+
+
+def lu_sweep(u: jax.Array, halo_lo: jax.Array, halo_hi: jax.Array,
+             f: jax.Array, color: jax.Array, *,
+             omega: float = DEFAULT_OMEGA, h2: float = 1.0,
+             zoff: int = 0, interpret: bool = True):
+    """One half-sweep (one colour) over a slab.  Returns (u',)."""
+    u_pad = pad_with_halos(u, halo_lo, halo_hi)
+    u2 = lu_ssor.rb_sweep(u_pad, f, color, omega=omega, h2=h2, zoff=zoff,
+                          interpret=interpret)
+    return (u2,)
+
+
+def lu_resid(u: jax.Array, halo_lo: jax.Array, halo_hi: jax.Array,
+             f: jax.Array, *, h2: float = 1.0, interpret: bool = True):
+    """Sum of squared residuals over a slab's interior.  Returns (sumsq,)."""
+    u_pad = pad_with_halos(u, halo_lo, halo_hi)
+    return (lu_ssor.residual_sumsq(u_pad, f, h2=h2, interpret=interpret),)
+
+
+def lu_fused(u: jax.Array, f: jax.Array, *, n_iters: int = 1,
+             omega: float = DEFAULT_OMEGA, h2: float = 1.0,
+             interpret: bool = True):
+    """Single-process fast path: `n_iters` full (red+black) sweeps plus the
+    final residual, fused into one HLO via lax.scan (L2 perf: amortizes
+    PJRT dispatch; no host round-trip between colours — valid only when
+    there are no neighbours to exchange with).  Returns (u', sumsq).
+    """
+    zeros = jnp.zeros(u.shape[1:], u.dtype)
+
+    def body(uu, _):
+        for color in (0, 1):
+            (uu,) = lu_sweep(uu, zeros, zeros, f,
+                             jnp.int32(color), omega=omega, h2=h2,
+                             interpret=interpret)
+        return uu, None
+
+    u2, _ = jax.lax.scan(body, u, None, length=n_iters)
+    (ss,) = lu_resid(u2, zeros, zeros, f, h2=h2, interpret=interpret)
+    return (u2, ss)
+
+
+def dmtcp1_step(x: jax.Array, t: jax.Array, *, interpret: bool = True):
+    """Lightweight-app step.  Returns (x', t')."""
+    x2, t2 = dmtcp1_kernel.dmtcp1_step(x, t, interpret=interpret)
+    return (x2, t2)
+
+
+# ---------------------------------------------------------------------------
+# Pure-python driver used by tests (and to cross-check the Rust driver):
+# runs P slabs with explicit halo exchange, exactly the protocol the Rust
+# coordinator follows.
+# ---------------------------------------------------------------------------
+
+def decompose(nz: int, nprocs: int) -> list[int]:
+    """Split nz planes into nprocs equal slabs (nz % nprocs == 0, even slabs
+    so every slab starts at an even global z and zoff can be baked as 0)."""
+    if nz % nprocs != 0:
+        raise ValueError(f"nz={nz} not divisible by nprocs={nprocs}")
+    nzl = nz // nprocs
+    if nzl % 2 != 0:
+        raise ValueError(f"slab height {nzl} must be even (parity baking)")
+    return [nzl] * nprocs
+
+
+def multi_proc_solve(u0: jax.Array, f: jax.Array, nprocs: int,
+                     n_iters: int, *, omega: float = DEFAULT_OMEGA,
+                     h2: float = 1.0, interpret: bool = True):
+    """Reference distributed driver: returns (u_final, residual history)."""
+    nz = u0.shape[0]
+    nzl = decompose(nz, nprocs)[0]
+    slabs = [u0[i * nzl:(i + 1) * nzl] for i in range(nprocs)]
+    fs = [f[i * nzl:(i + 1) * nzl] for i in range(nprocs)]
+    zeros = jnp.zeros(u0.shape[1:], u0.dtype)
+
+    def halos(i):
+        lo = slabs[i - 1][-1] if i > 0 else zeros
+        hi = slabs[i + 1][0] if i < nprocs - 1 else zeros
+        return lo, hi
+
+    history = []
+    for _ in range(n_iters):
+        for color in (0, 1):
+            new = []
+            for i in range(nprocs):
+                lo, hi = halos(i)
+                (s2,) = lu_sweep(slabs[i], lo, hi, fs[i],
+                                 jnp.int32(color), omega=omega, h2=h2,
+                                 interpret=interpret)
+                new.append(s2)
+            slabs = new
+        ss = 0.0
+        for i in range(nprocs):
+            lo, hi = halos(i)
+            (p,) = lu_resid(slabs[i], lo, hi, fs[i], h2=h2,
+                            interpret=interpret)
+            ss = ss + p
+        history.append(float(jnp.sqrt(ss)))
+    return jnp.concatenate(slabs, axis=0), history
+
+
+def make_problem(nz: int, ny: int, nx: int, seed: int = 7):
+    """Deterministic synthetic Poisson problem.  The Rust side reconstructs
+    the identical arrays (splitmix64-based, see rust/src/workloads/lu.rs),
+    so we use the same integer-hash construction instead of jax.random."""
+    total = nz * ny * nx
+    idx = jnp.arange(total, dtype=jnp.uint32)
+
+    def h(x, salt):
+        x = (x ^ jnp.uint32(salt)) * jnp.uint32(0x9E3779B9)
+        x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+        x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+        return (x ^ (x >> 16)).astype(jnp.float32) / jnp.float32(2**32)
+
+    u0 = (0.2 * (h(idx, seed) - 0.5)).reshape(nz, ny, nx)
+    f = (2.0 * (h(idx, seed + 1) - 0.5)).reshape(nz, ny, nx)
+    return u0, f

@@ -1,0 +1,78 @@
+"""AOT path: every artifact entry lowers to parseable HLO text with the
+declared signature, and the manifest is consistent."""
+
+import json
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_build_entries_quick_signatures():
+    entries = list(aot.build_entries([(2, 8, 8)], [((2, 8, 8), 1)], [64],
+                                     omega=1.2, h2=1.0))
+    names = [e[0] for e in entries]
+    assert names == ["lu_sweep_2x8x8", "lu_resid_2x8x8",
+                     "lu_fused_2x8x8_i1", "dmtcp1_64"]
+    for (_name, _fn, specs, in_sig, _out, _meta) in entries:
+        assert len(specs) == len(in_sig)
+        for s, d in zip(specs, in_sig):
+            assert list(s.shape) == d["shape"]
+
+
+def test_lowering_produces_hlo_text():
+    entries = list(aot.build_entries([(2, 4, 4)], [], [32],
+                                     omega=1.2, h2=1.0))
+    for (name, fn, specs, _in, _out, _meta) in entries:
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_main_quick_writes_manifest(monkeypatch):
+    with tempfile.TemporaryDirectory() as d:
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--quick", "--out-dir", d])
+        aot.main()
+        with open(os.path.join(d, "manifest.json")) as fh:
+            man = json.load(fh)
+        assert man["version"] == 1
+        assert len(man["artifacts"]) >= 5
+        for a in man["artifacts"]:
+            path = os.path.join(d, a["file"])
+            assert os.path.exists(path), a["file"]
+            with open(path) as fh:
+                assert fh.read().startswith("HloModule")
+            assert a["inputs"] and a["outputs"]
+
+
+def test_sweep_hlo_declares_expected_parameters():
+    """Structural check of the emitted HLO text: entry computation takes the
+    five declared parameters with the right shapes and returns a 1-tuple.
+    (The numeric round-trip through PJRT is proven on the Rust side by
+    rust/tests/runtime_roundtrip.rs, which executes these artifacts and
+    compares against values generated here.)"""
+    entries = [e for e in aot.build_entries([(2, 4, 4)], [], [],
+                                            omega=1.2, h2=1.0)
+               if e[0].startswith("lu_sweep")]
+    (_name, fn, specs, in_sig, out_sig, _meta) = entries[0]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    entry = lines[start:]
+    params = [l for l in entry if "parameter(" in l]
+    assert sum("f32[2,4,4]" in p for p in params) == 2  # u and f
+    assert sum("f32[4,4]{" in p for p in params) == 2   # the two halos
+    assert sum("s32[]" in p for p in params) == 1       # colour
+    # return_tuple=True -> root is a tuple of one f32[2,4,4]
+    root = [l for l in entry if "ROOT" in l]
+    assert len(root) == 1 and "(f32[2,4,4]" in root[0]
+    assert len(in_sig) == 5 and len(out_sig) == 1

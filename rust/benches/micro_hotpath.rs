@@ -1,0 +1,188 @@
+//! Micro-benchmarks of the L3 hot paths (§Perf in EXPERIMENTS.md):
+//! checkpoint image encode/decode (CRC-dominated), JSON parse/serialize,
+//! DES event throughput, netsim reallocation, LU native sweep, and —
+//! when artifacts are present — the PJRT sweep for the L1/L2 path.
+
+use cacs::dckpt::image::{self, ImageHeader};
+use cacs::simexec::Sim;
+use cacs::util::benchkit::{bench, fmt_bytes, fmt_secs, Table};
+use cacs::util::json;
+use cacs::workloads::lu::{self, Backend, LuApp, LuConfig};
+use cacs::dckpt::DistributedApp;
+
+fn main() {
+    println!("# L3 hot-path micro-benchmarks\n");
+    let mut t = Table::new(["path", "work", "time/iter", "throughput"]);
+
+    // 1. image encode (64 MB payload)
+    let payload = vec![0xA5u8; 64 << 20];
+    let hdr = ImageHeader {
+        app: "app-1".into(),
+        proc_index: 0,
+        ckpt_seq: 1,
+        kind: "lu".into(),
+        iteration: 10,
+        payload_len: payload.len() as u64,
+    };
+    let s = bench(1, 5, || {
+        let data = image::encode(&hdr, &payload);
+        std::hint::black_box(data.len());
+    });
+    t.row([
+        "image::encode".into(),
+        "64 MB".into(),
+        fmt_secs(s.mean),
+        format!("{}/s", fmt_bytes(64e6 * 1.048576 / s.mean)),
+    ]);
+
+    // 2. image decode + CRC verify
+    let encoded = image::encode(&hdr, &payload);
+    let s = bench(1, 5, || {
+        let (_h, p) = image::decode(&encoded).unwrap();
+        std::hint::black_box(p.len());
+    });
+    t.row([
+        "image::decode+crc".into(),
+        "64 MB".into(),
+        fmt_secs(s.mean),
+        format!("{}/s", fmt_bytes(64e6 * 1.048576 / s.mean)),
+    ]);
+
+    // 3. JSON parse of a coordinator listing (1000 records)
+    let doc = json::Json::Arr(
+        (0..1000)
+            .map(|i| {
+                json::Json::object([
+                    ("id", format!("app-{i}").into()),
+                    ("state", "RUNNING".into()),
+                    ("n_vms", (i % 128usize).into()),
+                    ("checkpoints", (i % 10usize).into()),
+                ])
+            })
+            .collect(),
+    );
+    let text = doc.to_string();
+    let s = bench(3, 20, || {
+        let v = json::parse(&text).unwrap();
+        std::hint::black_box(v.as_arr().map(|a| a.len()));
+    });
+    t.row([
+        "json::parse".into(),
+        format!("{} KB", text.len() / 1024),
+        fmt_secs(s.mean),
+        format!("{}/s", fmt_bytes(text.len() as f64 / s.mean)),
+    ]);
+
+    // 4. DES event throughput (self-rescheduling chains)
+    let s = bench(1, 5, || {
+        let mut sim: Sim<u64> = Sim::new();
+        fn tick(s: &mut Sim<u64>, w: &mut u64, n: u32) {
+            *w += 1;
+            if n > 0 {
+                s.after(1.0, move |s, w| tick(s, w, n - 1));
+            }
+        }
+        for _ in 0..100 {
+            sim.after(0.0, |s, w| tick(s, w, 1000));
+        }
+        let mut count = 0u64;
+        sim.run(&mut count);
+        std::hint::black_box(count);
+    });
+    t.row([
+        "simexec events".into(),
+        "100k events".into(),
+        fmt_secs(s.mean),
+        format!("{:.1} M events/s", 100_100.0 / s.mean / 1e6),
+    ]);
+
+    // 5. netsim reallocation under churn
+    let s = bench(1, 5, || {
+        let mut net = cacs::netsim::NetSim::new();
+        let links: Vec<_> = (0..32).map(|i| net.add_link(&format!("l{i}"), 1e9)).collect();
+        let mut t = 0.0;
+        for i in 0..500 {
+            net.start_flow(t, vec![links[i % 32], links[(i * 7) % 32]], 1e6, "x");
+            t += 0.001;
+            if i % 3 == 0 {
+                net.reap(t);
+            }
+        }
+        std::hint::black_box(net.active_flows());
+    });
+    t.row([
+        "netsim churn".into(),
+        "500 flows/32 links".into(),
+        fmt_secs(s.mean),
+        format!("{:.0} reallocs/s", 500.0 / s.mean),
+    ]);
+
+    // 6. LU native sweep (the L3-side oracle)
+    let cfg = LuConfig::new(32, 32, 32, 1).unwrap();
+    let mut app = LuApp::new(cfg, Backend::Native);
+    let cells = 32usize.pow(3) as f64;
+    let s = bench(2, 10, || {
+        app.step().unwrap();
+    });
+    // 2 half-sweeps + residual ≈ 3 passes; ~9 flops/cell/pass
+    t.row([
+        "lu native step".into(),
+        "32^3 grid".into(),
+        fmt_secs(s.mean),
+        format!("{:.1} Mcell/s", cells / s.mean / 1e6),
+    ]);
+
+    // 7. PJRT sweep when artifacts exist (L1/L2 path)
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let engine = Rc::new(RefCell::new(cacs::runtime::Engine::cpu(&dir).unwrap()));
+        let cfg = LuConfig::new(32, 32, 32, 1).unwrap();
+        let mut app = LuApp::new(cfg.clone(), Backend::pjrt(engine.clone(), &cfg).unwrap());
+        let s = bench(2, 10, || {
+            app.step().unwrap();
+        });
+        t.row([
+            "lu pjrt step".into(),
+            "32^3 grid".into(),
+            fmt_secs(s.mean),
+            format!("{:.1} Mcell/s", cells / s.mean / 1e6),
+        ]);
+        // fused fast path (L2 perf optimization)
+        if engine.borrow().manifest.find_kind_shape("lu_fused", &[32, 32, 32]).is_some() {
+            let fused = {
+                let name = engine
+                    .borrow()
+                    .manifest
+                    .find_kind_shape("lu_fused", &[32, 32, 32])
+                    .unwrap()
+                    .name
+                    .clone();
+                engine.borrow_mut().load(&name).unwrap()
+            };
+            let n_iters = fused.spec.n_iters.unwrap_or(1) as f64;
+            let (u0, f) = lu::make_problem(32, 32, 32, 7);
+            let dims = [32i64, 32, 32];
+            let s = bench(2, 10, || {
+                let out = fused
+                    .run(&[
+                        cacs::runtime::lit_f32(&u0, &dims).unwrap(),
+                        cacs::runtime::lit_f32(&f, &dims).unwrap(),
+                    ])
+                    .unwrap();
+                std::hint::black_box(out.len());
+            });
+            t.row([
+                "lu pjrt fused".into(),
+                format!("32^3 x {n_iters} iters"),
+                fmt_secs(s.mean / n_iters),
+                format!("{:.1} Mcell/s", cells * n_iters / s.mean / 1e6),
+            ]);
+        }
+    } else {
+        eprintln!("note: artifacts/ missing — skipping PJRT rows");
+    }
+
+    t.print();
+}

@@ -1,0 +1,336 @@
+//! The application host thread (real mode).
+//!
+//! In the paper every process of an application runs inside its own VM
+//! under a DMTCP daemon.  In real mode we host the whole
+//! [`DistributedApp`] on one dedicated thread that steps it continuously
+//! and services control commands (checkpoint, restore, health, kill)
+//! between steps — each command lands exactly at a step barrier, which
+//! is the consistent cut the DMTCP drain protocol would otherwise have
+//! to establish (DESIGN.md §1).
+//!
+//! PJRT-backed apps hold `!Send` XLA handles, so the app is **built on
+//! the thread** from a `Send` factory and never crosses threads.
+
+use crate::dckpt::service::{self, CheckpointReport};
+use crate::dckpt::DistributedApp;
+use crate::storage::ObjectStore;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Factory that constructs the app on its host thread.
+pub type AppFactory = Box<dyn FnOnce() -> Result<Box<dyn DistributedApp>> + Send>;
+
+/// Control commands accepted between steps.
+pub enum Cmd {
+    /// Write a checkpoint (sequence `seq`) into the store.
+    Checkpoint {
+        seq: u64,
+        with_overhead: bool,
+        reply: Sender<Result<CheckpointReport>>,
+    },
+    /// Restore from `seq` (None = latest).
+    Restore {
+        seq: Option<u64>,
+        reply: Sender<Result<u64>>,
+    },
+    /// Per-process health snapshot (§6.3 hook results).
+    Health { reply: Sender<Vec<bool>> },
+    /// Progress: (iteration, metric).
+    Progress { reply: Sender<(u64, f64)> },
+    /// Fault injection: kill process `i`.
+    Kill { proc: usize },
+    /// Pause stepping (oversubscription: low-priority jobs swap out).
+    Pause,
+    /// Resume stepping.
+    Resume,
+    /// Stop the thread.
+    Stop,
+}
+
+/// Handle to a running application thread.
+pub struct AppHandle {
+    tx: Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<()>>,
+    pub app_name: String,
+}
+
+impl AppHandle {
+    /// Spawn the host thread.  `step_interval` throttles stepping (zero =
+    /// run hot); `store` is where checkpoint images go.
+    pub fn spawn(
+        app_name: &str,
+        factory: AppFactory,
+        store: Arc<dyn ObjectStore>,
+        step_interval: Duration,
+    ) -> AppHandle {
+        let (tx, rx) = channel();
+        let name = app_name.to_string();
+        let thread_name = format!("cacs-app-{name}");
+        let join = std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || host_loop(&name, factory, store, step_interval, rx))
+            .expect("spawn app thread");
+        AppHandle { tx, join: Some(join), app_name: app_name.to_string() }
+    }
+
+    fn call<T, F: FnOnce(Sender<T>) -> Cmd>(&self, make: F) -> Result<T> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(make(tx))
+            .map_err(|_| anyhow::anyhow!("app thread gone"))?;
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow::anyhow!("app thread did not answer"))
+    }
+
+    pub fn checkpoint(&self, seq: u64, with_overhead: bool) -> Result<CheckpointReport> {
+        self.call(|reply| Cmd::Checkpoint { seq, with_overhead, reply })?
+    }
+
+    pub fn restore(&self, seq: Option<u64>) -> Result<u64> {
+        self.call(|reply| Cmd::Restore { seq, reply })?
+    }
+
+    pub fn health(&self) -> Result<Vec<bool>> {
+        self.call(|reply| Cmd::Health { reply })
+    }
+
+    pub fn progress(&self) -> Result<(u64, f64)> {
+        self.call(|reply| Cmd::Progress { reply })
+    }
+
+    pub fn kill_proc(&self, proc: usize) {
+        let _ = self.tx.send(Cmd::Kill { proc });
+    }
+
+    pub fn pause(&self) {
+        let _ = self.tx.send(Cmd::Pause);
+    }
+
+    pub fn resume(&self) {
+        let _ = self.tx.send(Cmd::Resume);
+    }
+}
+
+impl Drop for AppHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Shared command handling; returns false when the thread must exit.
+fn handle_cmd(
+    cmd: Cmd,
+    app: &mut Box<dyn DistributedApp>,
+    app_name: &str,
+    store: &Arc<dyn ObjectStore>,
+    paused: &mut bool,
+    broken: &mut bool,
+) -> bool {
+    match cmd {
+        Cmd::Stop => return false,
+        Cmd::Pause => *paused = true,
+        Cmd::Resume => *paused = false,
+        Cmd::Kill { proc } => {
+            app.kill_proc(proc);
+            *broken = true;
+        }
+        Cmd::Health { reply } => {
+            let h = (0..app.nprocs()).map(|i| app.proc_healthy(i)).collect();
+            let _ = reply.send(h);
+        }
+        Cmd::Progress { reply } => {
+            let _ = reply.send((app.iteration(), app.metric()));
+        }
+        Cmd::Checkpoint { seq, with_overhead, reply } => {
+            let r = service::checkpoint(app.as_ref(), store.as_ref(), app_name, seq, with_overhead);
+            let _ = reply.send(r);
+        }
+        Cmd::Restore { seq, reply } => {
+            let r = service::restore(app.as_mut(), store.as_ref(), app_name, seq);
+            if r.is_ok() {
+                *broken = false; // revived
+            }
+            let _ = reply.send(r);
+        }
+    }
+    true
+}
+
+fn host_loop(
+    app_name: &str,
+    factory: AppFactory,
+    store: Arc<dyn ObjectStore>,
+    step_interval: Duration,
+    rx: Receiver<Cmd>,
+) {
+    let mut app: Box<dyn DistributedApp> = match factory() {
+        Ok(a) => a,
+        Err(e) => {
+            log::error!("{app_name}: app construction failed: {e}");
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Cmd::Stop => return,
+                    Cmd::Checkpoint { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("app failed to construct")));
+                    }
+                    Cmd::Restore { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("app failed to construct")));
+                    }
+                    Cmd::Health { reply } => {
+                        let _ = reply.send(vec![]);
+                    }
+                    Cmd::Progress { reply } => {
+                        let _ = reply.send((0, f64::NAN));
+                    }
+                    _ => {}
+                }
+            }
+            return;
+        }
+    };
+
+    let mut paused = false;
+    let mut broken = false; // a proc died; stop stepping, keep serving
+    loop {
+        // drain pending commands (each lands at a step barrier)
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    if !handle_cmd(cmd, &mut app, app_name, &store, &mut paused, &mut broken) {
+                        return;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+
+        if paused || broken {
+            // block (bounded) instead of spinning
+            if let Ok(cmd) = rx.recv_timeout(Duration::from_millis(50)) {
+                if !handle_cmd(cmd, &mut app, app_name, &store, &mut paused, &mut broken) {
+                    return;
+                }
+            }
+            continue;
+        }
+
+        match app.step() {
+            Ok(()) => {}
+            Err(e) => {
+                log::warn!("{app_name}: step failed: {e}");
+                broken = true;
+                continue;
+            }
+        }
+        if !step_interval.is_zero() {
+            std::thread::sleep(step_interval);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dckpt::CounterApp;
+    use crate::storage::mem::MemStore;
+
+    fn spawn_counter(n: usize) -> (AppHandle, Arc<MemStore>) {
+        let store = Arc::new(MemStore::new());
+        let s2: Arc<dyn ObjectStore> = store.clone();
+        let h = AppHandle::spawn(
+            "app-t",
+            Box::new(move || Ok(Box::new(CounterApp::new(n, 16)) as Box<dyn DistributedApp>)),
+            s2,
+            Duration::from_millis(1),
+        );
+        (h, store)
+    }
+
+    #[test]
+    fn app_progresses() {
+        let (h, _store) = spawn_counter(2);
+        std::thread::sleep(Duration::from_millis(50));
+        let (it1, _) = h.progress().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let (it2, _) = h.progress().unwrap();
+        assert!(it2 > it1, "iterations {it1} -> {it2}");
+    }
+
+    #[test]
+    fn checkpoint_restore_through_thread() {
+        let (h, store) = spawn_counter(3);
+        std::thread::sleep(Duration::from_millis(30));
+        let report = h.checkpoint(1, false).unwrap();
+        assert_eq!(report.image_bytes.len(), 3);
+        assert_eq!(store.list("app-t/").unwrap().len(), 3);
+        let (it_at_ckpt, _) = h.progress().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let seq = h.restore(None).unwrap();
+        assert_eq!(seq, 1);
+        let (it_after, _) = h.progress().unwrap();
+        // restored close to the checkpoint iteration (a few steps may
+        // have run between restore and query)
+        assert!(it_after <= it_at_ckpt + 20, "{it_after} vs {it_at_ckpt}");
+    }
+
+    #[test]
+    fn kill_stops_progress_and_health_reports() {
+        let (h, _store) = spawn_counter(2);
+        std::thread::sleep(Duration::from_millis(20));
+        h.kill_proc(1);
+        std::thread::sleep(Duration::from_millis(20));
+        let health = h.health().unwrap();
+        assert_eq!(health, vec![true, false]);
+        let (it1, _) = h.progress().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let (it2, _) = h.progress().unwrap();
+        assert_eq!(it1, it2, "broken app must not progress");
+    }
+
+    #[test]
+    fn restore_revives_killed_proc() {
+        let (h, _store) = spawn_counter(2);
+        std::thread::sleep(Duration::from_millis(20));
+        h.checkpoint(1, false).unwrap();
+        h.kill_proc(0);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(h.health().unwrap(), vec![false, true]);
+        h.restore(Some(1)).unwrap();
+        assert_eq!(h.health().unwrap(), vec![true, true]);
+        let (it1, _) = h.progress().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let (it2, _) = h.progress().unwrap();
+        assert!(it2 > it1, "revived app must progress");
+    }
+
+    #[test]
+    fn pause_resume() {
+        let (h, _store) = spawn_counter(1);
+        std::thread::sleep(Duration::from_millis(20));
+        h.pause();
+        std::thread::sleep(Duration::from_millis(20));
+        let (it1, _) = h.progress().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let (it2, _) = h.progress().unwrap();
+        assert_eq!(it1, it2, "paused app must not progress");
+        h.resume();
+        std::thread::sleep(Duration::from_millis(50));
+        let (it3, _) = h.progress().unwrap();
+        assert!(it3 > it2);
+    }
+
+    #[test]
+    fn failed_factory_reports_errors() {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let h = AppHandle::spawn("bad", Box::new(|| anyhow::bail!("nope")), store, Duration::ZERO);
+        assert!(h.checkpoint(1, false).is_err());
+        assert!(h.restore(None).is_err());
+        assert_eq!(h.health().unwrap(), Vec::<bool>::new());
+    }
+}

@@ -1,0 +1,103 @@
+//! The coordinators database (§4.2, §6.5: "In the current implementation
+//! the coordinators database is stored in memory").
+//!
+//! §6.4 notes the design extends to replicated NoSQL stores; the trait
+//! boundary here is where that would plug in.
+
+use super::types::AppRecord;
+use crate::util::ids::{AppId, IdGen};
+use std::collections::BTreeMap;
+
+/// In-memory coordinators DB.
+#[derive(Default)]
+pub struct Db {
+    apps: BTreeMap<AppId, AppRecord>,
+    pub ids: IdGen,
+}
+
+impl Db {
+    pub fn new() -> Db {
+        Db { apps: BTreeMap::new(), ids: IdGen::new() }
+    }
+
+    pub fn insert(&mut self, rec: AppRecord) -> AppId {
+        let id = rec.id;
+        self.apps.insert(id, rec);
+        id
+    }
+
+    pub fn get(&self, id: AppId) -> Option<&AppRecord> {
+        self.apps.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: AppId) -> Option<&mut AppRecord> {
+        self.apps.get_mut(&id)
+    }
+
+    pub fn remove(&mut self, id: AppId) -> Option<AppRecord> {
+        self.apps.remove(&id)
+    }
+
+    pub fn ids_sorted(&self) -> Vec<AppId> {
+        self.apps.keys().copied().collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &AppRecord> {
+        self.apps.values()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut AppRecord> {
+        self.apps.values_mut()
+    }
+
+    pub fn len(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.apps.is_empty()
+    }
+
+    /// Count apps currently in a given state (the Fig 4 m/n gauges).
+    pub fn count_in(&self, state: crate::coordinator::lifecycle::AppState) -> usize {
+        self.apps.values().filter(|a| a.lifecycle.state() == state).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::lifecycle::AppState;
+    use crate::coordinator::types::{Asr, WorkloadSpec};
+
+    fn rec(db: &Db, name: &str) -> AppRecord {
+        AppRecord::new(db.ids.app(), Asr::new(name, WorkloadSpec::Dmtcp1 { n: 8 }, 1), 0.0, 0)
+    }
+
+    #[test]
+    fn crud() {
+        let mut db = Db::new();
+        let a = db.insert(rec(&db, "a"));
+        let b = db.insert(rec(&db, "b"));
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.get(a).unwrap().asr.name, "a");
+        assert!(db.get_mut(b).is_some());
+        assert_eq!(db.ids_sorted(), vec![a, b]);
+        assert!(db.remove(a).is_some());
+        assert!(db.get(a).is_none());
+        assert!(db.remove(a).is_none());
+        assert_eq!(db.len(), 1);
+    }
+
+    #[test]
+    fn state_counting() {
+        let mut db = Db::new();
+        let a = db.insert(rec(&db, "a"));
+        let _b = db.insert(rec(&db, "b"));
+        assert_eq!(db.count_in(AppState::Creating), 2);
+        db.get_mut(a).unwrap().lifecycle.to(1.0, AppState::Provisioning);
+        assert_eq!(db.count_in(AppState::Creating), 1);
+        assert_eq!(db.count_in(AppState::Provisioning), 1);
+        assert_eq!(db.count_in(AppState::Running), 0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Application lifecycle state machine (Fig 2).
+//!
+//! `CREATING → PROVISION → READY → RUNNING`, with `RUNNING ⇄
+//! CHECKPOINTING`, a `RESTARTING` path (passive recovery / clone /
+//! migration restart, §5.3), and `TERMINATING → TERMINATED` reachable
+//! from a user DELETE or from `ERROR` (§5.4: "The TERMINATING state is
+//! reached when an end user issues a DELETE request to the coordinator
+//! resource or when the ERROR state is set").
+
+use std::fmt;
+
+/// Coordinator states (Fig 2 plus the two transient states the text
+/// describes around checkpoints and recovery).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AppState {
+    /// ASR validated; claiming virtual resources from the Cloud Manager.
+    Creating,
+    /// VMs granted; Provision Manager configuring them.
+    Provisioning,
+    /// Virtual cluster ready to start the computation.
+    Ready,
+    /// Computation in progress; checkpoints may be saved.
+    Running,
+    /// A checkpoint is being taken/uploaded.
+    Checkpointing,
+    /// Passive recovery / restart from an image in progress.
+    Restarting,
+    /// Tear-down in progress (§5.4).
+    Terminating,
+    /// All references removed.
+    Terminated,
+    /// Unrecoverable failure; only termination remains.
+    Error,
+}
+
+impl fmt::Display for AppState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            AppState::Creating => "CREATING",
+            AppState::Provisioning => "PROVISION",
+            AppState::Ready => "READY",
+            AppState::Running => "RUNNING",
+            AppState::Checkpointing => "CHECKPOINTING",
+            AppState::Restarting => "RESTARTING",
+            AppState::Terminating => "TERMINATING",
+            AppState::Terminated => "TERMINATED",
+            AppState::Error => "ERROR",
+        };
+        f.write_str(s)
+    }
+}
+
+impl AppState {
+    /// Legal transitions of the Fig 2 machine.
+    pub fn can_transition_to(self, next: AppState) -> bool {
+        use AppState::*;
+        matches!(
+            (self, next),
+            (Creating, Provisioning)
+                | (Provisioning, Ready)
+                | (Ready, Running)
+                | (Running, Checkpointing)
+                | (Checkpointing, Running)
+                | (Running, Restarting)       // in-place recovery
+                | (Restarting, Running)
+                | (Ready, Restarting)         // restart-from-upload (§5.3 clone)
+                | (Creating, Error)
+                | (Provisioning, Error)
+                | (Ready, Error)
+                | (Running, Error)
+                | (Checkpointing, Error)
+                | (Restarting, Error)
+                | (Creating, Terminating)
+                | (Provisioning, Terminating)
+                | (Ready, Terminating)
+                | (Running, Terminating)
+                | (Checkpointing, Terminating)
+                | (Restarting, Terminating)
+                | (Error, Terminating)
+                | (Terminating, Terminated)
+        )
+    }
+
+    /// Can the user trigger a checkpoint right now (§5.2: "In this
+    /// [RUNNING] phase, checkpoints can be saved")?
+    pub fn can_checkpoint(self) -> bool {
+        self == AppState::Running
+    }
+
+    /// Can the application be restarted from an image (§5.3)?
+    pub fn can_restart(self) -> bool {
+        matches!(self, AppState::Running | AppState::Ready | AppState::Error)
+    }
+
+    pub fn is_terminal(self) -> bool {
+        self == AppState::Terminated
+    }
+
+    pub fn is_active(self) -> bool {
+        !matches!(self, AppState::Terminating | AppState::Terminated | AppState::Error)
+    }
+}
+
+/// A guarded state holder that records transition history with
+/// timestamps — the per-phase timings the Fig 3/6 benches report come
+/// straight from this log.
+#[derive(Debug, Clone)]
+pub struct Lifecycle {
+    state: AppState,
+    pub history: Vec<(f64, AppState)>,
+}
+
+impl Lifecycle {
+    pub fn new(now: f64) -> Lifecycle {
+        Lifecycle { state: AppState::Creating, history: vec![(now, AppState::Creating)] }
+    }
+
+    pub fn state(&self) -> AppState {
+        self.state
+    }
+
+    /// Apply a transition; returns false (and leaves state unchanged) if
+    /// illegal.
+    pub fn to(&mut self, now: f64, next: AppState) -> bool {
+        if self.state.can_transition_to(next) {
+            self.state = next;
+            self.history.push((now, next));
+            true
+        } else {
+            log::warn!("illegal transition {} -> {}", self.state, next);
+            false
+        }
+    }
+
+    /// Time of the first entry into `state`, if ever reached.
+    pub fn entered_at(&self, state: AppState) -> Option<f64> {
+        self.history.iter().find(|(_, s)| *s == state).map(|(t, _)| *t)
+    }
+
+    /// Duration spent between first entering `a` and first entering `b`.
+    pub fn span(&self, a: AppState, b: AppState) -> Option<f64> {
+        Some(self.entered_at(b)? - self.entered_at(a)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use AppState::*;
+
+    #[test]
+    fn happy_path() {
+        let mut lc = Lifecycle::new(0.0);
+        for (t, s) in [(1.0, Provisioning), (2.0, Ready), (3.0, Running)] {
+            assert!(lc.to(t, s), "transition to {s}");
+        }
+        assert_eq!(lc.state(), Running);
+        assert!(lc.to(4.0, Checkpointing));
+        assert!(lc.to(5.0, Running));
+        assert!(lc.to(6.0, Terminating));
+        assert!(lc.to(7.0, Terminated));
+        assert!(lc.state().is_terminal());
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut lc = Lifecycle::new(0.0);
+        assert!(!lc.to(1.0, Running)); // must provision first
+        assert_eq!(lc.state(), Creating);
+        assert!(!lc.to(1.0, Terminated)); // must terminate first
+        assert!(!lc.to(1.0, Checkpointing));
+        // once terminated, nothing moves
+        lc.to(1.0, Terminating);
+        lc.to(2.0, Terminated);
+        assert!(!lc.to(3.0, Creating));
+        assert!(!lc.to(3.0, Terminating));
+    }
+
+    #[test]
+    fn error_only_terminates() {
+        let mut lc = Lifecycle::new(0.0);
+        lc.to(1.0, Provisioning);
+        lc.to(2.0, Error);
+        assert_eq!(lc.state(), Error);
+        assert!(!lc.to(3.0, Running));
+        assert!(lc.state().can_restart()); // §5.3 restart creates a NEW app
+        assert!(lc.to(3.0, Terminating));
+    }
+
+    #[test]
+    fn recovery_cycle() {
+        let mut lc = Lifecycle::new(0.0);
+        lc.to(1.0, Provisioning);
+        lc.to(2.0, Ready);
+        lc.to(3.0, Running);
+        assert!(lc.to(4.0, Restarting));
+        assert!(lc.to(5.0, Running));
+    }
+
+    #[test]
+    fn history_and_spans() {
+        let mut lc = Lifecycle::new(10.0);
+        lc.to(15.0, Provisioning);
+        lc.to(35.0, Ready);
+        lc.to(36.0, Running);
+        assert_eq!(lc.entered_at(Creating), Some(10.0));
+        assert_eq!(lc.span(Creating, Provisioning), Some(5.0));
+        assert_eq!(lc.span(Provisioning, Ready), Some(20.0));
+        assert_eq!(lc.span(Creating, Running), Some(26.0));
+        assert_eq!(lc.span(Creating, Terminated), None);
+    }
+
+    #[test]
+    fn checkpoint_gate() {
+        assert!(Running.can_checkpoint());
+        assert!(!Ready.can_checkpoint());
+        assert!(!Checkpointing.can_checkpoint());
+    }
+
+    #[test]
+    fn exhaustive_transition_sanity() {
+        use crate::util::propcheck::{forall, Gen};
+        let states = vec![
+            Creating, Provisioning, Ready, Running, Checkpointing, Restarting,
+            Terminating, Terminated, Error,
+        ];
+        let s2 = states.clone();
+        forall(
+            "terminated-is-absorbing",
+            100,
+            Gen::choice(states),
+            move |&s| !Terminated.can_transition_to(s) && {
+                // every non-terminated state can eventually reach
+                // Terminating (possibly via Error)
+                s == Terminated
+                    || s == Terminating
+                    || s.can_transition_to(Terminating)
+                    || s2.iter().any(|&m| s.can_transition_to(m) && m.can_transition_to(Terminating))
+            },
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! The CACS service itself (Fig 1): Application Manager, Cloud Manager,
+//! Provision Manager, Checkpoint Manager, Monitoring Manager around the
+//! coordinators database, fronted by the Table 1 REST API.
+//!
+//! Two drivers share the same records and lifecycle rules:
+//!
+//! * [`simdrv`] — discrete-event driver over [`crate::simexec`]: the
+//!   full submission → provision → run → checkpoint → restart/migrate
+//!   pipeline with every latency coming from the substrate models
+//!   (simcloud, provision, dckpt, storage, netsim).  All figure benches
+//!   run through this.
+//! * [`service`] + [`rest`] — the real-mode service: actual HTTP REST
+//!   API (Table 1), real workloads on an application thread
+//!   ([`appthread`]), real checkpoint images in an
+//!   [`crate::storage::ObjectStore`], real broadcast-tree monitoring.
+//!   The examples (quickstart, fault-tolerant LU, migration,
+//!   cloudification, oversubscription) run through this.
+//!
+//! [`lifecycle`] is the Fig 2 coordinator state machine both drivers
+//! enforce; [`types`] holds the shared records; [`db`] is the
+//! coordinators database (§6.5: in-memory).
+
+pub mod appthread;
+pub mod db;
+pub mod lifecycle;
+pub mod rest;
+pub mod service;
+pub mod simdrv;
+pub mod types;

@@ -1,0 +1,314 @@
+//! REST API (Table 1) over the real-mode service.
+//!
+//! | verb + path | semantics |
+//! |---|---|
+//! | GET    /coordinators                      | list coordinators |
+//! | POST   /coordinators                      | add a new coordinator (body = ASR) |
+//! | GET    /coordinators/:id                  | coordinator info |
+//! | DELETE /coordinators/:id                  | delete the coordinator |
+//! | GET    /coordinators/:id/checkpoints      | list checkpoints |
+//! | POST   /coordinators/:id/checkpoints      | trigger a checkpoint, **or** upload an image (octet-stream body + `x-ckpt-seq`/`x-proc-index` headers) |
+//! | GET    /coordinators/:id/checkpoints/:seq | checkpoint info; `?proc=i` downloads that image |
+//! | POST   /coordinators/:id/checkpoints/:seq | restart from the checkpoint |
+//! | DELETE /coordinators/:id/checkpoints/:seq | delete the checkpoint |
+//!
+//! Plus diagnostics the paper's CLI would expose: GET
+//! /coordinators/:id/health.
+
+use super::service::CacsService;
+use super::types::Asr;
+use crate::util::http::{Handler, Method, Request, Response, Server};
+use crate::util::ids::AppId;
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// Build the request handler for a service instance.
+pub fn make_handler(svc: Arc<CacsService>) -> Handler {
+    Arc::new(move |req: &Request| route(&svc, req))
+}
+
+/// Start the REST server (addr like "127.0.0.1:0").
+pub fn serve(svc: Arc<CacsService>, addr: &str, threads: usize) -> std::io::Result<Server> {
+    Server::start(addr, threads, make_handler(svc))
+}
+
+fn parse_app(seg: &str) -> Option<AppId> {
+    AppId::parse(seg)
+}
+
+fn route(svc: &CacsService, req: &Request) -> Response {
+    let segs = req.segments();
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (req.path.as_str(), None),
+    };
+    let segs: Vec<&str> = if query.is_some() {
+        path.split('/').filter(|s| !s.is_empty()).collect()
+    } else {
+        segs
+    };
+
+    match (req.method, segs.as_slice()) {
+        (Method::Get, ["coordinators"]) => {
+            Response::ok_json(&Json::Arr(svc.list()))
+        }
+        (Method::Post, ["coordinators"]) => {
+            let body = match req.json() {
+                Ok(j) => j,
+                Err(e) => return Response::bad_request(&e.to_string()),
+            };
+            match Asr::from_json(&body).and_then(|asr| svc.submit(asr)) {
+                Ok(id) => Response::json(
+                    201,
+                    &Json::object([("id", id.to_string().into())]),
+                ),
+                Err(e) => Response::bad_request(&e.to_string()),
+            }
+        }
+        (Method::Get, ["coordinators", id]) => match parse_app(id) {
+            Some(id) => match svc.info(id) {
+                Ok(j) => Response::ok_json(&j),
+                Err(_) => Response::not_found(),
+            },
+            None => Response::bad_request("bad coordinator id"),
+        },
+        (Method::Delete, ["coordinators", id]) => match parse_app(id) {
+            Some(id) => match svc.delete(id) {
+                Ok(()) => Response::json(204, &Json::Null),
+                Err(_) => Response::not_found(),
+            },
+            None => Response::bad_request("bad coordinator id"),
+        },
+        (Method::Get, ["coordinators", id, "health"]) => match parse_app(id) {
+            Some(id) => match svc.health(id) {
+                Ok(h) => Response::ok_json(&Json::Arr(
+                    h.into_iter().map(Json::Bool).collect(),
+                )),
+                Err(_) => Response::not_found(),
+            },
+            None => Response::bad_request("bad coordinator id"),
+        },
+        (Method::Get, ["coordinators", id, "checkpoints"]) => match parse_app(id) {
+            Some(id) => match svc.checkpoints(id) {
+                Ok(cks) => Response::ok_json(&Json::Arr(cks)),
+                Err(_) => Response::not_found(),
+            },
+            None => Response::bad_request("bad coordinator id"),
+        },
+        (Method::Post, ["coordinators", id, "checkpoints"]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            // image upload variant (§5.3): octet-stream + seq/proc headers
+            let is_upload = req
+                .headers
+                .get("content-type")
+                .map(|c| c.contains("octet-stream"))
+                .unwrap_or(false);
+            if is_upload {
+                let seq = req.headers.get("x-ckpt-seq").and_then(|v| v.parse().ok());
+                let proc = req.headers.get("x-proc-index").and_then(|v| v.parse().ok());
+                let (Some(seq), Some(proc)) = (seq, proc) else {
+                    return Response::bad_request("upload needs x-ckpt-seq and x-proc-index");
+                };
+                return match svc.upload_image(id, seq, proc, &req.body) {
+                    Ok(()) => Response::json(201, &Json::object([("uploaded", true.into())])),
+                    Err(e) => Response::bad_request(&e.to_string()),
+                };
+            }
+            match svc.checkpoint(id) {
+                Ok(ck) => Response::json(201, &ck.to_json()),
+                Err(e) => Response::bad_request(&e.to_string()),
+            }
+        }
+        (Method::Get, ["coordinators", id, "checkpoints", seq]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            let Ok(seq) = seq.parse::<u64>() else {
+                return Response::bad_request("bad checkpoint seq");
+            };
+            // ?proc=i downloads the raw image (migration send path)
+            if let Some(q) = query {
+                if let Some(proc) = q
+                    .split('&')
+                    .find_map(|kv| kv.strip_prefix("proc="))
+                    .and_then(|v| v.parse::<usize>().ok())
+                {
+                    return match svc.download_image(id, seq, proc) {
+                        Ok(bytes) => Response {
+                            status: 200,
+                            body: bytes,
+                            content_type: "application/octet-stream",
+                        },
+                        Err(_) => Response::not_found(),
+                    };
+                }
+            }
+            match svc.checkpoints(id) {
+                Ok(cks) => {
+                    match cks.iter().find(|c| c.get("seq").as_u64() == Some(seq)) {
+                        Some(c) => Response::ok_json(c),
+                        None => Response::not_found(),
+                    }
+                }
+                Err(_) => Response::not_found(),
+            }
+        }
+        (Method::Post, ["coordinators", id, "checkpoints", seq]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            let Ok(seq) = seq.parse::<u64>() else {
+                return Response::bad_request("bad checkpoint seq");
+            };
+            match svc.restart(id, Some(seq)) {
+                Ok(used) => Response::ok_json(&Json::object([("restarted_from", used.into())])),
+                Err(e) => Response::bad_request(&e.to_string()),
+            }
+        }
+        (Method::Delete, ["coordinators", id, "checkpoints", seq]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            let Ok(seq) = seq.parse::<u64>() else {
+                return Response::bad_request("bad checkpoint seq");
+            };
+            match svc.delete_checkpoint(id, seq) {
+                Ok(n) => Response::ok_json(&Json::object([("deleted_images", n.into())])),
+                Err(e) => Response::bad_request(&e.to_string()),
+            }
+        }
+        _ => Response::not_found(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::storage::mem::MemStore;
+    use crate::util::http::Client;
+    use std::time::Duration;
+
+    fn start() -> (Server, Client) {
+        let svc = CacsService::new(
+            Arc::new(MemStore::new()),
+            ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+        );
+        let server = serve(svc, "127.0.0.1:0", 4).unwrap();
+        let client = Client::new(&server.addr().to_string());
+        (server, client)
+    }
+
+    fn submit_dmtcp1(client: &Client) -> String {
+        let asr = Json::object([
+            ("name", "d1".into()),
+            ("workload", Json::object([("kind", "dmtcp1".into()), ("n", 64u64.into())])),
+            ("n_vms", 1u64.into()),
+        ]);
+        let resp = client.post("/coordinators", &asr).unwrap();
+        assert_eq!(resp.status, 201, "{:?}", String::from_utf8_lossy(&resp.body));
+        resp.json().unwrap().get("id").as_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn table1_surface() {
+        let (_server, client) = start();
+        // empty list
+        let resp = client.get("/coordinators").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.json().unwrap(), Json::Arr(vec![]));
+
+        let id = submit_dmtcp1(&client);
+        std::thread::sleep(Duration::from_millis(50));
+
+        // GET /coordinators/:id
+        let info = client.get(&format!("/coordinators/{id}")).unwrap();
+        assert_eq!(info.status, 200);
+        assert_eq!(info.json().unwrap().get("state").as_str(), Some("RUNNING"));
+
+        // POST checkpoint
+        let ck = client
+            .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
+            .unwrap();
+        assert_eq!(ck.status, 201);
+        let seq = ck.json().unwrap().get("seq").as_u64().unwrap();
+
+        // GET checkpoints
+        let list = client.get(&format!("/coordinators/{id}/checkpoints")).unwrap();
+        assert_eq!(list.json().unwrap().as_arr().unwrap().len(), 1);
+
+        // GET one checkpoint
+        let one = client
+            .get(&format!("/coordinators/{id}/checkpoints/{seq}"))
+            .unwrap();
+        assert_eq!(one.status, 200);
+
+        // POST restart
+        let rs = client
+            .post(&format!("/coordinators/{id}/checkpoints/{seq}"), &Json::Null)
+            .unwrap();
+        assert_eq!(rs.status, 200);
+        assert_eq!(rs.json().unwrap().get("restarted_from").as_u64(), Some(seq));
+
+        // DELETE checkpoint
+        let del = client
+            .delete(&format!("/coordinators/{id}/checkpoints/{seq}"))
+            .unwrap();
+        assert_eq!(del.status, 200);
+
+        // DELETE coordinator
+        let del = client.delete(&format!("/coordinators/{id}")).unwrap();
+        assert_eq!(del.status, 204);
+        let resp = client.get(&format!("/coordinators/{id}")).unwrap();
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn bad_requests() {
+        let (_server, client) = start();
+        assert_eq!(client.get("/nope").unwrap().status, 404);
+        assert_eq!(client.get("/coordinators/app-99").unwrap().status, 404);
+        assert_eq!(client.get("/coordinators/xyz").unwrap().status, 400);
+        let resp = client
+            .post("/coordinators", &Json::object([("name", "x".into())]))
+            .unwrap();
+        assert_eq!(resp.status, 400);
+        let resp = client
+            .post("/coordinators/app-1/checkpoints/not-a-number", &Json::Null)
+            .unwrap();
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn image_download_via_query() {
+        let (_server, client) = start();
+        let id = submit_dmtcp1(&client);
+        std::thread::sleep(Duration::from_millis(30));
+        let ck = client
+            .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
+            .unwrap();
+        let seq = ck.json().unwrap().get("seq").as_u64().unwrap();
+        let img = client
+            .get(&format!("/coordinators/{id}/checkpoints/{seq}?proc=0"))
+            .unwrap();
+        assert_eq!(img.status, 200);
+        assert!(img.body.starts_with(b"DCKP"));
+        // missing proc -> 404
+        let missing = client
+            .get(&format!("/coordinators/{id}/checkpoints/{seq}?proc=5"))
+            .unwrap();
+        assert_eq!(missing.status, 404);
+    }
+
+    #[test]
+    fn health_endpoint() {
+        let (_server, client) = start();
+        let id = submit_dmtcp1(&client);
+        std::thread::sleep(Duration::from_millis(30));
+        let h = client.get(&format!("/coordinators/{id}/health")).unwrap();
+        assert_eq!(h.status, 200);
+        assert_eq!(h.json().unwrap(), Json::Arr(vec![Json::Bool(true)]));
+    }
+}

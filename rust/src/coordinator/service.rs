@@ -1,0 +1,611 @@
+//! Real-mode CACS service: the Fig 1 managers over real threads, real
+//! storage and real (PJRT-executed) workloads.
+//!
+//! * Application Manager — [`CacsService::submit`] / [`CacsService::restart`]
+//!   / [`CacsService::delete`], enforcing the Fig 2 lifecycle.
+//! * Cloud Manager — in real mode the "virtual cluster" is the
+//!   application host thread ([`super::appthread`]); provisioning is
+//!   construction of the workload (PJRT artifact compilation plays the
+//!   role of VM provisioning).
+//! * Checkpoint Manager — stateless over any [`ObjectStore`] (§6.2),
+//!   including image upload/download for migration (§5.3).
+//! * Monitoring Manager — a background thread heartbeating every
+//!   application's health hooks and triggering recovery (§6.3 case 2:
+//!   processes restart in place from the last image).
+
+use crate::coordinator::appthread::{AppFactory, AppHandle};
+use crate::coordinator::db::Db;
+use crate::coordinator::lifecycle::AppState;
+use crate::coordinator::types::{AppRecord, Asr, CkptRecord, WorkloadSpec};
+use crate::dckpt::service as ckptsvc;
+use crate::dckpt::DistributedApp;
+use crate::runtime::Engine;
+use crate::storage::ObjectStore;
+use crate::util::ids::{AppId, CkptId};
+use crate::util::json::Json;
+use crate::workloads::{dmtcp1::Dmtcp1App, lu, ns3};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    /// AOT artifacts directory; enables the PJRT backend when the
+    /// matching artifact exists (falls back to native otherwise).
+    pub artifacts_dir: Option<PathBuf>,
+    /// Throttle between workload steps (zero = run hot).
+    pub step_interval: Duration,
+    /// Pad images with the modelled DMTCP runtime overhead.
+    pub with_runtime_overhead: bool,
+    /// Health-monitoring period; None disables the monitor thread.
+    pub monitor_period: Option<Duration>,
+    /// Recover automatically from the latest checkpoint on failure.
+    pub auto_recover: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            artifacts_dir: None,
+            step_interval: Duration::from_millis(1),
+            with_runtime_overhead: false,
+            monitor_period: Some(Duration::from_millis(200)),
+            auto_recover: true,
+        }
+    }
+}
+
+struct Inner {
+    db: Db,
+    handles: BTreeMap<AppId, AppHandle>,
+}
+
+/// The service.  Share via `Arc`; [`start_monitor`](CacsService::start_monitor)
+/// runs the Monitoring Manager until the service drops.
+pub struct CacsService {
+    cfg: ServiceConfig,
+    store: Arc<dyn ObjectStore>,
+    inner: Mutex<Inner>,
+    epoch: Instant,
+}
+
+impl CacsService {
+    pub fn new(store: Arc<dyn ObjectStore>, cfg: ServiceConfig) -> Arc<CacsService> {
+        Arc::new(CacsService {
+            cfg,
+            store,
+            inner: Mutex::new(Inner { db: Db::new(), handles: BTreeMap::new() }),
+            epoch: Instant::now(),
+        })
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    pub fn store(&self) -> &Arc<dyn ObjectStore> {
+        &self.store
+    }
+
+    /// POST /coordinators (§5.1).
+    pub fn submit(&self, asr: Asr) -> Result<AppId> {
+        validate_asr(&asr)?;
+        let now = self.now();
+        let factory = build_factory(&asr, &self.cfg)?;
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.db.ids.app();
+        let mut rec = AppRecord::new(id, asr, now, 0);
+        // real mode: provisioning is thread + workload construction
+        rec.lifecycle.to(now, AppState::Provisioning);
+        let handle = AppHandle::spawn(
+            &id.to_string(),
+            factory,
+            self.store.clone(),
+            self.cfg.step_interval,
+        );
+        rec.lifecycle.to(self.now(), AppState::Ready);
+        rec.lifecycle.to(self.now(), AppState::Running);
+        inner.db.insert(rec);
+        inner.handles.insert(id, handle);
+        Ok(id)
+    }
+
+    /// GET /coordinators.
+    pub fn list(&self) -> Vec<Json> {
+        let inner = self.inner.lock().unwrap();
+        inner.db.iter().map(|r| r.to_json()).collect()
+    }
+
+    /// GET /coordinators/:id (with live progress attached).
+    pub fn info(&self, id: AppId) -> Result<Json> {
+        let progress = {
+            let inner = self.inner.lock().unwrap();
+            inner.handles.get(&id).and_then(|h| h.progress().ok())
+        };
+        let inner = self.inner.lock().unwrap();
+        let rec = inner.db.get(id).context("unknown coordinator")?;
+        let mut j = rec.to_json();
+        if let Some((iter, metric)) = progress {
+            j.set("iteration", iter.into());
+            if metric.is_finite() {
+                j.set("metric", metric.into());
+            }
+        }
+        Ok(j)
+    }
+
+    /// POST /coordinators/:id/checkpoints (§5.2 mode 1).
+    pub fn checkpoint(&self, id: AppId) -> Result<CkptRecord> {
+        let (seq, handle_report, iteration) = {
+            let mut inner = self.inner.lock().unwrap();
+            let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+            anyhow::ensure!(
+                rec.lifecycle.state().can_checkpoint(),
+                "cannot checkpoint in state {}",
+                rec.lifecycle.state()
+            );
+            let seq = rec.next_ckpt_seq;
+            rec.next_ckpt_seq += 1;
+            let now = self.now();
+            rec.lifecycle.to(now, AppState::Checkpointing);
+            drop(inner);
+            // take the checkpoint without holding the lock (it may move
+            // hundreds of MB)
+            let inner = self.inner.lock().unwrap();
+            let handle = inner.handles.get(&id).context("no app thread")?;
+            let report = handle.checkpoint(seq, self.cfg.with_runtime_overhead);
+            let iteration = handle.progress().map(|(i, _)| i).unwrap_or(0);
+            (seq, report, iteration)
+        };
+        let mut inner = self.inner.lock().unwrap();
+        let now = self.now();
+        let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+        match handle_report {
+            Ok(report) => {
+                rec.lifecycle.to(now, AppState::Running);
+                let ck = CkptRecord {
+                    id: CkptId(seq),
+                    seq,
+                    taken_at: now,
+                    iteration,
+                    total_bytes: report.total_bytes(),
+                    per_proc_bytes: report.image_bytes.clone(),
+                };
+                rec.ckpts.push(ck.clone());
+                Ok(ck)
+            }
+            Err(e) => {
+                rec.lifecycle.to(now, AppState::Error);
+                Err(e)
+            }
+        }
+    }
+
+    /// GET /coordinators/:id/checkpoints.
+    pub fn checkpoints(&self, id: AppId) -> Result<Vec<Json>> {
+        let inner = self.inner.lock().unwrap();
+        let rec = inner.db.get(id).context("unknown coordinator")?;
+        Ok(rec.ckpts.iter().map(|c| c.to_json()).collect())
+    }
+
+    /// POST /coordinators/:id/checkpoints/:seq — restart (§5.3).
+    pub fn restart(&self, id: AppId, seq: Option<u64>) -> Result<u64> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+            let now = self.now();
+            anyhow::ensure!(
+                rec.lifecycle.state().can_restart()
+                    || rec.lifecycle.state() == AppState::Restarting,
+                "cannot restart in state {}",
+                rec.lifecycle.state()
+            );
+            if rec.lifecycle.state() != AppState::Restarting {
+                rec.lifecycle.to(now, AppState::Restarting);
+            }
+        }
+        let result = {
+            let inner = self.inner.lock().unwrap();
+            let handle = inner.handles.get(&id).context("no app thread")?;
+            handle.restore(seq)
+        };
+        let mut inner = self.inner.lock().unwrap();
+        let now = self.now();
+        let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+        match result {
+            Ok(used) => {
+                rec.lifecycle.to(now, AppState::Running);
+                Ok(used)
+            }
+            Err(e) => {
+                rec.lifecycle.to(now, AppState::Error);
+                Err(e)
+            }
+        }
+    }
+
+    /// DELETE /coordinators/:id/checkpoints/:seq.
+    pub fn delete_checkpoint(&self, id: AppId, seq: u64) -> Result<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+        rec.ckpts.retain(|c| c.seq != seq);
+        drop(inner);
+        ckptsvc::delete_checkpoint(self.store.as_ref(), &id.to_string(), seq)
+    }
+
+    /// DELETE /coordinators/:id (§5.4: remove DB entry, stored images,
+    /// release resources).
+    pub fn delete(&self, id: AppId) -> Result<()> {
+        let handle = {
+            let mut inner = self.inner.lock().unwrap();
+            let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+            let now = self.now();
+            rec.lifecycle.to(now, AppState::Terminating);
+            inner.handles.remove(&id)
+        };
+        drop(handle); // joins the app thread (releases the "VMs")
+        let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.db.get_mut(id) {
+            let now = self.now();
+            rec.lifecycle.to(now, AppState::Terminated);
+        }
+        inner.db.remove(id);
+        Ok(())
+    }
+
+    /// Upload one checkpoint image (migration receive path, §5.3:
+    /// "n POST requests are sent to the corresponding checkpoints
+    /// resource to upload a set of checkpoint images").
+    pub fn upload_image(&self, id: AppId, seq: u64, proc: usize, data: &[u8]) -> Result<()> {
+        {
+            let inner = self.inner.lock().unwrap();
+            anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
+        }
+        let key = ckptsvc::image_key(&id.to_string(), seq, proc);
+        self.store
+            .put(&key, data)
+            .map_err(|e| anyhow::anyhow!("store put: {e}"))?;
+        // register/refresh the checkpoint record
+        let mut inner = self.inner.lock().unwrap();
+        let now = self.now();
+        let rec = inner.db.get_mut(id).unwrap();
+        if let Some(ck) = rec.ckpts.iter_mut().find(|c| c.seq == seq) {
+            while ck.per_proc_bytes.len() <= proc {
+                ck.per_proc_bytes.push(0);
+            }
+            ck.per_proc_bytes[proc] = data.len() as u64;
+            ck.total_bytes = ck.per_proc_bytes.iter().sum();
+        } else {
+            rec.ckpts.push(CkptRecord {
+                id: CkptId(seq),
+                seq,
+                taken_at: now,
+                iteration: 0,
+                total_bytes: data.len() as u64,
+                per_proc_bytes: vec![data.len() as u64],
+            });
+            rec.next_ckpt_seq = rec.next_ckpt_seq.max(seq + 1);
+        }
+        Ok(())
+    }
+
+    /// Download one checkpoint image (migration send path).
+    pub fn download_image(&self, id: AppId, seq: u64, proc: usize) -> Result<Vec<u8>> {
+        let key = ckptsvc::image_key(&id.to_string(), seq, proc);
+        self.store
+            .get(&key)
+            .map_err(|e| anyhow::anyhow!("store get: {e}"))
+    }
+
+    /// Health snapshot (the REST layer exposes this for diagnostics).
+    pub fn health(&self, id: AppId) -> Result<Vec<bool>> {
+        let inner = self.inner.lock().unwrap();
+        let handle = inner.handles.get(&id).context("unknown coordinator")?;
+        handle.health()
+    }
+
+    /// Fault injection (examples/tests): kill process `proc`.
+    pub fn kill_proc(&self, id: AppId, proc: usize) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        let handle = inner.handles.get(&id).context("unknown coordinator")?;
+        handle.kill_proc(proc);
+        Ok(())
+    }
+
+    /// Pause/resume (oversubscription example).
+    pub fn pause(&self, id: AppId) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        inner.handles.get(&id).context("unknown coordinator")?.pause();
+        Ok(())
+    }
+
+    pub fn resume(&self, id: AppId) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        inner.handles.get(&id).context("unknown coordinator")?.resume();
+        Ok(())
+    }
+
+    /// App ids currently registered.
+    pub fn app_ids(&self) -> Vec<AppId> {
+        self.inner.lock().unwrap().db.ids_sorted()
+    }
+
+    pub fn state(&self, id: AppId) -> Option<AppState> {
+        self.inner.lock().unwrap().db.get(id).map(|r| r.lifecycle.state())
+    }
+
+    /// One monitoring round over all apps (§6.3); returns the ids that
+    /// needed recovery.  Called by the monitor thread and directly by
+    /// tests.
+    pub fn monitor_round(&self) -> Vec<AppId> {
+        let ids = self.app_ids();
+        let mut recovered = vec![];
+        for id in ids {
+            let (state, health, has_ckpt) = {
+                let inner = self.inner.lock().unwrap();
+                let Some(rec) = inner.db.get(id) else { continue };
+                let state = rec.lifecycle.state();
+                let has_ckpt = rec.latest_ckpt().is_some();
+                let health = inner.handles.get(&id).and_then(|h| h.health().ok());
+                (state, health, has_ckpt)
+            };
+            if state != AppState::Running {
+                continue;
+            }
+            let Some(health) = health else { continue };
+            if health.iter().all(|&h| h) {
+                continue;
+            }
+            log::warn!("{id}: unhealthy procs {health:?}");
+            if self.cfg.auto_recover && has_ckpt {
+                // §6.3 case 2: kill remains + restart in place from the
+                // previous checkpoint
+                if self.restart(id, None).is_ok() {
+                    recovered.push(id);
+                }
+            } else {
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(rec) = inner.db.get_mut(id) {
+                    let now = self.now();
+                    rec.lifecycle.to(now, AppState::Error);
+                }
+            }
+        }
+        recovered
+    }
+
+    /// Start the Monitoring Manager thread.  Holds only a weak
+    /// reference; stops when the service drops or the period is None.
+    pub fn start_monitor(self: &Arc<Self>) {
+        let Some(period) = self.cfg.monitor_period else { return };
+        let weak: Weak<CacsService> = Arc::downgrade(self);
+        std::thread::Builder::new()
+            .name("cacs-monitor".into())
+            .spawn(move || loop {
+                std::thread::sleep(period);
+                match weak.upgrade() {
+                    Some(svc) => {
+                        let _ = svc.monitor_round();
+                    }
+                    None => return,
+                }
+            })
+            .expect("spawn monitor thread");
+    }
+}
+
+fn validate_asr(asr: &Asr) -> Result<()> {
+    match &asr.workload {
+        WorkloadSpec::Lu { nz, ny, nx } => {
+            lu::LuConfig::new(*nz, *ny, *nx, asr.n_vms)?;
+        }
+        WorkloadSpec::Dmtcp1 { n } => {
+            anyhow::ensure!(*n >= 1, "dmtcp1: n must be >= 1");
+            anyhow::ensure!(asr.n_vms == 1, "dmtcp1 is single-process");
+        }
+        WorkloadSpec::Ns3 { total_bytes } => {
+            anyhow::ensure!(*total_bytes >= 1, "ns3: total_bytes must be >= 1");
+            anyhow::ensure!(asr.n_vms == 1, "ns3 is single-process");
+        }
+    }
+    Ok(())
+}
+
+/// Build the app factory for a workload.  PJRT is used when an artifacts
+/// directory is configured and has the matching specialization; native
+/// otherwise (construction happens on the app thread).
+fn build_factory(asr: &Asr, cfg: &ServiceConfig) -> Result<AppFactory> {
+    let workload = asr.workload.clone();
+    let n_vms = asr.n_vms;
+    let artifacts = cfg.artifacts_dir.clone();
+    Ok(Box::new(move || -> Result<Box<dyn DistributedApp>> {
+        match workload {
+            WorkloadSpec::Lu { nz, ny, nx } => {
+                let cfg = lu::LuConfig::new(nz, ny, nx, n_vms)?;
+                let backend = match &artifacts {
+                    Some(dir) => match Engine::cpu(dir) {
+                        Ok(engine) => {
+                            let engine = Rc::new(RefCell::new(engine));
+                            match lu::Backend::pjrt(engine, &cfg) {
+                                Ok(b) => b,
+                                Err(e) => {
+                                    log::info!("lu: PJRT unavailable ({e}); using native");
+                                    lu::Backend::Native
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            log::info!("lu: engine init failed ({e}); using native");
+                            lu::Backend::Native
+                        }
+                    },
+                    None => lu::Backend::Native,
+                };
+                Ok(Box::new(lu::LuApp::new(cfg, backend)))
+            }
+            WorkloadSpec::Dmtcp1 { n } => {
+                if let Some(dir) = &artifacts {
+                    if let Ok(engine) = Engine::cpu(dir) {
+                        let engine = Rc::new(RefCell::new(engine));
+                        if let Ok(app) = Dmtcp1App::pjrt(engine, n) {
+                            return Ok(Box::new(app));
+                        }
+                    }
+                }
+                Ok(Box::new(Dmtcp1App::native(n)))
+            }
+            WorkloadSpec::Ns3 { total_bytes } => {
+                let cfg = ns3::Ns3Config {
+                    total_bytes,
+                    trace_cap: 16 * 1024 * 1024,
+                    ..ns3::Ns3Config::default()
+                };
+                Ok(Box::new(ns3::Ns3App::new(cfg)))
+            }
+        }
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::mem::MemStore;
+
+    fn svc() -> Arc<CacsService> {
+        CacsService::new(
+            Arc::new(MemStore::new()),
+            ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+        )
+    }
+
+    fn wait_progress(svc: &CacsService, id: AppId, min_iter: u64) {
+        for _ in 0..200 {
+            let j = svc.info(id).unwrap();
+            if j.get("iteration").as_u64().unwrap_or(0) >= min_iter {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("app {id} never reached iteration {min_iter}");
+    }
+
+    #[test]
+    fn submit_runs_and_lists() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d1", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        assert_eq!(svc.state(id), Some(AppState::Running));
+        wait_progress(&svc, id, 5);
+        let list = svc.list();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].get("state").as_str(), Some("RUNNING"));
+        svc.delete(id).unwrap();
+        assert!(svc.list().is_empty());
+    }
+
+    #[test]
+    fn validation_rejects_bad_asrs() {
+        let svc = svc();
+        // lu with odd slabs
+        assert!(svc
+            .submit(Asr::new("bad", WorkloadSpec::Lu { nz: 12, ny: 8, nx: 8 }, 4))
+            .is_err());
+        // multi-vm dmtcp1
+        assert!(svc
+            .submit(Asr::new("bad", WorkloadSpec::Dmtcp1 { n: 8 }, 2))
+            .is_err());
+        assert!(svc.list().is_empty());
+    }
+
+    #[test]
+    fn checkpoint_restart_cycle() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 128 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 10);
+        let ck = svc.checkpoint(id).unwrap();
+        assert_eq!(ck.seq, 1);
+        assert!(ck.total_bytes > 0);
+        assert_eq!(svc.state(id), Some(AppState::Running));
+        wait_progress(&svc, id, ck.iteration + 10);
+        let used = svc.restart(id, None).unwrap();
+        assert_eq!(used, 1);
+        assert_eq!(svc.state(id), Some(AppState::Running));
+        let cks = svc.checkpoints(id).unwrap();
+        assert_eq!(cks.len(), 1);
+    }
+
+    #[test]
+    fn failure_recovery_via_monitor_round() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("lu", WorkloadSpec::Lu { nz: 4, ny: 8, nx: 8 }, 2))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        svc.checkpoint(id).unwrap();
+        svc.kill_proc(id, 1).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(svc.health(id).unwrap(), vec![true, false]);
+        let recovered = svc.monitor_round();
+        assert_eq!(recovered, vec![id]);
+        assert_eq!(svc.health(id).unwrap(), vec![true, true]);
+        assert_eq!(svc.state(id), Some(AppState::Running));
+    }
+
+    #[test]
+    fn failure_without_checkpoint_errors() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 32 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        svc.kill_proc(id, 0).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        svc.monitor_round();
+        assert_eq!(svc.state(id), Some(AppState::Error));
+    }
+
+    #[test]
+    fn image_upload_download_roundtrip() {
+        let svc_a = svc();
+        let svc_b = svc();
+        let a = svc_a
+            .submit(Asr::new("src", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc_a, a, 5);
+        let ck = svc_a.checkpoint(a).unwrap();
+        let img = svc_a.download_image(a, ck.seq, 0).unwrap();
+        assert!(!img.is_empty());
+
+        // §5.3 cloning: new coordinator on the destination + upload + restart
+        let b = svc_b
+            .submit(Asr::new("dst", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        svc_b.upload_image(b, 7, 0, &img).unwrap();
+        let used = svc_b.restart(b, Some(7)).unwrap();
+        assert_eq!(used, 7);
+        // destination resumed from the source's iteration
+        let j = svc_b.info(b).unwrap();
+        assert!(j.get("iteration").as_u64().unwrap() >= ck.iteration);
+    }
+
+    #[test]
+    fn checkpoint_requires_running() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 16 }, 1))
+            .unwrap();
+        svc.pause(id).unwrap(); // paused apps are still RUNNING state-wise
+        svc.checkpoint(id).unwrap();
+        svc.delete(id).unwrap();
+        assert!(svc.checkpoint(id).is_err());
+    }
+}

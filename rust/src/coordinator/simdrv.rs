@@ -1,0 +1,1120 @@
+//! Sim-mode CACS driver: the whole service running under virtual time.
+//!
+//! This is the machinery behind every figure bench: submissions claim
+//! VMs from a simulated IaaS ([`crate::simcloud`]), provisioning runs
+//! through the parallel-SSH model ([`crate::provision`]), checkpoints
+//! follow the DMTCP protocol model ([`crate::dckpt::protocol`]) with
+//! image uploads/downloads as fluid flows over the shared network
+//! ([`crate::netsim`] + [`crate::storage::sim`]), health monitoring
+//! samples the broadcast-tree model ([`crate::monitor::sim`]), and the
+//! Fig 2 lifecycle gates every step.
+//!
+//! Key paper behaviours encoded here:
+//! * lazy remote upload (§5.2): the app resumes as soon as images hit
+//!   local disk; uploads drain in the background (ablation: eager);
+//! * passive recovery (§5.3): failed VMs are replaced before restart;
+//! * cloning/migration (§5.3): a new app on another cloud restarts from
+//!   the source app's images in shared storage (Fig 5);
+//! * OpenStack's shared management/data network (§7.4): checkpoint
+//!   traffic routes through the mgmt link, where scheduler chatter also
+//!   lives (Fig 6b instability).
+
+use crate::coordinator::db::Db;
+use crate::coordinator::lifecycle::AppState;
+use crate::coordinator::types::{AppRecord, Asr, CkptRecord, WorkloadSpec};
+use crate::dckpt::protocol::{self, DckptParams};
+use crate::metrics::Recorder;
+use crate::monitor::sim::{heartbeat_rtt, MonitorParams};
+use crate::netsim::{FlowId, LinkId, NetSim};
+use crate::provision::{SshExecutor, SshParams};
+use crate::simcloud::{CloudEvent, IaasCloud, ReservationId, VmState};
+use crate::simexec::Sim;
+use crate::storage::sim::SimStorage;
+use crate::util::ids::{AppId, CkptId, VmId};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Service-level tunables.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub dckpt: DckptParams,
+    pub mon: MonitorParams,
+    /// Cloud front-end poll interval (s) — CACS polls the IaaS while
+    /// VMs build (the Fig 4a "m polling threads").
+    pub poll_interval: f64,
+    /// Median per-VM provisioning command time (s) (§5.1 PROVISION:
+    /// checkpoint dirs, DMTCP config, user init).
+    pub provision_cmd_median: f64,
+    /// Median application start command time (s).
+    pub start_cmd_median: f64,
+    /// Lazy remote upload (§5.2) vs eager (ablation).
+    pub lazy_upload: bool,
+    /// Per-image constant overhead bytes (DMTCP + libraries; Table 2).
+    pub image_overhead_bytes: f64,
+    /// Fig 4 cost constants: bytes/sec consumed by one polling thread
+    /// (c1) and one SSH thread (c2).
+    pub poll_cost: f64,
+    pub ssh_cost: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            dckpt: DckptParams::default(),
+            mon: MonitorParams::default(),
+            poll_interval: 1.0,
+            provision_cmd_median: 2.5,
+            start_cmd_median: 0.5,
+            lazy_upload: true,
+            image_overhead_bytes: protocol::LU_IMAGE_OVERHEAD_BYTES,
+            poll_cost: 40e3,
+            ssh_cost: 120e3,
+        }
+    }
+}
+
+/// Why a reservation was made.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RsvPurpose {
+    Initial,
+    Replacement,
+}
+
+/// In-flight transfer group (all sub-flows of one checkpoint upload or
+/// restart download).
+#[derive(Debug, Clone)]
+struct TransferGroup {
+    app: AppId,
+    kind: GroupKind,
+    flows_left: usize,
+    started: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum GroupKind {
+    CkptUpload { seq: u64 },
+    RestoreDownload,
+}
+
+/// Timing records the benches read out.
+#[derive(Debug, Clone, Default)]
+pub struct CkptTiming {
+    pub started: f64,
+    pub local_done: f64,
+    pub uploaded: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RestartTiming {
+    pub started: f64,
+    pub downloaded: f64,
+    pub running: f64,
+}
+
+/// Sim-only per-app extension record.
+#[derive(Debug, Clone, Default)]
+pub struct SimAppExt {
+    /// Data bytes per process image (excluding the constant overhead).
+    pub data_bytes_per_proc: f64,
+    pub ckpt_timings: Vec<CkptTiming>,
+    pub restart_timings: Vec<RestartTiming>,
+    pub heartbeats: Vec<(f64, f64)>,
+    /// Apps this one was cloned from (migration bookkeeping).
+    pub cloned_from: Option<AppId>,
+}
+
+/// Start control-plane background chatter on a shared mgmt/data link
+/// for the duration of a transfer (§7.4: OpenStack's management traffic
+/// and application data share one network, destabilizing restarts).
+fn mgmt_chatter(w: &mut SimWorld, now: f64, cloud_idx: usize, image_bytes: f64, n: usize) {
+    if let Some(mgmt) = w.mgmt_links[cloud_idx] {
+        // the management plane's concurrent RPC/polling stream count
+        // varies with cluster activity; under max-min fairness the image
+        // transfers' share of the link is count-based, so a random burst
+        // count translates directly into restart-time variance
+        let flows = 1 + w.rng.below(2 * n.max(1) as u64) as usize;
+        for _ in 0..flows {
+            let bytes = w.rng.lognormal(1.0, 1.0) * image_bytes;
+            w.net.start_flow(now, vec![mgmt], bytes.max(1e6), "mgmt-chatter");
+        }
+    }
+}
+
+/// The complete simulated world.
+pub struct SimWorld {
+    pub net: NetSim,
+    pub clouds: Vec<Box<dyn IaasCloud>>,
+    /// Per-cloud shared mgmt/data link (OpenStack; None for Snooze).
+    pub mgmt_links: Vec<Option<LinkId>>,
+    pub storage: SimStorage,
+    pub ssh: Vec<SshExecutor>,
+    pub params: SimParams,
+    pub rng: Rng,
+    pub rec: Recorder,
+    pub db: Db,
+    pub ext: BTreeMap<AppId, SimAppExt>,
+    transfers: BTreeMap<u64, TransferGroup>,
+    flow_group: BTreeMap<FlowId, u64>,
+    next_group: u64,
+    rsv_map: BTreeMap<(usize, u64), (AppId, RsvPurpose)>,
+    poll_scheduled: Vec<bool>,
+}
+
+impl SimWorld {
+    fn image_bytes(&self, app: AppId) -> f64 {
+        let ext = &self.ext[&app];
+        ext.data_bytes_per_proc + self.params.image_overhead_bytes
+    }
+
+    /// Path from a VM NIC to the storage service (through the mgmt link
+    /// on clouds that share it — §7.4).
+    fn storage_paths(&mut self, cloud_idx: usize, nic: LinkId, bytes: f64) -> Vec<(Vec<LinkId>, f64)> {
+        let plans = self.storage.plan(nic, bytes);
+        match self.mgmt_links[cloud_idx] {
+            None => plans,
+            Some(mgmt) => plans
+                .into_iter()
+                .map(|(mut path, b)| {
+                    path.insert(1, mgmt);
+                    (path, b)
+                })
+                .collect(),
+        }
+    }
+
+    /// Fig 4a instantaneous service network rate: m·c1 + n·c2.
+    pub fn service_net_rate(&self) -> f64 {
+        let m = self.db.count_in(AppState::Creating) as f64;
+        let n = self.db.count_in(AppState::Provisioning) as f64;
+        m * self.params.poll_cost + n * self.params.ssh_cost
+    }
+
+    /// Fig 4b modelled resident memory: base + per-app records + active
+    /// thread stacks.
+    pub fn service_mem_bytes(&self) -> f64 {
+        let base = 64e6;
+        let per_app = 150e3;
+        let per_thread = 1e6;
+        let m = self.db.count_in(AppState::Creating) as f64;
+        let n = self.db.count_in(AppState::Provisioning) as f64;
+        base + per_app * self.db.len() as f64 + per_thread * (m + n)
+    }
+}
+
+/// The sim-mode CACS instance: a DES plus the world.
+pub struct SimCacs {
+    pub sim: Sim<SimWorld>,
+    pub world: SimWorld,
+}
+
+impl SimCacs {
+    /// Empty world; add clouds before submitting.
+    pub fn new(seed: u64) -> SimCacs {
+        let mut net = NetSim::new();
+        // default storage: Ceph with 8 OSDs (the paper's Grid'5000 setup)
+        let storage = SimStorage::ceph(&mut net, 8, 1.25e8, 4);
+        let world = SimWorld {
+            net,
+            clouds: vec![],
+            mgmt_links: vec![],
+            storage,
+            ssh: vec![],
+            params: SimParams::default(),
+            rng: Rng::new(seed),
+            rec: Recorder::new(),
+            db: Db::new(),
+            ext: BTreeMap::new(),
+            transfers: BTreeMap::new(),
+            flow_group: BTreeMap::new(),
+            next_group: 1,
+            rsv_map: BTreeMap::new(),
+            poll_scheduled: vec![],
+        };
+        SimCacs { sim: Sim::new(), world }
+    }
+
+    /// Replace the storage backend (must be called before submissions).
+    pub fn set_storage(&mut self, storage: SimStorage) {
+        self.world.storage = storage;
+    }
+
+    /// Attach a Snooze cloud; returns its index.
+    pub fn add_snooze(&mut self, n_servers: usize) -> usize {
+        let seed = self.world.rng.next_u64();
+        let cloud = crate::simcloud::snooze::SnoozeCloud::new(
+            &mut self.world.net,
+            n_servers,
+            crate::simcloud::snooze::SnoozeParams::default(),
+            seed,
+        );
+        self.world.clouds.push(Box::new(cloud));
+        self.world.mgmt_links.push(None);
+        self.world.ssh.push(SshExecutor::new(SshParams::default(), self.world.rng.next_u64()));
+        self.world.poll_scheduled.push(false);
+        self.world.clouds.len() - 1
+    }
+
+    /// Attach an OpenStack cloud; returns its index.
+    pub fn add_openstack(&mut self, n_servers: usize) -> usize {
+        let seed = self.world.rng.next_u64();
+        let cloud = crate::simcloud::openstack::OpenStackCloud::new(
+            &mut self.world.net,
+            n_servers,
+            crate::simcloud::openstack::OpenStackParams::default(),
+            seed,
+        );
+        let mgmt = cloud.shared_mgmt_link();
+        self.world.clouds.push(Box::new(cloud));
+        self.world.mgmt_links.push(Some(mgmt));
+        self.world.ssh.push(SshExecutor::new(SshParams::default(), self.world.rng.next_u64()));
+        self.world.poll_scheduled.push(false);
+        self.world.clouds.len() - 1
+    }
+
+    /// Submit an application (POST /coordinators, §5.1) at the current
+    /// virtual time.  Returns its id immediately; the lifecycle advances
+    /// through events.
+    pub fn submit(&mut self, cloud_idx: usize, asr: Asr) -> anyhow::Result<AppId> {
+        let now = self.sim.now();
+        submit_at(&mut self.sim, &mut self.world, now, cloud_idx, asr)
+    }
+
+    /// Schedule a submission at a future virtual time (Fig 4: one app
+    /// per second; Fig 5: incremental starts).
+    pub fn submit_later(&mut self, at: f64, cloud_idx: usize, asr: Asr) {
+        self.sim.at(at, move |sim, w| {
+            let now = sim.now();
+            let _ = submit_at(sim, w, now, cloud_idx, asr);
+        });
+    }
+
+    /// User-initiated checkpoint (POST .../checkpoints, §5.2 mode 1).
+    pub fn trigger_checkpoint(&mut self, app: AppId) {
+        self.sim.after(0.0, move |sim, w| start_checkpoint(sim, w, app));
+    }
+
+    /// Restart from the latest checkpoint (POST .../checkpoints/:id).
+    pub fn trigger_restart(&mut self, app: AppId) {
+        self.sim.after(0.0, move |sim, w| start_restart(sim, w, app));
+    }
+
+    /// Clone `app` onto `dst_cloud` (POST a new coordinator + image
+    /// upload + restart, §5.3).  Returns the clone's id.
+    pub fn clone_to(&mut self, app: AppId, dst_cloud: usize) -> anyhow::Result<AppId> {
+        let src = self
+            .world
+            .db
+            .get(app)
+            .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+        anyhow::ensure!(
+            src.latest_ckpt().is_some(),
+            "clone requires at least one checkpoint"
+        );
+        let asr = src.asr.clone();
+        let data_bytes = self.world.ext[&app].data_bytes_per_proc;
+        let now = self.sim.now();
+        let id = submit_at(&mut self.sim, &mut self.world, now, dst_cloud, asr)?;
+        let ext = self.world.ext.get_mut(&id).unwrap();
+        ext.cloned_from = Some(app);
+        ext.data_bytes_per_proc = data_bytes;
+        Ok(id)
+    }
+
+    /// Migrate = clone + terminate source once the clone runs (§5.3).
+    pub fn migrate_to(&mut self, app: AppId, dst_cloud: usize) -> anyhow::Result<AppId> {
+        let clone = self.clone_to(app, dst_cloud)?;
+        // terminate the source when the clone reaches RUNNING
+        watch_running_then(&mut self.sim, clone, move |sim, w| terminate(sim, w, app));
+        Ok(clone)
+    }
+
+    /// DELETE /coordinators/:id (§5.4).
+    pub fn terminate(&mut self, app: AppId) {
+        self.sim.after(0.0, move |sim, w| terminate(sim, w, app));
+    }
+
+    /// Kill a random server hosting the app's VMs (fault injection).
+    pub fn inject_vm_failure(&mut self, app: AppId) {
+        self.sim.after(0.0, move |sim, w| {
+            let Some(rec) = w.db.get(app) else { return };
+            let Some(&vm) = rec.vms.first() else { return };
+            let cloud_idx = rec.cloud_idx;
+            let Some(vmrec) = w.clouds[cloud_idx].vm_record(vm) else { return };
+            let server = vmrec.server;
+            let now = sim.now();
+            w.clouds[cloud_idx].inject_server_failure(now, server);
+            schedule_poll(sim, w, cloud_idx);
+        });
+    }
+
+    /// Run until no events remain; returns final virtual time.
+    pub fn run(&mut self) -> f64 {
+        self.sim.run(&mut self.world)
+    }
+
+    /// Run until `t` (sampling-friendly).
+    pub fn run_until(&mut self, t: f64) -> f64 {
+        self.sim.run_until(&mut self.world, t)
+    }
+
+    /// Install a 1 Hz sampler of service gauges + storage throughput
+    /// between t0 and t1 (Figs 4a/4b/5).
+    pub fn sample_gauges(&mut self, t0: f64, t1: f64) {
+        fn tick(sim: &mut Sim<SimWorld>, w: &mut SimWorld, t1: f64) {
+            let now = sim.now();
+            w.net.advance(now);
+            let net = w.service_net_rate();
+            let mem = w.service_mem_bytes();
+            let sto = w.storage.server_throughput(&w.net);
+            w.rec.record("svc.net_rate", now, net);
+            w.rec.record("svc.mem_bytes", now, mem);
+            w.rec.record("storage.throughput", now, sto);
+            if now + 1.0 <= t1 {
+                sim.after(1.0, move |sim, w| tick(sim, w, t1));
+            }
+        }
+        self.sim.at(t0, move |sim, w| tick(sim, w, t1));
+    }
+
+    /// Fig 3a decomposition for an app that reached RUNNING:
+    /// (iaas_time, provision_time, total).
+    pub fn submission_phases(&self, app: AppId) -> Option<(f64, f64, f64)> {
+        let rec = self.world.db.get(app)?;
+        let iaas = rec.lifecycle.span(AppState::Creating, AppState::Provisioning)?;
+        let prov = rec.lifecycle.span(AppState::Provisioning, AppState::Running)?;
+        let total = rec.lifecycle.span(AppState::Creating, AppState::Running)?;
+        Some((iaas, prov, total))
+    }
+
+    pub fn state(&self, app: AppId) -> Option<AppState> {
+        self.world.db.get(app).map(|r| r.lifecycle.state())
+    }
+
+    pub fn ext(&self, app: AppId) -> Option<&SimAppExt> {
+        self.world.ext.get(&app)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// event bodies
+// ---------------------------------------------------------------------------
+
+fn submit_at(
+    sim: &mut Sim<SimWorld>,
+    w: &mut SimWorld,
+    now: f64,
+    cloud_idx: usize,
+    asr: Asr,
+) -> anyhow::Result<AppId> {
+    anyhow::ensure!(cloud_idx < w.clouds.len(), "no cloud {cloud_idx}");
+    let id = w.db.ids.app();
+    let data_bytes = default_data_bytes(&asr);
+    let n_vms = asr.n_vms;
+    let template = asr.template.clone();
+    let rec = AppRecord::new(id, asr, now, cloud_idx);
+    w.db.insert(rec);
+    w.ext.insert(id, SimAppExt { data_bytes_per_proc: data_bytes, ..Default::default() });
+
+    match w.clouds[cloud_idx].request_vms(now, n_vms, &template) {
+        Ok(rsv) => {
+            w.rsv_map.insert((cloud_idx, rsv.0), (id, RsvPurpose::Initial));
+            schedule_poll(sim, w, cloud_idx);
+        }
+        Err(e) => {
+            log::warn!("{id}: VM request failed: {e}");
+            let rec = w.db.get_mut(id).unwrap();
+            rec.lifecycle.to(now, AppState::Error);
+        }
+    }
+    Ok(id)
+}
+
+/// Per-workload default image data size (sim mode; benches can override
+/// via `SimAppExt.data_bytes_per_proc`).
+fn default_data_bytes(asr: &Asr) -> f64 {
+    match &asr.workload {
+        // two f64-per-cell... two f32 arrays (u, f): 8 B/cell split over procs
+        WorkloadSpec::Lu { nz, ny, nx } => 8.0 * (nz * ny * nx) as f64 / asr.n_vms as f64,
+        WorkloadSpec::Dmtcp1 { n } => 4.0 * *n as f64,
+        WorkloadSpec::Ns3 { .. } => 8e6,
+    }
+}
+
+fn schedule_poll(sim: &mut Sim<SimWorld>, w: &mut SimWorld, cloud_idx: usize) {
+    if w.poll_scheduled[cloud_idx] {
+        return;
+    }
+    w.poll_scheduled[cloud_idx] = true;
+    let next = w.clouds[cloud_idx]
+        .next_event_time()
+        .unwrap_or(sim.now() + w.params.poll_interval);
+    let at = next.max(sim.now());
+    sim.at(at, move |sim, w| poll_cloud(sim, w, cloud_idx));
+}
+
+fn poll_cloud(sim: &mut Sim<SimWorld>, w: &mut SimWorld, cloud_idx: usize) {
+    w.poll_scheduled[cloud_idx] = false;
+    let now = sim.now();
+    let events = w.clouds[cloud_idx].poll_events(now);
+    for ev in events {
+        match ev {
+            CloudEvent::VmActive { reservation, vm } => {
+                if let Some(&(app, _purpose)) = w.rsv_map.get(&(cloud_idx, reservation.0)) {
+                    if let Some(rec) = w.db.get_mut(app) {
+                        if !rec.vms.contains(&vm) {
+                            rec.vms.push(vm);
+                        }
+                    }
+                }
+            }
+            CloudEvent::ReservationReady { reservation } => {
+                if let Some(&(app, purpose)) = w.rsv_map.get(&(cloud_idx, reservation.0)) {
+                    match purpose {
+                        RsvPurpose::Initial => start_provision(sim, w, app, reservation),
+                        RsvPurpose::Replacement => {
+                            replacement_ready(sim, w, app, reservation)
+                        }
+                    }
+                }
+            }
+            CloudEvent::VmFailed { vm } => {
+                on_vm_failed(sim, w, cloud_idx, vm);
+            }
+            CloudEvent::ServerFailed { .. } => {}
+        }
+    }
+    // keep polling while the cloud has pending events or any app still
+    // builds (OpenStack failure detection also needs the heartbeat path,
+    // which runs separately)
+    if w.clouds[cloud_idx].next_event_time().is_some() {
+        schedule_poll(sim, w, cloud_idx);
+    }
+}
+
+fn start_provision(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, _rsv: ReservationId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get_mut(app) else { return };
+    if !rec.lifecycle.to(now, AppState::Provisioning) {
+        return;
+    }
+    let vms = rec.vms.clone();
+    let cloud_idx = rec.cloud_idx;
+    let cmd = w.params.provision_cmd_median;
+    let start_cmd = w.params.start_cmd_median;
+    let batch = w.ssh[cloud_idx].run_batch(now, &vms, cmd, 0.2);
+    let provision_done = batch.done_at;
+    // start command reuses the connections
+    let start_batch = w.ssh[cloud_idx].run_batch(provision_done, &vms, start_cmd, 0.2);
+    let running_at = start_batch.done_at;
+    sim.at(provision_done, move |sim, w| {
+        let now = sim.now();
+        if let Some(rec) = w.db.get_mut(app) {
+            rec.lifecycle.to(now, AppState::Ready);
+        }
+        sim.at(running_at.max(now), move |sim, w| {
+            let now = sim.now();
+            let mut period = None;
+            if let Some(rec) = w.db.get_mut(app) {
+                if rec.lifecycle.to(now, AppState::Running) {
+                    period = rec.asr.ckpt_period;
+                }
+            }
+            if let Some(p) = period {
+                schedule_periodic_ckpt(sim, app, p);
+            }
+            schedule_heartbeat(sim, w, app);
+            // clones restart from their source's images as soon as the
+            // cluster runs (§5.3)
+            if w.ext[&app].cloned_from.is_some() {
+                start_restart(sim, w, app);
+            }
+        });
+    });
+}
+
+fn schedule_periodic_ckpt(sim: &mut Sim<SimWorld>, app: AppId, period: f64) {
+    sim.after(period, move |sim, w| {
+        let Some(rec) = w.db.get(app) else { return };
+        match rec.lifecycle.state() {
+            AppState::Running => {
+                start_checkpoint(sim, w, app);
+                schedule_periodic_ckpt(sim, app, period);
+            }
+            AppState::Checkpointing | AppState::Restarting => {
+                schedule_periodic_ckpt(sim, app, period);
+            }
+            _ => {} // terminated / error: stop the timer
+        }
+    });
+}
+
+fn schedule_heartbeat(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let period = w.params.mon.period;
+    sim.after(period, move |sim, w| {
+        let Some(rec) = w.db.get(app) else { return };
+        let state = rec.lifecycle.state();
+        if !state.is_active() {
+            return;
+        }
+        let n = rec.asr.n_vms;
+        let cloud_idx = rec.cloud_idx;
+        let vms = rec.vms.clone();
+        let now = sim.now();
+        let rtt = heartbeat_rtt(&w.params.mon, &mut w.rng, n);
+        w.ext.get_mut(&app).unwrap().heartbeats.push((now, rtt));
+        // in-VM daemons detect failures the cloud never reports
+        // (the OpenStack case, §6.1)
+        let failed = vms.iter().any(|vm| {
+            w.clouds[cloud_idx]
+                .vm_record(*vm)
+                .map(|r| r.state == VmState::Failed)
+                .unwrap_or(true)
+        });
+        if failed && state == AppState::Running {
+            recover(sim, w, app);
+        } else {
+            schedule_heartbeat(sim, w, app);
+        }
+    });
+}
+
+fn on_vm_failed(sim: &mut Sim<SimWorld>, w: &mut SimWorld, cloud_idx: usize, vm: VmId) {
+    // Snooze notification path: find the app owning this VM
+    let owner = w
+        .db
+        .iter()
+        .find(|r| r.cloud_idx == cloud_idx && r.vms.contains(&vm))
+        .map(|r| r.id);
+    if let Some(app) = owner {
+        let state = w.db.get(app).unwrap().lifecycle.state();
+        if state == AppState::Running || state == AppState::Checkpointing {
+            recover(sim, w, app);
+        }
+    }
+}
+
+/// §6.3 recovery: VM unreachable → new VM + restart from checkpoint.
+fn recover(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get_mut(app) else { return };
+    if rec.latest_ckpt().is_none() {
+        log::warn!("{app}: failure without checkpoint -> ERROR");
+        rec.lifecycle.to(now, AppState::Error);
+        return;
+    }
+    if !rec.lifecycle.to(now, AppState::Restarting) {
+        return;
+    }
+    let cloud_idx = rec.cloud_idx;
+    // passive recovery (§5.3): replace unreachable VMs
+    let dead: Vec<VmId> = rec
+        .vms
+        .iter()
+        .copied()
+        .filter(|vm| {
+            w.clouds[cloud_idx]
+                .vm_record(*vm)
+                .map(|r| r.state != VmState::Active)
+                .unwrap_or(true)
+        })
+        .collect();
+    let template = rec.asr.template.clone();
+    if dead.is_empty() {
+        start_downloads(sim, w, app);
+        return;
+    }
+    // drop dead VMs from the record; request replacements
+    let rec = w.db.get_mut(app).unwrap();
+    rec.vms.retain(|vm| !dead.contains(vm));
+    match w.clouds[cloud_idx].request_vms(now, dead.len(), &template) {
+        Ok(rsv) => {
+            w.rsv_map.insert((cloud_idx, rsv.0), (app, RsvPurpose::Replacement));
+            schedule_poll(sim, w, cloud_idx);
+        }
+        Err(e) => {
+            log::warn!("{app}: replacement VMs unavailable: {e}");
+            w.db.get_mut(app).unwrap().lifecycle.to(now, AppState::Error);
+        }
+    }
+}
+
+fn replacement_ready(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, _rsv: ReservationId) {
+    // re-provision just the new VMs (connections can't be reused there)
+    let now = sim.now();
+    let Some(rec) = w.db.get(app) else { return };
+    let cloud_idx = rec.cloud_idx;
+    let vms = rec.vms.clone();
+    let cmd = w.params.provision_cmd_median;
+    let batch = w.ssh[cloud_idx].run_batch(now, &vms, cmd, 0.2);
+    sim.at(batch.done_at, move |sim, w| start_downloads(sim, w, app));
+}
+
+fn start_checkpoint(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get_mut(app) else { return };
+    if !rec.lifecycle.state().can_checkpoint() {
+        return;
+    }
+    rec.lifecycle.to(now, AppState::Checkpointing);
+    let n = rec.asr.n_vms;
+    let seq = rec.next_ckpt_seq;
+    rec.next_ckpt_seq += 1;
+    let image_bytes = w.image_bytes(app);
+    let local = protocol::checkpoint_local(&w.params.dckpt, &mut w.rng, n, image_bytes);
+    let lazy = w.params.lazy_upload;
+    w.ext.get_mut(&app).unwrap().ckpt_timings.push(CkptTiming {
+        started: now,
+        ..Default::default()
+    });
+    sim.after(local.total(), move |sim, w| {
+        let now = sim.now();
+        if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.ckpt_timings.last_mut()) {
+            t.local_done = now;
+        }
+        if lazy {
+            // §5.2: resume immediately; upload drains in the background
+            if let Some(rec) = w.db.get_mut(app) {
+                rec.lifecycle.to(now, AppState::Running);
+            }
+        }
+        begin_upload(sim, w, app, seq);
+    });
+}
+
+fn begin_upload(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, seq: u64) {
+    let now = sim.now();
+    let Some(rec) = w.db.get(app) else { return };
+    let cloud_idx = rec.cloud_idx;
+    let vms = rec.vms.clone();
+    let image_bytes = w.image_bytes(app);
+    mgmt_chatter(w, now, cloud_idx, image_bytes, vms.len());
+    let gid = w.next_group;
+    w.next_group += 1;
+    let mut flows = 0usize;
+    for vm in vms {
+        let nic = match w.clouds[cloud_idx].vm_record(vm) {
+            Some(r) => r.nic,
+            None => continue,
+        };
+        for (path, bytes) in w.storage_paths(cloud_idx, nic, image_bytes) {
+            let f = w.net.start_flow(now, path, bytes, "ckpt-up");
+            w.flow_group.insert(f, gid);
+            flows += 1;
+        }
+    }
+    if flows == 0 {
+        finish_upload(sim, w, app, seq, now);
+        return;
+    }
+    w.transfers.insert(
+        gid,
+        TransferGroup { app, kind: GroupKind::CkptUpload { seq }, flows_left: flows, started: now },
+    );
+    pump_net(sim, w);
+}
+
+fn finish_upload(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, seq: u64, _started: f64) {
+    let now = sim.now();
+    let image_bytes = w.image_bytes(app);
+    let Some(rec) = w.db.get_mut(app) else { return };
+    let n = rec.asr.n_vms;
+    let id = CkptId(seq);
+    rec.ckpts.push(CkptRecord {
+        id,
+        seq,
+        taken_at: now,
+        iteration: 0,
+        total_bytes: (image_bytes * n as f64) as u64,
+        per_proc_bytes: vec![image_bytes as u64; n],
+    });
+    if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.ckpt_timings.last_mut()) {
+        t.uploaded = now;
+    }
+    {
+        let rec = w.db.get(app).unwrap();
+        let bytes = image_bytes * rec.asr.n_vms as f64;
+        w.rec.record("storage.xfer_bytes", now, bytes);
+    }
+    if !w.params.lazy_upload {
+        // eager mode: the app resumes only now
+        if let Some(rec) = w.db.get_mut(app) {
+            rec.lifecycle.to(now, AppState::Running);
+        }
+    }
+    w.rec.incr("ckpt.uploads", 1.0);
+}
+
+fn start_restart(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get_mut(app) else { return };
+    let state = rec.lifecycle.state();
+    if state == AppState::Running {
+        if !rec.lifecycle.to(now, AppState::Restarting) {
+            return;
+        }
+    } else if state != AppState::Restarting {
+        return;
+    }
+    start_downloads(sim, w, app);
+}
+
+fn start_downloads(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get(app) else { return };
+    let cloud_idx = rec.cloud_idx;
+    let vms = rec.vms.clone();
+    // clones download the *source* app's images; the byte count is the
+    // same by construction
+    let image_bytes = w.image_bytes(app);
+    mgmt_chatter(w, now, cloud_idx, image_bytes, vms.len());
+    w.ext.get_mut(&app).unwrap().restart_timings.push(RestartTiming {
+        started: now,
+        ..Default::default()
+    });
+    let gid = w.next_group;
+    w.next_group += 1;
+    let mut flows = 0usize;
+    for vm in vms {
+        let nic = match w.clouds[cloud_idx].vm_record(vm) {
+            Some(r) => r.nic,
+            None => continue,
+        };
+        for (path, bytes) in w.storage_paths(cloud_idx, nic, image_bytes) {
+            let f = w.net.start_flow(now, path, bytes, "restore-down");
+            w.flow_group.insert(f, gid);
+            flows += 1;
+        }
+    }
+    if flows == 0 {
+        finish_download(sim, w, app);
+        return;
+    }
+    w.transfers.insert(
+        gid,
+        TransferGroup { app, kind: GroupKind::RestoreDownload, flows_left: flows, started: now },
+    );
+    pump_net(sim, w);
+}
+
+fn finish_download(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.restart_timings.last_mut()) {
+        t.downloaded = now;
+    }
+    if let Some(rec) = w.db.get(app) {
+        let bytes = w.image_bytes(app) * rec.asr.n_vms as f64;
+        w.rec.record("storage.xfer_bytes", now, bytes);
+    }
+    let Some(rec) = w.db.get(app) else { return };
+    let n = rec.asr.n_vms;
+    let image_bytes = w.image_bytes(app);
+    let local = protocol::restart_local(&w.params.dckpt, &mut w.rng, n, image_bytes);
+    sim.after(local, move |sim, w| {
+        let now = sim.now();
+        if let Some(rec) = w.db.get_mut(app) {
+            if rec.lifecycle.to(now, AppState::Running) {
+                if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.restart_timings.last_mut()) {
+                    t.running = now;
+                }
+                schedule_heartbeat(sim, w, app);
+            }
+        }
+    });
+}
+
+fn terminate(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get_mut(app) else { return };
+    if !rec.lifecycle.to(now, AppState::Terminating) {
+        return;
+    }
+    let cloud_idx = rec.cloud_idx;
+    let vms = rec.vms.clone();
+    // §5.4: delete DB entry references, remove stored images, release VMs
+    w.clouds[cloud_idx].terminate_vms(now, &vms);
+    w.rec.incr("apps.terminated", 1.0);
+    sim.after(0.5, move |sim, w| {
+        let now = sim.now();
+        if let Some(rec) = w.db.get_mut(app) {
+            rec.lifecycle.to(now, AppState::Terminated);
+        }
+    });
+}
+
+/// Watch for an app reaching RUNNING, then fire `f` (migration helper).
+fn watch_running_then<F>(sim: &mut Sim<SimWorld>, app: AppId, f: F)
+where
+    F: Fn(&mut Sim<SimWorld>, &mut SimWorld) + Clone + 'static,
+{
+    sim.after(1.0, move |sim, w| {
+        let done = w
+            .db
+            .get(app)
+            .map(|r| {
+                r.lifecycle.state() == AppState::Running
+                    && !w.ext[&app].restart_timings.is_empty()
+                    && w.ext[&app].restart_timings.last().unwrap().running > 0.0
+            })
+            .unwrap_or(true);
+        if done {
+            f(sim, w);
+        } else if w.db.get(app).map(|r| r.lifecycle.state().is_active()).unwrap_or(false) {
+            watch_running_then(sim, app, f.clone());
+        }
+    });
+}
+
+/// Network pump: reap completed flows, dispatch group completions, and
+/// schedule the next wake-up (generation-checked against staleness).
+fn pump_net(sim: &mut Sim<SimWorld>, w: &mut SimWorld) {
+    let now = sim.now();
+    let done = w.net.reap(now);
+    let mut completed_groups: Vec<(AppId, GroupKind, f64)> = vec![];
+    for (flow, _tag) in done {
+        if let Some(gid) = w.flow_group.remove(&flow) {
+            if let Some(group) = w.transfers.get_mut(&gid) {
+                group.flows_left -= 1;
+                if group.flows_left == 0 {
+                    let g = w.transfers.remove(&gid).unwrap();
+                    completed_groups.push((g.app, g.kind, g.started));
+                }
+            }
+        }
+    }
+    for (app, kind, started) in completed_groups {
+        match kind {
+            GroupKind::CkptUpload { seq } => finish_upload(sim, w, app, seq, started),
+            GroupKind::RestoreDownload => finish_download(sim, w, app),
+        }
+    }
+    if let Some((t, _)) = w.net.next_completion() {
+        let gen = w.net.generation;
+        // nudge past float round-off so the wake always lands at-or-after
+        // the true completion instant (otherwise a completion can keep
+        // re-arming at the same virtual time)
+        let at = t.max(now) + 1e-6;
+        sim.at(at, move |sim, w| {
+            if w.net.generation == gen {
+                pump_net(sim, w);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lu_asr(n: usize) -> Asr {
+        Asr::new("lu", WorkloadSpec::Lu { nz: 64, ny: 64, nx: 64 }, n)
+    }
+
+    fn run_app(cacs: &mut SimCacs, cloud: usize, asr: Asr) -> AppId {
+        let app = cacs.submit(cloud, asr).unwrap();
+        cacs.run_until(3600.0);
+        app
+    }
+
+    #[test]
+    fn submission_reaches_running() {
+        let mut cacs = SimCacs::new(1);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(8));
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let (iaas, prov, total) = cacs.submission_phases(app).unwrap();
+        assert!(iaas > 0.0 && prov > 0.0);
+        assert!((iaas + prov - total).abs() < 1e-9);
+        assert_eq!(cacs.world.db.get(app).unwrap().vms.len(), 8);
+    }
+
+    #[test]
+    fn submission_time_grows_with_n() {
+        let mut totals = vec![];
+        for n in [4usize, 32, 96] {
+            let mut cacs = SimCacs::new(2);
+            let cloud = cacs.add_snooze(24);
+            let app = run_app(&mut cacs, cloud, lu_asr(n));
+            totals.push(cacs.submission_phases(app).unwrap().2);
+        }
+        assert!(totals[0] < totals[1] && totals[1] < totals[2], "{totals:?}");
+    }
+
+    #[test]
+    fn checkpoint_records_and_lazy_resume() {
+        let mut cacs = SimCacs::new(3);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(4));
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(7200.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let rec = cacs.world.db.get(app).unwrap();
+        assert_eq!(rec.ckpts.len(), 1);
+        assert!(rec.ckpts[0].total_bytes > 0);
+        let ext = cacs.ext(app).unwrap();
+        let t = &ext.ckpt_timings[0];
+        assert!(t.local_done > t.started);
+        assert!(t.uploaded >= t.local_done);
+    }
+
+    #[test]
+    fn eager_upload_blocks_longer() {
+        let mk = |lazy: bool| {
+            let mut cacs = SimCacs::new(4);
+            cacs.world.params.lazy_upload = lazy;
+            let cloud = cacs.add_snooze(24);
+            let app = run_app(&mut cacs, cloud, lu_asr(4));
+            let t0 = cacs.sim.now();
+            cacs.trigger_checkpoint(app);
+            cacs.run_until(t0 + 3600.0);
+            let rec = cacs.world.db.get(app).unwrap();
+            // time from ckpt start until app is Running again
+            let hist = &rec.lifecycle.history;
+            let start = hist
+                .iter()
+                .rev()
+                .find(|(_, s)| *s == AppState::Checkpointing)
+                .unwrap()
+                .0;
+            let resume = hist
+                .iter()
+                .find(|(t, s)| *s == AppState::Running && *t > start)
+                .unwrap()
+                .0;
+            resume - start
+        };
+        let lazy_block = mk(true);
+        let eager_block = mk(false);
+        assert!(
+            eager_block > lazy_block,
+            "eager {eager_block} should block longer than lazy {lazy_block}"
+        );
+    }
+
+    #[test]
+    fn periodic_checkpoints_accumulate() {
+        let mut cacs = SimCacs::new(5);
+        let cloud = cacs.add_snooze(24);
+        let app = cacs
+            .submit(cloud, lu_asr(2).with_period(60.0))
+            .unwrap();
+        cacs.run_until(400.0);
+        let n = cacs.world.db.get(app).unwrap().ckpts.len();
+        assert!(n >= 3, "expected >= 3 periodic checkpoints, got {n}");
+    }
+
+    #[test]
+    fn restart_after_failure_recovers() {
+        let mut cacs = SimCacs::new(6);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(4));
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        cacs.inject_vm_failure(app);
+        cacs.run_until(cacs.sim.now() + 3600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let ext = cacs.ext(app).unwrap();
+        assert_eq!(ext.restart_timings.len(), 1);
+        let t = &ext.restart_timings[0];
+        assert!(t.downloaded > t.started);
+        assert!(t.running > t.downloaded);
+        // all VMs healthy again
+        let rec = cacs.world.db.get(app).unwrap();
+        assert_eq!(rec.vms.len(), 4);
+    }
+
+    #[test]
+    fn failure_without_checkpoint_is_error() {
+        let mut cacs = SimCacs::new(7);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(2));
+        cacs.inject_vm_failure(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Error));
+    }
+
+    #[test]
+    fn clone_to_other_cloud_runs_both() {
+        let mut cacs = SimCacs::new(8);
+        let snooze = cacs.add_snooze(24);
+        let os = cacs.add_openstack(24);
+        let app = run_app(&mut cacs, snooze, Asr::new("d", WorkloadSpec::Dmtcp1 { n: 256 }, 1));
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 300.0);
+        let clone = cacs.clone_to(app, os).unwrap();
+        cacs.run_until(cacs.sim.now() + 3600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        assert_eq!(cacs.state(clone), Some(AppState::Running));
+        assert_eq!(cacs.ext(clone).unwrap().cloned_from, Some(app));
+        // the clone went through a restore download
+        assert_eq!(cacs.ext(clone).unwrap().restart_timings.len(), 1);
+    }
+
+    #[test]
+    fn migrate_terminates_source() {
+        let mut cacs = SimCacs::new(9);
+        let snooze = cacs.add_snooze(24);
+        let os = cacs.add_openstack(24);
+        let app = run_app(&mut cacs, snooze, Asr::new("d", WorkloadSpec::Dmtcp1 { n: 256 }, 1));
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 300.0);
+        let clone = cacs.migrate_to(app, os).unwrap();
+        cacs.run_until(cacs.sim.now() + 3600.0);
+        assert_eq!(cacs.state(clone), Some(AppState::Running));
+        assert_eq!(cacs.state(app), Some(AppState::Terminated));
+    }
+
+    #[test]
+    fn terminate_releases_capacity() {
+        let mut cacs = SimCacs::new(10);
+        let cloud = cacs.add_snooze(1); // 24 slots
+        let app = run_app(&mut cacs, cloud, lu_asr(24));
+        assert_eq!(cacs.world.clouds[cloud].free_slots(&Default::default()), 0);
+        cacs.terminate(app);
+        cacs.run_until(cacs.sim.now() + 60.0);
+        assert_eq!(cacs.state(app), Some(AppState::Terminated));
+        assert_eq!(cacs.world.clouds[cloud].free_slots(&Default::default()), 24);
+    }
+
+    #[test]
+    fn heartbeats_recorded_while_running() {
+        let mut cacs = SimCacs::new(11);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(8));
+        let t = cacs.sim.now();
+        cacs.run_until(t + 60.0);
+        let hb = &cacs.ext(app).unwrap().heartbeats;
+        assert!(hb.len() >= 10, "expected ~12 heartbeats, got {}", hb.len());
+        assert!(hb.iter().all(|(_, rtt)| *rtt > 0.0 && *rtt < 1.0));
+    }
+
+    #[test]
+    fn gauges_sampled() {
+        let mut cacs = SimCacs::new(12);
+        let cloud = cacs.add_snooze(24);
+        cacs.sample_gauges(0.0, 50.0);
+        for k in 0..5 {
+            cacs.submit_later(k as f64, cloud, Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1));
+        }
+        cacs.run_until(3600.0);
+        let net = cacs.world.rec.series("svc.net_rate");
+        assert!(net.len() >= 45);
+        // early samples (apps creating) show load; late ones are zero
+        assert!(net.iter().take(10).any(|(_, v)| *v > 0.0));
+        assert_eq!(net.last().unwrap().1, 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut cacs = SimCacs::new(seed);
+            let cloud = cacs.add_snooze(24);
+            let app = run_app(&mut cacs, cloud, lu_asr(16));
+            cacs.submission_phases(app).unwrap()
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b);
+        let c = run(43);
+        assert!(a != c);
+    }
+}

@@ -1,0 +1,269 @@
+//! Shared coordinator records: the Application Submission Request (§5.1),
+//! checkpoint metadata, and the per-application record both drivers keep
+//! in the coordinators database.
+
+use crate::coordinator::lifecycle::Lifecycle;
+use crate::simcloud::VmTemplate;
+use crate::util::ids::{AppId, CkptId, VmId};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Which benchmark workload an application runs (DESIGN.md §1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// LU-class solver: global grid + decomposition.
+    Lu { nz: usize, ny: usize, nx: usize },
+    /// Lightweight single-process app with an n-float state.
+    Dmtcp1 { n: usize },
+    /// NS-3-like TCP transfer (bytes to move).
+    Ns3 { total_bytes: u64 },
+}
+
+impl WorkloadSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Lu { .. } => "lu",
+            WorkloadSpec::Dmtcp1 { .. } => "dmtcp1",
+            WorkloadSpec::Ns3 { .. } => "ns3",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorkloadSpec::Lu { nz, ny, nx } => Json::object([
+                ("kind", "lu".into()),
+                ("nz", (*nz).into()),
+                ("ny", (*ny).into()),
+                ("nx", (*nx).into()),
+            ]),
+            WorkloadSpec::Dmtcp1 { n } => {
+                Json::object([("kind", "dmtcp1".into()), ("n", (*n).into())])
+            }
+            WorkloadSpec::Ns3 { total_bytes } => Json::object([
+                ("kind", "ns3".into()),
+                ("total_bytes", (*total_bytes).into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkloadSpec> {
+        match j.get("kind").as_str().context("workload: kind")? {
+            "lu" => Ok(WorkloadSpec::Lu {
+                nz: j.get("nz").as_usize().context("lu: nz")?,
+                ny: j.get("ny").as_usize().context("lu: ny")?,
+                nx: j.get("nx").as_usize().context("lu: nx")?,
+            }),
+            "dmtcp1" => Ok(WorkloadSpec::Dmtcp1 {
+                n: j.get("n").as_usize().unwrap_or(256),
+            }),
+            "ns3" => Ok(WorkloadSpec::Ns3 {
+                total_bytes: j.get("total_bytes").as_u64().unwrap_or(2_000_000_000),
+            }),
+            other => anyhow::bail!("unknown workload kind {other:?}"),
+        }
+    }
+}
+
+/// Application Submission Request (§5.1): VM templates + DMTCP
+/// configuration, including the checkpoint policy (§3.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Asr {
+    pub name: String,
+    pub workload: WorkloadSpec,
+    /// Number of VMs (one process per VM, §7.1).
+    pub n_vms: usize,
+    pub template: VmTemplate,
+    /// Periodic checkpointing interval in seconds (§5.2 mode 2); None =
+    /// only user-initiated checkpoints (mode 1).
+    pub ckpt_period: Option<f64>,
+}
+
+impl Asr {
+    pub fn new(name: &str, workload: WorkloadSpec, n_vms: usize) -> Asr {
+        Asr {
+            name: name.to_string(),
+            workload,
+            n_vms,
+            template: VmTemplate::default(),
+            ckpt_period: None,
+        }
+    }
+
+    pub fn with_period(mut self, secs: f64) -> Asr {
+        self.ckpt_period = Some(secs);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into());
+        o.set("workload", self.workload.to_json());
+        o.set("n_vms", self.n_vms.into());
+        if let Some(p) = self.ckpt_period {
+            o.set("ckpt_period", p.into());
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Asr> {
+        let name = j.get("name").as_str().context("asr: name")?.to_string();
+        let workload = WorkloadSpec::from_json(j.get("workload"))?;
+        let n_vms = j.get("n_vms").as_usize().context("asr: n_vms")?;
+        anyhow::ensure!(n_vms >= 1, "asr: n_vms must be >= 1");
+        let ckpt_period = j.get("ckpt_period").as_f64();
+        Ok(Asr {
+            name,
+            workload,
+            n_vms,
+            template: VmTemplate::default(),
+            ckpt_period,
+        })
+    }
+}
+
+/// Checkpoint metadata (the Checkpoint Manager is stateless over the
+/// store — this is the coordinator-side record of §6.2).
+#[derive(Debug, Clone)]
+pub struct CkptRecord {
+    pub id: CkptId,
+    pub seq: u64,
+    pub taken_at: f64,
+    pub iteration: u64,
+    pub total_bytes: u64,
+    pub per_proc_bytes: Vec<u64>,
+}
+
+impl CkptRecord {
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            ("id", self.id.to_string().into()),
+            ("seq", self.seq.into()),
+            ("taken_at", self.taken_at.into()),
+            ("iteration", self.iteration.into()),
+            ("total_bytes", self.total_bytes.into()),
+            (
+                "per_proc_bytes",
+                Json::Arr(self.per_proc_bytes.iter().map(|&b| b.into()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The coordinators-database record for one application.
+#[derive(Debug, Clone)]
+pub struct AppRecord {
+    pub id: AppId,
+    pub asr: Asr,
+    pub lifecycle: Lifecycle,
+    pub vms: Vec<VmId>,
+    pub ckpts: Vec<CkptRecord>,
+    pub next_ckpt_seq: u64,
+    /// Index of the cloud this app runs on (multi-cloud worlds).
+    pub cloud_idx: usize,
+}
+
+impl AppRecord {
+    pub fn new(id: AppId, asr: Asr, now: f64, cloud_idx: usize) -> AppRecord {
+        AppRecord {
+            id,
+            asr,
+            lifecycle: Lifecycle::new(now),
+            vms: vec![],
+            ckpts: vec![],
+            next_ckpt_seq: 1,
+            cloud_idx,
+        }
+    }
+
+    pub fn latest_ckpt(&self) -> Option<&CkptRecord> {
+        self.ckpts.last()
+    }
+
+    pub fn ckpt_by_id(&self, id: CkptId) -> Option<&CkptRecord> {
+        self.ckpts.iter().find(|c| c.id == id)
+    }
+
+    /// Table 1 representation of the coordinator resource.
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            ("id", self.id.to_string().into()),
+            ("name", self.asr.name.as_str().into()),
+            ("state", self.lifecycle.state().to_string().into()),
+            ("workload", self.asr.workload.to_json()),
+            ("n_vms", self.asr.n_vms.into()),
+            ("checkpoints", self.ckpts.len().into()),
+            ("cloud", self.cloud_idx.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asr_json_roundtrip() {
+        let asr = Asr::new("lu-run", WorkloadSpec::Lu { nz: 32, ny: 32, nx: 32 }, 4)
+            .with_period(60.0);
+        let j = asr.to_json();
+        let back = Asr::from_json(&j).unwrap();
+        assert_eq!(back, asr);
+    }
+
+    #[test]
+    fn asr_validation() {
+        let j = crate::util::json::parse(r#"{"name":"x","workload":{"kind":"lu"},"n_vms":2}"#)
+            .unwrap();
+        assert!(Asr::from_json(&j).is_err()); // lu needs dims
+        let j = crate::util::json::parse(
+            r#"{"name":"x","workload":{"kind":"dmtcp1"},"n_vms":0}"#,
+        )
+        .unwrap();
+        assert!(Asr::from_json(&j).is_err()); // n_vms >= 1
+        let j = crate::util::json::parse(
+            r#"{"name":"x","workload":{"kind":"nope"},"n_vms":1}"#,
+        )
+        .unwrap();
+        assert!(Asr::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn workload_defaults() {
+        let j = crate::util::json::parse(r#"{"kind":"dmtcp1"}"#).unwrap();
+        assert_eq!(WorkloadSpec::from_json(&j).unwrap(), WorkloadSpec::Dmtcp1 { n: 256 });
+        let j = crate::util::json::parse(r#"{"kind":"ns3"}"#).unwrap();
+        assert!(matches!(
+            WorkloadSpec::from_json(&j).unwrap(),
+            WorkloadSpec::Ns3 { total_bytes: 2_000_000_000 }
+        ));
+    }
+
+    #[test]
+    fn app_record_json_shape() {
+        let asr = Asr::new("a", WorkloadSpec::Dmtcp1 { n: 64 }, 1);
+        let rec = AppRecord::new(AppId(3), asr, 0.0, 0);
+        let j = rec.to_json();
+        assert_eq!(j.get("id").as_str(), Some("app-3"));
+        assert_eq!(j.get("state").as_str(), Some("CREATING"));
+        assert_eq!(j.get("checkpoints").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn ckpt_lookup() {
+        let asr = Asr::new("a", WorkloadSpec::Dmtcp1 { n: 64 }, 1);
+        let mut rec = AppRecord::new(AppId(1), asr, 0.0, 0);
+        for seq in 1..=3u64 {
+            rec.ckpts.push(CkptRecord {
+                id: CkptId(seq),
+                seq,
+                taken_at: seq as f64,
+                iteration: seq * 10,
+                total_bytes: 1000,
+                per_proc_bytes: vec![1000],
+            });
+        }
+        assert_eq!(rec.latest_ckpt().unwrap().seq, 3);
+        assert_eq!(rec.ckpt_by_id(CkptId(2)).unwrap().iteration, 20);
+        assert!(rec.ckpt_by_id(CkptId(9)).is_none());
+    }
+}

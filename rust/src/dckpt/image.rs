@@ -1,0 +1,264 @@
+//! Checkpoint image format + CRC-32.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   4 B   "DCKP"
+//! version 2 B
+//! hlen    4 B   header JSON length
+//! header  hlen  JSON: app, proc, seq, kind, iteration, payload_len
+//! payload plen  raw process state
+//! crc     4 B   CRC-32 (IEEE) of the payload
+//! ```
+//!
+//! Real DMTCP images also carry the process's mapped libraries — that is
+//! why the paper's Table 2 sizes behave like `data/n + c` with c ≈ 10 MB
+//! rather than shrinking linearly to zero, and why the NS-3 cloudification
+//! works on VMs with no NS-3 installed (§7.3.1: "the NS-3 libraries were
+//! transported ... as part of the checkpoint images").  Serialization can
+//! include that constant via `with_runtime_overhead`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"DCKP";
+pub const VERSION: u16 = 1;
+
+/// Modelled size of the libraries/runtime a DMTCP image carries
+/// (Table 2 fit: sizes ≈ 645 MB/n + ~10 MB).
+pub const RUNTIME_OVERHEAD_BYTES: usize = 10 * 1024 * 1024;
+
+/// Image metadata header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageHeader {
+    pub app: String,
+    pub proc_index: usize,
+    pub ckpt_seq: u64,
+    pub kind: String,
+    pub iteration: u64,
+    pub payload_len: u64,
+}
+
+impl ImageHeader {
+    fn to_json(&self) -> Json {
+        Json::object([
+            ("app", self.app.as_str().into()),
+            ("proc", self.proc_index.into()),
+            ("seq", self.ckpt_seq.into()),
+            ("kind", self.kind.as_str().into()),
+            ("iteration", self.iteration.into()),
+            ("payload_len", self.payload_len.into()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ImageHeader> {
+        Ok(ImageHeader {
+            app: j.get("app").as_str().context("header: app")?.to_string(),
+            proc_index: j.get("proc").as_usize().context("header: proc")?,
+            ckpt_seq: j.get("seq").as_u64().context("header: seq")?,
+            kind: j.get("kind").as_str().context("header: kind")?.to_string(),
+            iteration: j.get("iteration").as_u64().context("header: iteration")?,
+            payload_len: j.get("payload_len").as_u64().context("header: payload_len")?,
+        })
+    }
+}
+
+/// CRC-32 (IEEE 802.3), slice-by-8 (§Perf iteration 1: the checkpoint
+/// write path is CRC-dominated; slicing processes 8 bytes per step).
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLES: std::sync::OnceLock<[[u32; 256]; 8]> = std::sync::OnceLock::new();
+    let tables = TABLES.get_or_init(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256usize {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            t[0][i] = c;
+        }
+        for i in 0..256usize {
+            let mut c = t[0][i];
+            for k in 1..8 {
+                c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
+                t[k][i] = c;
+            }
+        }
+        t
+    });
+    let mut crc = 0xFFFFFFFFu32;
+    let mut chunks = data.chunks_exact(8);
+    for ch in &mut chunks {
+        let lo = u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]) ^ crc;
+        let hi = u32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]);
+        crc = tables[7][(lo & 0xFF) as usize]
+            ^ tables[6][((lo >> 8) & 0xFF) as usize]
+            ^ tables[5][((lo >> 16) & 0xFF) as usize]
+            ^ tables[4][((lo >> 24) & 0xFF) as usize]
+            ^ tables[3][(hi & 0xFF) as usize]
+            ^ tables[2][((hi >> 8) & 0xFF) as usize]
+            ^ tables[1][((hi >> 16) & 0xFF) as usize]
+            ^ tables[0][((hi >> 24) & 0xFF) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = tables[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFFFFFF
+}
+
+/// Encode an image.
+pub fn encode(header: &ImageHeader, payload: &[u8]) -> Vec<u8> {
+    debug_assert_eq!(header.payload_len as usize, payload.len());
+    let hjson = header.to_json().to_string().into_bytes();
+    let mut out = Vec::with_capacity(4 + 2 + 4 + hjson.len() + payload.len() + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(hjson.len() as u32).to_le_bytes());
+    out.extend_from_slice(&hjson);
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out
+}
+
+/// Encode with `RUNTIME_OVERHEAD_BYTES` of modelled library payload
+/// appended (zeros; callers who care about wire size use this so image
+/// sizes match the paper's `data/n + c` shape).
+pub fn encode_with_runtime_overhead(header: &ImageHeader, payload: &[u8]) -> Vec<u8> {
+    let mut padded = Vec::with_capacity(payload.len() + RUNTIME_OVERHEAD_BYTES);
+    padded.extend_from_slice(payload);
+    padded.resize(payload.len() + RUNTIME_OVERHEAD_BYTES, 0);
+    let hdr = ImageHeader { payload_len: padded.len() as u64, ..header.clone() };
+    encode(&hdr, &padded)
+}
+
+/// Decode and verify an image; returns (header, payload).
+/// The runtime-overhead padding, if present, is the caller's to strip
+/// (its length is `payload_len - original`; workloads know their sizes).
+pub fn decode(data: &[u8]) -> Result<(ImageHeader, Vec<u8>)> {
+    if data.len() < 14 {
+        bail!("image truncated: {} bytes", data.len());
+    }
+    if &data[0..4] != MAGIC {
+        bail!("bad magic");
+    }
+    let version = u16::from_le_bytes([data[4], data[5]]);
+    if version != VERSION {
+        bail!("unsupported image version {version}");
+    }
+    let hlen = u32::from_le_bytes([data[6], data[7], data[8], data[9]]) as usize;
+    let hstart = 10;
+    let hend = hstart + hlen;
+    if data.len() < hend + 4 {
+        bail!("image truncated in header");
+    }
+    let htext = std::str::from_utf8(&data[hstart..hend]).context("header utf-8")?;
+    let header = ImageHeader::from_json(
+        &crate::util::json::parse(htext).map_err(|e| anyhow::anyhow!("header json: {e}"))?,
+    )?;
+    let plen = header.payload_len as usize;
+    let pend = hend + plen;
+    if data.len() != pend + 4 {
+        bail!(
+            "image size mismatch: have {}, expected {}",
+            data.len(),
+            pend + 4
+        );
+    }
+    let payload = data[hend..pend].to_vec();
+    let want = u32::from_le_bytes([data[pend], data[pend + 1], data[pend + 2], data[pend + 3]]);
+    let got = crc32(&payload);
+    if want != got {
+        bail!("payload crc mismatch: stored {want:#x}, computed {got:#x}");
+    }
+    Ok((header, payload))
+}
+
+/// Strip the runtime-overhead padding appended by
+/// [`encode_with_runtime_overhead`].
+pub fn strip_runtime_overhead(payload: &[u8]) -> &[u8] {
+    if payload.len() >= RUNTIME_OVERHEAD_BYTES {
+        &payload[..payload.len() - RUNTIME_OVERHEAD_BYTES]
+    } else {
+        payload
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hdr(plen: u64) -> ImageHeader {
+        ImageHeader {
+            app: "app-1".into(),
+            proc_index: 2,
+            ckpt_seq: 5,
+            kind: "lu".into(),
+            iteration: 100,
+            payload_len: plen,
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0x00000000);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414FA339);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let data = encode(&hdr(10_000), &payload);
+        let (h, p) = decode(&data).unwrap();
+        assert_eq!(h, hdr(10_000));
+        assert_eq!(p, payload);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let payload = vec![7u8; 1000];
+        let mut data = encode(&hdr(1000), &payload);
+        // flip a payload byte
+        let mid = data.len() - 500;
+        data[mid] ^= 0x01;
+        let err = decode(&data).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let payload = vec![1u8; 100];
+        let data = encode(&hdr(100), &payload);
+        assert!(decode(&data[..data.len() - 1]).is_err());
+        assert!(decode(&data[..10]).is_err());
+        assert!(decode(b"").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let payload = vec![1u8; 10];
+        let mut data = encode(&hdr(10), &payload);
+        data[0] = b'X';
+        assert!(decode(&data).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn runtime_overhead_adds_constant() {
+        let payload = vec![9u8; 1000];
+        let data = encode_with_runtime_overhead(&hdr(1000), &payload);
+        let (h, p) = decode(&data).unwrap();
+        assert_eq!(h.payload_len as usize, 1000 + RUNTIME_OVERHEAD_BYTES);
+        assert_eq!(strip_runtime_overhead(&p), &payload[..]);
+        // wire size ≈ payload + overhead + small header
+        assert!(data.len() > RUNTIME_OVERHEAD_BYTES + 1000);
+        assert!(data.len() < RUNTIME_OVERHEAD_BYTES + 1000 + 512);
+    }
+
+    #[test]
+    fn version_check() {
+        let payload = vec![0u8; 4];
+        let mut data = encode(&hdr(4), &payload);
+        data[4] = 99;
+        assert!(decode(&data).unwrap_err().to_string().contains("version"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Sim-mode timing model of the DMTCP checkpoint/restart protocol.
+//!
+//! Fig 3b decomposes a checkpoint into "DMTCP writes the checkpoint image
+//! to local storage; and each VM uploads the image to the remote file
+//! system" (§7.1); Fig 3c's restart is the mirror image, destabilized by
+//! simultaneous downloads.  This module computes the *local* phases
+//! (suspend broadcast, drain, local disk write, restart re-coordination);
+//! the *network* phases (upload/download) are issued as netsim flows by
+//! the sim driver using these byte counts.
+
+use crate::util::rng::Rng;
+
+/// Timing parameters of the process-level checkpointer.
+#[derive(Debug, Clone)]
+pub struct DckptParams {
+    /// One coordinator→daemon control hop (s).
+    pub ctrl_hop: f64,
+    /// Per-process quiesce acknowledgement jitter sigma (lognormal).
+    pub ctrl_sigma: f64,
+    /// In-flight bytes to drain per process pair (B).
+    pub drain_bytes_per_proc: f64,
+    /// Drain channel bandwidth (B/s) — TCP buffers empty fast.
+    pub drain_bw: f64,
+    /// Local disk write bandwidth per VM (B/s); the paper's VMs write to
+    /// the node-local disk first (§5.2 "fast local storage").
+    pub local_disk_bw: f64,
+    /// Restart: per-process re-registration with the new coordinator (s).
+    pub reconnect_time: f64,
+    /// Restart: barrier overhead once all processes reconnected (s).
+    pub restart_barrier: f64,
+}
+
+impl Default for DckptParams {
+    fn default() -> Self {
+        DckptParams {
+            ctrl_hop: 0.002,
+            ctrl_sigma: 0.3,
+            drain_bytes_per_proc: 4e6,
+            drain_bw: 1.0e8,
+            local_disk_bw: 1.5e8, // ~150 MB/s local disk
+            reconnect_time: 0.15,
+            restart_barrier: 0.5,
+        }
+    }
+}
+
+/// Breakdown of the local (pre-upload) checkpoint phases.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointLocal {
+    pub suspend: f64,
+    pub drain: f64,
+    pub local_write: f64,
+}
+
+impl CheckpointLocal {
+    pub fn total(&self) -> f64 {
+        self.suspend + self.drain + self.local_write
+    }
+}
+
+/// Local checkpoint phases for `n` processes with `image_bytes` each.
+///
+/// * suspend — coordinator reaches daemons over a binary control tree:
+///   2·⌈log₂ n⌉ hops plus jitter;
+/// * drain — in-flight data proportional to the number of neighbour
+///   pairs a process has (the LU ring: ≤ 2);
+/// * local write — images stream to node-local disk in parallel, so the
+///   time is one image over the disk, with the slowest-process jitter.
+pub fn checkpoint_local(params: &DckptParams, rng: &mut Rng, n: usize, image_bytes: f64) -> CheckpointLocal {
+    let depth = (n.max(1) as f64).log2().ceil().max(1.0);
+    let suspend = 2.0 * depth * params.ctrl_hop * rng.lognormal(1.0, params.ctrl_sigma);
+    let drain = if n > 1 {
+        params.drain_bytes_per_proc * 2.0 / params.drain_bw
+    } else {
+        0.0
+    };
+    // parallel across VMs; straggler = max of n lognormals ~ modelled via
+    // a single lognormal whose sigma grows slowly with n
+    let straggler = rng.lognormal(1.0, 0.1 + 0.02 * (n as f64).log2().max(0.0));
+    let local_write = image_bytes / params.local_disk_bw * straggler;
+    CheckpointLocal { suspend, drain, local_write }
+}
+
+/// Local restart phases (after images are already on local disk):
+/// read back from disk, re-register with the fresh coordinator, barrier.
+pub fn restart_local(params: &DckptParams, rng: &mut Rng, n: usize, image_bytes: f64) -> f64 {
+    let read = image_bytes / params.local_disk_bw;
+    // processes reconnect one after another to the new coordinator as
+    // their reads finish; the paper observes jitter because "restarted
+    // processes do not join the computation concurrently" (§7.1)
+    let reconnect: f64 = (0..n)
+        .map(|_| params.reconnect_time * rng.lognormal(1.0, 0.4))
+        .fold(0.0f64, f64::max);
+    read + reconnect + params.restart_barrier
+}
+
+/// Table 2 checkpoint-size model for an LU-class application: the
+/// problem state divides across processes while each image carries the
+/// constant runtime overhead (DMTCP + libraries).
+///
+/// `class_bytes` is the single-process state size; the paper's lu.C fit
+/// is ≈ 645 MB data + ≈ 10 MB constant (Table 2: 655/338/174/92/49 MB).
+pub fn image_bytes_per_proc(class_bytes: f64, overhead_bytes: f64, nprocs: usize) -> f64 {
+    class_bytes / nprocs.max(1) as f64 + overhead_bytes
+}
+
+/// The paper's NAS lu.C single-process data size implied by Table 2.
+pub const LU_CLASS_C_BYTES: f64 = 645e6;
+/// The constant per-image overhead implied by Table 2.
+pub const LU_IMAGE_OVERHEAD_BYTES: f64 = 10e6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suspend_grows_logarithmically() {
+        let p = DckptParams::default();
+        let mut rng = Rng::new(1);
+        // average over draws to beat jitter
+        let avg = |n: usize, rng: &mut Rng| -> f64 {
+            (0..200).map(|_| checkpoint_local(&p, rng, n, 1e6).suspend).sum::<f64>() / 200.0
+        };
+        let s2 = avg(2, &mut rng);
+        let s64 = avg(64, &mut rng);
+        let s128 = avg(128, &mut rng);
+        assert!(s64 > s2);
+        // log growth: 128 vs 64 is one more level, not double
+        assert!(s128 < s64 * 1.4, "s64={s64} s128={s128}");
+    }
+
+    #[test]
+    fn local_write_scales_with_bytes() {
+        let p = DckptParams::default();
+        let mut rng = Rng::new(2);
+        let small = checkpoint_local(&p, &mut rng, 4, 50e6).local_write;
+        let big = checkpoint_local(&p, &mut rng, 4, 650e6).local_write;
+        assert!(big > 8.0 * small, "big={big} small={small}");
+    }
+
+    #[test]
+    fn single_proc_has_no_drain() {
+        let p = DckptParams::default();
+        let mut rng = Rng::new(3);
+        assert_eq!(checkpoint_local(&p, &mut rng, 1, 1e6).drain, 0.0);
+        assert!(checkpoint_local(&p, &mut rng, 2, 1e6).drain > 0.0);
+    }
+
+    #[test]
+    fn table2_size_model_matches_paper_shape() {
+        // paper: 655 / 338 / 174 / 92 / 49 MB for 1 / 2 / 4 / 8 / 16 procs
+        let paper = [655e6, 338e6, 174e6, 92e6, 49e6];
+        for (k, want) in paper.iter().enumerate() {
+            let n = 1usize << k;
+            let got = image_bytes_per_proc(LU_CLASS_C_BYTES, LU_IMAGE_OVERHEAD_BYTES, n);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.10, "n={n}: got {got:.0}, paper {want:.0}, rel {rel:.2}");
+        }
+    }
+
+    #[test]
+    fn restart_has_barrier_floor() {
+        let p = DckptParams::default();
+        let mut rng = Rng::new(4);
+        let t = restart_local(&p, &mut rng, 1, 1e3);
+        assert!(t >= p.restart_barrier);
+    }
+
+    #[test]
+    fn restart_jitter_grows_with_n() {
+        let p = DckptParams::default();
+        let mut rng = Rng::new(5);
+        let spread = |n: usize, rng: &mut Rng| {
+            let xs: Vec<f64> = (0..100).map(|_| restart_local(&p, rng, n, 1e6)).collect();
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+            var.sqrt()
+        };
+        // max of more lognormals has larger spread around a larger mean
+        assert!(spread(64, &mut rng) > spread(1, &mut rng));
+    }
+}

@@ -1,0 +1,55 @@
+//! # CACS — Cloud-Agnostic Checkpointing Service
+//!
+//! A full-system reproduction of *"Checkpointing as a Service in
+//! Heterogeneous Cloud Environments"* (Cao, Simonin, Cooperman, Morin,
+//! 2014) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper retrofits checkpoint/restart onto unmodified IaaS clouds by
+//! pairing a REST service (Fig 1: Application / Cloud / Provision /
+//! Checkpoint / Monitoring managers around a coordinators database) with
+//! the DMTCP distributed process-level checkpointer.  This crate rebuilds
+//! that system and **every substrate it depends on** (DESIGN.md §3):
+//!
+//! * [`simcloud`] — two IaaS cloud managers: a Snooze-like hierarchical
+//!   system with a native failure-notification API and an OpenStack-like
+//!   flat system that must be polled.
+//! * [`dckpt`] — the DMTCP analog: per-application coordinator,
+//!   per-VM daemons, two-phase quiesce/drain checkpoint protocol, real
+//!   image bytes with header + CRC.
+//! * [`storage`] — checkpoint stores: local disk (real I/O), NFS-, S3- and
+//!   Ceph-like backends over the network simulator.
+//! * [`netsim`] — max-min fair-share bandwidth sharing on links, the
+//!   source of restart jitter (Fig 3c) and storage traces (Fig 5).
+//! * [`monitor`] — binary broadcast-tree health monitoring with
+//!   user-defined health hooks (§6.3).
+//! * [`provision`] — parallel-SSH provisioner with connection reuse and a
+//!   session cap (§7.1).
+//! * [`runtime`] — PJRT executor loading the AOT-compiled HLO artifacts
+//!   (Pallas red-black SOR kernels lowered by `python/compile/aot.py`).
+//! * [`workloads`] — the paper's benchmark applications: an LU-class
+//!   domain-decomposed solver (NAS-LU stand-in, PJRT-executed), the
+//!   `dmtcp1` lightweight app, and an NS-3-like TCP transfer simulator.
+//! * [`coordinator`] — the CACS service itself: managers, lifecycle state
+//!   machine (Fig 2), coordinators DB, REST API (Table 1).
+//!
+//! Everything runs in one of two modes (DESIGN.md §1): **sim** (discrete-
+//! event virtual time; used by the figure-reproduction benches) and
+//! **real** (threads, sockets, disk, PJRT compute; used by `examples/`).
+
+pub mod util;
+pub mod simexec;
+pub mod netsim;
+pub mod storage;
+pub mod simcloud;
+pub mod provision;
+pub mod dckpt;
+pub mod monitor;
+pub mod metrics;
+pub mod runtime;
+pub mod workloads;
+pub mod coordinator;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

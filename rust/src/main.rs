@@ -1,0 +1,92 @@
+//! `cacs` — launcher for the Cloud-Agnostic Checkpointing Service.
+//!
+//! Subcommands:
+//!   serve   start the real-mode REST service (Table 1 API)
+//!   demo    submit a demo workload against a running service
+//!   version print version info
+//!
+//! Examples:
+//!   cacs serve --addr 127.0.0.1:7070 --store /tmp/cacs-store --artifacts artifacts
+//!   cacs demo  --addr 127.0.0.1:7070
+
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::storage::local::LocalStore;
+use cacs::util::args::Args;
+use cacs::util::http::Client;
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional().first().map(|s| s.as_str()) {
+        Some("serve") => serve(&args),
+        Some("demo") => demo(&args),
+        Some("version") | None => {
+            println!("cacs {} — Cloud-Agnostic Checkpointing Service", cacs::version());
+            println!("usage: cacs serve|demo|version [--addr A] [--store DIR] [--artifacts DIR]");
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}; try `cacs version`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) {
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let store_dir = args.get_or("store", "/tmp/cacs-store");
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let threads = args.usize_or("threads", 8);
+
+    let store = Arc::new(LocalStore::new(store_dir).expect("create store dir"));
+    let artifacts_dir = std::path::Path::new(artifacts);
+    let cfg = ServiceConfig {
+        artifacts_dir: artifacts_dir
+            .join("manifest.json")
+            .exists()
+            .then(|| artifacts_dir.to_path_buf()),
+        monitor_period: Some(Duration::from_millis(500)),
+        ..ServiceConfig::default()
+    };
+    if cfg.artifacts_dir.is_none() {
+        eprintln!("note: no artifacts manifest at {artifacts}/ — workloads run native");
+    }
+    let svc = CacsService::new(store, cfg);
+    svc.start_monitor();
+    let server = rest::serve(svc, addr, threads).expect("bind REST server");
+    println!("cacs: serving Table-1 REST API on http://{}", server.addr());
+    println!("cacs: checkpoint store at {store_dir}");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn demo(args: &Args) {
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let client = Client::new(addr);
+    let asr = Json::object([
+        ("name", "demo-lu".into()),
+        (
+            "workload",
+            Json::object([
+                ("kind", "lu".into()),
+                ("nz", 32u64.into()),
+                ("ny", 32u64.into()),
+                ("nx", 32u64.into()),
+            ]),
+        ),
+        ("n_vms", 4u64.into()),
+    ]);
+    let resp = client.post("/coordinators", &asr).expect("service reachable");
+    let id = resp.json().unwrap().get("id").as_str().unwrap().to_string();
+    println!("submitted {id}");
+    std::thread::sleep(Duration::from_millis(500));
+    let ck = client
+        .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
+        .unwrap();
+    println!("checkpoint: {}", String::from_utf8_lossy(&ck.body));
+    let info = client.get(&format!("/coordinators/{id}")).unwrap();
+    println!("info: {}", String::from_utf8_lossy(&info.body));
+}

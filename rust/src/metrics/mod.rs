@@ -1,0 +1,170 @@
+//! Time-series metrics recorder.
+//!
+//! Every figure in the paper's evaluation is a time series or a per-n
+//! aggregate; the managers and substrates record into a [`Recorder`] and
+//! the bench harnesses export series (Fig 4a network, Fig 4b memory,
+//! Fig 5 storage-link utilization) or scalars (Fig 3/6 phase latencies).
+
+use std::collections::BTreeMap;
+
+/// A single named time series of (t, value) points plus counters.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<(f64, f64)>>,
+    counters: BTreeMap<String, f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Append a point to series `name`.
+    pub fn record(&mut self, name: &str, t: f64, value: f64) {
+        self.series.entry(name.to_string()).or_default().push((t, value));
+    }
+
+    /// Add to a named counter (monotonic totals, e.g. bytes uploaded).
+    pub fn incr(&mut self, name: &str, by: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn series(&self, name: &str) -> &[(f64, f64)] {
+        self.series.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn series_names(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Integrate a series interpreted as a step function of rates over
+    /// [t0, t1] (used to cross-check byte counters against rate traces).
+    pub fn integrate(&self, name: &str, t0: f64, t1: f64) -> f64 {
+        let pts = self.series(name);
+        let mut total = 0.0;
+        for w in pts.windows(2) {
+            let (ta, va) = w[0];
+            let (tb, _) = w[1];
+            let lo = ta.max(t0);
+            let hi = tb.min(t1);
+            if hi > lo {
+                total += va * (hi - lo);
+            }
+        }
+        if let Some(&(tl, vl)) = pts.last() {
+            if t1 > tl {
+                total += vl * (t1 - tl.max(t0));
+            }
+        }
+        total
+    }
+
+    /// Downsample a series onto a uniform grid by last-value-carried-
+    /// forward — what the bench harnesses plot.
+    pub fn resample(&self, name: &str, t0: f64, t1: f64, steps: usize) -> Vec<(f64, f64)> {
+        let pts = self.series(name);
+        let mut out = Vec::with_capacity(steps);
+        let mut idx = 0usize;
+        let mut last = 0.0;
+        for k in 0..steps {
+            let t = t0 + (t1 - t0) * k as f64 / (steps.max(2) - 1) as f64;
+            while idx < pts.len() && pts[idx].0 <= t {
+                last = pts[idx].1;
+                idx += 1;
+            }
+            out.push((t, last));
+        }
+        out
+    }
+
+    /// Export one series as CSV ("t,value" lines with a header).
+    pub fn to_csv(&self, name: &str) -> String {
+        let mut out = String::from("t,value\n");
+        for (t, v) in self.series(name) {
+            out.push_str(&format!("{t},{v}\n"));
+        }
+        out
+    }
+
+    /// Merge another recorder's data (suffixing nothing; callers namespace
+    /// their series names).
+    pub fn absorb(&mut self, other: Recorder) {
+        for (k, mut v) in other.series {
+            self.series.entry(k).or_default().append(&mut v);
+        }
+        for (k, v) in other.counters {
+            *self.counters.entry(k).or_insert(0.0) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_read_series() {
+        let mut r = Recorder::new();
+        r.record("net", 0.0, 1.0);
+        r.record("net", 1.0, 2.0);
+        assert_eq!(r.series("net"), &[(0.0, 1.0), (1.0, 2.0)]);
+        assert_eq!(r.series("missing"), &[]);
+        assert_eq!(r.series_names(), vec!["net"]);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut r = Recorder::new();
+        r.incr("bytes", 100.0);
+        r.incr("bytes", 50.0);
+        assert_eq!(r.counter("bytes"), 150.0);
+        assert_eq!(r.counter("missing"), 0.0);
+    }
+
+    #[test]
+    fn integrate_step_function() {
+        let mut r = Recorder::new();
+        // rate 2.0 on [0,5), rate 4.0 on [5,10)
+        r.record("rate", 0.0, 2.0);
+        r.record("rate", 5.0, 4.0);
+        let total = r.integrate("rate", 0.0, 10.0);
+        assert!((total - (2.0 * 5.0 + 4.0 * 5.0)).abs() < 1e-9);
+        // partial window
+        let part = r.integrate("rate", 2.0, 6.0);
+        assert!((part - (2.0 * 3.0 + 4.0 * 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resample_lvcf() {
+        let mut r = Recorder::new();
+        r.record("g", 1.0, 10.0);
+        r.record("g", 3.0, 30.0);
+        let s = r.resample("g", 0.0, 4.0, 5);
+        assert_eq!(s, vec![(0.0, 0.0), (1.0, 10.0), (2.0, 10.0), (3.0, 30.0), (4.0, 30.0)]);
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut r = Recorder::new();
+        r.record("x", 0.5, 1.25);
+        let csv = r.to_csv("x");
+        assert_eq!(csv, "t,value\n0.5,1.25\n");
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = Recorder::new();
+        a.record("s", 0.0, 1.0);
+        a.incr("c", 1.0);
+        let mut b = Recorder::new();
+        b.record("s", 1.0, 2.0);
+        b.incr("c", 2.0);
+        a.absorb(b);
+        assert_eq!(a.series("s").len(), 2);
+        assert_eq!(a.counter("c"), 3.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Health monitoring (§6.3): binary broadcast tree + user health hooks.
+//!
+//! CACS must detect three failure levels — server, VM and *application*
+//! ("health" is application-specific: a process can be alive but stuck).
+//! The paper's mechanism is a binary broadcast tree of in-VM daemons;
+//! each daemon calls a user-supplied hook, and the root reports the list
+//! of unhealthy or unreachable nodes to the Monitoring Manager, whose
+//! heartbeat round-trip is logarithmic in the node count (Fig 4c).
+//!
+//! * [`tree`] — the tree topology and the pure aggregation semantics
+//!   (which nodes get reported when daemons are unreachable).
+//! * [`sim`] — the latency model for Fig 4c and for detection delays in
+//!   the figure benches.
+//! * [`real`] — a thread-per-daemon implementation passing heartbeat
+//!   messages over channels, used by the real-mode examples.
+
+pub mod real;
+pub mod sim;
+pub mod tree;
+
+/// Result of one heartbeat round-trip over an application's tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Nodes whose hook returned "unhealthy".
+    pub unhealthy: Vec<usize>,
+    /// Nodes that could not be reached at all (VM failure).
+    pub unreachable: Vec<usize>,
+}
+
+impl HealthReport {
+    pub fn all_healthy(&self) -> bool {
+        self.unhealthy.is_empty() && self.unreachable.is_empty()
+    }
+
+    /// §6.3 decision: VM failure (unreachable) needs new VMs + restore
+    /// from checkpoint; application failure (unhealthy but reachable)
+    /// can restart processes in place.
+    pub fn needs_new_vms(&self) -> bool {
+        !self.unreachable.is_empty()
+    }
+
+    pub fn needs_recovery(&self) -> bool {
+        !self.all_healthy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_classification() {
+        let healthy = HealthReport { unhealthy: vec![], unreachable: vec![] };
+        assert!(healthy.all_healthy());
+        assert!(!healthy.needs_recovery());
+
+        let app_fail = HealthReport { unhealthy: vec![3], unreachable: vec![] };
+        assert!(app_fail.needs_recovery());
+        assert!(!app_fail.needs_new_vms());
+
+        let vm_fail = HealthReport { unhealthy: vec![], unreachable: vec![1] };
+        assert!(vm_fail.needs_new_vms());
+    }
+}

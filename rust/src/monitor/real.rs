@@ -1,0 +1,238 @@
+//! Real-mode health monitoring: one daemon thread per node, heartbeats
+//! over channels, user health hooks — the in-VM daemons of §6.3 (needed
+//! on clouds without failure notification, i.e. OpenStack, and used by
+//! the real-mode examples to detect injected failures).
+//!
+//! Probe semantics match [`super::tree`]: a daemon answering a probe
+//! reports itself plus its subtree; when a child does not answer within
+//! the timeout the prober marks it unreachable and probes the orphaned
+//! grandchildren itself, so failures never mask descendants.
+
+use super::tree::BroadcastTree;
+use super::HealthReport;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The user-supplied health hook: `hook(node) -> healthy?` (§6.3 "a
+/// user-defined application-specific routine can define and test the
+/// application's health").
+pub type HealthHook = Arc<dyn Fn(usize) -> bool + Send + Sync>;
+
+enum Msg {
+    Probe { reply: Sender<Vec<Entry>> },
+    Shutdown,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Entry {
+    Ok(usize),
+    Unhealthy(usize),
+    Unreachable(usize),
+}
+
+struct AddressBook {
+    senders: Vec<Sender<Msg>>,
+    alive: Vec<Arc<AtomicBool>>,
+    tree: BroadcastTree,
+    timeout: Duration,
+    hook: HealthHook,
+}
+
+fn probe_subtree(book: &Arc<AddressBook>, node: usize) -> Vec<Entry> {
+    let (tx, rx) = channel();
+    let sent = book.senders[node].send(Msg::Probe { reply: tx }).is_ok();
+    if sent {
+        if let Ok(entries) = rx.recv_timeout(book.timeout) {
+            return entries;
+        }
+    }
+    // child unreachable: report it and adopt its children
+    let mut out = vec![Entry::Unreachable(node)];
+    for c in book.tree.children(node) {
+        out.extend(probe_subtree(book, c));
+    }
+    out
+}
+
+fn daemon_loop(book: Arc<AddressBook>, me: usize, inbox: Receiver<Msg>) {
+    while let Ok(msg) = inbox.recv() {
+        match msg {
+            Msg::Shutdown => return,
+            Msg::Probe { reply } => {
+                if !book.alive[me].load(Ordering::SeqCst) {
+                    // dead daemon: swallow the probe; prober times out
+                    continue;
+                }
+                let mut entries = vec![if (book.hook)(me) {
+                    Entry::Ok(me)
+                } else {
+                    Entry::Unhealthy(me)
+                }];
+                for c in book.tree.children(me) {
+                    entries.extend(probe_subtree(&book, c));
+                }
+                let _ = reply.send(entries);
+            }
+        }
+    }
+}
+
+/// A running monitoring tree for one application.
+pub struct RealMonitor {
+    book: Arc<AddressBook>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RealMonitor {
+    /// Spawn `n` daemon threads with `hook` as the health check and
+    /// `timeout` as the per-hop unreachability bound.
+    pub fn start(n: usize, hook: HealthHook, timeout: Duration) -> RealMonitor {
+        assert!(n >= 1);
+        let tree = BroadcastTree::binary(n);
+        let mut senders = Vec::with_capacity(n);
+        let mut inboxes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(rx);
+        }
+        let alive: Vec<Arc<AtomicBool>> =
+            (0..n).map(|_| Arc::new(AtomicBool::new(true))).collect();
+        let book = Arc::new(AddressBook { senders, alive, tree, timeout, hook });
+        let handles = inboxes
+            .into_iter()
+            .enumerate()
+            .map(|(i, inbox)| {
+                let book = book.clone();
+                std::thread::Builder::new()
+                    .name(format!("cacs-mon-{i}"))
+                    .spawn(move || daemon_loop(book, i, inbox))
+                    .expect("spawn monitor daemon")
+            })
+            .collect();
+        RealMonitor { book, handles }
+    }
+
+    /// One heartbeat round-trip; the Monitoring Manager plays super-root.
+    pub fn heartbeat(&self) -> HealthReport {
+        let entries = probe_subtree(&self.book, 0);
+        let mut report = HealthReport { unhealthy: vec![], unreachable: vec![] };
+        for e in entries {
+            match e {
+                Entry::Ok(_) => {}
+                Entry::Unhealthy(i) => report.unhealthy.push(i),
+                Entry::Unreachable(i) => report.unreachable.push(i),
+            }
+        }
+        report.unhealthy.sort();
+        report.unreachable.sort();
+        report
+    }
+
+    /// Kill daemon `i` (it stops answering probes) — VM-failure injection.
+    pub fn kill_daemon(&self, i: usize) {
+        self.book.alive[i].store(false, Ordering::SeqCst);
+    }
+
+    /// Revive daemon `i` (recovery placed a fresh VM).
+    pub fn revive_daemon(&self, i: usize) {
+        self.book.alive[i].store(true, Ordering::SeqCst);
+    }
+
+    pub fn n(&self) -> usize {
+        self.book.tree.n
+    }
+}
+
+impl Drop for RealMonitor {
+    fn drop(&mut self) {
+        for s in &self.book.senders {
+            let _ = s.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_healthy_hook() -> HealthHook {
+        Arc::new(|_| true)
+    }
+
+    #[test]
+    fn all_healthy_roundtrip() {
+        let mon = RealMonitor::start(7, all_healthy_hook(), Duration::from_millis(200));
+        let report = mon.heartbeat();
+        assert!(report.all_healthy());
+    }
+
+    #[test]
+    fn detects_unhealthy_hook() {
+        let hook: HealthHook = Arc::new(|i| i != 3 && i != 5);
+        let mon = RealMonitor::start(8, hook, Duration::from_millis(200));
+        let report = mon.heartbeat();
+        assert_eq!(report.unhealthy, vec![3, 5]);
+        assert!(report.unreachable.is_empty());
+    }
+
+    #[test]
+    fn detects_dead_leaf() {
+        let mon = RealMonitor::start(8, all_healthy_hook(), Duration::from_millis(100));
+        mon.kill_daemon(6);
+        let report = mon.heartbeat();
+        assert_eq!(report.unreachable, vec![6]);
+    }
+
+    #[test]
+    fn dead_interior_does_not_mask_children() {
+        let mon = RealMonitor::start(7, all_healthy_hook(), Duration::from_millis(100));
+        // node 1 has children 3 and 4
+        mon.kill_daemon(1);
+        let report = mon.heartbeat();
+        assert_eq!(report.unreachable, vec![1]);
+        assert!(report.unhealthy.is_empty()); // 3 and 4 answered via adoption
+    }
+
+    #[test]
+    fn dead_root_handled_by_super_root() {
+        let mon = RealMonitor::start(5, all_healthy_hook(), Duration::from_millis(100));
+        mon.kill_daemon(0);
+        let report = mon.heartbeat();
+        assert_eq!(report.unreachable, vec![0]);
+    }
+
+    #[test]
+    fn revive_clears_report() {
+        let mon = RealMonitor::start(4, all_healthy_hook(), Duration::from_millis(100));
+        mon.kill_daemon(2);
+        assert_eq!(mon.heartbeat().unreachable, vec![2]);
+        mon.revive_daemon(2);
+        assert!(mon.heartbeat().all_healthy());
+    }
+
+    #[test]
+    fn single_node_tree() {
+        let mon = RealMonitor::start(1, all_healthy_hook(), Duration::from_millis(100));
+        assert!(mon.heartbeat().all_healthy());
+        mon.kill_daemon(0);
+        assert_eq!(mon.heartbeat().unreachable, vec![0]);
+    }
+
+    #[test]
+    fn hook_sees_live_state() {
+        use std::sync::atomic::AtomicUsize;
+        let sick = Arc::new(AtomicUsize::new(usize::MAX));
+        let s2 = sick.clone();
+        let hook: HealthHook = Arc::new(move |i| i != s2.load(Ordering::SeqCst));
+        let mon = RealMonitor::start(6, hook, Duration::from_millis(200));
+        assert!(mon.heartbeat().all_healthy());
+        sick.store(4, Ordering::SeqCst);
+        assert_eq!(mon.heartbeat().unhealthy, vec![4]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Sim-mode heartbeat latency model (Fig 4c).
+//!
+//! A round-trip = descend + ascend the binary tree (2·height hops) with
+//! per-hop network latency, plus each daemon's health-hook execution
+//! (hooks at the same depth run in parallel, so the hook cost counts
+//! once per level on the critical path).
+
+use super::tree::BroadcastTree;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct MonitorParams {
+    /// One daemon→daemon hop (s) — VM-to-VM RTT/2 on the data network.
+    pub hop_latency: f64,
+    /// Lognormal sigma on each hop.
+    pub hop_sigma: f64,
+    /// User health-hook execution time (s).
+    pub hook_time: f64,
+    /// Heartbeat period (s) — how often the Monitoring Manager probes.
+    pub period: f64,
+    /// Missed-heartbeat timeout before a node counts unreachable (s).
+    pub timeout: f64,
+}
+
+impl Default for MonitorParams {
+    fn default() -> Self {
+        MonitorParams {
+            hop_latency: 0.0008, // ~0.8 ms VM-to-VM on the same fabric
+            hop_sigma: 0.2,
+            hook_time: 0.002,
+            period: 5.0,
+            timeout: 2.0,
+        }
+    }
+}
+
+/// One heartbeat round-trip time for an `n`-node application.
+pub fn heartbeat_rtt(params: &MonitorParams, rng: &mut Rng, n: usize) -> f64 {
+    let tree = BroadcastTree::binary(n);
+    let levels = tree.height();
+    let mut t = 0.0;
+    // descent: one hop per level (parallel across the level)
+    for _ in 0..levels {
+        t += params.hop_latency * rng.lognormal(1.0, params.hop_sigma);
+    }
+    // hooks run in parallel within a level; critical path pays the
+    // slowest level's hook once per level plus the root's own hook
+    for _ in 0..=levels {
+        t += params.hook_time * rng.lognormal(1.0, params.hop_sigma);
+    }
+    // ascent
+    for _ in 0..levels {
+        t += params.hop_latency * rng.lognormal(1.0, params.hop_sigma);
+    }
+    t
+}
+
+/// Detection latency for a failure occurring at a uniformly random phase
+/// of the heartbeat period: expected period/2 + timeout + one round-trip.
+pub fn detection_latency(params: &MonitorParams, rng: &mut Rng, n: usize) -> f64 {
+    let phase = rng.f64() * params.period;
+    phase + params.timeout + heartbeat_rtt(params, rng, n)
+}
+
+/// Flat (no tree) polling alternative for the ablation bench: the root
+/// probes all n nodes itself over `max_parallel` sessions.
+pub fn flat_poll_rtt(params: &MonitorParams, rng: &mut Rng, n: usize, max_parallel: usize) -> f64 {
+    let rounds = n.div_ceil(max_parallel.max(1));
+    let mut t = 0.0;
+    for _ in 0..rounds {
+        t += (2.0 * params.hop_latency + params.hook_time) * rng.lognormal(1.0, params.hop_sigma);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn avg<F: FnMut() -> f64>(mut f: F, k: usize) -> f64 {
+        (0..k).map(|_| f()).sum::<f64>() / k as f64
+    }
+
+    #[test]
+    fn rtt_logarithmic_in_n() {
+        let p = MonitorParams::default();
+        let mut rng = Rng::new(1);
+        let r8 = avg(|| heartbeat_rtt(&p, &mut rng, 8), 300);
+        let mut rng = Rng::new(1);
+        let r64 = avg(|| heartbeat_rtt(&p, &mut rng, 64), 300);
+        let mut rng = Rng::new(1);
+        let r128 = avg(|| heartbeat_rtt(&p, &mut rng, 128), 300);
+        assert!(r64 > r8);
+        // doubling n adds ~one level, far from doubling the rtt
+        assert!(r128 < 1.35 * r64, "r64={r64} r128={r128}");
+        // fitted against log2(n): near-linear relationship
+        let pts: Vec<(f64, f64)> = [(8usize, r8), (64, r64), (128, r128)]
+            .iter()
+            .map(|&(n, r)| ((n as f64).log2(), r))
+            .collect();
+        let (_a, b, r2) = crate::util::benchkit::linear_fit(&pts);
+        assert!(b > 0.0);
+        assert!(r2 > 0.98, "r2={r2}");
+    }
+
+    #[test]
+    fn single_node_rtt_is_hook_only() {
+        let p = MonitorParams::default();
+        let mut rng = Rng::new(2);
+        let r = heartbeat_rtt(&p, &mut rng, 1);
+        assert!(r < 5.0 * p.hook_time, "r={r}");
+    }
+
+    #[test]
+    fn detection_latency_bounded_by_period() {
+        let p = MonitorParams::default();
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let d = detection_latency(&p, &mut rng, 16);
+            assert!(d >= p.timeout);
+            assert!(d <= p.period + p.timeout + 1.0);
+        }
+    }
+
+    #[test]
+    fn tree_beats_flat_polling_at_scale() {
+        // ablation: with limited parallel sessions, flat polling grows
+        // linearly while the tree stays logarithmic
+        let p = MonitorParams::default();
+        let mut rng = Rng::new(4);
+        let tree = avg(|| heartbeat_rtt(&p, &mut rng, 128), 200);
+        let mut rng = Rng::new(4);
+        let flat = avg(|| flat_poll_rtt(&p, &mut rng, 128, 16), 200);
+        assert!(tree < flat, "tree={tree} flat={flat}");
+    }
+}

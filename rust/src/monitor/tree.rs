@@ -1,0 +1,228 @@
+//! Binary broadcast tree topology and aggregation semantics.
+//!
+//! Node 0 is the root (co-located with the application's DMTCP
+//! coordinator VM); node `i`'s children are `2i+1` and `2i+2` — a
+//! complete binary tree over the application's `n` VMs.  A heartbeat
+//! descends the tree and ascends with the aggregated report; a daemon
+//! that is unreachable cannot forward, but its subtree is *probed* by the
+//! parent on timeout (the paper's tree reports "a list of nodes that are
+//! unhealthy or unreachable", so unreachable interiors must not mask
+//! their descendants).
+
+use super::HealthReport;
+
+/// The tree over `n` nodes (arity fixed at 2 per the paper; generalized
+/// arity kept for the ablation bench).
+#[derive(Debug, Clone)]
+pub struct BroadcastTree {
+    pub n: usize,
+    pub arity: usize,
+}
+
+impl BroadcastTree {
+    pub fn binary(n: usize) -> BroadcastTree {
+        BroadcastTree { n, arity: 2 }
+    }
+
+    pub fn with_arity(n: usize, arity: usize) -> BroadcastTree {
+        assert!(arity >= 1);
+        BroadcastTree { n, arity }
+    }
+
+    pub fn parent(&self, i: usize) -> Option<usize> {
+        if i == 0 || i >= self.n {
+            None
+        } else {
+            Some((i - 1) / self.arity)
+        }
+    }
+
+    pub fn children(&self, i: usize) -> Vec<usize> {
+        (1..=self.arity)
+            .map(|k| self.arity * i + k)
+            .filter(|&c| c < self.n)
+            .collect()
+    }
+
+    /// Depth of node `i` (root = 0).
+    pub fn depth_of(&self, i: usize) -> usize {
+        let mut d = 0;
+        let mut node = i;
+        while let Some(p) = self.parent(node) {
+            node = p;
+            d += 1;
+        }
+        d
+    }
+
+    /// Tree height = max depth — the Fig 4c round-trip scale factor.
+    pub fn height(&self) -> usize {
+        if self.n <= 1 {
+            0
+        } else {
+            self.depth_of(self.n - 1)
+        }
+    }
+
+    /// Aggregate a heartbeat round given per-node reachability and the
+    /// per-node health-hook results.  Pure semantics used by both the sim
+    /// and real implementations (and the property tests).
+    pub fn aggregate(&self, reachable: &[bool], healthy: &[bool]) -> HealthReport {
+        assert_eq!(reachable.len(), self.n);
+        assert_eq!(healthy.len(), self.n);
+        let mut report = HealthReport { unhealthy: vec![], unreachable: vec![] };
+        for i in 0..self.n {
+            if !reachable[i] {
+                report.unreachable.push(i);
+            } else if !healthy[i] {
+                report.unhealthy.push(i);
+            }
+        }
+        report
+    }
+
+    /// Hops a heartbeat traverses: down to every leaf and back, counted
+    /// as the longest root-leaf path (descent and ascent overlap across
+    /// branches) — 2 × height.
+    pub fn roundtrip_hops(&self) -> usize {
+        2 * self.height()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, Gen};
+
+    #[test]
+    fn parent_child_structure() {
+        let t = BroadcastTree::binary(7);
+        assert_eq!(t.children(0), vec![1, 2]);
+        assert_eq!(t.children(1), vec![3, 4]);
+        assert_eq!(t.children(2), vec![5, 6]);
+        assert_eq!(t.children(3), Vec::<usize>::new());
+        assert_eq!(t.parent(0), None);
+        assert_eq!(t.parent(5), Some(2));
+        assert_eq!(t.parent(6), Some(2));
+    }
+
+    #[test]
+    fn height_is_logarithmic() {
+        assert_eq!(BroadcastTree::binary(1).height(), 0);
+        assert_eq!(BroadcastTree::binary(2).height(), 1);
+        assert_eq!(BroadcastTree::binary(4).height(), 2);
+        assert_eq!(BroadcastTree::binary(8).height(), 3);
+        assert_eq!(BroadcastTree::binary(128).height(), 7);
+        assert_eq!(BroadcastTree::binary(128).roundtrip_hops(), 14);
+    }
+
+    #[test]
+    fn arity_reduces_height() {
+        let bin = BroadcastTree::binary(64);
+        let quad = BroadcastTree::with_arity(64, 4);
+        assert!(quad.height() < bin.height());
+        // flat "tree" (arity n) has height 1
+        let flat = BroadcastTree::with_arity(64, 63);
+        assert_eq!(flat.height(), 1);
+    }
+
+    #[test]
+    fn aggregate_classifies() {
+        let t = BroadcastTree::binary(5);
+        let report = t.aggregate(
+            &[true, false, true, true, true],
+            &[true, true, false, true, true],
+        );
+        assert_eq!(report.unreachable, vec![1]);
+        assert_eq!(report.unhealthy, vec![2]);
+    }
+
+    #[test]
+    fn unreachable_interior_does_not_mask_descendants() {
+        let t = BroadcastTree::binary(7);
+        // node 1 (interior) unreachable; its children 3,4 healthy &
+        // reachable must NOT be reported
+        let report = t.aggregate(
+            &[true, false, true, true, true, true, true],
+            &[true; 7],
+        );
+        assert_eq!(report.unreachable, vec![1]);
+        assert!(report.unhealthy.is_empty());
+    }
+
+    #[test]
+    fn property_every_node_has_consistent_parent_child() {
+        forall(
+            "tree-parent-child-inverse",
+            200,
+            Gen::pair(Gen::usize(1, 200), Gen::usize(2, 5)),
+            |&(n, arity)| {
+                let t = BroadcastTree::with_arity(n, arity);
+                (0..n).all(|i| {
+                    t.children(i).iter().all(|&c| t.parent(c) == Some(i))
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn property_all_nodes_reachable_from_root() {
+        forall(
+            "tree-spans-all-nodes",
+            100,
+            Gen::pair(Gen::usize(1, 300), Gen::usize(2, 4)),
+            |&(n, arity)| {
+                let t = BroadcastTree::with_arity(n, arity);
+                let mut seen = vec![false; n];
+                let mut stack = vec![0usize];
+                while let Some(i) = stack.pop() {
+                    if seen[i] {
+                        return false; // cycle!
+                    }
+                    seen[i] = true;
+                    stack.extend(t.children(i));
+                }
+                seen.into_iter().all(|s| s)
+            },
+        );
+    }
+
+    #[test]
+    fn property_height_close_to_log() {
+        forall("tree-height-log2", 100, Gen::usize(2, 4096), |&n| {
+            let t = BroadcastTree::binary(n);
+            let h = t.height() as f64;
+            let lg = (n as f64).log2();
+            h >= lg - 1.0 && h <= lg + 1.0
+        });
+    }
+
+    #[test]
+    fn property_aggregate_partition() {
+        // every node appears in exactly one of {ok, unhealthy, unreachable}
+        forall(
+            "aggregate-partitions-nodes",
+            100,
+            Gen::pair(Gen::usize(1, 64), Gen::usize(0, 1_000_000_000)),
+            |&(n, seed)| {
+                let mut rng = crate::util::rng::Rng::new(seed as u64);
+                let reach: Vec<bool> = (0..n).map(|_| rng.chance(0.8)).collect();
+                let health: Vec<bool> = (0..n).map(|_| rng.chance(0.8)).collect();
+                let t = BroadcastTree::binary(n);
+                let r = t.aggregate(&reach, &health);
+                let mut count = 0;
+                for i in 0..n {
+                    let in_unreach = r.unreachable.contains(&i);
+                    let in_unhealthy = r.unhealthy.contains(&i);
+                    if in_unreach && in_unhealthy {
+                        return false;
+                    }
+                    if in_unreach || in_unhealthy {
+                        count += 1;
+                    }
+                }
+                count == r.unreachable.len() + r.unhealthy.len()
+            },
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Artifacts manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` lists every AOT-lowered HLO module with its
+//! I/O signature; the Rust runtime discovers executables through this
+//! file (never by globbing), so a stale or partial artifacts directory
+//! fails loudly at startup.
+
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Shape + dtype of one input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("io spec: shape")?
+            .iter()
+            .map(|d| d.as_usize().context("io spec: dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.get("dtype").as_str().context("io spec: dtype")?.to_string();
+        Ok(IoSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Slab shape for lu_* kinds, empty otherwise.
+    pub shape: Vec<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// lu_fused: baked iteration count.
+    pub n_iters: Option<usize>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub omega: f64,
+    pub h2: f64,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let version = j.get("version").as_u64().context("manifest: version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let omega = j.get("omega").as_f64().context("manifest: omega")?;
+        let h2 = j.get("h2").as_f64().context("manifest: h2")?;
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .context("manifest: artifacts")?
+            .iter()
+            .map(|a| {
+                let name = a.get("name").as_str().context("artifact: name")?.to_string();
+                let file = a.get("file").as_str().context("artifact: file")?.to_string();
+                let kind = a.get("kind").as_str().context("artifact: kind")?.to_string();
+                let shape = match a.get("shape").as_arr() {
+                    Some(dims) => dims
+                        .iter()
+                        .map(|d| d.as_usize().context("artifact: shape dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    None => vec![],
+                };
+                let inputs = a
+                    .get("inputs")
+                    .as_arr()
+                    .context("artifact: inputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = a
+                    .get("outputs")
+                    .as_arr()
+                    .context("artifact: outputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let n_iters = a.get("n_iters").as_usize();
+                Ok(ArtifactSpec { name, file, kind, shape, inputs, outputs, n_iters })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { omega, h2, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find by kind and slab shape (the lu_* lookup used by the LU
+    /// workload to pick the right specialization).
+    pub fn find_kind_shape(&self, kind: &str, shape: &[usize]) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.shape == shape)
+    }
+
+    /// All artifacts of a kind.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "omega": 1.2, "h2": 1.0,
+      "artifacts": [
+        {"name": "lu_sweep_4x8x8", "file": "lu_sweep_4x8x8.hlo.txt",
+         "kind": "lu_sweep", "shape": [4, 8, 8], "omega": 1.2, "h2": 1.0,
+         "inputs": [
+            {"shape": [4,8,8], "dtype": "f32"},
+            {"shape": [8,8], "dtype": "f32"},
+            {"shape": [8,8], "dtype": "f32"},
+            {"shape": [4,8,8], "dtype": "f32"},
+            {"shape": [], "dtype": "i32"}],
+         "outputs": [{"shape": [4,8,8], "dtype": "f32"}]},
+        {"name": "dmtcp1_256", "file": "dmtcp1_256.hlo.txt", "kind": "dmtcp1",
+         "n": 256,
+         "inputs": [{"shape": [256], "dtype": "f32"}, {"shape": [], "dtype": "i32"}],
+         "outputs": [{"shape": [256], "dtype": "f32"}, {"shape": [], "dtype": "i32"}]},
+        {"name": "lu_fused_4x8x8_i2", "file": "f.hlo.txt", "kind": "lu_fused",
+         "shape": [4,8,8], "n_iters": 2,
+         "inputs": [{"shape": [4,8,8], "dtype": "f32"}, {"shape": [4,8,8], "dtype": "f32"}],
+         "outputs": [{"shape": [4,8,8], "dtype": "f32"}, {"shape": [], "dtype": "f32"}]}
+      ]}"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.omega, 1.2);
+        let sweep = m.find("lu_sweep_4x8x8").unwrap();
+        assert_eq!(sweep.inputs.len(), 5);
+        assert_eq!(sweep.inputs[0].elems(), 256);
+        assert_eq!(sweep.inputs[4].dtype, "i32");
+        assert_eq!(sweep.outputs[0].dims_i64(), vec![4, 8, 8]);
+    }
+
+    #[test]
+    fn find_kind_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find_kind_shape("lu_sweep", &[4, 8, 8]).is_some());
+        assert!(m.find_kind_shape("lu_sweep", &[8, 8, 8]).is_none());
+        let fused = m.find_kind_shape("lu_fused", &[4, 8, 8]).unwrap();
+        assert_eq!(fused.n_iters, Some(2));
+        assert_eq!(m.of_kind("dmtcp1").len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "omega": 1, "h2": 1, "artifacts": []}"#).is_err());
+    }
+
+    #[test]
+    fn loads_generated_manifest_if_present() {
+        // integration sanity against the real artifacts/ when built
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(m.find_kind_shape("lu_sweep", &[4, 8, 8]).is_some());
+        }
+    }
+}

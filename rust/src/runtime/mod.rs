@@ -1,0 +1,153 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the only place the Rust side touches XLA.  `make artifacts`
+//! runs `python/compile/aot.py` once, lowering the L2 JAX graphs (which
+//! call the L1 Pallas kernels) to **HLO text**; at startup the Rust
+//! coordinator loads them here via `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile`, and the request path
+//! executes compiled artifacts without any Python.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled executable plus its manifest entry.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: artifacts::ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with the given argument literals; returns the flattened
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {}", self.spec.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.spec.name))?;
+        lit.to_tuple()
+            .with_context(|| format!("untuple result of {}", self.spec.name))
+    }
+}
+
+/// The PJRT engine: one CPU client + a cache of compiled artifacts.
+///
+/// Not `Send`: the engine lives on the application thread (workloads are
+/// stepped in lockstep by one thread; DESIGN.md §1).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: artifacts::Manifest,
+    cache: HashMap<String, Rc<Executable>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory (reads
+    /// `manifest.json`; artifacts compile lazily on first use).
+    pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = artifacts::Manifest::load(&dir)
+            .with_context(|| format!("load manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once, then cached) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", spec.name))?;
+        let e = Rc::new(Executable { exe, spec });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Number of compiled-and-cached executables.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given dimensions from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "lit_f32: {} elems for dims {dims:?}", data.len());
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .context("reshape literal")
+}
+
+/// Scalar i32 literal.
+pub fn lit_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Flatten a literal to Vec<f32>.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// Extract a scalar f32.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("literal scalar f32")
+}
+
+/// Extract a scalar i32.
+pub fn scalar_i32(lit: &xla::Literal) -> Result<i32> {
+    lit.get_first_element::<i32>().context("literal scalar i32")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_shape_checked() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let l = lit_i32(7);
+        assert_eq!(scalar_i32(&l).unwrap(), 7);
+        let f = lit_f32(&[2.5], &[]).unwrap();
+        assert_eq!(scalar_f32(&f).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,252 @@
+//! Physical cluster model shared by both simulated clouds: servers with
+//! core/memory capacity, a host NIC in the shared netsim, an image cache,
+//! and first-fit VM placement.
+
+use super::{VmRecord, VmState, VmTemplate};
+use crate::netsim::{LinkId, NetSim};
+use crate::util::ids::{IdGen, ServerId, VmId};
+use std::collections::BTreeMap;
+
+/// One physical server.
+#[derive(Debug, Clone)]
+pub struct Server {
+    pub id: ServerId,
+    pub cores: u32,
+    pub mem_mb: u64,
+    pub used_cores: u32,
+    pub used_mem_mb: u64,
+    pub nic: LinkId,
+    /// Base images already present on local disk (bytes key — templates
+    /// with the same image size share a cache entry).
+    pub image_cache: Vec<u64>,
+    pub alive: bool,
+    /// VMs currently placed here.
+    pub vms: Vec<VmId>,
+}
+
+impl Server {
+    pub fn fits(&self, t: &VmTemplate) -> bool {
+        self.alive
+            && self.used_cores + t.vcpus <= self.cores
+            && self.used_mem_mb + t.mem_mb <= self.mem_mb
+    }
+
+    pub fn free_slots(&self, t: &VmTemplate) -> usize {
+        if !self.alive {
+            return 0;
+        }
+        let by_cores = (self.cores - self.used_cores) / t.vcpus.max(1);
+        let by_mem = (self.mem_mb - self.used_mem_mb) / t.mem_mb.max(1);
+        by_cores.min(by_mem as u32) as usize
+    }
+
+    pub fn has_image(&self, t: &VmTemplate) -> bool {
+        self.image_cache.contains(&(t.image_bytes as u64))
+    }
+}
+
+/// The cluster: servers + VM registry.
+pub struct Cluster {
+    pub servers: Vec<Server>,
+    pub vms: BTreeMap<VmId, VmRecord>,
+    pub ids: IdGen,
+}
+
+impl Cluster {
+    /// Build `n_servers` homogeneous servers, each with a `host_nic_bw`
+    /// bytes/sec NIC added to `net`.
+    pub fn new(
+        net: &mut NetSim,
+        prefix: &str,
+        n_servers: usize,
+        cores: u32,
+        mem_mb: u64,
+        host_nic_bw: f64,
+    ) -> Cluster {
+        let ids = IdGen::new();
+        let servers = (0..n_servers)
+            .map(|i| {
+                let nic = net.add_link(&format!("{prefix}-host-{i}"), host_nic_bw);
+                Server {
+                    id: ids.server(),
+                    cores,
+                    mem_mb,
+                    used_cores: 0,
+                    used_mem_mb: 0,
+                    nic,
+                    image_cache: vec![],
+                    alive: true,
+                    vms: vec![],
+                }
+            })
+            .collect();
+        Cluster { servers, vms: BTreeMap::new(), ids }
+    }
+
+    /// Total free VM slots for a template.
+    pub fn free_slots(&self, t: &VmTemplate) -> usize {
+        self.servers.iter().map(|s| s.free_slots(t)).sum()
+    }
+
+    /// Least-loaded (spread) placement of one VM — what nova's weigher and
+    /// Snooze's round-robin GMs both approximate; reserves resources and
+    /// registers the record (state Building).  Returns None when nothing
+    /// fits.
+    pub fn place(
+        &mut self,
+        t: &VmTemplate,
+        reservation: super::ReservationId,
+    ) -> Option<VmId> {
+        let slot = self
+            .servers
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.fits(t))
+            .max_by_key(|(i, s)| (s.free_slots(t), usize::MAX - i))
+            .map(|(i, _)| i)?;
+        let server = &mut self.servers[slot];
+        server.used_cores += t.vcpus;
+        server.used_mem_mb += t.mem_mb;
+        let id = self.ids.vm();
+        server.vms.push(id);
+        let rec = VmRecord {
+            id,
+            server: server.id,
+            reservation,
+            state: VmState::Building,
+            ready_at: f64::INFINITY,
+            nic: server.nic,
+        };
+        self.vms.insert(id, rec);
+        Some(id)
+    }
+
+    /// Release a VM's resources (termination or failure cleanup).
+    pub fn release(&mut self, vm: VmId, t: &VmTemplate) {
+        if let Some(rec) = self.vms.get_mut(&vm) {
+            if rec.state == VmState::Deleted {
+                return;
+            }
+            rec.state = VmState::Deleted;
+            if let Some(server) = self.servers.iter_mut().find(|s| s.id == rec.server) {
+                server.used_cores = server.used_cores.saturating_sub(t.vcpus);
+                server.used_mem_mb = server.used_mem_mb.saturating_sub(t.mem_mb);
+                server.vms.retain(|v| *v != vm);
+            }
+        }
+    }
+
+    /// Mark a server dead; returns the VMs that were running on it.
+    pub fn kill_server(&mut self, server: ServerId) -> Vec<VmId> {
+        let Some(s) = self.servers.iter_mut().find(|s| s.id == server) else {
+            return vec![];
+        };
+        s.alive = false;
+        let victims: Vec<VmId> = s.vms.drain(..).collect();
+        s.used_cores = 0;
+        s.used_mem_mb = 0;
+        for v in &victims {
+            if let Some(rec) = self.vms.get_mut(v) {
+                rec.state = VmState::Failed;
+            }
+        }
+        victims
+    }
+
+    pub fn server_mut(&mut self, id: ServerId) -> Option<&mut Server> {
+        self.servers.iter_mut().find(|s| s.id == id)
+    }
+
+    pub fn server(&self, id: ServerId) -> Option<&Server> {
+        self.servers.iter().find(|s| s.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcloud::ReservationId;
+
+    fn mk() -> (NetSim, Cluster) {
+        let mut net = NetSim::new();
+        let c = Cluster::new(&mut net, "t", 2, 4, 8192, 1e9);
+        (net, c)
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let (_net, mut c) = mk();
+        let t = VmTemplate { vcpus: 1, mem_mb: 2048, image_bytes: 1e9 };
+        assert_eq!(c.free_slots(&t), 8);
+        let vm = c.place(&t, ReservationId(1)).unwrap();
+        assert_eq!(c.free_slots(&t), 7);
+        c.release(vm, &t);
+        assert_eq!(c.free_slots(&t), 8);
+        // double release is idempotent
+        c.release(vm, &t);
+        assert_eq!(c.free_slots(&t), 8);
+    }
+
+    #[test]
+    fn placement_exhausts() {
+        let (_net, mut c) = mk();
+        let t = VmTemplate { vcpus: 4, mem_mb: 1024, image_bytes: 1e9 };
+        assert!(c.place(&t, ReservationId(1)).is_some());
+        assert!(c.place(&t, ReservationId(1)).is_some());
+        assert!(c.place(&t, ReservationId(1)).is_none()); // cores exhausted
+    }
+
+    #[test]
+    fn memory_bound_placement() {
+        let (_net, mut c) = mk();
+        let t = VmTemplate { vcpus: 1, mem_mb: 8192, image_bytes: 1e9 };
+        assert_eq!(c.free_slots(&t), 2);
+        c.place(&t, ReservationId(1)).unwrap();
+        let t2 = VmTemplate { vcpus: 1, mem_mb: 1, image_bytes: 1e9 };
+        // first server full on memory; second still open
+        assert!(c.place(&t2, ReservationId(1)).is_some());
+    }
+
+    #[test]
+    fn kill_server_fails_vms_and_zeroes_usage() {
+        let (_net, mut c) = mk();
+        let t = VmTemplate::default();
+        let vm1 = c.place(&t, ReservationId(1)).unwrap();
+        let server = c.vms[&vm1].server;
+        let victims = c.kill_server(server);
+        assert_eq!(victims, vec![vm1]);
+        assert_eq!(c.vms[&vm1].state, VmState::Failed);
+        // dead server accepts nothing
+        let s = c.server(server).unwrap();
+        assert!(!s.alive);
+        assert_eq!(s.free_slots(&t), 0);
+    }
+
+    #[test]
+    fn spread_placement_balances_then_colocates() {
+        let (_net, mut c) = mk();
+        let t = VmTemplate { vcpus: 1, mem_mb: 1024, image_bytes: 1e9 };
+        let a = c.place(&t, ReservationId(1)).unwrap();
+        let b = c.place(&t, ReservationId(1)).unwrap();
+        // least-loaded spreads the first two VMs across the two servers
+        assert_ne!(c.vms[&a].server, c.vms[&b].server);
+        assert_ne!(c.vms[&a].nic, c.vms[&b].nic);
+        // fill both servers; co-location then happens and NICs are shared
+        let mut last = None;
+        while let Some(v) = c.place(&t, ReservationId(1)) {
+            last = Some(v);
+        }
+        let v = last.unwrap();
+        assert!(c.vms.values().any(|r| r.id != v && r.nic == c.vms[&v].nic));
+    }
+
+    #[test]
+    fn image_cache_tracking() {
+        let (_net, mut c) = mk();
+        let t = VmTemplate::default();
+        assert!(!c.servers[0].has_image(&t));
+        let key = t.image_bytes as u64;
+        c.servers[0].image_cache.push(key);
+        assert!(c.servers[0].has_image(&t));
+    }
+}

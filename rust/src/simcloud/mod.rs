@@ -1,0 +1,184 @@
+//! Simulated IaaS cloud managers (§2.1, §6.1).
+//!
+//! CACS is *cloud-agnostic*: it drives whatever IaaS it is pointed at
+//! through a narrow VM-management interface (the paper uses Snooze's
+//! native REST API and the EC2 API for OpenStack).  That interface is
+//! [`IaasCloud`]; two implementations reproduce the two testbeds:
+//!
+//! * [`snooze::SnoozeCloud`] — hierarchical (leader → group managers →
+//!   local controllers), fast scheduling, and a **native failure
+//!   notification API** (`has_failure_notifications() == true`), so CACS
+//!   needs no in-VM monitoring daemons (§6.1).
+//! * [`openstack::OpenStackCloud`] — flat nova-style scheduler working a
+//!   central queue (slower, linear in request count), **no failure
+//!   notification interface**, and management traffic sharing the data
+//!   network — the source of the Fig 6b restart instability.
+//!
+//! Both are passive state machines over virtual time: `request_vms`
+//! computes ready times from the latency models, `poll_events` drains
+//! what has happened by `now`, and `next_event_time` lets the DES driver
+//! schedule its wake-up.
+
+pub mod cluster;
+pub mod openstack;
+pub mod snooze;
+
+use crate::netsim::LinkId;
+use crate::util::ids::{ServerId, VmId};
+use std::fmt;
+
+/// Resource shape of a requested VM (the paper's experiments use
+/// 1 vCPU / 2 GB instances, §7.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VmTemplate {
+    pub vcpus: u32,
+    pub mem_mb: u64,
+    /// Base image size in bytes (pulled to a host on first use).
+    pub image_bytes: f64,
+}
+
+impl Default for VmTemplate {
+    fn default() -> Self {
+        // 1 vCPU, 2 GB RAM, 1.2 GB Ubuntu-with-DMTCP image (§7, both
+        // clouds used an Ubuntu 13.10 base image preconfigured with
+        // DMTCP 2.3).
+        VmTemplate { vcpus: 1, mem_mb: 2048, image_bytes: 1.2e9 }
+    }
+}
+
+/// VM lifecycle inside the IaaS (not the CACS app lifecycle of Fig 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmState {
+    /// Accepted, waiting for scheduling/boot.
+    Building,
+    /// Booted and reachable.
+    Active,
+    /// Host died or boot failed.
+    Failed,
+    /// Terminated and released.
+    Deleted,
+}
+
+/// A VM record as the cloud reports it.
+#[derive(Debug, Clone)]
+pub struct VmRecord {
+    pub id: VmId,
+    pub server: ServerId,
+    pub reservation: ReservationId,
+    pub state: VmState,
+    /// When the VM became / becomes Active (virtual seconds).
+    pub ready_at: f64,
+    /// The host NIC this VM's traffic traverses (shared with co-located
+    /// VMs — contention included).
+    pub nic: LinkId,
+}
+
+/// Handle for a batch VM request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ReservationId(pub u64);
+
+impl fmt::Display for ReservationId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rsv-{}", self.0)
+    }
+}
+
+/// Asynchronous cloud notifications.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CloudEvent {
+    /// One VM of a reservation became Active.
+    VmActive { reservation: ReservationId, vm: VmId },
+    /// Every VM of the reservation is Active.
+    ReservationReady { reservation: ReservationId },
+    /// A VM failed.  Only clouds with `has_failure_notifications()` emit
+    /// this (Snooze); OpenStack clients must poll or monitor in-VM.
+    VmFailed { vm: VmId },
+    /// A server failed (Snooze leader notification).
+    ServerFailed { server: ServerId },
+}
+
+/// Cloud-side errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CloudError {
+    InsufficientCapacity { requested: usize, available: usize },
+    UnknownVm(VmId),
+    UnknownReservation(ReservationId),
+}
+
+impl fmt::Display for CloudError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CloudError::InsufficientCapacity { requested, available } => {
+                write!(f, "insufficient capacity: requested {requested}, available {available}")
+            }
+            CloudError::UnknownVm(v) => write!(f, "unknown vm {v}"),
+            CloudError::UnknownReservation(r) => write!(f, "unknown reservation {r}"),
+        }
+    }
+}
+
+impl std::error::Error for CloudError {}
+
+/// The narrow, EC2-shaped VM management interface CACS drives (§3.3).
+pub trait IaasCloud {
+    fn name(&self) -> &str;
+
+    /// Submit a batch request for `n` VMs; latency models inside the
+    /// cloud decide when each becomes Active.
+    fn request_vms(
+        &mut self,
+        now: f64,
+        n: usize,
+        template: &VmTemplate,
+    ) -> Result<ReservationId, CloudError>;
+
+    /// Drain events that have occurred by `now`.
+    fn poll_events(&mut self, now: f64) -> Vec<CloudEvent>;
+
+    /// Earliest pending event time (DES wake-up hint).
+    fn next_event_time(&self) -> Option<f64>;
+
+    /// Terminate VMs and release their resources (§5.4 step 3).
+    fn terminate_vms(&mut self, now: f64, vms: &[VmId]);
+
+    /// Kill a physical server (fault injection).  VMs on it fail.
+    fn inject_server_failure(&mut self, now: f64, server: ServerId);
+
+    /// Whether the cloud pushes failure notifications (Snooze: yes,
+    /// OpenStack: no — §6.1).
+    fn has_failure_notifications(&self) -> bool;
+
+    fn vm_record(&self, vm: VmId) -> Option<&VmRecord>;
+
+    fn vms_of(&self, reservation: ReservationId) -> Vec<VmId>;
+
+    /// All servers (for failure-injection targeting).
+    fn servers(&self) -> Vec<ServerId>;
+
+    /// Free capacity in VM slots for the default template (capacity
+    /// planning in benches).
+    fn free_slots(&self, template: &VmTemplate) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_template_matches_paper() {
+        let t = VmTemplate::default();
+        assert_eq!(t.vcpus, 1);
+        assert_eq!(t.mem_mb, 2048);
+    }
+
+    #[test]
+    fn reservation_display() {
+        assert_eq!(ReservationId(9).to_string(), "rsv-9");
+    }
+
+    #[test]
+    fn error_display() {
+        let e = CloudError::InsufficientCapacity { requested: 10, available: 3 };
+        assert!(e.to_string().contains("requested 10"));
+    }
+}

@@ -1,0 +1,351 @@
+//! OpenStack-like flat IaaS (§6.1, §7.4).
+//!
+//! Differences from Snooze that the paper's Fig 6 measures:
+//!
+//! * A **central nova-style scheduler** works one global queue with a
+//!   per-VM filter/weigh round — allocation latency grows linearly with
+//!   the number of requested VMs and dominates Snooze's hierarchical
+//!   dispatch (Fig 6a: "the time for different IaaS systems to process
+//!   VM allocation differs greatly").
+//! * **No failure-notification API** (`has_failure_notifications() ==
+//!   false`): failures are only observable by polling VM state or by
+//!   CACS's own in-VM monitoring daemons (§6.1, §6.3).
+//! * **Management and application data share one network** (the paper had
+//!   to co-locate them on Grid'5000; §7.4 blames this for the unstable
+//!   OpenStack restart times of Fig 6b).  The shared segment is exposed
+//!   as [`OpenStackCloud::shared_mgmt_link`]; the sim driver routes
+//!   checkpoint transfers through it, and every scheduling burst starts
+//!   control-plane chatter flows on it.
+
+use super::cluster::Cluster;
+use super::{
+    CloudError, CloudEvent, IaasCloud, ReservationId, VmRecord, VmState, VmTemplate,
+};
+use crate::netsim::{LinkId, NetSim};
+use crate::util::ids::{ServerId, VmId};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Latency model for the OpenStack-like cloud.
+#[derive(Debug, Clone)]
+pub struct OpenStackParams {
+    /// API front-end overhead per request (s).
+    pub api_overhead: f64,
+    /// Per-VM central scheduling time (serial, global queue) (s).
+    pub sched_per_vm: f64,
+    /// Image-store bandwidth (bytes/s) — shares the mgmt/data network.
+    pub image_store_bw: f64,
+    /// Concurrent boots per server.
+    pub boot_slots_per_server: usize,
+    pub boot_median: f64,
+    pub boot_sigma: f64,
+    /// Control-plane chatter per scheduled VM on the shared link (bytes).
+    pub chatter_bytes_per_vm: f64,
+    /// Shared management/data network capacity (bytes/s).
+    pub mgmt_link_bw: f64,
+}
+
+impl Default for OpenStackParams {
+    fn default() -> Self {
+        OpenStackParams {
+            api_overhead: 0.5,
+            sched_per_vm: 1.2,
+            image_store_bw: 6.25e8, // 5 Gbit/s, slower store path
+            boot_slots_per_server: 2,
+            boot_median: 20.0,
+            boot_sigma: 0.35,
+            chatter_bytes_per_vm: 8e6,
+            mgmt_link_bw: 1.25e8, // 1 Gbit/s shared segment
+        }
+    }
+}
+
+pub struct OpenStackCloud {
+    pub cluster: Cluster,
+    params: OpenStackParams,
+    template_cache: BTreeMap<VmId, VmTemplate>,
+    /// When the central scheduler frees up (global serialization).
+    sched_free_at: f64,
+    boot_free: BTreeMap<ServerId, Vec<f64>>,
+    events: Vec<(f64, CloudEvent)>,
+    reservations: BTreeMap<ReservationId, Vec<VmId>>,
+    next_rsv: u64,
+    rng: Rng,
+    /// The shared management/data segment (Fig 6b instability source).
+    shared_link: LinkId,
+}
+
+impl OpenStackCloud {
+    pub fn new(
+        net: &mut NetSim,
+        n_servers: usize,
+        params: OpenStackParams,
+        seed: u64,
+    ) -> OpenStackCloud {
+        let cluster = Cluster::new(net, "openstack", n_servers, 24, 65536, 1.25e8);
+        let boot_free = cluster
+            .servers
+            .iter()
+            .map(|s| (s.id, vec![0.0; params.boot_slots_per_server]))
+            .collect();
+        let shared_link = net.add_link("openstack-mgmt-data", params.mgmt_link_bw);
+        OpenStackCloud {
+            cluster,
+            params,
+            template_cache: BTreeMap::new(),
+            sched_free_at: 0.0,
+            boot_free,
+            events: Vec::new(),
+            reservations: BTreeMap::new(),
+            next_rsv: 1,
+            rng: Rng::new(seed),
+            shared_link,
+        }
+    }
+
+    pub fn params(&self) -> &OpenStackParams {
+        &self.params
+    }
+
+    /// The shared management/data network segment.  The sim driver routes
+    /// checkpoint uploads/downloads through this link when the app runs
+    /// on OpenStack, reproducing the Fig 6b contention.
+    pub fn shared_mgmt_link(&self) -> LinkId {
+        self.shared_link
+    }
+
+    /// Start control-plane chatter on the shared link for a scheduling
+    /// burst of `n` VMs (called by `request_vms`; exposed for tests).
+    pub fn start_chatter(&mut self, net: &mut NetSim, now: f64, n: usize) {
+        let bytes = self.params.chatter_bytes_per_vm * n as f64;
+        if bytes > 0.0 {
+            net.start_flow(now, vec![self.shared_link], bytes, "os-chatter");
+        }
+    }
+
+    fn push_event(&mut self, at: f64, ev: CloudEvent) {
+        self.events.push((at, ev));
+        self.events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+}
+
+impl IaasCloud for OpenStackCloud {
+    fn name(&self) -> &str {
+        "openstack"
+    }
+
+    fn request_vms(
+        &mut self,
+        now: f64,
+        n: usize,
+        template: &VmTemplate,
+    ) -> Result<ReservationId, CloudError> {
+        let available = self.cluster.free_slots(template);
+        if available < n {
+            return Err(CloudError::InsufficientCapacity { requested: n, available });
+        }
+        let rsv = ReservationId(self.next_rsv);
+        self.next_rsv += 1;
+
+        let t_api = now + self.params.api_overhead;
+        let vms: Vec<VmId> = (0..n)
+            .map(|_| self.cluster.place(template, rsv).expect("capacity checked"))
+            .collect();
+
+        // one-time image pulls over the (slower) shared store path
+        let image_key = template.image_bytes as u64;
+        let mut pulling: Vec<ServerId> = vec![];
+        for vm in &vms {
+            let sid = self.cluster.vms[vm].server;
+            let srv = self.cluster.server_mut(sid).unwrap();
+            if !srv.image_cache.contains(&image_key) && !pulling.contains(&sid) {
+                pulling.push(sid);
+                srv.image_cache.push(image_key);
+            }
+        }
+        let pull_time = if pulling.is_empty() {
+            0.0
+        } else {
+            template.image_bytes * pulling.len() as f64 / self.params.image_store_bw
+        };
+
+        // central scheduler: strict global serialization
+        let mut ready_max: f64 = t_api;
+        for vm in &vms {
+            let sched_start = self.sched_free_at.max(t_api);
+            let sched_done = sched_start + self.params.sched_per_vm;
+            self.sched_free_at = sched_done;
+
+            let sid = self.cluster.vms[vm].server;
+            let image_at = if pulling.contains(&sid) { t_api + pull_time } else { t_api };
+            let earliest = sched_done.max(image_at);
+
+            let slots = self.boot_free.get_mut(&sid).unwrap();
+            let (slot_idx, slot_free) = slots
+                .iter()
+                .cloned()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let boot_start = earliest.max(slot_free);
+            let boot_time = self.rng.lognormal(self.params.boot_median, self.params.boot_sigma);
+            let ready = boot_start + boot_time;
+            slots[slot_idx] = ready;
+
+            let rec = self.cluster.vms.get_mut(vm).unwrap();
+            rec.ready_at = ready;
+            self.template_cache.insert(*vm, template.clone());
+            ready_max = ready_max.max(ready);
+            self.push_event(ready, CloudEvent::VmActive { reservation: rsv, vm: *vm });
+        }
+        self.push_event(ready_max, CloudEvent::ReservationReady { reservation: rsv });
+        self.reservations.insert(rsv, vms);
+        Ok(rsv)
+    }
+
+    fn poll_events(&mut self, now: f64) -> Vec<CloudEvent> {
+        let mut out = vec![];
+        let mut rest = vec![];
+        for (t, ev) in self.events.drain(..) {
+            if t <= now {
+                if let CloudEvent::VmActive { vm, .. } = &ev {
+                    if let Some(rec) = self.cluster.vms.get_mut(vm) {
+                        if rec.state == VmState::Building {
+                            rec.state = VmState::Active;
+                        }
+                    }
+                }
+                out.push(ev);
+            } else {
+                rest.push((t, ev));
+            }
+        }
+        self.events = rest;
+        out
+    }
+
+    fn next_event_time(&self) -> Option<f64> {
+        self.events.first().map(|(t, _)| *t)
+    }
+
+    fn terminate_vms(&mut self, _now: f64, vms: &[VmId]) {
+        for vm in vms {
+            if let Some(t) = self.template_cache.get(vm).cloned() {
+                self.cluster.release(*vm, &t);
+            }
+        }
+    }
+
+    fn inject_server_failure(&mut self, _now: f64, server: ServerId) {
+        // OpenStack exposes no failure notifications (§3.3): VMs silently
+        // become Failed; only polling vm_record or the CACS monitoring
+        // daemons will notice.
+        let _victims = self.cluster.kill_server(server);
+    }
+
+    fn has_failure_notifications(&self) -> bool {
+        false
+    }
+
+    fn vm_record(&self, vm: VmId) -> Option<&VmRecord> {
+        self.cluster.vms.get(&vm)
+    }
+
+    fn vms_of(&self, reservation: ReservationId) -> Vec<VmId> {
+        self.reservations.get(&reservation).cloned().unwrap_or_default()
+    }
+
+    fn servers(&self) -> Vec<ServerId> {
+        self.cluster.servers.iter().map(|s| s.id).collect()
+    }
+
+    fn free_slots(&self, template: &VmTemplate) -> usize {
+        self.cluster.free_slots(template)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcloud::snooze::{SnoozeCloud, SnoozeParams};
+
+    fn ready_time<C: IaasCloud>(cloud: &mut C, now: f64, n: usize) -> f64 {
+        let rsv = cloud.request_vms(now, n, &VmTemplate::default()).unwrap();
+        loop {
+            let t = cloud.next_event_time().expect("pending events");
+            for ev in cloud.poll_events(t) {
+                if matches!(ev, CloudEvent::ReservationReady { reservation } if reservation == rsv)
+                {
+                    return t - now;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_linear_in_n() {
+        let mut net = NetSim::new();
+        let mut cloud = OpenStackCloud::new(&mut net, 24, OpenStackParams::default(), 7);
+        let t16 = ready_time(&mut cloud, 0.0, 16);
+        let mut net2 = NetSim::new();
+        let mut cloud2 = OpenStackCloud::new(&mut net2, 24, OpenStackParams::default(), 7);
+        let t64 = ready_time(&mut cloud2, 0.0, 64);
+        // 48 extra VMs × 1.2 s scheduling ≈ 57 s extra, plus boots
+        assert!(t64 > t16 + 30.0, "t16={t16} t64={t64}");
+    }
+
+    #[test]
+    fn slower_than_snooze_at_scale() {
+        // Fig 6a: the IaaS-side allocation differs greatly between clouds.
+        let mut net = NetSim::new();
+        let mut os = OpenStackCloud::new(&mut net, 24, OpenStackParams::default(), 7);
+        let t_os = ready_time(&mut os, 0.0, 64);
+        let mut net2 = NetSim::new();
+        let mut sz = SnoozeCloud::new(&mut net2, 24, SnoozeParams::default(), 7);
+        let t_sz = ready_time(&mut sz, 0.0, 64);
+        assert!(
+            t_os > 1.5 * t_sz,
+            "openstack {t_os} should be much slower than snooze {t_sz}"
+        );
+    }
+
+    #[test]
+    fn no_failure_notifications() {
+        let mut net = NetSim::new();
+        let mut cloud = OpenStackCloud::new(&mut net, 2, OpenStackParams::default(), 7);
+        let rsv = cloud.request_vms(0.0, 2, &VmTemplate::default()).unwrap();
+        while cloud.next_event_time().is_some() {
+            let t = cloud.next_event_time().unwrap();
+            cloud.poll_events(t);
+        }
+        let vms = cloud.vms_of(rsv);
+        let server = cloud.vm_record(vms[0]).unwrap().server;
+        cloud.inject_server_failure(100.0, server);
+        assert!(!cloud.has_failure_notifications());
+        // no events pushed...
+        assert!(cloud.poll_events(200.0).is_empty());
+        // ...but polling the record reveals the failure
+        assert_eq!(cloud.vm_record(vms[0]).unwrap().state, VmState::Failed);
+    }
+
+    #[test]
+    fn chatter_occupies_shared_link() {
+        let mut net = NetSim::new();
+        let mut cloud = OpenStackCloud::new(&mut net, 4, OpenStackParams::default(), 7);
+        let link = cloud.shared_mgmt_link();
+        assert_eq!(net.link_throughput(link), 0.0);
+        cloud.start_chatter(&mut net, 0.0, 16);
+        assert!(net.link_throughput(link) > 0.0);
+    }
+
+    #[test]
+    fn terminate_and_reuse() {
+        let mut net = NetSim::new();
+        let mut cloud = OpenStackCloud::new(&mut net, 1, OpenStackParams::default(), 7);
+        let t = VmTemplate::default();
+        let rsv = cloud.request_vms(0.0, 24, &t).unwrap();
+        assert_eq!(cloud.free_slots(&t), 0);
+        cloud.terminate_vms(1.0, &cloud.vms_of(rsv));
+        assert!(cloud.request_vms(2.0, 24, &t).is_ok());
+    }
+}

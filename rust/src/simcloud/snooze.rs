@@ -1,0 +1,392 @@
+//! Snooze-like hierarchical IaaS (§6.1, Feller et al. 2012).
+//!
+//! Topology: one **leader** accepts reservations and fans them out
+//! round-robin to `n_gms` **group managers**, each of which schedules
+//! placements serially onto its servers (**local controllers**).  VM
+//! readiness is gated by (a) leader + GM scheduling latency, (b) a
+//! one-time base-image pull per server sharing the image-store NIC, and
+//! (c) per-server hypervisor boot slots.
+//!
+//! Snooze's distinguishing feature for CACS is its **failure
+//! notification API**: server/VM failures are pushed to subscribers
+//! within ~a second, so no monitoring daemons are needed inside the VMs
+//! (§6.1, §7.2 runs them only on OpenStack).
+
+use super::cluster::Cluster;
+use super::{
+    CloudError, CloudEvent, IaasCloud, ReservationId, VmRecord, VmState, VmTemplate,
+};
+use crate::netsim::NetSim;
+use crate::util::ids::{ServerId, VmId};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Tunable latency model (defaults calibrated in DESIGN.md §1).
+#[derive(Debug, Clone)]
+pub struct SnoozeParams {
+    /// Group managers between the leader and the servers.
+    pub n_gms: usize,
+    /// Leader request-handling overhead per reservation (s).
+    pub leader_overhead: f64,
+    /// Per-VM scheduling time at a group manager (serial per GM) (s).
+    pub gm_place_time: f64,
+    /// Image-store NIC bandwidth for base-image pulls (bytes/s).
+    pub image_store_bw: f64,
+    /// Concurrent boots a server's hypervisor performs.
+    pub boot_slots_per_server: usize,
+    /// Median KVM boot time (s); lognormal sigma.
+    pub boot_median: f64,
+    pub boot_sigma: f64,
+    /// Delay before a failure notification reaches subscribers (s).
+    pub failure_notify_delay: f64,
+}
+
+impl Default for SnoozeParams {
+    fn default() -> Self {
+        SnoozeParams {
+            n_gms: 4,
+            leader_overhead: 0.3,
+            gm_place_time: 0.15,
+            image_store_bw: 1.25e9, // 10 Gbit/s
+            boot_slots_per_server: 2,
+            boot_median: 16.0,
+            boot_sigma: 0.25,
+            failure_notify_delay: 1.0,
+        }
+    }
+}
+
+pub struct SnoozeCloud {
+    pub cluster: Cluster,
+    params: SnoozeParams,
+    template_cache: BTreeMap<VmId, VmTemplate>,
+    /// When each group manager's scheduling queue frees up.
+    gm_free_at: Vec<f64>,
+    /// Per-server boot slot availability.
+    boot_free: BTreeMap<ServerId, Vec<f64>>,
+    events: Vec<(f64, CloudEvent)>,
+    reservations: BTreeMap<ReservationId, Vec<VmId>>,
+    next_rsv: u64,
+    rng: Rng,
+    rr_gm: usize,
+}
+
+impl SnoozeCloud {
+    pub fn new(net: &mut NetSim, n_servers: usize, params: SnoozeParams, seed: u64) -> SnoozeCloud {
+        // Grid'5000-ish servers: 24 cores, 64 GB, 1 Gbit host NIC for the
+        // data network (checkpoint traffic shares this).
+        let cluster = Cluster::new(net, "snooze", n_servers, 24, 65536, 1.25e8);
+        let boot_free = cluster
+            .servers
+            .iter()
+            .map(|s| (s.id, vec![0.0; params.boot_slots_per_server]))
+            .collect();
+        let gm_free_at = vec![0.0; params.n_gms];
+        SnoozeCloud {
+            cluster,
+            params,
+            template_cache: BTreeMap::new(),
+            gm_free_at,
+            boot_free,
+            events: Vec::new(),
+            reservations: BTreeMap::new(),
+            next_rsv: 1,
+            rng: Rng::new(seed),
+        rr_gm: 0,
+        }
+    }
+
+    pub fn params(&self) -> &SnoozeParams {
+        &self.params
+    }
+
+    fn push_event(&mut self, at: f64, ev: CloudEvent) {
+        self.events.push((at, ev));
+        self.events
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+}
+
+impl IaasCloud for SnoozeCloud {
+    fn name(&self) -> &str {
+        "snooze"
+    }
+
+    fn request_vms(
+        &mut self,
+        now: f64,
+        n: usize,
+        template: &VmTemplate,
+    ) -> Result<ReservationId, CloudError> {
+        let available = self.cluster.free_slots(template);
+        if available < n {
+            return Err(CloudError::InsufficientCapacity { requested: n, available });
+        }
+        let rsv = ReservationId(self.next_rsv);
+        self.next_rsv += 1;
+
+        let t_leader = now + self.params.leader_overhead;
+
+        // place all VMs first (capacity already checked)
+        let vms: Vec<VmId> = (0..n)
+            .map(|_| self.cluster.place(template, rsv).expect("capacity checked"))
+            .collect();
+
+        // one-time image pulls: servers hosting new VMs without the image
+        // share the image-store NIC fairly.
+        let image_key = template.image_bytes as u64;
+        let mut pulling: Vec<ServerId> = vec![];
+        for vm in &vms {
+            let sid = self.cluster.vms[vm].server;
+            let srv = self.cluster.server_mut(sid).unwrap();
+            if !srv.image_cache.contains(&image_key) && !pulling.contains(&sid) {
+                pulling.push(sid);
+                srv.image_cache.push(image_key);
+            }
+        }
+        let pull_time = if pulling.is_empty() {
+            0.0
+        } else {
+            template.image_bytes * pulling.len() as f64 / self.params.image_store_bw
+        };
+        let image_ready: BTreeMap<ServerId, f64> = self
+            .cluster
+            .servers
+            .iter()
+            .map(|s| {
+                let t = if pulling.contains(&s.id) { t_leader + pull_time } else { t_leader };
+                (s.id, t)
+            })
+            .collect();
+
+        // GM scheduling: VMs round-robin across GMs, serial per GM.
+        let mut ready_max: f64 = t_leader;
+        for vm in &vms {
+            let gm = self.rr_gm % self.params.n_gms;
+            self.rr_gm += 1;
+            let sched_start = self.gm_free_at[gm].max(t_leader);
+            let sched_done = sched_start + self.params.gm_place_time;
+            self.gm_free_at[gm] = sched_done;
+
+            let sid = self.cluster.vms[vm].server;
+            let earliest = sched_done.max(image_ready[&sid]);
+
+            // boot slot on the server
+            let slots = self.boot_free.get_mut(&sid).unwrap();
+            let (slot_idx, slot_free) = slots
+                .iter()
+                .cloned()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let boot_start = earliest.max(slot_free);
+            let boot_time = self.rng.lognormal(self.params.boot_median, self.params.boot_sigma);
+            let ready = boot_start + boot_time;
+            slots[slot_idx] = ready;
+
+            let rec = self.cluster.vms.get_mut(vm).unwrap();
+            rec.ready_at = ready;
+            self.template_cache.insert(*vm, template.clone());
+            ready_max = ready_max.max(ready);
+            self.push_event(ready, CloudEvent::VmActive { reservation: rsv, vm: *vm });
+        }
+        self.push_event(ready_max, CloudEvent::ReservationReady { reservation: rsv });
+        self.reservations.insert(rsv, vms);
+        Ok(rsv)
+    }
+
+    fn poll_events(&mut self, now: f64) -> Vec<CloudEvent> {
+        let mut out = vec![];
+        let mut rest = vec![];
+        for (t, ev) in self.events.drain(..) {
+            if t <= now {
+                if let CloudEvent::VmActive { vm, .. } = &ev {
+                    if let Some(rec) = self.cluster.vms.get_mut(vm) {
+                        if rec.state == VmState::Building {
+                            rec.state = VmState::Active;
+                        }
+                    }
+                }
+                out.push(ev);
+            } else {
+                rest.push((t, ev));
+            }
+        }
+        self.events = rest;
+        out
+    }
+
+    fn next_event_time(&self) -> Option<f64> {
+        self.events.first().map(|(t, _)| *t)
+    }
+
+    fn terminate_vms(&mut self, _now: f64, vms: &[VmId]) {
+        for vm in vms {
+            if let Some(t) = self.template_cache.get(vm).cloned() {
+                self.cluster.release(*vm, &t);
+            }
+        }
+    }
+
+    fn inject_server_failure(&mut self, now: f64, server: ServerId) {
+        let victims = self.cluster.kill_server(server);
+        let delay = self.params.failure_notify_delay;
+        // Snooze's hierarchy detects and pushes notifications (§6.4).
+        self.push_event(now + delay, CloudEvent::ServerFailed { server });
+        for vm in victims {
+            self.push_event(now + delay, CloudEvent::VmFailed { vm });
+        }
+    }
+
+    fn has_failure_notifications(&self) -> bool {
+        true
+    }
+
+    fn vm_record(&self, vm: VmId) -> Option<&VmRecord> {
+        self.cluster.vms.get(&vm)
+    }
+
+    fn vms_of(&self, reservation: ReservationId) -> Vec<VmId> {
+        self.reservations.get(&reservation).cloned().unwrap_or_default()
+    }
+
+    fn servers(&self) -> Vec<ServerId> {
+        self.cluster.servers.iter().map(|s| s.id).collect()
+    }
+
+    fn free_slots(&self, template: &VmTemplate) -> usize {
+        self.cluster.free_slots(template)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n_servers: usize) -> (NetSim, SnoozeCloud) {
+        let mut net = NetSim::new();
+        let cloud = SnoozeCloud::new(&mut net, n_servers, SnoozeParams::default(), 42);
+        (net, cloud)
+    }
+
+    fn drain_all(cloud: &mut SnoozeCloud) -> Vec<(f64, CloudEvent)> {
+        let mut out = vec![];
+        while let Some(t) = cloud.next_event_time() {
+            for ev in cloud.poll_events(t) {
+                out.push((t, ev));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn reservation_becomes_ready() {
+        let (_net, mut cloud) = mk(4);
+        let rsv = cloud.request_vms(0.0, 4, &VmTemplate::default()).unwrap();
+        let evs = drain_all(&mut cloud);
+        let actives = evs
+            .iter()
+            .filter(|(_, e)| matches!(e, CloudEvent::VmActive { .. }))
+            .count();
+        assert_eq!(actives, 4);
+        assert!(evs
+            .iter()
+            .any(|(_, e)| matches!(e, CloudEvent::ReservationReady { reservation } if *reservation == rsv)));
+        for vm in cloud.vms_of(rsv) {
+            assert_eq!(cloud.vm_record(vm).unwrap().state, VmState::Active);
+        }
+    }
+
+    #[test]
+    fn capacity_rejection() {
+        let (_net, mut cloud) = mk(1);
+        // 1 server x 24 cores => 24 slots for the default template
+        let err = cloud.request_vms(0.0, 100, &VmTemplate::default()).unwrap_err();
+        assert!(matches!(err, CloudError::InsufficientCapacity { available: 24, .. }));
+    }
+
+    #[test]
+    fn allocation_time_grows_with_n() {
+        // More VMs => later ReservationReady (GM serialization + boot
+        // slots): the Fig 3a/6a IaaS-side trend.
+        let mut ready_times = vec![];
+        for n in [1usize, 16, 64] {
+            let (_net, mut cloud) = mk(24);
+            let rsv = cloud.request_vms(0.0, n, &VmTemplate::default()).unwrap();
+            let evs = drain_all(&mut cloud);
+            let t = evs
+                .iter()
+                .filter(|(_, e)| matches!(e, CloudEvent::ReservationReady { reservation } if *reservation == rsv))
+                .map(|(t, _)| *t)
+                .next()
+                .unwrap();
+            ready_times.push(t);
+        }
+        assert!(ready_times[0] < ready_times[1]);
+        assert!(ready_times[1] < ready_times[2]);
+    }
+
+    #[test]
+    fn image_cache_amortizes_second_request() {
+        let (_net, mut cloud) = mk(2);
+        let t0 = {
+            let rsv = cloud.request_vms(0.0, 2, &VmTemplate::default()).unwrap();
+            let evs = drain_all(&mut cloud);
+            evs.iter()
+                .filter(|(_, e)| matches!(e, CloudEvent::ReservationReady { reservation } if *reservation == rsv))
+                .map(|(t, _)| *t)
+                .next()
+                .unwrap()
+        };
+        // second reservation at t=1000: image cached, should be faster
+        let t1 = {
+            let rsv = cloud.request_vms(1000.0, 2, &VmTemplate::default()).unwrap();
+            let evs = drain_all(&mut cloud);
+            evs.iter()
+                .filter(|(_, e)| matches!(e, CloudEvent::ReservationReady { reservation } if *reservation == rsv))
+                .map(|(t, _)| *t)
+                .next()
+                .unwrap()
+                - 1000.0
+        };
+        assert!(t1 < t0, "cached alloc {t1} should beat cold alloc {t0}");
+    }
+
+    #[test]
+    fn failure_notifications_pushed() {
+        let (_net, mut cloud) = mk(2);
+        let rsv = cloud.request_vms(0.0, 2, &VmTemplate::default()).unwrap();
+        drain_all(&mut cloud);
+        let vms = cloud.vms_of(rsv);
+        let server = cloud.vm_record(vms[0]).unwrap().server;
+        cloud.inject_server_failure(100.0, server);
+        assert!(cloud.has_failure_notifications());
+        let evs = cloud.poll_events(102.0);
+        assert!(evs.iter().any(|e| matches!(e, CloudEvent::ServerFailed { .. })));
+        assert!(evs.iter().any(|e| matches!(e, CloudEvent::VmFailed { .. })));
+    }
+
+    #[test]
+    fn terminate_releases_capacity() {
+        let (_net, mut cloud) = mk(1);
+        let t = VmTemplate::default();
+        let rsv = cloud.request_vms(0.0, 24, &t).unwrap();
+        assert_eq!(cloud.free_slots(&t), 0);
+        let vms = cloud.vms_of(rsv);
+        cloud.terminate_vms(10.0, &vms);
+        assert_eq!(cloud.free_slots(&t), 24);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let (_net, mut cloud) = mk(8);
+            cloud.request_vms(0.0, 16, &VmTemplate::default()).unwrap();
+            drain_all(&mut cloud)
+                .iter()
+                .map(|(t, _)| *t)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,207 @@
+//! Local-disk object store — the "fast local storage" tier of §5.2 and
+//! the real-mode checkpoint backend for `examples/`.
+//!
+//! Keys map to paths under a root directory; writes go through a
+//! temp-file + rename so readers never observe partial images (the same
+//! guarantee DMTCP needs from its checkpoint directory).
+
+use super::{validate_key, ObjectStore, StoreError};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct LocalStore {
+    root: PathBuf,
+    tmp_seq: AtomicU64,
+}
+
+impl LocalStore {
+    /// Create (or reuse) a store rooted at `root`.
+    pub fn new<P: AsRef<Path>>(root: P) -> Result<LocalStore, StoreError> {
+        fs::create_dir_all(root.as_ref())?;
+        Ok(LocalStore {
+            root: root.as_ref().to_path_buf(),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_for(&self, key: &str) -> Result<PathBuf, StoreError> {
+        validate_key(key)?;
+        Ok(self.root.join(key))
+    }
+}
+
+impl ObjectStore for LocalStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
+        let path = self.path_for(key)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        // atomic publish: write tmp, fsync, rename
+        let tmp = self.root.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(data)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+        let path = self.path_for(key)?;
+        fs::read(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                StoreError::NotFound(key.to_string())
+            } else {
+                StoreError::Io(e)
+            }
+        })
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StoreError> {
+        let path = self.path_for(key)?;
+        fs::remove_file(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                StoreError::NotFound(key.to_string())
+            } else {
+                StoreError::Io(e)
+            }
+        })?;
+        // opportunistically remove now-empty parents up to the root
+        let mut dir = path.parent().map(|p| p.to_path_buf());
+        while let Some(d) = dir {
+            if d == self.root || fs::remove_dir(&d).is_err() {
+                break;
+            }
+            dir = d.parent().map(|p| p.to_path_buf());
+        }
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        let mut out = vec![];
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for entry in entries.flatten() {
+                let path = entry.path();
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with(".tmp-") {
+                    continue;
+                }
+                if path.is_dir() {
+                    stack.push(path);
+                } else if let Ok(rel) = path.strip_prefix(&self.root) {
+                    let key = rel
+                        .components()
+                        .map(|c| c.as_os_str().to_string_lossy().to_string())
+                        .collect::<Vec<_>>()
+                        .join("/");
+                    if key.starts_with(prefix) {
+                        out.push(key);
+                    }
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn size(&self, key: &str) -> Result<u64, StoreError> {
+        let path = self.path_for(key)?;
+        fs::metadata(&path).map(|m| m.len()).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                StoreError::NotFound(key.to_string())
+            } else {
+                StoreError::Io(e)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> LocalStore {
+        let dir = std::env::temp_dir().join(format!(
+            "cacs-localstore-{}-{}",
+            tag,
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        LocalStore::new(dir).unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip_on_disk() {
+        let s = tmp_store("rt");
+        s.put("app-1/ckpt-1/p0.img", b"imagebytes").unwrap();
+        assert_eq!(s.get("app-1/ckpt-1/p0.img").unwrap(), b"imagebytes");
+        assert_eq!(s.size("app-1/ckpt-1/p0.img").unwrap(), 10);
+    }
+
+    #[test]
+    fn nested_list_and_delete_prefix() {
+        let s = tmp_store("list");
+        for p in 0..3 {
+            s.put(&format!("a/c1/p{p}.img"), b"x").unwrap();
+        }
+        s.put("a/c2/p0.img", b"x").unwrap();
+        s.put("b/c1/p0.img", b"x").unwrap();
+        assert_eq!(s.list("a/").unwrap().len(), 4);
+        assert_eq!(s.list("a/c1/").unwrap().len(), 3);
+        assert_eq!(s.delete_prefix("a/").unwrap(), 4);
+        assert_eq!(s.list("a/").unwrap().len(), 0);
+        assert_eq!(s.list("").unwrap(), vec!["b/c1/p0.img"]);
+    }
+
+    #[test]
+    fn missing_object_is_not_found() {
+        let s = tmp_store("missing");
+        assert!(matches!(s.get("nope/x"), Err(StoreError::NotFound(_))));
+        assert!(matches!(s.delete("nope/x"), Err(StoreError::NotFound(_))));
+        assert!(matches!(s.size("nope/x"), Err(StoreError::NotFound(_))));
+    }
+
+    #[test]
+    fn key_traversal_rejected() {
+        let s = tmp_store("trav");
+        assert!(s.put("../escape", b"x").is_err());
+        assert!(s.get("a/../../etc/passwd").is_err());
+    }
+
+    #[test]
+    fn overwrite_is_atomic_replacement() {
+        let s = tmp_store("atomic");
+        s.put("k/img", &vec![1u8; 4096]).unwrap();
+        s.put("k/img", &vec![2u8; 128]).unwrap();
+        let data = s.get("k/img").unwrap();
+        assert_eq!(data.len(), 128);
+        assert!(data.iter().all(|&b| b == 2));
+        // no tmp files leaked
+        assert!(s.list("").unwrap().iter().all(|k| !k.contains(".tmp-")));
+    }
+
+    #[test]
+    fn empty_dirs_cleaned_after_delete() {
+        let s = tmp_store("clean");
+        s.put("deep/nest/ed/key.img", b"x").unwrap();
+        s.delete("deep/nest/ed/key.img").unwrap();
+        assert!(!s.root().join("deep").exists());
+    }
+}

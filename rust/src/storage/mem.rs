@@ -1,0 +1,151 @@
+//! In-memory object store (tests + the coordinators DB default).
+
+use super::{validate_key, ObjectStore, StoreError};
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+/// Thread-safe map-backed store.
+#[derive(Default)]
+pub struct MemStore {
+    objects: RwLock<BTreeMap<String, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    /// Total bytes stored (capacity accounting in tests).
+    pub fn total_bytes(&self) -> u64 {
+        self.objects
+            .read()
+            .unwrap()
+            .values()
+            .map(|v| v.len() as u64)
+            .sum()
+    }
+
+    pub fn object_count(&self) -> usize {
+        self.objects.read().unwrap().len()
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
+        validate_key(key)?;
+        self.objects
+            .write()
+            .unwrap()
+            .insert(key.to_string(), data.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+        self.objects
+            .read()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StoreError> {
+        self.objects
+            .write()
+            .unwrap()
+            .remove(key)
+            .map(|_| ())
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        Ok(self
+            .objects
+            .read()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    fn size(&self, key: &str) -> Result<u64, StoreError> {
+        self.objects
+            .read()
+            .unwrap()
+            .get(key)
+            .map(|v| v.len() as u64)
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = MemStore::new();
+        s.put("a/b.img", b"hello").unwrap();
+        assert_eq!(s.get("a/b.img").unwrap(), b"hello");
+        assert_eq!(s.size("a/b.img").unwrap(), 5);
+        assert!(s.exists("a/b.img"));
+        assert!(!s.exists("a/c.img"));
+    }
+
+    #[test]
+    fn get_missing_errors() {
+        let s = MemStore::new();
+        assert!(matches!(s.get("nope"), Err(StoreError::NotFound(_))));
+        assert!(matches!(s.delete("nope"), Err(StoreError::NotFound(_))));
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let s = MemStore::new();
+        s.put("k", b"v1").unwrap();
+        s.put("k", b"v2longer").unwrap();
+        assert_eq!(s.get("k").unwrap(), b"v2longer");
+        assert_eq!(s.object_count(), 1);
+    }
+
+    #[test]
+    fn list_by_prefix_sorted() {
+        let s = MemStore::new();
+        s.put("app-1/ckpt-1/p0.img", b"x").unwrap();
+        s.put("app-1/ckpt-2/p0.img", b"x").unwrap();
+        s.put("app-2/ckpt-1/p0.img", b"x").unwrap();
+        let keys = s.list("app-1/").unwrap();
+        assert_eq!(keys, vec!["app-1/ckpt-1/p0.img", "app-1/ckpt-2/p0.img"]);
+        assert_eq!(s.list("").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn delete_prefix_bulk() {
+        let s = MemStore::new();
+        for i in 0..5 {
+            s.put(&format!("app-1/ckpt-1/p{i}.img"), b"data").unwrap();
+        }
+        s.put("app-2/x.img", b"keep").unwrap();
+        let n = s.delete_prefix("app-1/").unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(s.object_count(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_keys() {
+        let s = MemStore::new();
+        assert!(s.put("../etc/passwd", b"x").is_err());
+        assert!(s.put("", b"x").is_err());
+    }
+
+    #[test]
+    fn total_bytes_accounting() {
+        let s = MemStore::new();
+        s.put("a", &[0u8; 100]).unwrap();
+        s.put("b", &[0u8; 50]).unwrap();
+        assert_eq!(s.total_bytes(), 150);
+        s.delete("a").unwrap();
+        assert_eq!(s.total_bytes(), 50);
+    }
+}

@@ -1,0 +1,104 @@
+//! Checkpoint-image storage backends (§6.2).
+//!
+//! The paper's Checkpoint Manager is stateless and plugs into different
+//! storage systems: NFS for small deployments, S3-compatible object
+//! stores (and through S3, Ceph) for scale.  Two kinds of backend live
+//! here:
+//!
+//! * **Real stores** implementing [`ObjectStore`] over actual bytes —
+//!   [`mem::MemStore`] (tests) and [`local::LocalStore`] (real-mode
+//!   examples write checkpoint images to disk through this).
+//! * **Simulated stores** ([`sim::SimStorage`]) that model upload and
+//!   download *timing* through the [`crate::netsim`] fluid network —
+//!   NFS single-server queueing, S3 per-request overhead, and Ceph
+//!   striping across OSDs.  These drive Figs 3b/3c/5/6b.
+
+pub mod local;
+pub mod mem;
+pub mod sim;
+
+use std::fmt;
+
+/// Errors from real object stores.
+#[derive(Debug)]
+pub enum StoreError {
+    NotFound(String),
+    Io(std::io::Error),
+    Corrupt(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::NotFound(k) => write!(f, "object not found: {k}"),
+            StoreError::Io(e) => write!(f, "storage io error: {e}"),
+            StoreError::Corrupt(k) => write!(f, "object corrupt: {k}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
+}
+
+/// S3-flavoured object-store interface (§6.2): flat keys, whole-object
+/// put/get, prefix listing.  Keys use `/`-separated segments, e.g.
+/// `app-3/ckpt-7/proc-1.img`.
+pub trait ObjectStore: Send + Sync {
+    fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError>;
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError>;
+    fn delete(&self, key: &str) -> Result<(), StoreError>;
+    /// Keys beginning with `prefix`, sorted.
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError>;
+    /// Object size without fetching the body.
+    fn size(&self, key: &str) -> Result<u64, StoreError>;
+
+    fn exists(&self, key: &str) -> bool {
+        self.size(key).is_ok()
+    }
+
+    /// Delete every object under a prefix; returns how many went away.
+    fn delete_prefix(&self, prefix: &str) -> Result<usize, StoreError> {
+        let keys = self.list(prefix)?;
+        let n = keys.len();
+        for k in keys {
+            self.delete(&k)?;
+        }
+        Ok(n)
+    }
+}
+
+/// Validate an object key: non-empty `/`-separated segments without `..`,
+/// so local-disk backends can map keys to paths safely.
+pub fn validate_key(key: &str) -> Result<(), StoreError> {
+    if key.is_empty() || key.starts_with('/') || key.ends_with('/') {
+        return Err(StoreError::NotFound(format!("invalid key: {key:?}")));
+    }
+    for seg in key.split('/') {
+        if seg.is_empty() || seg == "." || seg == ".." || seg.contains('\\') {
+            return Err(StoreError::NotFound(format!("invalid key segment in {key:?}")));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_validation() {
+        assert!(validate_key("a/b/c.img").is_ok());
+        assert!(validate_key("x").is_ok());
+        assert!(validate_key("").is_err());
+        assert!(validate_key("/abs").is_err());
+        assert!(validate_key("trailing/").is_err());
+        assert!(validate_key("a//b").is_err());
+        assert!(validate_key("a/../b").is_err());
+        assert!(validate_key("a/.\\./b").is_err());
+    }
+}

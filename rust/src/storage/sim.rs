@@ -1,0 +1,258 @@
+//! Simulated storage backends: timing models over [`crate::netsim`].
+//!
+//! §6.2: CACS supports NFS (small deployments) and S3-compatible object
+//! stores, which also covers Ceph.  For the figure benches what matters
+//! is *where the bytes queue*:
+//!
+//! * **NFS** — one server NIC; every upload/download funnels through it.
+//!   Cheap per-request, collapses under many concurrent image transfers.
+//! * **S3** — a front-end with high aggregate bandwidth but a noticeable
+//!   per-request overhead (auth, object metadata), and a per-object rate
+//!   cap from the object-gateway path.
+//! * **Ceph** — images are striped across `k` OSDs; a transfer becomes
+//!   `k` parallel sub-flows, so aggregate scales with the OSD count until
+//!   client NICs saturate (the paper's Grid'5000 deployment used Ceph
+//!   Firefly for exactly this reason, §3.4).
+//!
+//! A transfer is described by [`TransferSpec`]; the sim driver turns it
+//! into netsim flows and watches for completion.  This module stays pure
+//! model: no DES dependency.
+
+use crate::netsim::{LinkId, NetSim};
+use crate::util::rng::Rng;
+
+/// Which storage system semantics to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Nfs,
+    S3,
+    /// Ceph with the given stripe width (sub-flows per transfer).
+    Ceph { stripe: usize },
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Nfs => "nfs",
+            BackendKind::S3 => "s3",
+            BackendKind::Ceph { .. } => "ceph",
+        }
+    }
+}
+
+/// A provisioned simulated storage service.
+#[derive(Debug, Clone)]
+pub struct SimStorage {
+    pub kind: BackendKind,
+    /// Server-side links (1 for NFS/S3 front-end, `osds` for Ceph).
+    pub server_links: Vec<LinkId>,
+    /// Fixed per-request latency before bytes start moving.
+    pub request_overhead: f64,
+    /// Round-robin cursor for OSD selection.
+    next_osd: usize,
+}
+
+impl SimStorage {
+    /// NFS: single server NIC of `capacity` bytes/sec, ~1 ms op overhead.
+    pub fn nfs(net: &mut NetSim, capacity: f64) -> SimStorage {
+        let link = net.add_link("nfs-server", capacity);
+        SimStorage {
+            kind: BackendKind::Nfs,
+            server_links: vec![link],
+            request_overhead: 0.001,
+            next_osd: 0,
+        }
+    }
+
+    /// S3: fat front-end (aggregate `capacity`), 30 ms request overhead
+    /// (auth + metadata round-trips).
+    pub fn s3(net: &mut NetSim, capacity: f64) -> SimStorage {
+        let link = net.add_link("s3-gateway", capacity);
+        SimStorage {
+            kind: BackendKind::S3,
+            server_links: vec![link],
+            request_overhead: 0.030,
+            next_osd: 0,
+        }
+    }
+
+    /// Ceph: `osds` object stores of `per_osd_capacity` each; transfers
+    /// stripe over `stripe` of them; 5 ms request overhead (CRUSH map +
+    /// primary OSD hop).
+    pub fn ceph(net: &mut NetSim, osds: usize, per_osd_capacity: f64, stripe: usize) -> SimStorage {
+        assert!(osds >= 1 && stripe >= 1);
+        let links = (0..osds)
+            .map(|i| net.add_link(&format!("ceph-osd-{i}"), per_osd_capacity))
+            .collect();
+        SimStorage {
+            kind: BackendKind::Ceph { stripe: stripe.min(osds) },
+            server_links: links,
+            request_overhead: 0.005,
+            next_osd: 0,
+        }
+    }
+
+    /// Plan the sub-transfers for moving `bytes` between a client NIC and
+    /// this storage service.  Returns (sub_flow_paths, sub_flow_bytes):
+    /// each sub-flow traverses the client link plus one server link.
+    pub fn plan(&mut self, client_link: LinkId, bytes: f64) -> Vec<(Vec<LinkId>, f64)> {
+        match self.kind {
+            BackendKind::Nfs | BackendKind::S3 => {
+                vec![(vec![client_link, self.server_links[0]], bytes)]
+            }
+            BackendKind::Ceph { stripe } => {
+                let per = bytes / stripe as f64;
+                (0..stripe)
+                    .map(|_| {
+                        let osd = self.server_links[self.next_osd % self.server_links.len()];
+                        self.next_osd += 1;
+                        (vec![client_link, osd], per)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Sampled request overhead (lognormal around the nominal value so
+    /// concurrent requests don't tick in lockstep).
+    pub fn sample_overhead(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.request_overhead, 0.25)
+    }
+
+    /// Aggregate server-side throughput right now (the Fig 5 trace).
+    pub fn server_throughput(&self, net: &NetSim) -> f64 {
+        self.server_links.iter().map(|&l| net.link_throughput(l)).sum()
+    }
+
+    /// Aggregate capacity of the server side.
+    pub fn server_capacity(&self, net: &NetSim) -> f64 {
+        self.server_links.iter().map(|&l| net.link_capacity(l)).sum()
+    }
+}
+
+/// A fully-described transfer for the sim driver: issue `flows` on the
+/// shared netsim, wait for all to finish, after `overhead` seconds.
+#[derive(Debug, Clone)]
+pub struct TransferSpec {
+    pub overhead: f64,
+    pub flows: Vec<(Vec<LinkId>, f64)>,
+    pub total_bytes: f64,
+}
+
+/// Build an upload/download spec (direction only affects the tag the
+/// driver attaches; the fluid model is symmetric).
+pub fn transfer_spec(
+    storage: &mut SimStorage,
+    rng: &mut Rng,
+    client_link: LinkId,
+    bytes: f64,
+) -> TransferSpec {
+    TransferSpec {
+        overhead: storage.sample_overhead(rng),
+        flows: storage.plan(client_link, bytes),
+        total_bytes: bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: f64 = 1e9;
+
+    #[test]
+    fn nfs_single_path() {
+        let mut net = NetSim::new();
+        let client = net.add_link("vm-0", 1.0 * GB);
+        let mut nfs = SimStorage::nfs(&mut net, 1.0 * GB);
+        let plan = nfs.plan(client, 100e6);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].0.len(), 2);
+        assert_eq!(plan[0].1, 100e6);
+    }
+
+    #[test]
+    fn ceph_stripes_across_osds() {
+        let mut net = NetSim::new();
+        let client = net.add_link("vm-0", 10.0 * GB);
+        let mut ceph = SimStorage::ceph(&mut net, 8, 1.0 * GB, 4);
+        let plan = ceph.plan(client, 400e6);
+        assert_eq!(plan.len(), 4);
+        for (path, bytes) in &plan {
+            assert_eq!(*bytes, 100e6);
+            assert_eq!(path[0], client);
+        }
+        // round-robin advances
+        let plan2 = ceph.plan(client, 400e6);
+        assert_ne!(plan[0].0[1], plan2[0].0[1]);
+    }
+
+    #[test]
+    fn ceph_stripe_capped_at_osds() {
+        let mut net = NetSim::new();
+        let _c = net.add_link("vm", GB);
+        let ceph = SimStorage::ceph(&mut net, 2, GB, 8);
+        match ceph.kind {
+            BackendKind::Ceph { stripe } => assert_eq!(stripe, 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn nfs_saturates_under_concurrency() {
+        // 8 concurrent uploads through one 1 GB/s NFS NIC: each gets 1/8.
+        let mut net = NetSim::new();
+        let mut nfs = SimStorage::nfs(&mut net, 1.0 * GB);
+        let mut flows = vec![];
+        for i in 0..8 {
+            let client = net.add_link(&format!("vm-{i}"), 1.0 * GB);
+            for (path, bytes) in nfs.plan(client, 1.0 * GB) {
+                flows.push(net.start_flow(0.0, path, bytes, "up"));
+            }
+        }
+        for f in &flows {
+            assert!((net.flow_rate(*f).unwrap() - GB / 8.0).abs() < 1.0);
+        }
+        assert!((nfs.server_throughput(&net) - GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn ceph_scales_with_osds() {
+        // 8 concurrent uploads over 8 OSDs of 1 GB/s with stripe 1 and
+        // distinct client NICs: aggregate ≈ 8 GB/s (vs 1 for NFS).
+        let mut net = NetSim::new();
+        let mut ceph = SimStorage::ceph(&mut net, 8, 1.0 * GB, 1);
+        for i in 0..8 {
+            let client = net.add_link(&format!("vm-{i}"), 2.0 * GB);
+            for (path, bytes) in ceph.plan(client, 1.0 * GB) {
+                net.start_flow(0.0, path, bytes, "up");
+            }
+        }
+        let agg = ceph.server_throughput(&net);
+        assert!((agg - 8.0 * GB).abs() < 1.0, "agg={agg}");
+    }
+
+    #[test]
+    fn s3_overhead_larger_than_nfs() {
+        let mut net = NetSim::new();
+        let nfs = SimStorage::nfs(&mut net, GB);
+        let s3 = SimStorage::s3(&mut net, 10.0 * GB);
+        assert!(s3.request_overhead > nfs.request_overhead);
+        let mut rng = Rng::new(1);
+        let sampled = s3.sample_overhead(&mut rng);
+        assert!(sampled > 0.0 && sampled < 1.0);
+    }
+
+    #[test]
+    fn transfer_spec_totals() {
+        let mut net = NetSim::new();
+        let client = net.add_link("vm", GB);
+        let mut ceph = SimStorage::ceph(&mut net, 4, GB, 4);
+        let mut rng = Rng::new(2);
+        let spec = transfer_spec(&mut ceph, &mut rng, client, 256e6);
+        assert_eq!(spec.total_bytes, 256e6);
+        let sum: f64 = spec.flows.iter().map(|f| f.1).sum();
+        assert!((sum - 256e6).abs() < 1e-3);
+        assert!(spec.overhead > 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! used by the `cacs` launcher, the examples and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `--key value`,
+    /// `--key=value`, `--flag` (when the next token is another option or
+    /// absent), and positionals.
+    pub fn parse<I, S>(tokens: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.opts.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse the process command line (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of usizes, e.g. `--nodes 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_key_value_both_forms() {
+        let a = Args::parse(["--port", "8080", "--mode=sim"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get_or("mode", "real"), "sim");
+        assert_eq!(a.u64_or("port", 0), 8080);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(["run", "--verbose", "--n", "4", "trailing"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["run".to_string(), "trailing".to_string()]);
+        assert_eq!(a.usize_or("n", 1), 4);
+    }
+
+    #[test]
+    fn flag_at_end_of_line() {
+        let a = Args::parse(["--a", "1", "--debug"]);
+        assert!(a.flag("debug"));
+        assert_eq!(a.get("a"), Some("1"));
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = Args::parse(["--x", "nope"]);
+        assert_eq!(a.u64_or("x", 9), 9);
+        assert_eq!(a.f64_or("y", 1.5), 1.5);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(["--nodes", "1,2, 4,8"]);
+        assert_eq!(a.usize_list_or("nodes", &[64]), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("missing", &[64]), vec![64]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95/min statistics,
+//! and table/series printers used by every `rust/benches/*` figure
+//! harness so their output mirrors the rows and series the paper reports.
+
+use std::time::Instant;
+
+/// Result of a timed measurement, all values in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean,
+            p50: percentile(&samples, 0.50),
+            p95: percentile(&samples, 0.95),
+            min: samples[0],
+            max: samples[n - 1],
+            std: var.sqrt(),
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Human-friendly duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.2} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Human-friendly byte size.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{:.0} B", b)
+    }
+}
+
+/// Fixed-width table printer for figure harness output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Table {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + widths.len() * 2;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// ASCII line plot for time-series (Fig 4a/4b/Fig 5 traces): renders
+/// `series` (t, y) into a `width` x `height` grid.
+pub fn ascii_plot(series: &[(f64, f64)], width: usize, height: usize, title: &str) -> String {
+    if series.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let tmin = series.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+    let tmax = series.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+    let ymin = 0.0f64.min(series.iter().map(|p| p.1).fold(f64::INFINITY, f64::min));
+    let ymax = series.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let yspan = if (ymax - ymin).abs() < 1e-12 { 1.0 } else { ymax - ymin };
+    let tspan = if (tmax - tmin).abs() < 1e-12 { 1.0 } else { tmax - tmin };
+    let mut grid = vec![vec![' '; width]; height];
+    for &(t, y) in series {
+        let x = (((t - tmin) / tspan) * (width - 1) as f64).round() as usize;
+        let ry = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - ry.min(height - 1);
+        grid[row][x.min(width - 1)] = '*';
+    }
+    let mut out = format!("{title}  [y: {:.3}..{:.3}, t: {:.1}..{:.1}]\n", ymin, ymax, tmin, tmax);
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out
+}
+
+/// Ordinary least squares fit y = a + b·x; returns (a, b, r²).
+/// Used by benches to assert trends (e.g. Fig 4a's linear decrease,
+/// Fig 4c's logarithmic heartbeat growth).
+pub fn linear_fit(points: &[(f64, f64)]) -> (f64, f64, f64) {
+    let n = points.len() as f64;
+    assert!(n >= 2.0);
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    let b = if denom.abs() < 1e-12 { 0.0 } else { (n * sxy - sx * sy) / denom };
+    let a = (sy - b * sx) / n;
+    let mean_y = sy / n;
+    let ss_tot: f64 = points.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+    let ss_res: f64 = points.iter().map(|p| (p.1 - (a + b * p.0)).powi(2)).sum();
+    let r2 = if ss_tot < 1e-12 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Stats::from_samples(vec![0.0, 10.0]);
+        assert!((s.p95 - 9.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let s = bench(2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(s.n, 10);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_secs(0.0025), "2.50 ms");
+        assert_eq!(fmt_bytes(655e6), "655.0 MB");
+        assert_eq!(fmt_bytes(2048.0), "2.0 KB");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["n", "time"]);
+        t.row(["1", "10 s"]);
+        t.row(["128", "3 s"]);
+        let r = t.render();
+        assert!(r.contains("n    time"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 2.0 + 3.0 * i as f64)).collect();
+        let (a, b, r2) = linear_fit(&pts);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn ascii_plot_nonempty() {
+        let pts: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (i as f64).sin())).collect();
+        let s = ascii_plot(&pts, 40, 8, "sine");
+        assert!(s.contains('*'));
+        assert!(s.lines().count() >= 9);
+    }
+}

@@ -1,0 +1,454 @@
+//! Minimal HTTP/1.1 server and client over std::net (hyper/axum are
+//! unavailable offline).
+//!
+//! Implements exactly what the CACS REST API (Table 1) needs: request
+//! line + headers + Content-Length bodies, keep-alive off (connection:
+//! close), JSON payloads, and a blocking client for the migration
+//! "scripts" (examples/cloud_migration.rs is the analog of the paper's
+//! 90-line Python script driving two CACS instances).
+
+use crate::util::json::{self, Json};
+use crate::util::pool::ThreadPool;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// HTTP request methods used by Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+    Delete,
+    Put,
+}
+
+impl Method {
+    fn parse(s: &str) -> Option<Method> {
+        match s {
+            "GET" => Some(Method::Get),
+            "POST" => Some(Method::Post),
+            "DELETE" => Some(Method::Delete),
+            "PUT" => Some(Method::Put),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+            Method::Delete => "DELETE",
+            Method::Put => "PUT",
+        }
+    }
+}
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: Method,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Body parsed as JSON (empty body → `Json::Null`).
+    pub fn json(&self) -> Result<Json, json::ParseError> {
+        if self.body.is_empty() {
+            return Ok(Json::Null);
+        }
+        let text = std::str::from_utf8(&self.body).map_err(|_| json::ParseError {
+            offset: 0,
+            message: "body is not utf-8".into(),
+        })?;
+        json::parse(text)
+    }
+
+    /// Split the path into non-empty segments: `/a/b/c` → `["a","b","c"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+    pub content_type: &'static str,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            body: body.to_string().into_bytes(),
+            content_type: "application/json",
+        }
+    }
+
+    pub fn ok_json(body: &Json) -> Response {
+        Response::json(200, body)
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            body: body.as_bytes().to_vec(),
+            content_type: "text/plain",
+        }
+    }
+
+    pub fn not_found() -> Response {
+        Response::json(404, &Json::object([("error", "not found".into())]))
+    }
+
+    pub fn bad_request(msg: &str) -> Response {
+        Response::json(400, &Json::object([("error", msg.into())]))
+    }
+
+    fn status_text(code: u16) -> &'static str {
+        match code {
+            200 => "OK",
+            201 => "Created",
+            202 => "Accepted",
+            204 => "No Content",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            self.status,
+            Response::status_text(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Read and parse one request from a stream (used by the server and the
+/// tests; exposed for fuzzing).
+pub fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.trim_end().split_whitespace();
+    let method = parts
+        .next()
+        .and_then(Method::parse)
+        .ok_or_else(|| bad("bad method"))?;
+    let path = parts.next().ok_or_else(|| bad("missing path"))?.to_string();
+    let _version = parts.next().unwrap_or("HTTP/1.1");
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    // Guard against abusive bodies (the service is localhost-only, but
+    // the parser is total anyway).
+    if len > 256 * 1024 * 1024 {
+        return Err(bad("body too large"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, headers, body })
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Request handler signature for the server.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Blocking HTTP server dispatching on a thread pool (§6.5).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `handler` on `threads`
+    /// pool workers until dropped.
+    pub fn start(addr: &str, threads: usize, handler: Handler) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("cacs-http-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(threads, threads * 4);
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let handler = handler.clone();
+                            pool.submit(move || serve_conn(stream, handler));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, join: Some(join) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, handler: Handler) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let response = match read_request(&mut reader) {
+        Ok(req) => {
+            // Handler panics must not kill the worker.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)))
+                .unwrap_or_else(|_| {
+                    Response::json(500, &Json::object([("error", "handler panicked".into())]))
+                })
+        }
+        Err(e) => Response::bad_request(&e.to_string()),
+    };
+    let _ = response.write_to(&mut stream);
+}
+
+/// Blocking HTTP client (one request per connection, mirroring the
+/// server's connection-close policy).
+pub struct Client {
+    base: String,
+}
+
+/// A client-side response.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn json(&self) -> Result<Json, json::ParseError> {
+        let text = std::str::from_utf8(&self.body).map_err(|_| json::ParseError {
+            offset: 0,
+            message: "body is not utf-8".into(),
+        })?;
+        json::parse(text)
+    }
+
+    pub fn is_success(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+}
+
+impl Client {
+    /// `base` like "127.0.0.1:8080" (no scheme; localhost service).
+    pub fn new(base: &str) -> Client {
+        Client { base: base.to_string() }
+    }
+
+    /// The address this client targets.
+    pub fn base(&self) -> &str {
+        &self.base
+    }
+
+    pub fn get(&self, path: &str) -> std::io::Result<ClientResponse> {
+        self.request(Method::Get, path, None)
+    }
+
+    pub fn post(&self, path: &str, body: &Json) -> std::io::Result<ClientResponse> {
+        self.request(Method::Post, path, Some(body))
+    }
+
+    pub fn delete(&self, path: &str) -> std::io::Result<ClientResponse> {
+        self.request(Method::Delete, path, None)
+    }
+
+    pub fn request(
+        &self,
+        method: Method,
+        path: &str,
+        body: Option<&Json>,
+    ) -> std::io::Result<ClientResponse> {
+        let mut stream = TcpStream::connect(&self.base)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+        let body_bytes = body.map(|b| b.to_string().into_bytes()).unwrap_or_default();
+        let head = format!(
+            "{} {} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            method.as_str(),
+            path,
+            self.base,
+            body_bytes.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&body_bytes)?;
+        stream.flush()?;
+
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad("bad status line"))?;
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_len = v.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body)?;
+        Ok(ClientResponse { status, body })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        let handler: Handler = Arc::new(|req: &Request| {
+            let mut o = Json::obj();
+            o.set("method", req.method.as_str().into());
+            o.set("path", req.path.as_str().into());
+            o.set("body", req.json().unwrap_or(Json::Null));
+            Response::ok_json(&o)
+        });
+        Server::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let server = echo_server();
+        let client = Client::new(&server.addr().to_string());
+        let resp = client.get("/coordinators").unwrap();
+        assert_eq!(resp.status, 200);
+        let j = resp.json().unwrap();
+        assert_eq!(j.get("method").as_str(), Some("GET"));
+        assert_eq!(j.get("path").as_str(), Some("/coordinators"));
+    }
+
+    #[test]
+    fn post_json_body_roundtrip() {
+        let server = echo_server();
+        let client = Client::new(&server.addr().to_string());
+        let body = Json::object([("vms", 4u64.into()), ("name", "lu".into())]);
+        let resp = client.post("/coordinators", &body).unwrap();
+        assert_eq!(resp.status, 200);
+        let j = resp.json().unwrap();
+        assert_eq!(j.get("body").get("vms").as_u64(), Some(4));
+    }
+
+    #[test]
+    fn delete_and_404_handling() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            if req.method == Method::Delete {
+                Response::json(204, &Json::Null)
+            } else {
+                Response::not_found()
+            }
+        });
+        let server = Server::start("127.0.0.1:0", 2, handler).unwrap();
+        let client = Client::new(&server.addr().to_string());
+        assert_eq!(client.delete("/coordinators/app-1").unwrap().status, 204);
+        assert_eq!(client.get("/nope").unwrap().status, 404);
+    }
+
+    #[test]
+    fn handler_panic_yields_500() {
+        let handler: Handler = Arc::new(|_req: &Request| panic!("kaboom"));
+        let server = Server::start("127.0.0.1:0", 2, handler).unwrap();
+        let client = Client::new(&server.addr().to_string());
+        let resp = client.get("/x").unwrap();
+        assert_eq!(resp.status, 500);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let server = echo_server();
+        let addr = server.addr().to_string();
+        let mut handles = vec![];
+        for i in 0..16 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let client = Client::new(&addr);
+                let resp = client.get(&format!("/r/{i}")).unwrap();
+                assert_eq!(resp.status, 200);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn request_parser_rejects_garbage() {
+        let mut r = std::io::BufReader::new(&b"NOTHTTP\r\n\r\n"[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn request_segments() {
+        let req = Request {
+            method: Method::Get,
+            path: "/coordinators/app-3/checkpoints/ckpt-7".into(),
+            headers: BTreeMap::new(),
+            body: vec![],
+        };
+        assert_eq!(req.segments(), vec!["coordinators", "app-3", "checkpoints", "ckpt-7"]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Zero-dependency utility substrates.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so the service's infrastructure — JSON, HTTP, thread pool,
+//! CLI parsing, property-based testing and micro-benchmarking — is
+//! implemented here from scratch (DESIGN.md §1, substitution table).
+//! The paper's own implementation is a Java service on RESTlet with "a
+//! pool of threads" (§6.5); `http` + `pool` reproduce that architecture
+//! literally.
+
+pub mod args;
+pub mod benchkit;
+pub mod http;
+pub mod ids;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;

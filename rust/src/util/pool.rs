@@ -1,0 +1,253 @@
+//! Fixed-size worker thread pool.
+//!
+//! The paper's CACS implementation handles user requests "in background
+//! using a pool of threads to optimize the parallelization and the
+//! responsiveness of the API" (§6.5), and the Fig 4 resource analysis is
+//! phrased directly in terms of the pool size (m polling threads + n SSH
+//! threads).  This is that pool: bounded queue, graceful shutdown,
+//! panic-isolated jobs, and a gauge of in-flight work the metrics layer
+//! samples for the Fig 4b memory-model bench.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Queue>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    idle: Condvar,
+    in_flight: AtomicUsize,
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    capacity: usize,
+    shutdown: bool,
+}
+
+/// A fixed pool of worker threads consuming a bounded job queue.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// `size` workers, queue bounded at `queue_cap` pending jobs
+    /// (submitters block when full — the backpressure the paper relies on
+    /// when the underlying cloud can only absorb n concurrent requests).
+    pub fn new(size: usize, queue_cap: usize) -> ThreadPool {
+        assert!(size > 0 && queue_cap > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                jobs: VecDeque::new(),
+                capacity: queue_cap,
+                shutdown: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            idle: Condvar::new(),
+            in_flight: AtomicUsize::new(0),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cacs-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Jobs currently queued or executing (the Fig 4 "n SSH threads"
+    /// gauge).
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Submit a job; blocks while the queue is at capacity.
+    /// Returns false if the pool is shutting down.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.jobs.len() >= q.capacity && !q.shutdown {
+            q = self.shared.not_full.wait(q).unwrap();
+        }
+        if q.shutdown {
+            return false;
+        }
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.shared.not_empty.notify_one();
+        true
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) > 0 || !q.jobs.is_empty() {
+            q = self.shared.idle.wait(q).unwrap();
+        }
+    }
+
+    /// Run `f` over all items in parallel, blocking until done.
+    pub fn scatter<T, F>(&self, items: Vec<T>, f: F)
+    where
+        T: Send + 'static,
+        F: Fn(T) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for item in items {
+            let f = f.clone();
+            let pending = pending.clone();
+            {
+                *pending.0.lock().unwrap() += 1;
+            }
+            self.submit(move || {
+                f(item);
+                let mut n = pending.0.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    pending.1.notify_all();
+                }
+            });
+        }
+        let (lock, cv) = &*pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    shared.not_full.notify_one();
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.not_empty.wait(q).unwrap();
+            }
+        };
+        // Panic isolation: a failing job must not take the worker down
+        // (the paper's service survives failing SSH commands).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if result.is_err() {
+            log::warn!("pool job panicked (isolated)");
+        }
+        shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        shared.idle.notify_all();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, 64);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scatter_processes_every_item() {
+        let pool = ThreadPool::new(8, 16);
+        let sum = Arc::new(AtomicU64::new(0));
+        let s2 = sum.clone();
+        pool.scatter((1..=100u64).collect(), move |x| {
+            s2.fetch_add(x, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 5050);
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(2, 8);
+        pool.submit(|| panic!("boom"));
+        let done = Arc::new(AtomicU64::new(0));
+        let d = done.clone();
+        pool.submit(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn in_flight_gauge_drains_to_zero() {
+        let pool = ThreadPool::new(2, 8);
+        for _ in 0..6 {
+            pool.submit(|| std::thread::sleep(Duration::from_millis(5)));
+        }
+        pool.wait_idle();
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let pool = ThreadPool::new(1, 2);
+        let started = std::time::Instant::now();
+        for _ in 0..6 {
+            pool.submit(|| std::thread::sleep(Duration::from_millis(10)));
+        }
+        // with queue cap 2 and 1 worker, the last submits must have waited
+        assert!(started.elapsed() >= Duration::from_millis(20));
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_jobs() {
+        let pool = ThreadPool::new(1, 2);
+        drop(pool);
+        // Pool dropped: nothing to assert directly (submit consumed by
+        // drop), but constructing + dropping repeatedly must not hang.
+        for _ in 0..3 {
+            let p = ThreadPool::new(2, 2);
+            p.submit(|| {});
+            drop(p);
+        }
+    }
+}

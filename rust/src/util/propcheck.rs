@@ -1,0 +1,331 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! A generator + shrinking framework sufficient for the coordinator
+//! invariants this repo checks: random integers, vectors, choices and
+//! composite tuples, with greedy shrinking toward minimal counterexamples.
+//!
+//! ```no_run
+//! // (no_run: doctest executables lack the xla rpath in this image)
+//! use cacs::util::propcheck::{forall, Gen};
+//! forall("sum is commutative", 200, Gen::pair(Gen::i64(-100, 100), Gen::i64(-100, 100)),
+//!        |(a, b)| a + b == b + a);
+//! ```
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+use std::rc::Rc;
+
+/// A generator producing values of `T` plus its shrink candidates.
+#[derive(Clone)]
+pub struct Gen<T> {
+    gen: Rc<dyn Fn(&mut Rng) -> T>,
+    shrink: Rc<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new<G, S>(gen: G, shrink: S) -> Gen<T>
+    where
+        G: Fn(&mut Rng) -> T + 'static,
+        S: Fn(&T) -> Vec<T> + 'static,
+    {
+        Gen { gen: Rc::new(gen), shrink: Rc::new(shrink) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (shrinking degrades to no-op on mapped
+    /// values unless the mapping is invertible; fine for labels).
+    pub fn map<U: Clone + 'static, F: Fn(T) -> U + 'static>(self, f: F) -> Gen<U> {
+        let g = self.gen.clone();
+        Gen::new(move |r| f(g(r)), |_| vec![])
+    }
+}
+
+impl Gen<i64> {
+    /// Uniform i64 in [lo, hi], shrinking toward 0 (or lo).
+    pub fn i64(lo: i64, hi: i64) -> Gen<i64> {
+        assert!(lo <= hi);
+        Gen::new(
+            move |r| r.range(lo, hi),
+            move |&v| {
+                let target = if lo <= 0 && hi >= 0 { 0 } else { lo };
+                let mut out = vec![];
+                if v != target {
+                    out.push(target);
+                    let mid = target + (v - target) / 2;
+                    if mid != v && mid != target {
+                        out.push(mid);
+                    }
+                    if (v - target).abs() > 1 {
+                        out.push(v - (v - target).signum());
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in [lo, hi], shrinking toward lo.
+    pub fn usize(lo: usize, hi: usize) -> Gen<usize> {
+        Gen::new(
+            move |r| r.range(lo as i64, hi as i64) as usize,
+            move |&v| {
+                let mut out = vec![];
+                if v > lo {
+                    out.push(lo);
+                    let mid = lo + (v - lo) / 2;
+                    if mid != v && mid != lo {
+                        out.push(mid);
+                    }
+                    out.push(v - 1);
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<f64> {
+    /// Uniform f64 in [lo, hi), shrinking toward lo.
+    pub fn f64(lo: f64, hi: f64) -> Gen<f64> {
+        Gen::new(
+            move |r| r.uniform(lo, hi),
+            move |&v| {
+                if v > lo + 1e-9 {
+                    vec![lo, lo + (v - lo) / 2.0]
+                } else {
+                    vec![]
+                }
+            },
+        )
+    }
+}
+
+impl Gen<bool> {
+    pub fn bool() -> Gen<bool> {
+        Gen::new(|r| r.chance(0.5), |&v| if v { vec![false] } else { vec![] })
+    }
+}
+
+impl<T: Clone + Debug + 'static> Gen<T> {
+    /// Pick uniformly from a fixed set.
+    pub fn choice(items: Vec<T>) -> Gen<T> {
+        assert!(!items.is_empty());
+        let items2 = items.clone();
+        Gen::new(
+            move |r| items[r.pick(items.len())].clone(),
+            move |_| vec![items2[0].clone()],
+        )
+    }
+
+    /// Vector of length [0, max_len] of `inner`, shrinking by halving and
+    /// element-dropping, then element-wise.
+    pub fn vec(inner: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+        let inner2 = inner.clone();
+        Gen::new(
+            move |r| {
+                let len = r.pick(max_len + 1);
+                (0..len).map(|_| inner.sample(r)).collect()
+            },
+            move |v: &Vec<T>| {
+                let mut out: Vec<Vec<T>> = vec![];
+                if !v.is_empty() {
+                    out.push(vec![]);
+                    out.push(v[..v.len() / 2].to_vec());
+                    let mut minus_last = v.clone();
+                    minus_last.pop();
+                    out.push(minus_last);
+                    // shrink the first element as a representative
+                    for s in inner2.shrinks(&v[0]) {
+                        let mut w = v.clone();
+                        w[0] = s;
+                        out.push(w);
+                    }
+                }
+                out
+            },
+        )
+    }
+
+    /// Pair of independent generators.
+    pub fn pair<U: Clone + Debug + 'static>(a: Gen<T>, b: Gen<U>) -> Gen<(T, U)> {
+        let (a2, b2) = (a.clone(), b.clone());
+        Gen::new(
+            move |r| (a.sample(r), b.sample(r)),
+            move |(x, y)| {
+                let mut out = vec![];
+                for s in a2.shrinks(x) {
+                    out.push((s, y.clone()));
+                }
+                for s in b2.shrinks(y) {
+                    out.push((x.clone(), s));
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass { cases: usize },
+    Fail { original: T, shrunk: T, shrink_steps: usize },
+}
+
+/// Check `prop` over `cases` random samples; on failure, greedily shrink.
+/// Panics with the minimal counterexample (standard test usage); use
+/// [`check`] for a non-panicking variant.
+pub fn forall<T, F>(name: &str, cases: usize, gen: Gen<T>, prop: F)
+where
+    T: Clone + Debug + 'static,
+    F: Fn(&T) -> bool,
+{
+    match check(name, cases, gen, prop) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { original, shrunk, shrink_steps } => {
+            panic!(
+                "property '{name}' falsified.\n  original: {original:?}\n  \
+                 shrunk ({shrink_steps} steps): {shrunk:?}"
+            );
+        }
+    }
+}
+
+/// Non-panicking property check (returns the shrunk counterexample).
+pub fn check<T, F>(name: &str, cases: usize, gen: Gen<T>, prop: F) -> PropResult<T>
+where
+    T: Clone + Debug + 'static,
+    F: Fn(&T) -> bool,
+{
+    // Seed from the property name so each property gets a stable but
+    // distinct stream; override with PROPCHECK_SEED for replay.
+    let seed = std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for b in name.bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+            }
+            h
+        });
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let v = gen.sample(&mut rng);
+        if !prop(&v) {
+            // greedy shrink
+            let mut current = v.clone();
+            let mut steps = 0;
+            'outer: loop {
+                for cand in gen.shrinks(&current) {
+                    if !prop(&cand) {
+                        current = cand;
+                        steps += 1;
+                        if steps > 1000 {
+                            break 'outer;
+                        }
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Fail { original: v, shrunk: current, shrink_steps: steps };
+        }
+    }
+    PropResult::Pass { cases }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", 200, Gen::pair(Gen::i64(-100, 100), Gen::i64(-100, 100)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let r = check("ge-50-fails", 500, Gen::i64(0, 1000), |&v| v < 50);
+        match r {
+            PropResult::Fail { shrunk, .. } => {
+                // minimal counterexample of `v < 50` under shrink-toward-0
+                assert_eq!(shrunk, 50);
+            }
+            _ => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn vec_generator_shrinks_length() {
+        let r = check(
+            "all-short",
+            500,
+            Gen::vec(Gen::i64(0, 9), 20),
+            |v: &Vec<i64>| v.len() < 5,
+        );
+        match r {
+            PropResult::Fail { shrunk, .. } => {
+                assert_eq!(shrunk.len(), 5);
+            }
+            _ => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn choice_stays_in_set() {
+        let gen = Gen::choice(vec!["a", "b", "c"]);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = gen.sample(&mut rng);
+            assert!(["a", "b", "c"].contains(&v));
+        }
+    }
+
+    #[test]
+    fn usize_bounds() {
+        let gen = Gen::usize(3, 9);
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let v = gen.sample(&mut rng);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_bounds_and_shrink() {
+        let gen = Gen::f64(1.0, 2.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = gen.sample(&mut rng);
+            assert!((1.0..2.0).contains(&v));
+        }
+        let shrinks = gen.shrinks(&1.8);
+        assert!(shrinks.contains(&1.0));
+    }
+
+    #[test]
+    fn seed_env_replays() {
+        std::env::set_var("PROPCHECK_SEED", "12345");
+        let a = check("replay", 10, Gen::i64(0, 1_000_000), |_| true);
+        let b = check("replay", 10, Gen::i64(0, 1_000_000), |_| true);
+        std::env::remove_var("PROPCHECK_SEED");
+        match (a, b) {
+            (PropResult::Pass { cases: ca }, PropResult::Pass { cases: cb }) => {
+                assert_eq!(ca, cb)
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! `dmtcp1` workload — the lightweight single-process test application
+//! (§7.2, §7.3.2): a small float vector with a trivially cheap per-step
+//! update and a correspondingly small (~KB-to-MB) checkpoint image, used
+//! where the paper submits *many* applications (100 submissions for
+//! Fig 4, 40 migrating instances for Fig 5).
+//!
+//! Like the LU workload it can run its step through the AOT-compiled
+//! Pallas kernel (`dmtcp1_<n>` artifact) or a native Rust reference.
+
+use crate::dckpt::DistributedApp;
+use crate::runtime::{self, Engine, Executable};
+use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub const DEFAULT_DECAY: f32 = 0.999;
+
+/// Compute backend.
+pub enum Dmtcp1Backend {
+    Native,
+    Pjrt { step: Rc<Executable> },
+}
+
+/// The single-process lightweight app.
+pub struct Dmtcp1App {
+    x: Option<Vec<f32>>,
+    t: i32,
+    decay: f32,
+    backend: Dmtcp1Backend,
+}
+
+impl Dmtcp1App {
+    pub fn native(n: usize) -> Dmtcp1App {
+        let x = (0..n).map(|i| (i as f32 * 0.001).sin()).collect();
+        Dmtcp1App { x: Some(x), t: 0, decay: DEFAULT_DECAY, backend: Dmtcp1Backend::Native }
+    }
+
+    /// PJRT-backed instance; requires a `dmtcp1_<n>` artifact.
+    pub fn pjrt(engine: Rc<RefCell<Engine>>, n: usize) -> Result<Dmtcp1App> {
+        let name = format!("dmtcp1_{n}");
+        ensure!(
+            engine.borrow().manifest.find(&name).is_some(),
+            "no artifact {name} — rerun `make artifacts`"
+        );
+        let step = engine.borrow_mut().load(&name)?;
+        let mut app = Dmtcp1App::native(n);
+        app.backend = Dmtcp1Backend::Pjrt { step };
+        Ok(app)
+    }
+
+    pub fn state(&self) -> Option<&[f32]> {
+        self.x.as_deref()
+    }
+
+    /// Reference step (mirrors kernels/dmtcp1.py).
+    fn step_native(x: &mut [f32], t: i32, decay: f32) {
+        for (i, v) in x.iter_mut().enumerate() {
+            let phase = t as f32 + i as f32;
+            *v = decay * *v + 0.001 * (0.01 * phase).sin();
+        }
+    }
+}
+
+impl DistributedApp for Dmtcp1App {
+    fn nprocs(&self) -> usize {
+        1
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let t = self.t;
+        let decay = self.decay;
+        match &self.backend {
+            Dmtcp1Backend::Native => {
+                let x = self.x.as_mut().context("proc dead")?;
+                Self::step_native(x, t, decay);
+            }
+            Dmtcp1Backend::Pjrt { step } => {
+                let x = self.x.as_ref().context("proc dead")?;
+                let out = step.run(&[
+                    runtime::lit_f32(x, &[x.len() as i64])?,
+                    runtime::lit_i32(t),
+                ])?;
+                self.x = Some(runtime::to_f32_vec(&out[0])?);
+            }
+        }
+        self.t += 1;
+        Ok(())
+    }
+
+    fn serialize_proc(&self, i: usize) -> Result<Vec<u8>> {
+        ensure!(i == 0, "dmtcp1 has a single process");
+        let x = self.x.as_ref().context("proc dead")?;
+        let mut out = Vec::with_capacity(8 + 4 * x.len());
+        out.extend((self.t as i64).to_le_bytes());
+        for v in x {
+            out.extend(v.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    fn restore_proc(&mut self, i: usize, payload: &[u8]) -> Result<()> {
+        ensure!(i == 0, "dmtcp1 has a single process");
+        ensure!(payload.len() >= 8 && (payload.len() - 8) % 4 == 0, "bad dmtcp1 image");
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&payload[..8]);
+        self.t = i64::from_le_bytes(b) as i32;
+        let n = (payload.len() - 8) / 4;
+        let mut x = Vec::with_capacity(n);
+        for k in 0..n {
+            let o = 8 + 4 * k;
+            x.push(f32::from_le_bytes([payload[o], payload[o + 1], payload[o + 2], payload[o + 3]]));
+        }
+        self.x = Some(x);
+        Ok(())
+    }
+
+    fn proc_healthy(&self, i: usize) -> bool {
+        i == 0 && self.x.is_some()
+    }
+
+    fn kill_proc(&mut self, _i: usize) {
+        self.x = None;
+    }
+
+    fn iteration(&self) -> u64 {
+        self.t as u64
+    }
+
+    fn metric(&self) -> f64 {
+        self.x
+            .as_ref()
+            .map(|x| x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt())
+            .unwrap_or(f64::NAN)
+    }
+
+    fn kind(&self) -> &'static str {
+        "dmtcp1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_and_counts() {
+        let mut app = Dmtcp1App::native(64);
+        for _ in 0..10 {
+            app.step().unwrap();
+        }
+        assert_eq!(app.iteration(), 10);
+        assert!(app.metric().is_finite());
+    }
+
+    #[test]
+    fn checkpoint_restore_bitwise() {
+        let mut app = Dmtcp1App::native(256);
+        for _ in 0..5 {
+            app.step().unwrap();
+        }
+        let img = app.serialize_proc(0).unwrap();
+        let snap = app.state().unwrap().to_vec();
+        for _ in 0..7 {
+            app.step().unwrap();
+        }
+        app.restore_proc(0, &img).unwrap();
+        assert_eq!(app.iteration(), 5);
+        assert_eq!(app.state().unwrap(), &snap[..]);
+        // replay equivalence
+        let mut fresh = Dmtcp1App::native(256);
+        for _ in 0..12 {
+            fresh.step().unwrap();
+        }
+        for _ in 0..7 {
+            app.step().unwrap();
+        }
+        assert_eq!(app.state().unwrap(), fresh.state().unwrap());
+    }
+
+    #[test]
+    fn kill_and_health() {
+        let mut app = Dmtcp1App::native(8);
+        assert!(app.proc_healthy(0));
+        app.kill_proc(0);
+        assert!(!app.proc_healthy(0));
+        assert!(app.step().is_err());
+        assert!(app.serialize_proc(0).is_err());
+    }
+
+    #[test]
+    fn image_size_is_small() {
+        let app = Dmtcp1App::native(256);
+        // ~1 KB data image — the paper's dmtcp1 images are ~3 MB with
+        // libraries; RUNTIME_OVERHEAD_BYTES models that separately.
+        assert_eq!(app.serialize_proc(0).unwrap().len(), 8 + 4 * 256);
+    }
+
+    #[test]
+    fn rejects_bad_images() {
+        let mut app = Dmtcp1App::native(8);
+        assert!(app.restore_proc(0, b"short").is_err());
+        assert!(app.restore_proc(1, &[0u8; 12]).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's benchmark applications, rebuilt as checkpointable
+//! [`crate::dckpt::DistributedApp`]s (DESIGN.md §1 substitution table):
+//!
+//! * [`lu`] — the NAS-MPI-LU stand-in (§7.1 scalability workload): a
+//!   domain-decomposed red-black SOR solver whose sweeps execute either
+//!   through the AOT-compiled Pallas kernels via PJRT (`Backend::Pjrt`)
+//!   or through a native Rust reference (`Backend::Native`, used for
+//!   cross-validation and fast tests).  Per-process state shrinks as
+//!   1/nprocs — the Table 2 behaviour.
+//! * [`dmtcp1`] — the lightweight single-process test app of §7.2/§7.3.2
+//!   (many cheap apps, ~MB images).
+//! * [`ns3`] — the NS-3 `tcp-large-transfer` stand-in of §7.3.1: a
+//!   packet-level TCP discrete-event simulation whose entire simulator
+//!   state (event queue, TCB, byte counters) checkpoints and resumes
+//!   bit-identically — the *cloudification* workload.
+
+pub mod dmtcp1;
+pub mod lu;
+pub mod ns3;

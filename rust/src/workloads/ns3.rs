@@ -1,0 +1,500 @@
+//! NS-3 stand-in: a packet-level TCP large-transfer simulation (§7.3.1).
+//!
+//! The paper's *cloudification* experiment checkpoints the NS-3
+//! `tcp-large-transfer` example mid-run on a desktop and restarts it in
+//! OpenStack — parameters: 1 Gb/s rate, 2 GB transferred over ~30 s,
+//! checkpointed at t = 10 s, image ≈ 260 MB (mostly the NS-3 libraries
+//! carried inside the DMTCP image).
+//!
+//! This module is a real discrete-event TCP simulation (slow start,
+//! congestion avoidance, drop-tail queue, loss recovery) whose complete
+//! simulator state — event queue, congestion state, byte counters and an
+//! NS-3-like in-memory trace buffer — serializes and resumes
+//! **bit-identically**.  The trace buffer's growth stands in for NS-3's
+//! large in-memory footprint so cloudification moves a realistically
+//! sized image.
+
+use crate::dckpt::DistributedApp;
+use anyhow::{ensure, Context, Result};
+use std::collections::BinaryHeap;
+
+const MSS: u64 = 1500;
+
+/// Simulation parameters (defaults = the paper's experiment).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ns3Config {
+    /// Bottleneck link rate, bytes/sec (1 Gb/s).
+    pub link_rate: f64,
+    /// One-way propagation delay (s).
+    pub prop_delay: f64,
+    /// Drop-tail queue capacity in packets.
+    pub queue_pkts: usize,
+    /// Total bytes to transfer (2 GB).
+    pub total_bytes: u64,
+    /// Events processed per `step()` call (the checkpointable quantum).
+    pub events_per_step: usize,
+    /// Trace bytes recorded per processed event (NS-3 pcap/ascii tracing
+    /// analog); bounds the in-memory footprint growth.
+    pub trace_bytes_per_event: usize,
+    /// Cap on the trace buffer (bytes).
+    pub trace_cap: usize,
+}
+
+impl Default for Ns3Config {
+    fn default() -> Self {
+        Ns3Config {
+            link_rate: 1.25e8,
+            prop_delay: 0.010,
+            queue_pkts: 1024,
+            total_bytes: 2_000_000_000,
+            events_per_step: 2048,
+            trace_bytes_per_event: 64,
+            trace_cap: 64 * 1024 * 1024,
+        }
+    }
+}
+
+/// Event kinds, ordered by time through the heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    /// Packet fully received by the sink.
+    Arrival { seq: u64, bytes: u64 },
+    /// ACK received back at the source.
+    Ack { seq: u64, bytes: u64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Event {
+    t: f64,
+    order: u64,
+    kind: EventKind,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap by (t, order)
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.order.cmp(&self.order))
+    }
+}
+
+/// The TCP transfer simulation.
+pub struct Ns3App {
+    pub cfg: Ns3Config,
+    alive: bool,
+    now: f64,
+    next_order: u64,
+    events: BinaryHeap<Event>,
+    // TCP state
+    cwnd: f64,     // bytes
+    ssthresh: f64, // bytes
+    inflight: u64,
+    next_seq: u64,
+    bytes_sent: u64,
+    bytes_acked: u64,
+    losses: u64,
+    /// NewReno: no further decrease until bytes sent at loss time are acked.
+    recover_until: u64,
+    // link state
+    link_free_at: f64,
+    // tracing
+    trace: Vec<u8>,
+    events_processed: u64,
+    steps: u64,
+}
+
+impl Ns3App {
+    pub fn new(cfg: Ns3Config) -> Ns3App {
+        let mut app = Ns3App {
+            cfg,
+            alive: true,
+            now: 0.0,
+            next_order: 0,
+            events: BinaryHeap::new(),
+            cwnd: (10 * MSS) as f64,
+            ssthresh: 1e9,
+            inflight: 0,
+            next_seq: 0,
+            bytes_sent: 0,
+            bytes_acked: 0,
+            losses: 0,
+            recover_until: 0,
+            link_free_at: 0.0,
+            trace: Vec::new(),
+            events_processed: 0,
+            steps: 0,
+        };
+        app.pump();
+        app
+    }
+
+    /// Simulated seconds elapsed.
+    pub fn sim_time(&self) -> f64 {
+        self.now
+    }
+
+    pub fn bytes_acked(&self) -> u64 {
+        self.bytes_acked
+    }
+
+    pub fn losses(&self) -> u64 {
+        self.losses
+    }
+
+    pub fn done(&self) -> bool {
+        self.bytes_acked >= self.cfg.total_bytes
+    }
+
+    pub fn trace_len(&self) -> usize {
+        self.trace.len()
+    }
+
+    /// Transmit while the window allows.
+    fn pump(&mut self) {
+        while self.inflight < self.cwnd as u64 && self.bytes_sent < self.cfg.total_bytes {
+            let bytes = MSS.min(self.cfg.total_bytes - self.bytes_sent);
+            // drop-tail: queue depth = serialized-but-unsent backlog
+            let backlog_pkts =
+                ((self.link_free_at - self.now).max(0.0) * self.cfg.link_rate / MSS as f64) as usize;
+            if backlog_pkts >= self.cfg.queue_pkts {
+                // loss: NewReno fast recovery — at most one multiplicative
+                // decrease per window in flight (the NS-3 example's TCP)
+                if self.bytes_acked >= self.recover_until {
+                    self.losses += 1;
+                    self.ssthresh = (self.cwnd / 2.0).max(MSS as f64);
+                    self.cwnd = self.ssthresh;
+                    self.recover_until = self.bytes_sent;
+                }
+                return;
+            }
+            let tx_start = self.link_free_at.max(self.now);
+            let tx_end = tx_start + bytes as f64 / self.cfg.link_rate;
+            self.link_free_at = tx_end;
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.bytes_sent += bytes;
+            self.inflight += bytes;
+            self.push(tx_end + self.cfg.prop_delay, EventKind::Arrival { seq, bytes });
+        }
+    }
+
+    fn push(&mut self, t: f64, kind: EventKind) {
+        let order = self.next_order;
+        self.next_order += 1;
+        self.events.push(Event { t, order, kind });
+    }
+
+    fn record_trace(&mut self, ev: &Event) {
+        if self.trace.len() + self.cfg.trace_bytes_per_event <= self.cfg.trace_cap {
+            let mut rec = Vec::with_capacity(self.cfg.trace_bytes_per_event);
+            rec.extend(ev.t.to_le_bytes());
+            rec.extend(ev.order.to_le_bytes());
+            match ev.kind {
+                EventKind::Arrival { seq, bytes } | EventKind::Ack { seq, bytes } => {
+                    rec.extend(seq.to_le_bytes());
+                    rec.extend(bytes.to_le_bytes());
+                }
+            }
+            rec.resize(self.cfg.trace_bytes_per_event, 0);
+            self.trace.extend_from_slice(&rec);
+        }
+    }
+
+    /// Process one event; returns false when the queue is empty.
+    fn tick(&mut self) -> bool {
+        let Some(ev) = self.events.pop() else {
+            return false;
+        };
+        self.now = ev.t;
+        self.events_processed += 1;
+        self.record_trace(&ev);
+        match ev.kind {
+            EventKind::Arrival { seq, bytes } => {
+                // sink acks immediately; ack is tiny (ignore its tx time)
+                self.push(self.now + self.cfg.prop_delay, EventKind::Ack { seq, bytes });
+            }
+            EventKind::Ack { seq: _, bytes } => {
+                self.inflight = self.inflight.saturating_sub(bytes);
+                self.bytes_acked += bytes;
+                // window growth
+                if self.cwnd < self.ssthresh {
+                    self.cwnd += MSS as f64; // slow start
+                } else {
+                    self.cwnd += (MSS * MSS) as f64 / self.cwnd; // CA
+                }
+                self.pump();
+            }
+        }
+        true
+    }
+}
+
+impl DistributedApp for Ns3App {
+    fn nprocs(&self) -> usize {
+        1
+    }
+
+    fn step(&mut self) -> Result<()> {
+        ensure!(self.alive, "ns3 process is dead");
+        for _ in 0..self.cfg.events_per_step {
+            if !self.tick() {
+                break;
+            }
+        }
+        self.steps += 1;
+        Ok(())
+    }
+
+    fn serialize_proc(&self, i: usize) -> Result<Vec<u8>> {
+        ensure!(i == 0, "ns3 has a single process");
+        ensure!(self.alive, "ns3 process is dead");
+        let mut out = Vec::with_capacity(128 + self.trace.len() + self.events.len() * 32);
+        let scalars: [u64; 9] = [
+            self.next_order,
+            self.inflight,
+            self.next_seq,
+            self.bytes_sent,
+            self.bytes_acked,
+            self.losses,
+            self.recover_until,
+            self.events_processed,
+            self.steps,
+        ];
+        for s in scalars {
+            out.extend(s.to_le_bytes());
+        }
+        for v in [self.now, self.cwnd, self.ssthresh, self.link_free_at] {
+            out.extend(v.to_le_bytes());
+        }
+        // event queue (sorted for canonical form)
+        let mut evs: Vec<Event> = self.events.iter().cloned().collect();
+        evs.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap().then(a.order.cmp(&b.order)));
+        out.extend((evs.len() as u64).to_le_bytes());
+        for e in evs {
+            out.extend(e.t.to_le_bytes());
+            out.extend(e.order.to_le_bytes());
+            let (tag, seq, bytes) = match e.kind {
+                EventKind::Arrival { seq, bytes } => (0u8, seq, bytes),
+                EventKind::Ack { seq, bytes } => (1u8, seq, bytes),
+            };
+            out.push(tag);
+            out.extend(seq.to_le_bytes());
+            out.extend(bytes.to_le_bytes());
+        }
+        out.extend((self.trace.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.trace);
+        Ok(out)
+    }
+
+    fn restore_proc(&mut self, i: usize, payload: &[u8]) -> Result<()> {
+        ensure!(i == 0, "ns3 has a single process");
+        let mut pos = 0usize;
+        let mut take8 = |pos: &mut usize| -> Result<[u8; 8]> {
+            ensure!(*pos + 8 <= payload.len(), "ns3 image truncated");
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&payload[*pos..*pos + 8]);
+            *pos += 8;
+            Ok(b)
+        };
+        let mut scalars = [0u64; 9];
+        for s in scalars.iter_mut() {
+            *s = u64::from_le_bytes(take8(&mut pos)?);
+        }
+        let now = f64::from_le_bytes(take8(&mut pos)?);
+        let cwnd = f64::from_le_bytes(take8(&mut pos)?);
+        let ssthresh = f64::from_le_bytes(take8(&mut pos)?);
+        let link_free_at = f64::from_le_bytes(take8(&mut pos)?);
+        let n_events = u64::from_le_bytes(take8(&mut pos)?) as usize;
+        let mut events = BinaryHeap::with_capacity(n_events);
+        for _ in 0..n_events {
+            let t = f64::from_le_bytes(take8(&mut pos)?);
+            let order = u64::from_le_bytes(take8(&mut pos)?);
+            ensure!(pos < payload.len(), "ns3 image truncated");
+            let tag = payload[pos];
+            pos += 1;
+            let seq = u64::from_le_bytes(take8(&mut pos)?);
+            let bytes = u64::from_le_bytes(take8(&mut pos)?);
+            let kind = match tag {
+                0 => EventKind::Arrival { seq, bytes },
+                1 => EventKind::Ack { seq, bytes },
+                _ => anyhow::bail!("ns3 image: bad event tag {tag}"),
+            };
+            events.push(Event { t, order, kind });
+        }
+        let trace_len = u64::from_le_bytes(take8(&mut pos)?) as usize;
+        ensure!(pos + trace_len == payload.len(), "ns3 image: trailing bytes");
+        let trace = payload[pos..pos + trace_len].to_vec();
+
+        self.next_order = scalars[0];
+        self.inflight = scalars[1];
+        self.next_seq = scalars[2];
+        self.bytes_sent = scalars[3];
+        self.bytes_acked = scalars[4];
+        self.losses = scalars[5];
+        self.recover_until = scalars[6];
+        self.events_processed = scalars[7];
+        self.steps = scalars[8];
+        self.now = now;
+        self.cwnd = cwnd;
+        self.ssthresh = ssthresh;
+        self.link_free_at = link_free_at;
+        self.events = events;
+        self.trace = trace;
+        self.alive = true;
+        Ok(())
+    }
+
+    fn proc_healthy(&self, i: usize) -> bool {
+        i == 0 && self.alive
+    }
+
+    fn kill_proc(&mut self, _i: usize) {
+        self.alive = false;
+    }
+
+    fn iteration(&self) -> u64 {
+        self.steps
+    }
+
+    fn metric(&self) -> f64 {
+        self.now
+    }
+
+    fn kind(&self) -> &'static str {
+        "ns3"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Ns3Config {
+        Ns3Config {
+            total_bytes: 20_000_000, // 20 MB for fast tests
+            trace_cap: 1 << 20,
+            ..Ns3Config::default()
+        }
+    }
+
+    fn run_to_completion(app: &mut Ns3App, max_steps: usize) {
+        for _ in 0..max_steps {
+            if app.done() {
+                return;
+            }
+            app.step().unwrap();
+        }
+        panic!("transfer did not complete in {max_steps} steps");
+    }
+
+    #[test]
+    fn transfer_completes_with_plausible_throughput() {
+        let mut app = Ns3App::new(small_cfg());
+        run_to_completion(&mut app, 10_000);
+        assert!(app.bytes_acked() >= 20_000_000);
+        let t = app.sim_time();
+        // 20 MB over a 1 Gb/s link with 40 ms RTT: at least the
+        // serialization time, at most a few dozen RTT-bound seconds
+        let min_t = 20_000_000.0 / 1.25e8;
+        assert!(t >= min_t, "sim_time {t} below serialization floor {min_t}");
+        assert!(t < 30.0, "sim_time {t} implausibly slow");
+    }
+
+    #[test]
+    fn paper_scale_transfer_duration() {
+        // the paper's parameters: 2 GB at 1 Gb/s finished in ~30 s
+        let mut app = Ns3App::new(Ns3Config {
+            trace_cap: 1 << 20,
+            ..Ns3Config::default()
+        });
+        run_to_completion(&mut app, 2_000_000);
+        let t = app.sim_time();
+        assert!(t > 12.0 && t < 45.0, "2 GB transfer took {t} sim-seconds");
+    }
+
+    #[test]
+    fn slow_start_then_congestion_avoidance() {
+        let mut app = Ns3App::new(small_cfg());
+        // after enough acks the window must have left initial size
+        app.step().unwrap();
+        app.step().unwrap();
+        assert!(app.cwnd > (10 * MSS) as f64);
+    }
+
+    #[test]
+    fn losses_occur_and_recovery_continues() {
+        // tiny queue forces drops
+        let cfg = Ns3Config {
+            queue_pkts: 4,
+            prop_delay: 0.020,
+            total_bytes: 5_000_000,
+            trace_cap: 1 << 20,
+            ..Ns3Config::default()
+        };
+        let mut app = Ns3App::new(cfg);
+        run_to_completion(&mut app, 100_000);
+        assert!(app.losses() > 0, "expected drop-tail losses");
+        assert!(app.bytes_acked() >= 5_000_000);
+    }
+
+    #[test]
+    fn checkpoint_resume_bit_identical() {
+        let mut a = Ns3App::new(small_cfg());
+        for _ in 0..5 {
+            a.step().unwrap();
+        }
+        let img = a.serialize_proc(0).unwrap();
+        // continue a to completion
+        run_to_completion(&mut a, 10_000);
+        let final_a = (a.sim_time(), a.bytes_acked(), a.losses(), a.events_processed);
+
+        // restore into a fresh instance and continue
+        let mut b = Ns3App::new(small_cfg());
+        b.restore_proc(0, &img).unwrap();
+        run_to_completion(&mut b, 10_000);
+        let final_b = (b.sim_time(), b.bytes_acked(), b.losses(), b.events_processed);
+        assert_eq!(final_a, final_b, "resume diverged from original run");
+        // serialized final states are byte-identical
+        assert_eq!(a.serialize_proc(0).unwrap(), b.serialize_proc(0).unwrap());
+    }
+
+    #[test]
+    fn trace_grows_and_is_capped() {
+        let cfg = Ns3Config {
+            total_bytes: 10_000_000,
+            trace_cap: 4096,
+            ..Ns3Config::default()
+        };
+        let mut app = Ns3App::new(cfg);
+        run_to_completion(&mut app, 10_000);
+        assert!(app.trace_len() <= 4096);
+        assert!(app.trace_len() > 0);
+    }
+
+    #[test]
+    fn kill_blocks_everything() {
+        let mut app = Ns3App::new(small_cfg());
+        app.kill_proc(0);
+        assert!(!app.proc_healthy(0));
+        assert!(app.step().is_err());
+        assert!(app.serialize_proc(0).is_err());
+    }
+
+    #[test]
+    fn corrupt_image_rejected() {
+        let mut app = Ns3App::new(small_cfg());
+        app.step().unwrap();
+        let img = app.serialize_proc(0).unwrap();
+        assert!(app.restore_proc(0, &img[..img.len() - 3]).is_err());
+        assert!(app.restore_proc(0, b"garbage").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! The load-bearing integration test of the three-layer stack:
+//! Pallas kernel (L1) → JAX graph (L2) → HLO text → PJRT CPU (L3)
+//! must agree with the native Rust reference implementation.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise — the
+//! Makefile's `test-rust` target guarantees the ordering).
+
+use cacs::dckpt::DistributedApp;
+use cacs::runtime::{self, Engine};
+use cacs::workloads::lu::{self, Backend, LuApp, LuConfig};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn pjrt_sweep_matches_native_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Rc::new(RefCell::new(Engine::cpu(&dir).unwrap()));
+
+    let cfg = LuConfig::new(4, 8, 8, 1).unwrap();
+    let mut pjrt_app = LuApp::new(cfg.clone(), Backend::pjrt(engine, &cfg).unwrap());
+    let mut native_app = LuApp::new(cfg, Backend::Native);
+
+    for step in 0..5 {
+        pjrt_app.step().unwrap();
+        native_app.step().unwrap();
+        let gp = pjrt_app.gather().unwrap();
+        let gn = native_app.gather().unwrap();
+        for (i, (a, b)) in gp.iter().zip(&gn).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "step {step}, elem {i}: pjrt {a} vs native {b}"
+            );
+        }
+        let (rp, rn) = (pjrt_app.residual(), native_app.residual());
+        assert!(
+            (rp - rn).abs() < 1e-4 * (1.0 + rn.abs()),
+            "step {step}: residual pjrt {rp} vs native {rn}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_multi_proc_matches_single_proc() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Rc::new(RefCell::new(Engine::cpu(&dir).unwrap()));
+
+    let cfg1 = LuConfig::new(4, 8, 8, 1).unwrap();
+    let cfg2 = LuConfig::new(4, 8, 8, 2).unwrap();
+    let mut app1 = LuApp::new(cfg1.clone(), Backend::pjrt(engine.clone(), &cfg1).unwrap());
+    let mut app2 = LuApp::new(cfg2.clone(), Backend::pjrt(engine, &cfg2).unwrap());
+    for _ in 0..4 {
+        app1.step().unwrap();
+        app2.step().unwrap();
+    }
+    let g1 = app1.gather().unwrap();
+    let g2 = app2.gather().unwrap();
+    for (a, b) in g1.iter().zip(&g2) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_checkpoint_restore_resumes_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Rc::new(RefCell::new(Engine::cpu(&dir).unwrap()));
+    let cfg = LuConfig::new(4, 8, 8, 2).unwrap();
+    let mut app = LuApp::new(cfg.clone(), Backend::pjrt(engine.clone(), &cfg).unwrap());
+    for _ in 0..3 {
+        app.step().unwrap();
+    }
+    let images: Vec<Vec<u8>> = (0..2).map(|i| app.serialize_proc(i).unwrap()).collect();
+    for _ in 0..3 {
+        app.step().unwrap();
+    }
+    let final_direct = app.gather().unwrap();
+
+    // restore and replay on a fresh app over the same engine
+    let mut app2 = LuApp::new(cfg.clone(), Backend::pjrt(engine, &cfg).unwrap());
+    for (i, img) in images.iter().enumerate() {
+        app2.restore_proc(i, img).unwrap();
+    }
+    assert_eq!(app2.iteration(), 3);
+    for _ in 0..3 {
+        app2.step().unwrap();
+    }
+    let final_replayed = app2.gather().unwrap();
+    // same backend, same inputs: XLA CPU execution is deterministic
+    assert_eq!(final_direct, final_replayed);
+}
+
+#[test]
+fn pjrt_dmtcp1_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Rc::new(RefCell::new(Engine::cpu(&dir).unwrap()));
+    let mut pjrt = cacs::workloads::dmtcp1::Dmtcp1App::pjrt(engine, 256).unwrap();
+    let mut native = cacs::workloads::dmtcp1::Dmtcp1App::native(256);
+    for _ in 0..20 {
+        pjrt.step().unwrap();
+        native.step().unwrap();
+    }
+    let (a, b) = (pjrt.state().unwrap(), native.state().unwrap());
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn fused_artifact_matches_stepwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu(&dir).unwrap();
+    let Some(spec) = engine.manifest.find_kind_shape("lu_fused", &[4, 8, 8]).cloned() else {
+        eprintln!("SKIP: no lu_fused_4x8x8 artifact");
+        return;
+    };
+    let n_iters = spec.n_iters.unwrap();
+    let fused = engine.load(&spec.name).unwrap();
+
+    let (u0, f) = lu::make_problem(4, 8, 8, 7);
+    let dims = [4i64, 8, 8];
+    let out = fused
+        .run(&[
+            runtime::lit_f32(&u0, &dims).unwrap(),
+            runtime::lit_f32(&f, &dims).unwrap(),
+        ])
+        .unwrap();
+    let u_fused = runtime::to_f32_vec(&out[0]).unwrap();
+    let resid_fused = runtime::scalar_f32(&out[1]).unwrap() as f64;
+
+    let cfg = LuConfig::new(4, 8, 8, 1).unwrap();
+    let mut native = LuApp::new(cfg, Backend::Native);
+    for _ in 0..n_iters {
+        native.step().unwrap();
+    }
+    let u_native = native.gather().unwrap();
+    for (a, b) in u_fused.iter().zip(&u_native) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+    let rn = native.residual();
+    assert!(
+        (resid_fused.sqrt() - rn).abs() < 1e-4 * (1.0 + rn),
+        "fused resid {} vs native {rn}",
+        resid_fused.sqrt()
+    );
+}
+
+#[test]
+fn engine_caches_compiled_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu(&dir).unwrap();
+    assert_eq!(engine.cached(), 0);
+    let name = engine.manifest.artifacts[0].name.clone();
+    let a = engine.load(&name).unwrap();
+    let b = engine.load(&name).unwrap();
+    assert!(Rc::ptr_eq(&a, &b));
+    assert_eq!(engine.cached(), 1);
+    assert!(engine.load("nonexistent").is_err());
+}

@@ -1,0 +1,295 @@
+//! Real-mode service integration: REST + workloads + storage + monitor
+//! composing across module boundaries, including failure injection.
+
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::storage::local::LocalStore;
+use cacs::storage::mem::MemStore;
+use cacs::util::http::Client;
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn svc_mem() -> Arc<CacsService> {
+    CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+    )
+}
+
+fn wait_iter(svc: &CacsService, id: cacs::util::ids::AppId, min: u64) -> u64 {
+    for _ in 0..400 {
+        let it = svc
+            .info(id)
+            .unwrap()
+            .get("iteration")
+            .as_u64()
+            .unwrap_or(0);
+        if it >= min {
+            return it;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("iteration {min} never reached");
+}
+
+#[test]
+fn lu_multi_proc_recovery_preserves_trajectory() {
+    // native-backend LU through the whole service: kill, monitor, restore
+    let svc = svc_mem();
+    let id = svc
+        .submit(Asr::new("lu", WorkloadSpec::Lu { nz: 8, ny: 8, nx: 8 }, 4))
+        .unwrap();
+    wait_iter(&svc, id, 5);
+    let ck = svc.checkpoint(id).unwrap();
+    assert_eq!(ck.per_proc_bytes.len(), 4);
+    wait_iter(&svc, id, ck.iteration + 5);
+    svc.kill_proc(id, 3).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let recovered = svc.monitor_round();
+    assert_eq!(recovered.len(), 1);
+    // app resumed from ckpt iteration and progresses again
+    let it = wait_iter(&svc, id, ck.iteration + 1);
+    assert!(it >= ck.iteration);
+    svc.delete(id).unwrap();
+}
+
+#[test]
+fn ns3_checkpoint_restart_via_service() {
+    let svc = svc_mem();
+    let id = svc
+        .submit(Asr::new("ns3", WorkloadSpec::Ns3 { total_bytes: 50_000_000 }, 1))
+        .unwrap();
+    wait_iter(&svc, id, 3);
+    let ck = svc.checkpoint(id).unwrap();
+    wait_iter(&svc, id, ck.iteration + 3);
+    svc.restart(id, Some(ck.seq)).unwrap();
+    let j = svc.info(id).unwrap();
+    // metric is simulated seconds; must be finite and progressing
+    assert!(j.get("metric").as_f64().unwrap() >= 0.0);
+    svc.delete(id).unwrap();
+}
+
+#[test]
+fn many_apps_concurrently() {
+    // Fig 4-flavoured smoke: 12 concurrent applications on one service
+    let svc = svc_mem();
+    let ids: Vec<_> = (0..12)
+        .map(|k| {
+            svc.submit(Asr::new(
+                &format!("d{k}"),
+                WorkloadSpec::Dmtcp1 { n: 64 + k },
+                1,
+            ))
+            .unwrap()
+        })
+        .collect();
+    for &id in &ids {
+        wait_iter(&svc, id, 3);
+    }
+    // checkpoint all, restart all
+    for &id in &ids {
+        svc.checkpoint(id).unwrap();
+    }
+    for &id in &ids {
+        svc.restart(id, None).unwrap();
+    }
+    assert_eq!(svc.list().len(), 12);
+    for &id in &ids {
+        svc.delete(id).unwrap();
+    }
+    assert!(svc.list().is_empty());
+}
+
+#[test]
+fn local_disk_store_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("cacs-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(LocalStore::new(&dir).unwrap());
+    let svc = CacsService::new(
+        store.clone(),
+        ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+    );
+    let id = svc
+        .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 256 }, 1))
+        .unwrap();
+    wait_iter(&svc, id, 5);
+    let ck = svc.checkpoint(id).unwrap();
+    // image really exists on disk, with the DCKP magic
+    use cacs::storage::ObjectStore;
+    let key = format!("{id}/ckpt-{}/proc-0.img", ck.seq);
+    let bytes = store.get(&key).unwrap();
+    assert!(bytes.starts_with(b"DCKP"));
+    svc.restart(id, None).unwrap();
+    // §5.4: DELETE removes the stored images too
+    svc.delete(id).unwrap();
+    assert!(store.list(&format!("{id}/")).unwrap().is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rest_migration_full_cycle_lu() {
+    // the §7.3.2 script shape, but with a 2-proc LU app whose two images
+    // must both travel
+    let a = svc_mem();
+    let b = svc_mem();
+    let srv_a = rest::serve(a, "127.0.0.1:0", 4).unwrap();
+    let srv_b = rest::serve(b, "127.0.0.1:0", 4).unwrap();
+    let ca = Client::new(&srv_a.addr().to_string());
+    let cb = Client::new(&srv_b.addr().to_string());
+
+    let asr = Json::object([
+        ("name", "lu-m".into()),
+        (
+            "workload",
+            Json::object([
+                ("kind", "lu".into()),
+                ("nz", 4u64.into()),
+                ("ny", 8u64.into()),
+                ("nx", 8u64.into()),
+            ]),
+        ),
+        ("n_vms", 2u64.into()),
+    ]);
+    let src = ca
+        .post("/coordinators", &asr)
+        .unwrap()
+        .json()
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    std::thread::sleep(Duration::from_millis(100));
+    let ck = ca
+        .post(&format!("/coordinators/{src}/checkpoints"), &Json::Null)
+        .unwrap()
+        .json()
+        .unwrap();
+    let seq = ck.get("seq").as_u64().unwrap();
+    let src_iter = ck.get("iteration").as_u64().unwrap();
+
+    let dst = cb
+        .post("/coordinators", &asr)
+        .unwrap()
+        .json()
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    // move both images with raw octet-stream uploads
+    for proc in 0..2usize {
+        let img = ca
+            .get(&format!("/coordinators/{src}/checkpoints/{seq}?proc={proc}"))
+            .unwrap();
+        assert_eq!(img.status, 200);
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(cb.base()).unwrap();
+        let head = format!(
+            "POST /coordinators/{dst}/checkpoints HTTP/1.1\r\nhost: x\r\ncontent-type: application/octet-stream\r\nx-ckpt-seq: {seq}\r\nx-proc-index: {proc}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            img.body.len()
+        );
+        s.write_all(head.as_bytes()).unwrap();
+        s.write_all(&img.body).unwrap();
+        let mut line = String::new();
+        BufReader::new(&mut s).read_line(&mut line).unwrap();
+        assert!(line.contains("201"), "{line}");
+    }
+    let rs = cb
+        .post(&format!("/coordinators/{dst}/checkpoints/{seq}"), &Json::Null)
+        .unwrap();
+    assert_eq!(rs.status, 200, "{}", String::from_utf8_lossy(&rs.body));
+    std::thread::sleep(Duration::from_millis(50));
+    let dj = cb.get(&format!("/coordinators/{dst}")).unwrap().json().unwrap();
+    assert!(dj.get("iteration").as_u64().unwrap() >= src_iter);
+}
+
+#[test]
+fn monitor_thread_recovers_automatically() {
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: Some(Duration::from_millis(50)),
+            ..ServiceConfig::default()
+        },
+    );
+    svc.start_monitor();
+    let id = svc
+        .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 128 }, 1))
+        .unwrap();
+    wait_iter(&svc, id, 3);
+    svc.checkpoint(id).unwrap();
+    svc.kill_proc(id, 0).unwrap();
+    // the background thread must bring it back without help
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(20));
+        if svc.health(id).map(|h| h.iter().all(|&x| x)).unwrap_or(false) {
+            svc.delete(id).unwrap();
+            return;
+        }
+    }
+    panic!("monitor thread never recovered the app");
+}
+
+#[test]
+fn double_restart_and_old_checkpoint_selection() {
+    let svc = svc_mem();
+    let id = svc
+        .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+        .unwrap();
+    wait_iter(&svc, id, 2);
+    let c1 = svc.checkpoint(id).unwrap();
+    wait_iter(&svc, id, c1.iteration + 5);
+    let c2 = svc.checkpoint(id).unwrap();
+    assert!(c2.iteration > c1.iteration);
+    // restart from the *older* image explicitly (§6.2)
+    svc.restart(id, Some(c1.seq)).unwrap();
+    let it = svc.info(id).unwrap().get("iteration").as_u64().unwrap();
+    assert!(it < c2.iteration + 5, "must have rolled back near c1: {it}");
+    // then the latest by default
+    svc.restart(id, None).unwrap();
+    svc.delete(id).unwrap();
+}
+
+#[test]
+fn concurrent_rest_clients() {
+    let svc = svc_mem();
+    let server = rest::serve(svc, "127.0.0.1:0", 8).unwrap();
+    let addr = server.addr().to_string();
+    let mut handles = vec![];
+    for k in 0..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let c = Client::new(&addr);
+            let asr = Json::object([
+                ("name", format!("c{k}").into()),
+                (
+                    "workload",
+                    Json::object([("kind", "dmtcp1".into()), ("n", 64u64.into())]),
+                ),
+                ("n_vms", 1u64.into()),
+            ]);
+            let id = c
+                .post("/coordinators", &asr)
+                .unwrap()
+                .json()
+                .unwrap()
+                .get("id")
+                .as_str()
+                .unwrap()
+                .to_string();
+            std::thread::sleep(Duration::from_millis(50));
+            let ck = c
+                .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
+                .unwrap();
+            assert_eq!(ck.status, 201);
+            id
+        }));
+    }
+    let ids: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let c = Client::new(&addr);
+    let list = c.get("/coordinators").unwrap().json().unwrap();
+    assert_eq!(list.as_arr().unwrap().len(), ids.len());
+}

@@ -1,0 +1,233 @@
+//! Sim-mode integration + property tests: the DES-driven CACS composed
+//! across simcloud/netsim/storage/dckpt/monitor, with randomized
+//! scenarios checking global invariants.
+
+use cacs::coordinator::lifecycle::AppState;
+use cacs::coordinator::simdrv::SimCacs;
+use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::util::propcheck::{forall, Gen};
+
+fn lu(n: usize) -> Asr {
+    Asr::new("lu", WorkloadSpec::Lu { nz: 64, ny: 64, nx: 64 }, n)
+}
+
+#[test]
+fn storage_backends_change_checkpoint_time() {
+    // NFS (one 1 Gb/s NIC) must be slower than Ceph (8 OSDs) for a
+    // 16-proc checkpoint — §3.4's scalability argument for Ceph
+    let run = |ceph: bool| {
+        let mut cacs = SimCacs::new(3);
+        if !ceph {
+            // rebuild world with NFS storage before adding clouds
+            let nfs = cacs::storage::sim::SimStorage::nfs(&mut cacs.world.net, 1.25e8);
+            cacs.set_storage(nfs);
+        }
+        let cloud = cacs.add_snooze(24);
+        let app = cacs.submit(cloud, lu(16)).unwrap();
+        cacs.world.ext.get_mut(&app).unwrap().data_bytes_per_proc = 40e6;
+        cacs.run_until(3600.0);
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(7200.0);
+        let t = cacs.ext(app).unwrap().ckpt_timings.last().unwrap().clone();
+        t.uploaded - t.started
+    };
+    let ceph_time = run(true);
+    let nfs_time = run(false);
+    assert!(
+        nfs_time > 1.5 * ceph_time,
+        "nfs {nfs_time:.1}s should be much slower than ceph {ceph_time:.1}s"
+    );
+}
+
+#[test]
+fn multiple_failures_multiple_recoveries() {
+    let mut cacs = SimCacs::new(5);
+    let cloud = cacs.add_snooze(24);
+    let app = cacs.submit(cloud, lu(8).with_period(120.0)).unwrap();
+    cacs.run_until(600.0);
+    assert_eq!(cacs.state(app), Some(AppState::Running));
+    for round in 0..3 {
+        cacs.inject_vm_failure(app);
+        cacs.run_until(cacs.sim.now() + 1200.0);
+        assert_eq!(
+            cacs.state(app),
+            Some(AppState::Running),
+            "recovery round {round} failed"
+        );
+    }
+    assert_eq!(cacs.ext(app).unwrap().restart_timings.len(), 3);
+    // the app still owns its full cluster
+    assert_eq!(cacs.world.db.get(app).unwrap().vms.len(), 8);
+}
+
+#[test]
+fn mixed_cloud_population() {
+    // apps on both clouds simultaneously; everything must reach RUNNING
+    // and keep its own cloud's VMs
+    let mut cacs = SimCacs::new(7);
+    let snooze = cacs.add_snooze(12);
+    let os = cacs.add_openstack(12);
+    let mut apps = vec![];
+    for k in 0..6 {
+        let cloud = if k % 2 == 0 { snooze } else { os };
+        apps.push((cloud, cacs.submit(cloud, Asr::new(&format!("a{k}"), WorkloadSpec::Dmtcp1 { n: 256 }, 1)).unwrap()));
+    }
+    cacs.run_until(3600.0);
+    for (cloud, app) in apps {
+        assert_eq!(cacs.state(app), Some(AppState::Running), "{app} on cloud {cloud}");
+        assert_eq!(cacs.world.db.get(app).unwrap().cloud_idx, cloud);
+    }
+}
+
+#[test]
+fn property_submissions_always_terminate_sanely() {
+    // randomized scenario: any mix of app sizes either reaches RUNNING
+    // (capacity permitting) or ERROR (insufficient capacity) — never a
+    // stuck intermediate state once the DES drains
+    forall(
+        "sim-apps-settle",
+        12,
+        Gen::pair(Gen::usize(1, 5), Gen::usize(1, 40)),
+        |&(napps, nvms)| {
+            let mut cacs = SimCacs::new((napps * 1000 + nvms) as u64);
+            let cloud = cacs.add_snooze(4); // 96 slots
+            let mut ids = vec![];
+            for k in 0..napps {
+                ids.push(
+                    cacs.submit(
+                        cloud,
+                        Asr::new(&format!("p{k}"), WorkloadSpec::Dmtcp1 { n: 64 }, nvms),
+                    )
+                    .unwrap(),
+                );
+            }
+            cacs.run_until(7200.0);
+            ids.iter().all(|&id| {
+                matches!(
+                    cacs.state(id),
+                    Some(AppState::Running) | Some(AppState::Error)
+                )
+            })
+        },
+    );
+}
+
+#[test]
+fn property_phase_timings_are_ordered() {
+    // for every successfully checkpointed app: started <= local_done <=
+    // uploaded, and restart started <= downloaded <= running
+    forall("sim-timing-order", 10, Gen::usize(1, 32), |&n| {
+        let mut cacs = SimCacs::new(n as u64 + 99);
+        let cloud = cacs.add_snooze(24);
+        let app = match cacs.submit(cloud, lu(if n % 2 == 0 { n.max(2) & !1 } else { 1 })) {
+            Ok(a) => a,
+            Err(_) => return true,
+        };
+        cacs.run_until(3600.0);
+        if cacs.state(app) != Some(AppState::Running) {
+            return true;
+        }
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(7200.0);
+        cacs.trigger_restart(app);
+        cacs.run_until(10800.0);
+        let ext = cacs.ext(app).unwrap();
+        let ck_ok = ext.ckpt_timings.iter().all(|t| {
+            t.started <= t.local_done && t.local_done <= t.uploaded
+        });
+        let rs_ok = ext.restart_timings.iter().all(|t| {
+            t.started <= t.downloaded && t.downloaded <= t.running
+        });
+        ck_ok && rs_ok
+    });
+}
+
+#[test]
+fn property_lifecycle_history_is_legal() {
+    // every transition recorded in any app's history must be legal per
+    // the Fig 2 machine, under randomized fault/checkpoint schedules
+    forall("sim-legal-histories", 8, Gen::usize(0, 1000), |&seed| {
+        let mut cacs = SimCacs::new(seed as u64);
+        let cloud = cacs.add_snooze(12);
+        let app = cacs.submit(cloud, lu(4).with_period(90.0)).unwrap();
+        cacs.run_until(400.0);
+        if seed % 2 == 0 {
+            cacs.inject_vm_failure(app);
+        }
+        if seed % 3 == 0 {
+            cacs.trigger_checkpoint(app);
+        }
+        cacs.run_until(3000.0);
+        if seed % 5 == 0 {
+            cacs.terminate(app);
+            cacs.run_until(cacs.sim.now() + 60.0);
+        }
+        let rec = cacs.world.db.get(app).unwrap();
+        rec.lifecycle
+            .history
+            .windows(2)
+            .all(|w| w[0].1.can_transition_to(w[1].1) && w[0].0 <= w[1].0)
+    });
+}
+
+#[test]
+fn eager_vs_lazy_ablation_holds_at_scale() {
+    let run = |lazy: bool| {
+        let mut cacs = SimCacs::new(21);
+        cacs.world.params.lazy_upload = lazy;
+        let cloud = cacs.add_snooze(24);
+        let app = cacs.submit(cloud, lu(16)).unwrap();
+        cacs.world.ext.get_mut(&app).unwrap().data_bytes_per_proc = 50e6;
+        cacs.run_until(3600.0);
+        let t0 = cacs.sim.now();
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(t0 + 3000.0);
+        // pause = time between entering CHECKPOINTING and re-entering
+        // RUNNING, read from the lifecycle history
+        let rec = cacs.world.db.get(app).unwrap();
+        let hist = &rec.lifecycle.history;
+        let ck_at = hist
+            .iter()
+            .rev()
+            .find(|(_, s)| *s == AppState::Checkpointing)
+            .unwrap()
+            .0;
+        let resume_at = hist
+            .iter()
+            .find(|(t, s)| *s == AppState::Running && *t > ck_at)
+            .unwrap()
+            .0;
+        resume_at - ck_at
+    };
+    let lazy_pause = run(true);
+    let eager_pause = run(false);
+    assert!(
+        eager_pause > lazy_pause,
+        "eager ({eager_pause:.1}s) must pause the app longer than lazy ({lazy_pause:.1}s)"
+    );
+}
+
+#[test]
+fn snooze_detects_faster_than_openstack_polling() {
+    // Snooze pushes failure notifications (~1 s); OpenStack relies on the
+    // in-VM heartbeat (period 5 s) — detection latency must differ
+    let detect = |snooze: bool| {
+        let mut cacs = SimCacs::new(31);
+        let cloud = if snooze { cacs.add_snooze(12) } else { cacs.add_openstack(12) };
+        let app = cacs.submit(cloud, lu(4)).unwrap();
+        cacs.run_until(3600.0);
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        let t_fail = cacs.sim.now();
+        cacs.inject_vm_failure(app);
+        cacs.run_until(t_fail + 600.0);
+        let ext = cacs.ext(app).unwrap();
+        ext.restart_timings.last().map(|t| t.started - t_fail)
+    };
+    let s = detect(true).expect("snooze recovery must start");
+    let o = detect(false).expect("openstack recovery must start");
+    assert!(
+        s < o,
+        "snooze notification ({s:.2}s) must beat openstack polling ({o:.2}s)"
+    );
+}
