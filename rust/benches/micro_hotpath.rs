@@ -1,20 +1,39 @@
 //! Micro-benchmarks of the L3 hot paths (§Perf in EXPERIMENTS.md):
-//! checkpoint image encode/decode (CRC-dominated), JSON parse/serialize,
-//! DES event throughput, netsim reallocation, LU native sweep, and —
-//! when artifacts are present — the PJRT sweep for the L1/L2 path.
+//! checkpoint image encode/decode (CRC-dominated), the streaming
+//! zero-copy image pipeline (serial vs parallel CRC), JSON
+//! parse/serialize, DES event throughput, netsim reallocation, LU native
+//! sweep, and — when artifacts are present — the PJRT sweep for the
+//! L1/L2 path.
+//!
+//! `--json <path>` additionally writes the rows as machine-readable
+//! JSON (the repo's `BENCH_*.json` perf-trajectory format).
 
 use cacs::dckpt::image::{self, ImageHeader};
-use cacs::simexec::Sim;
-use cacs::util::benchkit::{bench, fmt_bytes, fmt_secs, Table};
-use cacs::util::json;
-use cacs::workloads::lu::{self, Backend, LuApp, LuConfig};
 use cacs::dckpt::DistributedApp;
+use cacs::simexec::Sim;
+use cacs::util::args::Args;
+use cacs::util::benchkit::{bench, fmt_bytes, fmt_secs, Table};
+use cacs::util::json::{self, Json};
+use cacs::util::pool::ThreadPool;
+use cacs::workloads::lu::{self, Backend, LuApp, LuConfig};
+
+fn json_row(path: &str, work: &str, time_s: f64, throughput: f64, unit: &str) -> Json {
+    Json::object([
+        ("path", path.into()),
+        ("work", work.into()),
+        ("time_s", time_s.into()),
+        ("throughput", throughput.into()),
+        ("unit", unit.into()),
+    ])
+}
 
 fn main() {
+    let args = Args::from_env();
     println!("# L3 hot-path micro-benchmarks\n");
     let mut t = Table::new(["path", "work", "time/iter", "throughput"]);
+    let mut rows: Vec<Json> = vec![];
 
-    // 1. image encode (64 MB payload)
+    let payload_bytes = (64u64 << 20) as f64;
     let payload = vec![0xA5u8; 64 << 20];
     let hdr = ImageHeader {
         app: "app-1".into(),
@@ -24,31 +43,73 @@ fn main() {
         iteration: 10,
         payload_len: payload.len() as u64,
     };
+    // shorthand: table row + json row for byte-throughput paths
+    let byte_row = |t: &mut Table, rows: &mut Vec<Json>, path: &str, mean: f64| {
+        t.row([
+            path.into(),
+            "64 MB".into(),
+            fmt_secs(mean),
+            format!("{}/s", fmt_bytes(payload_bytes / mean)),
+        ]);
+        rows.push(json_row(path, "64 MB", mean, payload_bytes / mean, "B/s"));
+    };
+
+    // 1. image encode (64 MB payload, legacy whole-buffer wrapper)
     let s = bench(1, 5, || {
         let data = image::encode(&hdr, &payload);
         std::hint::black_box(data.len());
     });
-    t.row([
-        "image::encode".into(),
-        "64 MB".into(),
-        fmt_secs(s.mean),
-        format!("{}/s", fmt_bytes(64e6 * 1.048576 / s.mean)),
-    ]);
+    byte_row(&mut t, &mut rows, "image::encode", s.mean);
 
-    // 2. image decode + CRC verify
+    // 2. image decode + CRC verify (copying) and zero-copy decode_ref
     let encoded = image::encode(&hdr, &payload);
     let s = bench(1, 5, || {
         let (_h, p) = image::decode(&encoded).unwrap();
         std::hint::black_box(p.len());
     });
-    t.row([
-        "image::decode+crc".into(),
-        "64 MB".into(),
-        fmt_secs(s.mean),
-        format!("{}/s", fmt_bytes(64e6 * 1.048576 / s.mean)),
-    ]);
+    byte_row(&mut t, &mut rows, "image::decode+crc", s.mean);
 
-    // 3. JSON parse of a coordinator listing (1000 records)
+    let s = bench(1, 5, || {
+        let (_h, p) = image::decode_ref(&encoded).unwrap();
+        std::hint::black_box(p.len());
+    });
+    byte_row(&mut t, &mut rows, "image::decode_ref", s.mean);
+
+    // 3. streaming encode — cold (fresh output buffer every image) vs
+    //    warm (sink reused, as a store writer would be); parallel CRC
+    let pool = ThreadPool::shared();
+    let s = bench(1, 5, || {
+        let mut w = image::ImageWriter::new(Vec::new(), &hdr).unwrap();
+        w.write_payload_parallel(&payload, pool).unwrap();
+        let (buf, _) = w.finish().unwrap();
+        std::hint::black_box(buf.len());
+    });
+    byte_row(&mut t, &mut rows, "stream encode (cold)", s.mean);
+
+    let mut warm_buf: Vec<u8> = Vec::with_capacity(payload.len() + 1024);
+    let s = bench(1, 5, || {
+        warm_buf.clear();
+        let mut w = image::ImageWriter::new(&mut warm_buf, &hdr).unwrap();
+        w.write_payload_parallel(&payload, pool).unwrap();
+        w.finish().unwrap();
+        std::hint::black_box(warm_buf.len());
+    });
+    byte_row(&mut t, &mut rows, "stream encode (warm)", s.mean);
+
+    // 4. CRC-32 serial vs parallel shards (the encode path's dominant cost)
+    let s = bench(1, 5, || {
+        std::hint::black_box(image::crc32(&payload));
+    });
+    byte_row(&mut t, &mut rows, "crc32 (serial)", s.mean);
+
+    let s = bench(1, 5, || {
+        std::hint::black_box(image::crc32_parallel(&payload, pool));
+    });
+    // fixed label: the shard count varies by host (min(pool, payload/4MB))
+    // and a stable path key keeps BENCH_hotpath.json rows comparable
+    byte_row(&mut t, &mut rows, "crc32 (parallel)", s.mean);
+
+    // 5. JSON parse of a coordinator listing (1000 records)
     let doc = json::Json::Arr(
         (0..1000)
             .map(|i| {
@@ -72,8 +133,15 @@ fn main() {
         fmt_secs(s.mean),
         format!("{}/s", fmt_bytes(text.len() as f64 / s.mean)),
     ]);
+    rows.push(json_row(
+        "json::parse",
+        &format!("{} KB", text.len() / 1024),
+        s.mean,
+        text.len() as f64 / s.mean,
+        "B/s",
+    ));
 
-    // 4. DES event throughput (self-rescheduling chains)
+    // 6. DES event throughput (self-rescheduling chains)
     let s = bench(1, 5, || {
         let mut sim: Sim<u64> = Sim::new();
         fn tick(s: &mut Sim<u64>, w: &mut u64, n: u32) {
@@ -95,8 +163,9 @@ fn main() {
         fmt_secs(s.mean),
         format!("{:.1} M events/s", 100_100.0 / s.mean / 1e6),
     ]);
+    rows.push(json_row("simexec events", "100k events", s.mean, 100_100.0 / s.mean, "events/s"));
 
-    // 5. netsim reallocation under churn
+    // 7. netsim reallocation under churn
     let s = bench(1, 5, || {
         let mut net = cacs::netsim::NetSim::new();
         let links: Vec<_> = (0..32).map(|i| net.add_link(&format!("l{i}"), 1e9)).collect();
@@ -116,8 +185,9 @@ fn main() {
         fmt_secs(s.mean),
         format!("{:.0} reallocs/s", 500.0 / s.mean),
     ]);
+    rows.push(json_row("netsim churn", "500 flows/32 links", s.mean, 500.0 / s.mean, "reallocs/s"));
 
-    // 6. LU native sweep (the L3-side oracle)
+    // 8. LU native sweep (the L3-side oracle)
     let cfg = LuConfig::new(32, 32, 32, 1).unwrap();
     let mut app = LuApp::new(cfg, Backend::Native);
     let cells = 32usize.pow(3) as f64;
@@ -131,8 +201,9 @@ fn main() {
         fmt_secs(s.mean),
         format!("{:.1} Mcell/s", cells / s.mean / 1e6),
     ]);
+    rows.push(json_row("lu native step", "32^3 grid", s.mean, cells / s.mean, "cells/s"));
 
-    // 7. PJRT sweep when artifacts exist (L1/L2 path)
+    // 9. PJRT sweep when artifacts exist (L1/L2 path)
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         use std::cell::RefCell;
@@ -149,6 +220,7 @@ fn main() {
             fmt_secs(s.mean),
             format!("{:.1} Mcell/s", cells / s.mean / 1e6),
         ]);
+        rows.push(json_row("lu pjrt step", "32^3 grid", s.mean, cells / s.mean, "cells/s"));
         // fused fast path (L2 perf optimization)
         if engine.borrow().manifest.find_kind_shape("lu_fused", &[32, 32, 32]).is_some() {
             let fused = {
@@ -179,10 +251,31 @@ fn main() {
                 fmt_secs(s.mean / n_iters),
                 format!("{:.1} Mcell/s", cells * n_iters / s.mean / 1e6),
             ]);
+            rows.push(json_row(
+                "lu pjrt fused",
+                &format!("32^3 x {n_iters} iters"),
+                s.mean / n_iters,
+                cells * n_iters / s.mean,
+                "cells/s",
+            ));
         }
     } else {
         eprintln!("note: artifacts/ missing — skipping PJRT rows");
     }
 
     t.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::object([
+            ("bench", "micro_hotpath".into()),
+            ("rows", Json::Arr(rows)),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

@@ -17,9 +17,42 @@
 //! works on VMs with no NS-3 installed (§7.3.1: "the NS-3 libraries were
 //! transported ... as part of the checkpoint images").  Serialization can
 //! include that constant via `with_runtime_overhead`.
+//!
+//! # Streaming (§Perf iteration 2)
+//!
+//! The hot path is no longer "build the whole wire image in memory".
+//! [`ImageWriter`] pushes the header and then payload *chunks* straight
+//! into any [`std::io::Write`] sink (a store's streaming writer, a file,
+//! a `Vec`), accumulating the CRC incrementally as bytes pass through;
+//! [`ImageReader`]/[`decode_ref`] parse the structure and hand back a
+//! *borrowed* payload slice after verifying the CRC in place.  Three
+//! invariants keep it honest:
+//!
+//! * **Wire compatibility** — the bytes an [`ImageWriter`] emits are
+//!   byte-identical to v1 [`encode`] output ([`encode`]/[`decode`] are
+//!   now thin wrappers over the streaming core, so there is exactly one
+//!   copy of the format logic).
+//! * **Zero materialization** — the runtime-overhead padding is streamed
+//!   from a static zero page and its CRC contribution is grafted in via
+//!   [`crc32_combine`] (memoized for [`RUNTIME_OVERHEAD_BYTES`]), so the
+//!   padding is never allocated, copied, or even re-hashed per image.
+//! * **Chunk/shard equivalence** — the incremental [`Crc32`] hasher over
+//!   any chunking, and parallel per-shard CRCs merged with
+//!   [`crc32_combine`], produce exactly the one-shot [`crc32`] value
+//!   (property-tested in `tests/props_substrates.rs`).  Large payloads
+//!   are sharded across [`ThreadPool::shared`] workers.
+//!
+//! Perf iteration 1 made the CRC itself slice-by-8; iteration 2 removes
+//! the two full-payload copies around it (wire-buffer build + decode
+//! copy-out) and parallelizes the remaining CRC pass, so encode
+//! throughput tracks memory bandwidth rather than single-core CRC speed.
 
 use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
 use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, OnceLock};
 
 pub const MAGIC: &[u8; 4] = b"DCKP";
 pub const VERSION: u16 = 1;
@@ -27,6 +60,15 @@ pub const VERSION: u16 = 1;
 /// Modelled size of the libraries/runtime a DMTCP image carries
 /// (Table 2 fit: sizes ≈ 645 MB/n + ~10 MB).
 pub const RUNTIME_OVERHEAD_BYTES: usize = 10 * 1024 * 1024;
+
+/// Payloads at or above this are CRC-hashed in parallel shards; below
+/// it, shard dispatch overhead beats the win.
+pub const PARALLEL_CRC_MIN_BYTES: usize = 4 * 1024 * 1024;
+
+/// Static zero page streamed for runtime-overhead padding (never
+/// allocate padding bytes per image).
+const ZERO_PAGE_BYTES: usize = 64 * 1024;
+static ZERO_PAGE: [u8; ZERO_PAGE_BYTES] = [0u8; ZERO_PAGE_BYTES];
 
 /// Image metadata header.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,11 +105,9 @@ impl ImageHeader {
     }
 }
 
-/// CRC-32 (IEEE 802.3), slice-by-8 (§Perf iteration 1: the checkpoint
-/// write path is CRC-dominated; slicing processes 8 bytes per step).
-pub fn crc32(data: &[u8]) -> u32 {
-    static TABLES: std::sync::OnceLock<[[u32; 256]; 8]> = std::sync::OnceLock::new();
-    let tables = TABLES.get_or_init(|| {
+fn crc_tables() -> &'static [[u32; 256]; 8] {
+    static TABLES: OnceLock<[[u32; 256]; 8]> = OnceLock::new();
+    TABLES.get_or_init(|| {
         let mut t = [[0u32; 256]; 8];
         for i in 0..256usize {
             let mut c = i as u32;
@@ -84,8 +124,13 @@ pub fn crc32(data: &[u8]) -> u32 {
             }
         }
         t
-    });
-    let mut crc = 0xFFFFFFFFu32;
+    })
+}
+
+/// Advance a raw (pre/post-conditioning applied by the caller) CRC state
+/// over `data`, slice-by-8.
+fn crc32_advance(mut crc: u32, data: &[u8]) -> u32 {
+    let tables = crc_tables();
     let mut chunks = data.chunks_exact(8);
     for ch in &mut chunks {
         let lo = u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]) ^ crc;
@@ -102,74 +147,401 @@ pub fn crc32(data: &[u8]) -> u32 {
     for &b in chunks.remainder() {
         crc = tables[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
     }
-    crc ^ 0xFFFFFFFF
+    crc
 }
 
-/// Encode an image.
+/// CRC-32 (IEEE 802.3), slice-by-8 (§Perf iteration 1: the checkpoint
+/// write path is CRC-dominated; slicing processes 8 bytes per step).
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_advance(0xFFFFFFFF, data) ^ 0xFFFFFFFF
+}
+
+/// Incremental CRC-32 hasher over the same slice-by-8 tables as
+/// [`crc32`]: feeding any chunking of a buffer yields the one-shot value.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Crc32 {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFFFFFF }
+    }
+
+    /// Absorb the next payload chunk.
+    pub fn update(&mut self, data: &[u8]) {
+        self.state = crc32_advance(self.state, data);
+    }
+
+    /// Absorb `n` zero bytes without materializing them — O(1) for the
+    /// memoized [`RUNTIME_OVERHEAD_BYTES`] length, otherwise an O(n)
+    /// hash over the static zero page, merged in with one combine.
+    pub fn update_zeros(&mut self, n: usize) {
+        self.combine(crc32_zeros(n), n as u64);
+    }
+
+    /// Append a chunk whose finalized CRC (`crc2` over `len2` bytes) was
+    /// computed independently — the merge step of the parallel path.
+    pub fn combine(&mut self, crc2: u32, len2: u64) {
+        self.state = crc32_combine(self.finalize(), crc2, len2) ^ 0xFFFFFFFF;
+    }
+
+    /// The CRC of everything absorbed so far (does not consume; the
+    /// hasher can keep absorbing).
+    pub fn finalize(&self) -> u32 {
+        self.state ^ 0xFFFFFFFF
+    }
+}
+
+fn gf2_matrix_times(mat: &[u32; 32], mut vec: u32) -> u32 {
+    let mut sum = 0u32;
+    let mut i = 0usize;
+    while vec != 0 {
+        if vec & 1 != 0 {
+            sum ^= mat[i];
+        }
+        vec >>= 1;
+        i += 1;
+    }
+    sum
+}
+
+fn gf2_matrix_square(square: &mut [u32; 32], mat: &[u32; 32]) {
+    for n in 0..32 {
+        square[n] = gf2_matrix_times(mat, mat[n]);
+    }
+}
+
+/// Combine two independently computed CRCs: given `crc1 = crc32(A)` and
+/// `crc2 = crc32(B)` with `len2 = B.len()`, returns `crc32(A ‖ B)` in
+/// O(log len2) GF(2) matrix operations (zlib's `crc32_combine`).  This
+/// is what lets large payloads be hashed in parallel shards.
+pub fn crc32_combine(crc1: u32, crc2: u32, len2: u64) -> u32 {
+    if len2 == 0 {
+        return crc1;
+    }
+    let mut even = [0u32; 32]; // even-power-of-two zeros operator
+    let mut odd = [0u32; 32]; // odd-power-of-two zeros operator
+
+    // operator for one zero bit
+    odd[0] = 0xEDB88320; // CRC-32 polynomial, reflected
+    let mut row = 1u32;
+    for n in 1..32 {
+        odd[n] = row;
+        row <<= 1;
+    }
+    gf2_matrix_square(&mut even, &odd); // two zero bits
+    gf2_matrix_square(&mut odd, &even); // four zero bits
+
+    // apply len2 zero *bytes* to crc1 (first square below yields the
+    // eight-zero-bit = one-zero-byte operator)
+    let mut crc1 = crc1;
+    let mut len2 = len2;
+    loop {
+        gf2_matrix_square(&mut even, &odd);
+        if len2 & 1 != 0 {
+            crc1 = gf2_matrix_times(&even, crc1);
+        }
+        len2 >>= 1;
+        if len2 == 0 {
+            break;
+        }
+        gf2_matrix_square(&mut odd, &even);
+        if len2 & 1 != 0 {
+            crc1 = gf2_matrix_times(&odd, crc1);
+        }
+        len2 >>= 1;
+    }
+    crc1 ^ crc2
+}
+
+fn hash_zeros(n: usize) -> u32 {
+    let mut state = 0xFFFFFFFFu32;
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(ZERO_PAGE_BYTES);
+        state = crc32_advance(state, &ZERO_PAGE[..take]);
+        left -= take;
+    }
+    state ^ 0xFFFFFFFF
+}
+
+/// CRC-32 of `n` zero bytes.  The [`RUNTIME_OVERHEAD_BYTES`] length is
+/// memoized so every padded image after the first pays O(1) instead of
+/// re-hashing 10 MB of zeros.
+pub fn crc32_zeros(n: usize) -> u32 {
+    if n == RUNTIME_OVERHEAD_BYTES {
+        static OVERHEAD_CRC: OnceLock<u32> = OnceLock::new();
+        *OVERHEAD_CRC.get_or_init(|| hash_zeros(RUNTIME_OVERHEAD_BYTES))
+    } else {
+        hash_zeros(n)
+    }
+}
+
+/// CRC-32 of `data` computed in shards on `pool` and merged with
+/// [`crc32_combine`]; falls back to serial below
+/// [`PARALLEL_CRC_MIN_BYTES`] or when the pool has a single worker.
+pub fn crc32_parallel(data: &[u8], pool: &ThreadPool) -> u32 {
+    if data.len() < PARALLEL_CRC_MIN_BYTES || pool.size() < 2 {
+        return crc32(data);
+    }
+    // at least 2 shards once past the threshold, one per ~4 MiB after
+    let nshards = (data.len() / PARALLEL_CRC_MIN_BYTES).clamp(2, pool.size());
+    let shard = (data.len() + nshards - 1) / nshards;
+    let results: Arc<Vec<AtomicU32>> = Arc::new((0..nshards).map(|_| AtomicU32::new(0)).collect());
+    let base = data.as_ptr() as usize;
+    let items: Vec<(usize, usize, usize)> = (0..nshards)
+        .map(|i| {
+            let start = i * shard;
+            (i, base + start, shard.min(data.len() - start))
+        })
+        .collect();
+    let slot = results.clone();
+    // SAFETY: `scatter` blocks until every job has run to completion, so
+    // `data` strictly outlives the raw slices the workers reconstruct;
+    // shards are disjoint and read-only.
+    pool.scatter(items, move |(i, ptr, len)| {
+        let bytes = unsafe { std::slice::from_raw_parts(ptr as *const u8, len) };
+        slot[i].store(crc32(bytes), Ordering::Release);
+    });
+    let mut acc = Crc32::new();
+    for (i, r) in results.iter().enumerate() {
+        let len = shard.min(data.len() - i * shard);
+        acc.combine(r.load(Ordering::Acquire), len as u64);
+    }
+    acc.finalize()
+}
+
+/// Push-based streaming encoder: emits the header up front, payload in
+/// caller-sized chunks (CRC accumulated as bytes pass through), the CRC
+/// trailer on [`finish`](ImageWriter::finish).  The wire bytes are
+/// identical to [`encode`] for the same header/payload.
+pub struct ImageWriter<W: Write> {
+    out: W,
+    crc: Crc32,
+    declared: u64,
+    written: u64,
+    wire: u64,
+}
+
+impl<W: Write> ImageWriter<W> {
+    /// Write magic/version/header for an image whose payload will be
+    /// exactly `header.payload_len` streamed bytes.
+    pub fn new(mut out: W, header: &ImageHeader) -> Result<ImageWriter<W>> {
+        let hjson = header.to_json().to_string().into_bytes();
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&(hjson.len() as u32).to_le_bytes())?;
+        out.write_all(&hjson)?;
+        Ok(ImageWriter {
+            out,
+            crc: Crc32::new(),
+            declared: header.payload_len,
+            written: 0,
+            wire: (10 + hjson.len()) as u64,
+        })
+    }
+
+    /// Stream the next payload chunk, hashing it serially in-line.
+    pub fn write_payload(&mut self, chunk: &[u8]) -> Result<()> {
+        self.crc.update(chunk);
+        self.out.write_all(chunk)?;
+        self.written += chunk.len() as u64;
+        self.wire += chunk.len() as u64;
+        Ok(())
+    }
+
+    /// Stream a payload chunk whose CRC is computed in parallel shards
+    /// on `pool` before the serial write; wire bytes are identical to
+    /// [`write_payload`](ImageWriter::write_payload).
+    pub fn write_payload_parallel(&mut self, chunk: &[u8], pool: &ThreadPool) -> Result<()> {
+        self.crc.combine(crc32_parallel(chunk, pool), chunk.len() as u64);
+        self.out.write_all(chunk)?;
+        self.written += chunk.len() as u64;
+        self.wire += chunk.len() as u64;
+        Ok(())
+    }
+
+    /// Stream `n` zero bytes of payload (runtime-overhead padding) from
+    /// the static zero page — the padding is never allocated, and its
+    /// CRC contribution is a memoized O(1) combine for the common
+    /// [`RUNTIME_OVERHEAD_BYTES`] length.
+    pub fn write_zeros(&mut self, n: usize) -> Result<()> {
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(ZERO_PAGE_BYTES);
+            self.out.write_all(&ZERO_PAGE[..take])?;
+            left -= take;
+        }
+        self.crc.update_zeros(n);
+        self.written += n as u64;
+        self.wire += n as u64;
+        Ok(())
+    }
+
+    /// Payload bytes streamed so far.
+    pub fn payload_written(&self) -> u64 {
+        self.written
+    }
+
+    /// Write the CRC trailer and return `(sink, total wire bytes)`.
+    /// Fails if the streamed payload length differs from the declared
+    /// `payload_len` (the header is already on the wire and cannot be
+    /// amended).
+    pub fn finish(mut self) -> Result<(W, u64)> {
+        if self.written != self.declared {
+            bail!(
+                "image payload length mismatch: streamed {}, declared {}",
+                self.written,
+                self.declared
+            );
+        }
+        self.out.write_all(&self.crc.finalize().to_le_bytes())?;
+        Ok((self.out, self.wire + 4))
+    }
+}
+
+/// Zero-copy view of an encoded image: [`new`](ImageReader::new) parses
+/// and validates the structure (magic, version, header JSON, lengths)
+/// without hashing; [`verify`](ImageReader::verify) checks the CRC over
+/// the borrowed payload in place.
+pub struct ImageReader<'a> {
+    header: ImageHeader,
+    payload: &'a [u8],
+    stored_crc: u32,
+}
+
+impl<'a> ImageReader<'a> {
+    pub fn new(data: &'a [u8]) -> Result<ImageReader<'a>> {
+        if data.len() < 14 {
+            bail!("image truncated: {} bytes", data.len());
+        }
+        if &data[0..4] != MAGIC {
+            bail!("bad magic");
+        }
+        let version = u16::from_le_bytes([data[4], data[5]]);
+        if version != VERSION {
+            bail!("unsupported image version {version}");
+        }
+        let hlen = u32::from_le_bytes([data[6], data[7], data[8], data[9]]) as usize;
+        let hstart = 10;
+        let hend = hstart + hlen;
+        if data.len() < hend + 4 {
+            bail!("image truncated in header");
+        }
+        let htext = std::str::from_utf8(&data[hstart..hend]).context("header utf-8")?;
+        let header = ImageHeader::from_json(
+            &crate::util::json::parse(htext).map_err(|e| anyhow::anyhow!("header json: {e}"))?,
+        )?;
+        let plen = header.payload_len as usize;
+        let pend = hend + plen;
+        if data.len() != pend + 4 {
+            bail!(
+                "image size mismatch: have {}, expected {}",
+                data.len(),
+                pend + 4
+            );
+        }
+        let stored_crc =
+            u32::from_le_bytes([data[pend], data[pend + 1], data[pend + 2], data[pend + 3]]);
+        Ok(ImageReader { header, payload: &data[hend..pend], stored_crc })
+    }
+
+    pub fn header(&self) -> &ImageHeader {
+        &self.header
+    }
+
+    /// The payload, borrowed from the encoded buffer (no copy).
+    pub fn payload(&self) -> &'a [u8] {
+        self.payload
+    }
+
+    pub fn stored_crc(&self) -> u32 {
+        self.stored_crc
+    }
+
+    /// Verify the payload CRC serially.
+    pub fn verify(&self) -> Result<()> {
+        self.check(crc32(self.payload))
+    }
+
+    /// Verify the payload CRC in parallel shards on `pool`.
+    pub fn verify_parallel(&self, pool: &ThreadPool) -> Result<()> {
+        self.check(crc32_parallel(self.payload, pool))
+    }
+
+    /// Verify, sharding across [`ThreadPool::shared`] when the payload
+    /// is large enough to benefit.
+    pub fn verify_auto(&self) -> Result<()> {
+        if self.payload.len() >= PARALLEL_CRC_MIN_BYTES {
+            self.verify_parallel(ThreadPool::shared())
+        } else {
+            self.verify()
+        }
+    }
+
+    fn check(&self, got: u32) -> Result<()> {
+        let want = self.stored_crc;
+        if want != got {
+            bail!("payload crc mismatch: stored {want:#x}, computed {got:#x}");
+        }
+        Ok(())
+    }
+}
+
+fn wire_capacity_hint(header: &ImageHeader) -> usize {
+    // magic + version + hlen + (generous) header JSON + payload + crc
+    4 + 2 + 4 + 256 + header.payload_len as usize + 4
+}
+
+/// Encode an image (thin wrapper over [`ImageWriter`] into a `Vec`).
 pub fn encode(header: &ImageHeader, payload: &[u8]) -> Vec<u8> {
     debug_assert_eq!(header.payload_len as usize, payload.len());
-    let hjson = header.to_json().to_string().into_bytes();
-    let mut out = Vec::with_capacity(4 + 2 + 4 + hjson.len() + payload.len() + 4);
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
-    out.extend_from_slice(&(hjson.len() as u32).to_le_bytes());
-    out.extend_from_slice(&hjson);
-    out.extend_from_slice(payload);
-    out.extend_from_slice(&crc32(payload).to_le_bytes());
-    out
+    let mut w = ImageWriter::new(Vec::with_capacity(wire_capacity_hint(header)), header)
+        .expect("Vec sink cannot fail");
+    w.write_payload(payload).expect("Vec sink cannot fail");
+    let (buf, _) = w.finish().expect("encode: payload length mismatch");
+    buf
 }
 
-/// Encode with `RUNTIME_OVERHEAD_BYTES` of modelled library payload
+/// Encode with [`RUNTIME_OVERHEAD_BYTES`] of modelled library payload
 /// appended (zeros; callers who care about wire size use this so image
-/// sizes match the paper's `data/n + c` shape).
+/// sizes match the paper's `data/n + c` shape).  The padding is streamed
+/// from the zero page, never materialized.
 pub fn encode_with_runtime_overhead(header: &ImageHeader, payload: &[u8]) -> Vec<u8> {
-    let mut padded = Vec::with_capacity(payload.len() + RUNTIME_OVERHEAD_BYTES);
-    padded.extend_from_slice(payload);
-    padded.resize(payload.len() + RUNTIME_OVERHEAD_BYTES, 0);
-    let hdr = ImageHeader { payload_len: padded.len() as u64, ..header.clone() };
-    encode(&hdr, &padded)
+    let hdr = ImageHeader {
+        payload_len: (payload.len() + RUNTIME_OVERHEAD_BYTES) as u64,
+        ..header.clone()
+    };
+    let mut w = ImageWriter::new(Vec::with_capacity(wire_capacity_hint(&hdr)), &hdr)
+        .expect("Vec sink cannot fail");
+    w.write_payload(payload).expect("Vec sink cannot fail");
+    w.write_zeros(RUNTIME_OVERHEAD_BYTES).expect("Vec sink cannot fail");
+    let (buf, _) = w.finish().expect("encode: payload length mismatch");
+    buf
+}
+
+/// Decode and verify an image without copying: returns the header and a
+/// payload slice borrowed from `data`.
+pub fn decode_ref(data: &[u8]) -> Result<(ImageHeader, &[u8])> {
+    let r = ImageReader::new(data)?;
+    r.verify()?;
+    let ImageReader { header, payload, .. } = r;
+    Ok((header, payload))
 }
 
 /// Decode and verify an image; returns (header, payload).
 /// The runtime-overhead padding, if present, is the caller's to strip
 /// (its length is `payload_len - original`; workloads know their sizes).
 pub fn decode(data: &[u8]) -> Result<(ImageHeader, Vec<u8>)> {
-    if data.len() < 14 {
-        bail!("image truncated: {} bytes", data.len());
-    }
-    if &data[0..4] != MAGIC {
-        bail!("bad magic");
-    }
-    let version = u16::from_le_bytes([data[4], data[5]]);
-    if version != VERSION {
-        bail!("unsupported image version {version}");
-    }
-    let hlen = u32::from_le_bytes([data[6], data[7], data[8], data[9]]) as usize;
-    let hstart = 10;
-    let hend = hstart + hlen;
-    if data.len() < hend + 4 {
-        bail!("image truncated in header");
-    }
-    let htext = std::str::from_utf8(&data[hstart..hend]).context("header utf-8")?;
-    let header = ImageHeader::from_json(
-        &crate::util::json::parse(htext).map_err(|e| anyhow::anyhow!("header json: {e}"))?,
-    )?;
-    let plen = header.payload_len as usize;
-    let pend = hend + plen;
-    if data.len() != pend + 4 {
-        bail!(
-            "image size mismatch: have {}, expected {}",
-            data.len(),
-            pend + 4
-        );
-    }
-    let payload = data[hend..pend].to_vec();
-    let want = u32::from_le_bytes([data[pend], data[pend + 1], data[pend + 2], data[pend + 3]]);
-    let got = crc32(&payload);
-    if want != got {
-        bail!("payload crc mismatch: stored {want:#x}, computed {got:#x}");
-    }
-    Ok((header, payload))
+    let (header, payload) = decode_ref(data)?;
+    Ok((header, payload.to_vec()))
 }
 
 /// Strip the runtime-overhead padding appended by
@@ -206,12 +578,101 @@ mod tests {
     }
 
     #[test]
+    fn crc32_incremental_matches_oneshot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(70_001).collect();
+        let mut h = Crc32::new();
+        for chunk in data.chunks(777) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), crc32(&data));
+    }
+
+    #[test]
+    fn crc32_combine_splits() {
+        let data = b"123456789";
+        for cut in 0..=data.len() {
+            let (a, b) = data.split_at(cut);
+            assert_eq!(crc32_combine(crc32(a), crc32(b), b.len() as u64), 0xCBF43926, "cut={cut}");
+        }
+        // len2 = 0 is the identity
+        assert_eq!(crc32_combine(0xDEADBEEF, 0, 0), 0xDEADBEEF);
+    }
+
+    #[test]
+    fn crc32_zeros_matches_hashing() {
+        for n in [0usize, 1, 7, 4096, 100_000] {
+            assert_eq!(crc32_zeros(n), crc32(&vec![0u8; n]), "n={n}");
+        }
+        let mut h = Crc32::new();
+        h.update(b"prefix");
+        h.update_zeros(12_345);
+        let mut buf = b"prefix".to_vec();
+        buf.resize(buf.len() + 12_345, 0);
+        assert_eq!(h.finalize(), crc32(&buf));
+    }
+
+    #[test]
+    fn crc32_parallel_matches_serial() {
+        let pool = ThreadPool::new(4, 16);
+        let data: Vec<u8> = (0..12 * 1024 * 1024usize).map(|i| (i * 31 % 251) as u8).collect();
+        assert_eq!(crc32_parallel(&data, &pool), crc32(&data));
+        // below the sharding threshold → serial fallback, same answer
+        assert_eq!(crc32_parallel(&data[..1000], &pool), crc32(&data[..1000]));
+        assert_eq!(crc32_parallel(&[], &pool), 0);
+    }
+
+    #[test]
     fn encode_decode_roundtrip() {
         let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
         let data = encode(&hdr(10_000), &payload);
         let (h, p) = decode(&data).unwrap();
         assert_eq!(h, hdr(10_000));
         assert_eq!(p, payload);
+    }
+
+    #[test]
+    fn decode_ref_borrows_payload() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(5_000).collect();
+        let data = encode(&hdr(5_000), &payload);
+        let (h, p) = decode_ref(&data).unwrap();
+        assert_eq!(h, hdr(5_000));
+        assert_eq!(p, &payload[..]);
+        // the slice really points into the encoded buffer
+        let data_range = data.as_ptr() as usize..data.as_ptr() as usize + data.len();
+        assert!(data_range.contains(&(p.as_ptr() as usize)));
+    }
+
+    #[test]
+    fn streaming_writer_bytes_identical_to_encode() {
+        let payload: Vec<u8> = (0..9_999usize).map(|i| (i % 256) as u8).collect();
+        let whole = encode(&hdr(9_999), &payload);
+        let mut w = ImageWriter::new(Vec::new(), &hdr(9_999)).unwrap();
+        for chunk in payload.chunks(1_024) {
+            w.write_payload(chunk).unwrap();
+        }
+        let (streamed, wire) = w.finish().unwrap();
+        assert_eq!(streamed, whole);
+        assert_eq!(wire as usize, whole.len());
+    }
+
+    #[test]
+    fn streaming_writer_parallel_crc_identical() {
+        let pool = ThreadPool::new(3, 8);
+        let payload: Vec<u8> = (0..9 * 1024 * 1024usize).map(|i| (i * 17 % 253) as u8).collect();
+        let h = hdr(payload.len() as u64);
+        let whole = encode(&h, &payload);
+        let mut w = ImageWriter::new(Vec::new(), &h).unwrap();
+        w.write_payload_parallel(&payload, &pool).unwrap();
+        let (streamed, _) = w.finish().unwrap();
+        assert_eq!(streamed, whole);
+    }
+
+    #[test]
+    fn streaming_writer_length_mismatch_rejected() {
+        let mut w = ImageWriter::new(Vec::new(), &hdr(10)).unwrap();
+        w.write_payload(&[1, 2, 3]).unwrap();
+        let err = w.finish().unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
     }
 
     #[test]
@@ -252,6 +713,18 @@ mod tests {
         // wire size ≈ payload + overhead + small header
         assert!(data.len() > RUNTIME_OVERHEAD_BYTES + 1000);
         assert!(data.len() < RUNTIME_OVERHEAD_BYTES + 1000 + 512);
+    }
+
+    #[test]
+    fn runtime_overhead_streaming_matches_materialized() {
+        // golden: the v1 implementation materialized payload + zeros and
+        // encoded that; the streaming path must emit identical bytes
+        let payload: Vec<u8> = (0..3_000usize).map(|i| (i % 255) as u8).collect();
+        let mut padded = payload.clone();
+        padded.resize(payload.len() + RUNTIME_OVERHEAD_BYTES, 0);
+        let full_hdr = hdr(padded.len() as u64);
+        let golden = encode(&full_hdr, &padded);
+        assert_eq!(encode_with_runtime_overhead(&hdr(3_000), &payload), golden);
     }
 
     #[test]

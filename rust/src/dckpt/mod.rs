@@ -17,10 +17,16 @@
 //! * [`image`] — the on-disk image format: magic + JSON header + payload
 //!   + CRC-32, with a constant [`image::RUNTIME_OVERHEAD_BYTES`]
 //!   modelling the libraries DMTCP bundles into real images (the reason
-//!   Table 2's sizes are `data/n + c`, not `data/n`).
+//!   Table 2's sizes are `data/n + c`, not `data/n`).  The hot path is
+//!   streaming and zero-copy: [`image::ImageWriter`] pushes header +
+//!   payload chunks into any sink with the CRC sharded across the shared
+//!   thread pool, and [`image::decode_ref`] verifies and borrows the
+//!   payload without copying it out.
 //! * [`service`] — real-mode checkpoint/restore of a [`DistributedApp`]
 //!   into any [`crate::storage::ObjectStore`] (two-phase: quiesce at a
-//!   step barrier — the analog of DMTCP's socket drain — then write).
+//!   step barrier — the analog of DMTCP's socket drain — then stream
+//!   every image chunk-at-a-time into the store's
+//!   [`crate::storage::PutWriter`]).
 //! * [`protocol`] — the sim-mode timing model of the same protocol
 //!   (suspend broadcast, drain, local write, lazy upload; restart
 //!   re-coordination), used by the figure benches.

@@ -5,9 +5,9 @@
 //! temp-file + rename so readers never observe partial images (the same
 //! guarantee DMTCP needs from its checkpoint directory).
 
-use super::{validate_key, ObjectStore, StoreError};
+use super::{validate_key, ObjectStore, PutWriter, StoreError};
 use std::fs;
-use std::io::Write;
+use std::io::{self, BufWriter, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -36,47 +36,59 @@ impl LocalStore {
     }
 }
 
+/// Missing file → `NotFound(key)`, anything else → `Io`.
+fn map_fs_err(key: &str, e: io::Error) -> StoreError {
+    if e.kind() == io::ErrorKind::NotFound {
+        StoreError::NotFound(key.to_string())
+    } else {
+        StoreError::Io(e)
+    }
+}
+
 impl ObjectStore for LocalStore {
     fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
+        let mut w = self.put_writer(key)?;
+        w.write_all(data)?;
+        w.finish().map(|_| ())
+    }
+
+    /// Chunks stream through a buffered tmp file; `finish` fsyncs and
+    /// renames so readers never observe a partial image (the same
+    /// guarantee the whole-object `put` always had).
+    fn put_writer<'a>(&'a self, key: &str) -> Result<Box<dyn PutWriter + 'a>, StoreError> {
         let path = self.path_for(key)?;
         if let Some(parent) = path.parent() {
             fs::create_dir_all(parent)?;
         }
-        // atomic publish: write tmp, fsync, rename
         let tmp = self.root.join(format!(
             ".tmp-{}-{}",
             std::process::id(),
             self.tmp_seq.fetch_add(1, Ordering::Relaxed)
         ));
-        {
-            let mut f = fs::File::create(&tmp)?;
-            f.write_all(data)?;
-            f.sync_all()?;
-        }
-        fs::rename(&tmp, &path)?;
-        Ok(())
+        let file = fs::File::create(&tmp)?;
+        Ok(Box::new(LocalPutWriter {
+            file: Some(BufWriter::new(file)),
+            tmp,
+            dst: path,
+            written: 0,
+        }))
+    }
+
+    /// Stream the file straight into `out` (no whole-object buffer).
+    fn get_into(&self, key: &str, out: &mut dyn Write) -> Result<u64, StoreError> {
+        let path = self.path_for(key)?;
+        let mut f = fs::File::open(&path).map_err(|e| map_fs_err(key, e))?;
+        Ok(io::copy(&mut f, out)?)
     }
 
     fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
         let path = self.path_for(key)?;
-        fs::read(&path).map_err(|e| {
-            if e.kind() == std::io::ErrorKind::NotFound {
-                StoreError::NotFound(key.to_string())
-            } else {
-                StoreError::Io(e)
-            }
-        })
+        fs::read(&path).map_err(|e| map_fs_err(key, e))
     }
 
     fn delete(&self, key: &str) -> Result<(), StoreError> {
         let path = self.path_for(key)?;
-        fs::remove_file(&path).map_err(|e| {
-            if e.kind() == std::io::ErrorKind::NotFound {
-                StoreError::NotFound(key.to_string())
-            } else {
-                StoreError::Io(e)
-            }
-        })?;
+        fs::remove_file(&path).map_err(|e| map_fs_err(key, e))?;
         // opportunistically remove now-empty parents up to the root
         let mut dir = path.parent().map(|p| p.to_path_buf());
         while let Some(d) = dir {
@@ -123,13 +135,51 @@ impl ObjectStore for LocalStore {
 
     fn size(&self, key: &str) -> Result<u64, StoreError> {
         let path = self.path_for(key)?;
-        fs::metadata(&path).map(|m| m.len()).map_err(|e| {
-            if e.kind() == std::io::ErrorKind::NotFound {
-                StoreError::NotFound(key.to_string())
-            } else {
-                StoreError::Io(e)
-            }
-        })
+        fs::metadata(&path).map(|m| m.len()).map_err(|e| map_fs_err(key, e))
+    }
+}
+
+struct LocalPutWriter {
+    file: Option<BufWriter<fs::File>>,
+    tmp: PathBuf,
+    dst: PathBuf,
+    written: u64,
+}
+
+impl Write for LocalPutWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.file.as_mut().expect("write after finish").write(buf)?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.file.as_mut().expect("flush after finish").flush()
+    }
+}
+
+impl PutWriter for LocalPutWriter {
+    fn finish(mut self: Box<Self>) -> Result<u64, StoreError> {
+        let buf = self.file.take().expect("finish called once");
+        let res = (|| -> Result<u64, StoreError> {
+            let f = buf.into_inner().map_err(|e| StoreError::Io(e.into_error()))?;
+            f.sync_all()?;
+            fs::rename(&self.tmp, &self.dst)?;
+            Ok(self.written)
+        })();
+        if res.is_err() {
+            let _ = fs::remove_file(&self.tmp);
+        }
+        res
+    }
+}
+
+impl Drop for LocalPutWriter {
+    fn drop(&mut self) {
+        // abandoned upload: drop the handle, then the tmp file
+        if self.file.take().is_some() {
+            let _ = fs::remove_file(&self.tmp);
+        }
     }
 }
 
@@ -181,8 +231,52 @@ mod tests {
     #[test]
     fn key_traversal_rejected() {
         let s = tmp_store("trav");
-        assert!(s.put("../escape", b"x").is_err());
-        assert!(s.get("a/../../etc/passwd").is_err());
+        assert!(matches!(s.put("../escape", b"x"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(s.get("a/../../etc/passwd"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(s.put_writer("/abs"), Err(StoreError::InvalidKey(_))));
+    }
+
+    #[test]
+    fn streaming_put_writer_chunks_to_disk() {
+        let s = tmp_store("stream");
+        let mut w = s.put_writer("a/c1/img").unwrap();
+        for i in 0..16u8 {
+            w.write_all(&vec![i; 1024]).unwrap();
+        }
+        assert!(!s.exists("a/c1/img"), "not visible before finish");
+        assert_eq!(w.finish().unwrap(), 16 * 1024);
+        let data = s.get("a/c1/img").unwrap();
+        assert_eq!(data.len(), 16 * 1024);
+        assert_eq!(&data[5 * 1024..5 * 1024 + 3], &[5, 5, 5]);
+        // no tmp files leaked
+        assert!(s.list("").unwrap().iter().all(|k| !k.contains(".tmp-")));
+    }
+
+    #[test]
+    fn abandoned_put_writer_leaves_no_tmp_file() {
+        let s = tmp_store("abort");
+        {
+            let mut w = s.put_writer("a/img").unwrap();
+            w.write_all(b"partial").unwrap();
+            // dropped without finish
+        }
+        assert!(!s.exists("a/img"));
+        let leftovers: Vec<_> = fs::read_dir(s.root())
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp files leaked: {leftovers:?}");
+    }
+
+    #[test]
+    fn get_into_streams_file() {
+        let s = tmp_store("getinto");
+        s.put("a/b", b"disk-bytes").unwrap();
+        let mut out = Vec::new();
+        assert_eq!(s.get_into("a/b", &mut out).unwrap(), 10);
+        assert_eq!(out, b"disk-bytes");
+        assert!(matches!(s.get_into("missing", &mut out), Err(StoreError::NotFound(_))));
     }
 
     #[test]

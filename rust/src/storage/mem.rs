@@ -1,7 +1,8 @@
 //! In-memory object store (tests + the coordinators DB default).
 
-use super::{validate_key, ObjectStore, StoreError};
+use super::{validate_key, ObjectStore, PutWriter, StoreError};
 use std::collections::BTreeMap;
+use std::io::Write;
 use std::sync::RwLock;
 
 /// Thread-safe map-backed store.
@@ -77,6 +78,49 @@ impl ObjectStore for MemStore {
             .map(|v| v.len() as u64)
             .ok_or_else(|| StoreError::NotFound(key.to_string()))
     }
+
+    /// Streamed chunks accumulate in the writer's buffer, which on
+    /// finish *moves* into the map — one buffer total, unlike the
+    /// default path's extra `to_vec` through [`ObjectStore::put`].
+    fn put_writer<'a>(&'a self, key: &str) -> Result<Box<dyn PutWriter + 'a>, StoreError> {
+        validate_key(key)?;
+        Ok(Box::new(MemPutWriter { store: self, key: key.to_string(), buf: Vec::new() }))
+    }
+
+    /// Copy straight out of the map under the read lock (no clone).
+    fn get_into(&self, key: &str, out: &mut dyn Write) -> Result<u64, StoreError> {
+        let objects = self.objects.read().unwrap();
+        let data = objects
+            .get(key)
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))?;
+        out.write_all(data)?;
+        Ok(data.len() as u64)
+    }
+}
+
+struct MemPutWriter<'a> {
+    store: &'a MemStore,
+    key: String,
+    buf: Vec<u8>,
+}
+
+impl Write for MemPutWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl PutWriter for MemPutWriter<'_> {
+    fn finish(self: Box<Self>) -> Result<u64, StoreError> {
+        let n = self.buf.len() as u64;
+        self.store.objects.write().unwrap().insert(self.key, self.buf);
+        Ok(n)
+    }
 }
 
 #[cfg(test)]
@@ -135,8 +179,41 @@ mod tests {
     #[test]
     fn rejects_bad_keys() {
         let s = MemStore::new();
-        assert!(s.put("../etc/passwd", b"x").is_err());
-        assert!(s.put("", b"x").is_err());
+        assert!(matches!(s.put("../etc/passwd", b"x"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(s.put("", b"x"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(s.put_writer("a//b"), Err(StoreError::InvalidKey(_))));
+    }
+
+    #[test]
+    fn streaming_put_writer_roundtrip() {
+        let s = MemStore::new();
+        let mut w = s.put_writer("a/stream.img").unwrap();
+        for chunk in [b"abc".as_slice(), b"defg", b""] {
+            w.write_all(chunk).unwrap();
+        }
+        assert!(!s.exists("a/stream.img"), "not visible before finish");
+        assert_eq!(w.finish().unwrap(), 7);
+        assert_eq!(s.get("a/stream.img").unwrap(), b"abcdefg");
+    }
+
+    #[test]
+    fn abandoned_put_writer_publishes_nothing() {
+        let s = MemStore::new();
+        let mut w = s.put_writer("k").unwrap();
+        w.write_all(b"half").unwrap();
+        drop(w);
+        assert!(!s.exists("k"));
+        assert_eq!(s.object_count(), 0);
+    }
+
+    #[test]
+    fn get_into_streams_without_clone() {
+        let s = MemStore::new();
+        s.put("k", b"stream-me").unwrap();
+        let mut out = Vec::new();
+        assert_eq!(s.get_into("k", &mut out).unwrap(), 9);
+        assert_eq!(out, b"stream-me");
+        assert!(matches!(s.get_into("nope", &mut out), Err(StoreError::NotFound(_))));
     }
 
     #[test]

@@ -12,17 +12,31 @@
 //!   download *timing* through the [`crate::netsim`] fluid network —
 //!   NFS single-server queueing, S3 per-request overhead, and Ceph
 //!   striping across OSDs.  These drive Figs 3b/3c/5/6b.
+//!
+//! Real stores support **streaming** transfers in addition to
+//! whole-object put/get: [`ObjectStore::put_writer`] hands back a
+//! [`PutWriter`] that accepts the object chunk-at-a-time and publishes
+//! atomically on [`PutWriter::finish`], and [`ObjectStore::get_into`]
+//! copies an object straight into any sink.  Both have buffered default
+//! implementations over put/get so simple backends keep working
+//! unchanged; the real backends override them so checkpoint images flow
+//! to disk without ever being materialized as one contiguous buffer.
 
 pub mod local;
 pub mod mem;
 pub mod sim;
 
 use std::fmt;
+use std::io::Write;
 
 /// Errors from real object stores.
 #[derive(Debug)]
 pub enum StoreError {
     NotFound(String),
+    /// The key is syntactically invalid (empty segment, traversal, …) —
+    /// distinct from [`StoreError::NotFound`] so callers can tell a bad
+    /// request from a missing object.
+    InvalidKey(String),
     Io(std::io::Error),
     Corrupt(String),
 }
@@ -31,6 +45,7 @@ impl fmt::Display for StoreError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             StoreError::NotFound(k) => write!(f, "object not found: {k}"),
+            StoreError::InvalidKey(k) => write!(f, "invalid object key: {k}"),
             StoreError::Io(e) => write!(f, "storage io error: {e}"),
             StoreError::Corrupt(k) => write!(f, "object corrupt: {k}"),
         }
@@ -45,9 +60,18 @@ impl From<std::io::Error> for StoreError {
     }
 }
 
+/// Streaming upload handle from [`ObjectStore::put_writer`]: write the
+/// object bytes in chunks, then [`finish`](PutWriter::finish) to publish
+/// it atomically.  Dropping a writer without finishing aborts the upload
+/// — readers never observe a partial object.
+pub trait PutWriter: Write + Send {
+    /// Publish the object; returns the number of bytes written.
+    fn finish(self: Box<Self>) -> Result<u64, StoreError>;
+}
+
 /// S3-flavoured object-store interface (§6.2): flat keys, whole-object
-/// put/get, prefix listing.  Keys use `/`-separated segments, e.g.
-/// `app-3/ckpt-7/proc-1.img`.
+/// put/get plus streaming put_writer/get_into, prefix listing.  Keys use
+/// `/`-separated segments, e.g. `app-3/ckpt-7/proc-1.img`.
 pub trait ObjectStore: Send + Sync {
     fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError>;
     fn get(&self, key: &str) -> Result<Vec<u8>, StoreError>;
@@ -56,6 +80,27 @@ pub trait ObjectStore: Send + Sync {
     fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError>;
     /// Object size without fetching the body.
     fn size(&self, key: &str) -> Result<u64, StoreError>;
+
+    /// Open a streaming writer for `key`; the object becomes visible
+    /// only after [`PutWriter::finish`].  The default buffers in memory
+    /// and delegates to [`put`](ObjectStore::put); real backends stream
+    /// chunk-at-a-time.
+    fn put_writer<'a>(&'a self, key: &str) -> Result<Box<dyn PutWriter + 'a>, StoreError> {
+        validate_key(key)?;
+        Ok(Box::new(BufferedPutWriter {
+            key: key.to_string(),
+            buf: Vec::new(),
+            commit: Box::new(move |k: &str, d: &[u8]| self.put(k, d)),
+        }))
+    }
+
+    /// Stream the object into `out`; returns the number of bytes copied.
+    /// The default fetches via [`get`](ObjectStore::get) then writes.
+    fn get_into(&self, key: &str, out: &mut dyn Write) -> Result<u64, StoreError> {
+        let data = self.get(key)?;
+        out.write_all(&data)?;
+        Ok(data.len() as u64)
+    }
 
     fn exists(&self, key: &str) -> bool {
         self.size(key).is_ok()
@@ -72,15 +117,41 @@ pub trait ObjectStore: Send + Sync {
     }
 }
 
+/// Default [`ObjectStore::put_writer`] implementation: accumulate in
+/// memory, commit through the store's whole-object `put` on finish.
+struct BufferedPutWriter<'a> {
+    key: String,
+    buf: Vec<u8>,
+    commit: Box<dyn Fn(&str, &[u8]) -> Result<(), StoreError> + Send + 'a>,
+}
+
+impl Write for BufferedPutWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl PutWriter for BufferedPutWriter<'_> {
+    fn finish(self: Box<Self>) -> Result<u64, StoreError> {
+        (self.commit)(&self.key, &self.buf)?;
+        Ok(self.buf.len() as u64)
+    }
+}
+
 /// Validate an object key: non-empty `/`-separated segments without `..`,
 /// so local-disk backends can map keys to paths safely.
 pub fn validate_key(key: &str) -> Result<(), StoreError> {
     if key.is_empty() || key.starts_with('/') || key.ends_with('/') {
-        return Err(StoreError::NotFound(format!("invalid key: {key:?}")));
+        return Err(StoreError::InvalidKey(format!("{key:?}")));
     }
     for seg in key.split('/') {
         if seg.is_empty() || seg == "." || seg == ".." || seg.contains('\\') {
-            return Err(StoreError::NotFound(format!("invalid key segment in {key:?}")));
+            return Err(StoreError::InvalidKey(format!("bad segment in {key:?}")));
         }
     }
     Ok(())
@@ -89,16 +160,125 @@ pub fn validate_key(key: &str) -> Result<(), StoreError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
 
     #[test]
     fn key_validation() {
         assert!(validate_key("a/b/c.img").is_ok());
         assert!(validate_key("x").is_ok());
-        assert!(validate_key("").is_err());
-        assert!(validate_key("/abs").is_err());
-        assert!(validate_key("trailing/").is_err());
-        assert!(validate_key("a//b").is_err());
-        assert!(validate_key("a/../b").is_err());
-        assert!(validate_key("a/.\\./b").is_err());
+        assert!(matches!(validate_key(""), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(validate_key("/abs"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(validate_key("trailing/"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(validate_key("a//b"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(validate_key("a/../b"), Err(StoreError::InvalidKey(_))));
+        assert!(matches!(validate_key("a/.\\./b"), Err(StoreError::InvalidKey(_))));
+    }
+
+    #[test]
+    fn invalid_key_distinct_from_not_found() {
+        let e = validate_key("a/../b").unwrap_err();
+        assert!(e.to_string().contains("invalid object key"));
+        assert!(!matches!(e, StoreError::NotFound(_)));
+    }
+
+    /// Minimal store implementing only the required methods, to exercise
+    /// the default (buffered) streaming implementations.
+    #[derive(Default)]
+    struct TinyStore {
+        objects: Mutex<BTreeMap<String, Vec<u8>>>,
+    }
+
+    impl ObjectStore for TinyStore {
+        fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
+            validate_key(key)?;
+            self.objects.lock().unwrap().insert(key.to_string(), data.to_vec());
+            Ok(())
+        }
+        fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+            self.objects
+                .lock()
+                .unwrap()
+                .get(key)
+                .cloned()
+                .ok_or_else(|| StoreError::NotFound(key.to_string()))
+        }
+        fn delete(&self, key: &str) -> Result<(), StoreError> {
+            self.objects
+                .lock()
+                .unwrap()
+                .remove(key)
+                .map(|_| ())
+                .ok_or_else(|| StoreError::NotFound(key.to_string()))
+        }
+        fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+            Ok(self
+                .objects
+                .lock()
+                .unwrap()
+                .keys()
+                .filter(|k| k.starts_with(prefix))
+                .cloned()
+                .collect())
+        }
+        fn size(&self, key: &str) -> Result<u64, StoreError> {
+            self.objects
+                .lock()
+                .unwrap()
+                .get(key)
+                .map(|v| v.len() as u64)
+                .ok_or_else(|| StoreError::NotFound(key.to_string()))
+        }
+    }
+
+    #[test]
+    fn default_put_writer_streams_through_put() {
+        let s = TinyStore::default();
+        let mut w = s.put_writer("a/b.img").unwrap();
+        w.write_all(b"hello ").unwrap();
+        w.write_all(b"world").unwrap();
+        assert!(!s.exists("a/b.img"), "object must not appear before finish");
+        assert_eq!(w.finish().unwrap(), 11);
+        assert_eq!(s.get("a/b.img").unwrap(), b"hello world");
+    }
+
+    #[test]
+    fn default_put_writer_abandoned_writes_nothing() {
+        let s = TinyStore::default();
+        let mut w = s.put_writer("a/b.img").unwrap();
+        w.write_all(b"partial").unwrap();
+        drop(w);
+        assert!(!s.exists("a/b.img"));
+    }
+
+    #[test]
+    fn default_put_writer_validates_key() {
+        let s = TinyStore::default();
+        assert!(matches!(s.put_writer("../oops"), Err(StoreError::InvalidKey(_))));
+    }
+
+    #[test]
+    fn default_get_into_copies_object() {
+        let s = TinyStore::default();
+        s.put("k", b"payload-bytes").unwrap();
+        let mut out = Vec::new();
+        assert_eq!(s.get_into("k", &mut out).unwrap(), 13);
+        assert_eq!(out, b"payload-bytes");
+        assert!(matches!(
+            s.get_into("missing", &mut out),
+            Err(StoreError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn streaming_works_through_dyn_object_store() {
+        let s = TinyStore::default();
+        let dynstore: &dyn ObjectStore = &s;
+        let mut w = dynstore.put_writer("dyn/k").unwrap();
+        w.write_all(b"xyz").unwrap();
+        w.finish().unwrap();
+        let mut out = Vec::new();
+        dynstore.get_into("dyn/k", &mut out).unwrap();
+        assert_eq!(out, b"xyz");
     }
 }

@@ -10,7 +10,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -63,6 +63,21 @@ impl ThreadPool {
             })
             .collect();
         ThreadPool { shared, workers, size }
+    }
+
+    /// Process-wide shared pool sized to the machine, spawned lazily on
+    /// first use and never torn down.  Hot paths that shard
+    /// embarrassingly parallel work (the image pipeline's CRC shards)
+    /// borrow this instead of spinning up private pools per call.
+    pub fn shared() -> &'static ThreadPool {
+        static SHARED: OnceLock<ThreadPool> = OnceLock::new();
+        SHARED.get_or_init(|| {
+            let n = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .max(2);
+            ThreadPool::new(n, n * 8)
+        })
     }
 
     /// Number of worker threads.
@@ -236,6 +251,20 @@ mod tests {
         // with queue cap 2 and 1 worker, the last submits must have waited
         assert!(started.elapsed() >= Duration::from_millis(20));
         pool.wait_idle();
+    }
+
+    #[test]
+    fn shared_pool_is_singleton_and_usable() {
+        let p1 = ThreadPool::shared();
+        let p2 = ThreadPool::shared();
+        assert!(std::ptr::eq(p1, p2));
+        assert!(p1.size() >= 2);
+        let sum = Arc::new(AtomicU64::new(0));
+        let s2 = sum.clone();
+        p1.scatter((1..=10u64).collect(), move |x| {
+            s2.fetch_add(x, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 55);
     }
 
     #[test]

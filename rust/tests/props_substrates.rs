@@ -101,6 +101,135 @@ fn prop_image_rejects_any_single_bitflip() {
     });
 }
 
+/// Golden v1 encoder, spelled out field by field: the streaming pipeline
+/// must keep emitting exactly these bytes forever.
+fn golden_v1_encode(hdr: &ImageHeader, payload: &[u8]) -> Vec<u8> {
+    let hjson = Json::object([
+        ("app", hdr.app.as_str().into()),
+        ("proc", hdr.proc_index.into()),
+        ("seq", hdr.ckpt_seq.into()),
+        ("kind", hdr.kind.as_str().into()),
+        ("iteration", hdr.iteration.into()),
+        ("payload_len", hdr.payload_len.into()),
+    ])
+    .to_string()
+    .into_bytes();
+    let mut out = Vec::new();
+    out.extend_from_slice(b"DCKP");
+    out.extend_from_slice(&1u16.to_le_bytes());
+    out.extend_from_slice(&(hjson.len() as u32).to_le_bytes());
+    out.extend_from_slice(&hjson);
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&image::crc32(payload).to_le_bytes());
+    out
+}
+
+#[test]
+fn prop_incremental_and_combined_crc_match_oneshot() {
+    forall(
+        "crc-chunked-and-combined",
+        150,
+        Gen::pair(Gen::usize(0, 8192), Gen::usize(0, 1_000_000)),
+        |&(len, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let oneshot = image::crc32(&payload);
+            // incremental over a random chunking
+            let mut inc = image::Crc32::new();
+            let mut pos = 0;
+            while pos < payload.len() {
+                let take = 1 + rng.pick(payload.len() - pos);
+                inc.update(&payload[pos..pos + take]);
+                pos += take;
+            }
+            // two independent halves merged with crc32_combine
+            let cut = if len == 0 { 0 } else { rng.pick(len + 1) };
+            let (a, b) = payload.split_at(cut);
+            let combined =
+                image::crc32_combine(image::crc32(a), image::crc32(b), b.len() as u64);
+            inc.finalize() == oneshot && combined == oneshot
+        },
+    );
+}
+
+#[test]
+fn prop_stream_writer_and_decode_ref_match_v1_wire_format() {
+    forall(
+        "stream-writer-v1-identical",
+        60,
+        Gen::pair(Gen::usize(0, 40_000), Gen::usize(0, 1_000_000)),
+        |&(len, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let hdr = ImageHeader {
+                app: format!("app-{seed}"),
+                proc_index: seed % 64,
+                ckpt_seq: seed as u64,
+                kind: "prop".into(),
+                iteration: (seed * 3) as u64,
+                payload_len: len as u64,
+            };
+            let golden = golden_v1_encode(&hdr, &payload);
+            // wrapper path
+            let enc = image::encode(&hdr, &payload);
+            // streaming path, random chunk sizes
+            let mut w = image::ImageWriter::new(Vec::new(), &hdr).unwrap();
+            let mut pos = 0;
+            while pos < payload.len() {
+                let take = 1 + rng.pick(payload.len() - pos);
+                w.write_payload(&payload[pos..pos + take]).unwrap();
+                pos += take;
+            }
+            let (streamed, wire) = w.finish().unwrap();
+            // zero-copy decode agrees with the copying decode
+            let (h_ref, p_ref) = match image::decode_ref(&golden) {
+                Ok(v) => v,
+                Err(_) => return false,
+            };
+            enc == golden
+                && streamed == golden
+                && wire as usize == golden.len()
+                && h_ref == hdr
+                && p_ref == &payload[..]
+        },
+    );
+}
+
+#[test]
+fn prop_runtime_overhead_streaming_matches_materialized_v1() {
+    forall(
+        "stream-overhead-v1-identical",
+        6,
+        Gen::pair(Gen::usize(0, 20_000), Gen::usize(0, 1_000_000)),
+        |&(len, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let hdr = ImageHeader {
+                app: "a".into(),
+                proc_index: 1,
+                ckpt_seq: 2,
+                kind: "prop".into(),
+                iteration: 3,
+                payload_len: len as u64,
+            };
+            // v1 materialized the padding; the golden path does too
+            let mut padded = payload.clone();
+            padded.resize(len + image::RUNTIME_OVERHEAD_BYTES, 0);
+            let full_hdr = ImageHeader { payload_len: padded.len() as u64, ..hdr.clone() };
+            let golden = golden_v1_encode(&full_hdr, &padded);
+            let enc = image::encode_with_runtime_overhead(&hdr, &payload);
+            // and the zero-copy reader sees the padded payload + strips it
+            let (h, p) = match image::decode_ref(&enc) {
+                Ok(v) => v,
+                Err(_) => return false,
+            };
+            enc == golden
+                && h == full_hdr
+                && image::strip_runtime_overhead(p) == &payload[..]
+        },
+    );
+}
+
 #[test]
 fn prop_netsim_conserves_bytes_and_respects_capacity() {
     forall(
