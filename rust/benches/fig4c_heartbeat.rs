@@ -6,7 +6,10 @@
 //! probes everything itself over 16 parallel sessions), and a quad-tree
 //! variant.
 
-use cacs::monitor::sim::{flat_poll_rtt, heartbeat_rtt, MonitorParams};
+use cacs::monitor::sim::{
+    flat_poll_rtt, heartbeat_rtt, heartbeat_rtt_with_failures, MonitorParams,
+};
+use cacs::monitor::tree::BroadcastTree;
 use cacs::util::args::Args;
 use cacs::util::benchkit::{linear_fit, Table};
 use cacs::util::rng::Rng;
@@ -59,4 +62,41 @@ fn main() {
         "log growth violated: rtt(128)={rtt128} vs rtt(64)={rtt64}"
     );
     println!("# shape checks OK (logarithmic in n; tree beats flat polling at scale)");
+
+    // §6.3 failure detection under the deadline budget: dead daemons
+    // cost bounded resolve waves, not dead × timeout
+    let n = 1023;
+    let height = BroadcastTree::binary(n).height();
+    println!("\n# heartbeat with failures (n={n}, height={height}, deadline budget)");
+    let mut t = Table::new(["dead set", "rtt (ms)", "v1 dead×timeout (ms)"]);
+    let cases: Vec<(&str, Vec<usize>)> = vec![
+        ("none", vec![]),
+        ("1 leaf", vec![600]),
+        ("10 leaves", (600..610).collect()),
+        ("chain 1→3→7", vec![1, 3, 7]),
+    ];
+    let mut ten_leaves = 0.0;
+    for (label, dead) in &cases {
+        let rtt: f64 = (0..iters)
+            .map(|_| heartbeat_rtt_with_failures(&p, &mut rng, n, dead))
+            .sum::<f64>()
+            / iters as f64;
+        if *label == "10 leaves" {
+            ten_leaves = rtt;
+        }
+        t.row([
+            label.to_string(),
+            format!("{:.2}", rtt * 1e3),
+            format!("{:.0}", dead.len() as f64 * p.timeout * 1e3),
+        ]);
+    }
+    t.print();
+    // 10 dead leaves resolve in one wave: ~height×hop-deadline, and
+    // nothing like the v1 stacked 10×timeout regime
+    assert!(
+        ten_leaves < (height as f64 + 4.0) * p.hop_deadline + 2.0 * rtt128,
+        "dead leaves must cost one resolve wave, got {ten_leaves}"
+    );
+    assert!(ten_leaves < 0.1 * 10.0 * p.timeout);
+    println!("# failure checks OK (resolve waves bounded by the deadline budget)");
 }

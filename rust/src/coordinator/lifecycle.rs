@@ -64,6 +64,7 @@ impl AppState {
                 | (Running, Restarting)       // in-place recovery
                 | (Restarting, Running)
                 | (Ready, Restarting)         // restart-from-upload (§5.3 clone)
+                | (Error, Restarting)         // passive recovery (§5.3)
                 | (Creating, Error)
                 | (Provisioning, Error)
                 | (Ready, Error)
@@ -177,14 +178,53 @@ mod tests {
     }
 
     #[test]
-    fn error_only_terminates() {
+    fn error_terminates_or_restarts() {
         let mut lc = Lifecycle::new(0.0);
         lc.to(1.0, Provisioning);
         lc.to(2.0, Error);
         assert_eq!(lc.state(), Error);
-        assert!(!lc.to(3.0, Running));
-        assert!(lc.state().can_restart()); // §5.3 restart creates a NEW app
+        assert!(!lc.to(3.0, Running)); // must go through RESTARTING
+        assert!(lc.state().can_restart());
         assert!(lc.to(3.0, Terminating));
+    }
+
+    #[test]
+    fn error_passive_recovery_roundtrip() {
+        // §5.3 passive recovery: ERROR → RESTARTING → RUNNING must be a
+        // legal walk (the monitor's recovery pipeline drives it)
+        let mut lc = Lifecycle::new(0.0);
+        lc.to(1.0, Provisioning);
+        lc.to(2.0, Ready);
+        lc.to(3.0, Running);
+        lc.to(4.0, Error);
+        assert!(lc.to(5.0, Restarting));
+        assert!(lc.to(6.0, Running));
+        assert_eq!(lc.state(), Running);
+    }
+
+    const ALL: [AppState; 9] = [
+        Creating, Provisioning, Ready, Running, Checkpointing, Restarting,
+        Terminating, Terminated, Error,
+    ];
+
+    #[test]
+    fn predicates_agree_with_transition_table() {
+        // the guards the REST/service layer checks before attempting a
+        // transition must match the table exactly, state by state —
+        // v1 let `can_restart()` pass for ERROR while the table had no
+        // (Error, Restarting) arm, so passive recovery failed mid-flight
+        for s in ALL {
+            assert_eq!(
+                s.can_restart(),
+                s.can_transition_to(Restarting),
+                "can_restart vs table for {s}"
+            );
+            assert_eq!(
+                s.can_checkpoint(),
+                s.can_transition_to(Checkpointing),
+                "can_checkpoint vs table for {s}"
+            );
+        }
     }
 
     #[test]

@@ -212,6 +212,27 @@ mod tests {
         resp.json().unwrap().get("id").as_str().unwrap().to_string()
     }
 
+    /// Bounded poll on the observable REST state (no bare sleeps: the
+    /// old fixed 30–50 ms naps flaked on slow machines).
+    fn wait_iter(client: &Client, id: &str, min: u64) {
+        for _ in 0..400 {
+            let ok = client
+                .get(&format!("/coordinators/{id}"))
+                .ok()
+                .and_then(|r| r.json().ok())
+                .map(|j| {
+                    j.get("state").as_str() == Some("RUNNING")
+                        && j.get("iteration").as_u64().unwrap_or(0) >= min
+                })
+                .unwrap_or(false);
+            if ok {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("{id} never reached RUNNING at iteration {min}");
+    }
+
     #[test]
     fn table1_surface() {
         let (_server, client) = start();
@@ -221,7 +242,7 @@ mod tests {
         assert_eq!(resp.json().unwrap(), Json::Arr(vec![]));
 
         let id = submit_dmtcp1(&client);
-        std::thread::sleep(Duration::from_millis(50));
+        wait_iter(&client, &id, 1);
 
         // GET /coordinators/:id
         let info = client.get(&format!("/coordinators/{id}")).unwrap();
@@ -285,7 +306,7 @@ mod tests {
     fn image_download_via_query() {
         let (_server, client) = start();
         let id = submit_dmtcp1(&client);
-        std::thread::sleep(Duration::from_millis(30));
+        wait_iter(&client, &id, 1);
         let ck = client
             .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
             .unwrap();
@@ -306,7 +327,7 @@ mod tests {
     fn health_endpoint() {
         let (_server, client) = start();
         let id = submit_dmtcp1(&client);
-        std::thread::sleep(Duration::from_millis(30));
+        wait_iter(&client, &id, 1);
         let h = client.get(&format!("/coordinators/{id}/health")).unwrap();
         assert_eq!(h.status, 200);
         assert_eq!(h.json().unwrap(), Json::Arr(vec![Json::Bool(true)]));

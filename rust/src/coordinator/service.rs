@@ -9,9 +9,13 @@
 //!   role of VM provisioning).
 //! * Checkpoint Manager — stateless over any [`ObjectStore`] (§6.2),
 //!   including image upload/download for migration (§5.3).
-//! * Monitoring Manager — a background thread heartbeating every
-//!   application's health hooks and triggering recovery (§6.3 case 2:
-//!   processes restart in place from the last image).
+//! * Monitoring Manager — a background thread turning every
+//!   application's hook results + host reachability into a structured
+//!   [`HealthReport`] and driving both §6.3 recovery cases: unreachable
+//!   hosts are re-provisioned and restored from the last image (case 1),
+//!   unhealthy processes restart in place (case 2).  Apps parked in
+//!   ERROR with a usable checkpoint are picked up via the §5.3 passive
+//!   recovery path (ERROR → RESTARTING).
 
 use crate::coordinator::appthread::{AppFactory, AppHandle};
 use crate::coordinator::db::Db;
@@ -19,6 +23,7 @@ use crate::coordinator::lifecycle::AppState;
 use crate::coordinator::types::{AppRecord, Asr, CkptRecord, WorkloadSpec};
 use crate::dckpt::service as ckptsvc;
 use crate::dckpt::DistributedApp;
+use crate::monitor::HealthReport;
 use crate::runtime::Engine;
 use crate::storage::ObjectStore;
 use crate::util::ids::{AppId, CkptId};
@@ -62,7 +67,10 @@ impl Default for ServiceConfig {
 
 struct Inner {
     db: Db,
-    handles: BTreeMap<AppId, AppHandle>,
+    // Arc so bulk operations (checkpoint/restore image transfers, health
+    // round-trips) can clone the handle out and run WITHOUT the service
+    // lock — the Monitoring Manager must stay live while images move
+    handles: BTreeMap<AppId, Arc<AppHandle>>,
 }
 
 /// The service.  Share via `Arc`; [`start_monitor`](CacsService::start_monitor)
@@ -111,8 +119,14 @@ impl CacsService {
         rec.lifecycle.to(self.now(), AppState::Ready);
         rec.lifecycle.to(self.now(), AppState::Running);
         inner.db.insert(rec);
-        inner.handles.insert(id, handle);
+        inner.handles.insert(id, Arc::new(handle));
         Ok(id)
+    }
+
+    /// Clone the app's host-thread handle out of the lock (bulk calls on
+    /// it must not serialize the whole service).
+    fn handle(&self, id: AppId) -> Option<Arc<AppHandle>> {
+        self.inner.lock().unwrap().handles.get(&id).cloned()
     }
 
     /// GET /coordinators.
@@ -123,10 +137,7 @@ impl CacsService {
 
     /// GET /coordinators/:id (with live progress attached).
     pub fn info(&self, id: AppId) -> Result<Json> {
-        let progress = {
-            let inner = self.inner.lock().unwrap();
-            inner.handles.get(&id).and_then(|h| h.progress().ok())
-        };
+        let progress = self.handle(id).and_then(|h| h.progress().ok());
         let inner = self.inner.lock().unwrap();
         let rec = inner.db.get(id).context("unknown coordinator")?;
         let mut j = rec.to_json();
@@ -141,7 +152,7 @@ impl CacsService {
 
     /// POST /coordinators/:id/checkpoints (§5.2 mode 1).
     pub fn checkpoint(&self, id: AppId) -> Result<CkptRecord> {
-        let (seq, handle_report, iteration) = {
+        let seq = {
             let mut inner = self.inner.lock().unwrap();
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
             anyhow::ensure!(
@@ -153,20 +164,33 @@ impl CacsService {
             rec.next_ckpt_seq += 1;
             let now = self.now();
             rec.lifecycle.to(now, AppState::Checkpointing);
-            drop(inner);
-            // take the checkpoint without holding the lock (it may move
-            // hundreds of MB)
-            let inner = self.inner.lock().unwrap();
-            let handle = inner.handles.get(&id).context("no app thread")?;
-            let report = handle.checkpoint(seq, self.cfg.with_runtime_overhead);
-            let iteration = handle.progress().map(|(i, _)| i).unwrap_or(0);
-            (seq, report, iteration)
+            seq
+        };
+        // drive the image pipeline WITHOUT the service lock (it may move
+        // hundreds of MB; list/health/monitor must stay live).  Any
+        // failure from here on (including a missing app thread) must
+        // land the lifecycle in ERROR — the v1 `?` early-return left it
+        // stuck in CHECKPOINTING
+        let outcome = match self.handle(id) {
+            Some(handle) => {
+                let report = handle.checkpoint(seq, self.cfg.with_runtime_overhead);
+                let iteration = handle.progress().map(|(i, _)| i).unwrap_or(0);
+                report.map(|r| (r, iteration))
+            }
+            None => Err(anyhow::anyhow!("no app thread")),
         };
         let mut inner = self.inner.lock().unwrap();
         let now = self.now();
-        let rec = inner.db.get_mut(id).context("unknown coordinator")?;
-        match handle_report {
-            Ok(report) => {
+        let Some(rec) = inner.db.get_mut(id) else {
+            drop(inner);
+            // a §5.4 DELETE raced the transfer: the record (and the rest
+            // of the stored images) is gone — remove the images this
+            // checkpoint just wrote so nothing is orphaned in the store
+            let _ = ckptsvc::delete_checkpoint(self.store.as_ref(), &id.to_string(), seq);
+            anyhow::bail!("coordinator deleted during checkpoint");
+        };
+        match outcome {
+            Ok((report, iteration)) => {
                 rec.lifecycle.to(now, AppState::Running);
                 let ck = CkptRecord {
                     id: CkptId(seq),
@@ -209,10 +233,12 @@ impl CacsService {
                 rec.lifecycle.to(now, AppState::Restarting);
             }
         }
-        let result = {
-            let inner = self.inner.lock().unwrap();
-            let handle = inner.handles.get(&id).context("no app thread")?;
-            handle.restore(seq)
+        // restore runs without the service lock; a missing app thread is
+        // a restore failure, not a `?` early return — the lifecycle must
+        // land in ERROR, not stay RESTARTING
+        let result = match self.handle(id) {
+            Some(handle) => handle.restore(seq),
+            None => Err(anyhow::anyhow!("no app thread")),
         };
         let mut inner = self.inner.lock().unwrap();
         let now = self.now();
@@ -248,7 +274,7 @@ impl CacsService {
             rec.lifecycle.to(now, AppState::Terminating);
             inner.handles.remove(&id)
         };
-        drop(handle); // joins the app thread (releases the "VMs")
+        drop(handle); // joins the app thread when last ref (releases the "VMs")
         let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
         let mut inner = self.inner.lock().unwrap();
         if let Some(rec) = inner.db.get_mut(id) {
@@ -305,8 +331,7 @@ impl CacsService {
 
     /// Health snapshot (the REST layer exposes this for diagnostics).
     pub fn health(&self, id: AppId) -> Result<Vec<bool>> {
-        let inner = self.inner.lock().unwrap();
-        let handle = inner.handles.get(&id).context("unknown coordinator")?;
+        let handle = self.handle(id).context("unknown coordinator")?;
         handle.health()
     }
 
@@ -340,44 +365,161 @@ impl CacsService {
         self.inner.lock().unwrap().db.get(id).map(|r| r.lifecycle.state())
     }
 
+    /// One §6.3 health report for an app, synthesized from the
+    /// per-process hook results (*unhealthy*) and host-thread
+    /// reachability (*unreachable* — in real mode the app thread plays
+    /// the virtual cluster, so losing it is the VM-failure case).
+    pub fn health_report(&self, id: AppId) -> Result<HealthReport> {
+        let (n, handle) = {
+            let inner = self.inner.lock().unwrap();
+            let rec = inner.db.get(id).context("unknown coordinator")?;
+            (rec.asr.n_vms, inner.handles.get(&id).cloned())
+        };
+        // the hook round-trip runs without the service lock
+        let report = match handle {
+            None => HealthReport { unhealthy: vec![], unreachable: (0..n).collect() },
+            Some(h) => match h.health() {
+                Ok(flags) => HealthReport {
+                    unhealthy: flags
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &ok)| !ok)
+                        .map(|(i, _)| i)
+                        .collect(),
+                    unreachable: vec![],
+                },
+                Err(_) => HealthReport { unhealthy: vec![], unreachable: (0..n).collect() },
+            },
+        };
+        Ok(report)
+    }
+
     /// One monitoring round over all apps (§6.3); returns the ids that
-    /// needed recovery.  Called by the monitor thread and directly by
+    /// entered recovery.  Called by the monitor thread and directly by
     /// tests.
+    ///
+    /// Two recovery cases per the paper: an *unreachable* virtual
+    /// cluster is re-provisioned and restored from the last image
+    /// ([`Self::reprovision_and_restore`]); *unhealthy* processes on a
+    /// reachable cluster restart in place ([`Self::restart`]).  Apps
+    /// already in ERROR that have a usable checkpoint take the §5.3
+    /// passive-recovery path (ERROR → RESTARTING).
     pub fn monitor_round(&self) -> Vec<AppId> {
-        let ids = self.app_ids();
         let mut recovered = vec![];
-        for id in ids {
-            let (state, health, has_ckpt) = {
+        for id in self.app_ids() {
+            let (state, has_ckpt) = {
                 let inner = self.inner.lock().unwrap();
                 let Some(rec) = inner.db.get(id) else { continue };
-                let state = rec.lifecycle.state();
-                let has_ckpt = rec.latest_ckpt().is_some();
-                let health = inner.handles.get(&id).and_then(|h| h.health().ok());
-                (state, health, has_ckpt)
+                (rec.lifecycle.state(), rec.latest_ckpt().is_some())
             };
-            if state != AppState::Running {
+            if state != AppState::Running && state != AppState::Error {
                 continue;
             }
-            let Some(health) = health else { continue };
-            if health.iter().all(|&h| h) {
+            let Ok(report) = self.health_report(id) else { continue };
+            if state == AppState::Running && report.all_healthy() {
                 continue;
             }
-            log::warn!("{id}: unhealthy procs {health:?}");
-            if self.cfg.auto_recover && has_ckpt {
-                // §6.3 case 2: kill remains + restart in place from the
-                // previous checkpoint
-                if self.restart(id, None).is_ok() {
-                    recovered.push(id);
-                }
+            if state == AppState::Error && !self.cfg.auto_recover {
+                continue; // a user DELETE or manual restart must resolve it
+            }
+            if !report.all_healthy() {
+                log::warn!(
+                    "{id}: unhealthy {:?} unreachable {:?}",
+                    report.unhealthy,
+                    report.unreachable
+                );
+            }
+            if !self.cfg.auto_recover || !has_ckpt {
+                self.set_error(id);
+                continue;
+            }
+            let result = if report.needs_new_vms() {
+                // §6.3 case 1: VM failure — new "VMs" + restore
+                self.reprovision_and_restore(id)
             } else {
-                let mut inner = self.inner.lock().unwrap();
-                if let Some(rec) = inner.db.get_mut(id) {
-                    let now = self.now();
-                    rec.lifecycle.to(now, AppState::Error);
+                // §6.3 case 2: application failure — restart in place
+                // from the previous checkpoint
+                self.restart(id, None)
+            };
+            match result {
+                Ok(_) => recovered.push(id),
+                Err(e) => {
+                    log::warn!("{id}: recovery failed: {e}");
+                    // only park in ERROR if the app is still in a state
+                    // we decided to recover from — a concurrent user
+                    // operation (e.g. a checkpoint that raced this
+                    // round) may legitimately own the lifecycle now
+                    let state_now = self.state(id);
+                    if matches!(
+                        state_now,
+                        Some(AppState::Running)
+                            | Some(AppState::Restarting)
+                            | Some(AppState::Error)
+                    ) {
+                        self.set_error(id);
+                    }
                 }
             }
         }
         recovered
+    }
+
+    fn set_error(&self, id: AppId) {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.db.get_mut(id) {
+            if rec.lifecycle.state() != AppState::Error {
+                rec.lifecycle.to(now, AppState::Error);
+            }
+        }
+    }
+
+    /// §6.3 case 1: the virtual cluster is unreachable — provision a
+    /// fresh host (in real mode a new app thread built from the stored
+    /// ASR; the analog of claiming replacement VMs) and restore it from
+    /// the latest image.
+    fn reprovision_and_restore(&self, id: AppId) -> Result<u64> {
+        let asr = {
+            let mut inner = self.inner.lock().unwrap();
+            let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+            let state = rec.lifecycle.state();
+            anyhow::ensure!(
+                state.can_restart() || state == AppState::Restarting,
+                "cannot recover in state {state}"
+            );
+            if state != AppState::Restarting {
+                let now = self.now();
+                rec.lifecycle.to(now, AppState::Restarting);
+            }
+            rec.asr.clone()
+        };
+        let factory = build_factory(&asr, &self.cfg)?;
+        let handle = AppHandle::spawn(
+            &id.to_string(),
+            factory,
+            self.store.clone(),
+            self.cfg.step_interval,
+        );
+        let old = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.handles.insert(id, Arc::new(handle))
+        };
+        drop(old); // joins the dead host's thread, if it is still around
+        self.restart(id, None)
+    }
+
+    /// Fault injection (examples/tests): drop the application's host
+    /// thread without touching its record — the real-mode analog of
+    /// losing the VMs out from under a running app (§6.3 VM failure).
+    pub fn kill_vm(&self, id: AppId) -> Result<()> {
+        let handle = {
+            let mut inner = self.inner.lock().unwrap();
+            anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
+            inner.handles.remove(&id)
+        };
+        anyhow::ensure!(handle.is_some(), "no app thread");
+        drop(handle);
+        Ok(())
     }
 
     /// Start the Monitoring Manager thread.  Holds only a weak
@@ -478,21 +620,39 @@ mod tests {
     use crate::storage::mem::MemStore;
 
     fn svc() -> Arc<CacsService> {
-        CacsService::new(
-            Arc::new(MemStore::new()),
-            ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
-        )
+        svc_with(|cfg| cfg)
     }
 
-    fn wait_progress(svc: &CacsService, id: AppId, min_iter: u64) {
-        for _ in 0..200 {
-            let j = svc.info(id).unwrap();
-            if j.get("iteration").as_u64().unwrap_or(0) >= min_iter {
+    fn svc_with(f: impl FnOnce(ServiceConfig) -> ServiceConfig) -> Arc<CacsService> {
+        let cfg = f(ServiceConfig { monitor_period: None, ..ServiceConfig::default() });
+        CacsService::new(Arc::new(MemStore::new()), cfg)
+    }
+
+    /// Bounded poll on observable state instead of bare sleeps.
+    fn wait_until(what: &str, f: impl Fn() -> bool) {
+        for _ in 0..400 {
+            if f() {
                 return;
             }
             std::thread::sleep(Duration::from_millis(5));
         }
-        panic!("app {id} never reached iteration {min_iter}");
+        panic!("timed out waiting for {what}");
+    }
+
+    fn wait_progress(svc: &CacsService, id: AppId, min_iter: u64) {
+        wait_until(&format!("app {id} to reach iteration {min_iter}"), || {
+            svc.info(id)
+                .map(|j| j.get("iteration").as_u64().unwrap_or(0) >= min_iter)
+                .unwrap_or(false)
+        });
+    }
+
+    /// Wait for the hook of `proc` to report unhealthy (kill injection
+    /// lands at the next step barrier, not synchronously).
+    fn wait_unhealthy(svc: &CacsService, id: AppId, proc: usize) {
+        wait_until(&format!("app {id} proc {proc} to report unhealthy"), || {
+            svc.health(id).map(|h| !h[proc]).unwrap_or(false)
+        });
     }
 
     #[test]
@@ -552,8 +712,12 @@ mod tests {
         wait_progress(&svc, id, 2);
         svc.checkpoint(id).unwrap();
         svc.kill_proc(id, 1).unwrap();
-        std::thread::sleep(Duration::from_millis(30));
+        wait_unhealthy(&svc, id, 1);
         assert_eq!(svc.health(id).unwrap(), vec![true, false]);
+        // unhealthy + reachable -> §6.3 case 2: restart in place
+        let report = svc.health_report(id).unwrap();
+        assert_eq!(report.unhealthy, vec![1]);
+        assert!(!report.needs_new_vms());
         let recovered = svc.monitor_round();
         assert_eq!(recovered, vec![id]);
         assert_eq!(svc.health(id).unwrap(), vec![true, true]);
@@ -568,9 +732,83 @@ mod tests {
             .unwrap();
         wait_progress(&svc, id, 2);
         svc.kill_proc(id, 0).unwrap();
-        std::thread::sleep(Duration::from_millis(30));
+        wait_unhealthy(&svc, id, 0);
         svc.monitor_round();
         assert_eq!(svc.state(id), Some(AppState::Error));
+    }
+
+    #[test]
+    fn vm_failure_reprovisions_and_restores() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 5);
+        let ck = svc.checkpoint(id).unwrap();
+        svc.kill_vm(id).unwrap();
+        // unreachable -> §6.3 case 1: re-provision + restore
+        let report = svc.health_report(id).unwrap();
+        assert_eq!(report.unreachable, vec![0]);
+        assert!(report.needs_new_vms());
+        let recovered = svc.monitor_round();
+        assert_eq!(recovered, vec![id]);
+        assert_eq!(svc.state(id), Some(AppState::Running));
+        assert_eq!(svc.health(id).unwrap(), vec![true]);
+        // the fresh host resumed from the checkpoint, not from scratch
+        let j = svc.info(id).unwrap();
+        assert!(j.get("iteration").as_u64().unwrap() >= ck.iteration);
+    }
+
+    #[test]
+    fn vm_failure_without_checkpoint_errors() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 32 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        svc.kill_vm(id).unwrap();
+        svc.monitor_round();
+        assert_eq!(svc.state(id), Some(AppState::Error));
+    }
+
+    #[test]
+    fn error_recovery_roundtrips_through_lifecycle() {
+        // §5.3 passive recovery in the real driver: with auto-recovery
+        // off the monitor parks the app in ERROR; a later restart walks
+        // ERROR → RESTARTING → RUNNING
+        let svc = svc_with(|cfg| ServiceConfig { auto_recover: false, ..cfg });
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 3);
+        svc.checkpoint(id).unwrap();
+        svc.kill_proc(id, 0).unwrap();
+        wait_unhealthy(&svc, id, 0);
+        assert!(svc.monitor_round().is_empty());
+        assert_eq!(svc.state(id), Some(AppState::Error));
+        svc.restart(id, None).unwrap();
+        assert_eq!(svc.state(id), Some(AppState::Running));
+        assert_eq!(svc.health(id).unwrap(), vec![true]);
+    }
+
+    #[test]
+    fn monitor_auto_recovers_error_state_apps() {
+        // with auto-recovery on, an app parked in ERROR (here: its host
+        // thread was lost after a checkpoint existed) is picked up by a
+        // later monitor round via ERROR → RESTARTING
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 3);
+        svc.checkpoint(id).unwrap();
+        // force ERROR directly: checkpointing with the host gone fails
+        svc.kill_vm(id).unwrap();
+        assert!(svc.checkpoint(id).is_err());
+        assert_eq!(svc.state(id), Some(AppState::Error));
+        let recovered = svc.monitor_round();
+        assert_eq!(recovered, vec![id]);
+        assert_eq!(svc.state(id), Some(AppState::Running));
     }
 
     #[test]

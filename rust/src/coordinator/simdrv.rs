@@ -12,7 +12,15 @@
 //! Key paper behaviours encoded here:
 //! * lazy remote upload (§5.2): the app resumes as soon as images hit
 //!   local disk; uploads drain in the background (ablation: eager);
-//! * passive recovery (§5.3): failed VMs are replaced before restart;
+//! * the two §6.3 recovery cases: VM failure re-provisions replacement
+//!   VMs and restores (case 1), application failure restarts the
+//!   processes in place from the last image (case 2,
+//!   [`SimCacs::inject_app_failure`]); heartbeat round-trips pay the
+//!   deadline-budget resolve-wave cost of dead daemons, mirroring
+//!   `RealMonitor`;
+//! * passive recovery (§5.3): failed VMs are replaced before restart,
+//!   and when the cloud is out of capacity the app parks in ERROR and
+//!   recovery retries with a back-off (ERROR → RESTARTING on success);
 //! * cloning/migration (§5.3): a new app on another cloud restarts from
 //!   the source app's images in shared storage (Fig 5);
 //! * OpenStack's shared management/data network (§7.4): checkpoint
@@ -24,7 +32,7 @@ use crate::coordinator::lifecycle::AppState;
 use crate::coordinator::types::{AppRecord, Asr, CkptRecord, WorkloadSpec};
 use crate::dckpt::protocol::{self, DckptParams};
 use crate::metrics::Recorder;
-use crate::monitor::sim::{heartbeat_rtt, MonitorParams};
+use crate::monitor::sim::{heartbeat_rtt, heartbeat_rtt_with_failures, MonitorParams};
 use crate::netsim::{FlowId, LinkId, NetSim};
 use crate::provision::{SshExecutor, SshParams};
 use crate::simcloud::{CloudEvent, IaasCloud, ReservationId, VmState};
@@ -55,6 +63,12 @@ pub struct SimParams {
     /// (c1) and one SSH thread (c2).
     pub poll_cost: f64,
     pub ssh_cost: f64,
+    /// Passive-recovery retry back-off (s): when replacement VMs are
+    /// unavailable the app parks in ERROR and recovery is retried after
+    /// this delay (§5.3).
+    pub recovery_retry_delay: f64,
+    /// Retry budget before an ERROR becomes permanent.
+    pub max_recovery_retries: usize,
 }
 
 impl Default for SimParams {
@@ -69,6 +83,8 @@ impl Default for SimParams {
             image_overhead_bytes: protocol::LU_IMAGE_OVERHEAD_BYTES,
             poll_cost: 40e3,
             ssh_cost: 120e3,
+            recovery_retry_delay: 30.0,
+            max_recovery_retries: 5,
         }
     }
 }
@@ -121,6 +137,11 @@ pub struct SimAppExt {
     pub heartbeats: Vec<(f64, f64)>,
     /// Apps this one was cloned from (migration bookkeeping).
     pub cloned_from: Option<AppId>,
+    /// Injected application-level failure: the health hook reports
+    /// unhealthy while the VMs stay reachable (§6.3 case 2).
+    pub app_unhealthy: bool,
+    /// Passive-recovery retries consumed while parked in ERROR.
+    pub recovery_retries: usize,
 }
 
 /// Start control-plane background chatter on a shared mgmt/data link
@@ -331,6 +352,17 @@ impl SimCacs {
     /// DELETE /coordinators/:id (§5.4).
     pub fn terminate(&mut self, app: AppId) {
         self.sim.after(0.0, move |sim, w| terminate(sim, w, app));
+    }
+
+    /// Mark the app's health hook failing while its VMs stay reachable
+    /// (application-level fault injection, §6.3 case 2).  The next
+    /// heartbeat restarts the processes in place from the last image.
+    pub fn inject_app_failure(&mut self, app: AppId) {
+        self.sim.after(0.0, move |_sim, w| {
+            if let Some(e) = w.ext.get_mut(&app) {
+                e.app_unhealthy = true;
+            }
+        });
     }
 
     /// Kill a random server hosting the app's VMs (fault injection).
@@ -560,22 +592,55 @@ fn schedule_heartbeat(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
         let cloud_idx = rec.cloud_idx;
         let vms = rec.vms.clone();
         let now = sim.now();
-        let rtt = heartbeat_rtt(&w.params.mon, &mut w.rng, n);
-        w.ext.get_mut(&app).unwrap().heartbeats.push((now, rtt));
         // in-VM daemons detect failures the cloud never reports
-        // (the OpenStack case, §6.1)
-        let failed = vms.iter().any(|vm| {
-            w.clouds[cloud_idx]
-                .vm_record(*vm)
-                .map(|r| r.state == VmState::Failed)
-                .unwrap_or(true)
-        });
-        if failed && state == AppState::Running {
+        // (the OpenStack case, §6.1); node index = position in the tree
+        let dead_idx: Vec<usize> = vms
+            .iter()
+            .enumerate()
+            .filter(|&(i, vm)| {
+                i < n
+                    && w.clouds[cloud_idx]
+                        .vm_record(*vm)
+                        .map(|r| r.state == VmState::Failed)
+                        .unwrap_or(true)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        // the round-trip pays the deadline-budget resolve waves when
+        // daemons are dead — the same semantics RealMonitor measures
+        let rtt = heartbeat_rtt_with_failures(&w.params.mon, &mut w.rng, n, &dead_idx);
+        w.ext.get_mut(&app).unwrap().heartbeats.push((now, rtt));
+        let unreachable = !dead_idx.is_empty() || vms.len() < n;
+        let unhealthy = w.ext[&app].app_unhealthy;
+        if state == AppState::Running && unreachable {
+            // §6.3 case 1: VM failure — replacement VMs + restore
             recover(sim, w, app);
+        } else if state == AppState::Running && unhealthy {
+            // §6.3 case 2: application failure — restart in place
+            restart_in_place(sim, w, app);
         } else {
             schedule_heartbeat(sim, w, app);
         }
     });
+}
+
+/// §6.3 case 2: the hook reports an application-level failure but every
+/// VM is reachable — restart the processes in place from the last image
+/// (no re-provisioning, the virtual cluster is kept).
+fn restart_in_place(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get_mut(app) else { return };
+    if rec.latest_ckpt().is_none() {
+        log::warn!("{app}: application failure without checkpoint -> ERROR");
+        rec.lifecycle.to(now, AppState::Error);
+        return;
+    }
+    if !rec.lifecycle.to(now, AppState::Restarting) {
+        return;
+    }
+    // the restart replaces the stuck processes, clearing the fault
+    w.ext.get_mut(&app).unwrap().app_unhealthy = false;
+    start_downloads(sim, w, app);
 }
 
 fn on_vm_failed(sim: &mut Sim<SimWorld>, w: &mut SimWorld, cloud_idx: usize, vm: VmId) {
@@ -606,6 +671,7 @@ fn recover(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
         return;
     }
     let cloud_idx = rec.cloud_idx;
+    let n_vms = rec.asr.n_vms;
     // passive recovery (§5.3): replace unreachable VMs
     let dead: Vec<VmId> = rec
         .vms
@@ -619,14 +685,17 @@ fn recover(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
         })
         .collect();
     let template = rec.asr.template.clone();
-    if dead.is_empty() {
+    // drop dead VMs from the record; the replacement request covers the
+    // whole deficit vs the ASR, so a retry after a failed attempt (which
+    // already dropped its dead VMs) still restores full strength
+    let rec = w.db.get_mut(app).unwrap();
+    rec.vms.retain(|vm| !dead.contains(vm));
+    let missing = n_vms.saturating_sub(rec.vms.len());
+    if missing == 0 {
         start_downloads(sim, w, app);
         return;
     }
-    // drop dead VMs from the record; request replacements
-    let rec = w.db.get_mut(app).unwrap();
-    rec.vms.retain(|vm| !dead.contains(vm));
-    match w.clouds[cloud_idx].request_vms(now, dead.len(), &template) {
+    match w.clouds[cloud_idx].request_vms(now, missing, &template) {
         Ok(rsv) => {
             w.rsv_map.insert((cloud_idx, rsv.0), (app, RsvPurpose::Replacement));
             schedule_poll(sim, w, cloud_idx);
@@ -634,8 +703,27 @@ fn recover(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
         Err(e) => {
             log::warn!("{app}: replacement VMs unavailable: {e}");
             w.db.get_mut(app).unwrap().lifecycle.to(now, AppState::Error);
+            schedule_recovery_retry(sim, w, app);
         }
     }
+}
+
+/// §5.3 passive recovery from ERROR: retry the replacement request with
+/// a back-off until capacity frees or the retry budget runs out.  A
+/// successful retry walks ERROR → RESTARTING → RUNNING.
+fn schedule_recovery_retry(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let Some(ext) = w.ext.get_mut(&app) else { return };
+    if ext.recovery_retries >= w.params.max_recovery_retries {
+        log::warn!("{app}: recovery retry budget exhausted; ERROR is permanent");
+        return;
+    }
+    ext.recovery_retries += 1;
+    sim.after(w.params.recovery_retry_delay, move |sim, w| {
+        let Some(rec) = w.db.get(app) else { return };
+        if rec.lifecycle.state() == AppState::Error && rec.latest_ckpt().is_some() {
+            recover(sim, w, app);
+        }
+    });
 }
 
 fn replacement_ready(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, _rsv: ReservationId) {
@@ -813,8 +901,11 @@ fn finish_download(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
         let now = sim.now();
         if let Some(rec) = w.db.get_mut(app) {
             if rec.lifecycle.to(now, AppState::Running) {
-                if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.restart_timings.last_mut()) {
-                    t.running = now;
+                if let Some(e) = w.ext.get_mut(&app) {
+                    if let Some(t) = e.restart_timings.last_mut() {
+                        t.running = now;
+                    }
+                    e.recovery_retries = 0; // recovered; fresh budget
                 }
                 schedule_heartbeat(sim, w, app);
             }
@@ -1030,6 +1121,105 @@ mod tests {
         cacs.inject_vm_failure(app);
         cacs.run_until(cacs.sim.now() + 600.0);
         assert_eq!(cacs.state(app), Some(AppState::Error));
+    }
+
+    #[test]
+    fn app_failure_restarts_in_place() {
+        // §6.3 case 2: unhealthy hook, reachable VMs — restart without
+        // re-provisioning
+        let mut cacs = SimCacs::new(14);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(4));
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        let vms_before = cacs.world.db.get(app).unwrap().vms.clone();
+        cacs.inject_app_failure(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let ext = cacs.ext(app).unwrap();
+        assert_eq!(ext.restart_timings.len(), 1);
+        assert!(!ext.app_unhealthy, "restart must clear the injected fault");
+        // the virtual cluster was kept
+        assert_eq!(cacs.world.db.get(app).unwrap().vms, vms_before);
+    }
+
+    #[test]
+    fn app_failure_without_checkpoint_is_error() {
+        let mut cacs = SimCacs::new(15);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(2));
+        cacs.inject_app_failure(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Error));
+    }
+
+    #[test]
+    fn error_recovery_retries_until_capacity_frees() {
+        // §5.3 passive recovery from ERROR: the cloud is full when the
+        // replacement is requested, so the app parks in ERROR; once
+        // capacity frees, a retry walks ERROR → RESTARTING → RUNNING
+        let mut cacs = SimCacs::new(16);
+        let cloud = cacs.add_snooze(2); // 48 slots
+        let hog1 = cacs.submit(cloud, lu_asr(32)).unwrap();
+        let hog2 = cacs.submit(cloud, lu_asr(8)).unwrap();
+        let app = cacs.submit(cloud, lu_asr(8)).unwrap();
+        cacs.run_until(3600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        assert_eq!(cacs.world.clouds[cloud].free_slots(&Default::default()), 0);
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        cacs.inject_vm_failure(app);
+        cacs.run_until(cacs.sim.now() + 20.0);
+        assert_eq!(cacs.state(app), Some(AppState::Error));
+        // free capacity; the scheduled retry picks the app back up
+        cacs.terminate(hog1);
+        cacs.terminate(hog2);
+        cacs.run_until(cacs.sim.now() + 1800.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let rec = cacs.world.db.get(app).unwrap();
+        assert_eq!(rec.vms.len(), 8);
+        // the walk out of ERROR went through RESTARTING
+        let hist: Vec<AppState> =
+            rec.lifecycle.history.iter().map(|(_, s)| *s).collect();
+        let err_at = hist.iter().position(|&s| s == AppState::Error).unwrap();
+        assert!(
+            hist[err_at..].contains(&AppState::Restarting),
+            "no ERROR → RESTARTING walk in {hist:?}"
+        );
+    }
+
+    #[test]
+    fn heartbeat_rtt_reflects_dead_daemons() {
+        // healthy rounds stay cheap; the round that detects failed VMs
+        // pays the resolve-wave cost.  OpenStack cloud: no failure
+        // notification, so detection happens *through* the heartbeat.
+        let mut cacs = SimCacs::new(17);
+        let cloud = cacs.add_openstack(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(8));
+        let t = cacs.sim.now();
+        cacs.run_until(t + 60.0);
+        let healthy_max = cacs
+            .ext(app)
+            .unwrap()
+            .heartbeats
+            .iter()
+            .map(|&(_, r)| r)
+            .fold(0.0f64, f64::max);
+        assert!(healthy_max < cacs.world.params.mon.hop_deadline * 4.0);
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 300.0);
+        let n_before = cacs.ext(app).unwrap().heartbeats.len();
+        cacs.inject_vm_failure(app);
+        cacs.run_until(cacs.sim.now() + 1800.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let failed_max = cacs.ext(app).unwrap().heartbeats[n_before..]
+            .iter()
+            .map(|&(_, r)| r)
+            .fold(0.0f64, f64::max);
+        assert!(
+            failed_max > healthy_max,
+            "detecting round must pay resolve waves: {failed_max} vs {healthy_max}"
+        );
     }
 
     #[test]

@@ -7,10 +7,32 @@
 //! of unhealthy or unreachable nodes to the Monitoring Manager, whose
 //! heartbeat round-trip is logarithmic in the node count (Fig 4c).
 //!
+//! # Deadline budget
+//!
+//! A heartbeat carries one whole-round deadline down the tree: a daemon
+//! probed with deadline `D` gives its children `D - hop` (their share of
+//! the *remaining* budget, never a fresh full timeout), keeps all child
+//! probes outstanding concurrently, and always replies to its own parent
+//! on time, reporting silent children as *timed out*.  The Monitoring
+//! Manager re-probes timed-out subtrees directly, in parallel resolve
+//! waves, so a dead subtree never masks its alive ancestors and a round
+//! costs ~`hop × (height + 2)` plus one wave per chained dead ancestor —
+//! not `dead × timeout`.
+//!
+//! # Recovery
+//!
+//! The [`HealthReport`] drives the paper's two §6.3 recovery cases:
+//! *unreachable* nodes (VM/server failure) need new VMs provisioned and
+//! a restore from the last checkpoint (`needs_new_vms`), while
+//! *unhealthy* nodes (application failure, VM reachable) only need the
+//! processes restarted in place from the last image.  Both drivers — the
+//! real-mode `CacsService` monitor thread and the sim-mode `simdrv`
+//! heartbeat — consume reports with these semantics.
+//!
 //! * [`tree`] — the tree topology and the pure aggregation semantics
 //!   (which nodes get reported when daemons are unreachable).
 //! * [`sim`] — the latency model for Fig 4c and for detection delays in
-//!   the figure benches.
+//!   the figure benches, including the failure/resolve-wave cost model.
 //! * [`real`] — a thread-per-daemon implementation passing heartbeat
 //!   messages over channels, used by the real-mode examples.
 

@@ -3,17 +3,34 @@
 //! on clouds without failure notification, i.e. OpenStack, and used by
 //! the real-mode examples to detect injected failures).
 //!
-//! Probe semantics match [`super::tree`]: a daemon answering a probe
-//! reports itself plus its subtree; when a child does not answer within
-//! the timeout the prober marks it unreachable and probes the orphaned
-//! grandchildren itself, so failures never mask descendants.
+//! # Deadline-budget semantics
+//!
+//! A heartbeat carries one **whole-round deadline** down the tree rather
+//! than a fresh per-hop timeout: a daemon probed with deadline `D` probes
+//! its children with `D - hop` (their share of the remaining budget, not
+//! a full new budget) and stops collecting replies halfway between the
+//! children's deadline and its own, so it always answers its parent on
+//! time even when part of its subtree is dead.  Children that miss their
+//! deadline are reported as *timed out* — **not** unreachable — and the
+//! Monitoring Manager re-probes those subtrees directly in parallel
+//! resolve waves on [`ThreadPool::shared`].  Only a node that fails a
+//! direct probe is declared unreachable.
+//!
+//! This fixes the v1 design where children were probed sequentially with
+//! stacking per-hop timeouts: one dead leaf made its alive parent blow
+//! the grandparent's timeout, cascading false "unreachable" reports up
+//! the tree and degrading heartbeat latency to O(dead × timeout).  Under
+//! the deadline budget a round costs ~`hop × (height + 2)` plus one
+//! bounded resolve wave per *chained* dead ancestor, and an alive node is
+//! never reported unreachable because of deaths below it.
 
 use super::tree::BroadcastTree;
 use super::HealthReport;
+use crate::util::pool::ThreadPool;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// The user-supplied health hook: `hook(node) -> healthy?` (§6.3 "a
 /// user-defined application-specific routine can define and test the
@@ -21,7 +38,7 @@ use std::time::Duration;
 pub type HealthHook = Arc<dyn Fn(usize) -> bool + Send + Sync>;
 
 enum Msg {
-    Probe { reply: Sender<Vec<Entry>> },
+    Probe { deadline: Instant, reply: Sender<Vec<Entry>> },
     Shutdown,
 }
 
@@ -29,49 +46,93 @@ enum Msg {
 enum Entry {
     Ok(usize),
     Unhealthy(usize),
-    Unreachable(usize),
+    /// Child did not report before its deadline share.  The Monitoring
+    /// Manager resolves it with a direct probe; daemons never declare a
+    /// peer unreachable themselves.
+    TimedOut(usize),
 }
 
 struct AddressBook {
     senders: Vec<Sender<Msg>>,
     alive: Vec<Arc<AtomicBool>>,
     tree: BroadcastTree,
-    timeout: Duration,
+    /// Per-hop share of the heartbeat deadline budget.
+    hop: Duration,
     hook: HealthHook,
 }
 
-fn probe_subtree(book: &Arc<AddressBook>, node: usize) -> Vec<Entry> {
+/// Receive one message, giving up at `deadline`.
+fn recv_until<T>(rx: &Receiver<T>, deadline: Instant) -> Option<T> {
+    rx.recv_timeout(deadline.saturating_duration_since(Instant::now())).ok()
+}
+
+/// Directly probe `node` with a deadline budget sized to its subtree.
+/// `None` = no report before the deadline (or the daemon channel is
+/// gone) — the caller treats the node as unreachable.
+fn probe_direct(book: &Arc<AddressBook>, node: usize) -> Option<Vec<Entry>> {
+    let h = book.tree.subtree_height(node) as u32;
+    let deadline = Instant::now() + book.hop * (h + 2);
     let (tx, rx) = channel();
-    let sent = book.senders[node].send(Msg::Probe { reply: tx }).is_ok();
-    if sent {
-        if let Ok(entries) = rx.recv_timeout(book.timeout) {
-            return entries;
-        }
+    if book.senders[node].send(Msg::Probe { deadline, reply: tx }).is_err() {
+        return None;
     }
-    // child unreachable: report it and adopt its children
-    let mut out = vec![Entry::Unreachable(node)];
-    for c in book.tree.children(node) {
-        out.extend(probe_subtree(book, c));
-    }
-    out
+    recv_until(&rx, deadline)
 }
 
 fn daemon_loop(book: Arc<AddressBook>, me: usize, inbox: Receiver<Msg>) {
+    // Replies swallowed while "dead": holding the senders (instead of
+    // dropping them) makes the prober wait out the real deadline, like a
+    // blackholed VM would — dropping them would leak the fault through
+    // the channel as an instant disconnect.
+    let mut swallowed: Vec<Sender<Vec<Entry>>> = Vec::new();
     while let Ok(msg) = inbox.recv() {
         match msg {
             Msg::Shutdown => return,
-            Msg::Probe { reply } => {
+            Msg::Probe { deadline, reply } => {
                 if !book.alive[me].load(Ordering::SeqCst) {
-                    // dead daemon: swallow the probe; prober times out
+                    swallowed.push(reply);
+                    // old entries' deadlines lapsed long ago (their
+                    // probers stopped listening); keep the tail bounded
+                    if swallowed.len() >= 64 {
+                        swallowed.drain(..32);
+                    }
                     continue;
                 }
+                // anything still held from a dead phase is stale by now;
+                // dropping it at worst turns into a TimedOut the resolve
+                // wave re-checks with a direct probe
+                swallowed.clear();
                 let mut entries = vec![if (book.hook)(me) {
                     Entry::Ok(me)
                 } else {
                     Entry::Unhealthy(me)
                 }];
+                // children get the remaining budget minus one hop share;
+                // fire every probe first so their waits overlap instead
+                // of stacking
+                let child_deadline = deadline
+                    .checked_sub(book.hop)
+                    .unwrap_or(deadline);
+                let mut waits = Vec::new();
                 for c in book.tree.children(me) {
-                    entries.extend(probe_subtree(&book, c));
+                    let (tx, rx) = channel();
+                    let probe = Msg::Probe { deadline: child_deadline, reply: tx };
+                    if book.senders[c].send(probe).is_ok() {
+                        waits.push((c, rx));
+                    } else {
+                        entries.push(Entry::TimedOut(c));
+                    }
+                }
+                // collect until halfway between the children's deadline
+                // and ours: grace for channel delivery, while still
+                // answering our own parent on time
+                let collect_until =
+                    child_deadline + deadline.saturating_duration_since(child_deadline) / 2;
+                for (c, rx) in waits {
+                    match recv_until(&rx, collect_until) {
+                        Some(sub) => entries.extend(sub),
+                        None => entries.push(Entry::TimedOut(c)),
+                    }
                 }
                 let _ = reply.send(entries);
             }
@@ -87,8 +148,9 @@ pub struct RealMonitor {
 
 impl RealMonitor {
     /// Spawn `n` daemon threads with `hook` as the health check and
-    /// `timeout` as the per-hop unreachability bound.
-    pub fn start(n: usize, hook: HealthHook, timeout: Duration) -> RealMonitor {
+    /// `hop` as the per-hop share of the whole-heartbeat deadline budget
+    /// (total budget ≈ `hop × (height + 2)`, see [`Self::budget`]).
+    pub fn start(n: usize, hook: HealthHook, hop: Duration) -> RealMonitor {
         assert!(n >= 1);
         let tree = BroadcastTree::binary(n);
         let mut senders = Vec::with_capacity(n);
@@ -100,7 +162,7 @@ impl RealMonitor {
         }
         let alive: Vec<Arc<AtomicBool>> =
             (0..n).map(|_| Arc::new(AtomicBool::new(true))).collect();
-        let book = Arc::new(AddressBook { senders, alive, tree, timeout, hook });
+        let book = Arc::new(AddressBook { senders, alive, tree, hop, hook });
         let handles = inboxes
             .into_iter()
             .enumerate()
@@ -108,6 +170,8 @@ impl RealMonitor {
                 let book = book.clone();
                 std::thread::Builder::new()
                     .name(format!("cacs-mon-{i}"))
+                    // daemons are tiny and there can be thousands of them
+                    .stack_size(128 * 1024)
                     .spawn(move || daemon_loop(book, i, inbox))
                     .expect("spawn monitor daemon")
             })
@@ -115,20 +179,54 @@ impl RealMonitor {
         RealMonitor { book, handles }
     }
 
+    /// The whole-heartbeat deadline budget for this tree: one hop share
+    /// per level plus slack for the leaf hook and the super-root hop.
+    pub fn budget(&self) -> Duration {
+        self.book.hop * (self.book.tree.height() as u32 + 2)
+    }
+
     /// One heartbeat round-trip; the Monitoring Manager plays super-root.
+    ///
+    /// Wave 0 probes the root with the whole-round budget.  Every node a
+    /// wave reports as timed out is re-probed *directly* (in parallel on
+    /// the shared pool) in the next wave with a budget sized to its
+    /// subtree; a node failing its direct probe is unreachable and its
+    /// children join the next wave.  Alive ancestors of dead nodes are
+    /// therefore never misreported, and the wave count is bounded by the
+    /// longest chain of dead ancestors, not the number of dead nodes.
     pub fn heartbeat(&self) -> HealthReport {
-        let entries = probe_subtree(&self.book, 0);
-        let mut report = HealthReport { unhealthy: vec![], unreachable: vec![] };
-        for e in entries {
-            match e {
-                Entry::Ok(_) => {}
-                Entry::Unhealthy(i) => report.unhealthy.push(i),
-                Entry::Unreachable(i) => report.unreachable.push(i),
+        let mut unhealthy = vec![];
+        let mut unreachable = vec![];
+        let mut pending = vec![0usize];
+        while !pending.is_empty() {
+            let book = self.book.clone();
+            let results = ThreadPool::shared()
+                .map(pending, move |node| (node, probe_direct(&book, node)));
+            let mut next = vec![];
+            for (node, outcome) in results {
+                match outcome {
+                    Some(entries) => {
+                        for e in entries {
+                            match e {
+                                Entry::Ok(_) => {}
+                                Entry::Unhealthy(i) => unhealthy.push(i),
+                                Entry::TimedOut(c) => next.push(c),
+                            }
+                        }
+                    }
+                    None => {
+                        unreachable.push(node);
+                        next.extend(self.book.tree.children(node));
+                    }
+                }
             }
+            pending = next;
         }
-        report.unhealthy.sort();
-        report.unreachable.sort();
-        report
+        unhealthy.sort();
+        unhealthy.dedup();
+        unreachable.sort();
+        unreachable.dedup();
+        HealthReport { unhealthy, unreachable }
     }
 
     /// Kill daemon `i` (it stops answering probes) — VM-failure injection.
@@ -161,13 +259,15 @@ impl Drop for RealMonitor {
 mod tests {
     use super::*;
 
+    const HOP: Duration = Duration::from_millis(60);
+
     fn all_healthy_hook() -> HealthHook {
         Arc::new(|_| true)
     }
 
     #[test]
     fn all_healthy_roundtrip() {
-        let mon = RealMonitor::start(7, all_healthy_hook(), Duration::from_millis(200));
+        let mon = RealMonitor::start(7, all_healthy_hook(), HOP);
         let report = mon.heartbeat();
         assert!(report.all_healthy());
     }
@@ -175,7 +275,7 @@ mod tests {
     #[test]
     fn detects_unhealthy_hook() {
         let hook: HealthHook = Arc::new(|i| i != 3 && i != 5);
-        let mon = RealMonitor::start(8, hook, Duration::from_millis(200));
+        let mon = RealMonitor::start(8, hook, HOP);
         let report = mon.heartbeat();
         assert_eq!(report.unhealthy, vec![3, 5]);
         assert!(report.unreachable.is_empty());
@@ -183,33 +283,46 @@ mod tests {
 
     #[test]
     fn detects_dead_leaf() {
-        let mon = RealMonitor::start(8, all_healthy_hook(), Duration::from_millis(100));
+        let mon = RealMonitor::start(8, all_healthy_hook(), HOP);
         mon.kill_daemon(6);
         let report = mon.heartbeat();
         assert_eq!(report.unreachable, vec![6]);
+        assert!(report.unhealthy.is_empty());
     }
 
     #[test]
     fn dead_interior_does_not_mask_children() {
-        let mon = RealMonitor::start(7, all_healthy_hook(), Duration::from_millis(100));
+        let mon = RealMonitor::start(7, all_healthy_hook(), HOP);
         // node 1 has children 3 and 4
         mon.kill_daemon(1);
         let report = mon.heartbeat();
         assert_eq!(report.unreachable, vec![1]);
-        assert!(report.unhealthy.is_empty()); // 3 and 4 answered via adoption
+        assert!(report.unhealthy.is_empty()); // 3 and 4 answered a resolve wave
     }
 
     #[test]
     fn dead_root_handled_by_super_root() {
-        let mon = RealMonitor::start(5, all_healthy_hook(), Duration::from_millis(100));
+        let mon = RealMonitor::start(5, all_healthy_hook(), HOP);
         mon.kill_daemon(0);
         let report = mon.heartbeat();
         assert_eq!(report.unreachable, vec![0]);
     }
 
     #[test]
+    fn dead_chain_reports_each_link() {
+        // 0 -> 2 -> 6 dead in a row: one resolve wave per link, and the
+        // alive leaves under 6 (13, 14) still answer
+        let mon = RealMonitor::start(15, all_healthy_hook(), HOP);
+        mon.kill_daemon(2);
+        mon.kill_daemon(6);
+        let report = mon.heartbeat();
+        assert_eq!(report.unreachable, vec![2, 6]);
+        assert!(report.unhealthy.is_empty());
+    }
+
+    #[test]
     fn revive_clears_report() {
-        let mon = RealMonitor::start(4, all_healthy_hook(), Duration::from_millis(100));
+        let mon = RealMonitor::start(4, all_healthy_hook(), HOP);
         mon.kill_daemon(2);
         assert_eq!(mon.heartbeat().unreachable, vec![2]);
         mon.revive_daemon(2);
@@ -218,7 +331,7 @@ mod tests {
 
     #[test]
     fn single_node_tree() {
-        let mon = RealMonitor::start(1, all_healthy_hook(), Duration::from_millis(100));
+        let mon = RealMonitor::start(1, all_healthy_hook(), HOP);
         assert!(mon.heartbeat().all_healthy());
         mon.kill_daemon(0);
         assert_eq!(mon.heartbeat().unreachable, vec![0]);
@@ -230,9 +343,65 @@ mod tests {
         let sick = Arc::new(AtomicUsize::new(usize::MAX));
         let s2 = sick.clone();
         let hook: HealthHook = Arc::new(move |i| i != s2.load(Ordering::SeqCst));
-        let mon = RealMonitor::start(6, hook, Duration::from_millis(200));
+        let mon = RealMonitor::start(6, hook, HOP);
         assert!(mon.heartbeat().all_healthy());
         sick.store(4, Ordering::SeqCst);
         assert_eq!(mon.heartbeat().unhealthy, vec![4]);
+    }
+
+    #[test]
+    fn dead_leaf_under_deep_alive_chain_no_false_positives() {
+        // The v1 timeout-stacking regression: killing leaf 126 (path
+        // 0→2→6→14→30→62→126) made every alive ancestor on the path blow
+        // its parent's timeout in turn.  With the deadline budget only
+        // the dead node is reported and the round stays ~height×hop.
+        let mon = RealMonitor::start(127, all_healthy_hook(), HOP);
+        mon.kill_daemon(126);
+        let t0 = Instant::now();
+        let report = mon.heartbeat();
+        let elapsed = t0.elapsed();
+        assert_eq!(report.unreachable, vec![126]);
+        assert!(report.unhealthy.is_empty());
+        // one deadline budget for the tree wave + one leaf resolve wave;
+        // the slack also covers other tests contending for the shared
+        // pool under `cargo test` — still nowhere near dead×timeout
+        assert!(
+            elapsed < mon.budget() * 5,
+            "heartbeat took {elapsed:?}, budget {:?}",
+            mon.budget()
+        );
+    }
+
+    #[test]
+    fn thousand_node_tree_ten_dead_leaves() {
+        // Acceptance: n=1023 (full height-9 tree) with 10 dead leaves
+        // reports exactly those 10, no false positives on alive
+        // ancestors, within ~height×hop — not 10×timeout.
+        let n = 1023;
+        let dead: Vec<usize> = (600..610).collect(); // all leaves (depth 9)
+        let mon = RealMonitor::start(n, all_healthy_hook(), HOP);
+        for &d in &dead {
+            assert!(mon.book.tree.children(d).is_empty(), "{d} must be a leaf");
+            mon.kill_daemon(d);
+        }
+        let t0 = Instant::now();
+        let report = mon.heartbeat();
+        let elapsed = t0.elapsed();
+        assert_eq!(report.unreachable, dead);
+        assert!(report.unhealthy.is_empty());
+        // wave 0 + one parallel leaf resolve wave; the wave batches by
+        // pool width, so size the bound by worker count, then double it
+        // for cross-test contention on the shared pool under `cargo test`
+        let workers = ThreadPool::shared().size();
+        let batches = (dead.len() + workers - 1) / workers;
+        let bound = (mon.budget() + HOP * (2 * batches as u32 + 4)) * 2;
+        assert!(
+            elapsed < bound,
+            "heartbeat took {elapsed:?}, bound {bound:?} (budget {:?})",
+            mon.budget()
+        );
+        // and sanity: even the padded bound is well below the v1 regime
+        // of dead × full-timeout
+        assert!(bound < HOP * (dead.len() as u32) * (9 + 2));
     }
 }

@@ -20,6 +20,12 @@ pub struct MonitorParams {
     pub period: f64,
     /// Missed-heartbeat timeout before a node counts unreachable (s).
     pub timeout: f64,
+    /// Per-hop share of the whole-heartbeat deadline budget (s) — the
+    /// sim mirror of `RealMonitor`'s `hop`: a node's children must reply
+    /// one `hop_deadline` before the node itself must, so a dead subtree
+    /// stalls its prober by its deadline share, never by a fresh full
+    /// timeout per hop.
+    pub hop_deadline: f64,
 }
 
 impl Default for MonitorParams {
@@ -30,6 +36,7 @@ impl Default for MonitorParams {
             hook_time: 0.002,
             period: 5.0,
             timeout: 2.0,
+            hop_deadline: 0.01,
         }
     }
 }
@@ -51,6 +58,64 @@ pub fn heartbeat_rtt(params: &MonitorParams, rng: &mut Rng, n: usize) -> f64 {
     // ascent
     for _ in 0..levels {
         t += params.hop_latency * rng.lognormal(1.0, params.hop_sigma);
+    }
+    t
+}
+
+/// One heartbeat round-trip with `dead` daemons (node indices) not
+/// answering — the latency model of the deadline-budgeted resolve waves
+/// `RealMonitor::heartbeat` runs (fig4c measures the same semantics):
+///
+/// * wave 0 stalls until the shallowest dead node's share of the
+///   deadline budget lapses (shallow deaths have later deadlines);
+/// * each *root* of a dead subtree then costs one direct-probe resolve
+///   wave whose budget is sized to that subtree, and a dead child of a
+///   dead parent needs one extra wave per link;
+/// * dead nodes therefore cost ~height×hop_deadline in total — bounded
+///   by the chain depth of the dead set, **not** dead × timeout.
+pub fn heartbeat_rtt_with_failures(
+    params: &MonitorParams,
+    rng: &mut Rng,
+    n: usize,
+    dead: &[usize],
+) -> f64 {
+    let t = heartbeat_rtt(params, rng, n);
+    if dead.is_empty() {
+        return t;
+    }
+    let tree = BroadcastTree::binary(n);
+    let mut is_dead = vec![false; n];
+    for &i in dead {
+        assert!(i < n, "dead node {i} out of range (n={n})");
+        is_dead[i] = true;
+    }
+    let h = tree.height();
+    // wave 0: the prober of the shallowest dead node holds its reply
+    // open until that child's deadline share lapses
+    let dmin = dead.iter().map(|&i| tree.depth_of(i)).min().unwrap();
+    let mut t = t.max(params.hop_deadline * (h + 2 - dmin) as f64);
+    // resolve waves, starting from the roots of the dead subtrees
+    let mut pending: Vec<usize> = dead
+        .iter()
+        .copied()
+        .filter(|&i| tree.parent(i).map_or(true, |p| !is_dead[p]))
+        .collect();
+    while !pending.is_empty() {
+        let wave_budget = pending
+            .iter()
+            .map(|&i| tree.subtree_height(i) + 2)
+            .max()
+            .unwrap();
+        t += params.hop_deadline * wave_budget as f64
+            + (2.0 * params.hop_latency + params.hook_time)
+                * rng.lognormal(1.0, params.hop_sigma);
+        // alive children answer the next direct probe within its wave;
+        // dead children of this wave's dead nodes form the next wave
+        pending = pending
+            .iter()
+            .flat_map(|&i| tree.children(i))
+            .filter(|&c| is_dead[c])
+            .collect();
     }
     t
 }
@@ -119,6 +184,57 @@ mod tests {
             let d = detection_latency(&p, &mut rng, 16);
             assert!(d >= p.timeout);
             assert!(d <= p.period + p.timeout + 1.0);
+        }
+    }
+
+    #[test]
+    fn failures_cost_deadline_budget_not_per_dead() {
+        let p = MonitorParams::default();
+        // 10 dead leaves over n=1023 (height 9): one resolve wave; the
+        // cost is a slice of the deadline budget...
+        let mut rng = Rng::new(5);
+        let dead10: Vec<usize> = (600..610).collect();
+        let r10 = avg(|| heartbeat_rtt_with_failures(&p, &mut rng, 1023, &dead10), 200);
+        let healthy = {
+            let mut rng = Rng::new(5);
+            avg(|| heartbeat_rtt(&p, &mut rng, 1023), 200)
+        };
+        assert!(r10 < healthy + 4.0 * p.hop_deadline, "r10={r10} healthy={healthy}");
+        // ...and nowhere near the old dead×timeout regime
+        assert!(r10 < 0.1 * p.timeout, "r10={r10}");
+        // ~independent of the dead count (same single resolve wave)
+        let mut rng = Rng::new(5);
+        let r1 = avg(|| heartbeat_rtt_with_failures(&p, &mut rng, 1023, &[600]), 200);
+        assert!(r10 < 1.5 * r1, "r10={r10} r1={r1}");
+    }
+
+    #[test]
+    fn dead_chain_needs_one_wave_per_link() {
+        let p = MonitorParams::default();
+        let mut rng = Rng::new(6);
+        // 1 -> 3 -> 7: three chained dead interiors
+        let chain = avg(
+            || heartbeat_rtt_with_failures(&p, &mut rng, 1023, &[1, 3, 7]),
+            200,
+        );
+        let mut rng = Rng::new(6);
+        // three scattered dead leaves resolve in a single wave
+        let flat = avg(
+            || heartbeat_rtt_with_failures(&p, &mut rng, 1023, &[600, 700, 800]),
+            200,
+        );
+        assert!(chain > 1.5 * flat, "chain={chain} flat={flat}");
+    }
+
+    #[test]
+    fn no_failures_matches_plain_rtt() {
+        let p = MonitorParams::default();
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..50 {
+            let x = heartbeat_rtt(&p, &mut a, 64);
+            let y = heartbeat_rtt_with_failures(&p, &mut b, 64, &[]);
+            assert_eq!(x, y);
         }
     }
 

@@ -64,6 +64,20 @@ impl BroadcastTree {
         }
     }
 
+    /// Height of the subtree rooted at `i` — the scale factor for the
+    /// deadline budget a direct probe of that subtree needs.  The tree is
+    /// complete and filled left-to-right, so the leftmost descendant
+    /// chain of `i` is the deepest path in its subtree.
+    pub fn subtree_height(&self, i: usize) -> usize {
+        let mut h = 0;
+        let mut node = i;
+        while self.arity * node + 1 < self.n {
+            node = self.arity * node + 1;
+            h += 1;
+        }
+        h
+    }
+
     /// Aggregate a heartbeat round given per-node reachability and the
     /// per-node health-hook results.  Pure semantics used by both the sim
     /// and real implementations (and the property tests).
@@ -114,6 +128,44 @@ mod tests {
         assert_eq!(BroadcastTree::binary(8).height(), 3);
         assert_eq!(BroadcastTree::binary(128).height(), 7);
         assert_eq!(BroadcastTree::binary(128).roundtrip_hops(), 14);
+    }
+
+    #[test]
+    fn subtree_height_matches_depth() {
+        let t = BroadcastTree::binary(1023); // full tree, height 9
+        assert_eq!(t.subtree_height(0), t.height());
+        assert_eq!(t.subtree_height(1), t.height() - 1);
+        assert_eq!(t.subtree_height(1022), 0); // leaf
+        // ragged last level: n=6 has height 2; node 2's subtree (5 only)
+        // has height 1, node 1's (3,4) has height 1
+        let t = BroadcastTree::binary(6);
+        assert_eq!(t.subtree_height(0), 2);
+        assert_eq!(t.subtree_height(1), 1);
+        assert_eq!(t.subtree_height(2), 1);
+        assert_eq!(t.subtree_height(5), 0);
+    }
+
+    #[test]
+    fn property_subtree_height_bounds_descendant_depth() {
+        forall(
+            "subtree-height-is-max-descendant-depth",
+            100,
+            Gen::pair(Gen::usize(1, 200), Gen::usize(2, 4)),
+            |&(n, arity)| {
+                let t = BroadcastTree::with_arity(n, arity);
+                (0..n).all(|i| {
+                    // BFS the actual subtree and compare depths
+                    let base = t.depth_of(i);
+                    let mut max = 0;
+                    let mut stack = vec![i];
+                    while let Some(x) = stack.pop() {
+                        max = max.max(t.depth_of(x) - base);
+                        stack.extend(t.children(x));
+                    }
+                    t.subtree_height(i) == max
+                })
+            },
+        );
     }
 
     #[test]

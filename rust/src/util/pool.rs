@@ -117,26 +117,39 @@ impl ThreadPool {
     }
 
     /// Run `f` over all items in parallel, blocking until done.
+    ///
+    /// Panic-safe: a job that panics (isolated by the worker) or is
+    /// rejected by a shutting-down pool still releases its slot via the
+    /// drop guard, so the barrier below can never wedge.
     pub fn scatter<T, F>(&self, items: Vec<T>, f: F)
     where
         T: Send + 'static,
         F: Fn(T) + Send + Sync + 'static,
     {
+        struct Slot(Arc<(Mutex<usize>, Condvar)>);
+        impl Drop for Slot {
+            fn drop(&mut self) {
+                let (lock, cv) = &*self.0;
+                let mut n = lock.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    cv.notify_all();
+                }
+            }
+        }
         let f = Arc::new(f);
         let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         for item in items {
             let f = f.clone();
-            let pending = pending.clone();
             {
                 *pending.0.lock().unwrap() += 1;
             }
+            let slot = Slot(pending.clone());
+            // if submit rejects (shutdown) it drops the closure, which
+            // drops the slot and releases the count
             self.submit(move || {
+                let _slot = slot;
                 f(item);
-                let mut n = pending.0.lock().unwrap();
-                *n -= 1;
-                if *n == 0 {
-                    pending.1.notify_all();
-                }
             });
         }
         let (lock, cv) = &*pending;
@@ -144,6 +157,28 @@ impl ThreadPool {
         while *n > 0 {
             n = cv.wait(n).unwrap();
         }
+    }
+
+    /// Run `f` over all items in parallel and collect the results
+    /// (completion order, not input order), blocking until done.  This is
+    /// the fan-out primitive behind the §6.3 monitor's resolve waves:
+    /// every orphaned subtree is probed concurrently instead of one
+    /// timeout at a time.  A job that panics contributes no result (the
+    /// output can be shorter than the input) but never hangs the caller.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let out = Arc::new(Mutex::new(Vec::with_capacity(items.len())));
+        let o2 = out.clone();
+        self.scatter(items, move |item| {
+            let r = f(item);
+            o2.lock().unwrap().push(r);
+        });
+        let mut guard = out.lock().unwrap();
+        std::mem::take(&mut *guard)
     }
 }
 
@@ -216,6 +251,30 @@ mod tests {
             s2.fetch_add(x, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 5050);
+    }
+
+    #[test]
+    fn map_collects_all_results() {
+        let pool = ThreadPool::new(4, 16);
+        let mut got = pool.map((1..=50u64).collect(), |x| x * x);
+        got.sort();
+        let want: Vec<u64> = (1..=50u64).map(|x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scatter_and_map_survive_panicking_jobs() {
+        // a panicking job must release its barrier slot, not wedge the
+        // caller (the §6.3 monitor fans out through map)
+        let pool = ThreadPool::new(2, 8);
+        let mut got = pool.map((0..10u64).collect(), |x| {
+            if x % 2 == 0 {
+                panic!("boom");
+            }
+            x
+        });
+        got.sort();
+        assert_eq!(got, vec![1, 3, 5, 7, 9]);
     }
 
     #[test]

@@ -34,6 +34,26 @@ fn wait_iter(svc: &CacsService, id: cacs::util::ids::AppId, min: u64) -> u64 {
     panic!("iteration {min} never reached");
 }
 
+/// Bounded poll (replaces the old fixed sleeps, which flaked under load).
+fn wait_for(what: &str, f: impl Fn() -> bool) {
+    for _ in 0..400 {
+        if f() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+fn rest_iter(client: &Client, id: &str) -> u64 {
+    client
+        .get(&format!("/coordinators/{id}"))
+        .ok()
+        .and_then(|r| r.json().ok())
+        .and_then(|j| j.get("iteration").as_u64())
+        .unwrap_or(0)
+}
+
 #[test]
 fn lu_multi_proc_recovery_preserves_trajectory() {
     // native-backend LU through the whole service: kill, monitor, restore
@@ -46,7 +66,9 @@ fn lu_multi_proc_recovery_preserves_trajectory() {
     assert_eq!(ck.per_proc_bytes.len(), 4);
     wait_iter(&svc, id, ck.iteration + 5);
     svc.kill_proc(id, 3).unwrap();
-    std::thread::sleep(Duration::from_millis(50));
+    wait_for("proc 3 to report unhealthy", || {
+        svc.health(id).map(|h| !h[3]).unwrap_or(false)
+    });
     let recovered = svc.monitor_round();
     assert_eq!(recovered.len(), 1);
     // app resumed from ckpt iteration and progresses again
@@ -161,7 +183,7 @@ fn rest_migration_full_cycle_lu() {
         .as_str()
         .unwrap()
         .to_string();
-    std::thread::sleep(Duration::from_millis(100));
+    wait_for("source app to make progress", || rest_iter(&ca, &src) >= 1);
     let ck = ca
         .post(&format!("/coordinators/{src}/checkpoints"), &Json::Null)
         .unwrap()
@@ -201,9 +223,37 @@ fn rest_migration_full_cycle_lu() {
         .post(&format!("/coordinators/{dst}/checkpoints/{seq}"), &Json::Null)
         .unwrap();
     assert_eq!(rs.status, 200, "{}", String::from_utf8_lossy(&rs.body));
-    std::thread::sleep(Duration::from_millis(50));
-    let dj = cb.get(&format!("/coordinators/{dst}")).unwrap().json().unwrap();
-    assert!(dj.get("iteration").as_u64().unwrap() >= src_iter);
+    wait_for("destination to resume from the migrated image", || {
+        rest_iter(&cb, &dst) >= src_iter
+    });
+}
+
+#[test]
+fn vm_loss_recovered_by_monitor_thread() {
+    // §6.3 case 1 end to end: the app's host thread (its "virtual
+    // cluster") disappears entirely; the background Monitoring Manager
+    // re-provisions a fresh host and restores it from the last image
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: Some(Duration::from_millis(50)),
+            ..ServiceConfig::default()
+        },
+    );
+    svc.start_monitor();
+    let id = svc
+        .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 128 }, 1))
+        .unwrap();
+    wait_iter(&svc, id, 3);
+    let ck = svc.checkpoint(id).unwrap();
+    svc.kill_vm(id).unwrap();
+    wait_for("monitor to re-provision and restore", || {
+        svc.health(id).map(|h| h == vec![true]).unwrap_or(false)
+            && svc.state(id) == Some(cacs::coordinator::lifecycle::AppState::Running)
+    });
+    let it = svc.info(id).unwrap().get("iteration").as_u64().unwrap();
+    assert!(it >= ck.iteration, "resumed from the image: {it} vs {}", ck.iteration);
+    svc.delete(id).unwrap();
 }
 
 #[test]
@@ -280,7 +330,7 @@ fn concurrent_rest_clients() {
                 .as_str()
                 .unwrap()
                 .to_string();
-            std::thread::sleep(Duration::from_millis(50));
+            wait_for("app to make progress", || rest_iter(&c, &id) >= 1);
             let ck = c
                 .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
                 .unwrap();
