@@ -1,11 +1,18 @@
 //! Cloud-to-cloud migration over the REST API (§7.3.2, Fig 5 scenario).
 //!
 //! Two independent CACS instances ("CACS-Snooze" and "CACS-OpenStack" in
-//! the paper) run as separate REST services.  This binary is the analog
-//! of the paper's 90-line Python migration script: for each application
-//! it checkpoints on the source, pulls the images over HTTP, pushes them
-//! to the destination, and restarts there — then verifies the clone
-//! resumed from the source's iteration.
+//! the paper) run as separate REST services with separate stores.  Where
+//! the paper needed a 90-line client-side Python script — checkpoint,
+//! download every image, upload every image, restart, terminate — the
+//! service now exposes migration as one call:
+//!
+//!   POST /coordinators/:id/migrate   {"dst": "host:port"}
+//!
+//! The source CACS quiesces + checkpoints the app, streams every image
+//! to the destination (chunked HTTP, never a whole image in memory),
+//! restarts the clone, polls it to RUNNING at ≥ the checkpoint
+//! iteration, and terminates the source — leaving a TERMINATED
+//! tombstone with `migrated_to` for audit.
 //!
 //!   cargo run --release --example cloud_migration [-- --apps 8]
 
@@ -13,6 +20,7 @@ use cacs::coordinator::rest;
 use cacs::coordinator::service::{CacsService, ServiceConfig};
 use cacs::storage::mem::MemStore;
 use cacs::util::args::Args;
+use cacs::util::benchkit::fmt_bytes;
 use cacs::util::http::Client;
 use cacs::util::json::Json;
 use std::sync::Arc;
@@ -48,92 +56,64 @@ fn main() -> anyhow::Result<()> {
     }
     std::thread::sleep(Duration::from_millis(400));
 
-    // ---- the migration script (paper §7.3.2) ----
+    // ---- the migration: one REST call per application ----
     let t0 = Instant::now();
     let mut migrated = 0usize;
-    let mut bytes_moved = 0usize;
+    let mut bytes_moved = 0u64;
     for src_id in &apps {
-        // 1. checkpoint on the source cloud
-        let ck = src.post(&format!("/coordinators/{src_id}/checkpoints"), &Json::Null)?;
-        anyhow::ensure!(ck.status == 201, "checkpoint failed for {src_id}");
-        let ckj = ck.json().unwrap();
-        let seq = ckj.get("seq").as_u64().unwrap();
-        let src_iter = ckj.get("iteration").as_u64().unwrap();
-
-        // 2. create the destination coordinator
-        let info = src.get(&format!("/coordinators/{src_id}"))?.json().unwrap();
-        let asr = Json::object([
-            ("name", format!("{}-migrated", info.get("name").as_str().unwrap()).into()),
-            ("workload", info.get("workload").clone()),
-            ("n_vms", info.get("n_vms").clone()),
-        ]);
-        let created = dst.post("/coordinators", &asr)?;
-        let dst_id = created.json().unwrap().get("id").as_str().unwrap().to_string();
-
-        // 3. move the image set (GET from source, POST upload to dest)
-        let img = src.get(&format!("/coordinators/{src_id}/checkpoints/{seq}?proc=0"))?;
-        anyhow::ensure!(img.status == 200, "image download failed");
-        bytes_moved += img.body.len();
-        // raw upload with the octet-stream variant of the checkpoints POST
-        let mut stream = std::net::TcpStream::connect(dst.base())?;
-        upload_image(&mut stream, &dst_id, seq, 0, &img.body)?;
-
-        // 4. restart on the destination (triggers passive recovery, §5.3)
-        let rs = dst.post(&format!("/coordinators/{dst_id}/checkpoints/{seq}"), &Json::Null)?;
-        anyhow::ensure!(rs.status == 200, "restart failed: {}", String::from_utf8_lossy(&rs.body));
-
-        // 5. verify the clone resumed at (or past) the source's iteration
-        std::thread::sleep(Duration::from_millis(30));
-        let dj = dst.get(&format!("/coordinators/{dst_id}"))?.json().unwrap();
-        let dst_iter = dj.get("iteration").as_u64().unwrap();
+        let resp = src.post(
+            &format!("/coordinators/{src_id}/migrate"),
+            &Json::object([("dst", dst.base().into())]),
+        )?;
         anyhow::ensure!(
-            dst_iter >= src_iter,
-            "{dst_id} at iter {dst_iter} < source {src_iter}"
+            resp.status == 200,
+            "migrate failed for {src_id}: {}",
+            String::from_utf8_lossy(&resp.body)
         );
-        // 6. terminate on the source: clone becomes a migration
-        let del = src.delete(&format!("/coordinators/{src_id}"))?;
-        anyhow::ensure!(del.status == 204);
+        let rep = resp.json().unwrap();
+        let dst_id = rep.get("dst").as_str().unwrap().to_string();
+        let cut_iter = rep.get("iteration").as_u64().unwrap();
+        bytes_moved += rep.get("bytes_moved").as_u64().unwrap();
+
+        // verify the clone resumed at (or past) the source's cut
+        let dj = dst.get(&format!("/coordinators/{dst_id}"))?.json().unwrap();
+        anyhow::ensure!(dj.get("state").as_str() == Some("RUNNING"));
+        anyhow::ensure!(
+            dj.get("iteration").as_u64().unwrap() >= cut_iter,
+            "{dst_id} resumed short of the cut ({cut_iter})"
+        );
+        anyhow::ensure!(dj.get("cloned_from").as_str() == Some(src_id.as_str()));
         migrated += 1;
     }
     let elapsed = t0.elapsed();
 
+    // the source keeps auditable TERMINATED tombstones; the destination
+    // hosts the live fleet
     let remaining = src.get("/coordinators")?.json().unwrap();
     let arrived = dst.get("/coordinators")?.json().unwrap();
     println!(
-        "migrated {migrated}/{n_apps} applications in {elapsed:?} ({} of images moved)",
-        cacs::util::benchkit::fmt_bytes(bytes_moved as f64)
+        "migrated {migrated}/{n_apps} applications in {elapsed:?} ({} of images streamed)",
+        fmt_bytes(bytes_moved as f64)
     );
+    let live_on_src = remaining
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|r| r.get("state").as_str() != Some("TERMINATED"))
+        .count();
     println!(
-        "source now hosts {} apps; destination hosts {}",
+        "source hosts {live_on_src} live apps ({} tombstones); destination hosts {}",
         remaining.as_arr().unwrap().len(),
         arrived.as_arr().unwrap().len()
     );
-    anyhow::ensure!(remaining.as_arr().unwrap().is_empty());
+    anyhow::ensure!(live_on_src == 0);
+    for rec in remaining.as_arr().unwrap() {
+        anyhow::ensure!(
+            !rec.get("migrated_to").is_null(),
+            "tombstone without migrated_to: {rec}"
+        );
+    }
     anyhow::ensure!(arrived.as_arr().unwrap().len() == n_apps);
     println!("cloud_migration OK");
-    Ok(())
-}
-
-// -- tiny helper so the "script" stays dependency-free ----------------------
-
-fn upload_image(
-    stream: &mut std::net::TcpStream,
-    dst_id: &str,
-    seq: u64,
-    proc: usize,
-    body: &[u8],
-) -> anyhow::Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-    let head = format!(
-        "POST /coordinators/{dst_id}/checkpoints HTTP/1.1\r\nhost: x\r\ncontent-type: application/octet-stream\r\nx-ckpt-seq: {seq}\r\nx-proc-index: {proc}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
-        body.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
-    stream.flush()?;
-    let mut reader = BufReader::new(stream);
-    let mut status = String::new();
-    reader.read_line(&mut status)?;
-    anyhow::ensure!(status.contains("201"), "upload rejected: {status}");
     Ok(())
 }

@@ -1,0 +1,169 @@
+//! Real-mode Fig-5 analog: cross-CACS migration through the one-call
+//! orchestrator (`POST /coordinators/:id/migrate`).
+//!
+//! Two live CACS instances with distinct in-memory stores run on
+//! loopback ("CACS-Snooze" → "CACS-OpenStack" in the paper's §7.3.2
+//! scenario).  N applications are submitted to the source, run to a
+//! few iterations, and migrated one call each; the bench reports the
+//! per-application migration time (quiesce + checkpoint + clone +
+//! streamed image transfer + clone restart + source teardown) and the
+//! aggregate streamed bytes/s.
+//!
+//!   cargo bench --bench fig5_real_migration -- [--apps 4]
+//!       [--floats 262144] [--json BENCH_migration.json]
+
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::storage::mem::MemStore;
+use cacs::util::args::Args;
+use cacs::util::benchkit::{fmt_bytes, fmt_secs, Table};
+use cacs::util::http::{Client, Server};
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start_cacs(name: &str) -> (Server, Client) {
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: None,
+            step_interval: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
+    );
+    let server = rest::serve(svc, "127.0.0.1:0", 4).expect("bind REST server");
+    let client = Client::new(&server.addr().to_string());
+    println!("# {name}: http://{}", server.addr());
+    (server, client)
+}
+
+fn wait_iter(client: &Client, id: &str, min: u64) {
+    for _ in 0..1000 {
+        let ok = client
+            .get(&format!("/coordinators/{id}"))
+            .ok()
+            .and_then(|r| r.json().ok())
+            .map(|j| {
+                j.get("state").as_str() == Some("RUNNING")
+                    && j.get("iteration").as_u64().unwrap_or(0) >= min
+            })
+            .unwrap_or(false);
+        if ok {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("{id} never reached RUNNING at iteration {min}");
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n_apps = args.usize_or("apps", 4);
+    let floats = args.usize_or("floats", 1 << 18); // ~1 MiB images
+
+    println!("# Fig 5 (real mode): one-call cross-CACS migration\n");
+    let (_src_server, src) = start_cacs("CACS-Snooze (source)");
+    let (_dst_server, dst) = start_cacs("CACS-OpenStack (destination)");
+
+    // submit + warm up the source fleet
+    let mut apps = Vec::with_capacity(n_apps);
+    for k in 0..n_apps {
+        let asr = Json::object([
+            ("name", format!("dmtcp1-{k}").into()),
+            (
+                "workload",
+                Json::object([("kind", "dmtcp1".into()), ("n", floats.into())]),
+            ),
+            ("n_vms", 1u64.into()),
+        ]);
+        let resp = src.post("/coordinators", &asr).expect("submit");
+        assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+        apps.push(resp.json().unwrap().get("id").as_str().unwrap().to_string());
+    }
+    for id in &apps {
+        wait_iter(&src, id, 3);
+    }
+
+    // migrate each app with one call and collect the service's report
+    let mut t = Table::new(["app", "images", "bytes", "time", "throughput"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let (mut total_bytes, mut total_time) = (0u64, 0f64);
+    for id in &apps {
+        let resp = src
+            .post(
+                &format!("/coordinators/{id}/migrate"),
+                &Json::object([("dst", dst.base().into())]),
+            )
+            .expect("migrate call");
+        assert_eq!(
+            resp.status,
+            200,
+            "migrate {id}: {}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let rep = resp.json().unwrap();
+        let bytes = rep.get("bytes_moved").as_u64().unwrap();
+        let secs = rep.get("duration_s").as_f64().unwrap();
+        let images = rep.get("per_proc_bytes").as_arr().unwrap().len();
+        total_bytes += bytes;
+        total_time += secs;
+        t.row([
+            id.clone(),
+            images.to_string(),
+            fmt_bytes(bytes as f64),
+            fmt_secs(secs),
+            format!("{}/s", fmt_bytes(bytes as f64 / secs)),
+        ]);
+        rows.push(Json::object([
+            ("path", "migrate".into()),
+            ("work", rep.get("src").as_str().unwrap_or(id.as_str()).into()),
+            ("time_s", secs.into()),
+            ("throughput", (bytes as f64 / secs).into()),
+            ("unit", "B/s".into()),
+        ]));
+    }
+    let agg = total_bytes as f64 / total_time;
+    t.row([
+        "TOTAL".into(),
+        n_apps.to_string(),
+        fmt_bytes(total_bytes as f64),
+        fmt_secs(total_time),
+        format!("{}/s", fmt_bytes(agg)),
+    ]);
+    rows.push(Json::object([
+        ("path", "migrate (aggregate)".into()),
+        ("work", format!("{n_apps} apps").into()),
+        ("time_s", total_time.into()),
+        ("throughput", agg.into()),
+        ("unit", "B/s".into()),
+    ]));
+    t.print();
+
+    // sanity: everything arrived, nothing left running at the source
+    let arrived = dst.get("/coordinators").unwrap().json().unwrap();
+    assert_eq!(arrived.as_arr().unwrap().len(), n_apps);
+    let remaining = src.get("/coordinators").unwrap().json().unwrap();
+    for rec in remaining.as_arr().unwrap() {
+        assert_eq!(rec.get("state").as_str(), Some("TERMINATED"));
+        assert!(!rec.get("migrated_to").is_null());
+    }
+    println!(
+        "\nmigrated {n_apps} apps, {} streamed at {}/s aggregate",
+        fmt_bytes(total_bytes as f64),
+        fmt_bytes(agg)
+    );
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::object([
+            ("bench", "fig5_real_migration".into()),
+            ("rows", Json::Arr(rows)),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

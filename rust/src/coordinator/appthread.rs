@@ -111,6 +111,17 @@ impl AppHandle {
     pub fn resume(&self) {
         let _ = self.tx.send(Cmd::Resume);
     }
+
+    /// Quiesce stepping at the next step barrier and return the frozen
+    /// (iteration, metric).  Pause and the progress round-trip share
+    /// the FIFO command queue, so when this returns the app is stopped
+    /// *exactly* at the returned iteration — the consistent cut the
+    /// migration orchestrator checkpoints from (commands queued behind
+    /// this, e.g. the checkpoint itself, see the same cut).
+    pub fn quiesce(&self) -> Result<(u64, f64)> {
+        let _ = self.tx.send(Cmd::Pause);
+        self.call(|reply| Cmd::Progress { reply })
+    }
 }
 
 impl Drop for AppHandle {
@@ -323,6 +334,24 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         let (it3, _) = h.progress().unwrap();
         assert!(it3 > it2);
+    }
+
+    #[test]
+    fn quiesce_freezes_at_reported_iteration() {
+        let (h, _store) = spawn_counter(1);
+        std::thread::sleep(Duration::from_millis(30));
+        let (frozen, _) = h.quiesce().unwrap();
+        // nothing moves after quiesce returns
+        std::thread::sleep(Duration::from_millis(50));
+        let (now, _) = h.progress().unwrap();
+        assert_eq!(now, frozen, "quiesced app must not step");
+        // and a checkpoint taken now is cut exactly there
+        let report = h.checkpoint(1, false).unwrap();
+        assert_eq!(report.iteration, frozen);
+        h.resume();
+        std::thread::sleep(Duration::from_millis(50));
+        let (later, _) = h.progress().unwrap();
+        assert!(later > frozen, "resume restarts stepping");
     }
 
     #[test]

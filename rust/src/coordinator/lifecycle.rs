@@ -6,6 +6,13 @@
 //! from a user DELETE or from `ERROR` (§5.4: "The TERMINATING state is
 //! reached when an end user issues a DELETE request to the coordinator
 //! resource or when the ERROR state is set").
+//!
+//! On top of the Fig 2 table the real-mode migration orchestrator adds
+//! `RUNNING → MIGRATING` (§5.3 cross-CACS migration in flight: source
+//! quiesced + checkpointed, images streaming to the destination).  A
+//! completed migration exits via `MIGRATING → TERMINATING` (the source
+//! is torn down once the clone runs); a failed transfer rolls back via
+//! `MIGRATING → RUNNING` — the source never stopped being viable.
 
 use std::fmt;
 
@@ -25,6 +32,9 @@ pub enum AppState {
     Checkpointing,
     /// Passive recovery / restart from an image in progress.
     Restarting,
+    /// Cross-CACS migration in flight (§5.3): checkpoint taken, images
+    /// streaming to the destination, clone not yet confirmed RUNNING.
+    Migrating,
     /// Tear-down in progress (§5.4).
     Terminating,
     /// All references removed.
@@ -42,6 +52,7 @@ impl fmt::Display for AppState {
             AppState::Running => "RUNNING",
             AppState::Checkpointing => "CHECKPOINTING",
             AppState::Restarting => "RESTARTING",
+            AppState::Migrating => "MIGRATING",
             AppState::Terminating => "TERMINATING",
             AppState::Terminated => "TERMINATED",
             AppState::Error => "ERROR",
@@ -65,6 +76,9 @@ impl AppState {
                 | (Restarting, Running)
                 | (Ready, Restarting)         // restart-from-upload (§5.3 clone)
                 | (Error, Restarting)         // passive recovery (§5.3)
+                | (Running, Migrating)        // cross-CACS migration (§5.3)
+                | (Migrating, Running)        // failed transfer rolls back
+                | (Migrating, Error)
                 | (Creating, Error)
                 | (Provisioning, Error)
                 | (Ready, Error)
@@ -77,6 +91,7 @@ impl AppState {
                 | (Running, Terminating)
                 | (Checkpointing, Terminating)
                 | (Restarting, Terminating)
+                | (Migrating, Terminating)    // migration done: source teardown
                 | (Error, Terminating)
                 | (Terminating, Terminated)
         )
@@ -91,6 +106,13 @@ impl AppState {
     /// Can the application be restarted from an image (§5.3)?
     pub fn can_restart(self) -> bool {
         matches!(self, AppState::Running | AppState::Ready | AppState::Error)
+    }
+
+    /// Can a cross-CACS migration start right now (§5.3)?  Only from
+    /// RUNNING — a checkpoint or restart in flight owns the lifecycle
+    /// (the REST layer answers 409 for those).
+    pub fn can_migrate(self) -> bool {
+        self == AppState::Running
     }
 
     pub fn is_terminal(self) -> bool {
@@ -202,9 +224,9 @@ mod tests {
         assert_eq!(lc.state(), Running);
     }
 
-    const ALL: [AppState; 9] = [
+    const ALL: [AppState; 10] = [
         Creating, Provisioning, Ready, Running, Checkpointing, Restarting,
-        Terminating, Terminated, Error,
+        Migrating, Terminating, Terminated, Error,
     ];
 
     #[test]
@@ -224,7 +246,44 @@ mod tests {
                 s.can_transition_to(Checkpointing),
                 "can_checkpoint vs table for {s}"
             );
+            assert_eq!(
+                s.can_migrate(),
+                s.can_transition_to(Migrating),
+                "can_migrate vs table for {s}"
+            );
         }
+    }
+
+    #[test]
+    fn migration_success_walk() {
+        // §5.3 cross-CACS migration: RUNNING → MIGRATING → TERMINATING
+        // → TERMINATED once the clone is confirmed running elsewhere
+        let mut lc = Lifecycle::new(0.0);
+        lc.to(1.0, Provisioning);
+        lc.to(2.0, Ready);
+        lc.to(3.0, Running);
+        assert!(lc.state().can_migrate());
+        assert!(lc.to(4.0, Migrating));
+        // no checkpoint/restart/second migration may start mid-flight
+        assert!(!lc.state().can_checkpoint());
+        assert!(!lc.state().can_restart());
+        assert!(!lc.state().can_migrate());
+        assert!(lc.to(5.0, Terminating));
+        assert!(lc.to(6.0, Terminated));
+    }
+
+    #[test]
+    fn migration_failure_rolls_back_to_running() {
+        // a failed transfer must return the (still healthy) source to
+        // RUNNING, from where everything is permitted again
+        let mut lc = Lifecycle::new(0.0);
+        lc.to(1.0, Provisioning);
+        lc.to(2.0, Ready);
+        lc.to(3.0, Running);
+        assert!(lc.to(4.0, Migrating));
+        assert!(lc.to(5.0, Running));
+        assert!(lc.state().can_checkpoint());
+        assert!(lc.state().can_migrate());
     }
 
     #[test]
@@ -262,7 +321,7 @@ mod tests {
         use crate::util::propcheck::{forall, Gen};
         let states = vec![
             Creating, Provisioning, Ready, Running, Checkpointing, Restarting,
-            Terminating, Terminated, Error,
+            Migrating, Terminating, Terminated, Error,
         ];
         let s2 = states.clone();
         forall(

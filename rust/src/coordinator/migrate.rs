@@ -1,0 +1,336 @@
+//! Real-mode cross-CACS migration orchestrator (§5.3, §7.3.2 / Fig 5).
+//!
+//! The paper's headline capability — "migration of applications from
+//! one cloud platform to another" — as a single service operation
+//! instead of a client-side script: `POST /coordinators/:id/migrate`
+//! with a destination CACS base address runs the whole §7.3.2 cycle on
+//! the source coordinator:
+//!
+//! 1. **Claim + quiesce + checkpoint** — the lifecycle moves `RUNNING →
+//!    MIGRATING` (anything else answers 409), stepping stops at the
+//!    next barrier, and a checkpoint is cut exactly there.
+//! 2. **Clone** — the source ASR (stamped with `cloned_from`) is
+//!    submitted to the destination CACS over [`Client`].
+//! 3. **Stream the images** — every per-proc image flows
+//!    [`ObjectStore::get_into`] → chunked HTTP body
+//!    ([`Client::post_stream`]) → destination `put_writer`, per-proc
+//!    transfers fanned out on a dedicated [`transfer_pool`] (blocking
+//!    socket writes must not queue CRC shards on
+//!    [`crate::util::pool::ThreadPool::shared`] — the same contention
+//!    class the monitor's probe pool avoids); no stage ever holds a
+//!    whole image in memory on either side.
+//! 4. **Restart the clone** and poll it to RUNNING at ≥ the cut
+//!    iteration.
+//! 5. **Terminate the source** — host thread joined, store emptied, a
+//!    TERMINATED tombstone with `migrated_to` kept for audit.
+//!
+//! Any failure before step 5 rolls the source back to RUNNING (it never
+//! stopped being viable), removes the checkpoint the attempt created
+//! (retries must not accumulate image sets), and best-effort deletes
+//! the half-made clone — mirroring the sim driver's `migrate_to` =
+//! clone + terminate-source semantics.
+
+use crate::coordinator::service::{CacsService, MigrateStartError, MigrationTicket};
+use crate::dckpt::service as ckptsvc;
+use crate::storage::ObjectStore;
+use crate::util::http::Client;
+use crate::util::ids::AppId;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use anyhow::{Context, Result};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// How long the orchestrator waits for the clone to reach RUNNING at
+/// the cut iteration before declaring the migration failed.
+const CLONE_RUNNING_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Dedicated pool for per-proc image transfers.  Transfers are long
+/// blocking network I/O; on [`ThreadPool::shared`] they would queue a
+/// concurrent checkpoint's CRC shards behind a slow WAN socket (the
+/// same coupling the monitor's probe pool exists to avoid).
+fn transfer_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    ThreadPool::dedicated_small(&POOL)
+}
+
+/// What one completed migration did (the REST layer returns this as the
+/// 200 body; the Fig-5 bench aggregates it).
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    /// Source coordinator id.
+    pub src_id: String,
+    /// Clone's id on the destination CACS.
+    pub dst_id: String,
+    /// Destination base address the images went to.
+    pub dst_base: String,
+    /// Checkpoint sequence the migration travelled on.
+    pub seq: u64,
+    /// Iteration at the consistent cut (the clone resumes at ≥ this).
+    pub iteration: u64,
+    /// Per-proc image bytes streamed.
+    pub per_proc_bytes: Vec<u64>,
+    /// Total bytes streamed to the destination.
+    pub bytes_moved: u64,
+    /// Wall-clock duration of the whole cycle in seconds.
+    pub duration_s: f64,
+}
+
+impl MigrationReport {
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            ("migrated", true.into()),
+            ("src", self.src_id.as_str().into()),
+            ("dst", self.dst_id.as_str().into()),
+            ("dst_base", self.dst_base.as_str().into()),
+            ("seq", self.seq.into()),
+            ("iteration", self.iteration.into()),
+            (
+                "per_proc_bytes",
+                Json::Arr(self.per_proc_bytes.iter().map(|&b| b.into()).collect()),
+            ),
+            ("bytes_moved", self.bytes_moved.into()),
+            ("duration_s", self.duration_s.into()),
+        ])
+    }
+}
+
+/// Why a migration did not happen (the REST layer picks status codes
+/// off these).
+#[derive(Debug)]
+pub enum MigrateError {
+    /// No such coordinator — 404.
+    UnknownCoordinator,
+    /// The lifecycle refuses to migrate right now (checkpoint /
+    /// restart / another migration in flight, or no host thread) — 409.
+    Conflict(String),
+    /// The transfer or the destination failed; the source was rolled
+    /// back to RUNNING — 502.
+    Failed(anyhow::Error),
+}
+
+impl std::fmt::Display for MigrateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MigrateError::UnknownCoordinator => write!(f, "unknown coordinator"),
+            MigrateError::Conflict(m) => write!(f, "{m}"),
+            MigrateError::Failed(e) => write!(f, "migration failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for MigrateError {}
+
+/// Run one full migration of `id` to the CACS at `dst_base`
+/// ("host:port"; an `http://` prefix and trailing slashes are
+/// tolerated).  Blocking; returns once the clone runs and the source is
+/// terminated, or after rolling back.
+pub fn migrate(
+    svc: &Arc<CacsService>,
+    id: AppId,
+    dst_base: &str,
+) -> Result<MigrationReport, MigrateError> {
+    let dst_base = dst_base
+        .trim_start_matches("http://")
+        .trim_end_matches('/')
+        .to_string();
+    if dst_base.is_empty() {
+        return Err(MigrateError::Conflict("empty destination".into()));
+    }
+    let t0 = Instant::now();
+    let ticket = svc.begin_migration(id).map_err(|e| match e {
+        MigrateStartError::UnknownCoordinator => MigrateError::UnknownCoordinator,
+        other => MigrateError::Conflict(other.to_string()),
+    })?;
+    match run(svc, id, &ticket, &dst_base) {
+        Ok(mut report) => {
+            // step 5: the clone runs — terminate the source
+            let migrated_to = format!("{dst_base}/coordinators/{}", report.dst_id);
+            if let Err(e) = svc.complete_migration(id, migrated_to) {
+                // a concurrent DELETE beat us to the teardown; the
+                // migration itself succeeded
+                log::warn!("{id}: source teardown raced a delete: {e}");
+            }
+            report.duration_s = t0.elapsed().as_secs_f64();
+            Ok(report)
+        }
+        Err(e) => {
+            // drop the checkpoint this attempt created (record + full
+            // image set) before rolling back — retries against a dead
+            // destination must not accumulate image sets in the store
+            let _ = svc.delete_checkpoint(id, ticket.seq);
+            svc.abort_migration(id);
+            Err(MigrateError::Failed(e))
+        }
+    }
+}
+
+/// Steps 1–4; on any error the caller rolls the source back to RUNNING
+/// and removes the checkpoint this attempt created.
+fn run(
+    svc: &Arc<CacsService>,
+    id: AppId,
+    ticket: &MigrationTicket,
+    dst_base: &str,
+) -> Result<MigrationReport> {
+    // 1. quiesce at a step barrier, then checkpoint at that exact cut
+    //    (pause + checkpoint share the host thread's FIFO queue)
+    ticket.handle.quiesce().context("quiesce source app")?;
+    let report = ticket
+        .handle
+        .checkpoint(ticket.seq, ticket.with_overhead)
+        .context("checkpoint source app")?;
+    let ck = svc.record_migration_ckpt(id, &report)?;
+
+    // 2. clone the ASR on the destination, stamped with provenance
+    let client = Client::new(dst_base);
+    let mut asr_json = ticket.asr.to_json();
+    asr_json.set("cloned_from", id.to_string().into());
+    let created = client
+        .post("/coordinators", &asr_json)
+        .with_context(|| format!("submit clone to {dst_base}"))?;
+    anyhow::ensure!(
+        created.status == 201,
+        "destination rejected clone ASR: {} {}",
+        created.status,
+        String::from_utf8_lossy(&created.body)
+    );
+    let dst_id = created
+        .json()
+        .ok()
+        .and_then(|j| j.get("id").as_str().map(str::to_string))
+        .context("destination returned no clone id")?;
+
+    // 3. stream every per-proc image, fanned out on the transfer pool:
+    //    store → chunked socket → destination put_writer, no
+    //    whole-image buffer at any stage
+    let n_procs = ck.per_proc_bytes.len();
+    let result = {
+        let svc = svc.clone();
+        let src_app = id.to_string();
+        let dst_base = dst_base.to_string();
+        let dst_id = dst_id.clone();
+        let seq = ck.seq;
+        let mut outcomes = transfer_pool().map(
+            (0..n_procs).collect::<Vec<_>>(),
+            move |proc| {
+                let client = Client::new(&dst_base);
+                let r = transfer_image(
+                    svc.store().as_ref(),
+                    &src_app,
+                    &client,
+                    &dst_id,
+                    seq,
+                    proc,
+                );
+                (proc, r)
+            },
+        );
+        outcomes.sort_by_key(|(proc, _)| *proc);
+        outcomes
+    };
+    anyhow::ensure!(
+        result.len() == n_procs,
+        "image transfer worker lost ({}/{n_procs} finished)",
+        result.len()
+    );
+    let mut per_proc = Vec::with_capacity(n_procs);
+    for (proc, outcome) in result {
+        match outcome {
+            Ok(n) => per_proc.push(n),
+            Err(e) => {
+                delete_clone(&client, &dst_id);
+                return Err(e.context(format!("transfer image for proc {proc}")));
+            }
+        }
+    }
+
+    // 4. restart the clone from the uploaded checkpoint and poll it to
+    //    RUNNING at ≥ the cut iteration
+    if let Err(e) = restart_and_await(&client, &dst_id, ck.seq, ck.iteration) {
+        delete_clone(&client, &dst_id);
+        return Err(e);
+    }
+
+    Ok(MigrationReport {
+        src_id: id.to_string(),
+        dst_id,
+        dst_base: dst_base.to_string(),
+        seq: ck.seq,
+        iteration: ck.iteration,
+        bytes_moved: per_proc.iter().sum(),
+        per_proc_bytes: per_proc,
+        duration_s: 0.0, // stamped by the caller
+    })
+}
+
+/// Stream one image: `get_into` reads from the source store straight
+/// into the chunked request body; the destination's streaming upload
+/// route pipes it into its own store.
+fn transfer_image(
+    store: &dyn ObjectStore,
+    src_app: &str,
+    dst: &Client,
+    dst_id: &str,
+    seq: u64,
+    proc: usize,
+) -> Result<u64> {
+    let (sent, resp) = dst
+        .post_stream(
+            &format!("/coordinators/{dst_id}/checkpoints"),
+            "application/octet-stream",
+            &[
+                ("x-ckpt-seq", seq.to_string()),
+                ("x-proc-index", proc.to_string()),
+            ],
+            |w| {
+                ckptsvc::copy_image_to(store, src_app, seq, proc, w)
+                    .map_err(|e| std::io::Error::other(e.to_string()))
+            },
+        )
+        .with_context(|| format!("upload image proc {proc}"))?;
+    anyhow::ensure!(
+        resp.status == 201,
+        "destination rejected image proc {proc}: {} {}",
+        resp.status,
+        String::from_utf8_lossy(&resp.body)
+    );
+    Ok(sent)
+}
+
+fn restart_and_await(client: &Client, dst_id: &str, seq: u64, min_iter: u64) -> Result<()> {
+    let rs = client
+        .post(&format!("/coordinators/{dst_id}/checkpoints/{seq}"), &Json::Null)
+        .context("restart clone")?;
+    anyhow::ensure!(
+        rs.status == 200,
+        "clone restart failed: {} {}",
+        rs.status,
+        String::from_utf8_lossy(&rs.body)
+    );
+    let deadline = Instant::now() + CLONE_RUNNING_DEADLINE;
+    loop {
+        let info = client
+            .get(&format!("/coordinators/{dst_id}"))
+            .context("poll clone")?;
+        if let Ok(j) = info.json() {
+            let running = j.get("state").as_str() == Some("RUNNING");
+            let iter = j.get("iteration").as_u64().unwrap_or(0);
+            if running && iter >= min_iter {
+                return Ok(());
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "clone {dst_id} never reached RUNNING at iteration {min_iter}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Best-effort cleanup of a half-made clone after a failed migration.
+fn delete_clone(client: &Client, dst_id: &str) {
+    if let Err(e) = client.delete(&format!("/coordinators/{dst_id}")) {
+        log::warn!("failed to clean up clone {dst_id}: {e}");
+    }
+}

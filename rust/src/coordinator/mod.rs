@@ -12,7 +12,9 @@
 //! * [`service`] + [`rest`] — the real-mode service: actual HTTP REST
 //!   API (Table 1), real workloads on an application thread
 //!   ([`appthread`]), real checkpoint images in an
-//!   [`crate::storage::ObjectStore`], real broadcast-tree monitoring.
+//!   [`crate::storage::ObjectStore`], real broadcast-tree monitoring,
+//!   and first-class cross-CACS migration ([`migrate`]: one POST
+//!   streams a checkpointed app to another live CACS instance, §5.3).
 //!   The examples (quickstart, fault-tolerant LU, migration,
 //!   cloudification, oversubscription) run through this.
 //!
@@ -23,6 +25,7 @@
 pub mod appthread;
 pub mod db;
 pub mod lifecycle;
+pub mod migrate;
 pub mod rest;
 pub mod service;
 pub mod simdrv;

@@ -5,16 +5,23 @@
 //! | GET    /coordinators                      | list coordinators |
 //! | POST   /coordinators                      | add a new coordinator (body = ASR) |
 //! | GET    /coordinators/:id                  | coordinator info |
-//! | DELETE /coordinators/:id                  | delete the coordinator |
+//! | DELETE /coordinators/:id                  | delete the coordinator (true empty 204) |
+//! | POST   /coordinators/:id/migrate          | migrate to another CACS (body = `{"dst": "host:port"}`, §5.3 / Fig 5); 409 while a checkpoint/restart/migration is in flight |
 //! | GET    /coordinators/:id/checkpoints      | list checkpoints |
-//! | POST   /coordinators/:id/checkpoints      | trigger a checkpoint, **or** upload an image (octet-stream body + `x-ckpt-seq`/`x-proc-index` headers) |
-//! | GET    /coordinators/:id/checkpoints/:seq | checkpoint info; `?proc=i` downloads that image |
+//! | POST   /coordinators/:id/checkpoints      | trigger a checkpoint, **or** upload an image (octet-stream body + `x-ckpt-seq`/`x-proc-index` headers; the body streams straight into the store) |
+//! | GET    /coordinators/:id/checkpoints/:seq | checkpoint info; `?proc=i` downloads that image (400 for an unparsable `proc`, 404 for a missing image) |
 //! | POST   /coordinators/:id/checkpoints/:seq | restart from the checkpoint |
 //! | DELETE /coordinators/:id/checkpoints/:seq | delete the checkpoint |
 //!
 //! Plus diagnostics the paper's CLI would expose: GET
 //! /coordinators/:id/health.
+//!
+//! The migrate endpoint drives the Fig 2 lifecycle through the
+//! `MIGRATING` state: `RUNNING → MIGRATING` on entry, `MIGRATING →
+//! TERMINATING → TERMINATED` once the clone runs on the destination,
+//! `MIGRATING → RUNNING` if the transfer fails (the source rolls back).
 
+use super::migrate::{self, MigrateError};
 use super::service::CacsService;
 use super::types::Asr;
 use crate::util::http::{Handler, Method, Request, Response, Server};
@@ -24,7 +31,7 @@ use std::sync::Arc;
 
 /// Build the request handler for a service instance.
 pub fn make_handler(svc: Arc<CacsService>) -> Handler {
-    Arc::new(move |req: &Request| route(&svc, req))
+    Arc::new(move |req: &mut Request| route(&svc, req))
 }
 
 /// Start the REST server (addr like "127.0.0.1:0").
@@ -36,17 +43,15 @@ fn parse_app(seg: &str) -> Option<AppId> {
     AppId::parse(seg)
 }
 
-fn route(svc: &CacsService, req: &Request) -> Response {
-    let segs = req.segments();
-    let (path, query) = match req.path.split_once('?') {
+fn route(svc: &Arc<CacsService>, req: &mut Request) -> Response {
+    // own the path: the body accessors below need `req` mutably while
+    // the matched segments stay alive
+    let raw_path = req.path.clone();
+    let (path, query) = match raw_path.split_once('?') {
         Some((p, q)) => (p, Some(q)),
-        None => (req.path.as_str(), None),
+        None => (raw_path.as_str(), None),
     };
-    let segs: Vec<&str> = if query.is_some() {
-        path.split('/').filter(|s| !s.is_empty()).collect()
-    } else {
-        segs
-    };
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
 
     match (req.method, segs.as_slice()) {
         (Method::Get, ["coordinators"]) => {
@@ -74,7 +79,7 @@ fn route(svc: &CacsService, req: &Request) -> Response {
         },
         (Method::Delete, ["coordinators", id]) => match parse_app(id) {
             Some(id) => match svc.delete(id) {
-                Ok(()) => Response::json(204, &Json::Null),
+                Ok(()) => Response::no_content(),
                 Err(_) => Response::not_found(),
             },
             None => Response::bad_request("bad coordinator id"),
@@ -88,6 +93,29 @@ fn route(svc: &CacsService, req: &Request) -> Response {
             },
             None => Response::bad_request("bad coordinator id"),
         },
+        (Method::Post, ["coordinators", id, "migrate"]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            let body = match req.json() {
+                Ok(j) => j,
+                Err(e) => return Response::bad_request(&e.to_string()),
+            };
+            let Some(dst) = body.get("dst").as_str() else {
+                return Response::bad_request(
+                    "migrate needs a destination: {\"dst\": \"host:port\"}",
+                );
+            };
+            match migrate::migrate(svc, id, dst) {
+                Ok(report) => Response::ok_json(&report.to_json()),
+                Err(MigrateError::UnknownCoordinator) => Response::not_found(),
+                Err(MigrateError::Conflict(m)) => Response::conflict(&m),
+                Err(e) => Response::json(
+                    502,
+                    &Json::object([("error", e.to_string().into())]),
+                ),
+            }
+        }
         (Method::Get, ["coordinators", id, "checkpoints"]) => match parse_app(id) {
             Some(id) => match svc.checkpoints(id) {
                 Ok(cks) => Response::ok_json(&Json::Arr(cks)),
@@ -111,9 +139,19 @@ fn route(svc: &CacsService, req: &Request) -> Response {
                 let (Some(seq), Some(proc)) = (seq, proc) else {
                     return Response::bad_request("upload needs x-ckpt-seq and x-proc-index");
                 };
-                return match svc.upload_image(id, seq, proc, &req.body) {
-                    Ok(()) => Response::json(201, &Json::object([("uploaded", true.into())])),
-                    Err(e) => Response::bad_request(&e.to_string()),
+                // the body streams off the wire straight into the store
+                let mut body = req.body_reader();
+                return match svc.upload_image_stream(id, seq, proc, &mut body) {
+                    Ok(n) => Response::json(
+                        201,
+                        &Json::object([("uploaded", true.into()), ("bytes", n.into())]),
+                    ),
+                    Err(e) => {
+                        // drain the rest of the upload so the 400 (not
+                        // a connection reset) reaches the sender
+                        let _ = std::io::copy(&mut body, &mut std::io::sink());
+                        Response::bad_request(&e.to_string())
+                    }
                 };
             }
             match svc.checkpoint(id) {
@@ -128,22 +166,24 @@ fn route(svc: &CacsService, req: &Request) -> Response {
             let Ok(seq) = seq.parse::<u64>() else {
                 return Response::bad_request("bad checkpoint seq");
             };
-            // ?proc=i downloads the raw image (migration send path)
-            if let Some(q) = query {
-                if let Some(proc) = q
-                    .split('&')
-                    .find_map(|kv| kv.strip_prefix("proc="))
-                    .and_then(|v| v.parse::<usize>().ok())
-                {
-                    return match svc.download_image(id, seq, proc) {
-                        Ok(bytes) => Response {
-                            status: 200,
-                            body: bytes,
-                            content_type: "application/octet-stream",
-                        },
-                        Err(_) => Response::not_found(),
-                    };
-                }
+            // ?proc=i downloads the raw image (migration send path).
+            // An unparsable proc is the caller's error (400) — falling
+            // through to checkpoint-info JSON here used to hand an
+            // octet-stream client a JSON body instead
+            if let Some(raw) = query
+                .and_then(|q| q.split('&').find_map(|kv| kv.strip_prefix("proc=")))
+            {
+                let Ok(proc) = raw.parse::<usize>() else {
+                    return Response::bad_request("bad proc index");
+                };
+                return match svc.download_image(id, seq, proc) {
+                    Ok(bytes) => Response {
+                        status: 200,
+                        body: bytes,
+                        content_type: "application/octet-stream",
+                    },
+                    Err(_) => Response::not_found(),
+                };
             }
             match svc.checkpoints(id) {
                 Ok(cks) => {
@@ -186,19 +226,20 @@ fn route(svc: &CacsService, req: &Request) -> Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::lifecycle::AppState;
     use crate::coordinator::service::ServiceConfig;
     use crate::storage::mem::MemStore;
     use crate::util::http::Client;
     use std::time::Duration;
 
-    fn start() -> (Server, Client) {
+    fn start() -> (Server, Client, Arc<CacsService>) {
         let svc = CacsService::new(
             Arc::new(MemStore::new()),
             ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
         );
-        let server = serve(svc, "127.0.0.1:0", 4).unwrap();
+        let server = serve(svc.clone(), "127.0.0.1:0", 4).unwrap();
         let client = Client::new(&server.addr().to_string());
-        (server, client)
+        (server, client, svc)
     }
 
     fn submit_dmtcp1(client: &Client) -> String {
@@ -235,7 +276,7 @@ mod tests {
 
     #[test]
     fn table1_surface() {
-        let (_server, client) = start();
+        let (_server, client, _svc) = start();
         // empty list
         let resp = client.get("/coordinators").unwrap();
         assert_eq!(resp.status, 200);
@@ -279,16 +320,20 @@ mod tests {
             .unwrap();
         assert_eq!(del.status, 200);
 
-        // DELETE coordinator
+        // DELETE coordinator: a true RFC 9110 204 — no body, no
+        // entity headers
         let del = client.delete(&format!("/coordinators/{id}")).unwrap();
         assert_eq!(del.status, 204);
+        assert!(del.body.is_empty());
+        assert!(!del.headers.contains_key("content-type"), "{:?}", del.headers);
+        assert!(!del.headers.contains_key("content-length"), "{:?}", del.headers);
         let resp = client.get(&format!("/coordinators/{id}")).unwrap();
         assert_eq!(resp.status, 404);
     }
 
     #[test]
     fn bad_requests() {
-        let (_server, client) = start();
+        let (_server, client, _svc) = start();
         assert_eq!(client.get("/nope").unwrap().status, 404);
         assert_eq!(client.get("/coordinators/app-99").unwrap().status, 404);
         assert_eq!(client.get("/coordinators/xyz").unwrap().status, 400);
@@ -304,7 +349,7 @@ mod tests {
 
     #[test]
     fn image_download_via_query() {
-        let (_server, client) = start();
+        let (_server, client, _svc) = start();
         let id = submit_dmtcp1(&client);
         wait_iter(&client, &id, 1);
         let ck = client
@@ -316,7 +361,7 @@ mod tests {
             .unwrap();
         assert_eq!(img.status, 200);
         assert!(img.body.starts_with(b"DCKP"));
-        // missing proc -> 404
+        // missing image -> 404
         let missing = client
             .get(&format!("/coordinators/{id}/checkpoints/{seq}?proc=5"))
             .unwrap();
@@ -324,8 +369,95 @@ mod tests {
     }
 
     #[test]
+    fn malformed_proc_query_is_400_not_json_fallthrough() {
+        // `?proc=abc` / `?proc=-1` used to be silently ignored, handing
+        // an octet-stream caller checkpoint-info JSON with a 200
+        let (_server, client, _svc) = start();
+        let id = submit_dmtcp1(&client);
+        wait_iter(&client, &id, 1);
+        let ck = client
+            .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
+            .unwrap();
+        let seq = ck.json().unwrap().get("seq").as_u64().unwrap();
+        for bad in ["abc", "-1", ""] {
+            let resp = client
+                .get(&format!("/coordinators/{id}/checkpoints/{seq}?proc={bad}"))
+                .unwrap();
+            assert_eq!(resp.status, 400, "proc={bad:?}: {:?}", resp.status);
+        }
+        // without a proc param the route still answers checkpoint info
+        let info = client
+            .get(&format!("/coordinators/{id}/checkpoints/{seq}"))
+            .unwrap();
+        assert_eq!(info.status, 200);
+        assert_eq!(info.json().unwrap().get("seq").as_u64(), Some(seq));
+    }
+
+    #[test]
+    fn migrate_while_checkpointing_is_409() {
+        let (_server, client, svc) = start();
+        let id = submit_dmtcp1(&client);
+        wait_iter(&client, &id, 1);
+        let app = AppId::parse(&id).unwrap();
+        // hold the app in CHECKPOINTING and try to migrate it
+        assert!(svc.force_state(app, AppState::Checkpointing));
+        let resp = client
+            .post(
+                &format!("/coordinators/{id}/migrate"),
+                &Json::object([("dst", "127.0.0.1:1".into())]),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 409, "{}", String::from_utf8_lossy(&resp.body));
+        assert!(
+            String::from_utf8_lossy(&resp.body).contains("CHECKPOINTING"),
+            "{}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        // the app is untouched by the refusal
+        let info = client.get(&format!("/coordinators/{id}")).unwrap();
+        assert_eq!(info.json().unwrap().get("state").as_str(), Some("CHECKPOINTING"));
+        assert!(svc.force_state(app, AppState::Running));
+    }
+
+    #[test]
+    fn migrate_bad_requests() {
+        let (_server, client, _svc) = start();
+        // unknown coordinator -> 404
+        let resp = client
+            .post(
+                "/coordinators/app-99/migrate",
+                &Json::object([("dst", "127.0.0.1:1".into())]),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 404);
+        // missing dst -> 400
+        let id = submit_dmtcp1(&client);
+        wait_iter(&client, &id, 1);
+        let resp = client
+            .post(&format!("/coordinators/{id}/migrate"), &Json::Null)
+            .unwrap();
+        assert_eq!(resp.status, 400);
+        // unreachable destination -> 502, and the source rolls back to
+        // RUNNING (nothing was torn down)
+        let resp = client
+            .post(
+                &format!("/coordinators/{id}/migrate"),
+                &Json::object([("dst", "127.0.0.1:1".into())]),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 502, "{}", String::from_utf8_lossy(&resp.body));
+        wait_iter(&client, &id, 1);
+        // ...and the failed attempt must not leak its checkpoint
+        // (record or images) — retries would accumulate image sets
+        let cks = client
+            .get(&format!("/coordinators/{id}/checkpoints"))
+            .unwrap();
+        assert_eq!(cks.json().unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
     fn health_endpoint() {
-        let (_server, client) = start();
+        let (_server, client, _svc) = start();
         let id = submit_dmtcp1(&client);
         wait_iter(&client, &id, 1);
         let h = client.get(&format!("/coordinators/{id}/health")).unwrap();

@@ -8,7 +8,9 @@
 //!   construction of the workload (PJRT artifact compilation plays the
 //!   role of VM provisioning).
 //! * Checkpoint Manager — stateless over any [`ObjectStore`] (§6.2),
-//!   including image upload/download for migration (§5.3).
+//!   including streaming image upload/download; cross-CACS migration is
+//!   a first-class operation (§5.3) driven by [`super::migrate`] over
+//!   the `begin/record/abort/complete` plumbing here.
 //! * Monitoring Manager — a background thread turning every
 //!   application's hook results + host reachability into a structured
 //!   [`HealthReport`] and driving both §6.3 recovery cases: unreachable
@@ -63,6 +65,42 @@ impl Default for ServiceConfig {
             auto_recover: true,
         }
     }
+}
+
+/// Why a migration could not start (the REST layer maps these to
+/// 404 / 409 — anything later in the flow is a transfer failure).
+#[derive(Debug)]
+pub enum MigrateStartError {
+    /// No such coordinator (404).
+    UnknownCoordinator,
+    /// The lifecycle refuses `RUNNING → MIGRATING` right now, e.g. a
+    /// checkpoint or another migration is in flight (409).
+    BadState(AppState),
+    /// The record exists but its host thread is gone (409 — recovery
+    /// owns the app until it is RUNNING again).
+    NoAppThread,
+}
+
+impl std::fmt::Display for MigrateStartError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MigrateStartError::UnknownCoordinator => write!(f, "unknown coordinator"),
+            MigrateStartError::BadState(s) => write!(f, "cannot migrate in state {s}"),
+            MigrateStartError::NoAppThread => write!(f, "no app thread"),
+        }
+    }
+}
+
+impl std::error::Error for MigrateStartError {}
+
+/// Everything the migration orchestrator needs after claiming the app:
+/// the host-thread handle (for quiesce + checkpoint off-lock), the ASR
+/// to clone onto the destination, and the reserved checkpoint seq.
+pub(crate) struct MigrationTicket {
+    pub handle: Arc<AppHandle>,
+    pub seq: u64,
+    pub asr: Asr,
+    pub with_overhead: bool,
 }
 
 struct Inner {
@@ -172,11 +210,7 @@ impl CacsService {
         // land the lifecycle in ERROR — the v1 `?` early-return left it
         // stuck in CHECKPOINTING
         let outcome = match self.handle(id) {
-            Some(handle) => {
-                let report = handle.checkpoint(seq, self.cfg.with_runtime_overhead);
-                let iteration = handle.progress().map(|(i, _)| i).unwrap_or(0);
-                report.map(|r| (r, iteration))
-            }
+            Some(handle) => handle.checkpoint(seq, self.cfg.with_runtime_overhead),
             None => Err(anyhow::anyhow!("no app thread")),
         };
         let mut inner = self.inner.lock().unwrap();
@@ -190,13 +224,13 @@ impl CacsService {
             anyhow::bail!("coordinator deleted during checkpoint");
         };
         match outcome {
-            Ok((report, iteration)) => {
+            Ok(report) => {
                 rec.lifecycle.to(now, AppState::Running);
                 let ck = CkptRecord {
                     id: CkptId(seq),
                     seq,
                     taken_at: now,
-                    iteration,
+                    iteration: report.iteration,
                     total_bytes: report.total_bytes(),
                     per_proc_bytes: report.image_bytes.clone(),
                 };
@@ -266,22 +300,24 @@ impl CacsService {
 
     /// DELETE /coordinators/:id (§5.4: remove DB entry, stored images,
     /// release resources).
+    ///
+    /// The record leaves the database *before* the store purge: an
+    /// [`upload_image`](Self::upload_image) racing this call re-checks
+    /// the record after its store write and, finding it gone, removes
+    /// its own key — whichever side runs last cleans up, so no orphan
+    /// can survive the race in either order.
     pub fn delete(&self, id: AppId) -> Result<()> {
         let handle = {
             let mut inner = self.inner.lock().unwrap();
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
             let now = self.now();
             rec.lifecycle.to(now, AppState::Terminating);
+            rec.lifecycle.to(now, AppState::Terminated);
+            inner.db.remove(id);
             inner.handles.remove(&id)
         };
         drop(handle); // joins the app thread when last ref (releases the "VMs")
         let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(rec) = inner.db.get_mut(id) {
-            let now = self.now();
-            rec.lifecycle.to(now, AppState::Terminated);
-        }
-        inner.db.remove(id);
         Ok(())
     }
 
@@ -289,23 +325,52 @@ impl CacsService {
     /// "n POST requests are sent to the corresponding checkpoints
     /// resource to upload a set of checkpoint images").
     pub fn upload_image(&self, id: AppId, seq: u64, proc: usize, data: &[u8]) -> Result<()> {
+        self.upload_image_stream(id, seq, proc, &mut &data[..]).map(|_| ())
+    }
+
+    /// Streaming variant of [`upload_image`](Self::upload_image): the
+    /// body flows straight into the store's
+    /// [`crate::storage::PutWriter`] — the REST layer feeds it the
+    /// (chunk-decoded) request body, so an image is never materialized
+    /// as one buffer on the receive side.  Returns the byte count.
+    pub fn upload_image_stream(
+        &self,
+        id: AppId,
+        seq: u64,
+        proc: usize,
+        body: &mut dyn std::io::Read,
+    ) -> Result<u64> {
         {
             let inner = self.inner.lock().unwrap();
             anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
         }
         let key = ckptsvc::image_key(&id.to_string(), seq, proc);
-        self.store
-            .put(&key, data)
-            .map_err(|e| anyhow::anyhow!("store put: {e}"))?;
-        // register/refresh the checkpoint record
+        // the transfer runs without the service lock
+        let n = {
+            let mut w = self
+                .store
+                .put_writer(&key)
+                .map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?;
+            std::io::copy(body, &mut w).with_context(|| format!("store put {key}"))?;
+            w.finish().map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?
+        };
+        // register/refresh the checkpoint record — re-checking the
+        // record: a §5.4 DELETE may have raced the transfer (v1 called
+        // `.unwrap()` here and panicked the REST worker).  The record
+        // is removed before the DELETE's store purge, so when it is
+        // gone we remove the just-written orphan ourselves.
         let mut inner = self.inner.lock().unwrap();
         let now = self.now();
-        let rec = inner.db.get_mut(id).unwrap();
+        let Some(rec) = inner.db.get_mut(id) else {
+            drop(inner);
+            let _ = self.store.delete(&key);
+            anyhow::bail!("coordinator deleted during upload");
+        };
         if let Some(ck) = rec.ckpts.iter_mut().find(|c| c.seq == seq) {
             while ck.per_proc_bytes.len() <= proc {
                 ck.per_proc_bytes.push(0);
             }
-            ck.per_proc_bytes[proc] = data.len() as u64;
+            ck.per_proc_bytes[proc] = n;
             ck.total_bytes = ck.per_proc_bytes.iter().sum();
         } else {
             rec.ckpts.push(CkptRecord {
@@ -313,12 +378,12 @@ impl CacsService {
                 seq,
                 taken_at: now,
                 iteration: 0,
-                total_bytes: data.len() as u64,
-                per_proc_bytes: vec![data.len() as u64],
+                total_bytes: n,
+                per_proc_bytes: vec![n],
             });
             rec.next_ckpt_seq = rec.next_ckpt_seq.max(seq + 1);
         }
-        Ok(())
+        Ok(n)
     }
 
     /// Download one checkpoint image (migration send path).
@@ -327,6 +392,129 @@ impl CacsService {
         self.store
             .get(&key)
             .map_err(|e| anyhow::anyhow!("store get: {e}"))
+    }
+
+    // --- §5.3 cross-CACS migration plumbing (driven by
+    // [`super::migrate::migrate`], which owns the orchestration) -------
+
+    /// Atomically claim the app for migration: validate the lifecycle
+    /// (only RUNNING may migrate — anything else is a 409 at the REST
+    /// layer), move it to MIGRATING and reserve the checkpoint
+    /// sequence.  The caller quiesces and checkpoints via the returned
+    /// handle *without* the service lock.
+    pub(crate) fn begin_migration(
+        &self,
+        id: AppId,
+    ) -> Result<MigrationTicket, MigrateStartError> {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let Some(rec) = inner.db.get_mut(id) else {
+            return Err(MigrateStartError::UnknownCoordinator);
+        };
+        let state = rec.lifecycle.state();
+        if !state.can_migrate() {
+            return Err(MigrateStartError::BadState(state));
+        }
+        let Some(handle) = inner.handles.get(&id).cloned() else {
+            return Err(MigrateStartError::NoAppThread);
+        };
+        rec.lifecycle.to(now, AppState::Migrating);
+        let seq = rec.next_ckpt_seq;
+        rec.next_ckpt_seq += 1;
+        Ok(MigrationTicket {
+            handle,
+            seq,
+            asr: rec.asr.clone(),
+            with_overhead: self.cfg.with_runtime_overhead,
+        })
+    }
+
+    /// Register the checkpoint the migration took (the MIGRATING state
+    /// means no user checkpoint can race this sequence number).
+    pub(crate) fn record_migration_ckpt(
+        &self,
+        id: AppId,
+        report: &ckptsvc::CheckpointReport,
+    ) -> Result<CkptRecord> {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        let rec = inner
+            .db
+            .get_mut(id)
+            .context("coordinator deleted during migration")?;
+        let ck = CkptRecord {
+            id: CkptId(report.seq),
+            seq: report.seq,
+            taken_at: now,
+            iteration: report.iteration,
+            total_bytes: report.total_bytes(),
+            per_proc_bytes: report.image_bytes.clone(),
+        };
+        rec.ckpts.push(ck.clone());
+        Ok(ck)
+    }
+
+    /// A migration failed before the source was touched: roll the
+    /// lifecycle back to RUNNING and resume stepping.  (A concurrent
+    /// DELETE may have removed the record; then there is nothing to
+    /// roll back.)
+    pub(crate) fn abort_migration(&self, id: AppId) {
+        let handle = {
+            let now = self.now();
+            let mut inner = self.inner.lock().unwrap();
+            let inner = &mut *inner;
+            if let Some(rec) = inner.db.get_mut(id) {
+                if rec.lifecycle.state() == AppState::Migrating {
+                    rec.lifecycle.to(now, AppState::Running);
+                }
+            }
+            inner.handles.get(&id).cloned()
+        };
+        if let Some(h) = handle {
+            h.resume();
+        }
+    }
+
+    /// The clone is confirmed RUNNING on the destination: terminate the
+    /// source (§5.3 "migration = clone + terminate source").  The host
+    /// thread is joined, the stored images purged, and a TERMINATED
+    /// tombstone with `migrated_to` kept in the database so the move
+    /// stays auditable (a user DELETE removes the tombstone too).
+    pub(crate) fn complete_migration(&self, id: AppId, migrated_to: String) -> Result<()> {
+        let handle = {
+            let now = self.now();
+            let mut inner = self.inner.lock().unwrap();
+            let inner = &mut *inner;
+            let rec = inner
+                .db
+                .get_mut(id)
+                .context("coordinator deleted during migration")?;
+            rec.migrated_to = Some(migrated_to);
+            rec.lifecycle.to(now, AppState::Terminating);
+            inner.handles.remove(&id)
+        };
+        drop(handle); // joins the host thread — releases the "VMs"
+        let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.db.get_mut(id) {
+            rec.lifecycle.to(now, AppState::Terminated);
+        }
+        Ok(())
+    }
+
+    /// Test seam: drive a (legal) lifecycle transition directly, e.g.
+    /// to hold an app in CHECKPOINTING while probing REST guards.
+    #[cfg(test)]
+    pub(crate) fn force_state(&self, id: AppId, next: AppState) -> bool {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .db
+            .get_mut(id)
+            .map(|r| r.lifecycle.to(now, next))
+            .unwrap_or(false)
     }
 
     /// Health snapshot (the REST layer exposes this for diagnostics).
@@ -833,6 +1021,79 @@ mod tests {
         // destination resumed from the source's iteration
         let j = svc_b.info(b).unwrap();
         assert!(j.get("iteration").as_u64().unwrap() >= ck.iteration);
+    }
+
+    #[test]
+    fn upload_after_delete_is_clean() {
+        // the §5.4 DELETE / upload race, deterministic edge: uploading
+        // to an already-deleted coordinator fails gracefully (no panic)
+        // and leaves nothing in the store
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 16 }, 1))
+            .unwrap();
+        svc.delete(id).unwrap();
+        let err = svc.upload_image(id, 1, 0, b"DCKPfake").unwrap_err();
+        assert!(err.to_string().contains("unknown coordinator"), "{err}");
+        assert!(svc.store().list(&format!("{id}/")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn migration_ticket_flow_and_abort() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 3);
+        let ticket = svc.begin_migration(id).unwrap();
+        assert_eq!(svc.state(id), Some(AppState::Migrating));
+        // the app is claimed: no second migration, no user checkpoint
+        assert!(matches!(
+            svc.begin_migration(id),
+            Err(MigrateStartError::BadState(AppState::Migrating))
+        ));
+        assert!(svc.checkpoint(id).is_err());
+        // quiesce + checkpoint at the frozen cut
+        let (frozen, _) = ticket.handle.quiesce().unwrap();
+        let report = ticket
+            .handle
+            .checkpoint(ticket.seq, ticket.with_overhead)
+            .unwrap();
+        assert_eq!(report.iteration, frozen);
+        let ck = svc.record_migration_ckpt(id, &report).unwrap();
+        assert_eq!(ck.seq, ticket.seq);
+        // a failed transfer rolls back: RUNNING again, stepping resumes
+        svc.abort_migration(id);
+        assert_eq!(svc.state(id), Some(AppState::Running));
+        wait_progress(&svc, id, frozen + 2);
+    }
+
+    #[test]
+    fn complete_migration_terminates_source_and_empties_store() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 3);
+        let ticket = svc.begin_migration(id).unwrap();
+        ticket.handle.quiesce().unwrap();
+        let report = ticket.handle.checkpoint(ticket.seq, false).unwrap();
+        svc.record_migration_ckpt(id, &report).unwrap();
+        svc.complete_migration(id, "10.0.0.9:7070/coordinators/app-42".into())
+            .unwrap();
+        assert_eq!(svc.state(id), Some(AppState::Terminated));
+        assert!(svc.store().list(&format!("{id}/")).unwrap().is_empty());
+        let j = svc.info(id).unwrap();
+        assert_eq!(
+            j.get("migrated_to").as_str(),
+            Some("10.0.0.9:7070/coordinators/app-42")
+        );
+        // the tombstone is inert: no checkpoint, no restart, no re-migrate
+        assert!(svc.checkpoint(id).is_err());
+        assert!(svc.begin_migration(id).is_err());
+        // and a user DELETE still removes it entirely
+        svc.delete(id).unwrap();
+        assert!(svc.info(id).is_err());
     }
 
     #[test]

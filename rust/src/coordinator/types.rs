@@ -76,6 +76,10 @@ pub struct Asr {
     /// Periodic checkpointing interval in seconds (§5.2 mode 2); None =
     /// only user-initiated checkpoints (mode 1).
     pub ckpt_period: Option<f64>,
+    /// Provenance of a §5.3 clone/migration: the source coordinator
+    /// this submission was cloned from (the migration orchestrator
+    /// stamps it on the ASR it submits to the destination CACS).
+    pub cloned_from: Option<String>,
 }
 
 impl Asr {
@@ -86,6 +90,7 @@ impl Asr {
             n_vms,
             template: VmTemplate::default(),
             ckpt_period: None,
+            cloned_from: None,
         }
     }
 
@@ -102,6 +107,9 @@ impl Asr {
         if let Some(p) = self.ckpt_period {
             o.set("ckpt_period", p.into());
         }
+        if let Some(src) = &self.cloned_from {
+            o.set("cloned_from", src.as_str().into());
+        }
         o
     }
 
@@ -111,12 +119,14 @@ impl Asr {
         let n_vms = j.get("n_vms").as_usize().context("asr: n_vms")?;
         anyhow::ensure!(n_vms >= 1, "asr: n_vms must be >= 1");
         let ckpt_period = j.get("ckpt_period").as_f64();
+        let cloned_from = j.get("cloned_from").as_str().map(str::to_string);
         Ok(Asr {
             name,
             workload,
             n_vms,
             template: VmTemplate::default(),
             ckpt_period,
+            cloned_from,
         })
     }
 }
@@ -160,10 +170,17 @@ pub struct AppRecord {
     pub next_ckpt_seq: u64,
     /// Index of the cloud this app runs on (multi-cloud worlds).
     pub cloud_idx: usize,
+    /// §5.3 provenance: where this app was cloned from (set at submit
+    /// when the ASR carries it).
+    pub cloned_from: Option<String>,
+    /// §5.3 bookkeeping: where this app migrated to — set on the source
+    /// tombstone when a cross-CACS migration completes.
+    pub migrated_to: Option<String>,
 }
 
 impl AppRecord {
     pub fn new(id: AppId, asr: Asr, now: f64, cloud_idx: usize) -> AppRecord {
+        let cloned_from = asr.cloned_from.clone();
         AppRecord {
             id,
             asr,
@@ -172,6 +189,8 @@ impl AppRecord {
             ckpts: vec![],
             next_ckpt_seq: 1,
             cloud_idx,
+            cloned_from,
+            migrated_to: None,
         }
     }
 
@@ -185,7 +204,7 @@ impl AppRecord {
 
     /// Table 1 representation of the coordinator resource.
     pub fn to_json(&self) -> Json {
-        Json::object([
+        let mut j = Json::object([
             ("id", self.id.to_string().into()),
             ("name", self.asr.name.as_str().into()),
             ("state", self.lifecycle.state().to_string().into()),
@@ -193,7 +212,14 @@ impl AppRecord {
             ("n_vms", self.asr.n_vms.into()),
             ("checkpoints", self.ckpts.len().into()),
             ("cloud", self.cloud_idx.into()),
-        ])
+        ]);
+        if let Some(src) = &self.cloned_from {
+            j.set("cloned_from", src.as_str().into());
+        }
+        if let Some(dst) = &self.migrated_to {
+            j.set("migrated_to", dst.as_str().into());
+        }
+        j
     }
 }
 
@@ -208,6 +234,28 @@ mod tests {
         let j = asr.to_json();
         let back = Asr::from_json(&j).unwrap();
         assert_eq!(back, asr);
+    }
+
+    #[test]
+    fn clone_provenance_roundtrips() {
+        // §5.3: the migration orchestrator stamps the source coordinator
+        // on the clone ASR; the record carries it into Table-1 JSON
+        let mut asr = Asr::new("m", WorkloadSpec::Dmtcp1 { n: 8 }, 1);
+        asr.cloned_from = Some("app-7".into());
+        let back = Asr::from_json(&asr.to_json()).unwrap();
+        assert_eq!(back.cloned_from.as_deref(), Some("app-7"));
+        let mut rec = AppRecord::new(AppId(1), asr, 0.0, 0);
+        rec.migrated_to = Some("10.0.0.2:7070/coordinators/app-3".into());
+        let j = rec.to_json();
+        assert_eq!(j.get("cloned_from").as_str(), Some("app-7"));
+        assert_eq!(
+            j.get("migrated_to").as_str(),
+            Some("10.0.0.2:7070/coordinators/app-3")
+        );
+        // absent when unset (plain submissions stay clean)
+        let plain = AppRecord::new(AppId(2), Asr::new("p", WorkloadSpec::Dmtcp1 { n: 8 }, 1), 0.0, 0);
+        assert!(plain.to_json().get("cloned_from").is_null());
+        assert!(plain.to_json().get("migrated_to").is_null());
     }
 
     #[test]

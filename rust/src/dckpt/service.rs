@@ -19,10 +19,13 @@ pub fn image_key(app: &str, seq: u64, proc_index: usize) -> String {
     format!("{app}/ckpt-{seq}/proc-{proc_index}.img")
 }
 
-/// Result of a checkpoint: per-proc image sizes.
+/// Result of a checkpoint: per-proc image sizes plus the iteration at
+/// the consistent cut (read *during* the quiesced checkpoint, so it is
+/// exact — sampling progress afterwards could over-report).
 #[derive(Debug, Clone)]
 pub struct CheckpointReport {
     pub seq: u64,
+    pub iteration: u64,
     pub image_bytes: Vec<u64>,
 }
 
@@ -88,7 +91,7 @@ pub fn checkpoint(
             .map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?;
         sizes.push(wire_bytes);
     }
-    Ok(CheckpointReport { seq, image_bytes: sizes })
+    Ok(CheckpointReport { seq, iteration: app.iteration(), image_bytes: sizes })
 }
 
 /// All checkpoint sequences available for `app_name`, ascending.
@@ -175,6 +178,23 @@ pub fn delete_all(store: &dyn ObjectStore, app_name: &str) -> Result<usize> {
         .map_err(|e| anyhow::anyhow!("store delete: {e}"))
 }
 
+/// Stream one checkpoint image into an arbitrary sink.  The migration
+/// orchestrator pipes this straight into a chunked HTTP upload
+/// ([`crate::util::http::Client::post_stream`]), so an image crosses
+/// from store to socket without ever being materialized in memory.
+pub fn copy_image_to(
+    store: &dyn ObjectStore,
+    app_name: &str,
+    seq: u64,
+    proc_index: usize,
+    out: &mut dyn std::io::Write,
+) -> Result<u64> {
+    let key = image_key(app_name, seq, proc_index);
+    store
+        .get_into(&key, out)
+        .map_err(|e| anyhow::anyhow!("store get {key}: {e}"))
+}
+
 /// Copy a checkpoint between stores (cloning/migration, §5.3: images are
 /// uploaded to the destination CACS, then restarted there).
 pub fn copy_checkpoint(
@@ -220,6 +240,7 @@ mod tests {
         }
         let report = checkpoint(&app, &store, "app-1", 1, false).unwrap();
         assert_eq!(report.image_bytes.len(), 4);
+        assert_eq!(report.iteration, 10, "iteration recorded at the cut");
         for _ in 0..5 {
             app.step().unwrap();
         }
@@ -336,6 +357,19 @@ mod tests {
         restore(&mut clone, &dst, "app-9", None).unwrap();
         assert_eq!(clone.iteration(), 7);
         assert!(copy_checkpoint(&src, &dst, "app-1", 99, "x").is_err());
+    }
+
+    #[test]
+    fn copy_image_to_streams_exact_bytes() {
+        let store = MemStore::new();
+        let mut app = CounterApp::new(2, 11);
+        app.step().unwrap();
+        checkpoint(&app, &store, "a", 1, false).unwrap();
+        let mut out = Vec::new();
+        let n = copy_image_to(&store, "a", 1, 1, &mut out).unwrap();
+        assert_eq!(n as usize, out.len());
+        assert_eq!(out, store.get(&image_key("a", 1, 1)).unwrap());
+        assert!(copy_image_to(&store, "a", 1, 9, &mut out).is_err());
     }
 
     #[test]

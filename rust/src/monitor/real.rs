@@ -13,8 +13,8 @@
 //! time even when part of its subtree is dead.  Children that miss their
 //! deadline are reported as *timed out* — **not** unreachable — and the
 //! Monitoring Manager re-probes those subtrees directly in parallel
-//! resolve waves on [`ThreadPool::shared`].  Only a node that fails a
-//! direct probe is declared unreachable.
+//! resolve waves on the dedicated [`probe_pool`].  Only a node that
+//! fails a direct probe is declared unreachable.
 //!
 //! This fixes the v1 design where children were probed sequentially with
 //! stacking per-hop timeouts: one dead leaf made its alive parent blow
@@ -23,14 +23,30 @@
 //! the deadline budget a round costs ~`hop × (height + 2)` plus one
 //! bounded resolve wave per *chained* dead ancestor, and an alive node is
 //! never reported unreachable because of deaths below it.
+//!
+//! Resolve waves run on a **dedicated probe pool** ([`probe_pool`]),
+//! not [`ThreadPool::shared`]: probe jobs are blocking channel waits,
+//! and on the shared pool they queued behind 64 MB CRC shards whenever
+//! a checkpoint was in flight — detection latency became a function of
+//! image I/O.  The probe pool is small (probes mostly sleep) and lazy.
 
 use super::tree::BroadcastTree;
 use super::HealthReport;
 use crate::util::pool::ThreadPool;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
+
+/// Process-wide pool for monitor probe waits, separate from
+/// [`ThreadPool::shared`] so blocking probes never queue behind CRC
+/// shards (and heavy image I/O never queues behind sleeping probes).
+/// Probes spend their time in `recv_timeout`, so a handful of workers
+/// resolves even wide dead-leaf waves in a few batches.
+pub(crate) fn probe_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    ThreadPool::dedicated_small(&POOL)
+}
 
 /// The user-supplied health hook: `hook(node) -> healthy?` (§6.3 "a
 /// user-defined application-specific routine can define and test the
@@ -189,18 +205,19 @@ impl RealMonitor {
     ///
     /// Wave 0 probes the root with the whole-round budget.  Every node a
     /// wave reports as timed out is re-probed *directly* (in parallel on
-    /// the shared pool) in the next wave with a budget sized to its
-    /// subtree; a node failing its direct probe is unreachable and its
-    /// children join the next wave.  Alive ancestors of dead nodes are
-    /// therefore never misreported, and the wave count is bounded by the
-    /// longest chain of dead ancestors, not the number of dead nodes.
+    /// the dedicated [`probe_pool`]) in the next wave with a budget
+    /// sized to its subtree; a node failing its direct probe is
+    /// unreachable and its children join the next wave.  Alive ancestors
+    /// of dead nodes are therefore never misreported, and the wave count
+    /// is bounded by the longest chain of dead ancestors, not the number
+    /// of dead nodes.
     pub fn heartbeat(&self) -> HealthReport {
         let mut unhealthy = vec![];
         let mut unreachable = vec![];
         let mut pending = vec![0usize];
         while !pending.is_empty() {
             let book = self.book.clone();
-            let results = ThreadPool::shared()
+            let results = probe_pool()
                 .map(pending, move |node| (node, probe_direct(&book, node)));
             let mut next = vec![];
             for (node, outcome) in results {
@@ -373,6 +390,40 @@ mod tests {
     }
 
     #[test]
+    fn detection_latency_independent_of_shared_pool_load() {
+        // Saturate ThreadPool::shared() with long blocking jobs (a
+        // stand-in for 64 MB CRC shards during a checkpoint) and show a
+        // heartbeat still resolves a dead leaf within a few hop
+        // budgets: probe waves run on the dedicated probe pool, so
+        // detection latency is independent of image I/O.  Before the
+        // split, the resolve wave queued behind the blockers.
+        let shared = ThreadPool::shared();
+        let gate = Arc::new(AtomicBool::new(false));
+        for _ in 0..shared.size() * 2 {
+            let gate = gate.clone();
+            shared.submit(move || {
+                let t0 = Instant::now();
+                while !gate.load(Ordering::SeqCst)
+                    && t0.elapsed() < Duration::from_millis(1500)
+                {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            });
+        }
+        let mon = RealMonitor::start(7, all_healthy_hook(), HOP);
+        mon.kill_daemon(5);
+        let t0 = Instant::now();
+        let report = mon.heartbeat();
+        let elapsed = t0.elapsed();
+        gate.store(true, Ordering::SeqCst); // release the shared pool
+        assert_eq!(report.unreachable, vec![5]);
+        assert!(report.unhealthy.is_empty());
+        // if probes ran on the saturated shared pool, wave 0 could not
+        // even start before the blockers finished (~1.5 s)
+        assert!(elapsed < Duration::from_millis(1200), "heartbeat took {elapsed:?}");
+    }
+
+    #[test]
     fn thousand_node_tree_ten_dead_leaves() {
         // Acceptance: n=1023 (full height-9 tree) with 10 dead leaves
         // reports exactly those 10, no false positives on alive
@@ -391,8 +442,8 @@ mod tests {
         assert!(report.unhealthy.is_empty());
         // wave 0 + one parallel leaf resolve wave; the wave batches by
         // pool width, so size the bound by worker count, then double it
-        // for cross-test contention on the shared pool under `cargo test`
-        let workers = ThreadPool::shared().size();
+        // for cross-test contention on the probe pool under `cargo test`
+        let workers = probe_pool().size();
         let batches = (dead.len() + workers - 1) / workers;
         let bound = (mon.budget() + HOP * (2 * batches as u32 + 4)) * 2;
         assert!(

@@ -2,15 +2,21 @@
 //! unavailable offline).
 //!
 //! Implements exactly what the CACS REST API (Table 1) needs: request
-//! line + headers + Content-Length bodies, keep-alive off (connection:
-//! close), JSON payloads, and a blocking client for the migration
-//! "scripts" (examples/cloud_migration.rs is the analog of the paper's
-//! 90-line Python script driving two CACS instances).
+//! line + headers, Content-Length *and* `Transfer-Encoding: chunked`
+//! bodies, keep-alive off (connection: close), JSON payloads, and a
+//! blocking client for the migration path.  Request bodies are
+//! **streaming**: a handler may consume the body through
+//! [`Request::body_reader`] chunk-at-a-time (the §5.3 migration
+//! orchestrator pipes checkpoint images through this without ever
+//! materializing one in memory), or buffer it on demand with
+//! [`Request::body`] / [`Request::json`].  The client mirrors this with
+//! [`Client::post_stream`], which writes a chunked request body from any
+//! producer (e.g. [`crate::storage::ObjectStore::get_into`]).
 
 use crate::util::json::{self, Json};
 use crate::util::pool::ThreadPool;
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -45,31 +51,152 @@ impl Method {
     }
 }
 
-/// A parsed HTTP request.
-#[derive(Debug, Clone)]
+/// The (possibly still unread) body of a request.
+enum BodyState {
+    /// Fully materialized in memory.
+    Buffered(Vec<u8>),
+    /// Still on the wire; `reader` is already bounded/decoded (a
+    /// Content-Length `Take` or a chunked decoder).
+    Stream {
+        reader: Box<dyn Read + Send>,
+        /// Declared Content-Length, if any (chunked bodies have none);
+        /// used to detect truncated uploads when buffering.
+        declared_len: Option<u64>,
+    },
+    /// Handed out via [`Request::body_reader`].
+    Taken,
+}
+
+impl std::fmt::Debug for BodyState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BodyState::Buffered(b) => write!(f, "Buffered({} bytes)", b.len()),
+            BodyState::Stream { declared_len, .. } => {
+                write!(f, "Stream(declared_len: {declared_len:?})")
+            }
+            BodyState::Taken => write!(f, "Taken"),
+        }
+    }
+}
+
+/// A parsed HTTP request.  Handlers receive `&mut Request` so they can
+/// either buffer the body ([`Request::body`] / [`Request::json`]) or
+/// stream it ([`Request::body_reader`]) — image uploads take the
+/// streaming path straight into the object store.
+#[derive(Debug)]
 pub struct Request {
     pub method: Method,
     pub path: String,
     pub headers: BTreeMap<String, String>,
-    pub body: Vec<u8>,
+    body: BodyState,
 }
 
 impl Request {
+    /// Build a fully-buffered request (tests, fuzz harnesses).
+    pub fn new(
+        method: Method,
+        path: &str,
+        headers: BTreeMap<String, String>,
+        body: Vec<u8>,
+    ) -> Request {
+        Request { method, path: path.to_string(), headers, body: BodyState::Buffered(body) }
+    }
+
+    /// The whole body, buffering it off the wire on first call.
+    /// Buffering is capped at [`MAX_BODY_BYTES`] (413), so a peer
+    /// cannot make this allocate without bound — only *streamed*
+    /// consumption ([`Self::body_reader`]) is unbounded, because it
+    /// flows to a sink instead of memory.
+    pub fn body(&mut self) -> Result<&[u8], RequestError> {
+        if let BodyState::Stream { .. } = self.body {
+            let BodyState::Stream { reader, declared_len } =
+                std::mem::replace(&mut self.body, BodyState::Taken)
+            else {
+                unreachable!()
+            };
+            let mut buf = Vec::new();
+            let mut capped = reader.take(MAX_BODY_BYTES as u64 + 1);
+            capped.read_to_end(&mut buf)?;
+            if buf.len() > MAX_BODY_BYTES {
+                return Err(RequestError::TooLarge(buf.len()));
+            }
+            if let Some(l) = declared_len {
+                if buf.len() as u64 != l {
+                    return Err(RequestError::Malformed(format!(
+                        "body truncated ({} of {l} bytes)",
+                        buf.len()
+                    )));
+                }
+            }
+            self.body = BodyState::Buffered(buf);
+        }
+        match &self.body {
+            BodyState::Buffered(b) => Ok(b),
+            BodyState::Taken => Err(RequestError::Malformed("body already consumed".into())),
+            BodyState::Stream { .. } => unreachable!(),
+        }
+    }
+
     /// Body parsed as JSON (empty body → `Json::Null`).
-    pub fn json(&self) -> Result<Json, json::ParseError> {
-        if self.body.is_empty() {
+    pub fn json(&mut self) -> Result<Json, RequestError> {
+        let body = self.body()?;
+        if body.is_empty() {
             return Ok(Json::Null);
         }
-        let text = std::str::from_utf8(&self.body).map_err(|_| json::ParseError {
-            offset: 0,
-            message: "body is not utf-8".into(),
-        })?;
-        json::parse(text)
+        let text = std::str::from_utf8(body)
+            .map_err(|_| RequestError::Malformed("body is not utf-8".into()))?;
+        json::parse(text).map_err(|e| RequestError::Malformed(e.to_string()))
+    }
+
+    /// Take the body as a streaming reader (chunk-decoded); the
+    /// migration upload path copies this straight into a store
+    /// [`crate::storage::PutWriter`] without a whole-image buffer.
+    /// A Content-Length body that ends early surfaces as an
+    /// `UnexpectedEof` read error, never as a silent short body.
+    pub fn body_reader(&mut self) -> BodyReader {
+        match std::mem::replace(&mut self.body, BodyState::Taken) {
+            BodyState::Buffered(b) => BodyReader {
+                inner: Box::new(std::io::Cursor::new(b)),
+                expect_remaining: None,
+            },
+            BodyState::Stream { reader, declared_len } => {
+                BodyReader { inner: reader, expect_remaining: declared_len }
+            }
+            BodyState::Taken => BodyReader {
+                inner: Box::new(std::io::empty()),
+                expect_remaining: None,
+            },
+        }
     }
 
     /// Split the path into non-empty segments: `/a/b/c` → `["a","b","c"]`.
     pub fn segments(&self) -> Vec<&str> {
         self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// Streaming request-body reader handed out by [`Request::body_reader`].
+pub struct BodyReader {
+    inner: Box<dyn Read + Send>,
+    /// Bytes the peer still owes under its Content-Length; a premature
+    /// EOF is an error, not a short body (a truncated image upload must
+    /// never be committed to the store as complete).
+    expect_remaining: Option<u64>,
+}
+
+impl Read for BodyReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        if let Some(rem) = &mut self.expect_remaining {
+            if n == 0 && *rem > 0 && !buf.is_empty() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!("body truncated ({rem} bytes short of content-length)"),
+                ));
+            }
+            *rem = rem.saturating_sub(n as u64);
+        }
+        Ok(n)
     }
 }
 
@@ -102,12 +229,21 @@ impl Response {
         }
     }
 
+    /// A true RFC 9110 204: no body, no Content-Type, no Content-Length.
+    pub fn no_content() -> Response {
+        Response { status: 204, body: vec![], content_type: "" }
+    }
+
     pub fn not_found() -> Response {
         Response::json(404, &Json::object([("error", "not found".into())]))
     }
 
     pub fn bad_request(msg: &str) -> Response {
         Response::json(400, &Json::object([("error", msg.into())]))
+    }
+
+    pub fn conflict(msg: &str) -> Response {
+        Response::json(409, &Json::object([("error", msg.into())]))
     }
 
     fn status_text(code: u16) -> &'static str {
@@ -122,28 +258,45 @@ impl Response {
             409 => "Conflict",
             413 => "Payload Too Large",
             500 => "Internal Server Error",
+            502 => "Bad Gateway",
             503 => "Service Unavailable",
             _ => "Unknown",
         }
     }
 
     fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
-        let head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
-            self.status,
-            Response::status_text(self.status),
-            self.content_type,
-            self.body.len()
-        );
+        // 204 MUST NOT carry a body or entity headers (RFC 9110 §15.3.5)
+        let head = if self.status == 204 {
+            format!(
+                "HTTP/1.1 {} {}\r\nconnection: close\r\n\r\n",
+                self.status,
+                Response::status_text(self.status)
+            )
+        } else {
+            format!(
+                "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+                self.status,
+                Response::status_text(self.status),
+                self.content_type,
+                self.body.len()
+            )
+        };
         stream.write_all(head.as_bytes())?;
-        stream.write_all(&self.body)?;
+        if self.status != 204 {
+            stream.write_all(&self.body)?;
+        }
         stream.flush()
     }
 }
 
-/// Largest request body the server will buffer.  A Content-Length beyond
-/// this is rejected with 413 *before* any allocation happens — a lying
-/// header must not be able to make the server reserve gigabytes.
+/// Largest request body the server will **buffer**.  A Content-Length
+/// beyond this is rejected with 413 *before* any allocation happens — a
+/// lying header must not be able to make the server reserve gigabytes —
+/// and buffering a chunked body ([`Request::body`]) hits the same cap.
+/// Streamed consumption ([`Request::body_reader`], e.g. a chunked image
+/// upload flowing straight into the object store) is deliberately
+/// unbounded: nothing accumulates in memory, and migration images may
+/// legitimately exceed any buffering cap.
 pub const MAX_BODY_BYTES: usize = 256 * 1024 * 1024;
 
 /// Why reading a request failed (typed so the server can pick the right
@@ -152,7 +305,7 @@ pub const MAX_BODY_BYTES: usize = 256 * 1024 * 1024;
 pub enum RequestError {
     /// Declared Content-Length exceeds [`MAX_BODY_BYTES`] — mapped to 413.
     TooLarge(usize),
-    /// Malformed request line or headers — mapped to 400.
+    /// Malformed request line, headers or body — mapped to 400.
     Malformed(String),
     /// Transport error mid-request — mapped to 400 (best effort).
     Io(std::io::Error),
@@ -178,9 +331,10 @@ impl From<std::io::Error> for RequestError {
     }
 }
 
-/// Read and parse one request from a stream (used by the server and the
-/// tests; exposed for fuzzing).
-pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, RequestError> {
+/// Parse the request line and headers, leaving the body on the reader.
+fn read_head<R: BufRead>(
+    reader: &mut R,
+) -> Result<(Method, String, BTreeMap<String, String>), RequestError> {
     let mut line = String::new();
     reader.read_line(&mut line)?;
     let mut parts = line.trim_end().split_whitespace();
@@ -206,24 +360,207 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, RequestError>
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
-    let len: usize = headers
+    Ok((method, path, headers))
+}
+
+fn is_chunked(headers: &BTreeMap<String, String>) -> bool {
+    headers
+        .get("transfer-encoding")
+        .map(|v| v.to_ascii_lowercase().contains("chunked"))
+        .unwrap_or(false)
+}
+
+fn content_length(headers: &BTreeMap<String, String>) -> usize {
+    headers
         .get("content-length")
         .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
-    if len > MAX_BODY_BYTES {
-        return Err(RequestError::TooLarge(len));
-    }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body)?;
+        .unwrap_or(0)
+}
+
+/// Read and parse one request, fully buffering the body (used by the
+/// tests; exposed for fuzzing).  The server itself uses the streaming
+/// variant so large uploads never materialize.
+pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, RequestError> {
+    let (method, path, headers) = read_head(reader)?;
+    let body = if is_chunked(&headers) {
+        let mut buf = Vec::new();
+        let mut capped = ChunkedReader::new(&mut *reader).take(MAX_BODY_BYTES as u64 + 1);
+        capped.read_to_end(&mut buf)?;
+        if buf.len() > MAX_BODY_BYTES {
+            return Err(RequestError::TooLarge(buf.len()));
+        }
+        buf
+    } else {
+        let len = content_length(&headers);
+        if len > MAX_BODY_BYTES {
+            return Err(RequestError::TooLarge(len));
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        body
+    };
+    Ok(Request { method, path, headers, body: BodyState::Buffered(body) })
+}
+
+/// Read the head and hand the (bounded, decoded) body over as a stream.
+fn read_request_streaming<R: BufRead + Send + 'static>(
+    mut reader: R,
+) -> Result<Request, RequestError> {
+    let (method, path, headers) = read_head(&mut reader)?;
+    let body = if is_chunked(&headers) {
+        BodyState::Stream { reader: Box::new(ChunkedReader::new(reader)), declared_len: None }
+    } else {
+        let len = content_length(&headers);
+        if len > MAX_BODY_BYTES {
+            return Err(RequestError::TooLarge(len));
+        }
+        BodyState::Stream {
+            reader: Box::new(reader.take(len as u64)),
+            declared_len: Some(len as u64),
+        }
+    };
     Ok(Request { method, path, headers, body })
+}
+
+/// `Transfer-Encoding: chunked` decoder; consumes any trailer section.
+/// Deliberately size-unbounded — chunked bodies have no declared length
+/// and the streaming consumers never buffer them; [`Request::body`]
+/// applies [`MAX_BODY_BYTES`] when it *does* buffer.  Framing lines are
+/// length-capped so a newline-free flood cannot allocate unboundedly.
+struct ChunkedReader<R: BufRead> {
+    inner: R,
+    remaining: u64,
+    done: bool,
+}
+
+impl<R: BufRead> ChunkedReader<R> {
+    fn new(inner: R) -> ChunkedReader<R> {
+        ChunkedReader { inner, remaining: 0, done: false }
+    }
+
+    fn bad(msg: &str) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+    }
+
+    /// Read one CRLF-terminated framing line with a hard length cap —
+    /// chunk-size lines and trailers are tiny, and an endless line must
+    /// not buffer unboundedly (the body cap only counts payload).
+    fn read_line_capped(&mut self, cap: usize) -> std::io::Result<String> {
+        let mut line = Vec::with_capacity(32);
+        loop {
+            let mut byte = [0u8; 1];
+            if self.inner.read(&mut byte)? == 0 {
+                break; // EOF: the caller rejects a partial frame
+            }
+            if byte[0] == b'\n' {
+                break;
+            }
+            line.push(byte[0]);
+            if line.len() > cap {
+                return Err(Self::bad("chunk framing line too long"));
+            }
+        }
+        while line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        String::from_utf8(line).map_err(|_| Self::bad("chunk framing not utf-8"))
+    }
+
+    fn next_chunk(&mut self) -> std::io::Result<()> {
+        let line = self.read_line_capped(256)?;
+        let size_str = line.trim().split(';').next().unwrap_or("").trim();
+        let size = u64::from_str_radix(size_str, 16)
+            .map_err(|_| Self::bad(&format!("bad chunk size {size_str:?}")))?;
+        if size == 0 {
+            // consume trailers up to the blank line (or EOF)
+            loop {
+                let t = self.read_line_capped(1024)?;
+                if t.trim().is_empty() {
+                    break;
+                }
+            }
+            self.done = true;
+            return Ok(());
+        }
+        self.remaining = size;
+        Ok(())
+    }
+}
+
+impl<R: BufRead> Read for ChunkedReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.done || buf.is_empty() {
+            return Ok(0);
+        }
+        if self.remaining == 0 {
+            self.next_chunk()?;
+            if self.done {
+                return Ok(0);
+            }
+        }
+        let want = buf.len().min(self.remaining as usize);
+        let got = self.inner.read(&mut buf[..want])?;
+        if got == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-chunk",
+            ));
+        }
+        self.remaining -= got as u64;
+        if self.remaining == 0 {
+            // the CRLF that terminates the chunk data
+            let mut crlf = [0u8; 2];
+            self.inner.read_exact(&mut crlf)?;
+        }
+        Ok(got)
+    }
+}
+
+/// Client-side `Transfer-Encoding: chunked` framing: every `write`
+/// becomes one chunk, [`ChunkedWriter::finish`] writes the terminal
+/// chunk.  This is what lets the migration orchestrator stream a
+/// checkpoint image from the store into the socket without knowing (or
+/// buffering) its full length.
+pub struct ChunkedWriter<W: Write> {
+    inner: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    pub fn new(inner: W) -> ChunkedWriter<W> {
+        ChunkedWriter { inner }
+    }
+
+    /// Terminate the body (`0\r\n\r\n`) and flush, returning the sink.
+    pub fn finish(mut self) -> std::io::Result<W> {
+        self.inner.write_all(b"0\r\n\r\n")?;
+        self.inner.flush()?;
+        Ok(self.inner)
+    }
+}
+
+impl<W: Write> Write for ChunkedWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0); // a zero-length chunk would terminate the body
+        }
+        write!(self.inner, "{:x}\r\n", buf.len())?;
+        self.inner.write_all(buf)?;
+        self.inner.write_all(b"\r\n")?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
 }
 
 fn bad(msg: &str) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
 }
 
-/// Request handler signature for the server.
-pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+/// Request handler signature for the server.  Handlers get `&mut`
+/// access so they can consume the body as a stream.
+pub type Handler = Arc<dyn Fn(&mut Request) -> Response + Send + Sync>;
 
 /// Blocking HTTP server dispatching on a thread pool (§6.5).
 pub struct Server {
@@ -299,18 +636,28 @@ impl Drop for Server {
 
 fn serve_conn(mut stream: TcpStream, handler: Handler) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(10)));
-    let mut reader = BufReader::new(match stream.try_clone() {
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+    let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
-    let response = match read_request(&mut reader) {
-        Ok(req) => {
+    let response = match read_request_streaming(reader) {
+        Ok(mut req) => {
             // Handler panics must not kill the worker.
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)))
-                .unwrap_or_else(|_| {
-                    Response::json(500, &Json::object([("error", "handler panicked".into())]))
-                })
+            let response =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&mut req)))
+                    .unwrap_or_else(|_| {
+                        Response::json(
+                            500,
+                            &Json::object([("error", "handler panicked".into())]),
+                        )
+                    });
+            // Drain whatever body the handler left on the wire (the
+            // reader is already capped) so an error status reaches a
+            // mid-upload client instead of being destroyed by the TCP
+            // RST that closing on unread data would trigger.
+            let _ = std::io::copy(&mut req.body_reader(), &mut std::io::sink());
+            response
         }
         Err(e @ RequestError::TooLarge(_)) => {
             Response::json(413, &Json::object([("error", e.to_string().into())]))
@@ -330,6 +677,7 @@ pub struct Client {
 #[derive(Debug, Clone)]
 pub struct ClientResponse {
     pub status: u16,
+    pub headers: BTreeMap<String, String>,
     pub body: Vec<u8>,
 }
 
@@ -345,6 +693,36 @@ impl ClientResponse {
     pub fn is_success(&self) -> bool {
         (200..300).contains(&self.status)
     }
+}
+
+/// Parse one response off a connection: status line, headers, body.
+fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<ClientResponse> {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("bad status line"))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let content_len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok(ClientResponse { status, headers, body })
 }
 
 impl Client {
@@ -378,7 +756,10 @@ impl Client {
     ) -> std::io::Result<ClientResponse> {
         let mut stream = TcpStream::connect(&self.base)?;
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+        // generous: long service-side operations answer on this same
+        // connection (POST .../migrate runs a whole §5.3 cycle — up to
+        // a 60 s clone poll plus the image transfer — before replying)
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(180)))?;
         let body_bytes = body.map(|b| b.to_string().into_bytes()).unwrap_or_default();
         let head = format!(
             "{} {} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
@@ -390,32 +771,46 @@ impl Client {
         stream.write_all(head.as_bytes())?;
         stream.write_all(&body_bytes)?;
         stream.flush()?;
+        read_response(&mut BufReader::new(stream))
+    }
 
-        let mut reader = BufReader::new(stream);
-        let mut status_line = String::new();
-        reader.read_line(&mut status_line)?;
-        let status: u16 = status_line
-            .split_whitespace()
-            .nth(1)
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| bad("bad status line"))?;
-        let mut content_len = 0usize;
-        loop {
-            let mut h = String::new();
-            reader.read_line(&mut h)?;
-            let h = h.trim_end();
-            if h.is_empty() {
-                break;
-            }
-            if let Some((k, v)) = h.split_once(':') {
-                if k.trim().eq_ignore_ascii_case("content-length") {
-                    content_len = v.trim().parse().unwrap_or(0);
-                }
-            }
+    /// POST with a **streamed** chunked body (no Content-Length, no
+    /// full-body buffer on this side of the wire): `produce` writes the
+    /// payload into the sink — e.g. `store.get_into(key, w)` — and
+    /// returns how many bytes it wrote.  Returns (bytes written,
+    /// response).
+    pub fn post_stream<F>(
+        &self,
+        path: &str,
+        content_type: &str,
+        headers: &[(&str, String)],
+        produce: F,
+    ) -> std::io::Result<(u64, ClientResponse)>
+    where
+        F: FnOnce(&mut dyn Write) -> std::io::Result<u64>,
+    {
+        let mut stream = TcpStream::connect(&self.base)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(180)))?;
+        let mut head = format!(
+            "POST {} HTTP/1.1\r\nhost: {}\r\ncontent-type: {}\r\ntransfer-encoding: chunked\r\nconnection: close\r\n",
+            path, self.base, content_type
+        );
+        for (k, v) in headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
         }
-        let mut body = vec![0u8; content_len];
-        reader.read_exact(&mut body)?;
-        Ok(ClientResponse { status, body })
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        // small writes from io::copy-style producers get coalesced by
+        // the BufWriter; big writes pass straight through it
+        let mut chunked =
+            ChunkedWriter::new(BufWriter::with_capacity(64 * 1024, stream.try_clone()?));
+        let n = produce(&mut chunked)?;
+        drop(chunked.finish()?);
+        read_response(&mut BufReader::new(stream))
     }
 }
 
@@ -424,7 +819,7 @@ mod tests {
     use super::*;
 
     fn echo_server() -> Server {
-        let handler: Handler = Arc::new(|req: &Request| {
+        let handler: Handler = Arc::new(|req: &mut Request| {
             let mut o = Json::obj();
             o.set("method", req.method.as_str().into());
             o.set("path", req.path.as_str().into());
@@ -457,23 +852,28 @@ mod tests {
     }
 
     #[test]
-    fn delete_and_404_handling() {
-        let handler: Handler = Arc::new(|req: &Request| {
+    fn no_content_has_no_body_or_entity_headers() {
+        let handler: Handler = Arc::new(|req: &mut Request| {
             if req.method == Method::Delete {
-                Response::json(204, &Json::Null)
+                Response::no_content()
             } else {
                 Response::not_found()
             }
         });
         let server = Server::start("127.0.0.1:0", 2, handler).unwrap();
         let client = Client::new(&server.addr().to_string());
-        assert_eq!(client.delete("/coordinators/app-1").unwrap().status, 204);
+        let resp = client.delete("/coordinators/app-1").unwrap();
+        assert_eq!(resp.status, 204);
+        assert!(resp.body.is_empty());
+        // RFC 9110: a 204 must not carry entity headers or a body
+        assert!(!resp.headers.contains_key("content-type"), "{:?}", resp.headers);
+        assert!(!resp.headers.contains_key("content-length"), "{:?}", resp.headers);
         assert_eq!(client.get("/nope").unwrap().status, 404);
     }
 
     #[test]
     fn handler_panic_yields_500() {
-        let handler: Handler = Arc::new(|_req: &Request| panic!("kaboom"));
+        let handler: Handler = Arc::new(|_req: &mut Request| panic!("kaboom"));
         let server = Server::start("127.0.0.1:0", 2, handler).unwrap();
         let client = Client::new(&server.addr().to_string());
         let resp = client.get("/x").unwrap();
@@ -537,8 +937,99 @@ mod tests {
         // parser then waits for that many bytes; give it a small body)
         let raw = "POST /x HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd";
         let mut r = raw.as_bytes();
-        let req = read_request(&mut r).unwrap();
-        assert_eq!(req.body, b"abcd");
+        let mut req = read_request(&mut r).unwrap();
+        assert_eq!(req.body().unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn chunked_request_parsed_by_buffering_reader() {
+        let raw = "POST /up HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n\
+                   4\r\nwiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        let mut r = raw.as_bytes();
+        let mut req = read_request(&mut r).unwrap();
+        assert_eq!(req.body().unwrap(), b"wikipedia");
+    }
+
+    #[test]
+    fn chunked_rejects_bad_chunk_size() {
+        let raw = "POST /up HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\nzz\r\nboom\r\n";
+        let mut r = raw.as_bytes();
+        let mut req = read_request_streaming(std::io::BufReader::new(r)).unwrap();
+        assert!(req.body().is_err());
+        // buffering path hits the same decoder
+        r = raw.as_bytes();
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn chunked_upload_streams_end_to_end() {
+        // server consumes the body through body_reader (never a single
+        // whole-body buffer), returns length + checksum
+        let handler: Handler = Arc::new(|req: &mut Request| {
+            let mut r = req.body_reader();
+            let mut buf = [0u8; 8192];
+            let (mut n, mut sum) = (0u64, 0u64);
+            loop {
+                match r.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(k) => {
+                        n += k as u64;
+                        for b in &buf[..k] {
+                            sum = sum.wrapping_add(*b as u64);
+                        }
+                    }
+                    Err(_) => return Response::bad_request("read failed"),
+                }
+            }
+            Response::ok_json(&Json::object([("len", n.into()), ("sum", sum.into())]))
+        });
+        let server = Server::start("127.0.0.1:0", 2, handler).unwrap();
+        let client = Client::new(&server.addr().to_string());
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let expect_sum: u64 = payload.iter().map(|&b| b as u64).sum();
+        let (sent, resp) = client
+            .post_stream("/up", "application/octet-stream", &[], |w| {
+                // write in uneven chunks to exercise the framing
+                for part in payload.chunks(7919) {
+                    w.write_all(part)?;
+                }
+                Ok(payload.len() as u64)
+            })
+            .unwrap();
+        assert_eq!(sent, payload.len() as u64);
+        assert_eq!(resp.status, 200);
+        let j = resp.json().unwrap();
+        assert_eq!(j.get("len").as_u64(), Some(payload.len() as u64));
+        assert_eq!(j.get("sum").as_u64(), Some(expect_sum));
+    }
+
+    #[test]
+    fn truncated_content_length_body_is_an_error() {
+        let raw = "POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc";
+        let mut req =
+            read_request_streaming(std::io::BufReader::new(raw.as_bytes())).unwrap();
+        assert!(req.body().is_err());
+    }
+
+    #[test]
+    fn truncated_body_reader_errors_instead_of_short_read() {
+        // the streaming path must never hand a consumer a silently
+        // short body — a truncated image upload would otherwise be
+        // committed to the store as complete
+        let raw = "POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc";
+        let mut req =
+            read_request_streaming(std::io::BufReader::new(raw.as_bytes())).unwrap();
+        let mut r = req.body_reader();
+        let mut out = Vec::new();
+        let err = std::io::copy(&mut r, &mut out).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "{err}");
+        // a complete body streams through cleanly
+        let raw = "POST /x HTTP/1.1\r\ncontent-length: 3\r\n\r\nabc";
+        let mut req =
+            read_request_streaming(std::io::BufReader::new(raw.as_bytes())).unwrap();
+        let mut out = Vec::new();
+        std::io::copy(&mut req.body_reader(), &mut out).unwrap();
+        assert_eq!(out, b"abc");
     }
 
     #[test]
@@ -556,12 +1047,12 @@ mod tests {
 
     #[test]
     fn request_segments() {
-        let req = Request {
-            method: Method::Get,
-            path: "/coordinators/app-3/checkpoints/ckpt-7".into(),
-            headers: BTreeMap::new(),
-            body: vec![],
-        };
+        let req = Request::new(
+            Method::Get,
+            "/coordinators/app-3/checkpoints/ckpt-7",
+            BTreeMap::new(),
+            vec![],
+        );
         assert_eq!(req.segments(), vec!["coordinators", "app-3", "checkpoints", "ckpt-7"]);
     }
 }

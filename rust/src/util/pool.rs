@@ -80,6 +80,22 @@ impl ThreadPool {
         })
     }
 
+    /// A small dedicated pool for *blocking waits* (monitor probes,
+    /// migration image transfers) that must not contend with CPU-bound
+    /// work on [`ThreadPool::shared`] — and vice versa.  Lazily spawned
+    /// into the caller's static `OnceLock`; a handful of workers is
+    /// plenty because these jobs mostly sleep in `recv_timeout` or
+    /// socket writes.
+    pub fn dedicated_small(cell: &'static OnceLock<ThreadPool>) -> &'static ThreadPool {
+        cell.get_or_init(|| {
+            let n = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .clamp(2, 8);
+            ThreadPool::new(n, n * 16)
+        })
+    }
+
     /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size

@@ -229,6 +229,131 @@ fn rest_migration_full_cycle_lu() {
 }
 
 #[test]
+fn concurrent_delete_vs_upload_no_panic_no_orphans() {
+    // §5.4 DELETE racing the §5.3 upload path: the v1 service re-locked
+    // after the store put and `.unwrap()`ed the record — a racing DELETE
+    // panicked the worker and left the just-written image orphaned.
+    // Whatever the interleaving, the worker must survive and the store
+    // must end empty for the deleted coordinator.
+    use cacs::storage::ObjectStore;
+    let store = Arc::new(MemStore::new());
+    let svc = CacsService::new(
+        store.clone(),
+        ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+    );
+    let img = vec![7u8; 256 * 1024];
+    for round in 0..12u64 {
+        let id = svc
+            .submit(Asr::new("r", WorkloadSpec::Dmtcp1 { n: 8 }, 1))
+            .unwrap();
+        let svc2 = svc.clone();
+        let data = img.clone();
+        let uploader = std::thread::spawn(move || {
+            for seq in 1..=8u64 {
+                // an error is fine (the record may be gone mid-upload);
+                // a panic is the bug this guards against
+                let _ = svc2.upload_image(id, seq, 0, &data);
+            }
+        });
+        // stagger the DELETE across rounds to land on both sides of
+        // the store-put / record-recheck window
+        std::thread::sleep(Duration::from_micros(50 * round));
+        svc.delete(id).unwrap();
+        uploader.join().expect("upload worker must not panic");
+        assert!(
+            store.list(&format!("{id}/")).unwrap().is_empty(),
+            "orphaned images for {id}"
+        );
+    }
+}
+
+#[test]
+fn one_call_migration_end_to_end() {
+    // the tentpole: POST /coordinators/:id/migrate against a second
+    // live CACS with a distinct store moves a 2-proc LU app end to end
+    use cacs::storage::ObjectStore;
+    let src_store = Arc::new(MemStore::new());
+    let src_svc = CacsService::new(
+        src_store.clone(),
+        ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+    );
+    let dst_svc = svc_mem();
+    let srv_a = rest::serve(src_svc, "127.0.0.1:0", 4).unwrap();
+    let srv_b = rest::serve(dst_svc, "127.0.0.1:0", 4).unwrap();
+    let ca = Client::new(&srv_a.addr().to_string());
+    let cb = Client::new(&srv_b.addr().to_string());
+
+    // a 2-proc LU app, so two images must stream across
+    let asr = Json::object([
+        ("name", "lu-mig".into()),
+        (
+            "workload",
+            Json::object([
+                ("kind", "lu".into()),
+                ("nz", 4u64.into()),
+                ("ny", 8u64.into()),
+                ("nx", 8u64.into()),
+            ]),
+        ),
+        ("n_vms", 2u64.into()),
+    ]);
+    let src = ca
+        .post("/coordinators", &asr)
+        .unwrap()
+        .json()
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    wait_for("source app to make progress", || rest_iter(&ca, &src) >= 2);
+
+    // --- one call replaces the whole §7.3.2 script ---
+    let resp = ca
+        .post(
+            &format!("/coordinators/{src}/migrate"),
+            &Json::object([("dst", cb.base().into())]),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let rep = resp.json().unwrap();
+    assert_eq!(rep.get("migrated").as_bool(), Some(true));
+    let dst_id = rep.get("dst").as_str().unwrap().to_string();
+    let cut_iter = rep.get("iteration").as_u64().unwrap();
+    assert!(rep.get("bytes_moved").as_u64().unwrap() > 0);
+    assert_eq!(rep.get("per_proc_bytes").as_arr().unwrap().len(), 2);
+    assert!(rep.get("duration_s").as_f64().unwrap() > 0.0);
+
+    // destination: RUNNING at >= the cut iteration, with provenance
+    let dj = cb.get(&format!("/coordinators/{dst_id}")).unwrap().json().unwrap();
+    assert_eq!(dj.get("state").as_str(), Some("RUNNING"));
+    assert!(dj.get("iteration").as_u64().unwrap() >= cut_iter);
+    assert_eq!(dj.get("cloned_from").as_str(), Some(src.as_str()));
+
+    // source: TERMINATED tombstone pointing at the clone, store emptied
+    let sj = ca.get(&format!("/coordinators/{src}")).unwrap().json().unwrap();
+    assert_eq!(sj.get("state").as_str(), Some("TERMINATED"));
+    let expect_dst = format!("{}/coordinators/{dst_id}", cb.base());
+    assert_eq!(sj.get("migrated_to").as_str(), Some(expect_dst.as_str()));
+    assert!(src_store.list("").unwrap().is_empty(), "source store must be empty");
+
+    // the clone is a first-class citizen on the destination
+    let ck = cb
+        .post(&format!("/coordinators/{dst_id}/checkpoints"), &Json::Null)
+        .unwrap();
+    assert_eq!(ck.status, 201);
+
+    // and a second migrate of the tombstone is refused with 409
+    let again = ca
+        .post(
+            &format!("/coordinators/{src}/migrate"),
+            &Json::object([("dst", cb.base().into())]),
+        )
+        .unwrap();
+    assert_eq!(again.status, 409, "{}", String::from_utf8_lossy(&again.body));
+}
+
+#[test]
 fn vm_loss_recovered_by_monitor_thread() {
     // §6.3 case 1 end to end: the app's host thread (its "virtual
     // cluster") disappears entirely; the background Monitoring Manager
