@@ -1,0 +1,201 @@
+//! Fig 4c companion, **real mode**: §6.3 detection latency through the
+//! actual broadcast-tree health plane — thread-per-daemon trees
+//! ([`RealMonitor`]) and the full service monitor round — instead of
+//! the sim latency model `fig4c_heartbeat` measures.
+//!
+//! Three sections:
+//!
+//! 1. Tree heartbeat RTT vs node count, all healthy (the Fig 4c curve
+//!    over real threads and channels).
+//! 2. Detection latency with a killed leaf daemon: one resolve wave on
+//!    top of the deadline budget, never `dead × timeout`.
+//! 3. Service-level: a fleet of applications with one **wedged** host
+//!    thread and one killed "VM" — a full `monitor_round` must complete
+//!    within ~2× the heartbeat budget and report exactly the failed
+//!    apps, while v1 serialized every app behind a 120 s data-plane
+//!    call timeout.
+//!
+//!   cargo bench --bench fig4c_real_detection -- [--iters 10]
+//!       [--apps 8] [--json BENCH_detection.json]
+
+use cacs::coordinator::lifecycle::AppState;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::monitor::real::{HealthHook, HookResult, RealMonitor};
+use cacs::monitor::tree::BroadcastTree;
+use cacs::storage::mem::MemStore;
+use cacs::util::args::Args;
+use cacs::util::benchkit::Table;
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const HOP: Duration = Duration::from_millis(20);
+
+fn healthy_hook() -> HealthHook {
+    Arc::new(|_| HookResult::Healthy)
+}
+
+fn mean_secs(iters: usize, mut f: impl FnMut() -> Duration) -> f64 {
+    (0..iters).map(|_| f().as_secs_f64()).sum::<f64>() / iters as f64
+}
+
+fn main() {
+    let args = Args::from_env();
+    let iters = args.usize_or("iters", 10);
+    let n_apps = args.usize_or("apps", 8);
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- 1. heartbeat RTT vs tree size (all healthy) -----------------
+    println!("# Fig 4c (real mode) — broadcast-tree heartbeat over daemon threads");
+    println!("# hop budget {HOP:?}; {iters} samples per point\n");
+    let mut t = Table::new(["#nodes", "height", "budget (ms)", "rtt (ms)"]);
+    for &n in &[2usize, 8, 32, 128, 512] {
+        let mon = RealMonitor::start(n, healthy_hook(), HOP);
+        let budget = mon.budget();
+        let rtt = mean_secs(iters, || {
+            let t0 = Instant::now();
+            let probe = mon.heartbeat_probe();
+            assert!(probe.report.all_healthy(), "n={n}: {:?}", probe.report);
+            t0.elapsed()
+        });
+        t.row([
+            n.to_string(),
+            BroadcastTree::binary(n).height().to_string(),
+            format!("{:.1}", budget.as_secs_f64() * 1e3),
+            format!("{:.2}", rtt * 1e3),
+        ]);
+        rows.push(Json::object([
+            ("path", "heartbeat".into()),
+            ("work", format!("n={n} healthy").into()),
+            ("time_s", rtt.into()),
+            ("throughput", (n as f64 / rtt).into()),
+            ("unit", "nodes/s".into()),
+        ]));
+        // healthy trees must answer within the deadline budget (slack
+        // for CI schedulers)
+        assert!(
+            rtt < budget.as_secs_f64() * 2.0 + 0.25,
+            "n={n}: rtt {rtt}s vs budget {budget:?}"
+        );
+    }
+    t.print();
+
+    // --- 2. detection latency with a dead leaf -----------------------
+    println!("\n# detection latency: one killed leaf daemon (resolve wave, not dead × timeout)");
+    let mut t = Table::new(["#nodes", "rtt (ms)", "budget (ms)", "waves"]);
+    for &n in &[32usize, 128, 512] {
+        let mon = RealMonitor::start(n, healthy_hook(), HOP);
+        let leaf = *BroadcastTree::binary(n).leaves().last().unwrap();
+        mon.kill_daemon(leaf);
+        let mut waves = 0usize;
+        let rtt = mean_secs(iters, || {
+            let t0 = Instant::now();
+            let probe = mon.heartbeat_probe();
+            assert_eq!(probe.report.unreachable, vec![leaf], "n={n}");
+            waves = probe.waves;
+            t0.elapsed()
+        });
+        let budget = mon.budget();
+        t.row([
+            n.to_string(),
+            format!("{:.2}", rtt * 1e3),
+            format!("{:.1}", budget.as_secs_f64() * 1e3),
+            waves.to_string(),
+        ]);
+        rows.push(Json::object([
+            ("path", "detect-dead-leaf".into()),
+            ("work", format!("n={n} 1 dead").into()),
+            ("time_s", rtt.into()),
+            ("throughput", (1.0 / rtt).into()),
+            ("unit", "detections/s".into()),
+        ]));
+        // tree wave + one leaf resolve wave, with CI slack — nowhere
+        // near the v1 stacked-timeout regime
+        assert!(
+            rtt < budget.as_secs_f64() * 3.0 + 0.25,
+            "n={n}: detection rtt {rtt}s vs budget {budget:?}"
+        );
+    }
+    t.print();
+
+    // --- 3. service monitor round with a wedged host -----------------
+    println!("\n# service fleet: {n_apps} apps, one wedged host + one killed VM");
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: None,
+            auto_recover: false, // measure detection, not recovery
+            ..ServiceConfig::default()
+        },
+    );
+    let ids: Vec<_> = (0..n_apps)
+        .map(|k| {
+            svc.submit(Asr::new(&format!("d{k}"), WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+                .expect("submit")
+        })
+        .collect();
+    for &id in &ids {
+        loop {
+            let it = svc
+                .info(id)
+                .expect("info")
+                .get("iteration")
+                .as_u64()
+                .unwrap_or(0);
+            if it >= 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let wedged = ids[1];
+    let killed = ids[n_apps - 1];
+    svc.wedge_vm(wedged).expect("wedge");
+    svc.kill_vm(killed).expect("kill");
+    while svc.health(wedged).is_ok() {
+        std::thread::sleep(Duration::from_millis(5)); // wedge lands at a step barrier
+    }
+    let budget = svc.health_status(ids[0]).expect("status").budget;
+    let t0 = Instant::now();
+    svc.monitor_round();
+    let round = t0.elapsed();
+    assert_eq!(svc.state(wedged), Some(AppState::Error));
+    assert_eq!(svc.state(killed), Some(AppState::Error));
+    for &id in &ids {
+        if id != wedged && id != killed {
+            assert_eq!(svc.state(id), Some(AppState::Running), "{id} misreported");
+        }
+    }
+    println!(
+        "monitor_round over {n_apps} apps (1 wedged, 1 killed): {:.1} ms (heartbeat budget {:.1} ms, v1 regime ≥ 120 s/app)",
+        round.as_secs_f64() * 1e3,
+        budget.as_secs_f64() * 1e3
+    );
+    assert!(
+        round < budget * 2 + Duration::from_secs(1),
+        "round {round:?} must be ~2× heartbeat budget ({budget:?})"
+    );
+    rows.push(Json::object([
+        ("path", "monitor-round".into()),
+        ("work", format!("{n_apps} apps, 1 wedged + 1 killed").into()),
+        ("time_s", round.as_secs_f64().into()),
+        ("throughput", (n_apps as f64 / round.as_secs_f64()).into()),
+        ("unit", "apps/s".into()),
+    ]));
+    println!("# detection checks OK (budget-bounded, no serialized 120 s slots)");
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::object([
+            ("bench", "fig4c_real_detection".into()),
+            ("rows", Json::Arr(rows)),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

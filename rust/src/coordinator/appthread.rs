@@ -17,10 +17,25 @@ use crate::storage::ObjectStore;
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Factory that constructs the app on its host thread.
 pub type AppFactory = Box<dyn FnOnce() -> Result<Box<dyn DistributedApp>> + Send>;
+
+/// Data-plane call timeout: checkpoint/restore round-trips may move
+/// hundreds of MB, so they get minutes.
+const DATA_CALL_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Control-plane probe timeout: reads that feed the REST surface and
+/// the §6.3 monitor (`info` progress, health snapshots) must not hang a
+/// worker behind a wedged or busy host thread — they degrade instead.
+pub const CTRL_PROBE_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// How long [`AppHandle`]'s drop waits for the host thread to exit
+/// before detaching it.  A healthy thread answers `Stop` at its next
+/// step barrier (µs–ms); a wedged one never would, and recovery /
+/// DELETE must not block 120 s (or forever) joining it.
+const JOIN_GRACE: Duration = Duration::from_millis(250);
 
 /// Control commands accepted between steps.
 pub enum Cmd {
@@ -41,6 +56,11 @@ pub enum Cmd {
     Progress { reply: Sender<(u64, f64)> },
     /// Fault injection: kill process `i`.
     Kill { proc: usize },
+    /// Fault injection: wedge the host thread itself — it stops
+    /// servicing commands entirely (the real-mode analog of a VM whose
+    /// guest froze: the app may or may not be fine, but nobody can
+    /// tell).  Only detaching the thread gets rid of it.
+    Wedge,
     /// Pause stepping (oversubscription: low-priority jobs swap out).
     Pause,
     /// Resume stepping.
@@ -75,13 +95,21 @@ impl AppHandle {
         AppHandle { tx, join: Some(join), app_name: app_name.to_string() }
     }
 
-    fn call<T, F: FnOnce(Sender<T>) -> Cmd>(&self, make: F) -> Result<T> {
+    fn call_within<T, F: FnOnce(Sender<T>) -> Cmd>(
+        &self,
+        timeout: Duration,
+        make: F,
+    ) -> Result<T> {
         let (tx, rx) = channel();
         self.tx
             .send(make(tx))
             .map_err(|_| anyhow::anyhow!("app thread gone"))?;
-        rx.recv_timeout(Duration::from_secs(120))
-            .map_err(|_| anyhow::anyhow!("app thread did not answer"))
+        rx.recv_timeout(timeout)
+            .map_err(|_| anyhow::anyhow!("app thread did not answer within {timeout:?}"))
+    }
+
+    fn call<T, F: FnOnce(Sender<T>) -> Cmd>(&self, make: F) -> Result<T> {
+        self.call_within(DATA_CALL_TIMEOUT, make)
     }
 
     pub fn checkpoint(&self, seq: u64, with_overhead: bool) -> Result<CheckpointReport> {
@@ -96,12 +124,33 @@ impl AppHandle {
         self.call(|reply| Cmd::Health { reply })
     }
 
+    /// Non-blocking health probe (§6.3 leaf hook): the per-proc flags,
+    /// or `None` if the host thread did not answer within `timeout` —
+    /// the monitor treats that as the procs being unreachable.  A late
+    /// reply lands on a dropped channel and is discarded harmlessly.
+    pub fn try_health(&self, timeout: Duration) -> Option<Vec<bool>> {
+        self.call_within(timeout, |reply| Cmd::Health { reply }).ok()
+    }
+
     pub fn progress(&self) -> Result<(u64, f64)> {
         self.call(|reply| Cmd::Progress { reply })
     }
 
+    /// Non-blocking progress probe for control-plane reads (`GET
+    /// /coordinators/:id` degrades to the cached record on `None`
+    /// instead of hanging the REST worker for the data-plane 120 s).
+    pub fn try_progress(&self, timeout: Duration) -> Option<(u64, f64)> {
+        self.call_within(timeout, |reply| Cmd::Progress { reply }).ok()
+    }
+
     pub fn kill_proc(&self, proc: usize) {
         let _ = self.tx.send(Cmd::Kill { proc });
+    }
+
+    /// Fault injection: wedge the host thread (it stops answering
+    /// everything, including `Stop`).  See [`Cmd::Wedge`].
+    pub fn wedge(&self) {
+        let _ = self.tx.send(Cmd::Wedge);
     }
 
     pub fn pause(&self) {
@@ -128,7 +177,27 @@ impl Drop for AppHandle {
     fn drop(&mut self) {
         let _ = self.tx.send(Cmd::Stop);
         if let Some(j) = self.join.take() {
-            let _ = j.join();
+            // Bounded join: a wedged host thread never answers Stop, and
+            // an unbounded join here would wedge recovery (and DELETE)
+            // right along with it.  Wait a grace period, then detach —
+            // the thread either exits on its own (e.g. once an
+            // in-flight checkpoint drains and it sees Stop) or is
+            // reaped at process exit.  Callers that write to the store
+            // after dropping a handle already tolerate a late writer:
+            // the checkpoint path re-checks its record and deletes its
+            // own images when the coordinator is gone.
+            let deadline = Instant::now() + JOIN_GRACE;
+            while !j.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            if j.is_finished() {
+                let _ = j.join();
+            } else {
+                log::warn!(
+                    "{}: host thread did not stop within {JOIN_GRACE:?}; detaching",
+                    self.app_name
+                );
+            }
         }
     }
 }
@@ -149,6 +218,12 @@ fn handle_cmd(
         Cmd::Kill { proc } => {
             app.kill_proc(proc);
             *broken = true;
+        }
+        Cmd::Wedge => {
+            log::warn!("{app_name}: host thread wedged by fault injection");
+            loop {
+                std::thread::sleep(Duration::from_secs(60));
+            }
         }
         Cmd::Health { reply } => {
             let h = (0..app.nprocs()).map(|i| app.proc_healthy(i)).collect();
@@ -193,6 +268,13 @@ fn host_loop(
                         let _ = reply.send(Err(anyhow::anyhow!("app failed to construct")));
                     }
                     Cmd::Health { reply } => {
+                        // no app was constructed, so there are no
+                        // per-proc flags.  The empty reply is NOT "all
+                        // healthy": the service pads it to n_vms ×
+                        // false and the monitor's leaf hooks read the
+                        // missing flags as unreachable, so a
+                        // construct-failed app enters recovery instead
+                        // of sailing under the monitor's radar.
                         let _ = reply.send(vec![]);
                     }
                     Cmd::Progress { reply } => {
@@ -240,7 +322,31 @@ fn host_loop(
             }
         }
         if !step_interval.is_zero() {
-            std::thread::sleep(step_interval);
+            // throttle by waiting on the command queue instead of a
+            // blind sleep: a heavily throttled but healthy app must
+            // still answer control probes (health/progress) inside the
+            // §6.3 heartbeat budget, not one step_interval late.  The
+            // wait holds the full interval deadline across commands —
+            // a probe must not cut the throttle short (frequent REST
+            // polling would otherwise step the app at the poll rate)
+            let next_step = Instant::now() + step_interval;
+            loop {
+                let left = next_step.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(cmd) => {
+                        if !handle_cmd(cmd, &mut app, app_name, &store, &mut paused, &mut broken) {
+                            return;
+                        }
+                        if paused || broken {
+                            break; // the main loop's parked branch takes over
+                        }
+                    }
+                    Err(_) => break, // interval elapsed (or sender gone)
+                }
+            }
         }
     }
 }
@@ -360,6 +466,31 @@ mod tests {
         let h = AppHandle::spawn("bad", Box::new(|| anyhow::bail!("nope")), store, Duration::ZERO);
         assert!(h.checkpoint(1, false).is_err());
         assert!(h.restore(None).is_err());
+        // raw handle view: no flags at all (the service layer is what
+        // maps this to "all unreachable" — never to "all healthy")
         assert_eq!(h.health().unwrap(), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn try_health_answers_fast_and_times_out_on_wedge() {
+        let (h, _store) = spawn_counter(2);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(h.try_health(Duration::from_millis(200)), Some(vec![true, true]));
+        assert!(h.try_progress(Duration::from_millis(200)).is_some());
+        h.wedge();
+        // the wedge lands at the next step barrier; after that nothing
+        // answers — the probe must give up at its own timeout, not 120 s
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = std::time::Instant::now();
+        let r = h.try_health(Duration::from_millis(100));
+        assert_eq!(r, None);
+        assert!(t0.elapsed() < Duration::from_secs(2), "took {:?}", t0.elapsed());
+        let t0 = std::time::Instant::now();
+        assert!(h.try_progress(Duration::from_millis(100)).is_none());
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        // dropping the wedged handle detaches instead of joining forever
+        let t0 = std::time::Instant::now();
+        drop(h);
+        assert!(t0.elapsed() < Duration::from_secs(5), "drop blocked {:?}", t0.elapsed());
     }
 }

@@ -1,0 +1,302 @@
+//! Per-application §6.3 health plane for the real-mode service: one
+//! [`RealMonitor`] broadcast tree per application, with leaf hooks wired
+//! to the per-process health flags through a cached **non-blocking**
+//! [`AppHandle::try_health`] probe.
+//!
+//! The tap ([`HandleTap`]) is the seam between the monitoring tree and
+//! the application host thread:
+//!
+//! * One health round-trip per refresh window serves every daemon in
+//!   the tree — hooks share a snapshot instead of issuing `n_vms`
+//!   round-trips per heartbeat.
+//! * The probe is bounded by the hop budget, so a **wedged host
+//!   thread** (one that stopped servicing its command queue) turns into
+//!   [`HookResult::Unreachable`] *within the heartbeat budget* — not
+//!   after the 120 s data-plane call timeout.
+//! * An app whose factory failed answers health with **no flags at
+//!   all**; a missing flag reads as unreachable, never as healthy (the
+//!   v1 service mapped the empty reply to "all healthy" and the monitor
+//!   could not see a construct-failed app at all).
+//! * The tap holds the handle **weakly** and can be
+//!   [rewired](AppMonitor::rewire) when recovery provisions a fresh
+//!   host thread, so the tree survives its application's "VMs".
+//!
+//! [`heartbeat_pool`] is the app-level fan-out pool used by
+//! `CacsService::monitor_round`: all applications' heartbeats run
+//! concurrently under one whole-round deadline.  It is distinct from
+//! [`crate::monitor::real`]'s probe pool on purpose — a heartbeat
+//! internally waits on resolve waves scheduled on the probe pool, and
+//! running both levels on one pool would let app-level jobs occupy
+//! every worker while waiting for wave jobs that can never start.
+
+use crate::coordinator::appthread::AppHandle;
+use crate::monitor::real::{HealthHook, HookResult, RealMonitor};
+use crate::monitor::HealthProbe;
+use crate::util::pool::ThreadPool;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+/// Pool for fanning all applications' heartbeats out concurrently
+/// (`monitor_round`).  Jobs spend their time in channel waits, so a
+/// moderate fixed width gives true concurrency for realistic fleet
+/// sizes; beyond it, probes batch but each batch stays bounded by the
+/// per-tree budget.
+pub(crate) fn heartbeat_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(16, 1024))
+}
+
+struct Snapshot {
+    at: Option<Instant>,
+    /// `None` = the host thread did not answer the probe (unreachable);
+    /// `Some(flags)` = the per-proc hook results it reported.
+    flags: Option<Arc<Vec<bool>>>,
+}
+
+/// Cached non-blocking bridge from monitor daemons to one application's
+/// host thread.
+struct HandleTap {
+    handle: Mutex<Weak<AppHandle>>,
+    /// How long one refresh may wait for the host thread.
+    probe_timeout: Duration,
+    /// How long a snapshot stays fresh (one refresh serves the tree).
+    freshness: Duration,
+    snap: Mutex<Snapshot>,
+}
+
+impl HandleTap {
+    /// The §6.3 leaf hook for proc `i`.
+    fn probe(&self, i: usize) -> HookResult {
+        match self.snapshot() {
+            None => HookResult::Unreachable,
+            Some(flags) => match flags.get(i) {
+                Some(true) => HookResult::Healthy,
+                Some(false) => HookResult::Unhealthy,
+                // construct-failed apps report no flags: missing is
+                // unreachable, never healthy
+                None => HookResult::Unreachable,
+            },
+        }
+    }
+
+    fn snapshot(&self) -> Option<Arc<Vec<bool>>> {
+        // the snap lock is held across the refresh on purpose: hooks
+        // racing here wait for the one in-flight round-trip (bounded by
+        // probe_timeout) instead of stacking n probes on the host
+        let mut snap = self.snap.lock().unwrap();
+        if let Some(at) = snap.at {
+            if at.elapsed() < self.freshness {
+                return snap.flags.clone();
+            }
+        }
+        let handle = self.handle.lock().unwrap().upgrade();
+        let flags = handle
+            .and_then(|h| h.try_health(self.probe_timeout))
+            .map(Arc::new);
+        snap.at = Some(Instant::now());
+        snap.flags = flags.clone();
+        flags
+    }
+
+    fn invalidate(&self) {
+        self.snap.lock().unwrap().at = None;
+    }
+
+    fn rewire(&self, handle: &Arc<AppHandle>) {
+        *self.handle.lock().unwrap() = Arc::downgrade(handle);
+        self.invalidate();
+    }
+}
+
+/// One application's monitoring tree plus its host-thread tap.
+pub(crate) struct AppMonitor {
+    monitor: RealMonitor,
+    tap: Arc<HandleTap>,
+    /// Most recent completed probe: served for lifecycle states where
+    /// the data plane legitimately owns the host thread (checkpointing,
+    /// restoring, migrating) — probing then would misread "busy" as a
+    /// total outage.
+    last: Mutex<Option<HealthProbe>>,
+}
+
+impl AppMonitor {
+    /// Start the `n_vms`-daemon tree.  No host is attached yet — every
+    /// probe reports unreachable until [`Self::rewire`] points the tap
+    /// at a live [`AppHandle`].
+    pub fn start(n_vms: usize, hop: Duration, arity: usize) -> AppMonitor {
+        let tap = Arc::new(HandleTap {
+            handle: Mutex::new(Weak::new()),
+            // one refresh must fit inside a daemon's deadline share
+            probe_timeout: hop,
+            freshness: hop,
+            snap: Mutex::new(Snapshot { at: None, flags: None }),
+        });
+        let hook_tap = tap.clone();
+        let hook: HealthHook = Arc::new(move |i| hook_tap.probe(i));
+        AppMonitor {
+            monitor: RealMonitor::start_with_arity(n_vms, arity.max(2), hook, hop),
+            tap,
+            last: Mutex::new(None),
+        }
+    }
+
+    /// Point the tap at a (new) host thread — called at submit and
+    /// whenever recovery re-provisions the application.
+    pub fn rewire(&self, handle: &Arc<AppHandle>) {
+        self.tap.rewire(handle);
+    }
+
+    /// One heartbeat over the tree against *current* state (the cached
+    /// snapshot is invalidated first so a probe never reports a stale
+    /// verdict from before the caller's fault/recovery).
+    pub fn probe(&self) -> HealthProbe {
+        self.tap.invalidate();
+        let probe = self.monitor.heartbeat_probe();
+        *self.last.lock().unwrap() = Some(probe.clone());
+        probe
+    }
+
+    /// The most recent completed probe, if any round ran yet.
+    pub fn last_probe(&self) -> Option<HealthProbe> {
+        self.last.lock().unwrap().clone()
+    }
+
+    /// The tree's whole-heartbeat deadline budget.
+    pub fn budget(&self) -> Duration {
+        self.monitor.budget()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::appthread::AppFactory;
+    use crate::dckpt::{CounterApp, DistributedApp};
+    use crate::storage::mem::MemStore;
+    use crate::storage::ObjectStore;
+
+    const HOP: Duration = Duration::from_millis(60);
+
+    fn counter_factory(n: usize) -> AppFactory {
+        Box::new(move || Ok(Box::new(CounterApp::new(n, 16)) as Box<dyn DistributedApp>))
+    }
+
+    fn spawn(n: usize) -> Arc<AppHandle> {
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        Arc::new(AppHandle::spawn(
+            "hp-t",
+            counter_factory(n),
+            store,
+            Duration::from_millis(1),
+        ))
+    }
+
+    #[test]
+    fn tree_reports_healthy_procs_through_the_tap() {
+        let handle = spawn(3);
+        let mon = AppMonitor::start(3, HOP, 2);
+        mon.rewire(&handle);
+        std::thread::sleep(Duration::from_millis(20));
+        let probe = mon.probe();
+        assert!(probe.report.all_healthy(), "{:?}", probe.report);
+        assert!(probe.rtt <= probe.budget * 2);
+    }
+
+    #[test]
+    fn killed_proc_reports_unhealthy_not_unreachable() {
+        let handle = spawn(2);
+        let mon = AppMonitor::start(2, HOP, 2);
+        mon.rewire(&handle);
+        std::thread::sleep(Duration::from_millis(20));
+        handle.kill_proc(1);
+        std::thread::sleep(Duration::from_millis(30));
+        let report = mon.probe().report;
+        assert_eq!(report.unhealthy, vec![1]);
+        assert!(report.unreachable.is_empty());
+    }
+
+    #[test]
+    fn unwired_or_dropped_handle_is_unreachable() {
+        let mon = AppMonitor::start(2, HOP, 2);
+        // never wired: everything unreachable
+        assert_eq!(mon.probe().report.unreachable, vec![0, 1]);
+        let handle = spawn(2);
+        mon.rewire(&handle);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(mon.probe().report.all_healthy());
+        // host gone (the kill_vm shape): weak upgrade fails
+        drop(handle);
+        assert_eq!(mon.probe().report.unreachable, vec![0, 1]);
+    }
+
+    #[test]
+    fn wedged_host_reported_unreachable_within_budget() {
+        let handle = spawn(2);
+        let mon = AppMonitor::start(2, HOP, 2);
+        mon.rewire(&handle);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(mon.probe().report.all_healthy());
+        handle.wedge();
+        std::thread::sleep(Duration::from_millis(30)); // wedge lands at a step barrier
+        let t0 = Instant::now();
+        let probe = mon.probe();
+        let elapsed = t0.elapsed();
+        assert_eq!(probe.report.unreachable, vec![0, 1]);
+        // detection is bounded by the heartbeat budget (plus wave
+        // slack), nowhere near the 120 s data-plane timeout
+        assert!(
+            elapsed < probe.budget * 4 + Duration::from_millis(250),
+            "detection took {elapsed:?} (budget {:?})",
+            probe.budget
+        );
+    }
+
+    #[test]
+    fn construct_failed_app_is_unreachable_not_healthy() {
+        // the "dead app reports healthy" hole: a factory-failed host
+        // answers Health with no flags; the tap must read that as
+        // unreachable for every proc
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let handle = Arc::new(AppHandle::spawn(
+            "bad",
+            Box::new(|| anyhow::bail!("factory exploded")),
+            store,
+            Duration::ZERO,
+        ));
+        let mon = AppMonitor::start(2, HOP, 2);
+        mon.rewire(&handle);
+        std::thread::sleep(Duration::from_millis(20));
+        let report = mon.probe().report;
+        assert_eq!(report.unreachable, vec![0, 1]);
+        assert!(report.unhealthy.is_empty());
+        assert!(!report.all_healthy());
+    }
+
+    #[test]
+    fn last_probe_caches_the_latest_verdict() {
+        let handle = spawn(1);
+        let mon = AppMonitor::start(1, HOP, 2);
+        mon.rewire(&handle);
+        assert!(mon.last_probe().is_none(), "no round ran yet");
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(mon.probe().report.all_healthy());
+        let cached = mon.last_probe().expect("a round ran");
+        assert!(cached.report.all_healthy());
+    }
+
+    #[test]
+    fn rewire_switches_hosts() {
+        let h1 = spawn(1);
+        let mon = AppMonitor::start(1, HOP, 2);
+        mon.rewire(&h1);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(mon.probe().report.all_healthy());
+        drop(h1);
+        assert!(!mon.probe().report.all_healthy());
+        // recovery provisions a fresh host and rewires
+        let h2 = spawn(1);
+        mon.rewire(&h2);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(mon.probe().report.all_healthy());
+    }
+}

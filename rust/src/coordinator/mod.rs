@@ -24,6 +24,7 @@
 
 pub mod appthread;
 pub mod db;
+pub mod healthplane;
 pub mod lifecycle;
 pub mod migrate;
 pub mod rest;

@@ -14,7 +14,13 @@
 //! | DELETE /coordinators/:id/checkpoints/:seq | delete the checkpoint |
 //!
 //! Plus diagnostics the paper's CLI would expose: GET
-//! /coordinators/:id/health.
+//! /coordinators/:id/health — one §6.3 broadcast-tree heartbeat over
+//! the app's monitoring tree, returning the structured report
+//! (`healthy`/`unhealthy`/`unreachable`) together with its
+//! detection-latency accounting (`rtt_ms`, `waves`, `budget_ms`,
+//! `hop_ms`, `arity`).  The probe is bounded by the heartbeat budget,
+//! so the endpoint answers fast even when the app's host thread is
+//! wedged.
 //!
 //! The migrate endpoint drives the Fig 2 lifecycle through the
 //! `MIGRATING` state: `RUNNING → MIGRATING` on entry, `MIGRATING →
@@ -85,10 +91,8 @@ fn route(svc: &Arc<CacsService>, req: &mut Request) -> Response {
             None => Response::bad_request("bad coordinator id"),
         },
         (Method::Get, ["coordinators", id, "health"]) => match parse_app(id) {
-            Some(id) => match svc.health(id) {
-                Ok(h) => Response::ok_json(&Json::Arr(
-                    h.into_iter().map(Json::Bool).collect(),
-                )),
+            Some(id) => match svc.health_status(id) {
+                Ok(status) => Response::ok_json(&status.to_json()),
                 Err(_) => Response::not_found(),
             },
             None => Response::bad_request("bad coordinator id"),
@@ -456,12 +460,41 @@ mod tests {
     }
 
     #[test]
-    fn health_endpoint() {
-        let (_server, client, _svc) = start();
+    fn health_endpoint_reports_structured_verdict_and_latency() {
+        let (_server, client, svc) = start();
         let id = submit_dmtcp1(&client);
         wait_iter(&client, &id, 1);
         let h = client.get(&format!("/coordinators/{id}/health")).unwrap();
         assert_eq!(h.status, 200);
-        assert_eq!(h.json().unwrap(), Json::Arr(vec![Json::Bool(true)]));
+        let j = h.json().unwrap();
+        assert_eq!(j.get("healthy").as_bool(), Some(true));
+        assert_eq!(j.get("unhealthy").as_arr().unwrap().len(), 0);
+        assert_eq!(j.get("unreachable").as_arr().unwrap().len(), 0);
+        assert_eq!(j.get("n_vms").as_u64(), Some(1));
+        assert_eq!(j.get("state").as_str(), Some("RUNNING"));
+        assert_eq!(j.get("live").as_bool(), Some(true));
+        // detection-latency fields: a real probe ran inside its budget
+        assert!(j.get("rtt_ms").as_f64().unwrap() >= 0.0);
+        assert!(j.get("budget_ms").as_f64().unwrap() > 0.0);
+        assert!(j.get("waves").as_u64().unwrap() >= 1);
+        assert!(j.get("hop_ms").as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("arity").as_u64(), Some(2));
+        // missing coordinator is a 404, not a hang
+        let nf = client.get("/coordinators/app-99/health").unwrap();
+        assert_eq!(nf.status, 404);
+
+        // a killed VM shows up as unreachable with bounded rtt
+        let app = AppId::parse(&id).unwrap();
+        svc.kill_vm(app).unwrap();
+        let h = client.get(&format!("/coordinators/{id}/health")).unwrap();
+        let j = h.json().unwrap();
+        assert_eq!(j.get("healthy").as_bool(), Some(false));
+        assert_eq!(j.get("unreachable").as_arr().unwrap().len(), 1);
+        let rtt = j.get("rtt_ms").as_f64().unwrap();
+        let budget = j.get("budget_ms").as_f64().unwrap();
+        assert!(
+            rtt < budget * 4.0 + 500.0,
+            "detection rtt {rtt}ms must be budget-bounded (budget {budget}ms)"
+        );
     }
 }

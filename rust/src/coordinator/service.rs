@@ -11,21 +11,28 @@
 //!   including streaming image upload/download; cross-CACS migration is
 //!   a first-class operation (§5.3) driven by [`super::migrate`] over
 //!   the `begin/record/abort/complete` plumbing here.
-//! * Monitoring Manager — a background thread turning every
-//!   application's hook results + host reachability into a structured
-//!   [`HealthReport`] and driving both §6.3 recovery cases: unreachable
-//!   hosts are re-provisioned and restored from the last image (case 1),
-//!   unhealthy processes restart in place (case 2).  Apps parked in
-//!   ERROR with a usable checkpoint are picked up via the §5.3 passive
-//!   recovery path (ERROR → RESTARTING).
+//! * Monitoring Manager — one §6.3 broadcast tree per application
+//!   ([`crate::coordinator::healthplane::AppMonitor`]), leaf hooks wired
+//!   to the per-proc health flags through a bounded non-blocking probe
+//!   of the host thread.  [`CacsService::monitor_round`] fans every
+//!   application's heartbeat out concurrently under one whole-round
+//!   deadline and drives both §6.3 recovery cases off the structured
+//!   [`HealthReport`]s: unreachable hosts are re-provisioned and
+//!   restored from the last image (case 1), unhealthy processes restart
+//!   in place (case 2).  Apps parked in ERROR with a usable checkpoint
+//!   are picked up via the §5.3 passive recovery path (ERROR →
+//!   RESTARTING).  A wedged host thread is detected within the
+//!   heartbeat budget — never the 120 s data-plane timeout — and a
+//!   construct-failed app reports all procs unreachable, not healthy.
 
-use crate::coordinator::appthread::{AppFactory, AppHandle};
+use crate::coordinator::appthread::{AppFactory, AppHandle, CTRL_PROBE_TIMEOUT};
 use crate::coordinator::db::Db;
+use crate::coordinator::healthplane::{heartbeat_pool, AppMonitor};
 use crate::coordinator::lifecycle::AppState;
-use crate::coordinator::types::{AppRecord, Asr, CkptRecord, WorkloadSpec};
+use crate::coordinator::types::{AppRecord, Asr, CkptRecord, HealthStatus, WorkloadSpec};
 use crate::dckpt::service as ckptsvc;
 use crate::dckpt::DistributedApp;
-use crate::monitor::HealthReport;
+use crate::monitor::{HealthProbe, HealthReport};
 use crate::runtime::Engine;
 use crate::storage::ObjectStore;
 use crate::util::ids::{AppId, CkptId};
@@ -33,7 +40,7 @@ use crate::util::json::Json;
 use crate::workloads::{dmtcp1::Dmtcp1App, lu, ns3};
 use anyhow::{Context, Result};
 use std::cell::RefCell;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::{Arc, Mutex, Weak};
@@ -53,6 +60,16 @@ pub struct ServiceConfig {
     pub monitor_period: Option<Duration>,
     /// Recover automatically from the latest checkpoint on failure.
     pub auto_recover: bool,
+    /// Per-hop share of the §6.3 heartbeat deadline budget: one app's
+    /// tree answers within ≈ `heartbeat_hop × (height + 2)`.
+    pub heartbeat_hop: Duration,
+    /// Broadcast-tree arity (2 per the paper; wider = flatter tree,
+    /// fewer hops, more fan-out per daemon).  Values < 2 are clamped.
+    pub heartbeat_arity: usize,
+    /// Test seam: sleep this long in the off-lock spawn phase of
+    /// submit, proving the service lock is not held across provisioning.
+    #[cfg(test)]
+    pub(crate) submit_spawn_delay: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -63,9 +80,20 @@ impl Default for ServiceConfig {
             with_runtime_overhead: false,
             monitor_period: Some(Duration::from_millis(200)),
             auto_recover: true,
+            heartbeat_hop: Duration::from_millis(75),
+            heartbeat_arity: 2,
+            #[cfg(test)]
+            submit_spawn_delay: Duration::ZERO,
         }
     }
 }
+
+/// Patient direct-probe timeout the monitor uses to confirm a failure
+/// before destructive recovery: long enough for an app whose step
+/// barrier is slow (the tree probe is hop-bounded and errs fast), far
+/// shorter than the 120 s data-plane timeout.  Apps stepping slower
+/// than this per barrier must raise `heartbeat_hop` / slow the monitor.
+const RECOVERY_CONFIRM_TIMEOUT: Duration = Duration::from_secs(1);
 
 /// Why a migration could not start (the REST layer maps these to
 /// 404 / 409 — anything later in the flow is a transfer failure).
@@ -109,6 +137,13 @@ struct Inner {
     // round-trips) can clone the handle out and run WITHOUT the service
     // lock — the Monitoring Manager must stay live while images move
     handles: BTreeMap<AppId, Arc<AppHandle>>,
+    // one §6.3 broadcast tree per application; outlives the app's host
+    // thread (kill_vm drops the handle, the tree then reports the procs
+    // unreachable) and is rewired to the replacement host on recovery
+    monitors: BTreeMap<AppId, Arc<AppMonitor>>,
+    // apps a monitor round has claimed for recovery: a concurrent round
+    // (or a round racing the tail of this one) must not double-recover
+    recovering: BTreeSet<AppId>,
 }
 
 /// The service.  Share via `Arc`; [`start_monitor`](CacsService::start_monitor)
@@ -118,6 +153,10 @@ pub struct CacsService {
     store: Arc<dyn ObjectStore>,
     inner: Mutex<Inner>,
     epoch: Instant,
+    /// Monotonic monitor-round counter; rotates the probe order so apps
+    /// deferred by one round's deadline are probed first the next round
+    /// instead of being structurally starved at the tail.
+    round_counter: std::sync::atomic::AtomicUsize,
 }
 
 impl CacsService {
@@ -125,8 +164,14 @@ impl CacsService {
         Arc::new(CacsService {
             cfg,
             store,
-            inner: Mutex::new(Inner { db: Db::new(), handles: BTreeMap::new() }),
+            inner: Mutex::new(Inner {
+                db: Db::new(),
+                handles: BTreeMap::new(),
+                monitors: BTreeMap::new(),
+                recovering: BTreeSet::new(),
+            }),
             epoch: Instant::now(),
+            round_counter: std::sync::atomic::AtomicUsize::new(0),
         })
     }
 
@@ -140,24 +185,60 @@ impl CacsService {
 
     /// POST /coordinators (§5.1).
     pub fn submit(&self, asr: Asr) -> Result<AppId> {
-        validate_asr(&asr)?;
-        let now = self.now();
         let factory = build_factory(&asr, &self.cfg)?;
-        let mut inner = self.inner.lock().unwrap();
-        let id = inner.db.ids.app();
-        let mut rec = AppRecord::new(id, asr, now, 0);
-        // real mode: provisioning is thread + workload construction
-        rec.lifecycle.to(now, AppState::Provisioning);
-        let handle = AppHandle::spawn(
+        self.submit_inner(asr, factory)
+    }
+
+    /// Test seam: submit with an arbitrary factory (e.g. one that fails
+    /// to construct, the §6.3 "dead on arrival" case).
+    #[cfg(test)]
+    pub(crate) fn submit_with_factory(&self, asr: Asr, factory: AppFactory) -> Result<AppId> {
+        self.submit_inner(asr, factory)
+    }
+
+    fn submit_inner(&self, asr: Asr, factory: AppFactory) -> Result<AppId> {
+        validate_asr(&asr)?;
+        let n_vms = asr.n_vms;
+        let now = self.now();
+        // phase 1: reserve the id + record under the lock (PROVISION)
+        let id = {
+            let mut inner = self.inner.lock().unwrap();
+            let id = inner.db.ids.app();
+            let mut rec = AppRecord::new(id, asr, now, 0);
+            rec.lifecycle.to(now, AppState::Provisioning);
+            inner.db.insert(rec);
+            id
+        };
+        // phase 2: provisioning — host-thread + daemon-tree creation —
+        // runs OFF the lock.  v1 held the service lock across the spawn,
+        // so one slow thread creation stalled every other REST call.
+        #[cfg(test)]
+        std::thread::sleep(self.cfg.submit_spawn_delay);
+        let handle = Arc::new(AppHandle::spawn(
             &id.to_string(),
             factory,
             self.store.clone(),
             self.cfg.step_interval,
-        );
-        rec.lifecycle.to(self.now(), AppState::Ready);
+        ));
+        let monitor = Arc::new(AppMonitor::start(
+            n_vms,
+            self.cfg.heartbeat_hop,
+            self.cfg.heartbeat_arity,
+        ));
+        monitor.rewire(&handle);
+        // phase 3: publish.  A §5.4 DELETE may have raced the spawn —
+        // then the record is gone and the fresh host is torn down again.
+        let mut inner = self.inner.lock().unwrap();
+        let now = self.now();
+        let Some(rec) = inner.db.get_mut(id) else {
+            drop(inner);
+            drop(handle); // joins the just-spawned host thread
+            anyhow::bail!("coordinator deleted during submit");
+        };
+        rec.lifecycle.to(now, AppState::Ready);
         rec.lifecycle.to(self.now(), AppState::Running);
-        inner.db.insert(rec);
-        inner.handles.insert(id, Arc::new(handle));
+        inner.handles.insert(id, handle);
+        inner.monitors.insert(id, monitor);
         Ok(id)
     }
 
@@ -173,9 +254,12 @@ impl CacsService {
         inner.db.iter().map(|r| r.to_json()).collect()
     }
 
-    /// GET /coordinators/:id (with live progress attached).
+    /// GET /coordinators/:id (with live progress attached when the host
+    /// thread answers a short control-plane probe; a wedged or busy
+    /// host degrades to the cached record instead of hanging the REST
+    /// worker for the 120 s data-plane timeout).
     pub fn info(&self, id: AppId) -> Result<Json> {
-        let progress = self.handle(id).and_then(|h| h.progress().ok());
+        let progress = self.handle(id).and_then(|h| h.try_progress(CTRL_PROBE_TIMEOUT));
         let inner = self.inner.lock().unwrap();
         let rec = inner.db.get(id).context("unknown coordinator")?;
         let mut j = rec.to_json();
@@ -290,12 +374,52 @@ impl CacsService {
     }
 
     /// DELETE /coordinators/:id/checkpoints/:seq.
+    ///
+    /// The store delete runs *first*: v1 dropped the [`CkptRecord`]
+    /// before touching the store, so a store error left orphaned images
+    /// that no longer appeared in `GET /checkpoints` (invisible to both
+    /// the user and the §5.4 cleanup).  Now a failed store delete
+    /// keeps the record — the checkpoint stays visible and the DELETE
+    /// can simply be retried — *unless* the failure was partial and
+    /// tore the image set: a checkpoint missing images must not stay
+    /// listed as restorable (recovery would restore from a corrupt
+    /// set), so a torn record is dropped and the error still surfaced;
+    /// the leftover images remain deletable by retry or app DELETE.
     pub fn delete_checkpoint(&self, id: AppId, seq: u64) -> Result<usize> {
-        let mut inner = self.inner.lock().unwrap();
-        let rec = inner.db.get_mut(id).context("unknown coordinator")?;
-        rec.ckpts.retain(|c| c.seq != seq);
-        drop(inner);
-        ckptsvc::delete_checkpoint(self.store.as_ref(), &id.to_string(), seq)
+        {
+            let inner = self.inner.lock().unwrap();
+            anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
+        }
+        let result = ckptsvc::delete_checkpoint(self.store.as_ref(), &id.to_string(), seq);
+        let intact = if result.is_ok() {
+            false // all images gone; the record must go too
+        } else {
+            // how much of the image set survived the failed delete?
+            let prefix = format!("{id}/ckpt-{seq}/");
+            match self.store.list(&prefix) {
+                // can't tell what survived (the store is refusing even
+                // reads): keep the record, so the DELETE stays
+                // retryable — dropping it on a transient outage would
+                // silently orphan a possibly fully intact image set
+                Err(_) => true,
+                Ok(keys) => {
+                    let inner = self.inner.lock().unwrap();
+                    inner
+                        .db
+                        .get(id)
+                        .and_then(|rec| rec.ckpts.iter().find(|c| c.seq == seq))
+                        .map(|ck| keys.len() >= ck.per_proc_bytes.len())
+                        .unwrap_or(false)
+                }
+            }
+        };
+        if !intact {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(rec) = inner.db.get_mut(id) {
+                rec.ckpts.retain(|c| c.seq != seq);
+            }
+        }
+        result
     }
 
     /// DELETE /coordinators/:id (§5.4: remove DB entry, stored images,
@@ -307,16 +431,17 @@ impl CacsService {
     /// its own key — whichever side runs last cleans up, so no orphan
     /// can survive the race in either order.
     pub fn delete(&self, id: AppId) -> Result<()> {
-        let handle = {
+        let (handle, monitor) = {
             let mut inner = self.inner.lock().unwrap();
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
             let now = self.now();
             rec.lifecycle.to(now, AppState::Terminating);
             rec.lifecycle.to(now, AppState::Terminated);
             inner.db.remove(id);
-            inner.handles.remove(&id)
+            (inner.handles.remove(&id), inner.monitors.remove(&id))
         };
         drop(handle); // joins the app thread when last ref (releases the "VMs")
+        drop(monitor); // shuts the app's monitoring tree down
         let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
         Ok(())
     }
@@ -482,7 +607,7 @@ impl CacsService {
     /// tombstone with `migrated_to` kept in the database so the move
     /// stays auditable (a user DELETE removes the tombstone too).
     pub(crate) fn complete_migration(&self, id: AppId, migrated_to: String) -> Result<()> {
-        let handle = {
+        let (handle, monitor) = {
             let now = self.now();
             let mut inner = self.inner.lock().unwrap();
             let inner = &mut *inner;
@@ -492,9 +617,10 @@ impl CacsService {
                 .context("coordinator deleted during migration")?;
             rec.migrated_to = Some(migrated_to);
             rec.lifecycle.to(now, AppState::Terminating);
-            inner.handles.remove(&id)
+            (inner.handles.remove(&id), inner.monitors.remove(&id))
         };
         drop(handle); // joins the host thread — releases the "VMs"
+        drop(monitor); // the tombstone needs no monitoring tree
         let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
         let now = self.now();
         let mut inner = self.inner.lock().unwrap();
@@ -517,10 +643,39 @@ impl CacsService {
             .unwrap_or(false)
     }
 
-    /// Health snapshot (the REST layer exposes this for diagnostics).
+    /// Raw per-proc health snapshot (legacy bool view; examples and
+    /// tests poll this).  Bounded by the control-plane probe timeout,
+    /// and padded to `n_vms`: a construct-failed app answers with no
+    /// flags at all, which must read as "all down" — v1 let the empty
+    /// reply pass through and `.iter().all(...)`-style callers saw a
+    /// dead app as perfectly healthy.
     pub fn health(&self, id: AppId) -> Result<Vec<bool>> {
-        let handle = self.handle(id).context("unknown coordinator")?;
-        handle.health()
+        let (n, handle) = {
+            let inner = self.inner.lock().unwrap();
+            let rec = inner.db.get(id).context("unknown coordinator")?;
+            (rec.asr.n_vms, inner.handles.get(&id).cloned())
+        };
+        let Some(handle) = handle else {
+            return Ok(vec![false; n]); // host gone: nothing is healthy
+        };
+        match handle.try_health(CTRL_PROBE_TIMEOUT) {
+            Some(mut flags) => {
+                let len = flags.len().max(n);
+                flags.resize(len, false);
+                Ok(flags)
+            }
+            None => anyhow::bail!("app thread did not answer the health probe"),
+        }
+    }
+
+    /// Fault injection (examples/tests): wedge the app's host thread —
+    /// it stops servicing commands entirely, the "guest froze" failure
+    /// the §6.3 monitor must detect within the heartbeat budget.
+    pub fn wedge_vm(&self, id: AppId) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        let handle = inner.handles.get(&id).context("unknown coordinator")?;
+        handle.wedge();
+        Ok(())
     }
 
     /// Fault injection (examples/tests): kill process `proc`.
@@ -553,57 +708,141 @@ impl CacsService {
         self.inner.lock().unwrap().db.get(id).map(|r| r.lifecycle.state())
     }
 
-    /// One §6.3 health report for an app, synthesized from the
-    /// per-process hook results (*unhealthy*) and host-thread
-    /// reachability (*unreachable* — in real mode the app thread plays
-    /// the virtual cluster, so losing it is the VM-failure case).
+    /// One §6.3 health report for an app, produced by a heartbeat over
+    /// its per-app [`AppMonitor`] broadcast tree.  The leaf hooks read
+    /// per-proc health through a bounded non-blocking probe of the host
+    /// thread, so a wedged host (or a construct-failed app answering
+    /// with no flags) is reported *unreachable within the heartbeat
+    /// budget* — v1 synthesized this from one blocking
+    /// `AppHandle::health()` with the 120 s data-plane timeout.
     pub fn health_report(&self, id: AppId) -> Result<HealthReport> {
-        let (n, handle) = {
+        Ok(self.health_status(id)?.report)
+    }
+
+    /// [`Self::health_report`] plus the probe's detection-latency
+    /// accounting — the payload of `GET /coordinators/:id/health`.
+    ///
+    /// The heartbeat is live only for RUNNING / ERROR apps.  While the
+    /// data plane legitimately owns the host thread (a checkpoint,
+    /// restore or migration in flight blocks the command queue for as
+    /// long as the images take), a probe would misread "busy" as a
+    /// total outage — those states serve the last completed verdict
+    /// with `live: false` instead.
+    pub fn health_status(&self, id: AppId) -> Result<HealthStatus> {
+        let (n, state, monitor) = {
             let inner = self.inner.lock().unwrap();
             let rec = inner.db.get(id).context("unknown coordinator")?;
-            (rec.asr.n_vms, inner.handles.get(&id).cloned())
+            (rec.asr.n_vms, rec.lifecycle.state(), inner.monitors.get(&id).cloned())
         };
-        // the hook round-trip runs without the service lock
-        let report = match handle {
-            None => HealthReport { unhealthy: vec![], unreachable: (0..n).collect() },
-            Some(h) => match h.health() {
-                Ok(flags) => HealthReport {
-                    unhealthy: flags
-                        .iter()
-                        .enumerate()
-                        .filter(|&(_, &ok)| !ok)
-                        .map(|(i, _)| i)
-                        .collect(),
-                    unreachable: vec![],
-                },
-                Err(_) => HealthReport { unhealthy: vec![], unreachable: (0..n).collect() },
-            },
+        let live = matches!(state, AppState::Running | AppState::Error);
+        // the heartbeat runs without the service lock.  A non-live app
+        // with no completed probe yet gets the all-unreachable verdict
+        // (`waves: 0`, `live: false` flag it as "no evidence"): absence
+        // of a verdict must never read as healthy — that is the exact
+        // hole the construct-failed fix closes elsewhere.
+        let probe = match monitor {
+            Some(m) if live => m.probe(),
+            Some(m) => m.last_probe().unwrap_or_else(|| HealthProbe::unreachable(n)),
+            None => HealthProbe::unreachable(n),
         };
-        Ok(report)
+        Ok(HealthStatus {
+            report: probe.report,
+            n_vms: n,
+            state,
+            live,
+            rtt: probe.rtt,
+            waves: probe.waves,
+            budget: probe.budget,
+            hop: self.cfg.heartbeat_hop,
+            arity: self.cfg.heartbeat_arity.max(2),
+        })
     }
 
     /// One monitoring round over all apps (§6.3); returns the ids that
     /// entered recovery.  Called by the monitor thread and directly by
     /// tests.
     ///
+    /// Every app's heartbeat fans out **concurrently** (on the
+    /// dedicated [`heartbeat_pool`]) under one whole-round deadline, so
+    /// a single wedged host thread costs its own tree budget — not a
+    /// serialized 120 s slot in front of every other app, the v1
+    /// failure mode that made detection latency O(n_apps × timeout).
+    /// Apps the deadline cuts off are deferred (and logged), never
+    /// silently reported healthy.
+    ///
     /// Two recovery cases per the paper: an *unreachable* virtual
     /// cluster is re-provisioned and restored from the last image
     /// ([`Self::reprovision_and_restore`]); *unhealthy* processes on a
     /// reachable cluster restart in place ([`Self::restart`]).  Apps
     /// already in ERROR that have a usable checkpoint take the §5.3
-    /// passive-recovery path (ERROR → RESTARTING).
+    /// passive-recovery path (ERROR → RESTARTING).  Recovery is claimed
+    /// per app, so concurrent rounds never double-recover one app.
     pub fn monitor_round(&self) -> Vec<AppId> {
         let mut recovered = vec![];
-        for id in self.app_ids() {
-            let (state, has_ckpt) = {
-                let inner = self.inner.lock().unwrap();
-                let Some(rec) = inner.db.get(id) else { continue };
-                (rec.lifecycle.state(), rec.latest_ckpt().is_some())
-            };
-            if state != AppState::Running && state != AppState::Error {
-                continue;
+        type Target = (AppId, AppState, bool, usize, Option<Arc<AppMonitor>>);
+        let mut targets: Vec<Target> = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .db
+                .iter()
+                .filter(|r| {
+                    matches!(r.lifecycle.state(), AppState::Running | AppState::Error)
+                })
+                .map(|r| {
+                    (
+                        r.id,
+                        r.lifecycle.state(),
+                        r.latest_ckpt().is_some(),
+                        r.asr.n_vms,
+                        inner.monitors.get(&r.id).cloned(),
+                    )
+                })
+                .collect()
+        };
+        if targets.is_empty() {
+            return recovered;
+        }
+        // rotate the probe order each round: the deadline below defers
+        // whatever did not get probed in time, and with a fixed (db)
+        // order the same tail apps would be deferred every round during
+        // a fleet-wide outage — rotation guarantees every app is at the
+        // head of the order once per `targets.len()` rounds
+        let rot = self
+            .round_counter
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            % targets.len();
+        targets.rotate_left(rot);
+        // whole-round deadline for the PROBE phase: twice the widest
+        // tree's heartbeat budget (probe + resolve-wave slack), floored
+        // by the monitor period — detection is bounded regardless of
+        // how many apps are wedged.  Recovery actions for apps that
+        // failed the probe then run serially below (each one gated by a
+        // patient confirm), so the round's total time scales with the
+        // number of *confirmed-failed* apps, never with fleet size.
+        let per_app = targets
+            .iter()
+            .filter_map(|t| t.4.as_ref().map(|m| m.budget()))
+            .max()
+            .unwrap_or(Duration::from_millis(500));
+        let round_deadline = Instant::now()
+            + (per_app * 2).max(self.cfg.monitor_period.unwrap_or(Duration::ZERO));
+        let probes = heartbeat_pool().map(targets, move |(id, state, has_ckpt, n_vms, mon)| {
+            if Instant::now() >= round_deadline {
+                return (id, state, has_ckpt, n_vms, None); // deferred, see below
             }
-            let Ok(report) = self.health_report(id) else { continue };
+            let probe = match &mon {
+                Some(m) => m.probe(),
+                None => HealthProbe::unreachable(n_vms),
+            };
+            (id, state, has_ckpt, n_vms, Some(probe))
+        });
+        let mut deferred = 0usize;
+        for (id, state, has_ckpt, n_vms, probe) in probes {
+            let Some(probe) = probe else {
+                deferred += 1;
+                continue;
+            };
+            let report = probe.report;
             if state == AppState::Running && report.all_healthy() {
                 continue;
             }
@@ -612,22 +851,60 @@ impl CacsService {
             }
             if !report.all_healthy() {
                 log::warn!(
-                    "{id}: unhealthy {:?} unreachable {:?}",
+                    "{id}: unhealthy {:?} unreachable {:?} (detected in {:?} of {:?} budget, {} wave(s))",
                     report.unhealthy,
-                    report.unreachable
+                    report.unreachable,
+                    probe.rtt,
+                    probe.budget,
+                    probe.waves
                 );
+            }
+            // claim the app; a concurrent round holding it (or having
+            // just recovered it) must not be doubled up on
+            if !self.claim_recovery(id) {
+                continue;
+            }
+            // re-check the lifecycle under the claim: a user operation
+            // (or a DELETE) may own the app since the probe
+            let state_now = self.state(id);
+            if !matches!(state_now, Some(AppState::Running) | Some(AppState::Error)) {
+                self.release_recovery(id);
+                continue;
             }
             if !self.cfg.auto_recover || !has_ckpt {
                 self.set_error(id);
+                self.release_recovery(id);
                 continue;
             }
-            let result = if report.needs_new_vms() {
-                // §6.3 case 1: VM failure — new "VMs" + restore
-                self.reprovision_and_restore(id)
-            } else {
-                // §6.3 case 2: application failure — restart in place
-                // from the previous checkpoint
-                self.restart(id, None)
+            // Patient second opinion directly on the host thread before
+            // anything destructive: the tree's verdict is tuned for fast
+            // detection (hop-bounded), so an app that is merely slow or
+            // briefly busy — or that a concurrent round already
+            // recovered — must not be torn down on stale evidence.  The
+            // confirm also picks the recovery case on FRESH data: a host
+            // that wedged after the probe must go down the re-provision
+            // path, not block a 120 s in-place restore.
+            let confirm = self
+                .handle(id)
+                .and_then(|h| h.try_health(RECOVERY_CONFIRM_TIMEOUT));
+            let result = match confirm {
+                // §6.3 case 1: no host, or it cannot answer even a
+                // patient probe — new "VMs" + restore.  Flags shorter
+                // than n_vms are the construct-failed shape: there is no
+                // real app behind the thread, so it needs new VMs too.
+                None => self.reprovision_and_restore(id),
+                Some(flags) if flags.len() < n_vms => self.reprovision_and_restore(id),
+                // §6.3 case 2: host reachable, some procs dead —
+                // restart in place from the previous checkpoint
+                Some(flags) if flags.iter().any(|&ok| !ok) => self.restart(id, None),
+                // host answered all-healthy: ERROR apps still take the
+                // §5.3 passive-recovery restart; RUNNING apps were a
+                // transient blip (or already recovered) — leave them be
+                Some(_) if state_now == Some(AppState::Error) => self.restart(id, None),
+                Some(_) => {
+                    self.release_recovery(id);
+                    continue;
+                }
             };
             match result {
                 Ok(_) => recovered.push(id),
@@ -648,8 +925,23 @@ impl CacsService {
                     }
                 }
             }
+            self.release_recovery(id);
+        }
+        if deferred > 0 {
+            log::warn!(
+                "monitor round deadline exhausted; {deferred} app(s) deferred to the next round"
+            );
         }
         recovered
+    }
+
+    /// Claim `id` for recovery; false if another round holds it.
+    fn claim_recovery(&self, id: AppId) -> bool {
+        self.inner.lock().unwrap().recovering.insert(id)
+    }
+
+    fn release_recovery(&self, id: AppId) {
+        self.inner.lock().unwrap().recovering.remove(&id);
     }
 
     fn set_error(&self, id: AppId) {
@@ -682,17 +974,33 @@ impl CacsService {
             rec.asr.clone()
         };
         let factory = build_factory(&asr, &self.cfg)?;
-        let handle = AppHandle::spawn(
+        let handle = Arc::new(AppHandle::spawn(
             &id.to_string(),
             factory,
             self.store.clone(),
             self.cfg.step_interval,
-        );
-        let old = {
+        ));
+        let (old, monitor) = {
             let mut inner = self.inner.lock().unwrap();
-            inner.handles.insert(id, Arc::new(handle))
+            // a DELETE may have raced the spawn: publishing the fresh
+            // handle for a removed record would leak a stepping zombie
+            // thread in the map with no path that ever removes it
+            if inner.db.get(id).is_none() {
+                drop(inner);
+                drop(handle); // tears the just-spawned host down again
+                anyhow::bail!("coordinator deleted during recovery");
+            }
+            let old = inner.handles.insert(id, handle.clone());
+            (old, inner.monitors.get(&id).cloned())
         };
-        drop(old); // joins the dead host's thread, if it is still around
+        // the tree outlives the "VMs": point its tap at the new host
+        if let Some(m) = monitor {
+            m.rewire(&handle);
+        }
+        // joins the dead host's thread if it is still around; a wedged
+        // thread is detached after the bounded join grace, so recovery
+        // is never held hostage by the host it is replacing
+        drop(old);
         self.restart(id, None)
     }
 
@@ -1106,5 +1414,266 @@ mod tests {
         svc.checkpoint(id).unwrap();
         svc.delete(id).unwrap();
         assert!(svc.checkpoint(id).is_err());
+    }
+
+    #[test]
+    fn factory_failed_app_is_never_reported_healthy() {
+        // the "dead app reports healthy" hole: a construct-failed host
+        // answers Health with no flags; v1's health_report mapped that
+        // to all-healthy, so the monitor never saw the dead app
+        let svc = svc();
+        let id = svc
+            .submit_with_factory(
+                Asr::new("doa", WorkloadSpec::Dmtcp1 { n: 8 }, 1),
+                Box::new(|| anyhow::bail!("factory exploded")),
+            )
+            .unwrap();
+        // the legacy bool view pads to n_vms with false
+        assert_eq!(svc.health(id).unwrap(), vec![false]);
+        // the tree reports every proc unreachable
+        let report = svc.health_report(id).unwrap();
+        assert_eq!(report.unreachable, vec![0]);
+        assert!(!report.all_healthy());
+        // no checkpoint exists, so the monitor parks it in ERROR rather
+        // than leaving it invisibly "healthy"
+        let recovered = svc.monitor_round();
+        assert!(recovered.is_empty());
+        assert_eq!(svc.state(id), Some(AppState::Error));
+    }
+
+    /// MemStore wrapper whose `delete` can be armed to fail after a set
+    /// number of successes — the store-error paths of DELETE
+    /// /checkpoints/:seq (total refusal and mid-set tear).
+    struct FailingStore {
+        inner: crate::storage::mem::MemStore,
+        /// Deletes allowed before failing; `usize::MAX` = disarmed.
+        deletes_left: std::sync::atomic::AtomicUsize,
+    }
+
+    impl FailingStore {
+        fn new() -> FailingStore {
+            FailingStore {
+                inner: crate::storage::mem::MemStore::new(),
+                deletes_left: std::sync::atomic::AtomicUsize::new(usize::MAX),
+            }
+        }
+
+        fn arm(&self, deletes_before_failure: usize) {
+            self.deletes_left
+                .store(deletes_before_failure, std::sync::atomic::Ordering::SeqCst);
+        }
+    }
+
+    impl ObjectStore for FailingStore {
+        fn put(&self, key: &str, data: &[u8]) -> Result<(), crate::storage::StoreError> {
+            self.inner.put(key, data)
+        }
+        fn get(&self, key: &str) -> Result<Vec<u8>, crate::storage::StoreError> {
+            self.inner.get(key)
+        }
+        fn delete(&self, key: &str) -> Result<(), crate::storage::StoreError> {
+            let left = self.deletes_left.load(std::sync::atomic::Ordering::SeqCst);
+            if left == 0 {
+                return Err(crate::storage::StoreError::Io(std::io::Error::other(
+                    "injected store failure",
+                )));
+            }
+            if left != usize::MAX {
+                self.deletes_left
+                    .store(left - 1, std::sync::atomic::Ordering::SeqCst);
+            }
+            self.inner.delete(key)
+        }
+        fn list(&self, prefix: &str) -> Result<Vec<String>, crate::storage::StoreError> {
+            self.inner.list(prefix)
+        }
+        fn size(&self, key: &str) -> Result<u64, crate::storage::StoreError> {
+            self.inner.size(key)
+        }
+    }
+
+    #[test]
+    fn delete_checkpoint_keeps_record_when_store_fails() {
+        let store = Arc::new(FailingStore::new());
+        let svc = CacsService::new(
+            store.clone(),
+            ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+        );
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let ck = svc.checkpoint(id).unwrap();
+        store.arm(0); // refuse before anything is deleted
+        let err = svc.delete_checkpoint(id, ck.seq).unwrap_err();
+        assert!(err.to_string().contains("store delete"), "{err}");
+        // v1 dropped the record before the store call: a store error
+        // orphaned the images out of GET /checkpoints.  With the image
+        // set untouched, the record must survive so the checkpoint
+        // stays visible and retryable.
+        assert_eq!(svc.checkpoints(id).unwrap().len(), 1);
+        assert!(!store.list(&format!("{id}/")).unwrap().is_empty());
+        store.arm(usize::MAX); // disarm and retry: everything goes away
+        assert_eq!(svc.delete_checkpoint(id, ck.seq).unwrap(), 1);
+        assert!(svc.checkpoints(id).unwrap().is_empty());
+        assert!(store.list(&format!("{id}/")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn partially_failed_delete_drops_the_torn_record() {
+        // a store failure mid-set tears the checkpoint: it must not stay
+        // listed as restorable (recovery would restore a corrupt set),
+        // but the leftover images stay reachable for a retried delete
+        let store = Arc::new(FailingStore::new());
+        let svc = CacsService::new(
+            store.clone(),
+            ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+        );
+        let id = svc
+            .submit(Asr::new("lu", WorkloadSpec::Lu { nz: 4, ny: 8, nx: 8 }, 2))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let ck = svc.checkpoint(id).unwrap();
+        assert_eq!(ck.per_proc_bytes.len(), 2);
+        store.arm(1); // first image deletes, the second fails
+        assert!(svc.delete_checkpoint(id, ck.seq).is_err());
+        assert!(
+            svc.checkpoints(id).unwrap().is_empty(),
+            "a torn checkpoint must not stay listed as restorable"
+        );
+        assert_eq!(store.list(&format!("{id}/")).unwrap().len(), 1);
+        store.arm(usize::MAX);
+        // retrying still cleans the leftover image out of the store
+        assert_eq!(svc.delete_checkpoint(id, ck.seq).unwrap(), 1);
+        assert!(store.list(&format!("{id}/")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn submit_spawn_does_not_hold_the_service_lock() {
+        // v1 held the service lock across AppHandle::spawn, so one slow
+        // spawn stalled every other REST call; the spawn phase now runs
+        // off-lock (the test seam sleeps inside it)
+        let svc = svc_with(|cfg| ServiceConfig {
+            submit_spawn_delay: Duration::from_millis(400),
+            ..cfg
+        });
+        let svc2 = svc.clone();
+        let submitter = std::thread::spawn(move || {
+            svc2.submit(Asr::new("slow", WorkloadSpec::Dmtcp1 { n: 16 }, 1))
+                .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(100)); // let it enter the spawn phase
+        let t0 = Instant::now();
+        let _ = svc.list();
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(200),
+            "list() blocked {elapsed:?} behind a slow submit spawn"
+        );
+        let id = submitter.join().unwrap();
+        wait_until("submitted app to run", || {
+            svc.state(id) == Some(AppState::Running)
+        });
+    }
+
+    #[test]
+    fn delete_racing_submit_tears_down_cleanly() {
+        // a §5.4 DELETE landing between submit's record insert and its
+        // off-lock spawn: the submit must fail and leave nothing behind
+        let svc = svc_with(|cfg| ServiceConfig {
+            submit_spawn_delay: Duration::from_millis(300),
+            ..cfg
+        });
+        let svc2 = svc.clone();
+        let submitter = std::thread::spawn(move || {
+            svc2.submit(Asr::new("doomed", WorkloadSpec::Dmtcp1 { n: 16 }, 1))
+        });
+        wait_until("record to appear", || !svc.app_ids().is_empty());
+        let id = svc.app_ids()[0];
+        svc.delete(id).unwrap();
+        let res = submitter.join().unwrap();
+        assert!(res.is_err(), "submit must fail when its record was deleted mid-spawn");
+        assert!(svc.app_ids().is_empty());
+        assert!(svc.list().is_empty());
+    }
+
+    #[test]
+    fn throttled_healthy_app_is_not_torn_down() {
+        // a step throttle far above heartbeat_hop must not read as a
+        // wedged host: the host loop waits on its command queue between
+        // steps, so probes are answered mid-throttle, and the monitor
+        // leaves the (perfectly healthy) app alone
+        let svc = svc_with(|cfg| ServiceConfig {
+            step_interval: Duration::from_millis(300),
+            ..cfg
+        });
+        let id = svc
+            .submit(Asr::new("slowstep", WorkloadSpec::Dmtcp1 { n: 32 }, 1))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(100)); // inside a throttle wait
+        let report = svc.health_report(id).unwrap();
+        assert!(report.all_healthy(), "throttled app misread as down: {report:?}");
+        svc.checkpoint(id).unwrap(); // give recovery something to (wrongly) use
+        let recovered = svc.monitor_round();
+        assert!(recovered.is_empty(), "healthy throttled app was recovered: {recovered:?}");
+        assert_eq!(svc.state(id), Some(AppState::Running));
+    }
+
+    #[test]
+    fn health_status_mid_checkpoint_serves_last_verdict_not_false_outage() {
+        // while the data plane owns the host thread (a checkpoint can
+        // block the command queue for minutes), a live probe would time
+        // out and misreport a healthy app as a total outage — the
+        // endpoint must serve the last completed verdict instead
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        assert!(svc.health_report(id).unwrap().all_healthy()); // caches a live verdict
+        assert!(svc.force_state(id, AppState::Checkpointing));
+        let status = svc.health_status(id).unwrap();
+        assert!(!status.live, "mid-checkpoint health must not be a live probe");
+        assert_eq!(status.state, AppState::Checkpointing);
+        assert!(
+            status.report.all_healthy(),
+            "busy app must not read as an outage: {:?}",
+            status.report
+        );
+        assert!(svc.force_state(id, AppState::Running));
+        assert!(svc.health_status(id).unwrap().live);
+    }
+
+    #[test]
+    fn wedged_host_detected_within_budget_and_recovered() {
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        svc.checkpoint(id).unwrap();
+        svc.wedge_vm(id).unwrap();
+        wait_until("wedge to take effect", || svc.health(id).is_err());
+        // control-plane read degrades to the cached record promptly —
+        // v1 hung GET /coordinators/:id for the 120 s call timeout
+        let t0 = Instant::now();
+        let j = svc.info(id).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "info took {:?}", t0.elapsed());
+        assert_eq!(j.get("state").as_str(), Some("RUNNING"));
+        // the tree reports the host unreachable within the heartbeat
+        // budget (plus resolve-wave slack), not after 120 s
+        let status = svc.health_status(id).unwrap();
+        assert_eq!(status.report.unreachable, vec![0]);
+        assert!(
+            status.rtt < status.budget * 4 + Duration::from_millis(500),
+            "detection rtt {:?} vs budget {:?}",
+            status.rtt,
+            status.budget
+        );
+        // recovery replaces the wedged host and restores from the image
+        let recovered = svc.monitor_round();
+        assert_eq!(recovered, vec![id]);
+        assert_eq!(svc.state(id), Some(AppState::Running));
+        assert_eq!(svc.health(id).unwrap(), vec![true]);
     }
 }

@@ -2,11 +2,13 @@
 //! checkpoint metadata, and the per-application record both drivers keep
 //! in the coordinators database.
 
-use crate::coordinator::lifecycle::Lifecycle;
+use crate::coordinator::lifecycle::{AppState, Lifecycle};
+use crate::monitor::HealthReport;
 use crate::simcloud::VmTemplate;
 use crate::util::ids::{AppId, CkptId, VmId};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::time::Duration;
 
 /// Which benchmark workload an application runs (DESIGN.md §1).
 #[derive(Debug, Clone, PartialEq)]
@@ -159,6 +161,48 @@ impl CkptRecord {
     }
 }
 
+/// One application's §6.3 health verdict plus the detection-latency
+/// accounting of the broadcast-tree probe that produced it — the
+/// payload of `GET /coordinators/:id/health`.  Surfacing `rtt`/`waves`
+/// next to the report lets an operator see not just *what* the monitor
+/// concluded but *how fast* it can conclude it (Fig 4c's subject).
+#[derive(Debug, Clone)]
+pub struct HealthStatus {
+    pub report: HealthReport,
+    pub n_vms: usize,
+    pub state: AppState,
+    /// Whether `report` comes from a live heartbeat.  While the data
+    /// plane owns the host thread (CHECKPOINTING / RESTARTING /
+    /// MIGRATING / PROVISION), probing would misread "busy" as a total
+    /// outage, so the last completed verdict is served instead.
+    pub live: bool,
+    /// Wall-clock time of the heartbeat round (resolve waves included).
+    pub rtt: Duration,
+    /// Probe waves the round needed (1 = tree answered everything).
+    pub waves: usize,
+    /// Whole-heartbeat deadline budget of this app's tree.
+    pub budget: Duration,
+    /// Per-hop share of the deadline budget (`heartbeat_hop`).
+    pub hop: Duration,
+    /// Tree arity (`heartbeat_arity`).
+    pub arity: usize,
+}
+
+impl HealthStatus {
+    pub fn to_json(&self) -> Json {
+        let mut j = self.report.to_json();
+        j.set("n_vms", self.n_vms.into());
+        j.set("state", self.state.to_string().into());
+        j.set("live", self.live.into());
+        j.set("rtt_ms", (self.rtt.as_secs_f64() * 1e3).into());
+        j.set("waves", self.waves.into());
+        j.set("budget_ms", (self.budget.as_secs_f64() * 1e3).into());
+        j.set("hop_ms", (self.hop.as_secs_f64() * 1e3).into());
+        j.set("arity", self.arity.into());
+        j
+    }
+}
+
 /// The coordinators-database record for one application.
 #[derive(Debug, Clone)]
 pub struct AppRecord {
@@ -294,6 +338,31 @@ mod tests {
         assert_eq!(j.get("id").as_str(), Some("app-3"));
         assert_eq!(j.get("state").as_str(), Some("CREATING"));
         assert_eq!(j.get("checkpoints").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn health_status_json_shape() {
+        let hs = HealthStatus {
+            report: HealthReport { unhealthy: vec![], unreachable: vec![1] },
+            n_vms: 2,
+            state: AppState::Running,
+            live: true,
+            rtt: Duration::from_millis(42),
+            waves: 2,
+            budget: Duration::from_millis(300),
+            hop: Duration::from_millis(75),
+            arity: 2,
+        };
+        let j = hs.to_json();
+        assert_eq!(j.get("healthy").as_bool(), Some(false));
+        assert_eq!(j.get("unreachable").as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("n_vms").as_u64(), Some(2));
+        assert_eq!(j.get("state").as_str(), Some("RUNNING"));
+        assert_eq!(j.get("live").as_bool(), Some(true));
+        assert!((j.get("rtt_ms").as_f64().unwrap() - 42.0).abs() < 1e-9);
+        assert_eq!(j.get("waves").as_u64(), Some(2));
+        assert!((j.get("budget_ms").as_f64().unwrap() - 300.0).abs() < 1e-9);
+        assert_eq!(j.get("arity").as_u64(), Some(2));
     }
 
     #[test]

@@ -40,6 +40,9 @@ pub mod real;
 pub mod sim;
 pub mod tree;
 
+use crate::util::json::Json;
+use std::time::Duration;
+
 /// Result of one heartbeat round-trip over an application's tree.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HealthReport {
@@ -64,6 +67,50 @@ impl HealthReport {
     pub fn needs_recovery(&self) -> bool {
         !self.all_healthy()
     }
+
+    /// Table-1 diagnostics shape (the REST health endpoint embeds this).
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            ("healthy", self.all_healthy().into()),
+            (
+                "unhealthy",
+                Json::Arr(self.unhealthy.iter().map(|&i| i.into()).collect()),
+            ),
+            (
+                "unreachable",
+                Json::Arr(self.unreachable.iter().map(|&i| i.into()).collect()),
+            ),
+        ])
+    }
+}
+
+/// One heartbeat round-trip plus its detection-latency accounting: how
+/// long the round actually took (`rtt`), how many resolve waves it
+/// needed, and the deadline budget it ran under.  The real-mode REST
+/// health endpoint surfaces these so operators can see detection
+/// latency, not just the verdict (Fig 4c's subject).
+#[derive(Debug, Clone)]
+pub struct HealthProbe {
+    pub report: HealthReport,
+    /// Wall-clock time of the whole round (waves included).
+    pub rtt: Duration,
+    /// Probe waves used (1 = the tree round answered everything).
+    pub waves: usize,
+    /// The whole-heartbeat deadline budget the round ran under.
+    pub budget: Duration,
+}
+
+impl HealthProbe {
+    /// Degenerate probe for an application with no monitoring tree (or
+    /// no host at all): every proc is unreachable, nothing was measured.
+    pub fn unreachable(n: usize) -> HealthProbe {
+        HealthProbe {
+            report: HealthReport { unhealthy: vec![], unreachable: (0..n).collect() },
+            rtt: Duration::ZERO,
+            waves: 0,
+            budget: Duration::ZERO,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +129,22 @@ mod tests {
 
         let vm_fail = HealthReport { unhealthy: vec![], unreachable: vec![1] };
         assert!(vm_fail.needs_new_vms());
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = HealthReport { unhealthy: vec![2], unreachable: vec![0, 3] };
+        let j = r.to_json();
+        assert_eq!(j.get("healthy").as_bool(), Some(false));
+        assert_eq!(j.get("unhealthy").as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("unreachable").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unreachable_probe_covers_all_procs() {
+        let p = HealthProbe::unreachable(3);
+        assert_eq!(p.report.unreachable, vec![0, 1, 2]);
+        assert!(p.report.needs_new_vms());
+        assert_eq!(p.waves, 0);
     }
 }

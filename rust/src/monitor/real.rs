@@ -29,9 +29,29 @@
 //! and on the shared pool they queued behind 64 MB CRC shards whenever
 //! a checkpoint was in flight — detection latency became a function of
 //! image I/O.  The probe pool is small (probes mostly sleep) and lazy.
+//!
+//! # Per-application wiring in the real service
+//!
+//! `CacsService` runs **one tree per application**
+//! (`coordinator::healthplane::AppMonitor`): `n_vms` daemons whose leaf
+//! hooks read the per-process health flags through a cached,
+//! *non-blocking* `AppHandle::try_health` probe.  The hook is
+//! tri-state ([`HookResult`]): a flag that is present decides
+//! healthy/unhealthy, while a host thread that does not answer within
+//! the probe budget — or answers with no flags at all, the
+//! construct-failed shape — makes the daemon report its process
+//! [`HookResult::Unreachable`].  That verdict is *authoritative* (the
+//! daemon itself is alive), so a wedged application host surfaces as
+//! "unreachable within the heartbeat budget" instead of after the
+//! 120 s data-plane call timeout.  `monitor_round` fans every
+//! application's [`RealMonitor::heartbeat_probe`] out concurrently, and
+//! `GET /coordinators/:id/health` returns the structured report plus
+//! the probe's detection-latency fields (`rtt_ms`, `waves`,
+//! `budget_ms`).  The tree shape is configurable per service
+//! (`ServiceConfig::{heartbeat_hop, heartbeat_arity}`).
 
 use super::tree::BroadcastTree;
-use super::HealthReport;
+use super::{HealthProbe, HealthReport};
 use crate::util::pool::ThreadPool;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -48,10 +68,35 @@ pub(crate) fn probe_pool() -> &'static ThreadPool {
     ThreadPool::dedicated_small(&POOL)
 }
 
-/// The user-supplied health hook: `hook(node) -> healthy?` (§6.3 "a
-/// user-defined application-specific routine can define and test the
+/// What a daemon's health hook found out about its own process (§6.3
+/// "a user-defined application-specific routine can define and test the
 /// application's health").
-pub type HealthHook = Arc<dyn Fn(usize) -> bool + Send + Sync>;
+///
+/// `Unreachable` is the daemon saying "I am alive, but my process/VM
+/// cannot be reached" — e.g. the real service's leaf hook timing out a
+/// non-blocking probe of a wedged application host thread.  Unlike a
+/// silent daemon (which only *times out* and gets re-probed), this
+/// verdict is authoritative: no resolve wave is spent on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HookResult {
+    Healthy,
+    Unhealthy,
+    Unreachable,
+}
+
+impl HookResult {
+    /// Convenience for boolean hooks (healthy / unhealthy only).
+    pub fn from_flag(ok: bool) -> HookResult {
+        if ok {
+            HookResult::Healthy
+        } else {
+            HookResult::Unhealthy
+        }
+    }
+}
+
+/// The user-supplied health hook: `hook(node) -> HookResult`.
+pub type HealthHook = Arc<dyn Fn(usize) -> HookResult + Send + Sync>;
 
 enum Msg {
     Probe { deadline: Instant, reply: Sender<Vec<Entry>> },
@@ -62,6 +107,9 @@ enum Msg {
 enum Entry {
     Ok(usize),
     Unhealthy(usize),
+    /// The daemon answered but declared its own process unreachable
+    /// (authoritative — see [`HookResult::Unreachable`]).
+    Unreachable(usize),
     /// Child did not report before its deadline share.  The Monitoring
     /// Manager resolves it with a direct probe; daemons never declare a
     /// peer unreachable themselves.
@@ -118,10 +166,10 @@ fn daemon_loop(book: Arc<AddressBook>, me: usize, inbox: Receiver<Msg>) {
                 // dropping it at worst turns into a TimedOut the resolve
                 // wave re-checks with a direct probe
                 swallowed.clear();
-                let mut entries = vec![if (book.hook)(me) {
-                    Entry::Ok(me)
-                } else {
-                    Entry::Unhealthy(me)
+                let mut entries = vec![match (book.hook)(me) {
+                    HookResult::Healthy => Entry::Ok(me),
+                    HookResult::Unhealthy => Entry::Unhealthy(me),
+                    HookResult::Unreachable => Entry::Unreachable(me),
                 }];
                 // children get the remaining budget minus one hop share;
                 // fire every probe first so their waits overlap instead
@@ -163,12 +211,26 @@ pub struct RealMonitor {
 }
 
 impl RealMonitor {
-    /// Spawn `n` daemon threads with `hook` as the health check and
-    /// `hop` as the per-hop share of the whole-heartbeat deadline budget
-    /// (total budget ≈ `hop × (height + 2)`, see [`Self::budget`]).
+    /// Spawn `n` daemon threads in a binary tree with `hook` as the
+    /// health check and `hop` as the per-hop share of the
+    /// whole-heartbeat deadline budget (total budget ≈
+    /// `hop × (height + 2)`, see [`Self::budget`]).
     pub fn start(n: usize, hook: HealthHook, hop: Duration) -> RealMonitor {
+        Self::start_with_arity(n, 2, hook, hop)
+    }
+
+    /// [`Self::start`] with a configurable tree arity (the paper fixes
+    /// 2; a wider tree is flatter, trading per-daemon fan-out for fewer
+    /// hops — the `heartbeat_arity` service knob lands here).
+    pub fn start_with_arity(
+        n: usize,
+        arity: usize,
+        hook: HealthHook,
+        hop: Duration,
+    ) -> RealMonitor {
         assert!(n >= 1);
-        let tree = BroadcastTree::binary(n);
+        assert!(arity >= 2, "a monitoring tree needs arity >= 2");
+        let tree = BroadcastTree::with_arity(n, arity);
         let mut senders = Vec::with_capacity(n);
         let mut inboxes = Vec::with_capacity(n);
         for _ in 0..n {
@@ -212,10 +274,21 @@ impl RealMonitor {
     /// is bounded by the longest chain of dead ancestors, not the number
     /// of dead nodes.
     pub fn heartbeat(&self) -> HealthReport {
+        self.heartbeat_probe().report
+    }
+
+    /// [`Self::heartbeat`] plus detection-latency accounting: the
+    /// wall-clock round-trip, the number of probe waves it took, and
+    /// the deadline budget the round ran under — the fields the REST
+    /// health endpoint and the Fig 4c real-mode bench report.
+    pub fn heartbeat_probe(&self) -> HealthProbe {
+        let t0 = Instant::now();
+        let mut waves = 0usize;
         let mut unhealthy = vec![];
         let mut unreachable = vec![];
         let mut pending = vec![0usize];
         while !pending.is_empty() {
+            waves += 1;
             let book = self.book.clone();
             let results = probe_pool()
                 .map(pending, move |node| (node, probe_direct(&book, node)));
@@ -227,6 +300,7 @@ impl RealMonitor {
                             match e {
                                 Entry::Ok(_) => {}
                                 Entry::Unhealthy(i) => unhealthy.push(i),
+                                Entry::Unreachable(i) => unreachable.push(i),
                                 Entry::TimedOut(c) => next.push(c),
                             }
                         }
@@ -243,7 +317,12 @@ impl RealMonitor {
         unhealthy.dedup();
         unreachable.sort();
         unreachable.dedup();
-        HealthReport { unhealthy, unreachable }
+        HealthProbe {
+            report: HealthReport { unhealthy, unreachable },
+            rtt: t0.elapsed(),
+            waves,
+            budget: self.budget(),
+        }
     }
 
     /// Kill daemon `i` (it stops answering probes) — VM-failure injection.
@@ -279,7 +358,7 @@ mod tests {
     const HOP: Duration = Duration::from_millis(60);
 
     fn all_healthy_hook() -> HealthHook {
-        Arc::new(|_| true)
+        Arc::new(|_| HookResult::Healthy)
     }
 
     #[test]
@@ -291,7 +370,7 @@ mod tests {
 
     #[test]
     fn detects_unhealthy_hook() {
-        let hook: HealthHook = Arc::new(|i| i != 3 && i != 5);
+        let hook: HealthHook = Arc::new(|i| HookResult::from_flag(i != 3 && i != 5));
         let mon = RealMonitor::start(8, hook, HOP);
         let report = mon.heartbeat();
         assert_eq!(report.unhealthy, vec![3, 5]);
@@ -359,11 +438,67 @@ mod tests {
         use std::sync::atomic::AtomicUsize;
         let sick = Arc::new(AtomicUsize::new(usize::MAX));
         let s2 = sick.clone();
-        let hook: HealthHook = Arc::new(move |i| i != s2.load(Ordering::SeqCst));
+        let hook: HealthHook =
+            Arc::new(move |i| HookResult::from_flag(i != s2.load(Ordering::SeqCst)));
         let mon = RealMonitor::start(6, hook, HOP);
         assert!(mon.heartbeat().all_healthy());
         sick.store(4, Ordering::SeqCst);
         assert_eq!(mon.heartbeat().unhealthy, vec![4]);
+    }
+
+    #[test]
+    fn hook_unreachable_is_authoritative_and_fast() {
+        // A daemon whose hook says Unreachable (its process/VM is gone,
+        // e.g. a wedged app host thread behind a timed-out try_health
+        // probe) is reported in ONE wave: the verdict is authoritative,
+        // so no resolve wave is spent re-probing a daemon that answered.
+        let hook: HealthHook = Arc::new(|i| {
+            if i == 4 {
+                HookResult::Unreachable
+            } else {
+                HookResult::Healthy
+            }
+        });
+        let mon = RealMonitor::start(8, hook, HOP);
+        let t0 = Instant::now();
+        let probe = mon.heartbeat_probe();
+        assert_eq!(probe.report.unreachable, vec![4]);
+        assert!(probe.report.unhealthy.is_empty());
+        assert_eq!(probe.waves, 1, "authoritative verdicts need no resolve wave");
+        // slack covers probe-pool contention from parallel tests
+        assert!(
+            t0.elapsed() < mon.budget() * 3 + Duration::from_millis(500),
+            "took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn probe_reports_rtt_within_budget_when_healthy() {
+        let mon = RealMonitor::start(15, all_healthy_hook(), HOP);
+        let probe = mon.heartbeat_probe();
+        assert!(probe.report.all_healthy());
+        assert_eq!(probe.waves, 1);
+        assert_eq!(probe.budget, mon.budget());
+        // slack covers probe-pool contention from parallel tests
+        assert!(
+            probe.rtt <= probe.budget * 2 + Duration::from_millis(500),
+            "rtt {:?} vs budget {:?}",
+            probe.rtt,
+            probe.budget
+        );
+    }
+
+    #[test]
+    fn arity_tree_heartbeat_and_detection() {
+        // a quad tree over 16 nodes is flatter (height 2 vs 3): all
+        // healthy answers clean, and a killed leaf is still resolved
+        let mon = RealMonitor::start_with_arity(16, 4, all_healthy_hook(), HOP);
+        assert!(mon.heartbeat().all_healthy());
+        mon.kill_daemon(15); // leaf in the quad tree
+        let report = mon.heartbeat();
+        assert_eq!(report.unreachable, vec![15]);
+        assert!(report.unhealthy.is_empty());
     }
 
     #[test]

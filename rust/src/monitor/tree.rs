@@ -78,6 +78,13 @@ impl BroadcastTree {
         h
     }
 
+    /// Nodes with no children — the deepest probe targets, and the
+    /// natural place to inject failures when measuring worst-case
+    /// detection latency (the real-mode Fig 4c bench kills leaves).
+    pub fn leaves(&self) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.arity * i + 1 >= self.n).collect()
+    }
+
     /// Aggregate a heartbeat round given per-node reachability and the
     /// per-node health-hook results.  Pure semantics used by both the sim
     /// and real implementations (and the property tests).
@@ -164,6 +171,26 @@ mod tests {
                     }
                     t.subtree_height(i) == max
                 })
+            },
+        );
+    }
+
+    #[test]
+    fn leaves_are_exactly_the_childless_nodes() {
+        let t = BroadcastTree::binary(7);
+        assert_eq!(t.leaves(), vec![3, 4, 5, 6]);
+        // ragged tree: node 2 keeps one child (5), node 5 is a leaf
+        let t = BroadcastTree::binary(6);
+        assert_eq!(t.leaves(), vec![3, 4, 5]);
+        // property over arbitrary shapes: childless ⇔ leaf
+        forall(
+            "leaves-childless",
+            100,
+            Gen::pair(Gen::usize(1, 200), Gen::usize(2, 4)),
+            |&(n, arity)| {
+                let t = BroadcastTree::with_arity(n, arity);
+                let leaves = t.leaves();
+                (0..n).all(|i| leaves.contains(&i) == t.children(i).is_empty())
             },
         );
     }

@@ -409,6 +409,159 @@ fn monitor_thread_recovers_automatically() {
 }
 
 #[test]
+fn wedged_app_round_is_budget_bounded_and_precise() {
+    // Acceptance for the §6.3 health plane: with N apps and one wedged
+    // host thread, a full monitor_round completes within ~2× the
+    // heartbeat budget — not 120 s × N, the v1 regime where every app
+    // was probed sequentially through the data-plane call timeout —
+    // and reports exactly the wedged app unreachable.
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: None,
+            auto_recover: false, // isolate detection from recovery time
+            ..ServiceConfig::default()
+        },
+    );
+    let ids: Vec<_> = (0..6)
+        .map(|k| {
+            svc.submit(Asr::new(&format!("w{k}"), WorkloadSpec::Dmtcp1 { n: 32 }, 1))
+                .unwrap()
+        })
+        .collect();
+    for &id in &ids {
+        wait_iter(&svc, id, 2);
+    }
+    let wedged = ids[2];
+    svc.wedge_vm(wedged).unwrap();
+    wait_for("wedge to take effect", || svc.health(wedged).is_err());
+
+    // per-app verdicts: exactly the wedged app is unreachable
+    for &id in &ids {
+        let report = svc.health_report(id).unwrap();
+        if id == wedged {
+            assert_eq!(report.unreachable, vec![0], "wedged app must be unreachable");
+        } else {
+            assert!(report.all_healthy(), "{id} must stay healthy: {report:?}");
+        }
+    }
+
+    let budget = svc.health_status(ids[0]).unwrap().budget;
+    let t0 = std::time::Instant::now();
+    let recovered = svc.monitor_round();
+    let elapsed = t0.elapsed();
+    assert!(recovered.is_empty()); // auto-recovery off: parked, not recovered
+    // all heartbeats fan out concurrently: one wedged app costs its own
+    // tree budget, not a serialized slot in front of the other five
+    // (generous slack for CI schedulers — the v1 regime was ≥ 120 s)
+    assert!(
+        elapsed < budget * 2 + Duration::from_secs(1),
+        "monitor_round took {elapsed:?} (heartbeat budget {budget:?})"
+    );
+    use cacs::coordinator::lifecycle::AppState;
+    assert_eq!(svc.state(wedged), Some(AppState::Error));
+    for &id in &ids {
+        if id != wedged {
+            assert_eq!(svc.state(id), Some(AppState::Running), "{id} must be untouched");
+        }
+    }
+}
+
+#[test]
+fn concurrent_monitor_checkpoint_delete_no_double_recovery() {
+    use cacs::storage::{ObjectStore, StoreError};
+    use std::time::Instant;
+
+    /// MemStore wrapper whose writes take `delay` per object — stretches
+    /// the checkpoint window so a multi-MB checkpoint is verifiably in
+    /// flight while the monitor detects a killed VM.
+    struct SlowStore {
+        inner: MemStore,
+        delay: Duration,
+    }
+    impl ObjectStore for SlowStore {
+        fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
+            std::thread::sleep(self.delay);
+            self.inner.put(key, data)
+        }
+        fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+            self.inner.get(key)
+        }
+        fn delete(&self, key: &str) -> Result<(), StoreError> {
+            self.inner.delete(key)
+        }
+        fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+            self.inner.list(prefix)
+        }
+        fn size(&self, key: &str) -> Result<u64, StoreError> {
+            self.inner.size(key)
+        }
+    }
+
+    let svc = CacsService::new(
+        Arc::new(SlowStore { inner: MemStore::new(), delay: Duration::from_millis(250) }),
+        ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+    );
+    // A: multi-MB image, checkpointed concurrently with the round
+    let a = svc
+        .submit(Asr::new("big", WorkloadSpec::Dmtcp1 { n: 1 << 19 }, 1))
+        .unwrap();
+    // B: killed VM the monitor must detect + recover exactly once
+    let b = svc
+        .submit(Asr::new("victim", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+        .unwrap();
+    // C: deleted while the rounds run
+    let c = svc
+        .submit(Asr::new("doomed", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+        .unwrap();
+    for &id in &[a, b, c] {
+        wait_iter(&svc, id, 2);
+    }
+    let ckpt_b = svc.checkpoint(b).unwrap(); // recovery image for B
+
+    // multi-MB checkpoint of A in flight (≥250 ms in the slow store)
+    let svc_ckpt = svc.clone();
+    let ckpt_thread = std::thread::spawn(move || svc_ckpt.checkpoint(a));
+    std::thread::sleep(Duration::from_millis(30)); // let A enter CHECKPOINTING
+    svc.kill_vm(b).unwrap();
+    let svc_del = svc.clone();
+    let del_thread = std::thread::spawn(move || svc_del.delete(c));
+
+    // two monitor rounds race each other (and the checkpoint + delete)
+    let t0 = Instant::now();
+    let svc_mon = svc.clone();
+    let round2 = std::thread::spawn(move || svc_mon.monitor_round());
+    let r1 = svc.monitor_round();
+    let r2 = round2.join().unwrap();
+    let elapsed = t0.elapsed();
+
+    // detection + recovery of B is budget-bound, independent of the
+    // in-flight image transfer (v1: serialized behind 120 s slots)
+    assert!(elapsed < Duration::from_secs(10), "rounds took {elapsed:?}");
+    // B recovered exactly once across both rounds, nothing else touched
+    let b_recoveries =
+        r1.iter().filter(|&&x| x == b).count() + r2.iter().filter(|&&x| x == b).count();
+    assert_eq!(b_recoveries, 1, "B double-recovered: {r1:?} / {r2:?}");
+    assert!(!r1.contains(&a) && !r2.contains(&a), "A was mid-checkpoint, not failed");
+    assert!(!r1.contains(&c) && !r2.contains(&c), "C was deleted, not recovered");
+
+    del_thread.join().unwrap().unwrap();
+    assert!(svc.info(c).is_err(), "C must be gone");
+    // the checkpoint survived the concurrent round
+    let ck_a = ckpt_thread.join().unwrap().unwrap();
+    assert!(ck_a.total_bytes > 1_000_000, "A's image must be multi-MB");
+    use cacs::coordinator::lifecycle::AppState;
+    assert_eq!(svc.state(a), Some(AppState::Running));
+    // B is back: running, healthy, resumed at/after its checkpoint cut
+    wait_for("B to finish recovery", || {
+        svc.state(b) == Some(AppState::Running)
+            && svc.health(b).map(|h| h == vec![true]).unwrap_or(false)
+    });
+    let it = wait_iter(&svc, b, ckpt_b.iteration);
+    assert!(it >= ckpt_b.iteration);
+}
+
+#[test]
 fn double_restart_and_old_checkpoint_selection() {
     let svc = svc_mem();
     let id = svc
