@@ -42,6 +42,7 @@ fn main() {
         kind: "lu".into(),
         iteration: 10,
         payload_len: payload.len() as u64,
+        delta: None,
     };
     // shorthand: table row + json row for byte-throughput paths
     let byte_row = |t: &mut Table, rows: &mut Vec<Json>, path: &str, mean: f64| {

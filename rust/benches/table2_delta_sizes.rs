@@ -1,0 +1,290 @@
+//! Table 2 companion — **delta** checkpoint image sizes.
+//!
+//! The paper's Table 2 measures full image sizes; this bench measures
+//! what the dirty-chunk delta engine does to the steady-state term:
+//!
+//! 1. Full vs delta bytes (and encode time) at 1% / 10% / 50% dirty
+//!    ratios over a 16 MiB process state — the O(state) → O(dirty)
+//!    claim, with the acceptance gate pinned: a ≤10%-dirty cut must
+//!    move ≤20% of the full-image bytes.
+//! 2. Delta-aware migration bytes on the wire: the same app moved with
+//!    the PR 3 classic flow (quiesce → full transfer) and with the
+//!    pre-copy flow (full transfer while running, delta at the
+//!    barrier) — the quiesced-transfer term shrinks to the dirty set.
+//!
+//!   cargo bench --bench table2_delta_sizes -- [--json BENCH_delta.json]
+
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::dckpt::delta::{self, DeltaPolicy, Tracker};
+use cacs::dckpt::{service as ckptsvc, DistributedApp};
+use cacs::storage::mem::MemStore;
+use cacs::util::args::Args;
+use cacs::util::benchkit::{fmt_bytes, fmt_secs, Table};
+use cacs::util::http::Client;
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Fixed-blob app whose dirty pattern the bench controls directly.
+struct BlobApp {
+    blob: Vec<u8>,
+    steps: u64,
+}
+
+impl DistributedApp for BlobApp {
+    fn nprocs(&self) -> usize {
+        1
+    }
+    fn step(&mut self) -> anyhow::Result<()> {
+        self.steps += 1;
+        Ok(())
+    }
+    fn serialize_proc(&self, _: usize) -> anyhow::Result<Vec<u8>> {
+        Ok(self.blob.clone())
+    }
+    fn restore_proc(&mut self, _: usize, p: &[u8]) -> anyhow::Result<()> {
+        self.blob = p.to_vec();
+        Ok(())
+    }
+    fn proc_healthy(&self, _: usize) -> bool {
+        true
+    }
+    fn kill_proc(&mut self, _: usize) {}
+    fn iteration(&self) -> u64 {
+        self.steps
+    }
+    fn metric(&self) -> f64 {
+        0.0
+    }
+    fn kind(&self) -> &'static str {
+        "blob"
+    }
+}
+
+const STATE_BYTES: usize = 16 << 20; // 16 MiB process state
+const CHUNK: usize = 64 * 1024;
+
+fn main() {
+    let args = Args::from_env();
+    let iters = args.usize_or("iters", 5);
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!(
+        "# Table 2 (delta) — dirty-chunk image sizes over a {} state\n",
+        fmt_bytes(STATE_BYTES as f64)
+    );
+    let policy = DeltaPolicy { chunk_size: CHUNK, max_dirty_ratio: 0.75, max_chain: 8 };
+    let n_chunks = STATE_BYTES / CHUNK;
+
+    let base: Vec<u8> = (0..STATE_BYTES).map(|i| (i * 31 % 251) as u8).collect();
+    let base_digests = delta::digest_chunks(&base, CHUNK);
+    let base_proc = delta::ProcDigests {
+        payload_len: base.len() as u64,
+        digests: base_digests,
+    };
+
+    let mut t = Table::new([
+        "dirty",
+        "full bytes",
+        "delta bytes",
+        "ratio",
+        "full encode",
+        "delta encode",
+    ]);
+    let mut ten_pct_ok = false;
+    for dirty_pct in [1usize, 10, 50] {
+        // dirty exactly dirty_pct% of the chunks (one byte each — the
+        // diff is per chunk, so one flipped byte dirties the chunk)
+        let mut app = BlobApp { blob: base.clone(), steps: 1 };
+        let dirty_chunks = (n_chunks * dirty_pct) / 100;
+        let stride = n_chunks / dirty_chunks.max(1);
+        for k in 0..dirty_chunks {
+            app.blob[k * stride * CHUNK] ^= 0xFF;
+        }
+
+        // full encode: the PR 1 streaming pipeline, timed
+        let store = MemStore::new();
+        let mut full_bytes = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let r = ckptsvc::checkpoint(&app, &store, "full", 2, false).unwrap();
+            full_bytes = r.total_bytes();
+        }
+        let full_time = t0.elapsed().as_secs_f64() / iters as f64;
+
+        // delta encode: diff against the base digests, timed (tracker
+        // rebuilt per iteration so every run diffs base → dirty)
+        let mut delta_bytes = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let mut tracker = Tracker::new(CHUNK);
+            tracker.commit(1, vec![base_proc.clone()], false);
+            let r = ckptsvc::checkpoint_tracked(
+                &app, &store, "delta", 2, false, true, &mut tracker, &policy,
+            )
+            .unwrap();
+            assert_eq!(r.kind(), "delta", "{dirty_pct}% dirty must emit a delta");
+            delta_bytes = r.total_bytes();
+        }
+        let delta_time = t0.elapsed().as_secs_f64() / iters as f64;
+
+        let ratio = delta_bytes as f64 / full_bytes as f64;
+        if dirty_pct == 10 {
+            assert!(
+                ratio <= 0.20,
+                "acceptance: a 10%-dirty delta cut must move ≤20% of the full bytes (got {:.1}%)",
+                ratio * 100.0
+            );
+            ten_pct_ok = true;
+        }
+        t.row([
+            format!("{dirty_pct}%"),
+            fmt_bytes(full_bytes as f64),
+            fmt_bytes(delta_bytes as f64),
+            format!("{:.1}%", ratio * 100.0),
+            fmt_secs(full_time),
+            fmt_secs(delta_time),
+        ]);
+        for (path, bytes, time_s) in [
+            ("full-encode", full_bytes, full_time),
+            ("delta-encode", delta_bytes, delta_time),
+        ] {
+            rows.push(Json::object([
+                ("path", path.into()),
+                ("work", format!("{dirty_pct}% dirty of {}", fmt_bytes(STATE_BYTES as f64)).into()),
+                ("time_s", time_s.into()),
+                ("throughput", (STATE_BYTES as f64 / time_s).into()),
+                ("unit", "B/s (state scanned)".into()),
+                ("bytes", bytes.into()),
+                ("bytes_vs_full", (bytes as f64 / full_bytes as f64).into()),
+            ]));
+        }
+    }
+    t.print();
+    assert!(ten_pct_ok);
+    println!("# acceptance OK: 10%-dirty delta moves ≤20% of the full-image bytes\n");
+
+    // --- 2. migration bytes on the wire: classic vs delta pre-copy ---
+    println!("# migration bytes on the wire (counter workload, 4 MiB state)");
+    let mk = |name: &str| {
+        let svc = CacsService::new(
+            Arc::new(MemStore::new()),
+            ServiceConfig {
+                monitor_period: None,
+                delta: DeltaPolicy { chunk_size: CHUNK, ..DeltaPolicy::default() },
+                step_interval: Duration::from_millis(1),
+                ..ServiceConfig::default()
+            },
+        );
+        let server = rest::serve(svc, "127.0.0.1:0", 4).expect("bind REST server");
+        let client = Client::new(&server.addr().to_string());
+        println!("#   {name}: http://{}", server.addr());
+        (server, client)
+    };
+    let (_sa, src) = mk("source");
+    let (_sb, dst) = mk("destination");
+
+    let submit = |src: &Client| -> String {
+        let asr = Json::object([
+            ("name", "mig".into()),
+            (
+                "workload",
+                Json::object([("kind", "counter".into()), ("blob_bytes", (4u64 << 20).into())]),
+            ),
+            ("n_vms", 1u64.into()),
+        ]);
+        let resp = src.post("/coordinators", &asr).expect("submit");
+        assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+        resp.json().unwrap().get("id").as_str().unwrap().to_string()
+    };
+    let wait_iter = |c: &Client, id: &str, min: u64| {
+        for _ in 0..1000 {
+            let ok = c
+                .get(&format!("/coordinators/{id}"))
+                .ok()
+                .and_then(|r| r.json().ok())
+                .map(|j| {
+                    j.get("state").as_str() == Some("RUNNING")
+                        && j.get("iteration").as_u64().unwrap_or(0) >= min
+                })
+                .unwrap_or(false);
+            if ok {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("{id} never reached RUNNING at iteration {min}");
+    };
+    let migrate = |id: &str, precopy: bool| -> Json {
+        let resp = src
+            .post(
+                &format!("/coordinators/{id}/migrate"),
+                &Json::object([("dst", dst.base().into()), ("precopy", precopy.into())]),
+            )
+            .expect("migrate call");
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        resp.json().unwrap()
+    };
+
+    let classic_id = submit(&src);
+    wait_iter(&src, &classic_id, 3);
+    let classic = migrate(&classic_id, false);
+    let classic_bytes = classic.get("bytes_moved").as_u64().unwrap();
+    let classic_down = classic.get("downtime_bytes").as_u64().unwrap();
+
+    let pre_id = submit(&src);
+    wait_iter(&src, &pre_id, 3);
+    let pre = migrate(&pre_id, true);
+    let pre_total = pre.get("bytes_moved").as_u64().unwrap();
+    let pre_down = pre.get("downtime_bytes").as_u64().unwrap();
+    assert_eq!(pre.get("final_kind").as_str(), Some("delta"));
+    assert!(
+        pre_down * 5 <= classic_down,
+        "delta barrier transfer {pre_down} must be ≤20% of the classic quiesced transfer {classic_down}"
+    );
+
+    let mut t = Table::new(["flow", "total bytes", "quiesced bytes", "downtime xfer vs classic"]);
+    t.row([
+        "classic (PR 3)".into(),
+        fmt_bytes(classic_bytes as f64),
+        fmt_bytes(classic_down as f64),
+        "100%".to_string(),
+    ]);
+    t.row([
+        "delta pre-copy".into(),
+        fmt_bytes(pre_total as f64),
+        fmt_bytes(pre_down as f64),
+        format!("{:.1}%", pre_down as f64 / classic_down as f64 * 100.0),
+    ]);
+    t.print();
+    println!("# downtime transfer shrank to the dirty set; pre-copy rode the running app\n");
+    for (path, total, down) in [
+        ("migrate-classic", classic_bytes, classic_down),
+        ("migrate-precopy", pre_total, pre_down),
+    ] {
+        rows.push(Json::object([
+            ("path", path.into()),
+            ("work", "1 app, 4 MiB state".into()),
+            ("time_s", Json::Null),
+            ("throughput", Json::Null),
+            ("unit", "bytes".into()),
+            ("bytes", total.into()),
+            ("downtime_bytes", down.into()),
+        ]));
+    }
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::object([
+            ("bench", "table2_delta_sizes".into()),
+            ("rows", Json::Arr(rows)),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

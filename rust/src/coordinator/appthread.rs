@@ -11,6 +11,7 @@
 //! PJRT-backed apps hold `!Send` XLA handles, so the app is **built on
 //! the thread** from a `Send` factory and never crosses threads.
 
+use crate::dckpt::delta::{DeltaPolicy, Tracker};
 use crate::dckpt::service::{self, CheckpointReport};
 use crate::dckpt::DistributedApp;
 use crate::storage::ObjectStore;
@@ -40,11 +41,18 @@ const JOIN_GRACE: Duration = Duration::from_millis(250);
 /// Control commands accepted between steps.
 pub enum Cmd {
     /// Write a checkpoint (sequence `seq`) into the store.
+    /// `allow_delta` lets the dirty-chunk engine emit a delta image
+    /// when the previous cut's digests make one worthwhile; either way
+    /// the host thread's tracker is re-based on this cut.
     Checkpoint {
         seq: u64,
         with_overhead: bool,
+        allow_delta: bool,
         reply: Sender<Result<CheckpointReport>>,
     },
+    /// Forget the delta tracker's digests (the base checkpoint was
+    /// deleted): the next cut re-roots the chain with a full image.
+    ResetDelta,
     /// Restore from `seq` (None = latest).
     Restore {
         seq: Option<u64>,
@@ -77,20 +85,33 @@ pub struct AppHandle {
 }
 
 impl AppHandle {
-    /// Spawn the host thread.  `step_interval` throttles stepping (zero =
-    /// run hot); `store` is where checkpoint images go.
+    /// Spawn the host thread with the default [`DeltaPolicy`].
+    /// `step_interval` throttles stepping (zero = run hot); `store` is
+    /// where checkpoint images go.
     pub fn spawn(
         app_name: &str,
         factory: AppFactory,
         store: Arc<dyn ObjectStore>,
         step_interval: Duration,
     ) -> AppHandle {
+        AppHandle::spawn_with(app_name, factory, store, step_interval, DeltaPolicy::default())
+    }
+
+    /// [`spawn`](AppHandle::spawn) with an explicit delta policy (the
+    /// service threads `ServiceConfig::delta` through here).
+    pub fn spawn_with(
+        app_name: &str,
+        factory: AppFactory,
+        store: Arc<dyn ObjectStore>,
+        step_interval: Duration,
+        delta: DeltaPolicy,
+    ) -> AppHandle {
         let (tx, rx) = channel();
         let name = app_name.to_string();
         let thread_name = format!("cacs-app-{name}");
         let join = std::thread::Builder::new()
             .name(thread_name)
-            .spawn(move || host_loop(&name, factory, store, step_interval, rx))
+            .spawn(move || host_loop(&name, factory, store, step_interval, delta, rx))
             .expect("spawn app thread");
         AppHandle { tx, join: Some(join), app_name: app_name.to_string() }
     }
@@ -112,8 +133,24 @@ impl AppHandle {
         self.call_within(DATA_CALL_TIMEOUT, make)
     }
 
+    /// Full-image checkpoint (the delta tracker is still re-based on
+    /// this cut, so a later delta cut can chain to it).
     pub fn checkpoint(&self, seq: u64, with_overhead: bool) -> Result<CheckpointReport> {
-        self.call(|reply| Cmd::Checkpoint { seq, with_overhead, reply })?
+        self.call(|reply| Cmd::Checkpoint { seq, with_overhead, allow_delta: false, reply })?
+    }
+
+    /// Policy-driven checkpoint: emits a dirty-chunk delta image when
+    /// the engine's digests make one worthwhile, a full image otherwise
+    /// (see [`crate::dckpt::service::checkpoint_tracked`]).
+    pub fn checkpoint_auto(&self, seq: u64, with_overhead: bool) -> Result<CheckpointReport> {
+        self.call(|reply| Cmd::Checkpoint { seq, with_overhead, allow_delta: true, reply })?
+    }
+
+    /// Drop the delta tracker's digests; the next cut is a full image.
+    /// Fire-and-forget (used when the tracked base checkpoint is
+    /// deleted out from under the chain).
+    pub fn reset_delta(&self) {
+        let _ = self.tx.send(Cmd::ResetDelta);
     }
 
     pub fn restore(&self, seq: Option<u64>) -> Result<u64> {
@@ -202,22 +239,26 @@ impl Drop for AppHandle {
     }
 }
 
+/// Everything the host loop mutates while serving commands: the app
+/// itself, the pause/broken flags, and the delta tracker whose digests
+/// persist across cuts.
+struct HostState {
+    app: Box<dyn DistributedApp>,
+    paused: bool,
+    broken: bool, // a proc died; stop stepping, keep serving
+    tracker: Tracker,
+    policy: DeltaPolicy,
+}
+
 /// Shared command handling; returns false when the thread must exit.
-fn handle_cmd(
-    cmd: Cmd,
-    app: &mut Box<dyn DistributedApp>,
-    app_name: &str,
-    store: &Arc<dyn ObjectStore>,
-    paused: &mut bool,
-    broken: &mut bool,
-) -> bool {
+fn handle_cmd(cmd: Cmd, st: &mut HostState, app_name: &str, store: &Arc<dyn ObjectStore>) -> bool {
     match cmd {
         Cmd::Stop => return false,
-        Cmd::Pause => *paused = true,
-        Cmd::Resume => *paused = false,
+        Cmd::Pause => st.paused = true,
+        Cmd::Resume => st.paused = false,
         Cmd::Kill { proc } => {
-            app.kill_proc(proc);
-            *broken = true;
+            st.app.kill_proc(proc);
+            st.broken = true;
         }
         Cmd::Wedge => {
             log::warn!("{app_name}: host thread wedged by fault injection");
@@ -226,20 +267,33 @@ fn handle_cmd(
             }
         }
         Cmd::Health { reply } => {
-            let h = (0..app.nprocs()).map(|i| app.proc_healthy(i)).collect();
+            let h = (0..st.app.nprocs()).map(|i| st.app.proc_healthy(i)).collect();
             let _ = reply.send(h);
         }
         Cmd::Progress { reply } => {
-            let _ = reply.send((app.iteration(), app.metric()));
+            let _ = reply.send((st.app.iteration(), st.app.metric()));
         }
-        Cmd::Checkpoint { seq, with_overhead, reply } => {
-            let r = service::checkpoint(app.as_ref(), store.as_ref(), app_name, seq, with_overhead);
+        Cmd::Checkpoint { seq, with_overhead, allow_delta, reply } => {
+            let r = service::checkpoint_tracked(
+                st.app.as_ref(),
+                store.as_ref(),
+                app_name,
+                seq,
+                with_overhead,
+                allow_delta,
+                &mut st.tracker,
+                &st.policy,
+            );
             let _ = reply.send(r);
         }
+        Cmd::ResetDelta => st.tracker.reset(),
         Cmd::Restore { seq, reply } => {
-            let r = service::restore(app.as_mut(), store.as_ref(), app_name, seq);
+            let r = service::restore(st.app.as_mut(), store.as_ref(), app_name, seq);
             if r.is_ok() {
-                *broken = false; // revived
+                st.broken = false; // revived
+                // the live state no longer matches the digests of the
+                // last cut — the next checkpoint re-roots the chain
+                st.tracker.reset();
             }
             let _ = reply.send(r);
         }
@@ -252,9 +306,10 @@ fn host_loop(
     factory: AppFactory,
     store: Arc<dyn ObjectStore>,
     step_interval: Duration,
+    delta: DeltaPolicy,
     rx: Receiver<Cmd>,
 ) {
-    let mut app: Box<dyn DistributedApp> = match factory() {
+    let app: Box<dyn DistributedApp> = match factory() {
         Ok(a) => a,
         Err(e) => {
             log::error!("{app_name}: app construction failed: {e}");
@@ -287,14 +342,14 @@ fn host_loop(
         }
     };
 
-    let mut paused = false;
-    let mut broken = false; // a proc died; stop stepping, keep serving
+    let tracker = Tracker::new(delta.chunk_size);
+    let mut st = HostState { app, paused: false, broken: false, tracker, policy: delta };
     loop {
         // drain pending commands (each lands at a step barrier)
         loop {
             match rx.try_recv() {
                 Ok(cmd) => {
-                    if !handle_cmd(cmd, &mut app, app_name, &store, &mut paused, &mut broken) {
+                    if !handle_cmd(cmd, &mut st, app_name, &store) {
                         return;
                     }
                 }
@@ -303,21 +358,21 @@ fn host_loop(
             }
         }
 
-        if paused || broken {
+        if st.paused || st.broken {
             // block (bounded) instead of spinning
             if let Ok(cmd) = rx.recv_timeout(Duration::from_millis(50)) {
-                if !handle_cmd(cmd, &mut app, app_name, &store, &mut paused, &mut broken) {
+                if !handle_cmd(cmd, &mut st, app_name, &store) {
                     return;
                 }
             }
             continue;
         }
 
-        match app.step() {
+        match st.app.step() {
             Ok(()) => {}
             Err(e) => {
                 log::warn!("{app_name}: step failed: {e}");
-                broken = true;
+                st.broken = true;
                 continue;
             }
         }
@@ -337,10 +392,10 @@ fn host_loop(
                 }
                 match rx.recv_timeout(left) {
                     Ok(cmd) => {
-                        if !handle_cmd(cmd, &mut app, app_name, &store, &mut paused, &mut broken) {
+                        if !handle_cmd(cmd, &mut st, app_name, &store) {
                             return;
                         }
-                        if paused || broken {
+                        if st.paused || st.broken {
                             break; // the main loop's parked branch takes over
                         }
                     }
@@ -458,6 +513,43 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         let (later, _) = h.progress().unwrap();
         assert!(later > frozen, "resume restarts stepping");
+    }
+
+    #[test]
+    fn checkpoint_auto_emits_deltas_and_restore_re_roots() {
+        let store = Arc::new(MemStore::new());
+        let s2: Arc<dyn ObjectStore> = store.clone();
+        let h = AppHandle::spawn_with(
+            "app-d",
+            Box::new(|| Ok(Box::new(CounterApp::new(1, 4096)) as Box<dyn DistributedApp>)),
+            s2,
+            Duration::from_millis(1),
+            DeltaPolicy { chunk_size: 64, max_dirty_ratio: 0.5, max_chain: 8 },
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        let full = h.checkpoint_auto(1, false).unwrap();
+        assert_eq!(full.kind(), "full");
+        std::thread::sleep(Duration::from_millis(20));
+        let d = h.checkpoint_auto(2, false).unwrap();
+        assert_eq!(d.kind(), "delta");
+        assert_eq!(d.base_seq, Some(1));
+        assert!(
+            d.total_bytes() < full.total_bytes() / 4,
+            "delta {} vs full {}",
+            d.total_bytes(),
+            full.total_bytes()
+        );
+        // a restore resets the tracker: the live state no longer
+        // matches the digests, so the next cut re-roots with a full
+        h.restore(Some(2)).unwrap();
+        let r = h.checkpoint_auto(3, false).unwrap();
+        assert_eq!(r.kind(), "full");
+        // reset_delta (base deleted under the chain) does the same
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(h.checkpoint_auto(4, false).unwrap().kind(), "delta");
+        h.reset_delta();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(h.checkpoint_auto(5, false).unwrap().kind(), "full");
     }
 
     #[test]

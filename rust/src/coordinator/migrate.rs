@@ -24,13 +24,38 @@
 //! 5. **Terminate the source** — host thread joined, store emptied, a
 //!    TERMINATED tombstone with `migrated_to` kept for audit.
 //!
+//! # Delta-aware pre-copy (`{"precopy": true}`)
+//!
+//! The classic flow quiesces first, so the app is down for the whole
+//! O(state) transfer.  Pre-copy splits the move the way VM live
+//! migration does, riding on the dirty-chunk delta engine:
+//!
+//! * **Phase A (app still running):** cut a *full* checkpoint and
+//!   stream it to the clone while the source keeps stepping.  This
+//!   also re-bases the host thread's chunk digests on that cut.
+//! * **Phase B (quiesced):** cut again at the step barrier — now a
+//!   *delta* carrying only the chunks dirtied during the phase-A
+//!   transfer — ask the destination which sequences the clone already
+//!   holds (`GET /coordinators/:id/checkpoints`), and ship only the
+//!   cuts it is missing: normally just the delta.  Downtime covers
+//!   O(dirty) bytes instead of O(state).
+//!
+//! Every transfer consults the destination's held set, so when the
+//! destination already holds checkpoints for the cloned ASR lineage
+//! the migrate cut moves only the delta images — the ROADMAP's
+//! WAN-friendly incremental transfer.  Dense workloads self-heal: the
+//! phase-B cut falls back to a full image and the flow degrades to the
+//! classic shape (plus the pre-copied base that simply goes unused for
+//! reconstruction but still restores the clone).
+//!
 //! Any failure before step 5 rolls the source back to RUNNING (it never
-//! stopped being viable), removes the checkpoint the attempt created
+//! stopped being viable), removes every checkpoint the attempt created
 //! (retries must not accumulate image sets), and best-effort deletes
 //! the half-made clone — mirroring the sim driver's `migrate_to` =
 //! clone + terminate-source semantics.
 
 use crate::coordinator::service::{CacsService, MigrateStartError, MigrationTicket};
+use crate::coordinator::types::CkptRecord;
 use crate::dckpt::service as ckptsvc;
 use crate::storage::ObjectStore;
 use crate::util::http::Client;
@@ -38,6 +63,7 @@ use crate::util::ids::AppId;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use anyhow::{Context, Result};
+use std::collections::BTreeSet;
 use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -55,7 +81,7 @@ fn transfer_pool() -> &'static ThreadPool {
 }
 
 /// What one completed migration did (the REST layer returns this as the
-/// 200 body; the Fig-5 bench aggregates it).
+/// 200 body; the Fig-5 and delta benches aggregate it).
 #[derive(Debug, Clone)]
 pub struct MigrationReport {
     /// Source coordinator id.
@@ -64,16 +90,27 @@ pub struct MigrationReport {
     pub dst_id: String,
     /// Destination base address the images went to.
     pub dst_base: String,
-    /// Checkpoint sequence the migration travelled on.
+    /// Checkpoint sequence the clone restarted from (the final cut).
     pub seq: u64,
     /// Iteration at the consistent cut (the clone resumes at ≥ this).
     pub iteration: u64,
-    /// Per-proc image bytes streamed.
+    /// Per-proc image bytes streamed for the final cut.
     pub per_proc_bytes: Vec<u64>,
-    /// Total bytes streamed to the destination.
+    /// Total bytes streamed to the destination (pre-copy included).
     pub bytes_moved: u64,
     /// Wall-clock duration of the whole cycle in seconds.
     pub duration_s: f64,
+    /// Whether the pre-copy phase ran.
+    pub precopy: bool,
+    /// Bytes streamed while the app was still running (phase A).
+    pub precopy_bytes: u64,
+    /// Bytes streamed while the app was quiesced — the transfer term of
+    /// the downtime.  Without pre-copy this equals `bytes_moved`.
+    pub downtime_bytes: u64,
+    /// Wall-clock seconds from quiesce to the clone confirmed RUNNING.
+    pub downtime_s: f64,
+    /// "full" or "delta" — what the final (quiesced) cut was.
+    pub final_kind: &'static str,
 }
 
 impl MigrationReport {
@@ -91,6 +128,11 @@ impl MigrationReport {
             ),
             ("bytes_moved", self.bytes_moved.into()),
             ("duration_s", self.duration_s.into()),
+            ("precopy", self.precopy.into()),
+            ("precopy_bytes", self.precopy_bytes.into()),
+            ("downtime_bytes", self.downtime_bytes.into()),
+            ("downtime_s", self.downtime_s.into()),
+            ("final_kind", self.final_kind.into()),
         ])
     }
 }
@@ -123,12 +165,14 @@ impl std::error::Error for MigrateError {}
 
 /// Run one full migration of `id` to the CACS at `dst_base`
 /// ("host:port"; an `http://` prefix and trailing slashes are
-/// tolerated).  Blocking; returns once the clone runs and the source is
-/// terminated, or after rolling back.
+/// tolerated).  `precopy` enables the two-phase delta-aware flow.
+/// Blocking; returns once the clone runs and the source is terminated,
+/// or after rolling back.
 pub fn migrate(
     svc: &Arc<CacsService>,
     id: AppId,
     dst_base: &str,
+    precopy: bool,
 ) -> Result<MigrationReport, MigrateError> {
     let dst_base = dst_base
         .trim_start_matches("http://")
@@ -142,7 +186,13 @@ pub fn migrate(
         MigrateStartError::UnknownCoordinator => MigrateError::UnknownCoordinator,
         other => MigrateError::Conflict(other.to_string()),
     })?;
-    match run(svc, id, &ticket, &dst_base) {
+    // every checkpoint seq this attempt cuts — registered *before* the
+    // cut so even a half-written image set is cleaned (newest-first,
+    // which also resets the host thread's delta digests via the
+    // latest-cut rule) — and the clone once it exists
+    let mut created: Vec<u64> = Vec::new();
+    let mut clone_id: Option<String> = None;
+    match run(svc, id, &ticket, &dst_base, precopy, &mut created, &mut clone_id) {
         Ok(mut report) => {
             // step 5: the clone runs — terminate the source
             let migrated_to = format!("{dst_base}/coordinators/{}", report.dst_id);
@@ -155,10 +205,26 @@ pub fn migrate(
             Ok(report)
         }
         Err(e) => {
-            // drop the checkpoint this attempt created (record + full
-            // image set) before rolling back — retries against a dead
-            // destination must not accumulate image sets in the store
-            let _ = svc.delete_checkpoint(id, ticket.seq);
+            // best-effort teardown of the half-made clone
+            if let Some(d) = &clone_id {
+                delete_clone(&Client::new(&dst_base), d);
+            }
+            // drop every checkpoint this attempt created (records +
+            // image sets, newest first) before rolling back — retries
+            // against a dead destination must not accumulate image sets
+            let attempted_cuts = !created.is_empty();
+            for seq in created.into_iter().rev() {
+                let _ = svc.delete_checkpoint(id, seq);
+            }
+            // and drop the host thread's delta digests unconditionally:
+            // a cut whose reply timed out may have committed the
+            // tracker even though no record exists (so the record-based
+            // latest-cut reset in delete_checkpoint cannot fire) — the
+            // next cut must re-root rather than chain into the images
+            // this rollback just purged
+            if attempted_cuts {
+                ticket.handle.reset_delta();
+            }
             svc.abort_migration(id);
             Err(MigrateError::Failed(e))
         }
@@ -166,24 +232,109 @@ pub fn migrate(
 }
 
 /// Steps 1–4; on any error the caller rolls the source back to RUNNING
-/// and removes the checkpoint this attempt created.
+/// and removes the checkpoints this attempt created (`created`).
 fn run(
     svc: &Arc<CacsService>,
     id: AppId,
     ticket: &MigrationTicket,
     dst_base: &str,
+    precopy: bool,
+    created: &mut Vec<u64>,
+    clone_slot: &mut Option<String>,
 ) -> Result<MigrationReport> {
-    // 1. quiesce at a step barrier, then checkpoint at that exact cut
-    //    (pause + checkpoint share the host thread's FIFO queue)
+    let client = Client::new(dst_base);
+    let mut precopy_bytes = 0u64;
+
+    // --- phase A (pre-copy, optional): full cut + transfer while the
+    //     app keeps running; also re-bases the delta digests so the
+    //     phase-B cut is a delta against exactly this state
+    if precopy {
+        // register the attempt before the cut: a checkpoint that fails
+        // midway may already have sealed some proc images into the
+        // store, and the caller's cleanup must remove those too
+        created.push(ticket.seq);
+        let report = ticket
+            .handle
+            .checkpoint(ticket.seq, ticket.with_overhead)
+            .context("pre-copy checkpoint")?;
+        let ck = svc.record_migration_ckpt(id, &report)?;
+        let clone_id = submit_clone(id, ticket, &client, dst_base)?;
+        *clone_slot = Some(clone_id.clone());
+        let (sent, _) = transfer_missing(svc, id, &client, &clone_id, &[ck])?;
+        precopy_bytes = sent;
+    }
+
+    // --- step 1 (phase B): quiesce at a step barrier, then checkpoint
+    //     at that exact cut (pause + checkpoint share the host
+    //     thread's FIFO queue).  With pre-copy this is a delta cut —
+    //     only the chunks dirtied during the phase-A transfer.
+    let t_down = Instant::now();
     ticket.handle.quiesce().context("quiesce source app")?;
+    let final_seq = if precopy {
+        svc.reserve_migration_seq(id)
+            .context("reserve final migration seq")?
+    } else {
+        ticket.seq
+    };
+    // as above: the attempt goes on the cleanup list before the cut so
+    // a partial image set from a failed pipeline is removed on rollback
+    if !created.contains(&final_seq) {
+        created.push(final_seq);
+    }
     let report = ticket
         .handle
-        .checkpoint(ticket.seq, ticket.with_overhead)
+        .checkpoint_auto(final_seq, ticket.with_overhead)
         .context("checkpoint source app")?;
+    let final_kind = report.kind();
     let ck = svc.record_migration_ckpt(id, &report)?;
 
-    // 2. clone the ASR on the destination, stamped with provenance
-    let client = Client::new(dst_base);
+    // --- step 2: clone the ASR on the destination (already done when
+    //     pre-copy ran), stamped with provenance
+    let dst_id = match clone_slot {
+        Some(d) => d.clone(),
+        None => {
+            let d = submit_clone(id, ticket, &client, dst_base)?;
+            *clone_slot = Some(d.clone());
+            d
+        }
+    };
+
+    // --- step 3: ship the chain of the final cut, minus whatever the
+    //     destination already holds for this lineage (after pre-copy:
+    //     everything but the delta)
+    let chain = svc.ckpt_chain(id, ck.seq)?;
+    let (downtime_bytes, per_proc) = transfer_missing(svc, id, &client, &dst_id, &chain)?;
+
+    // --- step 4: restart the clone from the uploaded cut and poll it
+    //     to RUNNING at ≥ the cut iteration
+    restart_and_await(&client, &dst_id, ck.seq, ck.iteration)?;
+    let downtime_s = t_down.elapsed().as_secs_f64();
+
+    Ok(MigrationReport {
+        src_id: id.to_string(),
+        dst_id,
+        dst_base: dst_base.to_string(),
+        seq: ck.seq,
+        iteration: ck.iteration,
+        bytes_moved: precopy_bytes + downtime_bytes,
+        per_proc_bytes: per_proc,
+        duration_s: 0.0, // stamped by the caller
+        precopy,
+        precopy_bytes,
+        downtime_bytes,
+        downtime_s,
+        final_kind,
+    })
+}
+
+/// Submit the clone ASR (stamped `cloned_from`) to the destination and
+/// return the clone's id.
+fn submit_clone(
+    id: AppId,
+    ticket: &MigrationTicket,
+    client: &Client,
+    dst_base: &str,
+) -> Result<String> {
     let mut asr_json = ticket.asr.to_json();
     asr_json.set("cloned_from", id.to_string().into());
     let created = client
@@ -195,94 +346,128 @@ fn run(
         created.status,
         String::from_utf8_lossy(&created.body)
     );
-    let dst_id = created
+    created
         .json()
         .ok()
         .and_then(|j| j.get("id").as_str().map(str::to_string))
-        .context("destination returned no clone id")?;
+        .context("destination returned no clone id")
+}
 
-    // 3. stream every per-proc image, fanned out on the transfer pool:
-    //    store → chunked socket → destination put_writer, no
-    //    whole-image buffer at any stage
-    let n_procs = ck.per_proc_bytes.len();
-    let result = {
-        let svc = svc.clone();
-        let src_app = id.to_string();
-        let dst_base = dst_base.to_string();
-        let dst_id = dst_id.clone();
-        let seq = ck.seq;
-        let mut outcomes = transfer_pool().map(
-            (0..n_procs).collect::<Vec<_>>(),
-            move |proc| {
-                let client = Client::new(&dst_base);
-                let r = transfer_image(
-                    svc.store().as_ref(),
-                    &src_app,
-                    &client,
-                    &dst_id,
-                    seq,
-                    proc,
-                );
-                (proc, r)
-            },
-        );
-        outcomes.sort_by_key(|(proc, _)| *proc);
-        outcomes
-    };
+/// Checkpoint sequences the destination clone already holds (the
+/// "synced seq" set of the cloned lineage).
+fn held_seqs(client: &Client, dst_id: &str) -> Result<BTreeSet<u64>> {
+    let resp = client
+        .get(&format!("/coordinators/{dst_id}/checkpoints"))
+        .context("query destination checkpoints")?;
     anyhow::ensure!(
-        result.len() == n_procs,
-        "image transfer worker lost ({}/{n_procs} finished)",
-        result.len()
+        resp.status == 200,
+        "destination refused checkpoint listing: {}",
+        resp.status
     );
-    let mut per_proc = Vec::with_capacity(n_procs);
-    for (proc, outcome) in result {
-        match outcome {
-            Ok(n) => per_proc.push(n),
-            Err(e) => {
-                delete_clone(&client, &dst_id);
-                return Err(e.context(format!("transfer image for proc {proc}")));
+    let j = resp.json().context("destination checkpoint listing")?;
+    Ok(j.as_arr()
+        .map(|arr| arr.iter().filter_map(|c| c.get("seq").as_u64()).collect())
+        .unwrap_or_default())
+}
+
+/// Stream every cut in `chain` (oldest first) that the destination does
+/// not already hold, per-proc transfers fanned out on the transfer
+/// pool.  Returns `(total bytes streamed across all shipped cuts,
+/// per-proc bytes of the *final* cut)` — a chain transfer moves base
+/// cuts too, and the report must count them.
+fn transfer_missing(
+    svc: &Arc<CacsService>,
+    id: AppId,
+    client: &Client,
+    dst_id: &str,
+    chain: &[CkptRecord],
+) -> Result<(u64, Vec<u64>)> {
+    let held = held_seqs(client, dst_id)?;
+    let final_procs = chain.last().map(|c| c.per_proc_bytes.len()).unwrap_or(0);
+    let mut total = 0u64;
+    let mut final_bytes: Vec<u64> = vec![0; final_procs];
+    for ck in chain {
+        if held.contains(&ck.seq) {
+            continue; // the destination already synced this cut
+        }
+        let n_procs = ck.per_proc_bytes.len();
+        let dst_base = client.base().to_string();
+        let result = {
+            let svc = svc.clone();
+            let src_app = id.to_string();
+            let dst_id = dst_id.to_string();
+            let seq = ck.seq;
+            let base_seq = ck.base_seq;
+            let mut outcomes = transfer_pool().map(
+                (0..n_procs).collect::<Vec<_>>(),
+                move |proc| {
+                    let client = Client::new(&dst_base);
+                    let r = transfer_image(
+                        svc.store().as_ref(),
+                        &src_app,
+                        &client,
+                        &dst_id,
+                        seq,
+                        base_seq,
+                        proc,
+                    );
+                    (proc, r)
+                },
+            );
+            outcomes.sort_by_key(|(proc, _)| *proc);
+            outcomes
+        };
+        anyhow::ensure!(
+            result.len() == n_procs,
+            "image transfer worker lost ({}/{n_procs} finished)",
+            result.len()
+        );
+        let mut per_proc = Vec::with_capacity(n_procs);
+        for (proc, outcome) in result {
+            match outcome {
+                Ok(n) => per_proc.push(n),
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "transfer image seq {} proc {proc}",
+                        ck.seq
+                    )))
+                }
             }
         }
+        total += per_proc.iter().sum::<u64>();
+        if ck.seq == chain.last().expect("chain non-empty").seq {
+            final_bytes = per_proc;
+        }
     }
-
-    // 4. restart the clone from the uploaded checkpoint and poll it to
-    //    RUNNING at ≥ the cut iteration
-    if let Err(e) = restart_and_await(&client, &dst_id, ck.seq, ck.iteration) {
-        delete_clone(&client, &dst_id);
-        return Err(e);
-    }
-
-    Ok(MigrationReport {
-        src_id: id.to_string(),
-        dst_id,
-        dst_base: dst_base.to_string(),
-        seq: ck.seq,
-        iteration: ck.iteration,
-        bytes_moved: per_proc.iter().sum(),
-        per_proc_bytes: per_proc,
-        duration_s: 0.0, // stamped by the caller
-    })
+    Ok((total, final_bytes))
 }
 
 /// Stream one image: `get_into` reads from the source store straight
 /// into the chunked request body; the destination's streaming upload
-/// route pipes it into its own store.
+/// route pipes it into its own store.  `base_seq` rides along as the
+/// `x-base-seq` header so delta images register as delta cuts on the
+/// receiving side.
 fn transfer_image(
     store: &dyn ObjectStore,
     src_app: &str,
     dst: &Client,
     dst_id: &str,
     seq: u64,
+    base_seq: Option<u64>,
     proc: usize,
 ) -> Result<u64> {
+    let mut headers = vec![
+        ("x-ckpt-seq", seq.to_string()),
+        ("x-proc-index", proc.to_string()),
+    ];
+    if let Some(base) = base_seq {
+        headers.push(("x-base-seq", base.to_string()));
+    }
     let (sent, resp) = dst
         .post_stream(
             &format!("/coordinators/{dst_id}/checkpoints"),
             "application/octet-stream",
-            &[
-                ("x-ckpt-seq", seq.to_string()),
-                ("x-proc-index", proc.to_string()),
-            ],
+            &headers,
             |w| {
                 ckptsvc::copy_image_to(store, src_app, seq, proc, w)
                     .map_err(|e| std::io::Error::other(e.to_string()))

@@ -6,9 +6,9 @@
 //! | POST   /coordinators                      | add a new coordinator (body = ASR) |
 //! | GET    /coordinators/:id                  | coordinator info |
 //! | DELETE /coordinators/:id                  | delete the coordinator (true empty 204) |
-//! | POST   /coordinators/:id/migrate          | migrate to another CACS (body = `{"dst": "host:port"}`, §5.3 / Fig 5); 409 while a checkpoint/restart/migration is in flight |
-//! | GET    /coordinators/:id/checkpoints      | list checkpoints |
-//! | POST   /coordinators/:id/checkpoints      | trigger a checkpoint, **or** upload an image (octet-stream body + `x-ckpt-seq`/`x-proc-index` headers; the body streams straight into the store) |
+//! | POST   /coordinators/:id/migrate          | migrate to another CACS (body = `{"dst": "host:port", "precopy": bool?}`, §5.3 / Fig 5); `precopy` streams a full cut while the app runs and ships only the dirty-chunk delta at the quiesced barrier; 409 while a checkpoint/restart/migration is in flight |
+//! | GET    /coordinators/:id/checkpoints      | list checkpoints — each cut says `kind` (full/delta), `base_seq` and `delta_bytes` |
+//! | POST   /coordinators/:id/checkpoints      | trigger a checkpoint, **or** upload an image (octet-stream body + `x-ckpt-seq`/`x-proc-index` headers, optional `x-base-seq` for delta images; the body streams straight into the store) |
 //! | GET    /coordinators/:id/checkpoints/:seq | checkpoint info; `?proc=i` downloads that image (400 for an unparsable `proc`, 404 for a missing image) |
 //! | POST   /coordinators/:id/checkpoints/:seq | restart from the checkpoint |
 //! | DELETE /coordinators/:id/checkpoints/:seq | delete the checkpoint |
@@ -110,7 +110,8 @@ fn route(svc: &Arc<CacsService>, req: &mut Request) -> Response {
                     "migrate needs a destination: {\"dst\": \"host:port\"}",
                 );
             };
-            match migrate::migrate(svc, id, dst) {
+            let precopy = body.get("precopy").as_bool().unwrap_or(false);
+            match migrate::migrate(svc, id, dst, precopy) {
                 Ok(report) => Response::ok_json(&report.to_json()),
                 Err(MigrateError::UnknownCoordinator) => Response::not_found(),
                 Err(MigrateError::Conflict(m)) => Response::conflict(&m),
@@ -143,9 +144,11 @@ fn route(svc: &Arc<CacsService>, req: &mut Request) -> Response {
                 let (Some(seq), Some(proc)) = (seq, proc) else {
                     return Response::bad_request("upload needs x-ckpt-seq and x-proc-index");
                 };
+                // delta chain metadata rides the x-base-seq header
+                let base_seq = req.headers.get("x-base-seq").and_then(|v| v.parse().ok());
                 // the body streams off the wire straight into the store
                 let mut body = req.body_reader();
-                return match svc.upload_image_stream(id, seq, proc, &mut body) {
+                return match svc.upload_image_stream(id, seq, proc, base_seq, &mut body) {
                     Ok(n) => Response::json(
                         201,
                         &Json::object([("uploaded", true.into()), ("bytes", n.into())]),

@@ -30,8 +30,9 @@ use crate::coordinator::db::Db;
 use crate::coordinator::healthplane::{heartbeat_pool, AppMonitor};
 use crate::coordinator::lifecycle::AppState;
 use crate::coordinator::types::{AppRecord, Asr, CkptRecord, HealthStatus, WorkloadSpec};
+use crate::dckpt::delta::DeltaPolicy;
 use crate::dckpt::service as ckptsvc;
-use crate::dckpt::DistributedApp;
+use crate::dckpt::{CounterApp, DistributedApp};
 use crate::monitor::{HealthProbe, HealthReport};
 use crate::runtime::Engine;
 use crate::storage::ObjectStore;
@@ -41,6 +42,7 @@ use crate::workloads::{dmtcp1::Dmtcp1App, lu, ns3};
 use anyhow::{Context, Result};
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::{Arc, Mutex, Weak};
@@ -66,6 +68,13 @@ pub struct ServiceConfig {
     /// Broadcast-tree arity (2 per the paper; wider = flatter tree,
     /// fewer hops, more fan-out per daemon).  Values < 2 are clamped.
     pub heartbeat_arity: usize,
+    /// Dirty-chunk delta engine knobs (chunk size, dirty-ratio ceiling,
+    /// chain-length bound) threaded into every app's host thread.
+    pub delta: DeltaPolicy,
+    /// Retention for periodic cuts: keep the chains rooted at the last
+    /// `ckpt_keep` full images, prune everything older after each
+    /// successful periodic checkpoint.  0 disables pruning.
+    pub ckpt_keep: usize,
     /// Test seam: sleep this long in the off-lock spawn phase of
     /// submit, proving the service lock is not held across provisioning.
     #[cfg(test)]
@@ -82,6 +91,8 @@ impl Default for ServiceConfig {
             auto_recover: true,
             heartbeat_hop: Duration::from_millis(75),
             heartbeat_arity: 2,
+            delta: DeltaPolicy::default(),
+            ckpt_keep: 2,
             #[cfg(test)]
             submit_spawn_delay: Duration::ZERO,
         }
@@ -214,11 +225,12 @@ impl CacsService {
         // so one slow thread creation stalled every other REST call.
         #[cfg(test)]
         std::thread::sleep(self.cfg.submit_spawn_delay);
-        let handle = Arc::new(AppHandle::spawn(
+        let handle = Arc::new(AppHandle::spawn_with(
             &id.to_string(),
             factory,
             self.store.clone(),
             self.cfg.step_interval,
+            self.cfg.delta.clone(),
         ));
         let monitor = Arc::new(AppMonitor::start(
             n_vms,
@@ -237,6 +249,10 @@ impl CacsService {
         };
         rec.lifecycle.to(now, AppState::Ready);
         rec.lifecycle.to(self.now(), AppState::Running);
+        // §5.2 mode 2: arm the periodic-checkpoint clock
+        if let Some(period) = rec.asr.ckpt_period {
+            rec.periodic_due = Some(now + period);
+        }
         inner.handles.insert(id, handle);
         inner.monitors.insert(id, monitor);
         Ok(id)
@@ -272,8 +288,18 @@ impl CacsService {
         Ok(j)
     }
 
-    /// POST /coordinators/:id/checkpoints (§5.2 mode 1).
+    /// POST /coordinators/:id/checkpoints (§5.2 mode 1).  The cut runs
+    /// through the dirty-chunk delta engine: after a full first image,
+    /// steady-state cuts move only the chunks that changed (see
+    /// [`crate::dckpt::delta`]); the returned record says which kind
+    /// this cut was.
     pub fn checkpoint(&self, id: AppId) -> Result<CkptRecord> {
+        // reserve — but do NOT burn — the next sequence number: the
+        // increment commits only on success, so failed attempts leave
+        // no gaps in the seq space (delta chains are resolved by
+        // explicit base pointers, but contiguous seqs keep chains and
+        // retention legible).  The CHECKPOINTING lifecycle gate is what
+        // makes the un-incremented reservation race-free.
         let seq = {
             let mut inner = self.inner.lock().unwrap();
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
@@ -283,7 +309,6 @@ impl CacsService {
                 rec.lifecycle.state()
             );
             let seq = rec.next_ckpt_seq;
-            rec.next_ckpt_seq += 1;
             let now = self.now();
             rec.lifecycle.to(now, AppState::Checkpointing);
             seq
@@ -294,7 +319,7 @@ impl CacsService {
         // land the lifecycle in ERROR — the v1 `?` early-return left it
         // stuck in CHECKPOINTING
         let outcome = match self.handle(id) {
-            Some(handle) => handle.checkpoint(seq, self.cfg.with_runtime_overhead),
+            Some(handle) => handle.checkpoint_auto(seq, self.cfg.with_runtime_overhead),
             None => Err(anyhow::anyhow!("no app thread")),
         };
         let mut inner = self.inner.lock().unwrap();
@@ -309,6 +334,8 @@ impl CacsService {
         };
         match outcome {
             Ok(report) => {
+                // commit the sequence only now that the cut succeeded
+                rec.next_ckpt_seq = rec.next_ckpt_seq.max(seq + 1);
                 rec.lifecycle.to(now, AppState::Running);
                 let ck = CkptRecord {
                     id: CkptId(seq),
@@ -317,12 +344,25 @@ impl CacsService {
                     iteration: report.iteration,
                     total_bytes: report.total_bytes(),
                     per_proc_bytes: report.image_bytes.clone(),
+                    base_seq: report.base_seq,
+                    delta_bytes: report.delta_bytes,
                 };
                 rec.ckpts.push(ck.clone());
                 Ok(ck)
             }
             Err(e) => {
                 rec.lifecycle.to(now, AppState::Error);
+                drop(inner);
+                // the failed attempt may have left a partial image set
+                // at the reserved seq; a later cut will reuse the
+                // number, so clean up best-effort — and drop the host
+                // thread's digests in case the pipeline actually
+                // finished after our reply deadline (a chain must never
+                // point at images we just removed)
+                let _ = ckptsvc::delete_checkpoint(self.store.as_ref(), &id.to_string(), seq);
+                if let Some(h) = self.handle(id) {
+                    h.reset_delta();
+                }
                 Err(e)
             }
         }
@@ -333,6 +373,127 @@ impl CacsService {
         let inner = self.inner.lock().unwrap();
         let rec = inner.db.get(id).context("unknown coordinator")?;
         Ok(rec.ckpts.iter().map(|c| c.to_json()).collect())
+    }
+
+    /// One §5.2 mode-2 ticker round: cut a checkpoint for every RUNNING
+    /// app whose `ckpt_period` has elapsed, entirely without user POSTs.
+    /// Runs on the Monitoring Manager thread's cadence (and directly
+    /// from tests); returns the ids that were checkpointed.
+    ///
+    /// Each due app is rescheduled *before* the attempt, so a failing
+    /// app retries at its period, never in a hot loop; the cut itself
+    /// uses the same lifecycle gates and off-lock pipeline as a manual
+    /// checkpoint (a busy app — checkpointing, migrating, recovering —
+    /// is simply skipped until its next tick).  After a successful cut
+    /// the retention policy prunes chains superseded beyond
+    /// [`ServiceConfig::ckpt_keep`].
+    ///
+    /// Due cuts run serially within a round, so one slow cut delays the
+    /// others' ticks (their due times are already rescheduled, so
+    /// nothing piles up — ticks are skipped, not queued).  That bounds
+    /// concurrent image traffic to one periodic cut at a time; delta
+    /// cuts keep the common case cheap.  Fan out here if a deployment
+    /// ever needs independent periodic cadences under huge full cuts.
+    pub fn periodic_round(&self) -> Vec<AppId> {
+        let now = self.now();
+        let due: Vec<AppId> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner
+                .db
+                .iter_mut()
+                .filter(|rec| {
+                    rec.lifecycle.state() == AppState::Running
+                        && rec.asr.ckpt_period.is_some()
+                        && rec.periodic_due.map(|at| at <= now).unwrap_or(false)
+                })
+                .map(|rec| {
+                    // reschedule first: a failed cut must wait a period
+                    let period = rec.asr.ckpt_period.expect("filtered on Some");
+                    rec.periodic_due = Some(now + period);
+                    rec.id
+                })
+                .collect()
+        };
+        let mut cut = Vec::new();
+        for id in due {
+            match self.checkpoint(id) {
+                Ok(ck) => {
+                    log::info!(
+                        "{id}: periodic checkpoint seq {} ({}, {} bytes)",
+                        ck.seq,
+                        ck.kind(),
+                        ck.total_bytes
+                    );
+                    self.prune_checkpoints(id);
+                    cut.push(id);
+                }
+                // a lifecycle refusal (busy app) or pipeline failure:
+                // the next tick retries; pipeline failures also park
+                // the app in ERROR for the monitor, same as manual cuts
+                Err(e) => log::warn!("{id}: periodic checkpoint skipped: {e}"),
+            }
+        }
+        cut
+    }
+
+    /// Retention for periodic cuts: keep every cut belonging to the
+    /// chains rooted at the newest [`ServiceConfig::ckpt_keep`] full
+    /// images (plus any base a kept delta still points at), delete the
+    /// rest — store first, then record, reusing the torn-set-safe
+    /// ordering of [`Self::delete_checkpoint`].
+    fn prune_checkpoints(&self, id: AppId) {
+        let keep_chains = self.cfg.ckpt_keep;
+        if keep_chains == 0 {
+            return;
+        }
+        let doomed: Vec<u64> = {
+            let inner = self.inner.lock().unwrap();
+            let Some(rec) = inner.db.get(id) else { return };
+            let mut keep: BTreeSet<u64> = BTreeSet::new();
+            let mut fulls = 0usize;
+            for ck in rec.ckpts.iter().rev() {
+                keep.insert(ck.seq);
+                if ck.base_seq.is_none() {
+                    fulls += 1;
+                    if fulls >= keep_chains {
+                        break;
+                    }
+                }
+            }
+            if fulls < keep_chains {
+                return; // not enough chains yet to supersede anything
+            }
+            // transitive base closure: a kept delta must keep its base
+            // even when the base sits outside the newest-K window
+            loop {
+                let missing: Vec<u64> = rec
+                    .ckpts
+                    .iter()
+                    .filter(|ck| keep.contains(&ck.seq))
+                    .filter_map(|ck| ck.base_seq)
+                    .filter(|base| !keep.contains(base))
+                    .collect();
+                if missing.is_empty() {
+                    break;
+                }
+                keep.extend(missing);
+            }
+            rec.ckpts
+                .iter()
+                .map(|ck| ck.seq)
+                .filter(|seq| !keep.contains(seq))
+                .collect()
+        };
+        // newest-first: a doomed delta must go before the doomed base
+        // it chains to, or the base-of-a-chain guard in
+        // [`Self::delete_checkpoint`] would refuse the base
+        for seq in doomed.into_iter().rev() {
+            if let Err(e) = self.delete_checkpoint(id, seq) {
+                // a failed store delete keeps the record; the next
+                // periodic cut retries the prune
+                log::warn!("{id}: pruning checkpoint seq {seq} failed: {e}");
+            }
+        }
     }
 
     /// POST /coordinators/:id/checkpoints/:seq — restart (§5.3).
@@ -388,7 +549,18 @@ impl CacsService {
     pub fn delete_checkpoint(&self, id: AppId, seq: u64) -> Result<usize> {
         {
             let inner = self.inner.lock().unwrap();
-            anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
+            let rec = inner.db.get(id).context("unknown coordinator")?;
+            // a cut that later deltas chain to must not go away under
+            // them: the dependents would stay listed as restorable but
+            // resolve to a missing base (and the host tracker would
+            // keep extending the broken chain).  Delete the dependents
+            // first (newest-first), or the whole app.
+            if let Some(dep) = rec.ckpts.iter().find(|c| c.base_seq == Some(seq)) {
+                anyhow::bail!(
+                    "checkpoint {seq} is the base of delta checkpoint {}; delete the dependent cuts first",
+                    dep.seq
+                );
+            }
         }
         let result = ckptsvc::delete_checkpoint(self.store.as_ref(), &id.to_string(), seq);
         let intact = if result.is_ok() {
@@ -414,9 +586,25 @@ impl CacsService {
             }
         };
         if !intact {
-            let mut inner = self.inner.lock().unwrap();
-            if let Some(rec) = inner.db.get_mut(id) {
-                rec.ckpts.retain(|c| c.seq != seq);
+            let was_latest = {
+                let mut inner = self.inner.lock().unwrap();
+                match inner.db.get_mut(id) {
+                    Some(rec) => {
+                        let latest = rec.ckpts.iter().map(|c| c.seq).max();
+                        rec.ckpts.retain(|c| c.seq != seq);
+                        latest == Some(seq)
+                    }
+                    None => false,
+                }
+            };
+            // deleting the newest cut invalidates the host thread's
+            // delta digests (they describe exactly that cut): reset so
+            // the next cut re-roots the chain instead of emitting a
+            // delta whose base no longer exists
+            if was_latest {
+                if let Some(h) = self.handle(id) {
+                    h.reset_delta();
+                }
             }
         }
         result
@@ -450,7 +638,7 @@ impl CacsService {
     /// "n POST requests are sent to the corresponding checkpoints
     /// resource to upload a set of checkpoint images").
     pub fn upload_image(&self, id: AppId, seq: u64, proc: usize, data: &[u8]) -> Result<()> {
-        self.upload_image_stream(id, seq, proc, &mut &data[..]).map(|_| ())
+        self.upload_image_stream(id, seq, proc, None, &mut &data[..]).map(|_| ())
     }
 
     /// Streaming variant of [`upload_image`](Self::upload_image): the
@@ -458,11 +646,20 @@ impl CacsService {
     /// [`crate::storage::PutWriter`] — the REST layer feeds it the
     /// (chunk-decoded) request body, so an image is never materialized
     /// as one buffer on the receive side.  Returns the byte count.
+    ///
+    /// `base_seq` is the sender's chain metadata (the `x-base-seq`
+    /// upload header, cut-level).  The first wire bytes are sniffed for
+    /// the v2 delta version, so only images that really are deltas
+    /// count toward the record's `delta_bytes` (a mixed cut's
+    /// full-fallback proc images don't) and a delta cut registers as
+    /// one — the receiving CACS's `GET /checkpoints` stays honest
+    /// about what it holds.
     pub fn upload_image_stream(
         &self,
         id: AppId,
         seq: u64,
         proc: usize,
+        base_seq: Option<u64>,
         body: &mut dyn std::io::Read,
     ) -> Result<u64> {
         {
@@ -470,12 +667,28 @@ impl CacsService {
             anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
         }
         let key = ckptsvc::image_key(&id.to_string(), seq, proc);
-        // the transfer runs without the service lock
+        // the transfer runs without the service lock.  Peek the
+        // magic+version prefix as it flows by: it tells full from
+        // delta without buffering the image.
+        let mut head = [0u8; 6];
+        let mut got = 0usize;
+        while got < head.len() {
+            match body.read(&mut head[got..]) {
+                Ok(0) => break,
+                Ok(k) => got += k,
+                Err(e) => return Err(e).with_context(|| format!("store put {key}")),
+            }
+        }
+        let is_delta_img = got == head.len()
+            && &head[..4] == crate::dckpt::image::MAGIC
+            && u16::from_le_bytes([head[4], head[5]]) == crate::dckpt::image::VERSION_DELTA;
         let n = {
             let mut w = self
                 .store
                 .put_writer(&key)
                 .map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?;
+            w.write_all(&head[..got])
+                .with_context(|| format!("store put {key}"))?;
             std::io::copy(body, &mut w).with_context(|| format!("store put {key}"))?;
             w.finish().map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?
         };
@@ -484,6 +697,8 @@ impl CacsService {
         // `.unwrap()` here and panicked the REST worker).  The record
         // is removed before the DELETE's store purge, so when it is
         // gone we remove the just-written orphan ourselves.
+        let delta_img_bytes = if is_delta_img { n } else { 0 };
+        let img_base_seq = if is_delta_img { base_seq } else { None };
         let mut inner = self.inner.lock().unwrap();
         let now = self.now();
         let Some(rec) = inner.db.get_mut(id) else {
@@ -495,17 +710,31 @@ impl CacsService {
             while ck.per_proc_bytes.len() <= proc {
                 ck.per_proc_bytes.push(0);
             }
+            // count delta bytes on a proc's first upload only: a
+            // replacement upload can't double-count (we don't know the
+            // replaced image's kind, so its accounting stands)
+            if ck.per_proc_bytes[proc] == 0 {
+                ck.delta_bytes += delta_img_bytes;
+            }
             ck.per_proc_bytes[proc] = n;
             ck.total_bytes = ck.per_proc_bytes.iter().sum();
+            if img_base_seq.is_some() {
+                ck.base_seq = img_base_seq;
+            }
         } else {
+            let mut per_proc = vec![0u64; proc + 1];
+            per_proc[proc] = n;
             rec.ckpts.push(CkptRecord {
                 id: CkptId(seq),
                 seq,
                 taken_at: now,
                 iteration: 0,
                 total_bytes: n,
-                per_proc_bytes: vec![n],
+                per_proc_bytes: per_proc,
+                base_seq: img_base_seq,
+                delta_bytes: delta_img_bytes,
             });
+            rec.ckpts.sort_by_key(|c| c.seq);
             rec.next_ckpt_seq = rec.next_ckpt_seq.max(seq + 1);
         }
         Ok(n)
@@ -555,6 +784,26 @@ impl CacsService {
         })
     }
 
+    /// Reserve a further checkpoint sequence while the app is claimed
+    /// MIGRATING (the pre-copy orchestration cuts twice: once while the
+    /// app still runs, once at the quiesced barrier).  The MIGRATING
+    /// gate keeps user checkpoints out, so the increment cannot race.
+    pub(crate) fn reserve_migration_seq(&self, id: AppId) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let rec = inner
+            .db
+            .get_mut(id)
+            .context("coordinator deleted during migration")?;
+        anyhow::ensure!(
+            rec.lifecycle.state() == AppState::Migrating,
+            "cannot reserve a migration checkpoint in state {}",
+            rec.lifecycle.state()
+        );
+        let seq = rec.next_ckpt_seq;
+        rec.next_ckpt_seq += 1;
+        Ok(seq)
+    }
+
     /// Register the checkpoint the migration took (the MIGRATING state
     /// means no user checkpoint can race this sequence number).
     pub(crate) fn record_migration_ckpt(
@@ -575,9 +824,38 @@ impl CacsService {
             iteration: report.iteration,
             total_bytes: report.total_bytes(),
             per_proc_bytes: report.image_bytes.clone(),
+            base_seq: report.base_seq,
+            delta_bytes: report.delta_bytes,
         };
         rec.ckpts.push(ck.clone());
         Ok(ck)
+    }
+
+    /// The per-cut chain needed to restore checkpoint `seq`: walk the
+    /// recorded `base_seq` links back to the rooting full cut; returned
+    /// oldest-first (the transfer order).  Per-proc chains are subsets
+    /// of this cut-level chain (a proc that fell back to a full image
+    /// mid-chain simply stops walking earlier).
+    pub(crate) fn ckpt_chain(&self, id: AppId, seq: u64) -> Result<Vec<CkptRecord>> {
+        let inner = self.inner.lock().unwrap();
+        let rec = inner.db.get(id).context("unknown coordinator")?;
+        let mut chain = Vec::new();
+        let mut cur = Some(seq);
+        while let Some(s) = cur {
+            anyhow::ensure!(
+                chain.len() <= 64,
+                "checkpoint chain for seq {seq} exceeds 64 links (cycle?)"
+            );
+            let ck = rec
+                .ckpts
+                .iter()
+                .find(|c| c.seq == s)
+                .with_context(|| format!("chain for seq {seq}: missing base ckpt-{s}"))?;
+            chain.push(ck.clone());
+            cur = ck.base_seq;
+        }
+        chain.reverse();
+        Ok(chain)
     }
 
     /// A migration failed before the source was touched: roll the
@@ -974,11 +1252,12 @@ impl CacsService {
             rec.asr.clone()
         };
         let factory = build_factory(&asr, &self.cfg)?;
-        let handle = Arc::new(AppHandle::spawn(
+        let handle = Arc::new(AppHandle::spawn_with(
             &id.to_string(),
             factory,
             self.store.clone(),
             self.cfg.step_interval,
+            self.cfg.delta.clone(),
         ));
         let (old, monitor) = {
             let mut inner = self.inner.lock().unwrap();
@@ -1018,8 +1297,15 @@ impl CacsService {
         Ok(())
     }
 
-    /// Start the Monitoring Manager thread.  Holds only a weak
-    /// reference; stops when the service drops or the period is None.
+    /// Start the Monitoring Manager thread, plus a §5.2 mode-2 ticker
+    /// thread driving [`Self::periodic_round`] at the same cadence, so
+    /// apps whose ASR carries `ckpt_period` self-checkpoint with zero
+    /// manual POSTs (periods shorter than `monitor_period` tick at the
+    /// monitor's cadence).  The ticker is a separate thread: a periodic
+    /// cut may stream hundreds of MB, and failure detection must keep
+    /// its PR 4 latency bounds while that happens.  Both hold only weak
+    /// references; they stop when the service drops (or never start
+    /// when the period is None).
     pub fn start_monitor(self: &Arc<Self>) {
         let Some(period) = self.cfg.monitor_period else { return };
         let weak: Weak<CacsService> = Arc::downgrade(self);
@@ -1035,6 +1321,19 @@ impl CacsService {
                 }
             })
             .expect("spawn monitor thread");
+        let weak: Weak<CacsService> = Arc::downgrade(self);
+        std::thread::Builder::new()
+            .name("cacs-ckpt-ticker".into())
+            .spawn(move || loop {
+                std::thread::sleep(period);
+                match weak.upgrade() {
+                    Some(svc) => {
+                        let _ = svc.periodic_round();
+                    }
+                    None => return,
+                }
+            })
+            .expect("spawn checkpoint ticker thread");
     }
 }
 
@@ -1050,6 +1349,12 @@ fn validate_asr(asr: &Asr) -> Result<()> {
         WorkloadSpec::Ns3 { total_bytes } => {
             anyhow::ensure!(*total_bytes >= 1, "ns3: total_bytes must be >= 1");
             anyhow::ensure!(asr.n_vms == 1, "ns3 is single-process");
+        }
+        WorkloadSpec::Counter { blob_bytes } => {
+            anyhow::ensure!(
+                *blob_bytes <= 1 << 30,
+                "counter: blob_bytes must be <= 1 GiB"
+            );
         }
     }
     Ok(())
@@ -1105,6 +1410,9 @@ fn build_factory(asr: &Asr, cfg: &ServiceConfig) -> Result<AppFactory> {
                     ..ns3::Ns3Config::default()
                 };
                 Ok(Box::new(ns3::Ns3App::new(cfg)))
+            }
+            WorkloadSpec::Counter { blob_bytes } => {
+                Ok(Box::new(CounterApp::new(n_vms, blob_bytes)))
             }
         }
     }))
@@ -1642,6 +1950,185 @@ mod tests {
         );
         assert!(svc.force_state(id, AppState::Running));
         assert!(svc.health_status(id).unwrap().live);
+    }
+
+    #[test]
+    fn failed_checkpoint_does_not_burn_a_seq() {
+        // v1 incremented next_ckpt_seq before the pipeline ran, so a
+        // failed attempt left a permanent gap; delta chains make the
+        // seq space worth keeping contiguous
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let c1 = svc.checkpoint(id).unwrap();
+        assert_eq!(c1.seq, 1);
+        svc.kill_vm(id).unwrap();
+        assert!(svc.checkpoint(id).is_err());
+        assert_eq!(svc.state(id), Some(AppState::Error));
+        let recovered = svc.monitor_round();
+        assert_eq!(recovered, vec![id]);
+        let c2 = svc.checkpoint(id).unwrap();
+        assert_eq!(c2.seq, 2, "failed attempt must not leave a seq gap");
+    }
+
+    #[test]
+    fn service_checkpoints_go_delta_after_the_first_cut() {
+        let svc = svc_with(|cfg| ServiceConfig {
+            delta: DeltaPolicy { chunk_size: 64, ..DeltaPolicy::default() },
+            ..cfg
+        });
+        let id = svc
+            .submit(Asr::new("c", WorkloadSpec::Counter { blob_bytes: 8192 }, 2))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let c1 = svc.checkpoint(id).unwrap();
+        assert_eq!(c1.kind(), "full");
+        wait_progress(&svc, id, c1.iteration + 2);
+        let c2 = svc.checkpoint(id).unwrap();
+        assert_eq!(c2.kind(), "delta");
+        assert_eq!(c2.base_seq, Some(c1.seq));
+        assert!(c2.delta_bytes > 0);
+        assert!(
+            c2.total_bytes < c1.total_bytes / 4,
+            "delta cut {} vs full {}",
+            c2.total_bytes,
+            c1.total_bytes
+        );
+        // restart resolves the chain (and re-roots the next cut)
+        let used = svc.restart(id, None).unwrap();
+        assert_eq!(used, c2.seq);
+        let c3 = svc.checkpoint(id).unwrap();
+        assert_eq!(c3.kind(), "full", "post-restore cut must re-root the chain");
+    }
+
+    #[test]
+    fn periodic_round_cuts_and_prunes_without_manual_posts() {
+        let svc = svc_with(|cfg| ServiceConfig {
+            delta: DeltaPolicy {
+                chunk_size: 64,
+                max_chain: 2,
+                ..DeltaPolicy::default()
+            },
+            ckpt_keep: 2,
+            ..cfg
+        });
+        // zero manual checkpoint calls from here on
+        let id = svc
+            .submit(
+                Asr::new("p", WorkloadSpec::Counter { blob_bytes: 4096 }, 1)
+                    .with_period(0.005),
+            )
+            .unwrap();
+        wait_progress(&svc, id, 1);
+        let mut pruned_and_plenty = false;
+        for _ in 0..400 {
+            svc.periodic_round();
+            let cks = svc.checkpoints(id).unwrap();
+            let min_seq = cks.iter().filter_map(|c| c.get("seq").as_u64()).min();
+            if cks.len() >= 4 && min_seq.map(|s| s > 1).unwrap_or(false) {
+                pruned_and_plenty = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        assert!(pruned_and_plenty, "periodic cuts never accumulated + pruned");
+        let cks = svc.checkpoints(id).unwrap();
+        // both kinds appear, and every delta names its base
+        let kinds: Vec<&str> =
+            cks.iter().filter_map(|c| c.get("kind").as_str()).collect();
+        assert!(kinds.contains(&"full") && kinds.contains(&"delta"), "{kinds:?}");
+        for c in &cks {
+            if c.get("kind").as_str() == Some("delta") {
+                assert!(c.get("base_seq").as_u64().is_some());
+            }
+        }
+        // pruned images are really gone from the store
+        assert!(svc
+            .store()
+            .list(&format!("{id}/ckpt-1/"))
+            .unwrap()
+            .is_empty());
+        // the surviving chain restores
+        svc.restart(id, None).unwrap();
+        assert_eq!(svc.state(id), Some(AppState::Running));
+    }
+
+    #[test]
+    fn periodic_round_skips_busy_and_non_periodic_apps() {
+        let svc = svc();
+        // no period → never ticked
+        let plain = svc
+            .submit(Asr::new("plain", WorkloadSpec::Dmtcp1 { n: 32 }, 1))
+            .unwrap();
+        // periodic app held busy in CHECKPOINTING is skipped, not errored
+        let busy = svc
+            .submit(Asr::new("busy", WorkloadSpec::Dmtcp1 { n: 32 }, 1).with_period(0.001))
+            .unwrap();
+        wait_progress(&svc, busy, 1);
+        assert!(svc.force_state(busy, AppState::Checkpointing));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(svc.periodic_round().is_empty());
+        assert!(svc.checkpoints(plain).unwrap().is_empty());
+        assert!(svc.checkpoints(busy).unwrap().is_empty());
+        assert_eq!(svc.state(busy), Some(AppState::Checkpointing));
+        // released, the next due tick cuts
+        assert!(svc.force_state(busy, AppState::Running));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(svc.periodic_round(), vec![busy]);
+        assert_eq!(svc.checkpoints(busy).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn deleting_the_base_of_a_chain_is_refused_until_dependents_go() {
+        // a delta cut advertised as restorable must stay restorable:
+        // its base cannot be deleted out from under it
+        let svc = svc_with(|cfg| ServiceConfig {
+            delta: DeltaPolicy { chunk_size: 64, ..DeltaPolicy::default() },
+            ..cfg
+        });
+        let id = svc
+            .submit(Asr::new("c", WorkloadSpec::Counter { blob_bytes: 4096 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let c1 = svc.checkpoint(id).unwrap();
+        wait_progress(&svc, id, c1.iteration + 1);
+        let c2 = svc.checkpoint(id).unwrap();
+        assert_eq!(c2.base_seq, Some(c1.seq));
+        let err = svc.delete_checkpoint(id, c1.seq).unwrap_err().to_string();
+        assert!(err.contains("base of delta"), "{err}");
+        // the chain is intact: both cuts listed, the delta restores
+        assert_eq!(svc.checkpoints(id).unwrap().len(), 2);
+        svc.restart(id, Some(c2.seq)).unwrap();
+        // dependents-first order works
+        svc.delete_checkpoint(id, c2.seq).unwrap();
+        svc.delete_checkpoint(id, c1.seq).unwrap();
+        assert!(svc.checkpoints(id).unwrap().is_empty());
+    }
+
+    #[test]
+    fn deleting_the_latest_checkpoint_re_roots_the_chain() {
+        let svc = svc_with(|cfg| ServiceConfig {
+            delta: DeltaPolicy { chunk_size: 64, ..DeltaPolicy::default() },
+            ..cfg
+        });
+        let id = svc
+            .submit(Asr::new("c", WorkloadSpec::Counter { blob_bytes: 4096 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let c1 = svc.checkpoint(id).unwrap();
+        wait_progress(&svc, id, c1.iteration + 1);
+        let c2 = svc.checkpoint(id).unwrap();
+        assert_eq!(c2.kind(), "delta");
+        // delete the newest cut: the host tracker's digests describe
+        // it, so the next cut must re-root instead of chaining to a
+        // deleted base
+        svc.delete_checkpoint(id, c2.seq).unwrap();
+        wait_progress(&svc, id, c2.iteration + 1);
+        let c3 = svc.checkpoint(id).unwrap();
+        assert_eq!(c3.kind(), "full", "chain must re-root after the base was deleted");
+        svc.restart(id, None).unwrap();
     }
 
     #[test]

@@ -469,6 +469,7 @@ fn default_data_bytes(asr: &Asr) -> f64 {
         WorkloadSpec::Lu { nz, ny, nx } => 8.0 * (nz * ny * nx) as f64 / asr.n_vms as f64,
         WorkloadSpec::Dmtcp1 { n } => 4.0 * *n as f64,
         WorkloadSpec::Ns3 { .. } => 8e6,
+        WorkloadSpec::Counter { blob_bytes } => (16 + blob_bytes) as f64,
     }
 }
 
@@ -814,6 +815,8 @@ fn finish_upload(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, seq: u64
         iteration: 0,
         total_bytes: (image_bytes * n as f64) as u64,
         per_proc_bytes: vec![image_bytes as u64; n],
+        base_seq: None,
+        delta_bytes: 0,
     });
     if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.ckpt_timings.last_mut()) {
         t.uploaded = now;

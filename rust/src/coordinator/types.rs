@@ -19,6 +19,11 @@ pub enum WorkloadSpec {
     Dmtcp1 { n: usize },
     /// NS-3-like TCP transfer (bytes to move).
     Ns3 { total_bytes: u64 },
+    /// Sparse-write counter workload ([`crate::dckpt::CounterApp`]):
+    /// each proc mutates 16 bytes per step next to a `blob_bytes`
+    /// constant region — the delta-friendly shape (hot counters over a
+    /// cold heap) the incremental checkpoint engine exists for.
+    Counter { blob_bytes: usize },
 }
 
 impl WorkloadSpec {
@@ -27,6 +32,7 @@ impl WorkloadSpec {
             WorkloadSpec::Lu { .. } => "lu",
             WorkloadSpec::Dmtcp1 { .. } => "dmtcp1",
             WorkloadSpec::Ns3 { .. } => "ns3",
+            WorkloadSpec::Counter { .. } => "counter",
         }
     }
 
@@ -45,6 +51,10 @@ impl WorkloadSpec {
                 ("kind", "ns3".into()),
                 ("total_bytes", (*total_bytes).into()),
             ]),
+            WorkloadSpec::Counter { blob_bytes } => Json::object([
+                ("kind", "counter".into()),
+                ("blob_bytes", (*blob_bytes).into()),
+            ]),
         }
     }
 
@@ -60,6 +70,9 @@ impl WorkloadSpec {
             }),
             "ns3" => Ok(WorkloadSpec::Ns3 {
                 total_bytes: j.get("total_bytes").as_u64().unwrap_or(2_000_000_000),
+            }),
+            "counter" => Ok(WorkloadSpec::Counter {
+                blob_bytes: j.get("blob_bytes").as_usize().unwrap_or(1 << 20),
             }),
             other => anyhow::bail!("unknown workload kind {other:?}"),
         }
@@ -143,11 +156,25 @@ pub struct CkptRecord {
     pub iteration: u64,
     pub total_bytes: u64,
     pub per_proc_bytes: Vec<u64>,
+    /// `Some(base)` when this cut emitted delta images chained to
+    /// checkpoint `base`; `None` = an all-full cut that roots a chain.
+    pub base_seq: Option<u64>,
+    /// Wire bytes of the delta images in this cut (0 for full cuts).
+    pub delta_bytes: u64,
 }
 
 impl CkptRecord {
+    /// "full" or "delta" — what the REST surface reports per cut.
+    pub fn kind(&self) -> &'static str {
+        if self.base_seq.is_some() {
+            "delta"
+        } else {
+            "full"
+        }
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::object([
+        let mut j = Json::object([
             ("id", self.id.to_string().into()),
             ("seq", self.seq.into()),
             ("taken_at", self.taken_at.into()),
@@ -157,7 +184,13 @@ impl CkptRecord {
                 "per_proc_bytes",
                 Json::Arr(self.per_proc_bytes.iter().map(|&b| b.into()).collect()),
             ),
-        ])
+            ("kind", self.kind().into()),
+            ("delta_bytes", self.delta_bytes.into()),
+        ]);
+        if let Some(base) = self.base_seq {
+            j.set("base_seq", base.into());
+        }
+        j
     }
 }
 
@@ -220,6 +253,10 @@ pub struct AppRecord {
     /// §5.3 bookkeeping: where this app migrated to — set on the source
     /// tombstone when a cross-CACS migration completes.
     pub migrated_to: Option<String>,
+    /// §5.2 mode 2: service-clock time of the next periodic cut (set
+    /// when the ASR carries `ckpt_period`; rescheduled each attempt by
+    /// the real-mode ticker).
+    pub periodic_due: Option<f64>,
 }
 
 impl AppRecord {
@@ -235,6 +272,7 @@ impl AppRecord {
             cloud_idx,
             cloned_from,
             migrated_to: None,
+            periodic_due: None,
         }
     }
 
@@ -377,10 +415,49 @@ mod tests {
                 iteration: seq * 10,
                 total_bytes: 1000,
                 per_proc_bytes: vec![1000],
+                base_seq: None,
+                delta_bytes: 0,
             });
         }
         assert_eq!(rec.latest_ckpt().unwrap().seq, 3);
         assert_eq!(rec.ckpt_by_id(CkptId(2)).unwrap().iteration, 20);
         assert!(rec.ckpt_by_id(CkptId(9)).is_none());
+    }
+
+    #[test]
+    fn ckpt_record_json_distinguishes_full_from_delta() {
+        let full = CkptRecord {
+            id: CkptId(1),
+            seq: 1,
+            taken_at: 0.0,
+            iteration: 10,
+            total_bytes: 5000,
+            per_proc_bytes: vec![5000],
+            base_seq: None,
+            delta_bytes: 0,
+        };
+        let j = full.to_json();
+        assert_eq!(j.get("kind").as_str(), Some("full"));
+        assert!(j.get("base_seq").is_null());
+        assert_eq!(j.get("delta_bytes").as_u64(), Some(0));
+
+        let delta = CkptRecord { base_seq: Some(1), delta_bytes: 320, seq: 2, ..full };
+        let j = delta.to_json();
+        assert_eq!(j.get("kind").as_str(), Some("delta"));
+        assert_eq!(j.get("base_seq").as_u64(), Some(1));
+        assert_eq!(j.get("delta_bytes").as_u64(), Some(320));
+    }
+
+    #[test]
+    fn counter_workload_roundtrips() {
+        let asr = Asr::new("c", WorkloadSpec::Counter { blob_bytes: 4096 }, 2);
+        let back = Asr::from_json(&asr.to_json()).unwrap();
+        assert_eq!(back, asr);
+        assert_eq!(back.workload.kind(), "counter");
+        let j = crate::util::json::parse(r#"{"kind":"counter"}"#).unwrap();
+        assert_eq!(
+            WorkloadSpec::from_json(&j).unwrap(),
+            WorkloadSpec::Counter { blob_bytes: 1 << 20 }
+        );
     }
 }

@@ -1,0 +1,371 @@
+//! Dirty-chunk delta engine for incremental checkpoints.
+//!
+//! The steady-state cost of periodic checkpointing (§5.2 mode 2) is
+//! dominated by image size: every cut used to stream the *full* process
+//! state no matter how little changed since the previous cut.  This
+//! module turns that O(state) into O(dirty): the writer keeps one
+//! 64-bit digest per `chunk_size` slice of each process's serialized
+//! state, diffs the fresh payload against the previous cut's digests,
+//! and emits a v2 delta image ([`crate::dckpt::image::DeltaTable`])
+//! carrying only the dirty chunks.
+//!
+//! Self-healing: when the dirty ratio exceeds
+//! [`DeltaPolicy::max_dirty_ratio`] a full image is written instead
+//! (the delta would not pay for itself), and every
+//! [`DeltaPolicy::max_chain`] delta cuts a full image is forced so
+//! restore never replays an unbounded chain.  A restore (or a deleted
+//! base) resets the tracker, so the next cut re-roots the chain with a
+//! full image.
+
+use super::image::{ChunkRef, DeltaTable};
+use anyhow::{bail, Result};
+
+/// Default diff granularity (one digest per 64 KiB of state).
+pub const DEFAULT_CHUNK_SIZE: usize = 64 * 1024;
+/// Default dirty-ratio ceiling above which a full image is cheaper.
+pub const DEFAULT_MAX_DIRTY_RATIO: f64 = 0.5;
+/// Default chain-length bound (a full image is forced after this many
+/// consecutive delta cuts).
+pub const DEFAULT_MAX_CHAIN: u64 = 8;
+
+/// Knobs of the delta engine (`ServiceConfig::delta` in the real-mode
+/// service).
+#[derive(Debug, Clone)]
+pub struct DeltaPolicy {
+    /// Diff granularity in bytes.
+    pub chunk_size: usize,
+    /// Emit a delta only when `dirty_bytes / payload_len` is at or
+    /// under this; otherwise fall back to a full image.
+    pub max_dirty_ratio: f64,
+    /// Force a full image after this many consecutive delta cuts.
+    pub max_chain: u64,
+}
+
+impl Default for DeltaPolicy {
+    fn default() -> DeltaPolicy {
+        DeltaPolicy {
+            chunk_size: DEFAULT_CHUNK_SIZE,
+            max_dirty_ratio: DEFAULT_MAX_DIRTY_RATIO,
+            max_chain: DEFAULT_MAX_CHAIN,
+        }
+    }
+}
+
+/// 64-bit chunk digest (FNV-1a with a final avalanche), seeded with the
+/// chunk length so a truncated tail chunk never collides with its
+/// longer predecessor.  Speed-of-light is one pass over the bytes —
+/// cheap next to the CRC/serialize work the cut already does.
+pub fn chunk_digest(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325 ^ (data.len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // avalanche (splitmix64 finalizer) so single-byte differences flip
+    // high bits too
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^ (h >> 31)
+}
+
+/// Digest every `chunk_size` slice of `payload` (tail chunk may be
+/// short).  An empty payload has no chunks.
+pub fn digest_chunks(payload: &[u8], chunk_size: usize) -> Vec<u64> {
+    assert!(chunk_size > 0, "chunk_size must be positive");
+    payload.chunks(chunk_size).map(chunk_digest).collect()
+}
+
+/// Per-process digest state from the previous cut.
+#[derive(Debug, Clone)]
+pub struct ProcDigests {
+    /// Raw payload length the digests describe.
+    pub payload_len: u64,
+    /// One digest per chunk, in order.
+    pub digests: Vec<u64>,
+}
+
+/// Chunk indices whose fresh digests differ from `prev` (including
+/// every chunk beyond the previous payload's coverage).
+pub fn dirty_from_digests(prev: &ProcDigests, fresh: &[u64]) -> Vec<usize> {
+    fresh
+        .iter()
+        .enumerate()
+        .filter(|&(i, d)| prev.digests.get(i) != Some(d))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// [`dirty_from_digests`] over a raw payload (digests computed here).
+pub fn dirty_chunks(prev: &ProcDigests, payload: &[u8], chunk_size: usize) -> Vec<usize> {
+    dirty_from_digests(prev, &digest_chunks(payload, chunk_size))
+}
+
+/// Build the chunk table for `dirty` indices of `payload`; returns the
+/// table plus the delta payload size.
+pub fn build_table(
+    base_seq: u64,
+    base_len: u64,
+    payload: &[u8],
+    chunk_size: usize,
+    dirty: &[usize],
+) -> DeltaTable {
+    let mut chunks = Vec::with_capacity(dirty.len());
+    let mut offset = 0u64;
+    for &i in dirty {
+        let start = i * chunk_size;
+        let len = chunk_size.min(payload.len() - start) as u64;
+        chunks.push(ChunkRef { index: i as u64, offset, len });
+        offset += len;
+    }
+    DeltaTable {
+        base_seq,
+        base_len,
+        full_len: payload.len() as u64,
+        chunk_size: chunk_size as u64,
+        chunks,
+    }
+}
+
+/// Reconstruct a payload: start from `base`, resize to the table's
+/// `full_len`, then overlay every chunk from `delta_payload`.  `out` is
+/// a scratch buffer the caller reuses across procs/links.
+pub fn apply(
+    base: &[u8],
+    table: &DeltaTable,
+    delta_payload: &[u8],
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    if base.len() as u64 != table.base_len {
+        bail!(
+            "delta base length mismatch: have {}, table expects {}",
+            base.len(),
+            table.base_len
+        );
+    }
+    if table.payload_bytes() != delta_payload.len() as u64 {
+        bail!(
+            "delta payload length mismatch: have {}, chunk table covers {}",
+            delta_payload.len(),
+            table.payload_bytes()
+        );
+    }
+    let full_len = table.full_len as usize;
+    let chunk_size = table.chunk_size as usize;
+    if chunk_size == 0 {
+        bail!("delta chunk_size must be positive");
+    }
+    out.clear();
+    out.extend_from_slice(&base[..base.len().min(full_len)]);
+    out.resize(full_len, 0);
+    for c in &table.chunks {
+        let dst = (c.index as usize).checked_mul(chunk_size).unwrap_or(usize::MAX);
+        let (src, len) = (c.offset as usize, c.len as usize);
+        if dst.checked_add(len).map(|e| e > full_len).unwrap_or(true) {
+            bail!("delta chunk {} overruns payload ({dst}+{len} > {full_len})", c.index);
+        }
+        if src + len > delta_payload.len() {
+            bail!("delta chunk {} overruns delta payload", c.index);
+        }
+        if len > chunk_size || (len < chunk_size && dst + len != full_len) {
+            bail!("delta chunk {} has inconsistent length {len}", c.index);
+        }
+        out[dst..dst + len].copy_from_slice(&delta_payload[src..src + len]);
+    }
+    Ok(())
+}
+
+/// Per-application digest tracker, owned by whoever drives consecutive
+/// cuts (the real-mode app host thread).  `base_seq` is the sequence of
+/// the last successful cut — the base the next delta diffs against.
+#[derive(Debug)]
+pub struct Tracker {
+    /// Diff granularity the digests were computed at.
+    pub chunk_size: usize,
+    /// Last successful cut, if any (deltas chain to it).
+    pub base_seq: Option<u64>,
+    /// Consecutive cuts that emitted at least one delta image.
+    pub chain_len: u64,
+    /// Per-proc digests from the last successful cut.
+    pub procs: Vec<ProcDigests>,
+}
+
+impl Tracker {
+    pub fn new(chunk_size: usize) -> Tracker {
+        Tracker { chunk_size, base_seq: None, chain_len: 0, procs: vec![] }
+    }
+
+    /// Forget everything: the next cut is a full image that re-roots
+    /// the chain.  Called after a restore (the live state no longer
+    /// matches the digests) and when the base checkpoint is deleted.
+    pub fn reset(&mut self) {
+        self.base_seq = None;
+        self.chain_len = 0;
+        self.procs.clear();
+    }
+
+    /// Whether the next cut may emit deltas against `base_seq`.
+    pub fn delta_eligible(&self, nprocs: usize, policy: &DeltaPolicy) -> bool {
+        self.base_seq.is_some()
+            && self.procs.len() == nprocs
+            && self.chunk_size == policy.chunk_size
+            && self.chain_len < policy.max_chain
+    }
+
+    /// Commit a successful cut: the fresh digests become the base for
+    /// the next diff.  `any_delta` says whether this cut emitted at
+    /// least one delta image (extends the chain) or was entirely full
+    /// (re-roots it).
+    pub fn commit(&mut self, seq: u64, procs: Vec<ProcDigests>, any_delta: bool) {
+        self.procs = procs;
+        self.base_seq = Some(seq);
+        self.chain_len = if any_delta { self.chain_len + 1 } else { 0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_differs_on_content_and_length() {
+        assert_ne!(chunk_digest(b"aaaa"), chunk_digest(b"aaab"));
+        assert_ne!(chunk_digest(b"aaaa"), chunk_digest(b"aaa"));
+        assert_eq!(chunk_digest(b"same"), chunk_digest(b"same"));
+        // empty chunk digests consistently
+        assert_eq!(chunk_digest(b""), chunk_digest(b""));
+    }
+
+    #[test]
+    fn dirty_chunks_finds_exactly_the_changes() {
+        let cs = 8;
+        let base: Vec<u8> = (0..64u8).collect();
+        let prev = ProcDigests {
+            payload_len: base.len() as u64,
+            digests: digest_chunks(&base, cs),
+        };
+        // unchanged payload: nothing dirty
+        assert!(dirty_chunks(&prev, &base, cs).is_empty());
+        // flip one byte in chunk 3
+        let mut dirty = base.clone();
+        dirty[3 * 8 + 2] ^= 0xFF;
+        assert_eq!(dirty_chunks(&prev, &dirty, cs), vec![3]);
+        // grow the payload: the tail chunks are dirty
+        let mut grown = base.clone();
+        grown.extend_from_slice(&[9u8; 20]);
+        let d = dirty_chunks(&prev, &grown, cs);
+        assert!(d.contains(&8) && d.contains(&9) && d.contains(&10), "{d:?}");
+        assert!(!d.contains(&0));
+    }
+
+    #[test]
+    fn build_and_apply_roundtrip() {
+        let cs = 8;
+        let base: Vec<u8> = (0..61u8).collect(); // ragged tail chunk
+        let mut new = base.clone();
+        new[10] = 0xEE; // chunk 1
+        new[60] = 0xDD; // tail chunk 7 (5 bytes)
+        let prev = ProcDigests {
+            payload_len: base.len() as u64,
+            digests: digest_chunks(&base, cs),
+        };
+        let dirty = dirty_chunks(&prev, &new, cs);
+        assert_eq!(dirty, vec![1, 7]);
+        let table = build_table(5, base.len() as u64, &new, cs, &dirty);
+        assert_eq!(table.payload_bytes(), 8 + 5);
+        let mut delta_payload = Vec::new();
+        for &i in &dirty {
+            let start = i * cs;
+            let end = (start + cs).min(new.len());
+            delta_payload.extend_from_slice(&new[start..end]);
+        }
+        let mut out = Vec::new();
+        apply(&base, &table, &delta_payload, &mut out).unwrap();
+        assert_eq!(out, new);
+    }
+
+    #[test]
+    fn apply_handles_growth_and_shrink() {
+        let cs = 4;
+        let base: Vec<u8> = vec![1; 12];
+        // grow to 18 bytes: chunks 2 (changed), 3, 4 dirty
+        let mut grown = vec![1u8; 18];
+        grown[8..].fill(7);
+        let prev = ProcDigests { payload_len: 12, digests: digest_chunks(&base, cs) };
+        let dirty = dirty_chunks(&prev, &grown, cs);
+        let table = build_table(1, 12, &grown, cs, &dirty);
+        let mut dp = Vec::new();
+        for &i in &dirty {
+            dp.extend_from_slice(&grown[i * cs..(i * cs + cs).min(grown.len())]);
+        }
+        let mut out = Vec::new();
+        apply(&base, &table, &dp, &mut out).unwrap();
+        assert_eq!(out, grown);
+        // shrink back down to 6 bytes
+        let shrunk = vec![2u8; 6];
+        let prev = ProcDigests { payload_len: 18, digests: digest_chunks(&grown, cs) };
+        let dirty = dirty_chunks(&prev, &shrunk, cs);
+        let table = build_table(2, 18, &shrunk, cs, &dirty);
+        let mut dp = Vec::new();
+        for &i in &dirty {
+            dp.extend_from_slice(&shrunk[i * cs..(i * cs + cs).min(shrunk.len())]);
+        }
+        apply(&grown, &table, &dp, &mut out).unwrap();
+        assert_eq!(out, shrunk);
+    }
+
+    #[test]
+    fn apply_rejects_corrupt_tables() {
+        let base = vec![0u8; 16];
+        let good = DeltaTable {
+            base_seq: 1,
+            base_len: 16,
+            full_len: 16,
+            chunk_size: 8,
+            chunks: vec![ChunkRef { index: 0, offset: 0, len: 8 }],
+        };
+        let mut out = Vec::new();
+        apply(&base, &good, &[5u8; 8], &mut out).unwrap();
+        // wrong base length
+        assert!(apply(&base[..8], &good, &[5u8; 8], &mut out).is_err());
+        // wrong delta payload length
+        assert!(apply(&base, &good, &[5u8; 7], &mut out).is_err());
+        // chunk overruns the payload
+        let bad = DeltaTable {
+            chunks: vec![ChunkRef { index: 3, offset: 0, len: 8 }],
+            ..good.clone()
+        };
+        assert!(apply(&base, &bad, &[5u8; 8], &mut out).is_err());
+        // short chunk that is not the tail
+        let bad = DeltaTable {
+            chunks: vec![ChunkRef { index: 0, offset: 0, len: 4 }],
+            ..good.clone()
+        };
+        assert!(apply(&base, &bad, &[5u8; 4], &mut out).is_err());
+    }
+
+    #[test]
+    fn tracker_eligibility_and_chain_bound() {
+        let policy = DeltaPolicy { chunk_size: 8, max_dirty_ratio: 0.5, max_chain: 2 };
+        let mut t = Tracker::new(8);
+        assert!(!t.delta_eligible(1, &policy), "no base yet");
+        let digs = vec![ProcDigests { payload_len: 4, digests: vec![1] }];
+        t.commit(1, digs.clone(), false);
+        assert!(t.delta_eligible(1, &policy));
+        assert!(!t.delta_eligible(2, &policy), "proc count mismatch");
+        t.commit(2, digs.clone(), true);
+        assert_eq!(t.chain_len, 1);
+        t.commit(3, digs.clone(), true);
+        assert!(!t.delta_eligible(1, &policy), "chain bound reached");
+        t.commit(4, digs.clone(), false); // full cut re-roots
+        assert_eq!(t.chain_len, 0);
+        assert!(t.delta_eligible(1, &policy));
+        t.reset();
+        assert!(!t.delta_eligible(1, &policy));
+        // chunk-size mismatch (policy changed) disqualifies
+        let mut t = Tracker::new(16);
+        t.commit(1, digs, false);
+        assert!(!t.delta_eligible(1, &policy));
+    }
+}

@@ -4,12 +4,53 @@
 //!
 //! ```text
 //! magic   4 B   "DCKP"
-//! version 2 B
+//! version 2 B   1 = full image, 2 = delta image
 //! hlen    4 B   header JSON length
 //! header  hlen  JSON: app, proc, seq, kind, iteration, payload_len
-//! payload plen  raw process state
+//!               (+ img, delta for v2 — see below)
+//! payload plen  raw process state (v1) / dirty chunks only (v2)
 //! crc     4 B   CRC-32 (IEEE) of the payload
 //! ```
+//!
+//! # v2 delta images
+//!
+//! Version 2 keeps the wire framing above byte-for-byte and adds
+//! **delta** images: the payload is only the chunks of the process
+//! state that changed since a base cut, concatenated in ascending
+//! chunk order, and the header JSON carries two extra fields —
+//! `img: "delta"` plus a `delta` object ([`DeltaTable`]):
+//!
+//! ```text
+//! delta: {
+//!   base_seq:   u64   checkpoint sequence this delta is relative to
+//!   base_len:   u64   raw payload length of the base the diff ran on
+//!   full_len:   u64   reconstructed payload length
+//!   chunk_size: u64   chunking granularity of the diff
+//!   chunks:     [[chunk_index, payload_offset, len], ...]
+//! }
+//! ```
+//!
+//! Chain-resolution rules (implemented by [`crate::dckpt::service::restore`]):
+//!
+//! * Chains are **per process**: every delta image points at `base_seq`
+//!   for the *same* proc index; a full image terminates the walk.
+//! * Reconstruction walks back to the nearest full image, then replays
+//!   the deltas forward: start from the base payload (stripped of its
+//!   runtime-overhead padding when `base_len` says the diff ran on the
+//!   raw state), resize to `full_len`, and overlay each chunk at
+//!   `chunk_index × chunk_size`.
+//! * Every chunk covers `chunk_size` bytes except possibly the final
+//!   one; `len` must never exceed the space left in the reconstructed
+//!   payload.
+//! * Delta images never carry the runtime-overhead padding — the
+//!   modelled DMTCP libraries are immutable, so only the full base
+//!   image pays that constant.
+//! * Writers bound chain length (`max_delta_chain`) by emitting a
+//!   periodic full image; readers additionally cap the walk so a
+//!   corrupt `base_seq` cycle cannot loop forever.
+//!
+//! Full images are still emitted as version 1 and stay byte-identical
+//! to the original format (pinned by the golden-encoder property test).
 //!
 //! Real DMTCP images also carry the process's mapped libraries — that is
 //! why the paper's Table 2 sizes behave like `data/n + c` with c ≈ 10 MB
@@ -55,7 +96,10 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{Arc, OnceLock};
 
 pub const MAGIC: &[u8; 4] = b"DCKP";
+/// Wire version of full images (unchanged since v1).
 pub const VERSION: u16 = 1;
+/// Wire version of delta images (same framing, delta header + payload).
+pub const VERSION_DELTA: u16 = 2;
 
 /// Modelled size of the libraries/runtime a DMTCP image carries
 /// (Table 2 fit: sizes ≈ 645 MB/n + ~10 MB).
@@ -70,6 +114,89 @@ pub const PARALLEL_CRC_MIN_BYTES: usize = 4 * 1024 * 1024;
 const ZERO_PAGE_BYTES: usize = 64 * 1024;
 static ZERO_PAGE: [u8; ZERO_PAGE_BYTES] = [0u8; ZERO_PAGE_BYTES];
 
+/// One dirty chunk of a v2 delta image: which chunk of the
+/// reconstructed payload it is, where its bytes sit in the delta
+/// payload, and how many bytes it carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkRef {
+    /// Chunk index in the reconstructed payload (`index × chunk_size`
+    /// is the destination offset).
+    pub index: u64,
+    /// Byte offset of this chunk's data within the delta payload.
+    pub offset: u64,
+    /// Chunk length (`chunk_size` except possibly the final chunk).
+    pub len: u64,
+}
+
+/// The v2 delta header extension: base pointer + chunk table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaTable {
+    /// Checkpoint sequence this delta is relative to.
+    pub base_seq: u64,
+    /// Raw payload length of the base the diff was computed against
+    /// (without runtime-overhead padding).
+    pub base_len: u64,
+    /// Length of the reconstructed payload.
+    pub full_len: u64,
+    /// Chunking granularity of the diff.
+    pub chunk_size: u64,
+    /// Dirty chunks, ascending by index; offsets are contiguous.
+    pub chunks: Vec<ChunkRef>,
+}
+
+impl DeltaTable {
+    /// Total payload bytes the chunk table accounts for (must equal the
+    /// image's `payload_len`).
+    pub fn payload_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::object([
+            ("base_seq", self.base_seq.into()),
+            ("base_len", self.base_len.into()),
+            ("full_len", self.full_len.into()),
+            ("chunk_size", self.chunk_size.into()),
+            (
+                "chunks",
+                Json::Arr(
+                    self.chunks
+                        .iter()
+                        .map(|c| {
+                            Json::Arr(vec![c.index.into(), c.offset.into(), c.len.into()])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<DeltaTable> {
+        let chunks = j
+            .get("chunks")
+            .as_arr()
+            .context("delta: chunks")?
+            .iter()
+            .map(|c| {
+                let arr = c.as_arr().context("delta: chunk entry")?;
+                anyhow::ensure!(arr.len() == 3, "delta: chunk entry arity");
+                Ok(ChunkRef {
+                    index: arr[0].as_u64().context("delta: chunk index")?,
+                    offset: arr[1].as_u64().context("delta: chunk offset")?,
+                    len: arr[2].as_u64().context("delta: chunk len")?,
+                })
+            })
+            .collect::<Result<Vec<ChunkRef>>>()?;
+        Ok(DeltaTable {
+            base_seq: j.get("base_seq").as_u64().context("delta: base_seq")?,
+            base_len: j.get("base_len").as_u64().context("delta: base_len")?,
+            full_len: j.get("full_len").as_u64().context("delta: full_len")?,
+            chunk_size: j.get("chunk_size").as_u64().context("delta: chunk_size")?,
+            chunks,
+        })
+    }
+}
+
 /// Image metadata header.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ImageHeader {
@@ -79,21 +206,40 @@ pub struct ImageHeader {
     pub kind: String,
     pub iteration: u64,
     pub payload_len: u64,
+    /// Present on v2 delta images; `None` = full image.
+    pub delta: Option<DeltaTable>,
 }
 
 impl ImageHeader {
+    /// Whether this header describes a delta image.
+    pub fn is_delta(&self) -> bool {
+        self.delta.is_some()
+    }
+
     fn to_json(&self) -> Json {
-        Json::object([
+        let mut j = Json::object([
             ("app", self.app.as_str().into()),
             ("proc", self.proc_index.into()),
             ("seq", self.ckpt_seq.into()),
             ("kind", self.kind.as_str().into()),
             ("iteration", self.iteration.into()),
             ("payload_len", self.payload_len.into()),
-        ])
+        ]);
+        // emitted only for deltas, so full images keep the exact v1
+        // header bytes (pinned by the golden-encoder property test)
+        if let Some(d) = &self.delta {
+            j.set("img", "delta".into());
+            j.set("delta", d.to_json());
+        }
+        j
     }
 
     fn from_json(j: &Json) -> Result<ImageHeader> {
+        let delta = if j.get("delta").is_null() {
+            None
+        } else {
+            Some(DeltaTable::from_json(j.get("delta"))?)
+        };
         Ok(ImageHeader {
             app: j.get("app").as_str().context("header: app")?.to_string(),
             proc_index: j.get("proc").as_usize().context("header: proc")?,
@@ -101,6 +247,7 @@ impl ImageHeader {
             kind: j.get("kind").as_str().context("header: kind")?.to_string(),
             iteration: j.get("iteration").as_u64().context("header: iteration")?,
             payload_len: j.get("payload_len").as_u64().context("header: payload_len")?,
+            delta,
         })
     }
 }
@@ -335,8 +482,9 @@ impl<W: Write> ImageWriter<W> {
     /// exactly `header.payload_len` streamed bytes.
     pub fn new(mut out: W, header: &ImageHeader) -> Result<ImageWriter<W>> {
         let hjson = header.to_json().to_string().into_bytes();
+        let version = if header.is_delta() { VERSION_DELTA } else { VERSION };
         out.write_all(MAGIC)?;
-        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&version.to_le_bytes())?;
         out.write_all(&(hjson.len() as u32).to_le_bytes())?;
         out.write_all(&hjson)?;
         Ok(ImageWriter {
@@ -426,7 +574,7 @@ impl<'a> ImageReader<'a> {
             bail!("bad magic");
         }
         let version = u16::from_le_bytes([data[4], data[5]]);
-        if version != VERSION {
+        if version != VERSION && version != VERSION_DELTA {
             bail!("unsupported image version {version}");
         }
         let hlen = u32::from_le_bytes([data[6], data[7], data[8], data[9]]) as usize;
@@ -439,6 +587,12 @@ impl<'a> ImageReader<'a> {
         let header = ImageHeader::from_json(
             &crate::util::json::parse(htext).map_err(|e| anyhow::anyhow!("header json: {e}"))?,
         )?;
+        if header.is_delta() != (version == VERSION_DELTA) {
+            bail!(
+                "image version {version} disagrees with header delta={}",
+                header.is_delta()
+            );
+        }
         let plen = header.payload_len as usize;
         let pend = hend + plen;
         if data.len() != pend + 4 {
@@ -566,6 +720,20 @@ mod tests {
             kind: "lu".into(),
             iteration: 100,
             payload_len: plen,
+            delta: None,
+        }
+    }
+
+    fn delta_hdr(plen: u64, chunks: Vec<ChunkRef>) -> ImageHeader {
+        ImageHeader {
+            delta: Some(DeltaTable {
+                base_seq: 4,
+                base_len: 1000,
+                full_len: 1000,
+                chunk_size: 64,
+                chunks,
+            }),
+            ..hdr(plen)
         }
     }
 
@@ -733,5 +901,54 @@ mod tests {
         let mut data = encode(&hdr(4), &payload);
         data[4] = 99;
         assert!(decode(&data).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn delta_image_roundtrips_with_chunk_table() {
+        let chunks = vec![
+            ChunkRef { index: 1, offset: 0, len: 64 },
+            ChunkRef { index: 7, offset: 64, len: 40 },
+        ];
+        let payload: Vec<u8> = (0..104u8).collect();
+        let h = delta_hdr(104, chunks.clone());
+        let data = encode(&h, &payload);
+        // wire version is 2, framing unchanged
+        assert_eq!(&data[0..4], MAGIC);
+        assert_eq!(u16::from_le_bytes([data[4], data[5]]), VERSION_DELTA);
+        let (back, p) = decode(&data).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(p, payload);
+        let d = back.delta.unwrap();
+        assert_eq!(d.chunks, chunks);
+        assert_eq!(d.payload_bytes(), 104);
+    }
+
+    #[test]
+    fn delta_version_and_header_must_agree() {
+        // a delta header wrapped in a v1 frame (or vice versa) is corrupt
+        let payload: Vec<u8> = (0..104u8).collect();
+        let h = delta_hdr(104, vec![ChunkRef { index: 0, offset: 0, len: 104 }]);
+        let mut data = encode(&h, &payload);
+        data[4] = 1; // claim v1 with a delta header
+        assert!(decode(&data)
+            .unwrap_err()
+            .to_string()
+            .contains("disagrees"));
+        let mut data = encode(&hdr(4), &[0u8; 4]);
+        data[4] = 2; // claim v2 with a full header
+        assert!(decode(&data)
+            .unwrap_err()
+            .to_string()
+            .contains("disagrees"));
+    }
+
+    #[test]
+    fn full_images_stay_on_version_1() {
+        let data = encode(&hdr(8), &[1u8; 8]);
+        assert_eq!(u16::from_le_bytes([data[4], data[5]]), VERSION);
+        // and their header JSON carries no delta keys
+        let hlen = u32::from_le_bytes([data[6], data[7], data[8], data[9]]) as usize;
+        let htext = std::str::from_utf8(&data[10..10 + hlen]).unwrap();
+        assert!(!htext.contains("delta"), "{htext}");
     }
 }

@@ -22,6 +22,11 @@
 //!   payload chunks into any sink with the CRC sharded across the shared
 //!   thread pool, and [`image::decode_ref`] verifies and borrows the
 //!   payload without copying it out.
+//! * [`delta`] — the dirty-chunk incremental engine: per-chunk 64-bit
+//!   digests kept between cuts, a differ that emits v2 delta images
+//!   carrying only the changed chunks (full-image fallback over a dirty
+//!   ratio, bounded chain length), and the chain reconstructor
+//!   `restore` uses to replay a delta chain onto its full base.
 //! * [`service`] — real-mode checkpoint/restore of a [`DistributedApp`]
 //!   into any [`crate::storage::ObjectStore`] (two-phase: quiesce at a
 //!   step barrier — the analog of DMTCP's socket drain — then stream
@@ -31,6 +36,7 @@
 //!   (suspend broadcast, drain, local write, lazy upload; restart
 //!   re-coordination), used by the figure benches.
 
+pub mod delta;
 pub mod image;
 pub mod protocol;
 pub mod service;

@@ -8,9 +8,10 @@
 //! will choose the most recent checkpoint image, by default, but a user
 //! may also specify an earlier image") and loads every process.
 
-use super::image::{self, ImageHeader};
+use super::delta::{self, DeltaPolicy, ProcDigests, Tracker};
+use super::image::{self, DeltaTable, ImageHeader};
 use super::DistributedApp;
-use crate::storage::ObjectStore;
+use crate::storage::{ObjectStore, PutWriter};
 use crate::util::pool::ThreadPool;
 use anyhow::{bail, Context, Result};
 
@@ -18,6 +19,11 @@ use anyhow::{bail, Context, Result};
 pub fn image_key(app: &str, seq: u64, proc_index: usize) -> String {
     format!("{app}/ckpt-{seq}/proc-{proc_index}.img")
 }
+
+/// Upper bound on the chain walk during restore: writers force a full
+/// image far earlier (`DeltaPolicy::max_chain`), so anything past this
+/// is a corrupt `base_seq` cycle, not a real chain.
+const MAX_RESOLVE_CHAIN: usize = 64;
 
 /// Result of a checkpoint: per-proc image sizes plus the iteration at
 /// the consistent cut (read *during* the quiesced checkpoint, so it is
@@ -27,12 +33,82 @@ pub struct CheckpointReport {
     pub seq: u64,
     pub iteration: u64,
     pub image_bytes: Vec<u64>,
+    /// `Some(base)` when this cut emitted at least one delta image
+    /// (chained to checkpoint `base`); `None` = an all-full cut.
+    pub base_seq: Option<u64>,
+    /// Wire bytes of the delta images in this cut (0 for full cuts).
+    pub delta_bytes: u64,
 }
 
 impl CheckpointReport {
     pub fn total_bytes(&self) -> u64 {
         self.image_bytes.iter().sum()
     }
+
+    /// "full" or "delta" — what `GET /checkpoints` surfaces per cut.
+    pub fn kind(&self) -> &'static str {
+        if self.base_seq.is_some() {
+            "delta"
+        } else {
+            "full"
+        }
+    }
+}
+
+/// Stream one image into the store: open the put-writer, emit the
+/// header, let `body` push the payload chunks, seal CRC + object.
+fn stream_image<'s, F>(
+    store: &'s dyn ObjectStore,
+    key: &str,
+    header: &ImageHeader,
+    body: F,
+) -> Result<u64>
+where
+    F: FnOnce(&mut image::ImageWriter<Box<dyn PutWriter + 's>>) -> Result<()>,
+{
+    let obj = store
+        .put_writer(key)
+        .map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?;
+    let mut w = image::ImageWriter::new(obj, header)
+        .with_context(|| format!("write image {key}"))?;
+    body(&mut w).with_context(|| format!("write image {key}"))?;
+    let (obj, wire_bytes) = w.finish().with_context(|| format!("write image {key}"))?;
+    obj.finish()
+        .map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?;
+    Ok(wire_bytes)
+}
+
+/// Write one full image for proc `i`; returns the wire byte count.
+fn write_full_image(
+    store: &dyn ObjectStore,
+    app: &dyn DistributedApp,
+    app_name: &str,
+    seq: u64,
+    i: usize,
+    payload: &[u8],
+    overhead: usize,
+) -> Result<u64> {
+    let header = ImageHeader {
+        app: app_name.to_string(),
+        proc_index: i,
+        ckpt_seq: seq,
+        kind: app.kind().to_string(),
+        iteration: app.iteration(),
+        payload_len: (payload.len() + overhead) as u64,
+        delta: None,
+    };
+    let key = image_key(app_name, seq, i);
+    stream_image(store, &key, &header, |w| {
+        if payload.len() >= image::PARALLEL_CRC_MIN_BYTES {
+            w.write_payload_parallel(payload, ThreadPool::shared())?;
+        } else {
+            w.write_payload(payload)?;
+        }
+        if overhead > 0 {
+            w.write_zeros(overhead)?;
+        }
+        Ok(())
+    })
 }
 
 /// Checkpoint every process of `app` into `store` under sequence `seq`.
@@ -56,42 +132,125 @@ pub fn checkpoint(
     let mut sizes = Vec::with_capacity(app.nprocs());
     // Phase 1 (quiesce/drain) is implicit: we are between step() calls,
     // so no in-flight messages exist.  Phase 2: stream all images.
+    let overhead = if with_runtime_overhead { image::RUNTIME_OVERHEAD_BYTES } else { 0 };
     for i in 0..app.nprocs() {
         let payload = app
             .serialize_proc(i)
             .with_context(|| format!("serialize proc {i}"))?;
-        let overhead = if with_runtime_overhead { image::RUNTIME_OVERHEAD_BYTES } else { 0 };
-        let header = ImageHeader {
-            app: app_name.to_string(),
-            proc_index: i,
-            ckpt_seq: seq,
-            kind: app.kind().to_string(),
-            iteration: app.iteration(),
-            payload_len: (payload.len() + overhead) as u64,
-        };
-        let key = image_key(app_name, seq, i);
-        let mut obj = store
-            .put_writer(&key)
-            .map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?;
-        let mut w = image::ImageWriter::new(&mut obj, &header)
-            .with_context(|| format!("write image {key}"))?;
-        if payload.len() >= image::PARALLEL_CRC_MIN_BYTES {
-            w.write_payload_parallel(&payload, ThreadPool::shared())
-                .with_context(|| format!("write image {key}"))?;
-        } else {
-            w.write_payload(&payload)
-                .with_context(|| format!("write image {key}"))?;
-        }
-        if overhead > 0 {
-            w.write_zeros(overhead)
-                .with_context(|| format!("write image {key}"))?;
-        }
-        let (_, wire_bytes) = w.finish().with_context(|| format!("write image {key}"))?;
-        obj.finish()
-            .map_err(|e| anyhow::anyhow!("store put {key}: {e}"))?;
-        sizes.push(wire_bytes);
+        sizes.push(write_full_image(store, app, app_name, seq, i, &payload, overhead)?);
     }
-    Ok(CheckpointReport { seq, iteration: app.iteration(), image_bytes: sizes })
+    Ok(CheckpointReport {
+        seq,
+        iteration: app.iteration(),
+        image_bytes: sizes,
+        base_seq: None,
+        delta_bytes: 0,
+    })
+}
+
+/// Checkpoint with the dirty-chunk delta engine: diff each process's
+/// fresh state against `tracker`'s digests from the previous cut and
+/// emit a v2 delta image when the dirty ratio is at or under
+/// [`DeltaPolicy::max_dirty_ratio`] — otherwise (or when the chain hit
+/// [`DeltaPolicy::max_chain`], or there is no usable base) a full
+/// image, so chains are self-healing and bounded.  The decision is per
+/// process: one noisy proc falls back to a full image (re-rooting its
+/// own chain) without forcing the quiet procs to give up their deltas.
+///
+/// With `allow_delta = false` every image is full but the tracker is
+/// still re-based on this cut, so a later delta cut chains to *this*
+/// sequence — that is what lets a migration pre-copy push a full cut
+/// and then ship only the dirty chunks written while it transferred.
+///
+/// The tracker commits only when the whole cut succeeded; a failed cut
+/// leaves the previous digests in place.
+#[allow(clippy::too_many_arguments)]
+pub fn checkpoint_tracked(
+    app: &dyn DistributedApp,
+    store: &dyn ObjectStore,
+    app_name: &str,
+    seq: u64,
+    with_runtime_overhead: bool,
+    allow_delta: bool,
+    tracker: &mut Tracker,
+    policy: &DeltaPolicy,
+) -> Result<CheckpointReport> {
+    let nprocs = app.nprocs();
+    if tracker.chunk_size != policy.chunk_size {
+        // the knob changed mid-flight: old digests are meaningless
+        tracker.reset();
+        tracker.chunk_size = policy.chunk_size;
+    }
+    let eligible = allow_delta && tracker.delta_eligible(nprocs, policy);
+    let cs = policy.chunk_size;
+    let overhead = if with_runtime_overhead { image::RUNTIME_OVERHEAD_BYTES } else { 0 };
+    let mut sizes = Vec::with_capacity(nprocs);
+    let mut fresh: Vec<ProcDigests> = Vec::with_capacity(nprocs);
+    let mut any_delta = false;
+    let mut delta_bytes = 0u64;
+    for i in 0..nprocs {
+        let payload = app
+            .serialize_proc(i)
+            .with_context(|| format!("serialize proc {i}"))?;
+        let digests = delta::digest_chunks(&payload, cs);
+        let mut wrote_delta = false;
+        if eligible {
+            let prev = &tracker.procs[i];
+            let dirty = delta::dirty_from_digests(prev, &digests);
+            let dirty_bytes: usize = dirty
+                .iter()
+                .map(|&ci| cs.min(payload.len() - ci * cs))
+                .sum();
+            let ratio = if payload.is_empty() {
+                0.0
+            } else {
+                dirty_bytes as f64 / payload.len() as f64
+            };
+            if ratio <= policy.max_dirty_ratio {
+                let base_seq = tracker.base_seq.expect("eligible implies a base");
+                let table =
+                    delta::build_table(base_seq, prev.payload_len, &payload, cs, &dirty);
+                let header = ImageHeader {
+                    app: app_name.to_string(),
+                    proc_index: i,
+                    ckpt_seq: seq,
+                    kind: app.kind().to_string(),
+                    iteration: app.iteration(),
+                    payload_len: table.payload_bytes(),
+                    delta: Some(table),
+                };
+                let key = image_key(app_name, seq, i);
+                // deltas never carry the runtime-overhead padding: the
+                // modelled DMTCP libraries are immutable, so only the
+                // full base image pays that constant
+                let wire = stream_image(store, &key, &header, |w| {
+                    for &ci in &dirty {
+                        let start = ci * cs;
+                        let end = (start + cs).min(payload.len());
+                        w.write_payload(&payload[start..end])?;
+                    }
+                    Ok(())
+                })?;
+                delta_bytes += wire;
+                sizes.push(wire);
+                wrote_delta = true;
+                any_delta = true;
+            }
+        }
+        if !wrote_delta {
+            sizes.push(write_full_image(store, app, app_name, seq, i, &payload, overhead)?);
+        }
+        fresh.push(ProcDigests { payload_len: payload.len() as u64, digests });
+    }
+    let base_seq = if any_delta { tracker.base_seq } else { None };
+    tracker.commit(seq, fresh, any_delta);
+    Ok(CheckpointReport {
+        seq,
+        iteration: app.iteration(),
+        image_bytes: sizes,
+        base_seq,
+        delta_bytes,
+    })
 }
 
 /// All checkpoint sequences available for `app_name`, ascending.
@@ -112,8 +271,62 @@ pub fn list_checkpoints(store: &dyn ObjectStore, app_name: &str) -> Result<Vec<u
     Ok(seqs)
 }
 
+/// Read + CRC-verify one image into `buf` (reused across calls so an
+/// n-proc restore allocates one buffer, not n) and hand back the
+/// zero-copy reader over it.
+fn read_image_into<'a>(
+    store: &dyn ObjectStore,
+    app_name: &str,
+    seq: u64,
+    proc_index: usize,
+    buf: &'a mut Vec<u8>,
+) -> Result<image::ImageReader<'a>> {
+    let key = image_key(app_name, seq, proc_index);
+    buf.clear();
+    store
+        .get_into(&key, buf)
+        .map_err(|e| anyhow::anyhow!("store get {key}: {e}"))?;
+    let reader = image::ImageReader::new(buf).with_context(|| format!("decode {key}"))?;
+    reader.verify_auto().with_context(|| format!("decode {key}"))?;
+    let header = reader.header();
+    if header.proc_index != proc_index {
+        bail!("image {key} is for proc {}, expected {proc_index}", header.proc_index);
+    }
+    Ok(reader)
+}
+
+/// Restore one proc from a full-image payload (strip the
+/// runtime-overhead padding first when it looks present; fall back to
+/// the unstripped bytes).
+fn restore_full(app: &mut dyn DistributedApp, i: usize, payload: &[u8]) -> Result<()> {
+    let original = if payload.len() >= image::RUNTIME_OVERHEAD_BYTES
+        && payload[payload.len() - 1] == 0
+    {
+        // runtime-overhead padding is zeros; workloads validate the
+        // payload length themselves, so try stripped first.
+        image::strip_runtime_overhead(payload)
+    } else {
+        payload
+    };
+    match app.restore_proc(i, original) {
+        Ok(()) => Ok(()),
+        // fall back to the unstripped payload (image without padding)
+        Err(_) => app
+            .restore_proc(i, payload)
+            .with_context(|| format!("restore proc {i}")),
+    }
+}
+
 /// Restore `app` from checkpoint `seq` (or the most recent when `None`).
 /// Returns the sequence used.
+///
+/// Delta images resolve their chain per proc: walk `base_seq` links
+/// back to the nearest full image, seed the state from its payload
+/// (stripped of runtime-overhead padding when the chain's `base_len`
+/// says the diff ran on the raw state), then replay the deltas forward
+/// oldest-first.  The walk is capped at [`MAX_RESOLVE_CHAIN`] so a
+/// corrupt `base_seq` cycle fails instead of looping.  All image reads
+/// go through one reused scratch buffer.
 pub fn restore(
     app: &mut dyn DistributedApp,
     store: &dyn ObjectStore,
@@ -126,39 +339,82 @@ pub fn restore(
             .last()
             .context("no checkpoints available")?,
     };
+    // one scratch buffer for every image read, plus two state buffers
+    // for chain replay — an n-proc restore allocates once, not n times
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut state: Vec<u8> = Vec::new();
+    let mut rebuilt: Vec<u8> = Vec::new();
     for i in 0..app.nprocs() {
-        let key = image_key(app_name, seq, i);
-        let data = store
-            .get(&key)
-            .map_err(|e| anyhow::anyhow!("store get {key}: {e}"))?;
-        // zero-copy decode: parse, verify CRC (parallel shards for big
-        // images), and borrow the payload straight out of `data`
-        let reader = image::ImageReader::new(&data).with_context(|| format!("decode {key}"))?;
-        reader.verify_auto().with_context(|| format!("decode {key}"))?;
-        let header = reader.header();
-        if header.proc_index != i {
-            bail!("image {key} is for proc {}, expected {i}", header.proc_index);
-        }
-        if header.kind != app.kind() {
-            bail!("image kind {:?} != app kind {:?}", header.kind, app.kind());
-        }
-        let payload = reader.payload();
-        let original = if payload.len() >= image::RUNTIME_OVERHEAD_BYTES
-            && payload[payload.len() - 1] == 0
-        {
-            // runtime-overhead padding is zeros; workloads validate the
-            // payload length themselves, so try stripped first.
-            image::strip_runtime_overhead(payload)
-        } else {
-            payload
+        // tip image: full images restore straight from the borrowed
+        // payload; delta images seed the chain walk
+        let tip: Option<(DeltaTable, Vec<u8>)> = {
+            let reader = read_image_into(store, app_name, seq, i, &mut scratch)?;
+            let header = reader.header();
+            if header.kind != app.kind() {
+                bail!("image kind {:?} != app kind {:?}", header.kind, app.kind());
+            }
+            match &header.delta {
+                Some(t) => Some((t.clone(), reader.payload().to_vec())),
+                None => {
+                    restore_full(app, i, reader.payload())?;
+                    None
+                }
+            }
         };
-        match app.restore_proc(i, original) {
-            Ok(()) => {}
-            // fall back to the unstripped payload (image without padding)
-            Err(_) => app
-                .restore_proc(i, payload)
-                .with_context(|| format!("restore proc {i}"))?,
+        let Some(tip) = tip else { continue };
+        // collect delta links newest → oldest until the full base
+        let mut links: Vec<(DeltaTable, Vec<u8>)> = vec![tip];
+        loop {
+            if links.len() > MAX_RESOLVE_CHAIN {
+                bail!("delta chain for proc {i} exceeds {MAX_RESOLVE_CHAIN} links (cycle?)");
+            }
+            let base_seq = links.last().expect("non-empty").0.base_seq;
+            let next: Option<(DeltaTable, Vec<u8>)> = {
+                let reader = read_image_into(store, app_name, base_seq, i, &mut scratch)?;
+                let header = reader.header();
+                if header.kind != app.kind() {
+                    bail!("image kind {:?} != app kind {:?}", header.kind, app.kind());
+                }
+                match &header.delta {
+                    Some(t) => Some((t.clone(), reader.payload().to_vec())),
+                    None => {
+                        // full base found: seed the reconstruction state
+                        // with its raw payload (the diff ran on the
+                        // unpadded state, so strip padding when present)
+                        let deepest = &links.last().expect("non-empty").0;
+                        let payload = reader.payload();
+                        let base = if payload.len() as u64 == deepest.base_len {
+                            payload
+                        } else if payload.len()
+                            == deepest.base_len as usize + image::RUNTIME_OVERHEAD_BYTES
+                        {
+                            image::strip_runtime_overhead(payload)
+                        } else {
+                            bail!(
+                                "delta chain for proc {i}: base ckpt-{base_seq} is {} bytes, chain expects {}",
+                                payload.len(),
+                                deepest.base_len
+                            );
+                        };
+                        state.clear();
+                        state.extend_from_slice(base);
+                        None
+                    }
+                }
+            };
+            match next {
+                Some(link) => links.push(link),
+                None => break,
+            }
         }
+        // replay oldest-first onto the base state
+        for (table, delta_payload) in links.iter().rev() {
+            delta::apply(&state, table, delta_payload, &mut rebuilt)
+                .with_context(|| format!("apply delta ckpt-{} proc {i}", table.base_seq))?;
+            std::mem::swap(&mut state, &mut rebuilt);
+        }
+        app.restore_proc(i, &state)
+            .with_context(|| format!("restore proc {i}"))?;
     }
     Ok(seq)
 }
@@ -394,6 +650,7 @@ mod tests {
                     kind: app.kind().to_string(),
                     iteration: app.iteration(),
                     payload_len: payload.len() as u64,
+                    delta: None,
                 };
                 let expect = if overhead {
                     image::encode_with_runtime_overhead(&hdr, &payload)
@@ -415,5 +672,233 @@ mod tests {
         app.step().unwrap();
         restore(&mut app, &store, "a", None).unwrap();
         assert_eq!(app.iteration(), 1);
+    }
+
+    fn small_policy() -> DeltaPolicy {
+        DeltaPolicy { chunk_size: 64, max_dirty_ratio: 0.5, max_chain: 8 }
+    }
+
+    #[test]
+    fn delta_chain_checkpoints_and_restores() {
+        // CounterApp payloads are 16 mutable bytes + a constant blob:
+        // after the first (full) cut every later cut is a tiny delta
+        let store = MemStore::new();
+        let mut app = CounterApp::new(2, 4096);
+        let policy = small_policy();
+        let mut tracker = Tracker::new(policy.chunk_size);
+        app.step().unwrap();
+        let full = checkpoint_tracked(&app, &store, "a", 1, false, true, &mut tracker, &policy)
+            .unwrap();
+        assert_eq!(full.kind(), "full");
+        assert_eq!(full.base_seq, None);
+        assert_eq!(full.delta_bytes, 0);
+        for seq in 2..=4u64 {
+            app.step().unwrap();
+            let d = checkpoint_tracked(&app, &store, "a", seq, false, true, &mut tracker, &policy)
+                .unwrap();
+            assert_eq!(d.kind(), "delta", "seq {seq}");
+            assert_eq!(d.base_seq, Some(seq - 1));
+            assert!(d.delta_bytes > 0);
+            // the delta moves the dirty 64-byte chunk, not the 4 KiB blob
+            assert!(
+                d.total_bytes() < full.total_bytes() / 4,
+                "seq {seq}: delta {} vs full {}",
+                d.total_bytes(),
+                full.total_bytes()
+            );
+        }
+        let at_cut = app.counters.clone();
+        let steps_at_cut = app.steps;
+        for _ in 0..5 {
+            app.step().unwrap();
+        }
+        // restore the tip of the chain: byte-identical state
+        let used = restore(&mut app, &store, "a", None).unwrap();
+        assert_eq!(used, 4);
+        assert_eq!(app.counters, at_cut);
+        assert_eq!(app.steps, steps_at_cut);
+        // and an interior chain link restores too
+        restore(&mut app, &store, "a", Some(2)).unwrap();
+        assert_eq!(app.iteration(), 2);
+    }
+
+    #[test]
+    fn delta_cut_at_low_dirty_ratio_moves_under_a_fifth_of_full() {
+        // acceptance: a ≤10% dirty cut must move ≤20% of the full bytes
+        let store = MemStore::new();
+        let mut app = CounterApp::new(1, 256 * 1024);
+        let policy = DeltaPolicy { chunk_size: 4096, ..small_policy() };
+        let mut tracker = Tracker::new(policy.chunk_size);
+        app.step().unwrap();
+        let full = checkpoint_tracked(&app, &store, "r", 1, false, true, &mut tracker, &policy)
+            .unwrap();
+        // one more step dirties 16 bytes of ~256 KiB (≈0.006% — far
+        // under the 10% acceptance point)
+        app.step().unwrap();
+        let d = checkpoint_tracked(&app, &store, "r", 2, false, true, &mut tracker, &policy)
+            .unwrap();
+        assert_eq!(d.kind(), "delta");
+        assert!(
+            d.total_bytes() * 5 <= full.total_bytes(),
+            "delta {} must be ≤20% of full {}",
+            d.total_bytes(),
+            full.total_bytes()
+        );
+    }
+
+    #[test]
+    fn high_dirty_ratio_falls_back_to_full() {
+        struct Churn(Vec<u8>, u64);
+        impl DistributedApp for Churn {
+            fn nprocs(&self) -> usize {
+                1
+            }
+            fn step(&mut self) -> anyhow::Result<()> {
+                for b in self.0.iter_mut() {
+                    *b = b.wrapping_add(1); // every chunk dirty
+                }
+                self.1 += 1;
+                Ok(())
+            }
+            fn serialize_proc(&self, _: usize) -> anyhow::Result<Vec<u8>> {
+                Ok(self.0.clone())
+            }
+            fn restore_proc(&mut self, _: usize, p: &[u8]) -> anyhow::Result<()> {
+                self.0 = p.to_vec();
+                Ok(())
+            }
+            fn proc_healthy(&self, _: usize) -> bool {
+                true
+            }
+            fn kill_proc(&mut self, _: usize) {}
+            fn iteration(&self) -> u64 {
+                self.1
+            }
+            fn metric(&self) -> f64 {
+                0.0
+            }
+            fn kind(&self) -> &'static str {
+                "churn"
+            }
+        }
+        let store = MemStore::new();
+        let mut app = Churn(vec![0u8; 4096], 0);
+        let policy = small_policy();
+        let mut tracker = Tracker::new(policy.chunk_size);
+        checkpoint_tracked(&app, &store, "c", 1, false, true, &mut tracker, &policy).unwrap();
+        app.step().unwrap();
+        let r = checkpoint_tracked(&app, &store, "c", 2, false, true, &mut tracker, &policy)
+            .unwrap();
+        assert_eq!(r.kind(), "full", "100% dirty must self-heal to a full image");
+        assert_eq!(tracker.chain_len, 0);
+        restore(&mut app, &store, "c", None).unwrap();
+        assert_eq!(app.iteration(), 1);
+    }
+
+    #[test]
+    fn chain_length_bound_forces_periodic_full() {
+        let store = MemStore::new();
+        let mut app = CounterApp::new(1, 2048);
+        let policy = DeltaPolicy { max_chain: 3, ..small_policy() };
+        let mut tracker = Tracker::new(policy.chunk_size);
+        let mut kinds = vec![];
+        for seq in 1..=9u64 {
+            app.step().unwrap();
+            let r = checkpoint_tracked(&app, &store, "b", seq, false, true, &mut tracker, &policy)
+                .unwrap();
+            kinds.push(r.kind());
+        }
+        // full, then 3 deltas, then a forced full, 3 deltas, full...
+        assert_eq!(
+            kinds,
+            vec!["full", "delta", "delta", "delta", "full", "delta", "delta", "delta", "full"]
+        );
+        // the longest chain restores byte-identically
+        let at_cut = app.counters.clone();
+        app.step().unwrap();
+        restore(&mut app, &store, "b", Some(9)).unwrap();
+        assert_eq!(app.counters, at_cut);
+    }
+
+    #[test]
+    fn delta_chain_with_runtime_overhead_base() {
+        // the full base carries the 10 MB padding; deltas never do, and
+        // chain resolution strips the base before replaying
+        let store = MemStore::new();
+        let mut app = CounterApp::new(1, 1024);
+        let policy = small_policy();
+        let mut tracker = Tracker::new(policy.chunk_size);
+        app.step().unwrap();
+        let full = checkpoint_tracked(&app, &store, "o", 1, true, true, &mut tracker, &policy)
+            .unwrap();
+        assert!(full.total_bytes() > image::RUNTIME_OVERHEAD_BYTES as u64);
+        app.step().unwrap();
+        let d = checkpoint_tracked(&app, &store, "o", 2, true, true, &mut tracker, &policy)
+            .unwrap();
+        assert_eq!(d.kind(), "delta");
+        assert!(
+            d.total_bytes() < 4096,
+            "delta must not carry the padding: {} bytes",
+            d.total_bytes()
+        );
+        let counters = app.counters.clone();
+        app.step().unwrap();
+        restore(&mut app, &store, "o", Some(2)).unwrap();
+        assert_eq!(app.counters, counters);
+        assert_eq!(app.iteration(), 2);
+    }
+
+    #[test]
+    fn full_cut_with_tracker_rebases_the_chain() {
+        // allow_delta=false writes full images but re-bases the tracker,
+        // so the next delta chains to the full cut (the migration
+        // pre-copy pattern: full while running, delta at the barrier)
+        let store = MemStore::new();
+        let mut app = CounterApp::new(1, 2048);
+        let policy = small_policy();
+        let mut tracker = Tracker::new(policy.chunk_size);
+        app.step().unwrap();
+        let full = checkpoint_tracked(&app, &store, "p", 7, false, false, &mut tracker, &policy)
+            .unwrap();
+        assert_eq!(full.kind(), "full");
+        app.step().unwrap();
+        let d = checkpoint_tracked(&app, &store, "p", 8, false, true, &mut tracker, &policy)
+            .unwrap();
+        assert_eq!(d.base_seq, Some(7));
+        let counters = app.counters.clone();
+        app.step().unwrap();
+        restore(&mut app, &store, "p", Some(8)).unwrap();
+        assert_eq!(app.counters, counters);
+    }
+
+    #[test]
+    fn tracker_reset_re_roots_with_a_full_image() {
+        let store = MemStore::new();
+        let mut app = CounterApp::new(1, 2048);
+        let policy = small_policy();
+        let mut tracker = Tracker::new(policy.chunk_size);
+        app.step().unwrap();
+        checkpoint_tracked(&app, &store, "t", 1, false, true, &mut tracker, &policy).unwrap();
+        tracker.reset(); // e.g. after a restore or a deleted base
+        app.step().unwrap();
+        let r = checkpoint_tracked(&app, &store, "t", 2, false, true, &mut tracker, &policy)
+            .unwrap();
+        assert_eq!(r.kind(), "full");
+    }
+
+    #[test]
+    fn broken_chain_fails_loud_not_corrupt() {
+        let store = MemStore::new();
+        let mut app = CounterApp::new(1, 2048);
+        let policy = small_policy();
+        let mut tracker = Tracker::new(policy.chunk_size);
+        app.step().unwrap();
+        checkpoint_tracked(&app, &store, "x", 1, false, true, &mut tracker, &policy).unwrap();
+        app.step().unwrap();
+        checkpoint_tracked(&app, &store, "x", 2, false, true, &mut tracker, &policy).unwrap();
+        // delete the full base out from under the delta
+        delete_checkpoint(&store, "x", 1).unwrap();
+        let err = restore(&mut app, &store, "x", Some(2)).unwrap_err().to_string();
+        assert!(err.contains("ckpt-1"), "{err}");
     }
 }

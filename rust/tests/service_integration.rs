@@ -4,9 +4,11 @@
 use cacs::coordinator::rest;
 use cacs::coordinator::service::{CacsService, ServiceConfig};
 use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::dckpt::delta::DeltaPolicy;
 use cacs::storage::local::LocalStore;
 use cacs::storage::mem::MemStore;
 use cacs::util::http::Client;
+use cacs::util::ids::AppId;
 use cacs::util::json::Json;
 use std::sync::Arc;
 use std::time::Duration;
@@ -579,6 +581,172 @@ fn double_restart_and_old_checkpoint_selection() {
     // then the latest by default
     svc.restart(id, None).unwrap();
     svc.delete(id).unwrap();
+}
+
+#[test]
+fn periodic_real_mode_app_self_checkpoints_and_survives_kill() {
+    // §5.2 mode 2 end to end: an app submitted with ckpt_period
+    // accumulates cuts with ZERO manual checkpoint POSTs, the REST
+    // listing distinguishes full from delta cuts, and the app survives
+    // a kill + restore mid-period (the chain restores, the next cut
+    // re-roots).
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: Some(Duration::from_millis(25)),
+            delta: DeltaPolicy { chunk_size: 64, ..DeltaPolicy::default() },
+            ..ServiceConfig::default()
+        },
+    );
+    svc.start_monitor();
+    let server = rest::serve(svc.clone(), "127.0.0.1:0", 4).unwrap();
+    let client = Client::new(&server.addr().to_string());
+    let asr = Json::object([
+        ("name", "periodic".into()),
+        (
+            "workload",
+            Json::object([("kind", "counter".into()), ("blob_bytes", 8192u64.into())]),
+        ),
+        ("n_vms", 1u64.into()),
+        ("ckpt_period", 0.05f64.into()),
+    ]);
+    let resp = client.post("/coordinators", &asr).unwrap();
+    assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+    let id = resp.json().unwrap().get("id").as_str().unwrap().to_string();
+
+    let list_ckpts = || {
+        client
+            .get(&format!("/coordinators/{id}/checkpoints"))
+            .ok()
+            .and_then(|r| r.json().ok())
+            .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+            .unwrap_or_default()
+    };
+    wait_for("periodic cuts to accumulate on their own", || list_ckpts().len() >= 3);
+    let cks = list_ckpts();
+    let kinds: Vec<String> = cks
+        .iter()
+        .filter_map(|c| c.get("kind").as_str().map(str::to_string))
+        .collect();
+    assert_eq!(kinds.len(), cks.len(), "every cut reports its kind");
+    assert!(kinds.contains(&"full".to_string()), "{kinds:?}");
+    assert!(
+        kinds.contains(&"delta".to_string()),
+        "counter workload must go incremental: {kinds:?}"
+    );
+    for c in &cks {
+        if c.get("kind").as_str() == Some("delta") {
+            assert!(c.get("base_seq").as_u64().is_some(), "delta cut names its base");
+            assert!(c.get("delta_bytes").as_u64().unwrap_or(0) > 0);
+            // the delta moves far less than the ~8 KiB full image
+            assert!(
+                c.get("total_bytes").as_u64().unwrap() < 2048,
+                "delta cut too large: {c:?}"
+            );
+        }
+    }
+
+    // kill the proc mid-period: the monitor restores from the chain
+    let app = AppId::parse(&id).unwrap();
+    svc.kill_proc(app, 0).unwrap();
+    wait_for("monitor to restore the app from the chain", || {
+        svc.health(app).map(|h| h == vec![true]).unwrap_or(false)
+            && svc.state(app) == Some(cacs::coordinator::lifecycle::AppState::Running)
+    });
+    // and periodic cuts keep coming after recovery
+    let n_before = list_ckpts().len();
+    wait_for("periodic cuts to continue after recovery", || {
+        list_ckpts().len() > n_before
+    });
+    svc.delete(app).unwrap();
+}
+
+#[test]
+fn precopy_migration_ships_only_the_delta_at_the_barrier() {
+    // the delta-aware pre-copy: phase A streams the full image while
+    // the app keeps running; phase B quiesces and ships only the
+    // chunks dirtied meanwhile — the destination already holds the
+    // base of the cloned lineage, so downtime bytes are O(dirty)
+    let src_svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: None,
+            delta: DeltaPolicy { chunk_size: 4096, ..DeltaPolicy::default() },
+            ..ServiceConfig::default()
+        },
+    );
+    let dst_svc = svc_mem();
+    let srv_a = rest::serve(src_svc, "127.0.0.1:0", 4).unwrap();
+    let srv_b = rest::serve(dst_svc, "127.0.0.1:0", 4).unwrap();
+    let ca = Client::new(&srv_a.addr().to_string());
+    let cb = Client::new(&srv_b.addr().to_string());
+
+    let asr = Json::object([
+        ("name", "pre".into()),
+        (
+            "workload",
+            Json::object([("kind", "counter".into()), ("blob_bytes", (1u64 << 20).into())]),
+        ),
+        ("n_vms", 1u64.into()),
+    ]);
+    let src = ca
+        .post("/coordinators", &asr)
+        .unwrap()
+        .json()
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    wait_for("source app to make progress", || rest_iter(&ca, &src) >= 2);
+
+    let resp = ca
+        .post(
+            &format!("/coordinators/{src}/migrate"),
+            &Json::object([("dst", cb.base().into()), ("precopy", true.into())]),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let rep = resp.json().unwrap();
+    assert_eq!(rep.get("migrated").as_bool(), Some(true));
+    assert_eq!(rep.get("precopy").as_bool(), Some(true));
+    assert_eq!(rep.get("final_kind").as_str(), Some("delta"));
+    let precopy_bytes = rep.get("precopy_bytes").as_u64().unwrap();
+    let downtime_bytes = rep.get("downtime_bytes").as_u64().unwrap();
+    let bytes_moved = rep.get("bytes_moved").as_u64().unwrap();
+    assert!(precopy_bytes > 1 << 20, "pre-copy carries the ~1 MiB full image");
+    assert!(downtime_bytes > 0);
+    assert!(
+        downtime_bytes * 5 <= precopy_bytes,
+        "barrier transfer must be ≤20% of the full image: {downtime_bytes} vs {precopy_bytes}"
+    );
+    assert_eq!(bytes_moved, precopy_bytes + downtime_bytes);
+    assert!(rep.get("downtime_s").as_f64().unwrap() > 0.0);
+
+    // the clone runs at ≥ the cut, holds both chain cuts, with honest
+    // kind metadata for the uploaded images
+    let dst_id = rep.get("dst").as_str().unwrap().to_string();
+    let cut_iter = rep.get("iteration").as_u64().unwrap();
+    let dj = cb.get(&format!("/coordinators/{dst_id}")).unwrap().json().unwrap();
+    assert_eq!(dj.get("state").as_str(), Some("RUNNING"));
+    assert!(dj.get("iteration").as_u64().unwrap() >= cut_iter);
+    let dst_cks = cb
+        .get(&format!("/coordinators/{dst_id}/checkpoints"))
+        .unwrap()
+        .json()
+        .unwrap();
+    let dst_kinds: Vec<String> = dst_cks
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|c| c.get("kind").as_str().map(str::to_string))
+        .collect();
+    assert!(dst_kinds.contains(&"full".to_string()), "{dst_kinds:?}");
+    assert!(dst_kinds.contains(&"delta".to_string()), "{dst_kinds:?}");
+
+    // source terminated as usual
+    let sj = ca.get(&format!("/coordinators/{src}")).unwrap().json().unwrap();
+    assert_eq!(sj.get("state").as_str(), Some("TERMINATED"));
 }
 
 #[test]
