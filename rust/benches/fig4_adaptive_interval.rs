@@ -1,0 +1,264 @@
+//! Chaos acceptance + Young/Daly adaptive-interval payoff (Fig 4 class).
+//!
+//! Two parts, both seeded and bit-deterministic:
+//!
+//! 1. **Chaos acceptance** — plan `--events` (default 1000) chaos events
+//!    from `--seed` (default 0xCAC5), run them against the sim-mode CACS
+//!    stack twice, and hold the run to the harness invariants: no
+//!    acknowledged checkpoint lost, every app RUNNING or TERMINATED,
+//!    identical digests across the two runs.  On any violation the seed
+//!    is printed (the whole run replays from it), the failing event log
+//!    is ddmin-shrunk, and the minimal log is printed before exiting 1.
+//!
+//! 2. **Adaptive vs fixed intervals** — a closed-loop wasted-work model
+//!    driven by the *real* [`AdaptiveCkptState`] controller: seeded
+//!    exponential failures with a mid-run MTBF regime shift, against a
+//!    grid of fixed checkpoint periods.  Wasted work = cut overhead +
+//!    work lost to failures + restart cost, as a fraction of wall time.
+//!    The bench asserts the adaptive controller beats the best fixed
+//!    period — the payoff claim behind threading Young/Daly through the
+//!    service.
+//!
+//! `--json <path>` writes both parts as machine-readable JSON (the
+//! repo's `BENCH_*.json` format; CI uploads it as `BENCH_chaos`).
+
+use cacs::chaos::{self, sim::run_plan, ChaosConfig};
+use cacs::coordinator::adaptive::{AdaptiveCkptConfig, AdaptiveCkptState};
+use cacs::util::args::Args;
+use cacs::util::benchkit::Table;
+use cacs::util::json::Json;
+use cacs::util::rng::Rng;
+
+// ---------------------------------------------------------------- part 1
+
+fn chaos_acceptance(seed: u64, n_events: usize) -> Json {
+    println!("# chaos acceptance: {n_events} events from seed {seed} ({seed:#x})");
+    println!("  replay with: --seed {seed} --events {n_events}\n");
+
+    let cfg = ChaosConfig::sized(seed, n_events);
+    let events = chaos::plan(&cfg, n_events);
+    let a = run_plan(&cfg, &events);
+    let b = run_plan(&cfg, &events);
+    let reproducible = a.digest == b.digest && a.end_time == b.end_time;
+
+    let mut t = Table::new(["metric", "value"]);
+    t.row(["events injected".into(), events.len().to_string()]);
+    t.row(["virtual end time".into(), format!("{:.0} s", a.end_time)]);
+    t.row(["apps (incl. migration clones)".into(), a.apps_total.to_string()]);
+    t.row(["  running".into(), a.apps_running.to_string()]);
+    t.row(["  terminated".into(), a.apps_terminated.to_string()]);
+    t.row(["checkpoints acked".into(), a.ckpts_acked.to_string()]);
+    t.row(["checkpoints on record".into(), a.ckpts_held.to_string()]);
+    t.row(["digest".into(), format!("{:016x}", a.digest)]);
+    t.row(["bit-reproducible".into(), reproducible.to_string()]);
+    t.print();
+
+    if !a.ok() || !reproducible {
+        eprintln!("\nCHAOS FAILURE — replay with --seed {seed} --events {n_events}");
+        if !reproducible {
+            eprintln!("  non-deterministic: digest {:016x} vs {:016x}", a.digest, b.digest);
+        }
+        for v in &a.violations {
+            eprintln!("  violation: {v}");
+        }
+        if !a.ok() {
+            eprintln!("\nshrinking the failing event log (ddmin; each probe is a full run)...");
+            let min = chaos::shrink(&events, |evs| !run_plan(&cfg, evs).ok());
+            eprintln!("minimal failing log: {} of {} events", min.len(), events.len());
+            for ev in &min {
+                eprintln!("  at warmup+{:8.1}s  {:?}", ev.at, ev.kind);
+            }
+        }
+        std::process::exit(1);
+    }
+
+    let mut j = a.to_json();
+    j.set("events", (n_events as u64).into());
+    j.set("reproducible", reproducible.into());
+    j
+}
+
+// ---------------------------------------------------------------- part 2
+
+/// Failure times over `[0, horizon)`: exponential inter-arrivals with
+/// `mtbf_early` before the regime shift at `horizon/2` and `mtbf_late`
+/// after it.  One trace per seed, shared by every policy, so policies
+/// are compared on identical failure histories.
+fn failure_trace(seed: u64, horizon: f64, mtbf_early: f64, mtbf_late: f64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xfa11_0f_fa11_0f);
+    let mut t = 0.0;
+    let mut out = vec![];
+    loop {
+        let mtbf = if t < horizon / 2.0 { mtbf_early } else { mtbf_late };
+        t += rng.exp(1.0 / mtbf);
+        if t >= horizon {
+            return out;
+        }
+        out.push(t);
+    }
+}
+
+struct Outcome {
+    /// (elapsed − useful work) / elapsed.
+    wasted_frac: f64,
+    cuts: u64,
+    /// Interval in force when the horizon ran out.
+    final_period: f64,
+}
+
+/// Closed loop: compute for `period`, pay a (noisy) cut cost, repeat;
+/// a failure before the next cut completes loses everything since the
+/// last completed cut and costs `restart_cost` on top.  `adaptive`
+/// routes measured cut costs and failures into the real controller and
+/// lets it re-emit the period; otherwise the period stays fixed.
+fn simulate(
+    adaptive: bool,
+    period0: f64,
+    failures: &[f64],
+    horizon: f64,
+    cut_cost: f64,
+    restart_cost: f64,
+    seed: u64,
+) -> Outcome {
+    let acfg = AdaptiveCkptConfig::enabled();
+    let mut st = AdaptiveCkptState::default();
+    let mut rng = Rng::new(seed ^ 0xc07_c057_c07_c057);
+    let mut period = period0;
+    let mut t = 0.0;
+    let mut useful = 0.0;
+    let mut cuts = 0u64;
+    let mut nfail = 0usize;
+    while t < horizon {
+        let next_fail = failures.get(nfail).copied().unwrap_or(f64::INFINITY);
+        let c = rng.lognormal(cut_cost, 0.1);
+        if t + period + c <= next_fail {
+            // the cut completes: the period's work is banked
+            useful += period;
+            t += period + c;
+            cuts += 1;
+            if adaptive {
+                st.observe_cut(&acfg, c);
+                period = st.next_period(&acfg, period);
+            }
+        } else {
+            // failure first: work since the last completed cut is lost.
+            // max() covers a failure landing inside the restart itself.
+            t = t.max(next_fail) + restart_cost;
+            nfail += 1;
+            if adaptive {
+                st.observe_failure(&acfg, next_fail);
+                period = st.next_period(&acfg, period);
+            }
+        }
+    }
+    Outcome { wasted_frac: ((t - useful) / t).max(0.0), cuts, final_period: period }
+}
+
+fn adaptive_vs_fixed(base_seed: u64) -> Json {
+    const HORIZON: f64 = 200_000.0;
+    const CUT_COST: f64 = 8.0;
+    const RESTART: f64 = 60.0;
+    const MTBF_EARLY: f64 = 3000.0;
+    const MTBF_LATE: f64 = 400.0;
+    const N_SEEDS: u64 = 5;
+    const FIXED: [f64; 5] = [20.0, 60.0, 180.0, 600.0, 1800.0];
+
+    println!("\n# adaptive vs fixed checkpoint intervals");
+    println!("  horizon {HORIZON:.0} s, cut ~{CUT_COST} s, restart {RESTART} s");
+    println!("  MTBF {MTBF_EARLY} s -> {MTBF_LATE} s at half-time, {N_SEEDS} seeds\n");
+
+    let traces: Vec<Vec<f64>> = (0..N_SEEDS)
+        .map(|i| failure_trace(base_seed.wrapping_add(i), HORIZON, MTBF_EARLY, MTBF_LATE))
+        .collect();
+
+    let mut rows: Vec<Json> = vec![];
+    let mut t = Table::new(["policy", "wasted work", "cuts/run", "period at end"]);
+    let mut run_policy = |name: &str, adaptive: bool, p0: f64| -> f64 {
+        let (mut waste, mut cuts, mut fin) = (0.0, 0.0, 0.0);
+        for (i, trace) in traces.iter().enumerate() {
+            let o = simulate(
+                adaptive,
+                p0,
+                trace,
+                HORIZON,
+                CUT_COST,
+                RESTART,
+                base_seed.wrapping_add(i as u64),
+            );
+            waste += o.wasted_frac;
+            cuts += o.cuts as f64;
+            fin += o.final_period;
+        }
+        let n = traces.len() as f64;
+        let (waste, cuts, fin) = (waste / n, cuts / n, fin / n);
+        t.row([
+            name.into(),
+            format!("{:.2} %", waste * 100.0),
+            format!("{cuts:.0}"),
+            format!("{fin:.0} s"),
+        ]);
+        rows.push(Json::object([
+            ("policy", name.into()),
+            ("wasted_frac", waste.into()),
+            ("cuts_per_run", cuts.into()),
+            ("final_period_s", fin.into()),
+        ]));
+        waste
+    };
+
+    let mut best_fixed = f64::INFINITY;
+    for p in FIXED {
+        let w = run_policy(&format!("fixed {p:.0} s"), false, p);
+        best_fixed = best_fixed.min(w);
+    }
+    let adaptive = run_policy("adaptive (Young/Daly)", true, 60.0);
+    t.print();
+
+    let gain = (1.0 - adaptive / best_fixed) * 100.0;
+    let a_pct = adaptive * 100.0;
+    let f_pct = best_fixed * 100.0;
+    println!("\nadaptive wastes {a_pct:.2} % vs {f_pct:.2} % for the best fixed ({gain:+.1} %)");
+    if adaptive >= best_fixed {
+        eprintln!("FAIL: adaptive ({adaptive:.4}) must beat the best fixed ({best_fixed:.4})");
+        std::process::exit(1);
+    }
+
+    Json::object([
+        ("horizon_s", HORIZON.into()),
+        ("cut_cost_s", CUT_COST.into()),
+        ("restart_cost_s", RESTART.into()),
+        ("mtbf_early_s", MTBF_EARLY.into()),
+        ("mtbf_late_s", MTBF_LATE.into()),
+        ("seeds", N_SEEDS.into()),
+        ("rows", Json::Arr(rows)),
+        ("best_fixed_wasted_frac", best_fixed.into()),
+        ("adaptive_wasted_frac", adaptive.into()),
+        ("improvement_pct", gain.into()),
+    ])
+}
+
+// ---------------------------------------------------------------- main
+
+fn main() {
+    let args = Args::from_env();
+    let seed = args.u64_or("seed", 0xCAC5);
+    let n_events = args.usize_or("events", 1000);
+
+    let chaos_json = chaos_acceptance(seed, n_events);
+    let payoff_json = adaptive_vs_fixed(seed);
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::object([
+            ("bench", "fig4_adaptive_interval".into()),
+            ("chaos", chaos_json),
+            ("adaptive_vs_fixed", payoff_json),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

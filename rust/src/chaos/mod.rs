@@ -1,0 +1,274 @@
+//! Deterministic, seeded chaos harness over the sim-mode CACS stack.
+//!
+//! Everything the harness does is reproducible from one `u64` seed: the
+//! seed fixes the injected event plan ([`plan`]), the world it runs
+//! against, and every model sample drawn while the run unfolds, so a
+//! failing run reported by CI can be replayed bit-for-bit from the
+//! printed seed alone.  The pieces:
+//!
+//! * [`ChaosKind`] / [`ChaosEvent`] — the injectable event vocabulary:
+//!   network partitions that split an app's monitor broadcast tree
+//!   (split-brain), asymmetric link degradation, slow storage back
+//!   ends, clock skew between CACS instances, straight app/VM crashes,
+//!   and crash points parked inside every multi-step protocol
+//!   (checkpoint, delta-chain restore, migration);
+//! * [`plan`] — seeded, weighted generation of an event schedule;
+//! * [`sim::run_plan`] — executes a schedule against a freshly built
+//!   two-cloud world and returns a [`sim::ChaosReport`] carrying the
+//!   invariant violations (if any) and a run digest for
+//!   bit-reproducibility checks;
+//! * [`shrink`] — ddmin-style minimisation of a failing event log: CI
+//!   prints the seed plus the minimal sub-schedule that still trips the
+//!   invariant.
+//!
+//! The invariants every run is held to: no acknowledged checkpoint is
+//! ever lost, and after the grace window every application sits in
+//! RUNNING or cleanly TERMINATED — never wedged half way through a
+//! protocol.
+
+pub mod sim;
+
+use crate::util::rng::Rng;
+
+/// One injectable fault or action.  `app` fields index the harness's
+/// app registry (migrations re-point an index at the clone), `cloud`
+/// fields index the two harness clouds (0 = Snooze, 1 = OpenStack).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChaosKind {
+    /// §6.3 case 2: the health hook fails while VMs stay reachable.
+    AppCrash { app: usize },
+    /// §6.3 case 1: the server under the app's first VM dies.
+    VmCrash { app: usize },
+    /// Split-brain: the app's NICs are cut off and the monitor loses
+    /// the whole broadcast tree for `for_s` seconds while the app
+    /// itself keeps computing on the far side.
+    Partition { app: usize, for_s: f64 },
+    /// Asymmetric degradation: the app's NIC capacities are scaled by
+    /// `factor` for `for_s` seconds.
+    DegradeLink { app: usize, factor: f64, for_s: f64 },
+    /// The storage back end's server links slow down by `factor`.
+    SlowStore { factor: f64, for_s: f64 },
+    /// One cloud's CACS instance drifts `skew_s` seconds off true time
+    /// (shows up in stamped metadata, never in event order).
+    ClockSkew { cloud: usize, skew_s: f64 },
+    /// User-triggered checkpoint (§5.2 mode 1).
+    Checkpoint { app: usize },
+    /// Restart from the latest image (§5.3).
+    Restart { app: usize },
+    /// Cross-cloud migration (§5.3); the registry follows the clone.
+    Migrate { app: usize, to_cloud: usize },
+    /// DELETE /coordinators/:id (§5.4).
+    Terminate { app: usize },
+    /// Crash point: start a checkpoint, then fail the app `after_s`
+    /// seconds in — mid local cut or mid upload.
+    CrashDuringCheckpoint { app: usize, after_s: f64 },
+    /// Crash point: start a restore, then kill a VM `after_s` seconds
+    /// in — mid download or mid local restart.
+    CrashDuringRestore { app: usize, after_s: f64 },
+    /// Crash point: start a migration, then kill a source VM while the
+    /// clone is still building/restoring.
+    CrashDuringMigration { app: usize, to_cloud: usize, after_s: f64 },
+}
+
+/// An event at a virtual-time offset from the end of warmup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosEvent {
+    pub at: f64,
+    pub kind: ChaosKind,
+}
+
+/// Harness shape: world size and schedule window.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// The one seed everything derives from.
+    pub seed: u64,
+    /// Applications submitted during warmup (half per cloud).
+    pub n_apps: usize,
+    /// Servers per cloud — sized so the run survives every VM crash in
+    /// the plan (a killed server never comes back).
+    pub n_servers: usize,
+    /// Injection window (s) after warmup over which events spread.
+    pub horizon: f64,
+    /// Drain window (s) after the last event: every in-flight recovery,
+    /// retry back-off and heal must settle inside it.
+    pub grace: f64,
+}
+
+impl ChaosConfig {
+    /// A config sized for an `n_events`-event run.
+    pub fn sized(seed: u64, n_events: usize) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            n_apps: 6,
+            // ~15% of events kill a server for good; keep enough spares
+            n_servers: (n_events / 8).max(96),
+            horizon: (n_events as f64 * 4.0).max(600.0),
+            grace: 2400.0,
+        }
+    }
+}
+
+/// Generate a seeded, weighted event schedule: crashes and protocol
+/// crash points ~30%, connectivity/storage/clock disturbance ~31%,
+/// normal driver actions (checkpoint/restart/migrate/terminate) the
+/// rest.  Terminations are capped so the run keeps enough live apps to
+/// stay interesting.  Deterministic: same config, same plan.
+pub fn plan(cfg: &ChaosConfig, n_events: usize) -> Vec<ChaosEvent> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5eed_c4a0_5eed_c4a0);
+    let mut terminates_left = (cfg.n_apps / 4).max(1);
+    let mut evs = Vec::with_capacity(n_events);
+    for _ in 0..n_events {
+        let at = rng.uniform(0.0, cfg.horizon);
+        // drawn even for kinds that ignore it, to keep the stream stable
+        let app = rng.pick(cfg.n_apps);
+        let roll = rng.f64();
+        let kind = if roll < 0.10 {
+            ChaosKind::AppCrash { app }
+        } else if roll < 0.15 {
+            ChaosKind::VmCrash { app }
+        } else if roll < 0.23 {
+            ChaosKind::Partition { app, for_s: rng.uniform(10.0, 60.0) }
+        } else if roll < 0.33 {
+            ChaosKind::DegradeLink {
+                app,
+                factor: rng.uniform(0.05, 0.5),
+                for_s: rng.uniform(20.0, 120.0),
+            }
+        } else if roll < 0.41 {
+            ChaosKind::SlowStore { factor: rng.uniform(0.1, 0.5), for_s: rng.uniform(20.0, 120.0) }
+        } else if roll < 0.46 {
+            ChaosKind::ClockSkew { cloud: rng.pick(2), skew_s: rng.uniform(-300.0, 300.0) }
+        } else if roll < 0.71 {
+            ChaosKind::Checkpoint { app }
+        } else if roll < 0.79 {
+            ChaosKind::Restart { app }
+        } else if roll < 0.83 {
+            ChaosKind::Migrate { app, to_cloud: rng.pick(2) }
+        } else if roll < 0.88 {
+            ChaosKind::CrashDuringCheckpoint { app, after_s: rng.uniform(0.05, 2.0) }
+        } else if roll < 0.93 {
+            ChaosKind::CrashDuringRestore { app, after_s: rng.uniform(0.05, 2.0) }
+        } else if roll < 0.98 {
+            ChaosKind::CrashDuringMigration {
+                app,
+                to_cloud: rng.pick(2),
+                after_s: rng.uniform(0.5, 5.0),
+            }
+        } else if terminates_left > 0 {
+            terminates_left -= 1;
+            ChaosKind::Terminate { app }
+        } else {
+            ChaosKind::Checkpoint { app }
+        };
+        evs.push(ChaosEvent { at, kind });
+    }
+    evs.sort_by(|a, b| a.at.total_cmp(&b.at));
+    evs
+}
+
+/// ddmin-style shrink: given a failing event log and a predicate that
+/// re-runs a candidate sub-log and answers "does it still fail?",
+/// return a (locally) minimal sub-log that still trips the failure.
+/// Each candidate keeps the original relative order, so the minimal log
+/// replays against the same seed.
+pub fn shrink<F>(events: &[ChaosEvent], still_fails: F) -> Vec<ChaosEvent>
+where
+    F: Fn(&[ChaosEvent]) -> bool,
+{
+    let mut cur = events.to_vec();
+    let mut n = 2usize;
+    while cur.len() >= 2 {
+        let chunk = cur.len().div_ceil(n);
+        let mut reduced = false;
+        let mut i = 0;
+        while i < cur.len() {
+            let mut candidate = cur.clone();
+            let end = (i + chunk).min(candidate.len());
+            candidate.drain(i..end);
+            if !candidate.is_empty() && still_fails(&candidate) {
+                cur = candidate;
+                n = n.saturating_sub(1).max(2);
+                reduced = true;
+                // re-scan from the front at the smaller size
+                i = 0;
+            } else {
+                i += chunk;
+            }
+        }
+        if !reduced {
+            if n >= cur.len() {
+                break;
+            }
+            n = (n * 2).min(cur.len());
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic_in_the_seed() {
+        let cfg = ChaosConfig::sized(42, 200);
+        let a = plan(&cfg, 200);
+        let b = plan(&cfg, 200);
+        assert_eq!(a, b);
+        let other = plan(&ChaosConfig::sized(43, 200), 200);
+        assert_ne!(a, other, "different seeds must give different plans");
+    }
+
+    #[test]
+    fn plan_is_sorted_and_in_window() {
+        let cfg = ChaosConfig::sized(7, 500);
+        let evs = plan(&cfg, 500);
+        assert_eq!(evs.len(), 500);
+        for w in evs.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(evs.iter().all(|e| e.at >= 0.0 && e.at < cfg.horizon));
+    }
+
+    #[test]
+    fn plan_caps_terminations() {
+        let cfg = ChaosConfig::sized(11, 2000);
+        let evs = plan(&cfg, 2000);
+        let terms = evs
+            .iter()
+            .filter(|e| matches!(e.kind, ChaosKind::Terminate { .. }))
+            .count();
+        assert!(terms <= (cfg.n_apps / 4).max(1), "terms={terms}");
+    }
+
+    #[test]
+    fn shrink_finds_the_single_culprit() {
+        let cfg = ChaosConfig::sized(5, 64);
+        let evs = plan(&cfg, 64);
+        // synthetic failure: any log containing a VmCrash "fails"
+        let culprit = |evs: &[ChaosEvent]| {
+            evs.iter().any(|e| matches!(e.kind, ChaosKind::VmCrash { .. }))
+        };
+        assert!(culprit(&evs), "seed 5 plan should contain a VmCrash");
+        let min = shrink(&evs, culprit);
+        assert_eq!(min.len(), 1, "minimal log should be one event: {min:?}");
+        assert!(matches!(min[0].kind, ChaosKind::VmCrash { .. }));
+    }
+
+    #[test]
+    fn shrink_keeps_event_pairs_that_fail_only_together() {
+        let cfg = ChaosConfig::sized(9, 64);
+        let evs = plan(&cfg, 64);
+        let has = |evs: &[ChaosEvent], f: fn(&ChaosKind) -> bool| evs.iter().any(|e| f(&e.kind));
+        let needs_pair = |evs: &[ChaosEvent]| {
+            has(evs, |k| matches!(k, ChaosKind::Checkpoint { .. }))
+                && has(evs, |k| matches!(k, ChaosKind::Restart { .. }))
+        };
+        if !needs_pair(&evs) {
+            return; // plan happens not to carry both; nothing to shrink
+        }
+        let min = shrink(&evs, needs_pair);
+        assert_eq!(min.len(), 2, "{min:?}");
+        assert!(needs_pair(&min));
+    }
+}

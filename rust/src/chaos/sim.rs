@@ -1,0 +1,413 @@
+//! Chaos plan execution against the sim-mode CACS stack.
+//!
+//! [`run_plan`] builds a fresh two-cloud world (Snooze + OpenStack, a
+//! Ceph back end, `n_apps` 2-VM LU applications with periodic
+//! checkpoints and the Young/Daly adaptive controller on), warms it up
+//! until every app is RUNNING with at least one acknowledged cut, then
+//! installs the whole event schedule as DES events and lets it run to
+//! `horizon + grace`.  The returned [`ChaosReport`] carries:
+//!
+//! * the invariant violations (empty on a healthy run): every acked
+//!   checkpoint still on record, every app in RUNNING or TERMINATED;
+//! * a FNV digest over the end state (lifecycles, checkpoint records,
+//!   stamped timestamps, transfer counts) — two runs from the same seed
+//!   must produce identical digests, which is how CI detects
+//!   non-determinism sneaking into the models.
+//!
+//! Sim-mode mapping of the fault vocabulary: partitions and link
+//! degradation reshape NIC capacities in the fluid network (floored,
+//! never zero, so stalled flows resume on heal) and make the monitor's
+//! broadcast tree unreachable; slow stores scale the storage server
+//! links; failing/torn stores are a real-mode concern covered by
+//! `storage::fault::FaultStore`.  After *any* capacity change the
+//! network pump must be re-armed ([`simdrv::pump_net`]) because the
+//! generation bump invalidates scheduled wake-ups.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::chaos::{ChaosConfig, ChaosEvent, ChaosKind};
+use crate::coordinator::adaptive::AdaptiveCkptConfig;
+use crate::coordinator::lifecycle::AppState;
+use crate::coordinator::simdrv::{self, SimCacs, SimWorld};
+use crate::coordinator::types::{Asr, WorkloadSpec};
+use crate::netsim::LinkId;
+use crate::simexec::Sim;
+use crate::util::ids::AppId;
+use crate::util::json::Json;
+
+/// Virtual time spent getting every app to RUNNING with one acked cut
+/// before injection starts.
+pub const WARMUP_S: f64 = 1200.0;
+
+/// Outcome of one chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub seed: u64,
+    /// FNV-1a over the end state; equal across same-seed runs.
+    pub digest: u64,
+    pub end_time: f64,
+    /// All coordinators ever created (initial apps + migration clones).
+    pub apps_total: usize,
+    pub apps_running: usize,
+    pub apps_terminated: usize,
+    /// Checkpoints acknowledged to the user (the `ckpt.uploads` counter).
+    pub ckpts_acked: u64,
+    /// Checkpoint records still held across all coordinators.
+    pub ckpts_held: u64,
+    pub violations: Vec<String>,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seed", self.seed.into());
+        j.set("digest", format!("{:016x}", self.digest).into());
+        j.set("end_time_s", self.end_time.into());
+        j.set("apps_total", self.apps_total.into());
+        j.set("apps_running", self.apps_running.into());
+        j.set("apps_terminated", self.apps_terminated.into());
+        j.set("ckpts_acked", self.ckpts_acked.into());
+        j.set("ckpts_held", self.ckpts_held.into());
+        j.set("violations", self.violations.clone().into());
+        j
+    }
+}
+
+/// Execute `events` against a fresh seeded world; see module docs.
+pub fn run_plan(cfg: &ChaosConfig, events: &[ChaosEvent]) -> ChaosReport {
+    let mut violations: Vec<String> = vec![];
+    let mut cacs = SimCacs::new(cfg.seed);
+    cacs.world.params.adaptive =
+        AdaptiveCkptConfig { enabled: true, min_period: 30.0, ..AdaptiveCkptConfig::default() };
+    // chaos parks apps in ERROR far more often than production would;
+    // the retry budget must outlive clustered outages
+    cacs.world.params.max_recovery_retries = 100;
+    let snooze = cacs.add_snooze(cfg.n_servers);
+    let openstack = cacs.add_openstack(cfg.n_servers);
+    let clouds = [snooze, openstack];
+
+    let mut apps: Vec<AppId> = Vec::with_capacity(cfg.n_apps);
+    for i in 0..cfg.n_apps {
+        let asr = Asr::new(&format!("chaos-{i}"), WorkloadSpec::Lu { nz: 32, ny: 32, nx: 32 }, 2)
+            .with_period(60.0);
+        match cacs.submit(clouds[i % clouds.len()], asr) {
+            Ok(id) => apps.push(id),
+            Err(e) => violations.push(format!("submit {i} failed: {e}")),
+        }
+    }
+    cacs.run_until(WARMUP_S);
+    for &app in &apps {
+        let rec = cacs.world.db.get(app);
+        let state = rec.map(|r| r.lifecycle.state());
+        if state != Some(AppState::Running) {
+            violations.push(format!("warmup: {app} is {state:?}, not RUNNING"));
+        }
+        if rec.map(|r| r.ckpts.is_empty()).unwrap_or(true) {
+            violations.push(format!("warmup: {app} has no acknowledged checkpoint"));
+        }
+    }
+
+    // the registry follows migrations: when an app is migrated its slot
+    // re-points at the clone, so later events keep hitting the live
+    // incarnation instead of a terminated shell
+    let registry = Rc::new(RefCell::new(apps));
+    for ev in events {
+        let kind = ev.kind;
+        let reg = Rc::clone(&registry);
+        cacs.sim.at(WARMUP_S + ev.at, move |sim, w| apply(sim, w, &reg, kind));
+    }
+    cacs.run_until(WARMUP_S + cfg.horizon + cfg.grace);
+    finish(cfg, &cacs, violations)
+}
+
+fn apply(sim: &mut Sim<SimWorld>, w: &mut SimWorld, reg: &Rc<RefCell<Vec<AppId>>>, kind: ChaosKind) {
+    match kind {
+        ChaosKind::AppCrash { app } => {
+            let id = reg.borrow()[app];
+            simdrv::app_failure_now(w, id);
+        }
+        ChaosKind::VmCrash { app } => {
+            let id = reg.borrow()[app];
+            simdrv::vm_failure_now(sim, w, id);
+        }
+        ChaosKind::Partition { app, for_s } => {
+            let id = reg.borrow()[app];
+            partition(sim, w, id, for_s);
+        }
+        ChaosKind::DegradeLink { app, factor, for_s } => {
+            let id = reg.borrow()[app];
+            scale_nics(sim, w, id, factor, for_s);
+        }
+        ChaosKind::SlowStore { factor, for_s } => slow_store(sim, w, factor, for_s),
+        ChaosKind::ClockSkew { cloud, skew_s } => {
+            if let Some(s) = w.clock_skew.get_mut(cloud) {
+                *s = skew_s;
+            }
+        }
+        ChaosKind::Checkpoint { app } => {
+            let id = reg.borrow()[app];
+            simdrv::start_checkpoint(sim, w, id);
+        }
+        ChaosKind::Restart { app } => {
+            let id = reg.borrow()[app];
+            simdrv::start_restart(sim, w, id);
+        }
+        ChaosKind::Migrate { app, to_cloud } => {
+            let id = reg.borrow()[app];
+            if let Ok(clone) = simdrv::migrate_now(sim, w, id, to_cloud) {
+                reg.borrow_mut()[app] = clone;
+            }
+        }
+        ChaosKind::Terminate { app } => {
+            let id = reg.borrow()[app];
+            simdrv::terminate(sim, w, id);
+        }
+        ChaosKind::CrashDuringCheckpoint { app, after_s } => {
+            let id = reg.borrow()[app];
+            simdrv::start_checkpoint(sim, w, id);
+            sim.after(after_s, move |_sim, w| simdrv::app_failure_now(w, id));
+        }
+        ChaosKind::CrashDuringRestore { app, after_s } => {
+            let id = reg.borrow()[app];
+            simdrv::start_restart(sim, w, id);
+            sim.after(after_s, move |sim, w| simdrv::vm_failure_now(sim, w, id));
+        }
+        ChaosKind::CrashDuringMigration { app, to_cloud, after_s } => {
+            let id = reg.borrow()[app];
+            if let Ok(clone) = simdrv::migrate_now(sim, w, id, to_cloud) {
+                reg.borrow_mut()[app] = clone;
+                // kill the *source* mid-transfer; the clone must still
+                // come up from the shared images
+                sim.after(after_s, move |sim, w| simdrv::vm_failure_now(sim, w, id));
+            }
+        }
+    }
+}
+
+/// Cut the app's NICs to the capacity floor and mark the monitor's
+/// broadcast tree unreachable for `for_s` seconds (split-brain), then
+/// heal.  Capacities are floored, never zeroed, so flows stalled by the
+/// partition resume on heal.
+fn partition(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, for_s: f64) {
+    let now = sim.now();
+    if let Some(e) = w.ext.get_mut(&app) {
+        e.partitioned_until = e.partitioned_until.max(now + for_s);
+    }
+    let saved = set_nic_caps(w, now, app, |_| 0.0);
+    simdrv::pump_net(sim, w);
+    sim.after(for_s, move |sim, w| heal(sim, w, saved));
+}
+
+/// Scale the app's NIC capacities by `factor` for `for_s` seconds.
+fn scale_nics(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, factor: f64, for_s: f64) {
+    let now = sim.now();
+    let saved = set_nic_caps(w, now, app, |cur| cur * factor);
+    simdrv::pump_net(sim, w);
+    sim.after(for_s, move |sim, w| heal(sim, w, saved));
+}
+
+/// Scale the storage back end's server links by `factor` (the sim-mode
+/// slow-store fault) for `for_s` seconds.
+fn slow_store(sim: &mut Sim<SimWorld>, w: &mut SimWorld, factor: f64, for_s: f64) {
+    let now = sim.now();
+    let links = w.storage.server_links.clone();
+    let mut saved = Vec::with_capacity(links.len());
+    for link in links {
+        let cur = w.net.link_capacity(link);
+        let prev = w.net.set_link_capacity(now, link, cur * factor);
+        saved.push((link, prev));
+    }
+    simdrv::pump_net(sim, w);
+    sim.after(for_s, move |sim, w| heal(sim, w, saved));
+}
+
+fn set_nic_caps(
+    w: &mut SimWorld,
+    now: f64,
+    app: AppId,
+    new_cap: impl Fn(f64) -> f64,
+) -> Vec<(LinkId, f64)> {
+    let Some(rec) = w.db.get(app) else { return vec![] };
+    let cloud_idx = rec.cloud_idx;
+    let vms = rec.vms.clone();
+    let mut saved = Vec::with_capacity(vms.len());
+    for vm in vms {
+        let nic = match w.clouds[cloud_idx].vm_record(vm) {
+            Some(r) => r.nic,
+            None => continue,
+        };
+        let cur = w.net.link_capacity(nic);
+        let prev = w.net.set_link_capacity(now, nic, new_cap(cur));
+        saved.push((nic, prev));
+    }
+    saved
+}
+
+/// Restore saved capacities (in reverse, to unwind duplicates sanely)
+/// and re-arm the pump off the reshaped completion schedule.
+fn heal(sim: &mut Sim<SimWorld>, w: &mut SimWorld, saved: Vec<(LinkId, f64)>) {
+    let now = sim.now();
+    for (link, prev) in saved.into_iter().rev() {
+        w.net.set_link_capacity(now, link, prev);
+    }
+    simdrv::pump_net(sim, w);
+}
+
+fn finish(cfg: &ChaosConfig, cacs: &SimCacs, mut violations: Vec<String>) -> ChaosReport {
+    let w = &cacs.world;
+    let mut running = 0usize;
+    let mut terminated = 0usize;
+    for rec in w.db.iter() {
+        match rec.lifecycle.state() {
+            AppState::Running => running += 1,
+            AppState::Terminated => terminated += 1,
+            s => violations.push(format!("{} ended {s}, not RUNNING/TERMINATED", rec.id)),
+        }
+    }
+    let acked = w.rec.counter("ckpt.uploads") as u64;
+    let held: u64 = w.db.iter().map(|r| r.ckpts.len() as u64).sum();
+    if held != acked {
+        violations.push(format!(
+            "acknowledged checkpoints lost: {acked} acked, {held} on record"
+        ));
+    }
+    ChaosReport {
+        seed: cfg.seed,
+        digest: digest(cacs),
+        end_time: cacs.sim.now(),
+        apps_total: w.db.len(),
+        apps_running: running,
+        apps_terminated: terminated,
+        ckpts_acked: acked,
+        ckpts_held: held,
+        violations,
+    }
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn mix(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// FNV-1a over everything observable about the end state.  Two runs
+/// from the same seed over the same plan must agree bit-for-bit.
+pub fn digest(cacs: &SimCacs) -> u64 {
+    let w = &cacs.world;
+    let mut h = Fnv::new();
+    h.mix(cacs.sim.now().to_bits());
+    h.mix(w.db.len() as u64);
+    for rec in w.db.iter() {
+        h.mix(rec.id.0);
+        h.mix(rec.lifecycle.state() as u64);
+        h.mix(rec.vms.len() as u64);
+        h.mix(rec.ckpts.len() as u64);
+        for ck in &rec.ckpts {
+            h.mix(ck.seq);
+            h.mix(ck.taken_at.to_bits());
+            h.mix(ck.total_bytes);
+        }
+        if let Some(e) = w.ext.get(&rec.id) {
+            h.mix(e.heartbeats.len() as u64);
+            h.mix(e.ckpt_timings.len() as u64);
+            h.mix(e.restart_timings.len() as u64);
+        }
+    }
+    h.mix(w.rec.counter("ckpt.uploads").to_bits());
+    h.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::plan;
+
+    #[test]
+    fn same_seed_same_digest() {
+        let cfg = ChaosConfig::sized(0xCAC5, 60);
+        let evs = plan(&cfg, 60);
+        let a = run_plan(&cfg, &evs);
+        let b = run_plan(&cfg, &evs);
+        assert!(a.ok(), "seed {} violations: {:?}", a.seed, a.violations);
+        assert_eq!(a.digest, b.digest, "same seed must be bit-reproducible");
+        assert_eq!(a.end_time, b.end_time);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let c1 = ChaosConfig::sized(100, 40);
+        let c2 = ChaosConfig::sized(101, 40);
+        let a = run_plan(&c1, &plan(&c1, 40));
+        let b = run_plan(&c2, &plan(&c2, 40));
+        assert_ne!(a.digest, b.digest);
+    }
+
+    #[test]
+    fn acceptance_no_lost_cuts_every_app_settles() {
+        // a scaled-down version of the 1000-event CI acceptance run
+        let cfg = ChaosConfig::sized(1, 150);
+        let evs = plan(&cfg, 150);
+        let r = run_plan(&cfg, &evs);
+        assert!(r.ok(), "seed {} violations: {:?}", r.seed, r.violations);
+        assert_eq!(r.ckpts_held, r.ckpts_acked, "acked cuts must survive");
+        assert_eq!(r.apps_running + r.apps_terminated, r.apps_total);
+        assert!(r.ckpts_acked > 20, "chaos run should keep checkpointing: {}", r.ckpts_acked);
+    }
+
+    #[test]
+    fn partition_splits_the_brain_then_heals() {
+        // one 30 s partition: the monitor must lose the broadcast tree,
+        // spuriously recover the app (split-brain), and end RUNNING
+        let cfg = ChaosConfig::sized(3, 0);
+        let evs =
+            vec![ChaosEvent { at: 10.0, kind: ChaosKind::Partition { app: 0, for_s: 30.0 } }];
+        let r = run_plan(&cfg, &evs);
+        assert!(r.ok(), "violations: {:?}", r.violations);
+    }
+
+    #[test]
+    fn crash_points_recover_mid_protocol() {
+        let cfg = ChaosConfig::sized(8, 0);
+        let evs = vec![
+            ChaosEvent { at: 5.0, kind: ChaosKind::CrashDuringCheckpoint { app: 0, after_s: 0.5 } },
+            ChaosEvent { at: 60.0, kind: ChaosKind::CrashDuringRestore { app: 1, after_s: 1.0 } },
+            ChaosEvent {
+                at: 120.0,
+                kind: ChaosKind::CrashDuringMigration { app: 2, to_cloud: 1, after_s: 2.0 },
+            },
+        ];
+        let r = run_plan(&cfg, &evs);
+        assert!(r.ok(), "violations: {:?}", r.violations);
+        // the migrated slot ended as a clone beyond the initial set
+        assert!(r.apps_total > cfg.n_apps, "migration should have cloned");
+        assert!(r.apps_terminated >= 1, "migration source should be torn down");
+    }
+
+    #[test]
+    fn clock_skew_never_changes_behaviour_only_stamps() {
+        let cfg = ChaosConfig::sized(21, 0);
+        let base = run_plan(&cfg, &[]);
+        let skewed = run_plan(
+            &cfg,
+            &[ChaosEvent { at: 1.0, kind: ChaosKind::ClockSkew { cloud: 0, skew_s: 240.0 } }],
+        );
+        assert!(base.ok() && skewed.ok());
+        // same number of cuts acked either way — skew shifts stamped
+        // metadata (which the digest sees) but never event order
+        assert_eq!(base.ckpts_acked, skewed.ckpts_acked);
+        assert_ne!(base.digest, skewed.digest, "skewed stamps must show in the digest");
+    }
+}

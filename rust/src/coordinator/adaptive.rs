@@ -1,0 +1,273 @@
+//! Young/Daly adaptive checkpoint intervals.
+//!
+//! The paper's §5.2 mode-2 periodic checkpointing takes a fixed
+//! `ckpt_period` from the ASR.  A fixed period is only optimal for one
+//! (cut cost, failure rate) point: too short wastes work on checkpoint
+//! overhead, too long loses work to failures.  The classic first-order
+//! optimum (Young 1974, Daly 2006) is
+//!
+//! ```text
+//! period* = sqrt(2 · C · MTBF)
+//! ```
+//!
+//! where `C` is the time one cut costs the application and `MTBF` the
+//! mean time between failures.  Neither input is known up front, so
+//! this module is a tiny online controller: the service feeds it every
+//! measured cut cost and every confirmed failure, it keeps EWMA
+//! estimates of both, and [`AdaptiveCkptState::next_period`] emits a
+//! clamped, output-smoothed interval.  Both drivers share it — the
+//! real-mode ticker ([`super::service::CacsService::periodic_round`])
+//! and the sim driver's periodic scheduler — and the live interval plus
+//! its inputs are reported on `GET /coordinators/:id`.
+
+use crate::util::json::Json;
+
+/// Controller tuning, threaded through `ServiceConfig` / `SimParams`.
+#[derive(Debug, Clone)]
+pub struct AdaptiveCkptConfig {
+    /// Off by default: the ASR's fixed `ckpt_period` stays authoritative.
+    pub enabled: bool,
+    /// Clamp floor for the emitted period (s) — a noisy MTBF estimate
+    /// must never drive the service into checkpointing back-to-back.
+    pub min_period: f64,
+    /// Clamp ceiling (s): even on an apparently failure-free run, cuts
+    /// keep happening often enough that the first failure is not a
+    /// disaster.
+    pub max_period: f64,
+    /// EWMA smoothing factor in (0, 1] for the cut-cost and MTBF
+    /// estimates and for the emitted period itself (1 = no smoothing).
+    pub alpha: f64,
+    /// Assumed MTBF (s) before the first failure gap is observed.
+    pub default_mtbf: f64,
+}
+
+impl Default for AdaptiveCkptConfig {
+    fn default() -> Self {
+        AdaptiveCkptConfig {
+            enabled: false,
+            min_period: 5.0,
+            max_period: 3600.0,
+            alpha: 0.3,
+            default_mtbf: 3600.0,
+        }
+    }
+}
+
+impl AdaptiveCkptConfig {
+    /// Enabled with the default clamps (convenience for tests/benches).
+    pub fn enabled() -> AdaptiveCkptConfig {
+        AdaptiveCkptConfig { enabled: true, ..Default::default() }
+    }
+}
+
+fn ewma(prev: Option<f64>, sample: f64, alpha: f64) -> f64 {
+    match prev {
+        Some(p) => p + alpha * (sample - p),
+        None => sample,
+    }
+}
+
+/// Per-application controller state (lives in `AppRecord` / `SimAppExt`).
+#[derive(Debug, Clone, Default)]
+pub struct AdaptiveCkptState {
+    /// EWMA of observed per-cut cost (s); None until the first cut.
+    pub cut_cost_ewma: Option<f64>,
+    /// EWMA of observed failure gaps (s); None until two failures.
+    pub mtbf_ewma: Option<f64>,
+    /// Service-clock time of the most recent confirmed failure.
+    pub last_failure_at: Option<f64>,
+    /// Confirmed failures fed to the controller.
+    pub failures: u64,
+    /// The interval most recently emitted by [`Self::next_period`] —
+    /// what the REST surface reports as the live interval.
+    pub period: Option<f64>,
+}
+
+impl AdaptiveCkptState {
+    /// Feed one measured checkpoint cost (seconds the cut stole from
+    /// the application).
+    pub fn observe_cut(&mut self, cfg: &AdaptiveCkptConfig, cost_s: f64) {
+        if cost_s.is_finite() && cost_s > 0.0 {
+            self.cut_cost_ewma = Some(ewma(self.cut_cost_ewma, cost_s, cfg.alpha));
+        }
+    }
+
+    /// Feed one confirmed failure at service-clock time `now_s`.  The
+    /// first failure only anchors the clock; from the second on, the
+    /// gap between consecutive failures is an MTBF sample.
+    pub fn observe_failure(&mut self, cfg: &AdaptiveCkptConfig, now_s: f64) {
+        if let Some(prev) = self.last_failure_at {
+            let gap = now_s - prev;
+            if gap.is_finite() && gap > 0.0 {
+                self.mtbf_ewma = Some(ewma(self.mtbf_ewma, gap, cfg.alpha));
+            }
+        }
+        self.last_failure_at = Some(now_s);
+        self.failures += 1;
+    }
+
+    /// The raw (unsmoothed) Young/Daly target given current estimates;
+    /// None until at least one cut cost has been observed.
+    pub fn target(&self, cfg: &AdaptiveCkptConfig) -> Option<f64> {
+        let c = self.cut_cost_ewma?;
+        let mtbf = self.mtbf_ewma.unwrap_or(cfg.default_mtbf);
+        Some((2.0 * c * mtbf).sqrt().clamp(cfg.min_period, cfg.max_period))
+    }
+
+    /// Emit the next interval: the clamped Young/Daly target, smoothed
+    /// against the previously emitted period so one noisy cut doesn't
+    /// yank the timer around.  Falls back to `fallback` (the ASR's
+    /// fixed period) until a cut cost exists or when disabled.
+    pub fn next_period(&mut self, cfg: &AdaptiveCkptConfig, fallback: f64) -> f64 {
+        if !cfg.enabled {
+            return fallback;
+        }
+        let Some(raw) = self.target(cfg) else {
+            return fallback;
+        };
+        let smoothed = ewma(self.period, raw, cfg.alpha).clamp(cfg.min_period, cfg.max_period);
+        self.period = Some(smoothed);
+        smoothed
+    }
+
+    /// REST reporting: the live interval and the estimates behind it.
+    /// Returns None when the controller has nothing to say (disabled or
+    /// no observations yet) so plain records stay clean.
+    pub fn to_json(&self, cfg: &AdaptiveCkptConfig) -> Option<Json> {
+        if !cfg.enabled && self.failures == 0 && self.cut_cost_ewma.is_none() {
+            return None;
+        }
+        let mut j = Json::obj();
+        j.set("enabled", cfg.enabled.into());
+        if let Some(p) = self.period {
+            j.set("ckpt_period_live", p.into());
+        }
+        if let Some(c) = self.cut_cost_ewma {
+            j.set("cut_cost_ewma", c.into());
+        }
+        j.set("mtbf_ewma", self.mtbf_ewma.unwrap_or(cfg.default_mtbf).into());
+        j.set("failures_observed", self.failures.into());
+        Some(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdaptiveCkptConfig {
+        AdaptiveCkptConfig::enabled()
+    }
+
+    #[test]
+    fn disabled_controller_passes_the_fallback_through() {
+        let mut st = AdaptiveCkptState::default();
+        let off = AdaptiveCkptConfig::default();
+        st.observe_cut(&off, 10.0);
+        assert_eq!(st.next_period(&off, 120.0), 120.0);
+        assert!(st.period.is_none());
+    }
+
+    #[test]
+    fn no_observations_means_fallback() {
+        let mut st = AdaptiveCkptState::default();
+        assert_eq!(st.next_period(&cfg(), 77.0), 77.0);
+    }
+
+    #[test]
+    fn young_daly_formula_with_default_mtbf() {
+        let mut st = AdaptiveCkptState::default();
+        let c = cfg();
+        st.observe_cut(&c, 8.0);
+        let want = (2.0f64 * 8.0 * c.default_mtbf).sqrt();
+        assert!((st.target(&c).unwrap() - want).abs() < 1e-9);
+        // first emission is the raw target (nothing to smooth against)
+        assert!((st.next_period(&c, 1.0) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mtbf_learned_from_failure_gaps() {
+        let mut st = AdaptiveCkptState::default();
+        let c = cfg();
+        st.observe_failure(&c, 100.0);
+        assert!(st.mtbf_ewma.is_none(), "one failure only anchors the clock");
+        st.observe_failure(&c, 300.0);
+        assert_eq!(st.mtbf_ewma, Some(200.0));
+        st.observe_failure(&c, 400.0);
+        // ewma: 200 + 0.3 * (100 - 200) = 170
+        assert!((st.mtbf_ewma.unwrap() - 170.0).abs() < 1e-9);
+        assert_eq!(st.failures, 3);
+    }
+
+    #[test]
+    fn frequent_failures_shorten_the_period() {
+        let c = cfg();
+        let period_for_gap = |gap: f64| {
+            let mut st = AdaptiveCkptState::default();
+            st.observe_cut(&c, 5.0);
+            let mut t = 0.0;
+            for _ in 0..20 {
+                st.observe_failure(&c, t);
+                t += gap;
+            }
+            st.next_period(&c, 600.0)
+        };
+        let flaky = period_for_gap(60.0);
+        let stable = period_for_gap(3000.0);
+        assert!(
+            flaky < stable,
+            "more failures must mean shorter intervals: {flaky} vs {stable}"
+        );
+        // sqrt(2*5*60) ≈ 24.5 — well below the stable regime
+        assert!(flaky < 40.0, "flaky={flaky}");
+    }
+
+    #[test]
+    fn clamped_to_bounds() {
+        let mut c = cfg();
+        c.min_period = 30.0;
+        c.max_period = 300.0;
+        let mut st = AdaptiveCkptState::default();
+        // microscopic cut cost + rapid failures → clamp floor
+        st.observe_cut(&c, 1e-6);
+        st.observe_failure(&c, 0.0);
+        st.observe_failure(&c, 0.5);
+        assert_eq!(st.next_period(&c, 600.0), 30.0);
+        // huge cut cost, huge MTBF → clamp ceiling
+        let mut st = AdaptiveCkptState::default();
+        st.observe_cut(&c, 1e4);
+        assert_eq!(st.next_period(&c, 600.0), 300.0);
+    }
+
+    #[test]
+    fn output_is_ewma_smoothed() {
+        let c = cfg();
+        let mut st = AdaptiveCkptState::default();
+        st.observe_cut(&c, 10.0);
+        let p1 = st.next_period(&c, 600.0);
+        // a sudden 100× cheaper cut moves the raw target a lot; the
+        // emitted period moves only alpha of the way there
+        st.cut_cost_ewma = Some(0.1);
+        let raw = st.target(&c).unwrap();
+        let p2 = st.next_period(&c, 600.0);
+        assert!((p2 - (p1 + c.alpha * (raw - p1))).abs() < 1e-9);
+        assert!(p2 < p1 && p2 > raw);
+    }
+
+    #[test]
+    fn json_reports_live_interval_and_inputs() {
+        let c = cfg();
+        let mut st = AdaptiveCkptState::default();
+        assert!(st.to_json(&AdaptiveCkptConfig::default()).is_none());
+        st.observe_cut(&c, 4.0);
+        st.observe_failure(&c, 10.0);
+        st.observe_failure(&c, 110.0);
+        let p = st.next_period(&c, 600.0);
+        let j = st.to_json(&c).unwrap();
+        assert_eq!(j.get("enabled").as_bool(), Some(true));
+        assert!((j.get("ckpt_period_live").as_f64().unwrap() - p).abs() < 1e-9);
+        assert!((j.get("cut_cost_ewma").as_f64().unwrap() - 4.0).abs() < 1e-9);
+        assert!((j.get("mtbf_ewma").as_f64().unwrap() - 100.0).abs() < 1e-9);
+        assert_eq!(j.get("failures_observed").as_u64(), Some(2));
+    }
+}

@@ -22,6 +22,7 @@
 //! enforce; [`types`] holds the shared records; [`db`] is the
 //! coordinators database (§6.5: in-memory).
 
+pub mod adaptive;
 pub mod appthread;
 pub mod db;
 pub mod healthplane;

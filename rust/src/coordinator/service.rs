@@ -25,6 +25,7 @@
 //!   heartbeat budget — never the 120 s data-plane timeout — and a
 //!   construct-failed app reports all procs unreachable, not healthy.
 
+use crate::coordinator::adaptive::AdaptiveCkptConfig;
 use crate::coordinator::appthread::{AppFactory, AppHandle, CTRL_PROBE_TIMEOUT};
 use crate::coordinator::db::Db;
 use crate::coordinator::healthplane::{heartbeat_pool, AppMonitor};
@@ -75,6 +76,11 @@ pub struct ServiceConfig {
     /// `ckpt_keep` full images, prune everything older after each
     /// successful periodic checkpoint.  0 disables pruning.
     pub ckpt_keep: usize,
+    /// Young/Daly adaptive checkpoint intervals: when enabled, each
+    /// successful periodic cut re-derives the app's `ckpt_period` from
+    /// the measured cut cost and observed MTBF (§5.2 mode 2 stays the
+    /// fallback until the controller has data).
+    pub adaptive: AdaptiveCkptConfig,
     /// Test seam: sleep this long in the off-lock spawn phase of
     /// submit, proving the service lock is not held across provisioning.
     #[cfg(test)]
@@ -93,6 +99,7 @@ impl Default for ServiceConfig {
             heartbeat_arity: 2,
             delta: DeltaPolicy::default(),
             ckpt_keep: 2,
+            adaptive: AdaptiveCkptConfig::default(),
             #[cfg(test)]
             submit_spawn_delay: Duration::ZERO,
         }
@@ -279,6 +286,10 @@ impl CacsService {
         let inner = self.inner.lock().unwrap();
         let rec = inner.db.get(id).context("unknown coordinator")?;
         let mut j = rec.to_json();
+        // the Young/Daly controller's live interval and its inputs
+        if let Some(a) = rec.adaptive.to_json(&self.cfg.adaptive) {
+            j.set("adaptive", a);
+        }
         if let Some((iter, metric)) = progress {
             j.set("iteration", iter.into());
             if metric.is_finite() {
@@ -318,10 +329,15 @@ impl CacsService {
         // failure from here on (including a missing app thread) must
         // land the lifecycle in ERROR — the v1 `?` early-return left it
         // stuck in CHECKPOINTING
+        let cut_clock = Instant::now();
         let outcome = match self.handle(id) {
             Some(handle) => handle.checkpoint_auto(seq, self.cfg.with_runtime_overhead),
             None => Err(anyhow::anyhow!("no app thread")),
         };
+        // time the app spent stalled in the cut — the C of the
+        // Young/Daly controller (the host thread blocks stepping for
+        // the whole quiesce + image pipeline)
+        let cut_cost = cut_clock.elapsed().as_secs_f64();
         let mut inner = self.inner.lock().unwrap();
         let now = self.now();
         let Some(rec) = inner.db.get_mut(id) else {
@@ -348,6 +364,7 @@ impl CacsService {
                     delta_bytes: report.delta_bytes,
                 };
                 rec.ckpts.push(ck.clone());
+                rec.adaptive.observe_cut(&self.cfg.adaptive, cut_cost);
                 Ok(ck)
             }
             Err(e) => {
@@ -424,6 +441,21 @@ impl CacsService {
                         ck.kind(),
                         ck.total_bytes
                     );
+                    // Young/Daly: re-derive the tick from the controller
+                    // (fed by the cut the service just timed), replacing
+                    // the fixed-period reschedule made before the cut.
+                    // Failed cuts keep that fixed-period retry.
+                    if self.cfg.adaptive.enabled {
+                        let now = self.now();
+                        let mut inner = self.inner.lock().unwrap();
+                        if let Some(rec) = inner.db.get_mut(id) {
+                            if let Some(fixed) = rec.asr.ckpt_period {
+                                let next =
+                                    rec.adaptive.next_period(&self.cfg.adaptive, fixed);
+                                rec.periodic_due = Some(now + next);
+                            }
+                        }
+                    }
                     self.prune_checkpoints(id);
                     cut.push(id);
                 }
@@ -547,9 +579,20 @@ impl CacsService {
     /// set), so a torn record is dropped and the error still surfaced;
     /// the leftover images remain deletable by retry or app DELETE.
     pub fn delete_checkpoint(&self, id: AppId, seq: u64) -> Result<usize> {
-        {
+        let was_latest = {
             let inner = self.inner.lock().unwrap();
             let rec = inner.db.get(id).context("unknown coordinator")?;
+            // a cut in flight may be a delta chaining to exactly this
+            // seq: its record lands only after the pipeline finishes, so
+            // the dependent-guard below cannot see it yet.  Deleting the
+            // base under it would strand that cut the moment it commits
+            // (the §5.2 ticker racing a manual DELETE is the concrete
+            // interleaving) — refuse, the DELETE is retryable.
+            let state = rec.lifecycle.state();
+            anyhow::ensure!(
+                state != AppState::Checkpointing && state != AppState::Migrating,
+                "cannot delete checkpoint {seq} while a cut is in flight (state {state})"
+            );
             // a cut that later deltas chain to must not go away under
             // them: the dependents would stay listed as restorable but
             // resolve to a missing base (and the host tracker would
@@ -560,6 +603,19 @@ impl CacsService {
                     "checkpoint {seq} is the base of delta checkpoint {}; delete the dependent cuts first",
                     dep.seq
                 );
+            }
+            rec.ckpts.iter().map(|c| c.seq).max() == Some(seq)
+        };
+        // deleting the newest cut invalidates the host thread's delta
+        // digests (they describe exactly that cut).  Reset them BEFORE
+        // the store delete: the host command queue is FIFO, so a
+        // checkpoint command enqueued after this point re-roots a full
+        // image instead of emitting a delta whose base is mid-deletion —
+        // the other half of the ticker/DELETE race, where the cut starts
+        // just after the guard above saw a quiet lifecycle.
+        if was_latest {
+            if let Some(h) = self.handle(id) {
+                h.reset_delta();
             }
         }
         let result = ckptsvc::delete_checkpoint(self.store.as_ref(), &id.to_string(), seq);
@@ -586,25 +642,11 @@ impl CacsService {
             }
         };
         if !intact {
-            let was_latest = {
-                let mut inner = self.inner.lock().unwrap();
-                match inner.db.get_mut(id) {
-                    Some(rec) => {
-                        let latest = rec.ckpts.iter().map(|c| c.seq).max();
-                        rec.ckpts.retain(|c| c.seq != seq);
-                        latest == Some(seq)
-                    }
-                    None => false,
-                }
-            };
-            // deleting the newest cut invalidates the host thread's
-            // delta digests (they describe exactly that cut): reset so
-            // the next cut re-roots the chain instead of emitting a
-            // delta whose base no longer exists
-            if was_latest {
-                if let Some(h) = self.handle(id) {
-                    h.reset_delta();
-                }
+            // drop the record (the digest reset already happened before
+            // the store delete, while the guard knew seq was the latest)
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(rec) = inner.db.get_mut(id) {
+                rec.ckpts.retain(|c| c.seq != seq);
             }
         }
         result
@@ -1170,11 +1212,20 @@ impl CacsService {
                 // patient probe — new "VMs" + restore.  Flags shorter
                 // than n_vms are the construct-failed shape: there is no
                 // real app behind the thread, so it needs new VMs too.
-                None => self.reprovision_and_restore(id),
-                Some(flags) if flags.len() < n_vms => self.reprovision_and_restore(id),
+                None => {
+                    self.note_failure(id, state_now);
+                    self.reprovision_and_restore(id)
+                }
+                Some(flags) if flags.len() < n_vms => {
+                    self.note_failure(id, state_now);
+                    self.reprovision_and_restore(id)
+                }
                 // §6.3 case 2: host reachable, some procs dead —
                 // restart in place from the previous checkpoint
-                Some(flags) if flags.iter().any(|&ok| !ok) => self.restart(id, None),
+                Some(flags) if flags.iter().any(|&ok| !ok) => {
+                    self.note_failure(id, state_now);
+                    self.restart(id, None)
+                }
                 // host answered all-healthy: ERROR apps still take the
                 // §5.3 passive-recovery restart; RUNNING apps were a
                 // transient blip (or already recovered) — leave them be
@@ -1211,6 +1262,22 @@ impl CacsService {
             );
         }
         recovered
+    }
+
+    /// Feed one *confirmed* failure to the app's Young/Daly controller.
+    /// Only fresh detections on RUNNING apps count — an ERROR app
+    /// re-entering the §5.3 passive-recovery path is the same outage,
+    /// and counting it again would pollute the MTBF estimate with the
+    /// monitor's retry cadence.
+    fn note_failure(&self, id: AppId, state_now: Option<AppState>) {
+        if state_now != Some(AppState::Running) {
+            return;
+        }
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.db.get_mut(id) {
+            rec.adaptive.observe_failure(&self.cfg.adaptive, now);
+        }
     }
 
     /// Claim `id` for recovery; false if another round holds it.
@@ -1421,6 +1488,7 @@ fn build_factory(asr: &Asr, cfg: &ServiceConfig) -> Result<AppFactory> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::fault::FaultStore;
     use crate::storage::mem::MemStore;
 
     fn svc() -> Arc<CacsService> {
@@ -1749,60 +1817,11 @@ mod tests {
         assert_eq!(svc.state(id), Some(AppState::Error));
     }
 
-    /// MemStore wrapper whose `delete` can be armed to fail after a set
-    /// number of successes — the store-error paths of DELETE
-    /// /checkpoints/:seq (total refusal and mid-set tear).
-    struct FailingStore {
-        inner: crate::storage::mem::MemStore,
-        /// Deletes allowed before failing; `usize::MAX` = disarmed.
-        deletes_left: std::sync::atomic::AtomicUsize,
-    }
-
-    impl FailingStore {
-        fn new() -> FailingStore {
-            FailingStore {
-                inner: crate::storage::mem::MemStore::new(),
-                deletes_left: std::sync::atomic::AtomicUsize::new(usize::MAX),
-            }
-        }
-
-        fn arm(&self, deletes_before_failure: usize) {
-            self.deletes_left
-                .store(deletes_before_failure, std::sync::atomic::Ordering::SeqCst);
-        }
-    }
-
-    impl ObjectStore for FailingStore {
-        fn put(&self, key: &str, data: &[u8]) -> Result<(), crate::storage::StoreError> {
-            self.inner.put(key, data)
-        }
-        fn get(&self, key: &str) -> Result<Vec<u8>, crate::storage::StoreError> {
-            self.inner.get(key)
-        }
-        fn delete(&self, key: &str) -> Result<(), crate::storage::StoreError> {
-            let left = self.deletes_left.load(std::sync::atomic::Ordering::SeqCst);
-            if left == 0 {
-                return Err(crate::storage::StoreError::Io(std::io::Error::other(
-                    "injected store failure",
-                )));
-            }
-            if left != usize::MAX {
-                self.deletes_left
-                    .store(left - 1, std::sync::atomic::Ordering::SeqCst);
-            }
-            self.inner.delete(key)
-        }
-        fn list(&self, prefix: &str) -> Result<Vec<String>, crate::storage::StoreError> {
-            self.inner.list(prefix)
-        }
-        fn size(&self, key: &str) -> Result<u64, crate::storage::StoreError> {
-            self.inner.size(key)
-        }
-    }
-
     #[test]
     fn delete_checkpoint_keeps_record_when_store_fails() {
-        let store = Arc::new(FailingStore::new());
+        // the store-error paths of DELETE /checkpoints/:seq, injected
+        // via the composable storage::fault::FaultStore
+        let store = Arc::new(FaultStore::wrapping(MemStore::new(), 11));
         let svc = CacsService::new(
             store.clone(),
             ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
@@ -1812,7 +1831,7 @@ mod tests {
             .unwrap();
         wait_progress(&svc, id, 2);
         let ck = svc.checkpoint(id).unwrap();
-        store.arm(0); // refuse before anything is deleted
+        store.arm_delete_failures(0); // refuse before anything is deleted
         let err = svc.delete_checkpoint(id, ck.seq).unwrap_err();
         assert!(err.to_string().contains("store delete"), "{err}");
         // v1 dropped the record before the store call: a store error
@@ -1821,7 +1840,7 @@ mod tests {
         // stays visible and retryable.
         assert_eq!(svc.checkpoints(id).unwrap().len(), 1);
         assert!(!store.list(&format!("{id}/")).unwrap().is_empty());
-        store.arm(usize::MAX); // disarm and retry: everything goes away
+        store.disarm_deletes(); // retry: everything goes away
         assert_eq!(svc.delete_checkpoint(id, ck.seq).unwrap(), 1);
         assert!(svc.checkpoints(id).unwrap().is_empty());
         assert!(store.list(&format!("{id}/")).unwrap().is_empty());
@@ -1832,7 +1851,7 @@ mod tests {
         // a store failure mid-set tears the checkpoint: it must not stay
         // listed as restorable (recovery would restore a corrupt set),
         // but the leftover images stay reachable for a retried delete
-        let store = Arc::new(FailingStore::new());
+        let store = Arc::new(FaultStore::wrapping(MemStore::new(), 12));
         let svc = CacsService::new(
             store.clone(),
             ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
@@ -1843,17 +1862,144 @@ mod tests {
         wait_progress(&svc, id, 2);
         let ck = svc.checkpoint(id).unwrap();
         assert_eq!(ck.per_proc_bytes.len(), 2);
-        store.arm(1); // first image deletes, the second fails
+        store.arm_delete_failures(1); // first image deletes, the second fails
         assert!(svc.delete_checkpoint(id, ck.seq).is_err());
         assert!(
             svc.checkpoints(id).unwrap().is_empty(),
             "a torn checkpoint must not stay listed as restorable"
         );
         assert_eq!(store.list(&format!("{id}/")).unwrap().len(), 1);
-        store.arm(usize::MAX);
+        store.disarm_deletes();
         // retrying still cleans the leftover image out of the store
         assert_eq!(svc.delete_checkpoint(id, ck.seq).unwrap(), 1);
         assert!(store.list(&format!("{id}/")).unwrap().is_empty());
+    }
+
+    /// No recorded cut's `base_seq` may point at a missing seq.
+    fn assert_no_dangling_bases(svc: &CacsService, id: AppId) {
+        let cks = svc.checkpoints(id).unwrap();
+        let seqs: BTreeSet<u64> =
+            cks.iter().filter_map(|j| j.get("seq").as_u64()).collect();
+        for j in &cks {
+            if let Some(base) = j.get("base_seq").as_u64() {
+                assert!(
+                    seqs.contains(&base),
+                    "checkpoint {:?} chains to missing base {base}",
+                    j.get("seq").as_u64()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn delete_checkpoint_refused_while_cut_in_flight() {
+        // interleaving 1 of the ticker/DELETE race: the cut already owns
+        // the lifecycle — deleting any cut now could strand the delta
+        // the cut is about to commit, so the DELETE must be refused
+        let svc = svc();
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let ck = svc.checkpoint(id).unwrap();
+        assert!(svc.force_state(id, AppState::Checkpointing));
+        let err = svc.delete_checkpoint(id, ck.seq).unwrap_err();
+        assert!(err.to_string().contains("in flight"), "{err}");
+        assert!(svc.force_state(id, AppState::Running));
+        // record and images are untouched; the DELETE is retryable
+        assert_eq!(svc.checkpoints(id).unwrap().len(), 1);
+        assert_eq!(svc.delete_checkpoint(id, ck.seq).unwrap(), 1);
+        assert_no_dangling_bases(&svc, id);
+    }
+
+    #[test]
+    fn delete_latest_cut_racing_periodic_cut_never_dangles() {
+        // interleaving 2: the DELETE wins the lifecycle check and the
+        // cut starts while the store delete is still in flight (slowed
+        // here by FaultStore latency).  The host digests are reset
+        // BEFORE the store delete — FIFO on the host command queue —
+        // so the racing cut re-roots a full image instead of emitting
+        // a delta chained to the cut being deleted.
+        let store = Arc::new(FaultStore::wrapping(MemStore::new(), 13));
+        let svc = CacsService::new(
+            store.clone(),
+            ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+        );
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 256 }, 1))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        let a = svc.checkpoint(id).unwrap();
+        assert!(a.base_seq.is_none());
+        let b = svc.checkpoint(id).unwrap();
+        store.set_latency(Duration::from_millis(150));
+        let svc2 = svc.clone();
+        let deleter = std::thread::spawn(move || svc2.delete_checkpoint(id, b.seq));
+        std::thread::sleep(Duration::from_millis(30));
+        // the §5.2 ticker's cut, racing the in-flight DELETE.  Whichever
+        // side won the lifecycle check, the recorded chains must stay
+        // closed under base_seq.
+        let c = svc.checkpoint(id);
+        let deleted = deleter.join().unwrap();
+        store.set_latency(Duration::ZERO);
+        assert_no_dangling_bases(&svc, id);
+        if deleted.is_ok() {
+            // the racing cut must have re-rooted off the reset digests
+            if let Ok(c) = &c {
+                assert_ne!(c.base_seq, Some(b.seq), "cut chained to a deleted base");
+            }
+        }
+        // every surviving chain is still restorable
+        svc.restart(id, None).unwrap();
+        assert_eq!(svc.state(id), Some(AppState::Running));
+    }
+
+    #[test]
+    fn adaptive_interval_reported_and_reschedules_ticker() {
+        // Young/Daly end-to-end in real mode: a periodic cut feeds the
+        // controller, the ticker reschedules off the live interval, and
+        // GET /coordinators/:id reports the interval and its inputs
+        let svc = svc_with(|cfg| ServiceConfig {
+            adaptive: AdaptiveCkptConfig { enabled: true, ..Default::default() },
+            ..cfg
+        });
+        let id = svc
+            .submit(Asr::new("d", WorkloadSpec::Dmtcp1 { n: 64 }, 1).with_period(0.01))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        wait_until("a periodic cut", || !svc.periodic_round().is_empty());
+        let j = svc.info(id).unwrap();
+        let a = j.get("adaptive");
+        assert_eq!(a.get("enabled").as_bool(), Some(true));
+        let live = a.get("ckpt_period_live").as_f64().unwrap();
+        assert!(live >= 5.0, "live interval {live} below the clamp floor");
+        assert!(a.get("cut_cost_ewma").as_f64().unwrap() > 0.0);
+        assert_eq!(a.get("failures_observed").as_u64(), Some(0));
+        // the ticker now waits the controller's interval (seconds), not
+        // the ASR's 10 ms: an immediate next round has nothing due
+        assert!(svc.periodic_round().is_empty());
+    }
+
+    #[test]
+    fn confirmed_failures_feed_the_mtbf_estimate() {
+        let svc = svc_with(|cfg| ServiceConfig {
+            adaptive: AdaptiveCkptConfig { enabled: true, ..Default::default() },
+            ..cfg
+        });
+        let id = svc
+            .submit(Asr::new("lu", WorkloadSpec::Lu { nz: 4, ny: 8, nx: 8 }, 2))
+            .unwrap();
+        wait_progress(&svc, id, 2);
+        svc.checkpoint(id).unwrap();
+        svc.kill_proc(id, 1).unwrap();
+        wait_unhealthy(&svc, id, 1);
+        assert_eq!(svc.monitor_round(), vec![id]);
+        let j = svc.info(id).unwrap();
+        assert_eq!(
+            j.get("adaptive").get("failures_observed").as_u64(),
+            Some(1),
+            "the confirmed §6.3 failure must reach the controller"
+        );
     }
 
     #[test]

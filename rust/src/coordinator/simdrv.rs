@@ -27,6 +27,7 @@
 //!   traffic routes through the mgmt link, where scheduler chatter also
 //!   lives (Fig 6b instability).
 
+use crate::coordinator::adaptive::AdaptiveCkptConfig;
 use crate::coordinator::db::Db;
 use crate::coordinator::lifecycle::AppState;
 use crate::coordinator::types::{AppRecord, Asr, CkptRecord, WorkloadSpec};
@@ -69,6 +70,10 @@ pub struct SimParams {
     pub recovery_retry_delay: f64,
     /// Retry budget before an ERROR becomes permanent.
     pub max_recovery_retries: usize,
+    /// Young/Daly adaptive checkpoint intervals: when enabled, the
+    /// periodic scheduler re-reads each app's live controller period
+    /// instead of the fixed ASR one.
+    pub adaptive: AdaptiveCkptConfig,
 }
 
 impl Default for SimParams {
@@ -85,6 +90,7 @@ impl Default for SimParams {
             ssh_cost: 120e3,
             recovery_retry_delay: 30.0,
             max_recovery_retries: 5,
+            adaptive: AdaptiveCkptConfig::default(),
         }
     }
 }
@@ -142,6 +148,11 @@ pub struct SimAppExt {
     pub app_unhealthy: bool,
     /// Passive-recovery retries consumed while parked in ERROR.
     pub recovery_retries: usize,
+    /// Chaos: while `now < partitioned_until` the monitor cannot reach
+    /// any of the app's daemons — a network partition has split the
+    /// whole broadcast tree even though the VMs themselves are healthy
+    /// (the split-brain case: the far side keeps computing).
+    pub partitioned_until: f64,
 }
 
 /// Start control-plane background chatter on a shared mgmt/data link
@@ -167,6 +178,11 @@ pub struct SimWorld {
     pub clouds: Vec<Box<dyn IaasCloud>>,
     /// Per-cloud shared mgmt/data link (OpenStack; None for Snooze).
     pub mgmt_links: Vec<Option<LinkId>>,
+    /// Per-cloud wall-clock skew (s) of that cloud's CACS instance
+    /// (chaos): shifts the timestamps the instance stamps on records
+    /// (checkpoint `taken_at`, heartbeat log) without touching the one
+    /// true DES clock that orders events.
+    pub clock_skew: Vec<f64>,
     pub storage: SimStorage,
     pub ssh: Vec<SshExecutor>,
     pub params: SimParams,
@@ -238,6 +254,7 @@ impl SimCacs {
             net,
             clouds: vec![],
             mgmt_links: vec![],
+            clock_skew: vec![],
             storage,
             ssh: vec![],
             params: SimParams::default(),
@@ -270,6 +287,7 @@ impl SimCacs {
         );
         self.world.clouds.push(Box::new(cloud));
         self.world.mgmt_links.push(None);
+        self.world.clock_skew.push(0.0);
         self.world.ssh.push(SshExecutor::new(SshParams::default(), self.world.rng.next_u64()));
         self.world.poll_scheduled.push(false);
         self.world.clouds.len() - 1
@@ -287,6 +305,7 @@ impl SimCacs {
         let mgmt = cloud.shared_mgmt_link();
         self.world.clouds.push(Box::new(cloud));
         self.world.mgmt_links.push(Some(mgmt));
+        self.world.clock_skew.push(0.0);
         self.world.ssh.push(SshExecutor::new(SshParams::default(), self.world.rng.next_u64()));
         self.world.poll_scheduled.push(false);
         self.world.clouds.len() - 1
@@ -322,31 +341,19 @@ impl SimCacs {
     /// Clone `app` onto `dst_cloud` (POST a new coordinator + image
     /// upload + restart, §5.3).  Returns the clone's id.
     pub fn clone_to(&mut self, app: AppId, dst_cloud: usize) -> anyhow::Result<AppId> {
-        let src = self
-            .world
-            .db
-            .get(app)
-            .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
-        anyhow::ensure!(
-            src.latest_ckpt().is_some(),
-            "clone requires at least one checkpoint"
-        );
-        let asr = src.asr.clone();
-        let data_bytes = self.world.ext[&app].data_bytes_per_proc;
-        let now = self.sim.now();
-        let id = submit_at(&mut self.sim, &mut self.world, now, dst_cloud, asr)?;
-        let ext = self.world.ext.get_mut(&id).unwrap();
-        ext.cloned_from = Some(app);
-        ext.data_bytes_per_proc = data_bytes;
-        Ok(id)
+        clone_now(&mut self.sim, &mut self.world, app, dst_cloud)
     }
 
     /// Migrate = clone + terminate source once the clone runs (§5.3).
     pub fn migrate_to(&mut self, app: AppId, dst_cloud: usize) -> anyhow::Result<AppId> {
-        let clone = self.clone_to(app, dst_cloud)?;
-        // terminate the source when the clone reaches RUNNING
-        watch_running_then(&mut self.sim, clone, move |sim, w| terminate(sim, w, app));
-        Ok(clone)
+        migrate_now(&mut self.sim, &mut self.world, app, dst_cloud)
+    }
+
+    /// Skew one cloud's CACS wall clock by `skew_s` seconds (chaos).
+    pub fn set_clock_skew(&mut self, cloud_idx: usize, skew_s: f64) {
+        if let Some(s) = self.world.clock_skew.get_mut(cloud_idx) {
+            *s = skew_s;
+        }
     }
 
     /// DELETE /coordinators/:id (§5.4).
@@ -358,25 +365,12 @@ impl SimCacs {
     /// (application-level fault injection, §6.3 case 2).  The next
     /// heartbeat restarts the processes in place from the last image.
     pub fn inject_app_failure(&mut self, app: AppId) {
-        self.sim.after(0.0, move |_sim, w| {
-            if let Some(e) = w.ext.get_mut(&app) {
-                e.app_unhealthy = true;
-            }
-        });
+        self.sim.after(0.0, move |_sim, w| app_failure_now(w, app));
     }
 
     /// Kill a random server hosting the app's VMs (fault injection).
     pub fn inject_vm_failure(&mut self, app: AppId) {
-        self.sim.after(0.0, move |sim, w| {
-            let Some(rec) = w.db.get(app) else { return };
-            let Some(&vm) = rec.vms.first() else { return };
-            let cloud_idx = rec.cloud_idx;
-            let Some(vmrec) = w.clouds[cloud_idx].vm_record(vm) else { return };
-            let server = vmrec.server;
-            let now = sim.now();
-            w.clouds[cloud_idx].inject_server_failure(now, server);
-            schedule_poll(sim, w, cloud_idx);
-        });
+        self.sim.after(0.0, move |sim, w| vm_failure_now(sim, w, app));
     }
 
     /// Run until no events remain; returns final virtual time.
@@ -428,8 +422,63 @@ impl SimCacs {
 }
 
 // ---------------------------------------------------------------------------
-// event bodies
+// event bodies (the `pub(crate)` ones are also driven by the chaos
+// harness, which schedules them at arbitrary virtual times)
 // ---------------------------------------------------------------------------
+
+/// Mark the app's health hook failing (§6.3 case 2 injection body).
+pub(crate) fn app_failure_now(w: &mut SimWorld, app: AppId) {
+    if let Some(e) = w.ext.get_mut(&app) {
+        e.app_unhealthy = true;
+    }
+}
+
+/// Kill the server hosting the app's first VM (fault injection body).
+pub(crate) fn vm_failure_now(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let Some(rec) = w.db.get(app) else { return };
+    let Some(&vm) = rec.vms.first() else { return };
+    let cloud_idx = rec.cloud_idx;
+    let Some(vmrec) = w.clouds[cloud_idx].vm_record(vm) else { return };
+    let server = vmrec.server;
+    let now = sim.now();
+    w.clouds[cloud_idx].inject_server_failure(now, server);
+    schedule_poll(sim, w, cloud_idx);
+}
+
+/// Clone `app` onto `dst_cloud` (§5.3 body; see [`SimCacs::clone_to`]).
+pub(crate) fn clone_now(
+    sim: &mut Sim<SimWorld>,
+    w: &mut SimWorld,
+    app: AppId,
+    dst_cloud: usize,
+) -> anyhow::Result<AppId> {
+    let src = w.db.get(app).ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+    anyhow::ensure!(
+        src.latest_ckpt().is_some(),
+        "clone requires at least one checkpoint"
+    );
+    let asr = src.asr.clone();
+    let data_bytes = w.ext[&app].data_bytes_per_proc;
+    let now = sim.now();
+    let id = submit_at(sim, w, now, dst_cloud, asr)?;
+    let ext = w.ext.get_mut(&id).unwrap();
+    ext.cloned_from = Some(app);
+    ext.data_bytes_per_proc = data_bytes;
+    Ok(id)
+}
+
+/// Migrate = clone + terminate source once the clone runs (§5.3 body).
+pub(crate) fn migrate_now(
+    sim: &mut Sim<SimWorld>,
+    w: &mut SimWorld,
+    app: AppId,
+    dst_cloud: usize,
+) -> anyhow::Result<AppId> {
+    let clone = clone_now(sim, w, app, dst_cloud)?;
+    // terminate the source when the clone reaches RUNNING
+    watch_running_then(sim, clone, move |sim, w| terminate(sim, w, app));
+    Ok(clone)
+}
 
 fn submit_at(
     sim: &mut Sim<SimWorld>,
@@ -567,14 +616,21 @@ fn start_provision(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, _rsv: 
 
 fn schedule_periodic_ckpt(sim: &mut Sim<SimWorld>, app: AppId, period: f64) {
     sim.after(period, move |sim, w| {
-        let Some(rec) = w.db.get(app) else { return };
+        let adaptive_cfg = w.params.adaptive.clone();
+        let Some(rec) = w.db.get_mut(app) else { return };
+        // re-read the live interval on every tick: under the adaptive
+        // controller the period tracks observed cut costs and failure
+        // rates; the ASR's fixed period stays the fallback (and the
+        // whole thing when the controller is disabled)
+        let fallback = rec.asr.ckpt_period.unwrap_or(period);
+        let next = rec.adaptive.next_period(&adaptive_cfg, fallback);
         match rec.lifecycle.state() {
             AppState::Running => {
                 start_checkpoint(sim, w, app);
-                schedule_periodic_ckpt(sim, app, period);
+                schedule_periodic_ckpt(sim, app, next);
             }
             AppState::Checkpointing | AppState::Restarting => {
-                schedule_periodic_ckpt(sim, app, period);
+                schedule_periodic_ckpt(sim, app, next);
             }
             _ => {} // terminated / error: stop the timer
         }
@@ -607,10 +663,20 @@ fn schedule_heartbeat(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
             })
             .map(|(i, _)| i)
             .collect();
+        // a chaos partition makes every daemon unreachable at once: the
+        // monitor sees exactly what a total VM failure looks like and
+        // (wrongly but inevitably) recovers the app — the split-brain
+        // behaviour the harness is after
+        let partitioned = w.ext[&app].partitioned_until > now;
+        let dead_idx: Vec<usize> = if partitioned { (0..n).collect() } else { dead_idx };
         // the round-trip pays the deadline-budget resolve waves when
         // daemons are dead — the same semantics RealMonitor measures
         let rtt = heartbeat_rtt_with_failures(&w.params.mon, &mut w.rng, n, &dead_idx);
-        w.ext.get_mut(&app).unwrap().heartbeats.push((now, rtt));
+        // the log entry is stamped with the instance's own (possibly
+        // skewed) clock — skew shifts what this CACS *records*, never
+        // the DES event order
+        let skew = w.clock_skew.get(cloud_idx).copied().unwrap_or(0.0);
+        w.ext.get_mut(&app).unwrap().heartbeats.push((now + skew, rtt));
         let unreachable = !dead_idx.is_empty() || vms.len() < n;
         let unhealthy = w.ext[&app].app_unhealthy;
         if state == AppState::Running && unreachable {
@@ -639,6 +705,7 @@ fn restart_in_place(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
     if !rec.lifecycle.to(now, AppState::Restarting) {
         return;
     }
+    rec.adaptive.observe_failure(&w.params.adaptive, now);
     // the restart replaces the stuck processes, clearing the fault
     w.ext.get_mut(&app).unwrap().app_unhealthy = false;
     start_downloads(sim, w, app);
@@ -663,6 +730,7 @@ fn on_vm_failed(sim: &mut Sim<SimWorld>, w: &mut SimWorld, cloud_idx: usize, vm:
 fn recover(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
     let now = sim.now();
     let Some(rec) = w.db.get_mut(app) else { return };
+    let prior = rec.lifecycle.state();
     if rec.latest_ckpt().is_none() {
         log::warn!("{app}: failure without checkpoint -> ERROR");
         rec.lifecycle.to(now, AppState::Error);
@@ -670,6 +738,11 @@ fn recover(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
     }
     if !rec.lifecycle.to(now, AppState::Restarting) {
         return;
+    }
+    // an ERROR-retry re-entry is the same outage, not a new failure —
+    // feeding it would pollute the MTBF estimate with back-off gaps
+    if prior != AppState::Error {
+        rec.adaptive.observe_failure(&w.params.adaptive, now);
     }
     let cloud_idx = rec.cloud_idx;
     let n_vms = rec.asr.n_vms;
@@ -719,7 +792,13 @@ fn schedule_recovery_retry(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId
         return;
     }
     ext.recovery_retries += 1;
-    sim.after(w.params.recovery_retry_delay, move |sim, w| {
+    // seeded jitter (±50%) de-synchronizes retry storms: a fleet-wide
+    // outage parks many apps in ERROR at the same instant, and identical
+    // deterministic back-offs would hammer the cloud API in lockstep on
+    // every retry round; the hard cap above keeps ERROR from retrying
+    // forever either way
+    let delay = w.params.recovery_retry_delay * w.rng.uniform(0.5, 1.5);
+    sim.after(delay, move |sim, w| {
         let Some(rec) = w.db.get(app) else { return };
         if rec.lifecycle.state() == AppState::Error && rec.latest_ckpt().is_some() {
             recover(sim, w, app);
@@ -738,7 +817,7 @@ fn replacement_ready(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, _rsv
     sim.at(batch.done_at, move |sim, w| start_downloads(sim, w, app));
 }
 
-fn start_checkpoint(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+pub(crate) fn start_checkpoint(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
     let now = sim.now();
     let Some(rec) = w.db.get_mut(app) else { return };
     if !rec.lifecycle.state().can_checkpoint() {
@@ -805,21 +884,36 @@ fn begin_upload(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, seq: u64)
 fn finish_upload(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, seq: u64, _started: f64) {
     let now = sim.now();
     let image_bytes = w.image_bytes(app);
+    let lazy = w.params.lazy_upload;
     let Some(rec) = w.db.get_mut(app) else { return };
     let n = rec.asr.n_vms;
+    // the record carries the instance's own clock: cross-CACS skew shows
+    // up exactly where it does in real deployments — in stamped metadata
+    let skew = w.clock_skew.get(rec.cloud_idx).copied().unwrap_or(0.0);
     let id = CkptId(seq);
     rec.ckpts.push(CkptRecord {
         id,
         seq,
-        taken_at: now,
+        taken_at: now + skew,
         iteration: 0,
         total_bytes: (image_bytes * n as f64) as u64,
         per_proc_bytes: vec![image_bytes as u64; n],
         base_seq: None,
         delta_bytes: 0,
     });
+    let mut cut_cost = None;
     if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.ckpt_timings.last_mut()) {
         t.uploaded = now;
+        // what the cut *cost the application*: lazy mode resumes after
+        // the local phase, eager mode stalls until the upload lands
+        let stalled_until = if lazy { t.local_done } else { now };
+        cut_cost = Some(stalled_until - t.started);
+    }
+    if let Some(cost) = cut_cost {
+        let cfg = w.params.adaptive.clone();
+        if let Some(rec) = w.db.get_mut(app) {
+            rec.adaptive.observe_cut(&cfg, cost);
+        }
     }
     {
         let rec = w.db.get(app).unwrap();
@@ -835,7 +929,7 @@ fn finish_upload(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, seq: u64
     w.rec.incr("ckpt.uploads", 1.0);
 }
 
-fn start_restart(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+pub(crate) fn start_restart(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
     let now = sim.now();
     let Some(rec) = w.db.get_mut(app) else { return };
     let state = rec.lifecycle.state();
@@ -916,7 +1010,7 @@ fn finish_download(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
     });
 }
 
-fn terminate(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+pub(crate) fn terminate(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
     let now = sim.now();
     let Some(rec) = w.db.get_mut(app) else { return };
     if !rec.lifecycle.to(now, AppState::Terminating) {
@@ -960,7 +1054,7 @@ where
 
 /// Network pump: reap completed flows, dispatch group completions, and
 /// schedule the next wake-up (generation-checked against staleness).
-fn pump_net(sim: &mut Sim<SimWorld>, w: &mut SimWorld) {
+pub(crate) fn pump_net(sim: &mut Sim<SimWorld>, w: &mut SimWorld) {
     let now = sim.now();
     let done = w.net.reap(now);
     let mut completed_groups: Vec<(AppId, GroupKind, f64)> = vec![];
@@ -1309,5 +1403,52 @@ mod tests {
         assert_eq!(a, b);
         let c = run(43);
         assert!(a != c);
+    }
+
+    #[test]
+    fn adaptive_period_tracks_measured_cut_cost() {
+        // with the Young/Daly controller on, the periodic scheduler must
+        // abandon the (absurdly short) ASR period once a cut cost exists
+        let mut cacs = SimCacs::new(18);
+        cacs.world.params.adaptive = AdaptiveCkptConfig::enabled();
+        cacs.world.params.adaptive.min_period = 30.0;
+        let cloud = cacs.add_snooze(24);
+        let app = cacs.submit(cloud, lu_asr(4).with_period(5.0)).unwrap();
+        cacs.run_until(3600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let rec = cacs.world.db.get(app).unwrap();
+        assert!(rec.adaptive.cut_cost_ewma.is_some(), "cuts must feed the controller");
+        let live = rec.adaptive.period.expect("controller must have emitted a period");
+        assert!(live >= 30.0, "live period {live} must respect the clamp floor");
+        // a fixed 5 s period over ~3500 s would record ~700 cuts; the
+        // controller must have stretched the interval well past that
+        let n = rec.ckpts.len();
+        assert!(n < 200, "adaptive run still checkpointing at ASR rate: {n} cuts");
+        // failures feed the MTBF estimate
+        assert_eq!(rec.adaptive.failures, 0);
+        cacs.inject_vm_failure(app);
+        cacs.run_until(cacs.sim.now() + 1800.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        assert_eq!(cacs.world.db.get(app).unwrap().adaptive.failures, 1);
+    }
+
+    #[test]
+    fn clock_skew_shifts_stamped_metadata_only() {
+        let run = |skew: f64| {
+            let mut cacs = SimCacs::new(19);
+            let cloud = cacs.add_snooze(24);
+            cacs.set_clock_skew(cloud, skew);
+            let app = run_app(&mut cacs, cloud, lu_asr(4));
+            cacs.trigger_checkpoint(app);
+            cacs.run_until(cacs.sim.now() + 600.0);
+            let rec = cacs.world.db.get(app).unwrap();
+            (rec.ckpts[0].taken_at, cacs.ext(app).unwrap().ckpt_timings[0].uploaded)
+        };
+        let (t0, up0) = run(0.0);
+        let (t1, up1) = run(120.0);
+        // the DES event order (and hence the true upload time) is
+        // untouched; only the stamped record moves by the skew
+        assert_eq!(up0, up1);
+        assert!((t1 - t0 - 120.0).abs() < 1e-9, "taken_at skew: {t0} vs {t1}");
     }
 }

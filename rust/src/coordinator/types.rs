@@ -2,6 +2,7 @@
 //! checkpoint metadata, and the per-application record both drivers keep
 //! in the coordinators database.
 
+use crate::coordinator::adaptive::AdaptiveCkptState;
 use crate::coordinator::lifecycle::{AppState, Lifecycle};
 use crate::monitor::HealthReport;
 use crate::simcloud::VmTemplate;
@@ -257,6 +258,10 @@ pub struct AppRecord {
     /// when the ASR carries `ckpt_period`; rescheduled each attempt by
     /// the real-mode ticker).
     pub periodic_due: Option<f64>,
+    /// Young/Daly adaptive-interval controller state: EWMA cut cost,
+    /// EWMA MTBF and the live emitted period.  Both drivers feed it;
+    /// `GET /coordinators/:id` reports it.
+    pub adaptive: AdaptiveCkptState,
 }
 
 impl AppRecord {
@@ -273,6 +278,7 @@ impl AppRecord {
             cloned_from,
             migrated_to: None,
             periodic_due: None,
+            adaptive: AdaptiveCkptState::default(),
         }
     }
 

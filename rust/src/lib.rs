@@ -47,6 +47,7 @@ pub mod monitor;
 pub mod metrics;
 pub mod runtime;
 pub mod workloads;
+pub mod chaos;
 pub mod coordinator;
 
 /// Crate version (mirrors Cargo.toml).

@@ -81,6 +81,26 @@ impl NetSim {
         self.links[id.0].capacity
     }
 
+    /// Retune a link's capacity mid-run (chaos: asymmetric degradation,
+    /// partitions, slow storage).  Flow progress is advanced to `now`
+    /// first so bytes already moved are banked at the old rates, then
+    /// every flow is re-shared at the new capacity.  The capacity is
+    /// floored at a tiny positive value: a true zero would violate the
+    /// progressive-filling invariant `add_link` asserts, and 1e-9 B/s
+    /// is a partition on any practical horizon (stalled flows simply
+    /// never reach [`Self::next_completion`]'s horizon).  Bumps the
+    /// generation so stale DES wake-ups cancel; the caller must
+    /// re-schedule a pump off the new [`Self::next_completion`].
+    /// Returns the previous capacity (for healing).
+    pub fn set_link_capacity(&mut self, now: f64, id: LinkId, capacity: f64) -> f64 {
+        self.advance(now);
+        let prev = self.links[id.0].capacity;
+        self.links[id.0].capacity = capacity.max(1e-9);
+        self.allocate();
+        self.generation += 1;
+        prev
+    }
+
     /// Progress all flows to time `now` (must be monotonic).
     pub fn advance(&mut self, now: f64) {
         let dt = now - self.last_advance;
@@ -344,6 +364,45 @@ mod tests {
         let g1 = net.generation;
         net.cancel(0.5, f);
         assert!(net.generation > g1);
+    }
+
+    #[test]
+    fn set_link_capacity_banks_progress_and_reshapes() {
+        let mut net = NetSim::new();
+        let l = net.add_link("up", 100.0);
+        let f = net.start_flow(0.0, vec![l], 1000.0, "a");
+        // at t=5 the flow has moved 500 B; halve the link
+        let g0 = net.generation;
+        let prev = net.set_link_capacity(5.0, l, 50.0);
+        assert!(approx(prev, 100.0));
+        assert!(net.generation > g0);
+        assert!(approx(net.flow_remaining(f).unwrap(), 500.0));
+        assert!(approx(net.flow_rate(f).unwrap(), 50.0));
+        // 500 B at 50 B/s: completes at t = 5 + 10
+        let (t, _) = net.next_completion().unwrap();
+        assert!(approx(t, 15.0));
+        // heal back: remaining 250 at t=10 finishes at 12.5
+        net.set_link_capacity(10.0, l, 100.0);
+        let (t, _) = net.next_completion().unwrap();
+        assert!(approx(t, 12.5));
+    }
+
+    #[test]
+    fn partition_floors_capacity_and_stalls_flows() {
+        let mut net = NetSim::new();
+        let l = net.add_link("up", 100.0);
+        let f = net.start_flow(0.0, vec![l], 1000.0, "a");
+        net.set_link_capacity(1.0, l, 0.0); // floored, never zero
+        assert!(net.link_capacity(l) > 0.0);
+        assert!(net.link_capacity(l) < 1e-6);
+        // the flow is stalled: completion horizon is astronomically far
+        let (t, _) = net.next_completion().unwrap();
+        assert!(t > 1e9);
+        assert!(approx(net.flow_remaining(f).unwrap(), 900.0));
+        // heal: the flow resumes and completes 9 s later
+        net.set_link_capacity(2.0, l, 100.0);
+        let (t, _) = net.next_completion().unwrap();
+        assert!(t < 11.0 + 1e-3, "t={t}");
     }
 
     #[test]

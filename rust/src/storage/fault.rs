@@ -1,0 +1,342 @@
+//! Fault-injecting [`ObjectStore`] wrapper for chaos testing.
+//!
+//! [`FaultStore`] wraps any real store and injects failures on the way
+//! through, deterministically from a seed: probabilistic op errors, a
+//! fixed per-op latency (slow-disk mode), torn writes (a prefix of the
+//! object is committed, then the put errors — the exact shape a crashed
+//! uploader leaves behind), and armed countdown failures ("the Nth
+//! delete/get from now fails, and keeps failing until disarmed") for
+//! scripting precise interleavings in unit tests.
+//!
+//! This is the promoted, composable form of the ad-hoc `FailingStore` /
+//! `SlowStore` wrappers that used to be copy-pasted into test modules;
+//! the chaos harness drives the same knobs at runtime.  All injected
+//! errors carry the string `injected store failure` so tests (and humans
+//! reading CI logs) can tell them from real storage trouble.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::{ObjectStore, StoreError};
+use crate::util::rng::Rng;
+
+/// Disarmed countdown sentinel (matches the old `FailingStore` idiom).
+const DISARMED: usize = usize::MAX;
+
+#[derive(Debug)]
+struct FaultState {
+    rng: Rng,
+    /// Probability that any fallible op (put/get/delete) errors outright.
+    error_rate: f64,
+    /// Per-op sleep before the inner store is touched (slow-disk mode).
+    latency: Duration,
+    /// When set, `put` commits a prefix of the object then errors.
+    torn_writes: bool,
+    /// Deletes remaining before deletes start failing ([`DISARMED`] = off).
+    deletes_until_fail: usize,
+    /// Gets remaining before gets start failing ([`DISARMED`] = off).
+    gets_until_fail: usize,
+    /// Total failures injected so far (all modes).
+    injected: u64,
+}
+
+/// A composable fault-injecting wrapper around any [`ObjectStore`].
+///
+/// All knobs are runtime-settable through `&self`, so a test (or the
+/// chaos harness) can hand the store to a service and then tighten or
+/// heal the faults mid-run.  Every probabilistic decision draws from one
+/// seeded [`Rng`], so a given seed and op sequence injects the exact
+/// same failures on every run.
+pub struct FaultStore {
+    inner: Arc<dyn ObjectStore>,
+    state: Mutex<FaultState>,
+}
+
+impl FaultStore {
+    /// Wrap `inner` with all faults off; `seed` fixes the error stream.
+    pub fn new(inner: Arc<dyn ObjectStore>, seed: u64) -> FaultStore {
+        FaultStore {
+            inner,
+            state: Mutex::new(FaultState {
+                rng: Rng::new(seed),
+                error_rate: 0.0,
+                latency: Duration::ZERO,
+                torn_writes: false,
+                deletes_until_fail: DISARMED,
+                gets_until_fail: DISARMED,
+                injected: 0,
+            }),
+        }
+    }
+
+    /// Convenience: wrap a concrete store without the caller arcing it.
+    pub fn wrapping<S: ObjectStore + 'static>(inner: S, seed: u64) -> FaultStore {
+        FaultStore::new(Arc::new(inner), seed)
+    }
+
+    /// Builder-style: start with an error rate set.
+    pub fn with_error_rate(self, p: f64) -> FaultStore {
+        self.set_error_rate(p);
+        self
+    }
+
+    /// Builder-style: start with a per-op latency set.
+    pub fn with_latency(self, d: Duration) -> FaultStore {
+        self.set_latency(d);
+        self
+    }
+
+    /// Builder-style: start with torn writes on.
+    pub fn with_torn_writes(self) -> FaultStore {
+        self.set_torn_writes(true);
+        self
+    }
+
+    /// Probability in [0, 1] that each put/get/delete errors.
+    pub fn set_error_rate(&self, p: f64) {
+        self.state.lock().unwrap().error_rate = p.clamp(0.0, 1.0);
+    }
+
+    /// Sleep injected before every op (slow-disk mode; zero disables).
+    pub fn set_latency(&self, d: Duration) {
+        self.state.lock().unwrap().latency = d;
+    }
+
+    /// When on, every `put` commits only a prefix then errors.
+    pub fn set_torn_writes(&self, on: bool) {
+        self.state.lock().unwrap().torn_writes = on;
+    }
+
+    /// After `n` more successful deletes, deletes fail until re-armed
+    /// with [`Self::disarm_deletes`] (the old `FailingStore::arm`).
+    pub fn arm_delete_failures(&self, n: usize) {
+        self.state.lock().unwrap().deletes_until_fail = n;
+    }
+
+    pub fn disarm_deletes(&self) {
+        self.state.lock().unwrap().deletes_until_fail = DISARMED;
+    }
+
+    /// After `n` more successful gets, gets fail until re-armed.
+    pub fn arm_get_failures(&self, n: usize) {
+        self.state.lock().unwrap().gets_until_fail = n;
+    }
+
+    pub fn disarm_gets(&self) {
+        self.state.lock().unwrap().gets_until_fail = DISARMED;
+    }
+
+    /// Turn every fault mode off (countdowns disarmed, rates zeroed).
+    pub fn heal(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.error_rate = 0.0;
+        st.latency = Duration::ZERO;
+        st.torn_writes = false;
+        st.deletes_until_fail = DISARMED;
+        st.gets_until_fail = DISARMED;
+    }
+
+    /// How many failures this wrapper has injected so far.
+    pub fn injected_failures(&self) -> u64 {
+        self.state.lock().unwrap().injected
+    }
+
+    fn injected_err() -> StoreError {
+        StoreError::Io(std::io::Error::other("injected store failure"))
+    }
+
+    /// Common pre-op gate: sleep the configured latency, then decide
+    /// whether this op fails probabilistically.  Returns `Err` if so.
+    fn gate(&self) -> Result<(), StoreError> {
+        let (latency, fail) = {
+            let mut st = self.state.lock().unwrap();
+            let fail = st.error_rate > 0.0 && st.rng.chance(st.error_rate);
+            if fail {
+                st.injected += 1;
+            }
+            (st.latency, fail)
+        };
+        if !latency.is_zero() {
+            std::thread::sleep(latency);
+        }
+        if fail {
+            return Err(Self::injected_err());
+        }
+        Ok(())
+    }
+
+    /// Step an armed countdown: `true` means this op must fail.
+    fn countdown(counter: &mut usize, injected: &mut u64) -> bool {
+        if *counter == DISARMED {
+            return false;
+        }
+        if *counter == 0 {
+            *injected += 1;
+            return true;
+        }
+        *counter -= 1;
+        false
+    }
+}
+
+impl ObjectStore for FaultStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
+        self.gate()?;
+        let torn = {
+            let mut st = self.state.lock().unwrap();
+            if st.torn_writes {
+                st.injected += 1;
+                // leave between one byte and just-under-all of the
+                // object behind, like a crash mid-upload would
+                let cut = if data.len() > 1 {
+                    1 + st.rng.below(data.len() as u64 - 1) as usize
+                } else {
+                    data.len()
+                };
+                Some(cut)
+            } else {
+                None
+            }
+        };
+        match torn {
+            Some(cut) => {
+                self.inner.put(key, &data[..cut])?;
+                Err(Self::injected_err())
+            }
+            None => self.inner.put(key, data),
+        }
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+        self.gate()?;
+        {
+            let mut st = self.state.lock().unwrap();
+            let st = &mut *st;
+            if Self::countdown(&mut st.gets_until_fail, &mut st.injected) {
+                return Err(Self::injected_err());
+            }
+        }
+        self.inner.get(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StoreError> {
+        self.gate()?;
+        {
+            let mut st = self.state.lock().unwrap();
+            let st = &mut *st;
+            if Self::countdown(&mut st.deletes_until_fail, &mut st.injected) {
+                return Err(Self::injected_err());
+            }
+        }
+        self.inner.delete(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        // metadata ops stay reliable: the fault model targets the data
+        // path, and callers use `list` to audit what a failed op left
+        self.inner.list(prefix)
+    }
+
+    fn size(&self, key: &str) -> Result<u64, StoreError> {
+        self.inner.size(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::mem::MemStore;
+
+    fn store() -> FaultStore {
+        FaultStore::wrapping(MemStore::new(), 7)
+    }
+
+    #[test]
+    fn transparent_when_disarmed() {
+        let s = store();
+        s.put("a/b", b"hello").unwrap();
+        assert_eq!(s.get("a/b").unwrap(), b"hello");
+        assert_eq!(s.size("a/b").unwrap(), 5);
+        assert_eq!(s.list("a/").unwrap(), vec!["a/b".to_string()]);
+        s.delete("a/b").unwrap();
+        assert!(matches!(s.get("a/b"), Err(StoreError::NotFound(_))));
+        assert_eq!(s.injected_failures(), 0);
+    }
+
+    #[test]
+    fn armed_delete_countdown_matches_failingstore_semantics() {
+        let s = store();
+        for i in 0..3 {
+            s.put(&format!("k/{i}"), b"x").unwrap();
+        }
+        s.arm_delete_failures(1);
+        s.delete("k/0").unwrap(); // one success left
+        let e = s.delete("k/1").unwrap_err();
+        assert!(e.to_string().contains("injected store failure"));
+        // keeps failing until disarmed
+        assert!(s.delete("k/1").is_err());
+        s.disarm_deletes();
+        s.delete("k/1").unwrap();
+        assert_eq!(s.injected_failures(), 2);
+    }
+
+    #[test]
+    fn armed_get_countdown() {
+        let s = store();
+        s.put("k", b"v").unwrap();
+        s.arm_get_failures(2);
+        s.get("k").unwrap();
+        s.get("k").unwrap();
+        assert!(s.get("k").is_err());
+        s.disarm_gets();
+        s.get("k").unwrap();
+    }
+
+    #[test]
+    fn torn_write_leaves_a_strict_prefix() {
+        let s = store().with_torn_writes();
+        let data = b"0123456789abcdef";
+        let e = s.put("torn/obj", data).unwrap_err();
+        assert!(e.to_string().contains("injected store failure"));
+        let left = s.get("torn/obj").unwrap();
+        assert!(!left.is_empty() && left.len() < data.len(), "len={}", left.len());
+        assert_eq!(&data[..left.len()], &left[..]);
+        s.set_torn_writes(false);
+        s.put("torn/obj", data).unwrap();
+        assert_eq!(s.get("torn/obj").unwrap(), data);
+    }
+
+    #[test]
+    fn error_rate_is_deterministic_for_a_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let s = FaultStore::wrapping(MemStore::new(), seed).with_error_rate(0.5);
+            (0..32).map(|i| s.put(&format!("k/{i}"), b"x").is_err()).collect()
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12)); // astronomically unlikely to match
+        let fails = run(11).iter().filter(|&&f| f).count();
+        assert!(fails > 4 && fails < 28, "fails={fails}");
+    }
+
+    #[test]
+    fn heal_clears_every_mode() {
+        let s = store().with_error_rate(1.0).with_torn_writes();
+        s.arm_delete_failures(0);
+        s.arm_get_failures(0);
+        assert!(s.put("k", b"v").is_err());
+        s.heal();
+        s.put("k", b"v").unwrap();
+        assert_eq!(s.get("k").unwrap(), b"v");
+        s.delete("k").unwrap();
+    }
+
+    #[test]
+    fn works_behind_dyn_object_store() {
+        let s: Arc<dyn ObjectStore> = Arc::new(store());
+        s.put("x/y", b"abc").unwrap();
+        let mut out = Vec::new();
+        s.get_into("x/y", &mut out).unwrap();
+        assert_eq!(out, b"abc");
+        assert_eq!(s.delete_prefix("x/").unwrap(), 1);
+    }
+}

@@ -421,6 +421,65 @@ fn prop_delta_chain_restore_identical_to_full_restore() {
 }
 
 #[test]
+fn prop_crash_during_delta_chain_restore_leaves_fresh_restore_intact() {
+    use cacs::dckpt::delta::{DeltaPolicy, Tracker};
+    use cacs::dckpt::service as ckptsvc;
+    use cacs::storage::fault::FaultStore;
+    use cacs::storage::mem::MemStore;
+    forall("crash-mid-delta-restore", 20, Gen::usize(0, 1_000_000), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let nprocs = 1 + rng.pick(3);
+        let chunk_size = 16 + rng.pick(200);
+        // >= 3 cuts so every restore must read >= 3 images per proc
+        let chain_len = 3 + rng.pick(4);
+        let policy = DeltaPolicy { chunk_size, max_dirty_ratio: 1.0, max_chain: 16 };
+        let mut app = BlobApp {
+            blobs: (0..nprocs)
+                .map(|_| {
+                    (0..(chunk_size * 4 + rng.pick(2000))).map(|_| rng.below(256) as u8).collect()
+                })
+                .collect(),
+            steps: 0,
+        };
+        let delta_store = FaultStore::wrapping(MemStore::new(), seed as u64);
+        let full_store = MemStore::new();
+        let mut tracker = Tracker::new(policy.chunk_size);
+        for seq in 1..=(chain_len as u64) {
+            // light touches only: every cut past the first stays a delta
+            for blob in app.blobs.iter_mut() {
+                for _ in 0..(1 + rng.pick(4)) {
+                    let at = rng.pick(blob.len());
+                    blob[at] ^= 1 + rng.below(255) as u8;
+                }
+            }
+            app.steps = seq;
+            ckptsvc::checkpoint_tracked(
+                &app, &delta_store, "d", seq, false, true, &mut tracker, &policy,
+            )
+            .unwrap();
+            ckptsvc::checkpoint(&app, &full_store, "f", seq, false).unwrap();
+        }
+        // crash the restore mid-chain: the first `survive` image reads
+        // succeed (base and maybe early deltas applied), then the store
+        // dies before the last delta lands
+        let survive = rng.pick(3);
+        delta_store.arm_get_failures(survive);
+        let mut torn = BlobApp { blobs: vec![vec![]; nprocs], steps: 0 };
+        let crashed = ckptsvc::restore(&mut torn, &delta_store, "d", Some(chain_len as u64));
+        let fired = delta_store.injected_failures() > 0;
+        delta_store.disarm_gets();
+        // the interrupted restore must have failed loudly, and a fresh
+        // restore over the healed store must be byte-identical to the
+        // full-image reference restore
+        let mut fresh = BlobApp { blobs: vec![vec![]; nprocs], steps: 0 };
+        ckptsvc::restore(&mut fresh, &delta_store, "d", Some(chain_len as u64)).unwrap();
+        let mut reference = BlobApp { blobs: vec![vec![]; nprocs], steps: 0 };
+        ckptsvc::restore(&mut reference, &full_store, "f", Some(chain_len as u64)).unwrap();
+        crashed.is_err() && fired && fresh.blobs == reference.blobs
+    });
+}
+
+#[test]
 fn prop_lu_checkpoint_identity() {
     use cacs::dckpt::DistributedApp;
     use cacs::workloads::lu::{Backend, LuApp, LuConfig};
