@@ -7,15 +7,32 @@
 //! Usage:
 //!   cargo bench --bench fig3_scalability [-- --nodes 1,2,4,...]
 //!       [--seeds 3] [--no-ssh-reuse] [--eager-upload]
+//!   cargo bench --bench fig3_scalability -- --scale
+//!       [--sim-apps 10000] [--real-apps 1000] [--json BENCH_scale.json]
 //!
 //! Ablations: --no-ssh-reuse disables the paper's SSH connection reuse
 //! optimization; --eager-upload disables §5.2's lazy remote copy.
+//!
+//! `--scale` swaps the axis: instead of one app on 1..128 VMs, one
+//! deployment hosting many coordinators — a 10k-app simulated round and
+//! a 1k-app *real-mode* round (actual REST server, actual workload
+//! actors multiplexed over the bounded worker pool) measuring REST GET
+//! latency percentiles while checkpoints stream concurrently.
 
+use cacs::coordinator::lifecycle::AppState;
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
 use cacs::coordinator::simdrv::SimCacs;
 use cacs::coordinator::types::{Asr, WorkloadSpec};
 use cacs::dckpt::protocol::{LU_CLASS_C_BYTES, LU_IMAGE_OVERHEAD_BYTES};
+use cacs::storage::mem::MemStore;
 use cacs::util::args::Args;
 use cacs::util::benchkit::{fmt_bytes, Stats, Table};
+use cacs::util::http::Client;
+use cacs::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 struct Row {
     n: usize,
@@ -62,8 +79,246 @@ fn run_one(n: usize, seed: u64, ssh_reuse: bool, lazy: bool) -> (f64, f64, f64, 
     (iaas, prov, ckpt, restart, image)
 }
 
+/// `Threads:` from /proc/self/status — the no-thread-per-app check.
+/// None off Linux (the check is then skipped, not faked).
+fn proc_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let pos = q * (sorted.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// The 10k-sim + 1k-real scale rounds (`--scale`).
+fn scale_mode(args: &Args) {
+    let sim_apps = args.usize_or("sim-apps", 10_000);
+    let real_apps = args.usize_or("real-apps", 1_000);
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("# Fig 3 (scale) — one deployment, many coordinators\n");
+
+    // --- round 1: 10k simulated apps on one SimCacs -------------------
+    let t0 = Instant::now();
+    let mut cacs = SimCacs::new(4242);
+    // 24 VM slots per Snooze server; ~10% headroom
+    let cloud = cacs.add_snooze(sim_apps / 24 + sim_apps / 240 + 1);
+    let mut sim_ids = Vec::with_capacity(sim_apps);
+    for k in 0..sim_apps {
+        let asr = Asr::new(&format!("s{k}"), WorkloadSpec::Dmtcp1 { n: 8 }, 1);
+        sim_ids.push(cacs.submit(cloud, asr).expect("sim submit"));
+    }
+    cacs.run_until(50_000.0);
+    let running = sim_ids
+        .iter()
+        .filter(|&&id| cacs.state(id) == Some(AppState::Running))
+        .count();
+    // a checkpoint wave across the fleet (every 100th app)
+    let wave: Vec<_> = sim_ids.iter().copied().step_by(100).collect();
+    for &id in &wave {
+        cacs.trigger_checkpoint(id);
+    }
+    cacs.run_until(100_000.0);
+    let cut = wave
+        .iter()
+        .filter(|&&id| cacs.ext(id).map(|e| !e.ckpt_timings.is_empty()).unwrap_or(false))
+        .count();
+    let sim_wall = t0.elapsed().as_secs_f64();
+    println!("## sim round: {sim_apps} apps on one deployment");
+    let mut t = Table::new(["apps", "running", "ckpt wave", "wall-clock"]);
+    t.row([
+        sim_apps.to_string(),
+        running.to_string(),
+        format!("{cut}/{}", wave.len()),
+        format!("{sim_wall:.1} s"),
+    ]);
+    t.print();
+    assert!(
+        running * 100 >= sim_apps * 99,
+        "only {running}/{sim_apps} sim apps reached RUNNING"
+    );
+    assert_eq!(cut, wave.len(), "checkpoint wave incomplete");
+    rows.push(Json::object([
+        ("path", "scale-sim".into()),
+        ("work", format!("{sim_apps} apps").into()),
+        ("time_s", sim_wall.into()),
+        ("throughput", (sim_apps as f64 / sim_wall).into()),
+        ("unit", "apps/s".into()),
+    ]));
+
+    // --- round 2: 1k REAL apps through REST on the actor pool ---------
+    println!("\n## real round: {real_apps} live apps, REST p99 under checkpoint load");
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: None,
+            health_trees: false, // no per-app daemon trees at this scale
+            step_interval: Duration::from_millis(5),
+            ..ServiceConfig::default()
+        },
+    );
+    let server = rest::serve(svc.clone(), "127.0.0.1:0", 8).expect("rest server");
+    let client = Client::new(&server.addr().to_string());
+
+    let t0 = Instant::now();
+    let mut ids: Vec<String> = Vec::with_capacity(real_apps);
+    for k in 0..real_apps {
+        let asr = Json::object([
+            ("name", format!("r{k}").into()),
+            (
+                "workload",
+                Json::object([("kind", "counter".into()), ("blob_bytes", 4096u64.into())]),
+            ),
+            ("n_vms", 1u64.into()),
+        ]);
+        let resp = client.post("/coordinators", &asr).expect("submit");
+        assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+        ids.push(resp.json().unwrap().get("id").as_str().unwrap().to_string());
+    }
+    let submit_wall = t0.elapsed().as_secs_f64();
+
+    // the tentpole invariant: apps are actors on a bounded pool, not OS
+    // threads — the process thread count must not scale with the fleet
+    let threads = proc_threads();
+    if let Some(n) = threads {
+        assert!(
+            n < 64 + real_apps / 10,
+            "{n} OS threads for {real_apps} apps — thread-per-app regression"
+        );
+    }
+
+    // sampled progress check, then measure GET latency while a
+    // background client streams checkpoint POSTs across the fleet
+    for id in ids.iter().step_by(97) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let it = client
+                .get(&format!("/coordinators/{id}"))
+                .ok()
+                .and_then(|r| r.json().ok())
+                .and_then(|j| j.get("iteration").as_u64())
+                .unwrap_or(0);
+            if it >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "{id} never progressed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let ckpt_thread = {
+        let stop = stop.clone();
+        let addr = server.addr().to_string();
+        let ids = ids.clone();
+        std::thread::spawn(move || {
+            let c = Client::new(&addr);
+            let mut taken = 0u64;
+            let mut k = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let id = &ids[k % ids.len()];
+                k += 13; // stride the fleet
+                if let Ok(r) = c.post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
+                {
+                    if r.status == 201 {
+                        taken += 1;
+                    }
+                }
+            }
+            taken
+        })
+    };
+    let samples = 600usize;
+    let mut lat = Vec::with_capacity(samples);
+    for i in 0..samples {
+        let id = &ids[(i * 37) % ids.len()];
+        let t = Instant::now();
+        let resp = client.get(&format!("/coordinators/{id}")).expect("GET info");
+        lat.push(t.elapsed().as_secs_f64());
+        assert_eq!(resp.status, 200);
+    }
+    stop.store(true, Ordering::Relaxed);
+    let cuts = ckpt_thread.join().expect("checkpoint streamer");
+    assert!(cuts > 0, "no checkpoints streamed during the measurement");
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99, max) =
+        (percentile(&lat, 0.50), percentile(&lat, 0.99), *lat.last().unwrap());
+    let pool = svc.actor_stats();
+    let mut t = Table::new([
+        "apps", "submit", "threads", "pool", "ckpts", "GET p50", "GET p99", "GET max",
+    ]);
+    t.row([
+        real_apps.to_string(),
+        format!("{submit_wall:.1} s"),
+        threads.map(|n| n.to_string()).unwrap_or_else(|| "n/a".into()),
+        format!("{}w/{}a", pool.workers, pool.actors),
+        cuts.to_string(),
+        format!("{:.1} ms", p50 * 1e3),
+        format!("{:.1} ms", p99 * 1e3),
+        format!("{:.1} ms", max * 1e3),
+    ]);
+    t.print();
+    assert_eq!(pool.actors, real_apps, "every app must be a live actor");
+    assert!(
+        pool.workers < 64,
+        "worker pool must stay bounded: {} workers",
+        pool.workers
+    );
+    // bounded control-plane latency under concurrent checkpoint traffic
+    // (generous for shared CI runners; the regression regime is seconds)
+    assert!(p99 < 0.75, "REST GET p99 {p99:.3}s under checkpoint load");
+    rows.push(Json::object([
+        ("path", "scale-real-submit".into()),
+        ("work", format!("{real_apps} apps").into()),
+        ("time_s", submit_wall.into()),
+        ("throughput", (real_apps as f64 / submit_wall).into()),
+        ("unit", "apps/s".into()),
+    ]));
+    rows.push(Json::object([
+        ("path", "scale-real-rest-p99".into()),
+        ("work", format!("{real_apps} apps + ckpt stream").into()),
+        ("time_s", p99.into()),
+        ("p50_s", p50.into()),
+        ("max_s", max.into()),
+        ("threads", threads.map(|n| n as u64).unwrap_or(0).into()),
+        ("pool_workers", pool.workers.into()),
+        ("pool_mailbox_max", pool.mailbox_max.into()),
+        ("unit", "s".into()),
+    ]));
+
+    println!("\n# scale checks OK (bounded threads + bounded REST p99 at {real_apps} apps)");
+    if let Some(path) = args.get("json") {
+        let doc = Json::object([
+            ("bench", "fig3_scalability --scale".into()),
+            ("rows", Json::Arr(rows)),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
 fn main() {
     let args = Args::from_env();
+    if args.flag("scale") {
+        return scale_mode(&args);
+    }
     let nodes = args.usize_list_or("nodes", &[1, 2, 4, 8, 16, 32, 64, 128]);
     let seeds = args.u64_or("seeds", 3);
     let ssh_reuse = !args.flag("no-ssh-reuse");

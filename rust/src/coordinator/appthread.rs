@@ -1,26 +1,42 @@
-//! The application host thread (real mode).
+//! The application actor runtime (real mode).
 //!
 //! In the paper every process of an application runs inside its own VM
-//! under a DMTCP daemon.  In real mode we host the whole
-//! [`DistributedApp`] on one dedicated thread that steps it continuously
-//! and services control commands (checkpoint, restore, health, kill)
-//! between steps — each command lands exactly at a step barrier, which
-//! is the consistent cut the DMTCP drain protocol would otherwise have
-//! to establish (DESIGN.md §1).
+//! under a DMTCP daemon.  v1 of real mode hosted each
+//! [`DistributedApp`] on one dedicated OS thread; thread count then
+//! capped realistic deployments at a few hundred apps.  This module is
+//! the actor/command-port rework: each app is an **actor** owning its
+//! app instance, delta [`Tracker`], and pause/broken flags, receiving
+//! typed [`Cmd`]s over a bounded mailbox and emitting [`AppEvent`]s
+//! over one unified stream, multiplexed over a bounded worker pool
+//! ([`ActorPool`]) instead of one thread per app.
+//!
+//! Commands still land exactly at step barriers — a worker drains an
+//! actor's mailbox between steps, which is the consistent cut the DMTCP
+//! drain protocol would otherwise have to establish (DESIGN.md §1) —
+//! and the per-actor mailbox is FIFO, so `Pause` + `Progress` still
+//! quiesce at an exact iteration and `ResetDelta` ordered before a
+//! checkpoint still re-roots that cut.
 //!
 //! PJRT-backed apps hold `!Send` XLA handles, so the app is **built on
-//! the thread** from a `Send` factory and never crosses threads.
+//! its pinned worker** from a `Send` factory and never crosses threads
+//! afterwards (actors are slot-pinned, not work-stolen).
+//!
+//! [`AppHandle`]'s public API is unchanged from the thread-per-app era;
+//! it is now a thin command-port client over the shared mailbox.
 
 use crate::dckpt::delta::{DeltaPolicy, Tracker};
 use crate::dckpt::service::{self, CheckpointReport};
 use crate::dckpt::DistributedApp;
 use crate::storage::ObjectStore;
 use anyhow::Result;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, Weak};
 use std::time::{Duration, Instant};
 
-/// Factory that constructs the app on its host thread.
+/// Factory that constructs the app on its pinned worker.
 pub type AppFactory = Box<dyn FnOnce() -> Result<Box<dyn DistributedApp>> + Send>;
 
 /// Data-plane call timeout: checkpoint/restore round-trips may move
@@ -29,21 +45,38 @@ const DATA_CALL_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Control-plane probe timeout: reads that feed the REST surface and
 /// the §6.3 monitor (`info` progress, health snapshots) must not hang a
-/// worker behind a wedged or busy host thread — they degrade instead.
+/// worker behind a wedged or busy actor — they degrade instead.
 pub const CTRL_PROBE_TIMEOUT: Duration = Duration::from_millis(250);
 
-/// How long [`AppHandle`]'s drop waits for the host thread to exit
-/// before detaching it.  A healthy thread answers `Stop` at its next
-/// step barrier (µs–ms); a wedged one never would, and recovery /
-/// DELETE must not block 120 s (or forever) joining it.
+/// How long [`AppHandle`]'s drop waits for its actor to retire before
+/// detaching.  A healthy actor is retired at its worker's next pass
+/// (µs–ms); a worker stuck in another actor's multi-minute checkpoint
+/// would otherwise block recovery / DELETE right along with it.
 const JOIN_GRACE: Duration = Duration::from_millis(250);
+
+/// Bounded mailbox: a caller flooding one app gets backpressure (an
+/// error) instead of unbounded queue growth inside the control plane.
+const MAILBOX_CAP: usize = 1024;
+
+/// Idle worker park time when no actor has a step due.  Mailbox pushes
+/// wake the worker explicitly, so this only bounds staleness of the
+/// stop-flag scan.
+const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+/// Lock that survives a poisoned mutex: a panicking actor must never
+/// brick every other app sharing the registry/mailbox lock (the guarded
+/// state stays consistent — commands are popped one at a time and
+/// handlers run outside the lock).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Control commands accepted between steps.
 pub enum Cmd {
     /// Write a checkpoint (sequence `seq`) into the store.
     /// `allow_delta` lets the dirty-chunk engine emit a delta image
     /// when the previous cut's digests make one worthwhile; either way
-    /// the host thread's tracker is re-based on this cut.
+    /// the actor's tracker is re-based on this cut.
     Checkpoint {
         seq: u64,
         with_overhead: bool,
@@ -64,30 +97,314 @@ pub enum Cmd {
     Progress { reply: Sender<(u64, f64)> },
     /// Fault injection: kill process `i`.
     Kill { proc: usize },
-    /// Fault injection: wedge the host thread itself — it stops
-    /// servicing commands entirely (the real-mode analog of a VM whose
-    /// guest froze: the app may or may not be fine, but nobody can
-    /// tell).  Only detaching the thread gets rid of it.
+    /// Fault injection: wedge the actor — it stops servicing commands
+    /// entirely (the real-mode analog of a VM whose guest froze: the
+    /// app may or may not be fine, but nobody can tell).  Unlike the
+    /// thread-per-app era this no longer burns an OS thread: the actor
+    /// silently drops every command (replies are never sent, so callers
+    /// give up at their own timeout) until its handle is dropped.
     Wedge,
     /// Pause stepping (oversubscription: low-priority jobs swap out).
     Pause,
     /// Resume stepping.
     Resume,
-    /// Stop the thread.
+    /// Stop the actor.
     Stop,
 }
 
-/// Handle to a running application thread.
+/// One event on the unified actor event stream.
+#[derive(Debug, Clone)]
+pub struct AppEvent {
+    pub app: String,
+    pub kind: AppEventKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum AppEventKind {
+    /// The factory produced the app on its pinned worker.
+    Constructed,
+    /// The factory failed (or panicked); the actor serves error
+    /// sentinels until stopped.
+    ConstructFailed(String),
+    /// A step returned an error or panicked; the actor stops stepping
+    /// but keeps serving its command port.
+    StepFailed(String),
+    /// A command handler panicked; the caller's reply channel is torn
+    /// (it sees a prompt error, not a 120 s timeout).
+    CommandPanicked(String),
+    CheckpointTaken {
+        seq: u64,
+        bytes: u64,
+        kind: &'static str,
+    },
+    Restored { seq: u64 },
+    Wedged,
+    Stopped,
+}
+
+/// Fan-out hub for [`AppEvent`]s: one stream carries every actor's
+/// lifecycle, so observers subscribe once instead of tapping N apps.
+pub struct EventHub {
+    subs: Mutex<Vec<Sender<AppEvent>>>,
+}
+
+impl EventHub {
+    fn new() -> EventHub {
+        EventHub { subs: Mutex::new(Vec::new()) }
+    }
+
+    pub fn subscribe(&self) -> Receiver<AppEvent> {
+        let (tx, rx) = channel();
+        lock_unpoisoned(&self.subs).push(tx);
+        rx
+    }
+
+    fn emit(&self, app: &str, kind: AppEventKind) {
+        let mut subs = lock_unpoisoned(&self.subs);
+        if subs.is_empty() {
+            return;
+        }
+        let ev = AppEvent { app: app.to_string(), kind };
+        // dropped receivers unsubscribe implicitly
+        subs.retain(|s| s.send(ev.clone()).is_ok());
+    }
+}
+
+/// State shared between an [`AppHandle`] and the worker running the
+/// actor.  The mailbox is the command port; `stop` is the out-of-band
+/// kill switch (honored even by a wedged actor — dropping the handle
+/// must always reclaim the slot); `alive` flips false when the worker
+/// retires the actor.
+struct ActorShared {
+    name: String,
+    mailbox: Mutex<VecDeque<Cmd>>,
+    /// Mirror of the mailbox length for lock-free gauge reads.
+    depth: AtomicUsize,
+    stop: AtomicBool,
+    alive: AtomicBool,
+    wake: Sender<WorkerMsg>,
+}
+
+/// Messages on a worker's inbox (distinct from per-actor mailboxes):
+/// actor placement, wake-ups after mailbox pushes, and pool shutdown.
+enum WorkerMsg {
+    Spawn {
+        shared: Arc<ActorShared>,
+        factory: AppFactory,
+        store: Arc<dyn ObjectStore>,
+        step_interval: Duration,
+        delta: DeltaPolicy,
+    },
+    Wake,
+    Shutdown,
+}
+
+/// What a worker keeps per actor.  Lives only on the pinned worker
+/// thread — `app` may hold `!Send` handles.
+struct ActorRun {
+    shared: Arc<ActorShared>,
+    store: Arc<dyn ObjectStore>,
+    step_interval: Duration,
+    next_step: Instant,
+    paused: bool,
+    broken: bool, // a proc died / a handler panicked; stop stepping, keep serving
+    wedged: bool,
+    state: ActorState,
+}
+
+enum ActorState {
+    Live {
+        app: Box<dyn DistributedApp>,
+        tracker: Tracker,
+        policy: DeltaPolicy,
+    },
+    /// Construction failed: serve error sentinels (never "healthy").
+    Failed,
+}
+
+impl ActorRun {
+    fn steppable(&self) -> bool {
+        !self.paused
+            && !self.broken
+            && !self.wedged
+            && matches!(self.state, ActorState::Live { .. })
+    }
+}
+
+/// Point-in-time saturation gauges for one [`ActorPool`] — the numbers
+/// `GET /coordinators/:id` surfaces so mailbox pressure is observable
+/// before it becomes a timeout.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    pub workers: usize,
+    pub actors: usize,
+    /// Total commands queued across every live mailbox.
+    pub mailbox_depth: usize,
+    /// Deepest single mailbox.
+    pub mailbox_max: usize,
+}
+
+/// Bounded worker pool multiplexing many app actors over few OS
+/// threads.  Placement is least-loaded at spawn time and sticky for the
+/// actor's lifetime (apps may hold `!Send` state).
+pub struct ActorPool {
+    inboxes: Vec<Sender<WorkerMsg>>,
+    loads: Vec<Arc<AtomicUsize>>,
+    registry: Mutex<Vec<Weak<ActorShared>>>,
+    hub: Arc<EventHub>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ActorPool {
+    pub fn new(workers: usize) -> ActorPool {
+        let workers = workers.max(1);
+        let hub = Arc::new(EventHub::new());
+        let mut inboxes = Vec::with_capacity(workers);
+        let mut loads = Vec::with_capacity(workers);
+        let mut joins = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel();
+            let load = Arc::new(AtomicUsize::new(0));
+            let wload = load.clone();
+            let whub = hub.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("cacs-actor-{i}"))
+                .spawn(move || worker_loop(rx, wload, whub))
+                .expect("spawn actor worker");
+            inboxes.push(tx);
+            loads.push(load);
+            joins.push(join);
+        }
+        ActorPool {
+            inboxes,
+            loads,
+            registry: Mutex::new(Vec::new()),
+            hub,
+            workers: Mutex::new(joins),
+        }
+    }
+
+    /// Place a new actor on the least-loaded worker and hand back its
+    /// command-port client.  The factory runs *on the worker* (PJRT
+    /// handles are `!Send`), so construction failures surface through
+    /// the handle's calls — exactly like the thread-per-app era.
+    pub fn spawn(
+        &self,
+        app_name: &str,
+        factory: AppFactory,
+        store: Arc<dyn ObjectStore>,
+        step_interval: Duration,
+        delta: DeltaPolicy,
+    ) -> AppHandle {
+        let slot = self
+            .loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        self.loads[slot].fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::new(ActorShared {
+            name: app_name.to_string(),
+            mailbox: Mutex::new(VecDeque::new()),
+            depth: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            alive: AtomicBool::new(true),
+            wake: self.inboxes[slot].clone(),
+        });
+        {
+            let mut reg = lock_unpoisoned(&self.registry);
+            reg.retain(|w| w.strong_count() > 0);
+            reg.push(Arc::downgrade(&shared));
+        }
+        let msg = WorkerMsg::Spawn {
+            shared: shared.clone(),
+            factory,
+            store,
+            step_interval,
+            delta,
+        };
+        if self.inboxes[slot].send(msg).is_err() {
+            // worker inbox gone (pool shutting down): the actor never
+            // starts; mark it retired so callers fail fast
+            shared.alive.store(false, Ordering::SeqCst);
+            self.loads[slot].fetch_sub(1, Ordering::Relaxed);
+        }
+        AppHandle { shared, app_name: app_name.to_string() }
+    }
+
+    /// Subscribe to the unified event stream (all actors on this pool).
+    pub fn subscribe(&self) -> Receiver<AppEvent> {
+        self.hub.subscribe()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let mut stats = PoolStats { workers: self.inboxes.len(), ..PoolStats::default() };
+        let mut reg = lock_unpoisoned(&self.registry);
+        reg.retain(|w| match w.upgrade() {
+            Some(shared) => {
+                if shared.alive.load(Ordering::SeqCst) {
+                    let d = shared.depth.load(Ordering::Relaxed);
+                    stats.actors += 1;
+                    stats.mailbox_depth += d;
+                    stats.mailbox_max = stats.mailbox_max.max(d);
+                }
+                true
+            }
+            None => false,
+        });
+        stats
+    }
+}
+
+impl Drop for ActorPool {
+    fn drop(&mut self) {
+        for tx in &self.inboxes {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        let mut joins = lock_unpoisoned(&self.workers);
+        for j in joins.drain(..) {
+            // bounded join, same rationale as AppHandle::drop — a
+            // worker mid-checkpoint must not hang teardown
+            let deadline = Instant::now() + Duration::from_millis(500);
+            while !j.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            if j.is_finished() {
+                let _ = j.join();
+            } else {
+                log::warn!("actor worker did not stop in time; detaching");
+            }
+        }
+    }
+}
+
+/// The process-wide default pool, used by [`AppHandle::spawn`] /
+/// [`AppHandle::spawn_with`] (callers that manage their own pool —
+/// the service — use [`ActorPool::spawn`] directly).
+fn default_pool() -> &'static ActorPool {
+    static POOL: OnceLock<ActorPool> = OnceLock::new();
+    POOL.get_or_init(|| ActorPool::new(default_workers()))
+}
+
+/// Worker count when the caller didn't choose one.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8)
+}
+
+/// Handle to a running application actor: a thin command-port client.
 pub struct AppHandle {
-    tx: Sender<Cmd>,
-    join: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<ActorShared>,
     pub app_name: String,
 }
 
 impl AppHandle {
-    /// Spawn the host thread with the default [`DeltaPolicy`].
-    /// `step_interval` throttles stepping (zero = run hot); `store` is
-    /// where checkpoint images go.
+    /// Spawn an actor on the default pool with the default
+    /// [`DeltaPolicy`].  `step_interval` throttles stepping (zero = run
+    /// hot); `store` is where checkpoint images go.
     pub fn spawn(
         app_name: &str,
         factory: AppFactory,
@@ -106,14 +423,33 @@ impl AppHandle {
         step_interval: Duration,
         delta: DeltaPolicy,
     ) -> AppHandle {
-        let (tx, rx) = channel();
-        let name = app_name.to_string();
-        let thread_name = format!("cacs-app-{name}");
-        let join = std::thread::Builder::new()
-            .name(thread_name)
-            .spawn(move || host_loop(&name, factory, store, step_interval, delta, rx))
-            .expect("spawn app thread");
-        AppHandle { tx, join: Some(join), app_name: app_name.to_string() }
+        default_pool().spawn(app_name, factory, store, step_interval, delta)
+    }
+
+    /// Commands queued on this actor's mailbox right now.
+    pub fn mailbox_depth(&self) -> usize {
+        self.shared.depth.load(Ordering::Relaxed)
+    }
+
+    /// Push a command onto the bounded mailbox and wake the worker.
+    fn send(&self, cmd: Cmd) -> Result<()> {
+        anyhow::ensure!(self.shared.alive.load(Ordering::SeqCst), "app actor gone");
+        {
+            let mut mb = lock_unpoisoned(&self.shared.mailbox);
+            anyhow::ensure!(mb.len() < MAILBOX_CAP, "app mailbox full ({MAILBOX_CAP})");
+            mb.push_back(cmd);
+            self.shared.depth.store(mb.len(), Ordering::Relaxed);
+        }
+        let _ = self.shared.wake.send(WorkerMsg::Wake);
+        Ok(())
+    }
+
+    /// Fire-and-forget command: dropped (with a log line) instead of
+    /// erroring when the actor is gone or the mailbox is full.
+    fn send_lossy(&self, cmd: Cmd) {
+        if let Err(e) = self.send(cmd) {
+            log::debug!("{}: dropped command: {e}", self.app_name);
+        }
     }
 
     fn call_within<T, F: FnOnce(Sender<T>) -> Cmd>(
@@ -122,11 +458,12 @@ impl AppHandle {
         make: F,
     ) -> Result<T> {
         let (tx, rx) = channel();
-        self.tx
-            .send(make(tx))
-            .map_err(|_| anyhow::anyhow!("app thread gone"))?;
+        self.send(make(tx))?;
+        // Disconnected (reply sender dropped: handler panicked, actor
+        // wedged/retired) surfaces here as a prompt error rather than
+        // waiting out the full timeout
         rx.recv_timeout(timeout)
-            .map_err(|_| anyhow::anyhow!("app thread did not answer within {timeout:?}"))
+            .map_err(|_| anyhow::anyhow!("app actor did not answer within {timeout:?}"))
     }
 
     fn call<T, F: FnOnce(Sender<T>) -> Cmd>(&self, make: F) -> Result<T> {
@@ -150,7 +487,7 @@ impl AppHandle {
     /// Fire-and-forget (used when the tracked base checkpoint is
     /// deleted out from under the chain).
     pub fn reset_delta(&self) {
-        let _ = self.tx.send(Cmd::ResetDelta);
+        self.send_lossy(Cmd::ResetDelta);
     }
 
     pub fn restore(&self, seq: Option<u64>) -> Result<u64> {
@@ -162,8 +499,8 @@ impl AppHandle {
     }
 
     /// Non-blocking health probe (§6.3 leaf hook): the per-proc flags,
-    /// or `None` if the host thread did not answer within `timeout` —
-    /// the monitor treats that as the procs being unreachable.  A late
+    /// or `None` if the actor did not answer within `timeout` — the
+    /// monitor treats that as the procs being unreachable.  A late
     /// reply lands on a dropped channel and is discarded harmlessly.
     pub fn try_health(&self, timeout: Duration) -> Option<Vec<bool>> {
         self.call_within(timeout, |reply| Cmd::Health { reply }).ok()
@@ -181,229 +518,349 @@ impl AppHandle {
     }
 
     pub fn kill_proc(&self, proc: usize) {
-        let _ = self.tx.send(Cmd::Kill { proc });
+        self.send_lossy(Cmd::Kill { proc });
     }
 
-    /// Fault injection: wedge the host thread (it stops answering
-    /// everything, including `Stop`).  See [`Cmd::Wedge`].
+    /// Fault injection: wedge the actor (it stops answering
+    /// everything).  See [`Cmd::Wedge`].
     pub fn wedge(&self) {
-        let _ = self.tx.send(Cmd::Wedge);
+        self.send_lossy(Cmd::Wedge);
     }
 
     pub fn pause(&self) {
-        let _ = self.tx.send(Cmd::Pause);
+        self.send_lossy(Cmd::Pause);
     }
 
     pub fn resume(&self) {
-        let _ = self.tx.send(Cmd::Resume);
+        self.send_lossy(Cmd::Resume);
     }
 
     /// Quiesce stepping at the next step barrier and return the frozen
     /// (iteration, metric).  Pause and the progress round-trip share
-    /// the FIFO command queue, so when this returns the app is stopped
+    /// the FIFO mailbox, so when this returns the app is stopped
     /// *exactly* at the returned iteration — the consistent cut the
     /// migration orchestrator checkpoints from (commands queued behind
     /// this, e.g. the checkpoint itself, see the same cut).
     pub fn quiesce(&self) -> Result<(u64, f64)> {
-        let _ = self.tx.send(Cmd::Pause);
+        self.send(Cmd::Pause)?;
         self.call(|reply| Cmd::Progress { reply })
     }
 }
 
 impl Drop for AppHandle {
     fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Stop);
-        if let Some(j) = self.join.take() {
-            // Bounded join: a wedged host thread never answers Stop, and
-            // an unbounded join here would wedge recovery (and DELETE)
-            // right along with it.  Wait a grace period, then detach —
-            // the thread either exits on its own (e.g. once an
-            // in-flight checkpoint drains and it sees Stop) or is
-            // reaped at process exit.  Callers that write to the store
-            // after dropping a handle already tolerate a late writer:
-            // the checkpoint path re-checks its record and deletes its
-            // own images when the coordinator is gone.
-            let deadline = Instant::now() + JOIN_GRACE;
-            while !j.is_finished() && Instant::now() < deadline {
-                std::thread::sleep(Duration::from_millis(2));
+        // out-of-band stop: honored even when the actor is wedged (its
+        // mailbox is a black hole) — the worker retires it at its next
+        // pass and the slot is reclaimed, unlike the thread-per-app era
+        // where a wedged host thread leaked until process exit
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let _ = self.shared.wake.send(WorkerMsg::Wake);
+        // Bounded wait: the worker may be deep inside another actor's
+        // checkpoint (minutes).  Recovery and DELETE must not block on
+        // that, so after the grace period the actor is left to be
+        // retired whenever the worker next passes it.  Callers that
+        // write to the store after dropping a handle already tolerate a
+        // late writer: the checkpoint path re-checks its record and
+        // deletes its own images when the coordinator is gone.
+        let deadline = Instant::now() + JOIN_GRACE;
+        while self.shared.alive.load(Ordering::SeqCst) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if self.shared.alive.load(Ordering::SeqCst) {
+            log::warn!(
+                "{}: actor not retired within {JOIN_GRACE:?}; detaching",
+                self.app_name
+            );
+        }
+    }
+}
+
+/// One pool worker: owns a set of pinned actors, waits on its inbox
+/// with a deadline derived from the earliest due step, and services
+/// every actor per pass (drain mailbox at the step barrier, then step).
+fn worker_loop(rx: Receiver<WorkerMsg>, load: Arc<AtomicUsize>, hub: Arc<EventHub>) {
+    let mut runs: Vec<ActorRun> = Vec::new();
+    loop {
+        // how long may we park?  zero when any actor has queued
+        // commands, a pending stop, or a step already due
+        let now = Instant::now();
+        let mut wait = IDLE_WAIT;
+        let mut due = false;
+        for r in &runs {
+            if r.shared.stop.load(Ordering::SeqCst) || r.shared.depth.load(Ordering::Relaxed) > 0
+            {
+                due = true;
+                break;
             }
-            if j.is_finished() {
-                let _ = j.join();
+            if r.steppable() {
+                let left = r.next_step.saturating_duration_since(now);
+                if left.is_zero() {
+                    due = true;
+                    break;
+                }
+                wait = wait.min(left);
+            }
+        }
+
+        let first = if due {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(_) => None,
+            }
+        } else {
+            match rx.recv_timeout(wait) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    // every inbox sender (pool + all handles) is gone:
+                    // nothing can ever reach these actors again
+                    for run in runs.drain(..) {
+                        retire(run, &hub, &load);
+                    }
+                    return;
+                }
+            }
+        };
+        // drain the inbox: coalesce wake-ups, accept placements
+        let mut msg = first;
+        while let Some(m) = msg {
+            match m {
+                WorkerMsg::Spawn { shared, factory, store, step_interval, delta } => {
+                    runs.push(construct_actor(shared, factory, store, step_interval, delta, &hub));
+                }
+                WorkerMsg::Wake => {}
+                WorkerMsg::Shutdown => {
+                    for run in runs.drain(..) {
+                        retire(run, &hub, &load);
+                    }
+                    return;
+                }
+            }
+            msg = rx.try_recv().ok();
+        }
+
+        // service every actor: stop flag, mailbox drain, one step
+        let mut i = 0;
+        while i < runs.len() {
+            if runs[i].shared.stop.load(Ordering::SeqCst) {
+                let run = runs.swap_remove(i);
+                retire(run, &hub, &load);
+                continue;
+            }
+            if service_actor(&mut runs[i], &hub) {
+                i += 1;
             } else {
-                log::warn!(
-                    "{}: host thread did not stop within {JOIN_GRACE:?}; detaching",
-                    self.app_name
-                );
+                let run = runs.swap_remove(i);
+                retire(run, &hub, &load);
             }
         }
     }
 }
 
-/// Everything the host loop mutates while serving commands: the app
-/// itself, the pause/broken flags, and the delta tracker whose digests
-/// persist across cuts.
-struct HostState {
-    app: Box<dyn DistributedApp>,
-    paused: bool,
-    broken: bool, // a proc died; stop stepping, keep serving
-    tracker: Tracker,
-    policy: DeltaPolicy,
+/// Run the factory on the pinned worker (§ PJRT `!Send` handles).
+/// Failures and panics produce a [`ActorState::Failed`] actor that
+/// serves error sentinels — never "healthy" — until stopped.
+fn construct_actor(
+    shared: Arc<ActorShared>,
+    factory: AppFactory,
+    store: Arc<dyn ObjectStore>,
+    step_interval: Duration,
+    delta: DeltaPolicy,
+    hub: &EventHub,
+) -> ActorRun {
+    let name = shared.name.clone();
+    let state = match catch_unwind(AssertUnwindSafe(factory)) {
+        Ok(Ok(app)) => {
+            hub.emit(&name, AppEventKind::Constructed);
+            ActorState::Live {
+                app,
+                tracker: Tracker::new(delta.chunk_size),
+                policy: delta,
+            }
+        }
+        Ok(Err(e)) => {
+            log::error!("{name}: app construction failed: {e}");
+            hub.emit(&name, AppEventKind::ConstructFailed(e.to_string()));
+            ActorState::Failed
+        }
+        Err(_) => {
+            log::error!("{name}: app construction panicked");
+            hub.emit(&name, AppEventKind::ConstructFailed("factory panicked".into()));
+            ActorState::Failed
+        }
+    };
+    ActorRun {
+        shared,
+        store,
+        step_interval,
+        next_step: Instant::now(),
+        paused: false,
+        broken: false,
+        wedged: false,
+        state,
+    }
 }
 
-/// Shared command handling; returns false when the thread must exit.
-fn handle_cmd(cmd: Cmd, st: &mut HostState, app_name: &str, store: &Arc<dyn ObjectStore>) -> bool {
-    match cmd {
-        Cmd::Stop => return false,
-        Cmd::Pause => st.paused = true,
-        Cmd::Resume => st.paused = false,
-        Cmd::Kill { proc } => {
-            st.app.kill_proc(proc);
-            st.broken = true;
+fn retire(run: ActorRun, hub: &EventHub, load: &AtomicUsize) {
+    run.shared.alive.store(false, Ordering::SeqCst);
+    // commands queued behind the stop never get replies: drop them so
+    // blocked callers see Disconnected now instead of a full timeout
+    lock_unpoisoned(&run.shared.mailbox).clear();
+    run.shared.depth.store(0, Ordering::Relaxed);
+    load.fetch_sub(1, Ordering::Relaxed);
+    hub.emit(&run.shared.name, AppEventKind::Stopped);
+}
+
+/// One service pass over an actor: drain its mailbox (each command
+/// lands at a step barrier), then advance at most one throttled step.
+/// Returns false when the actor asked to stop.
+fn service_actor(run: &mut ActorRun, hub: &EventHub) -> bool {
+    loop {
+        let cmd = {
+            let mut mb = lock_unpoisoned(&run.shared.mailbox);
+            let cmd = mb.pop_front();
+            run.shared.depth.store(mb.len(), Ordering::Relaxed);
+            cmd
+        };
+        let Some(cmd) = cmd else { break };
+        if run.wedged {
+            // black hole: drop the command, never reply (callers time
+            // out at their own timeout, exactly like a frozen guest)
+            continue;
         }
-        Cmd::Wedge => {
-            log::warn!("{app_name}: host thread wedged by fault injection");
-            loop {
-                std::thread::sleep(Duration::from_secs(60));
+        match catch_unwind(AssertUnwindSafe(|| dispatch(run, cmd, hub))) {
+            Ok(Flow::Continue) => {}
+            Ok(Flow::Retire) => return false,
+            Err(_) => {
+                // the handler panicked (e.g. a serialize hook): the
+                // reply sender died with it, so the caller gets a
+                // prompt error; the app may be mid-mutation, so stop
+                // stepping it — and the worker (and every other actor
+                // on it) lives on
+                run.broken = true;
+                let name = run.shared.name.clone();
+                log::error!("{name}: command handler panicked; app marked broken");
+                hub.emit(&name, AppEventKind::CommandPanicked("command handler panicked".into()));
             }
         }
-        Cmd::Health { reply } => {
-            let h = (0..st.app.nprocs()).map(|i| st.app.proc_healthy(i)).collect();
-            let _ = reply.send(h);
-        }
-        Cmd::Progress { reply } => {
-            let _ = reply.send((st.app.iteration(), st.app.metric()));
-        }
-        Cmd::Checkpoint { seq, with_overhead, allow_delta, reply } => {
-            let r = service::checkpoint_tracked(
-                st.app.as_ref(),
-                store.as_ref(),
-                app_name,
-                seq,
-                with_overhead,
-                allow_delta,
-                &mut st.tracker,
-                &st.policy,
-            );
-            let _ = reply.send(r);
-        }
-        Cmd::ResetDelta => st.tracker.reset(),
-        Cmd::Restore { seq, reply } => {
-            let r = service::restore(st.app.as_mut(), store.as_ref(), app_name, seq);
-            if r.is_ok() {
-                st.broken = false; // revived
-                // the live state no longer matches the digests of the
-                // last cut — the next checkpoint re-roots the chain
-                st.tracker.reset();
+    }
+
+    if run.steppable() && Instant::now() >= run.next_step {
+        if let ActorState::Live { app, .. } = &mut run.state {
+            match catch_unwind(AssertUnwindSafe(|| app.step())) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    let name = &run.shared.name;
+                    log::warn!("{name}: step failed: {e}");
+                    hub.emit(name, AppEventKind::StepFailed(e.to_string()));
+                    run.broken = true;
+                }
+                Err(_) => {
+                    let name = &run.shared.name;
+                    log::error!("{name}: step panicked");
+                    hub.emit(name, AppEventKind::StepFailed("step panicked".into()));
+                    run.broken = true;
+                }
             }
-            let _ = reply.send(r);
+            // the deadline is held across commands: a probe must not
+            // cut the throttle short (frequent REST polling would
+            // otherwise step the app at the poll rate)
+            run.next_step = Instant::now() + run.step_interval;
         }
     }
     true
 }
 
-fn host_loop(
-    app_name: &str,
-    factory: AppFactory,
-    store: Arc<dyn ObjectStore>,
-    step_interval: Duration,
-    delta: DeltaPolicy,
-    rx: Receiver<Cmd>,
-) {
-    let app: Box<dyn DistributedApp> = match factory() {
-        Ok(a) => a,
-        Err(e) => {
-            log::error!("{app_name}: app construction failed: {e}");
-            while let Ok(cmd) = rx.recv() {
-                match cmd {
-                    Cmd::Stop => return,
-                    Cmd::Checkpoint { reply, .. } => {
-                        let _ = reply.send(Err(anyhow::anyhow!("app failed to construct")));
-                    }
-                    Cmd::Restore { reply, .. } => {
-                        let _ = reply.send(Err(anyhow::anyhow!("app failed to construct")));
-                    }
-                    Cmd::Health { reply } => {
-                        // no app was constructed, so there are no
-                        // per-proc flags.  The empty reply is NOT "all
-                        // healthy": the service pads it to n_vms ×
-                        // false and the monitor's leaf hooks read the
-                        // missing flags as unreachable, so a
-                        // construct-failed app enters recovery instead
-                        // of sailing under the monitor's radar.
-                        let _ = reply.send(vec![]);
-                    }
-                    Cmd::Progress { reply } => {
-                        let _ = reply.send((0, f64::NAN));
-                    }
-                    _ => {}
-                }
+enum Flow {
+    Continue,
+    Retire,
+}
+
+fn dispatch(run: &mut ActorRun, cmd: Cmd, hub: &EventHub) -> Flow {
+    let name = run.shared.name.clone();
+    let ActorState::Live { app, tracker, policy } = &mut run.state else {
+        // construct-failed sentinels
+        match cmd {
+            Cmd::Stop => return Flow::Retire,
+            Cmd::Checkpoint { reply, .. } => {
+                let _ = reply.send(Err(anyhow::anyhow!("app failed to construct")));
             }
-            return;
+            Cmd::Restore { reply, .. } => {
+                let _ = reply.send(Err(anyhow::anyhow!("app failed to construct")));
+            }
+            Cmd::Health { reply } => {
+                // no app was constructed, so there are no per-proc
+                // flags.  The empty reply is NOT "all healthy": the
+                // service pads it to n_vms × false and the monitor's
+                // leaf hooks read the missing flags as unreachable, so
+                // a construct-failed app enters recovery instead of
+                // sailing under the monitor's radar.
+                let _ = reply.send(vec![]);
+            }
+            Cmd::Progress { reply } => {
+                let _ = reply.send((0, f64::NAN));
+            }
+            _ => {}
         }
+        return Flow::Continue;
     };
-
-    let tracker = Tracker::new(delta.chunk_size);
-    let mut st = HostState { app, paused: false, broken: false, tracker, policy: delta };
-    loop {
-        // drain pending commands (each lands at a step barrier)
-        loop {
-            match rx.try_recv() {
-                Ok(cmd) => {
-                    if !handle_cmd(cmd, &mut st, app_name, &store) {
-                        return;
-                    }
-                }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
-            }
+    match cmd {
+        Cmd::Stop => return Flow::Retire,
+        Cmd::Pause => run.paused = true,
+        Cmd::Resume => run.paused = false,
+        Cmd::Kill { proc } => {
+            app.kill_proc(proc);
+            run.broken = true;
         }
-
-        if st.paused || st.broken {
-            // block (bounded) instead of spinning
-            if let Ok(cmd) = rx.recv_timeout(Duration::from_millis(50)) {
-                if !handle_cmd(cmd, &mut st, app_name, &store) {
-                    return;
-                }
-            }
-            continue;
+        Cmd::Wedge => {
+            log::warn!("{name}: actor wedged by fault injection");
+            run.wedged = true;
+            hub.emit(&name, AppEventKind::Wedged);
         }
-
-        match st.app.step() {
-            Ok(()) => {}
-            Err(e) => {
-                log::warn!("{app_name}: step failed: {e}");
-                st.broken = true;
-                continue;
-            }
+        Cmd::Health { reply } => {
+            let h = (0..app.nprocs()).map(|i| app.proc_healthy(i)).collect();
+            let _ = reply.send(h);
         }
-        if !step_interval.is_zero() {
-            // throttle by waiting on the command queue instead of a
-            // blind sleep: a heavily throttled but healthy app must
-            // still answer control probes (health/progress) inside the
-            // §6.3 heartbeat budget, not one step_interval late.  The
-            // wait holds the full interval deadline across commands —
-            // a probe must not cut the throttle short (frequent REST
-            // polling would otherwise step the app at the poll rate)
-            let next_step = Instant::now() + step_interval;
-            loop {
-                let left = next_step.saturating_duration_since(Instant::now());
-                if left.is_zero() {
-                    break;
-                }
-                match rx.recv_timeout(left) {
-                    Ok(cmd) => {
-                        if !handle_cmd(cmd, &mut st, app_name, &store) {
-                            return;
-                        }
-                        if st.paused || st.broken {
-                            break; // the main loop's parked branch takes over
-                        }
-                    }
-                    Err(_) => break, // interval elapsed (or sender gone)
-                }
+        Cmd::Progress { reply } => {
+            let _ = reply.send((app.iteration(), app.metric()));
+        }
+        Cmd::Checkpoint { seq, with_overhead, allow_delta, reply } => {
+            let r = service::checkpoint_tracked(
+                app.as_ref(),
+                run.store.as_ref(),
+                &name,
+                seq,
+                with_overhead,
+                allow_delta,
+                tracker,
+                policy,
+            );
+            if let Ok(report) = &r {
+                hub.emit(
+                    &name,
+                    AppEventKind::CheckpointTaken {
+                        seq: report.seq,
+                        bytes: report.total_bytes(),
+                        kind: report.kind(),
+                    },
+                );
             }
+            let _ = reply.send(r);
+        }
+        Cmd::ResetDelta => tracker.reset(),
+        Cmd::Restore { seq, reply } => {
+            let r = service::restore(app.as_mut(), run.store.as_ref(), &name, seq);
+            if let Ok(seq) = &r {
+                run.broken = false; // revived
+                // the live state no longer matches the digests of the
+                // last cut — the next checkpoint re-roots the chain
+                tracker.reset();
+                hub.emit(&name, AppEventKind::Restored { seq: *seq });
+            }
+            let _ = reply.send(r);
         }
     }
+    Flow::Continue
 }
 
 #[cfg(test)]
@@ -570,8 +1027,8 @@ mod tests {
         assert_eq!(h.try_health(Duration::from_millis(200)), Some(vec![true, true]));
         assert!(h.try_progress(Duration::from_millis(200)).is_some());
         h.wedge();
-        // the wedge lands at the next step barrier; after that nothing
-        // answers — the probe must give up at its own timeout, not 120 s
+        // once the wedge lands, nothing answers — the probe must give
+        // up within its own timeout, not the data-plane 120 s
         std::thread::sleep(Duration::from_millis(50));
         let t0 = std::time::Instant::now();
         let r = h.try_health(Duration::from_millis(100));
@@ -580,9 +1037,174 @@ mod tests {
         let t0 = std::time::Instant::now();
         assert!(h.try_progress(Duration::from_millis(100)).is_none());
         assert!(t0.elapsed() < Duration::from_secs(2));
-        // dropping the wedged handle detaches instead of joining forever
+        // dropping the wedged handle retires the actor via the
+        // out-of-band stop flag instead of blocking on the mailbox
         let t0 = std::time::Instant::now();
         drop(h);
         assert!(t0.elapsed() < Duration::from_secs(5), "drop blocked {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn pool_multiplexes_many_actors_over_bounded_workers() {
+        let pool = ActorPool::new(3);
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let handles: Vec<AppHandle> = (0..24)
+            .map(|i| {
+                pool.spawn(
+                    &format!("app-m{i}"),
+                    Box::new(|| {
+                        Ok(Box::new(CounterApp::new(1, 16)) as Box<dyn DistributedApp>)
+                    }),
+                    store.clone(),
+                    Duration::from_millis(1),
+                    DeltaPolicy::default(),
+                )
+            })
+            .collect();
+        let stats = pool.stats();
+        assert_eq!(stats.workers, 3);
+        assert_eq!(stats.actors, 24);
+        std::thread::sleep(Duration::from_millis(60));
+        for h in &handles {
+            let (it, _) = h.progress().unwrap();
+            assert!(it > 0, "{}: never stepped", h.app_name);
+        }
+        drop(handles);
+        let t0 = Instant::now();
+        wait_for(|| pool.stats().actors == 0);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn panicking_actor_does_not_kill_neighbors() {
+        struct PanicOnSerialize(CounterApp);
+        impl DistributedApp for PanicOnSerialize {
+            fn nprocs(&self) -> usize {
+                self.0.nprocs()
+            }
+            fn step(&mut self) -> Result<()> {
+                self.0.step()
+            }
+            fn serialize_proc(&self, _i: usize) -> Result<Vec<u8>> {
+                panic!("serialize hook exploded")
+            }
+            fn restore_proc(&mut self, i: usize, payload: &[u8]) -> Result<()> {
+                self.0.restore_proc(i, payload)
+            }
+            fn proc_healthy(&self, i: usize) -> bool {
+                self.0.proc_healthy(i)
+            }
+            fn kill_proc(&mut self, i: usize) {
+                self.0.kill_proc(i)
+            }
+            fn iteration(&self) -> u64 {
+                self.0.iteration()
+            }
+            fn metric(&self) -> f64 {
+                self.0.metric()
+            }
+            fn kind(&self) -> &'static str {
+                "panicky"
+            }
+        }
+
+        // one worker: both actors share the thread the panic happens on
+        let pool = ActorPool::new(1);
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let bad = pool.spawn(
+            "app-panic",
+            Box::new(|| {
+                Ok(Box::new(PanicOnSerialize(CounterApp::new(1, 16))) as Box<dyn DistributedApp>)
+            }),
+            store.clone(),
+            Duration::from_millis(1),
+            DeltaPolicy::default(),
+        );
+        let good = pool.spawn(
+            "app-good",
+            Box::new(|| Ok(Box::new(CounterApp::new(1, 16)) as Box<dyn DistributedApp>)),
+            store,
+            Duration::from_millis(1),
+            DeltaPolicy::default(),
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        // the panic surfaces as a prompt error, not a 120 s hang
+        let t0 = Instant::now();
+        assert!(bad.checkpoint(1, false).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // the neighbor on the same worker keeps stepping and answering
+        let (it1, _) = good.progress().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let (it2, _) = good.progress().unwrap();
+        assert!(it2 > it1, "neighbor stalled after a panic: {it1} -> {it2}");
+        // the panicked actor still serves its command port
+        assert_eq!(bad.health().unwrap(), vec![true]);
+    }
+
+    #[test]
+    fn event_stream_reports_lifecycle() {
+        let pool = ActorPool::new(2);
+        let events = pool.subscribe();
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let h = pool.spawn(
+            "app-ev",
+            Box::new(|| Ok(Box::new(CounterApp::new(1, 64)) as Box<dyn DistributedApp>)),
+            store,
+            Duration::from_millis(1),
+            DeltaPolicy::default(),
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        h.checkpoint(1, false).unwrap();
+        h.restore(Some(1)).unwrap();
+        drop(h);
+        let mut saw = Vec::new();
+        while let Ok(ev) = events.recv_timeout(Duration::from_millis(500)) {
+            assert_eq!(ev.app, "app-ev");
+            let tag = match ev.kind {
+                AppEventKind::Constructed => "constructed",
+                AppEventKind::CheckpointTaken { seq, kind, .. } => {
+                    assert_eq!((seq, kind), (1, "full"));
+                    "checkpoint"
+                }
+                AppEventKind::Restored { seq } => {
+                    assert_eq!(seq, 1);
+                    "restored"
+                }
+                AppEventKind::Stopped => "stopped",
+                _ => "other",
+            };
+            saw.push(tag);
+            if tag == "stopped" {
+                break;
+            }
+        }
+        assert_eq!(saw, vec!["constructed", "checkpoint", "restored", "stopped"]);
+    }
+
+    #[test]
+    fn mailbox_depth_gauge_tracks_queued_commands() {
+        let (h, _store) = spawn_counter(1);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(h.health().unwrap().len(), 1); // drained when idle
+        assert_eq!(h.mailbox_depth(), 0);
+        h.wedge();
+        std::thread::sleep(Duration::from_millis(20));
+        // a wedged actor blackholes commands as it pops them, but a
+        // burst shows up in the gauge before the worker's next pass;
+        // at minimum the gauge must not underflow or error
+        for _ in 0..5 {
+            h.pause();
+        }
+        assert!(h.mailbox_depth() <= 5);
+    }
+
+    fn wait_for(f: impl Fn() -> bool) {
+        for _ in 0..400 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("condition never became true");
     }
 }

@@ -1,0 +1,811 @@
+//! Federated CACS: N independent service shards behind one thin router.
+//!
+//! One CACS instance scales to thousands of coordinators (the actor
+//! pool multiplexes app hosts over a bounded worker set), but a single
+//! deployment eventually saturates its store bandwidth and its REST
+//! pool.  The federation layer composes instances instead of growing
+//! one: each shard is a complete, unmodified CACS (service + REST +
+//! store), and a [`FederationRouter`] in front places every ASR on a
+//! shard by **consistent hashing of the application name** and forwards
+//! the Table 1 calls to the owner.
+//!
+//! * **Placement** — [`HashRing`]: FNV-1a over `addr#vnode` points
+//!   (64 vnodes per shard).  Deterministic across restarts (the ring
+//!   orders shards by address, not insertion order) and stable under
+//!   membership change: a join or leave remaps only ~K/N of K keys.
+//! * **Routing** — `POST /coordinators` goes to `ring.place(asr.name)`;
+//!   `/coordinators/:id/...` goes to the shard the router learned owns
+//!   that id (ids never collide across shards: each shard allocates
+//!   from a disjoint `id_base`).  An unknown id is resolved by probing
+//!   the shards once, then cached.
+//! * **Rebalance** — the existing one-call migration orchestrator
+//!   (`POST /coordinators/:id/migrate {"dst": ...}`) is the *only*
+//!   primitive.  `POST /federation/join {"addr"}` adds a shard and
+//!   migrates exactly the apps whose name now hashes to it;
+//!   `POST /federation/drain {"addr"}` removes a shard from the ring
+//!   and migrates every app it hosts to the survivors.  No acked
+//!   checkpoint is lost: migration ships the full image chain of the
+//!   final cut and only terminates the source after the clone runs.
+//!
+//! The router holds no durable state — every mapping it caches can be
+//! re-learned from the shards' own `GET /coordinators`.
+
+use crate::util::http::{
+    Client, ClientResponse, Handler, Method, Request, Response, Server,
+};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Virtual nodes per shard on the ring.  64 keeps the per-shard load
+/// spread within a few percent of uniform while the ring stays tiny
+/// (N × 64 points, binary-searched per placement).
+pub const VNODES_PER_SHARD: usize = 64;
+
+/// 64-bit FNV-1a: tiny, dependency-free, and plenty uniform for ring
+/// placement (placement needs spread, not collision resistance).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Consistent-hash ring over shard addresses.
+///
+/// Shards are kept sorted by address so the ring is a pure function of
+/// the member *set* — two routers (or one router restarted) that know
+/// the same shards place every key identically regardless of the order
+/// the shards were added in.
+#[derive(Debug, Clone, Default)]
+pub struct HashRing {
+    /// Sorted shard addresses ("host:port").
+    shards: Vec<String>,
+    /// Sorted (point hash, index into `shards`) ring points.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    pub fn new<S: AsRef<str>>(addrs: &[S]) -> HashRing {
+        let mut ring = HashRing::default();
+        for a in addrs {
+            ring.add(a.as_ref());
+        }
+        ring
+    }
+
+    /// Add a shard; returns false (and leaves the ring untouched) if the
+    /// address is already a member.
+    pub fn add(&mut self, addr: &str) -> bool {
+        match self.shards.binary_search_by(|s| s.as_str().cmp(addr)) {
+            Ok(_) => false,
+            Err(pos) => {
+                self.shards.insert(pos, addr.to_string());
+                self.rebuild();
+                true
+            }
+        }
+    }
+
+    /// Remove a shard; returns false if it was not a member.
+    pub fn remove(&mut self, addr: &str) -> bool {
+        match self.shards.binary_search_by(|s| s.as_str().cmp(addr)) {
+            Ok(pos) => {
+                self.shards.remove(pos);
+                self.rebuild();
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn rebuild(&mut self) {
+        self.points.clear();
+        for (idx, addr) in self.shards.iter().enumerate() {
+            for v in 0..VNODES_PER_SHARD {
+                let point = fnv1a(format!("{addr}#{v}").as_bytes());
+                self.points.push((point, idx));
+            }
+        }
+        self.points.sort_unstable();
+    }
+
+    /// The shard owning `key` (clockwise-next ring point), or None on an
+    /// empty ring.
+    pub fn place(&self, key: &str) -> Option<&str> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = fnv1a(key.as_bytes());
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let (_, idx) = self.points[if i == self.points.len() { 0 } else { i }];
+        Some(&self.shards[idx])
+    }
+
+    /// Member addresses, sorted.
+    pub fn shards(&self) -> &[String] {
+        &self.shards
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+}
+
+/// Router-side mutable state: the ring plus the learned id → owning
+/// shard table.  Everything here is a cache over the shards' own
+/// databases.
+#[derive(Debug, Default)]
+struct RouterState {
+    ring: HashRing,
+    /// App id string ("app-N") → owning shard address.  Learned at
+    /// submit / list / probe, rewritten by rebalance migrations.
+    owners: BTreeMap<String, String>,
+}
+
+/// The federation front: one of these serves the whole Table 1 surface
+/// for an N-shard deployment plus the `/federation` admin verbs.
+#[derive(Debug, Default)]
+pub struct FederationRouter {
+    state: Mutex<RouterState>,
+}
+
+/// What one rebalance migration did (join and drain both report these).
+#[derive(Debug, Clone)]
+struct Move {
+    id: String,
+    from: String,
+    to: String,
+    new_id: String,
+}
+
+impl FederationRouter {
+    pub fn new<S: AsRef<str>>(shards: &[S]) -> FederationRouter {
+        FederationRouter {
+            state: Mutex::new(RouterState {
+                ring: HashRing::new(shards),
+                owners: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Lock the state, recovering from a poisoned mutex: the state is a
+    /// rebuildable cache, so a panic mid-update never justifies wedging
+    /// the whole router.
+    fn lock(&self) -> MutexGuard<'_, RouterState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The current ring (snapshot).
+    pub fn ring(&self) -> HashRing {
+        self.lock().ring.clone()
+    }
+
+    fn route(&self, req: &mut Request) -> Response {
+        let raw_path = req.path.clone();
+        let path_only = raw_path.split('?').next().unwrap_or("");
+        let segs: Vec<&str> = path_only.split('/').filter(|s| !s.is_empty()).collect();
+        match (req.method, segs.as_slice()) {
+            (Method::Get, ["federation"]) => self.status(),
+            (Method::Post, ["federation", "join"]) => self.join(req),
+            (Method::Post, ["federation", "drain"]) => self.drain(req),
+            (Method::Get, ["coordinators"]) => self.list_all(),
+            (Method::Post, ["coordinators"]) => self.submit(req),
+            (_, ["coordinators", id, ..]) => self.forward_app(req, id, &raw_path),
+            _ => Response::not_found(),
+        }
+    }
+
+    fn status(&self) -> Response {
+        let st = self.lock();
+        Response::ok_json(&Json::object([
+            (
+                "shards",
+                Json::Arr(st.ring.shards().iter().map(|s| s.as_str().into()).collect()),
+            ),
+            ("apps", st.owners.len().into()),
+            ("vnodes_per_shard", VNODES_PER_SHARD.into()),
+        ]))
+    }
+
+    /// `POST /coordinators`: place by ASR name, forward to the owner,
+    /// learn the allocated id.
+    fn submit(&self, req: &mut Request) -> Response {
+        let body = match req.json() {
+            Ok(j) => j,
+            Err(e) => return Response::bad_request(&e.to_string()),
+        };
+        let Some(name) = body.get("name").as_str() else {
+            return Response::bad_request("asr: name");
+        };
+        let Some(addr) = self.lock().ring.place(name).map(str::to_string) else {
+            return Response::json(
+                503,
+                &Json::object([("error", "federation has no shards".into())]),
+            );
+        };
+        match Client::new(&addr).post("/coordinators", &body) {
+            Ok(resp) => {
+                if resp.status == 201 {
+                    if let Some(id) =
+                        resp.json().ok().and_then(|j| j.get("id").as_str().map(str::to_string))
+                    {
+                        self.lock().owners.insert(id, addr);
+                    }
+                }
+                relay(resp)
+            }
+            Err(e) => shard_unreachable(&addr, &e),
+        }
+    }
+
+    /// `GET /coordinators`: fan out to every shard and merge, learning
+    /// id ownership along the way.  An unreachable shard is skipped (its
+    /// apps simply don't appear) rather than failing the whole listing.
+    fn list_all(&self) -> Response {
+        let shards = self.lock().ring.shards().to_vec();
+        let mut merged: Vec<Json> = Vec::new();
+        for addr in &shards {
+            let Ok(resp) = Client::new(addr).get("/coordinators") else {
+                log::warn!("federation: shard {addr} unreachable during list");
+                continue;
+            };
+            let Some(arr) = resp.json().ok().and_then(|j| j.as_arr().map(|a| a.to_vec()))
+            else {
+                continue;
+            };
+            let mut st = self.lock();
+            for entry in &arr {
+                if let Some(id) = entry.get("id").as_str() {
+                    st.owners.insert(id.to_string(), addr.clone());
+                }
+            }
+            drop(st);
+            merged.extend(arr);
+        }
+        Response::ok_json(&Json::Arr(merged))
+    }
+
+    /// Resolve which shard owns `id`: the learned table first, then one
+    /// probe round over the shards (cached on hit).
+    fn owner_of(&self, id: &str) -> Option<String> {
+        if let Some(addr) = self.lock().owners.get(id).cloned() {
+            return Some(addr);
+        }
+        let shards = self.lock().ring.shards().to_vec();
+        for addr in shards {
+            let found = Client::new(&addr)
+                .get(&format!("/coordinators/{id}"))
+                .map(|r| r.status == 200)
+                .unwrap_or(false);
+            if found {
+                self.lock().owners.insert(id.to_string(), addr.clone());
+                return Some(addr);
+            }
+        }
+        None
+    }
+
+    /// Forward any `/coordinators/:id/...` call to the owning shard.
+    /// Image uploads stream through chunked (never buffered here); JSON
+    /// calls are relayed buffered.
+    fn forward_app(&self, req: &mut Request, id: &str, full_path: &str) -> Response {
+        let Some(addr) = self.owner_of(id) else {
+            return Response::not_found();
+        };
+        let client = Client::new(&addr);
+        let is_upload = req.method == Method::Post
+            && req
+                .headers
+                .get("content-type")
+                .map(|c| c.contains("octet-stream"))
+                .unwrap_or(false);
+        if is_upload {
+            let mut headers: Vec<(&str, String)> = Vec::new();
+            for k in ["x-ckpt-seq", "x-proc-index", "x-base-seq"] {
+                if let Some(v) = req.headers.get(k) {
+                    headers.push((k, v.clone()));
+                }
+            }
+            let mut body = req.body_reader();
+            return match client.post_stream(
+                full_path,
+                "application/octet-stream",
+                &headers,
+                |w| std::io::copy(&mut body, w),
+            ) {
+                Ok((_sent, resp)) => relay(resp),
+                Err(e) => shard_unreachable(&addr, &e),
+            };
+        }
+        let body = match req.body() {
+            Ok(b) => b.to_vec(),
+            Err(e) => return Response::bad_request(&e.to_string()),
+        };
+        let parsed;
+        let body_json = if body.is_empty() {
+            None
+        } else {
+            match std::str::from_utf8(&body).ok().and_then(|t| json::parse(t).ok()) {
+                Some(j) => {
+                    parsed = j;
+                    Some(&parsed)
+                }
+                None => return Response::bad_request("body is not json"),
+            }
+        };
+        match client.request(req.method, full_path, body_json) {
+            Ok(resp) => {
+                self.learn_from(req.method, full_path, id, &resp);
+                relay(resp)
+            }
+            Err(e) => shard_unreachable(&addr, &e),
+        }
+    }
+
+    /// Keep the owner table in sync with what a forwarded call did: a
+    /// delete forgets the id; a migrate teaches the clone's placement
+    /// (the source stays mapped — its tombstone lives on that shard).
+    fn learn_from(&self, method: Method, path: &str, id: &str, resp: &ClientResponse) {
+        let path = path.split('?').next().unwrap_or(path);
+        if method == Method::Delete
+            && resp.status == 204
+            && path.trim_end_matches('/').ends_with(&format!("/coordinators/{id}"))
+        {
+            self.lock().owners.remove(id);
+        }
+        if method == Method::Post && resp.status == 200 && path.ends_with("/migrate") {
+            if let Ok(j) = resp.json() {
+                if let (Some(dst_id), Some(dst_base)) =
+                    (j.get("dst").as_str(), j.get("dst_base").as_str())
+                {
+                    self.lock()
+                        .owners
+                        .insert(dst_id.to_string(), dst_base.to_string());
+                }
+            }
+        }
+    }
+
+    /// `POST /federation/join {"addr"}`: add a shard and migrate exactly
+    /// the apps whose name now hashes to it (the ~K/N consistent-hash
+    /// remap set).
+    fn join(&self, req: &mut Request) -> Response {
+        let body = match req.json() {
+            Ok(j) => j,
+            Err(e) => return Response::bad_request(&e.to_string()),
+        };
+        let Some(addr) = body.get("addr").as_str().map(str::to_string) else {
+            return Response::bad_request("join needs {\"addr\": \"host:port\"}");
+        };
+        if !self.lock().ring.add(&addr) {
+            return Response::conflict("shard already in the ring");
+        }
+        let (moved, failed) = self.rebalance();
+        Response::ok_json(&Json::object([
+            ("joined", addr.as_str().into()),
+            ("moved", moves_json(&moved)),
+            ("failed", failed.into()),
+        ]))
+    }
+
+    /// `POST /federation/drain {"addr"}`: take a shard out of the ring
+    /// and migrate every app it hosts to the survivors (placement by
+    /// name on the shrunken ring).  The drained shard's server keeps
+    /// running — tombstones stay queryable — it just owns nothing.
+    fn drain(&self, req: &mut Request) -> Response {
+        let body = match req.json() {
+            Ok(j) => j,
+            Err(e) => return Response::bad_request(&e.to_string()),
+        };
+        let Some(addr) = body.get("addr").as_str().map(str::to_string) else {
+            return Response::bad_request("drain needs {\"addr\": \"host:port\"}");
+        };
+        {
+            let mut st = self.lock();
+            if st.ring.len() <= 1 {
+                return Response::conflict("cannot drain the last shard");
+            }
+            if !st.ring.remove(&addr) {
+                return Response::bad_request("shard is not in the ring");
+            }
+        }
+        let mut moved: Vec<Move> = Vec::new();
+        let mut skipped = 0u64;
+        let mut failed = 0u64;
+        for (id, name, state) in shard_apps(&addr) {
+            if state != "RUNNING" {
+                skipped += 1; // tombstones and in-flight lifecycles stay put
+                continue;
+            }
+            let Some(dst) = self.lock().ring.place(&name).map(str::to_string) else {
+                failed += 1;
+                continue;
+            };
+            match self.migrate_app(&addr, &id, &dst) {
+                Ok(new_id) => moved.push(Move { id, from: addr.clone(), to: dst, new_id }),
+                Err(e) => {
+                    log::warn!("federation: drain of {id} from {addr} failed: {e}");
+                    failed += 1;
+                }
+            }
+        }
+        Response::ok_json(&Json::object([
+            ("drained", addr.as_str().into()),
+            ("moved", moves_json(&moved)),
+            ("skipped", skipped.into()),
+            ("failed", failed.into()),
+        ]))
+    }
+
+    /// Migrate every RUNNING app whose current shard disagrees with the
+    /// ring.  Returns (moves, failure count).
+    fn rebalance(&self) -> (Vec<Move>, u64) {
+        let shards = self.lock().ring.shards().to_vec();
+        let mut moved: Vec<Move> = Vec::new();
+        let mut failed = 0u64;
+        for src in &shards {
+            for (id, name, state) in shard_apps(src) {
+                if state != "RUNNING" {
+                    continue;
+                }
+                let Some(want) = self.lock().ring.place(&name).map(str::to_string) else {
+                    continue;
+                };
+                if want == *src {
+                    self.lock().owners.insert(id, src.clone());
+                    continue;
+                }
+                match self.migrate_app(src, &id, &want) {
+                    Ok(new_id) => {
+                        moved.push(Move { id, from: src.clone(), to: want, new_id })
+                    }
+                    Err(e) => {
+                        log::warn!("federation: rebalance of {id} from {src} failed: {e}");
+                        failed += 1;
+                    }
+                }
+            }
+        }
+        (moved, failed)
+    }
+
+    /// One rebalance step = one call to the existing migration
+    /// orchestrator on the source shard.  Returns the clone's id on the
+    /// destination; the owner table learns both sides.
+    fn migrate_app(&self, src: &str, id: &str, dst: &str) -> Result<String, String> {
+        let resp = Client::new(src)
+            .post(
+                &format!("/coordinators/{id}/migrate"),
+                &Json::object([("dst", dst.into())]),
+            )
+            .map_err(|e| e.to_string())?;
+        if resp.status != 200 {
+            return Err(format!(
+                "migrate answered {}: {}",
+                resp.status,
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        let new_id = resp
+            .json()
+            .ok()
+            .and_then(|j| j.get("dst").as_str().map(str::to_string))
+            .ok_or_else(|| "migrate report carried no clone id".to_string())?;
+        let mut st = self.lock();
+        st.owners.insert(id.to_string(), src.to_string()); // tombstone
+        st.owners.insert(new_id.clone(), dst.to_string());
+        Ok(new_id)
+    }
+}
+
+/// (id, name, state) of every coordinator a shard reports; empty if the
+/// shard is unreachable.
+fn shard_apps(addr: &str) -> Vec<(String, String, String)> {
+    let Ok(resp) = Client::new(addr).get("/coordinators") else {
+        log::warn!("federation: shard {addr} unreachable during app scan");
+        return Vec::new();
+    };
+    let Some(arr) = resp.json().ok().and_then(|j| j.as_arr().map(|a| a.to_vec())) else {
+        return Vec::new();
+    };
+    arr.iter()
+        .filter_map(|e| {
+            Some((
+                e.get("id").as_str()?.to_string(),
+                e.get("name").as_str()?.to_string(),
+                e.get("state").as_str().unwrap_or("").to_string(),
+            ))
+        })
+        .collect()
+}
+
+fn moves_json(moves: &[Move]) -> Json {
+    Json::Arr(
+        moves
+            .iter()
+            .map(|m| {
+                Json::object([
+                    ("id", m.id.as_str().into()),
+                    ("from", m.from.as_str().into()),
+                    ("to", m.to.as_str().into()),
+                    ("new_id", m.new_id.as_str().into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Translate a relayed shard response back onto the router's wire.
+fn relay(resp: ClientResponse) -> Response {
+    if resp.status == 204 {
+        return Response::no_content();
+    }
+    let ct = resp.headers.get("content-type").map(String::as_str).unwrap_or("");
+    let content_type = if ct.contains("octet-stream") {
+        "application/octet-stream"
+    } else if ct.contains("json") {
+        "application/json"
+    } else {
+        "text/plain"
+    };
+    Response { status: resp.status, body: resp.body, content_type }
+}
+
+fn shard_unreachable(addr: &str, e: &dyn std::fmt::Display) -> Response {
+    Response::json(
+        502,
+        &Json::object([("error", format!("shard {addr} unreachable: {e}").into())]),
+    )
+}
+
+/// Build the router's request handler.
+pub fn make_handler(router: Arc<FederationRouter>) -> Handler {
+    Arc::new(move |req: &mut Request| router.route(req))
+}
+
+/// Serve the federation front (addr like "127.0.0.1:0").
+pub fn serve(
+    router: Arc<FederationRouter>,
+    addr: &str,
+    threads: usize,
+) -> std::io::Result<Server> {
+    Server::start(addr, threads, make_handler(router))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHARDS3: [&str; 3] = ["10.0.0.1:8080", "10.0.0.2:8080", "10.0.0.3:8080"];
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("workload-{i}")).collect()
+    }
+
+    #[test]
+    fn ring_placement_deterministic_across_restarts() {
+        // a restarted router re-adds the shards in whatever order it
+        // discovers them; placement must not depend on that order
+        let a = HashRing::new(&SHARDS3);
+        let mut b = HashRing::default();
+        b.add(SHARDS3[2]);
+        b.add(SHARDS3[0]);
+        b.add(SHARDS3[1]);
+        for k in keys(500) {
+            assert_eq!(a.place(&k), b.place(&k), "key {k}");
+        }
+        // and every shard actually owns some keys (vnodes spread)
+        for shard in SHARDS3 {
+            assert!(
+                keys(500).iter().any(|k| a.place(k) == Some(shard)),
+                "{shard} owns nothing"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_join_remaps_bounded_fraction_onto_new_shard() {
+        let mut ring = HashRing::new(&SHARDS3);
+        let ks = keys(3000);
+        let before: Vec<String> =
+            ks.iter().map(|k| ring.place(k).unwrap().to_string()).collect();
+        assert!(ring.add("10.0.0.4:8080"));
+        let mut moved = 0usize;
+        for (k, old) in ks.iter().zip(&before) {
+            let now = ring.place(k).unwrap();
+            if now != old {
+                // consistent hashing: a key only ever moves TO the joiner
+                assert_eq!(now, "10.0.0.4:8080", "key {k} moved {old} -> {now}");
+                moved += 1;
+            }
+        }
+        // expected remap is K/N = 3000/4 = 750; allow generous slack for
+        // vnode variance but fail on a rehash-everything regression
+        assert!(moved > 0, "join moved nothing");
+        assert!(moved < 2 * 3000 / 4, "join moved {moved}/3000 keys (~K/N expected)");
+    }
+
+    #[test]
+    fn ring_leave_moves_only_the_leavers_keys() {
+        let mut ring = HashRing::new(&SHARDS3);
+        let ks = keys(3000);
+        let before: Vec<String> =
+            ks.iter().map(|k| ring.place(k).unwrap().to_string()).collect();
+        let gone = SHARDS3[1];
+        assert!(ring.remove(gone));
+        assert!(!ring.remove(gone), "double remove must be a no-op");
+        for (k, old) in ks.iter().zip(&before) {
+            let now = ring.place(k).unwrap();
+            if old == gone {
+                assert_ne!(now, gone, "key {k} still on the removed shard");
+            } else {
+                assert_eq!(now, old, "key {k} moved although its shard stayed");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_empty_and_duplicates() {
+        let mut ring = HashRing::default();
+        assert!(ring.is_empty());
+        assert_eq!(ring.place("anything"), None);
+        assert!(ring.add("a:1"));
+        assert!(!ring.add("a:1"), "duplicate add must be rejected");
+        assert_eq!(ring.len(), 1);
+        assert_eq!(ring.place("anything"), Some("a:1"));
+    }
+
+    /// A mock shard: answers the few Table 1 calls the router exercises
+    /// and stamps every response with its `tag` so tests can see where a
+    /// call landed.  `known` is the single app id this shard "hosts".
+    fn mock_shard(tag: &'static str, known: &'static str) -> Server {
+        let handler: Handler = Arc::new(move |req: &mut Request| {
+            let path = req.path.clone();
+            let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+            match (req.method, segs.as_slice()) {
+                (Method::Post, ["coordinators"]) => {
+                    let j = req.json().unwrap_or(Json::Null);
+                    Response::json(
+                        201,
+                        &Json::object([
+                            ("id", known.into()),
+                            ("shard", tag.into()),
+                            ("echo_name", j.get("name").as_str().unwrap_or("").into()),
+                        ]),
+                    )
+                }
+                (Method::Get, ["coordinators"]) => Response::ok_json(&Json::Arr(vec![
+                    Json::object([
+                        ("id", known.into()),
+                        ("name", format!("on-{tag}").as_str().into()),
+                        ("state", "RUNNING".into()),
+                        ("shard", tag.into()),
+                    ]),
+                ])),
+                (Method::Get, ["coordinators", id]) if *id == known => {
+                    Response::ok_json(&Json::object([
+                        ("id", known.into()),
+                        ("shard", tag.into()),
+                        ("state", "RUNNING".into()),
+                    ]))
+                }
+                (Method::Delete, ["coordinators", id]) if *id == known => {
+                    Response::no_content()
+                }
+                _ => Response::not_found(),
+            }
+        });
+        Server::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn router_forwards_submit_to_the_placed_shard() {
+        let a = mock_shard("A", "app-1");
+        let b = mock_shard("B", "app-2000000001");
+        let addr_a = a.addr().to_string();
+        let addr_b = b.addr().to_string();
+        let router = Arc::new(FederationRouter::new(&[addr_a.as_str(), addr_b.as_str()]));
+        let front = serve(router.clone(), "127.0.0.1:0", 2).unwrap();
+        let client = Client::new(&front.addr().to_string());
+
+        // find one name per shard so the test covers both directions
+        let ring = router.ring();
+        let mut name_for: BTreeMap<&str, String> = BTreeMap::new();
+        for i in 0..256 {
+            let n = format!("probe-{i}");
+            let owner = ring.place(&n).unwrap();
+            let tag = if owner == addr_a { "A" } else { "B" };
+            name_for.entry(tag).or_insert(n);
+            if name_for.len() == 2 {
+                break;
+            }
+        }
+        for (tag, name) in &name_for {
+            let body = Json::object([
+                ("name", name.as_str().into()),
+                ("workload", Json::object([("kind", "counter".into())])),
+                ("n_vms", 1u64.into()),
+            ]);
+            let resp = client.post("/coordinators", &body).unwrap();
+            assert_eq!(resp.status, 201);
+            let j = resp.json().unwrap();
+            assert_eq!(j.get("shard").as_str(), Some(*tag), "name {name}");
+            assert_eq!(j.get("echo_name").as_str(), Some(name.as_str()));
+        }
+    }
+
+    #[test]
+    fn router_resolves_ids_by_probe_and_merges_lists() {
+        let a = mock_shard("A", "app-1");
+        let b = mock_shard("B", "app-2000000001");
+        let addr_a = a.addr().to_string();
+        let addr_b = b.addr().to_string();
+        let router = Arc::new(FederationRouter::new(&[addr_a.as_str(), addr_b.as_str()]));
+        let front = serve(router, "127.0.0.1:0", 2).unwrap();
+        let client = Client::new(&front.addr().to_string());
+
+        // unknown id: the router probes the shards and finds the owner
+        let resp = client.get("/coordinators/app-2000000001").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.json().unwrap().get("shard").as_str(), Some("B"));
+
+        // list fans out and merges both shards
+        let resp = client.get("/coordinators").unwrap();
+        assert_eq!(resp.status, 200);
+        let arr = resp.json().unwrap();
+        let arr = arr.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let mut tags: Vec<String> = arr
+            .iter()
+            .filter_map(|e| e.get("shard").as_str().map(str::to_string))
+            .collect();
+        tags.sort();
+        assert_eq!(tags, vec!["A".to_string(), "B".to_string()]);
+
+        // a genuinely unknown id is a router-level 404, not a probe hang
+        assert_eq!(client.get("/coordinators/app-999").unwrap().status, 404);
+
+        // delete forwards and the router forgets the mapping
+        assert_eq!(client.delete("/coordinators/app-1").unwrap().status, 204);
+    }
+
+    #[test]
+    fn router_status_and_admin_validation() {
+        let a = mock_shard("A", "app-1");
+        let addr_a = a.addr().to_string();
+        let router = Arc::new(FederationRouter::new(&[addr_a.as_str()]));
+        let front = serve(router, "127.0.0.1:0", 2).unwrap();
+        let client = Client::new(&front.addr().to_string());
+
+        let st = client.get("/federation").unwrap();
+        assert_eq!(st.status, 200);
+        let j = st.json().unwrap();
+        assert_eq!(j.get("shards").as_arr().map(|a| a.len()), Some(1));
+
+        // the last shard cannot be drained
+        let resp = client
+            .post("/federation/drain", &Json::object([("addr", addr_a.as_str().into())]))
+            .unwrap();
+        assert_eq!(resp.status, 409);
+        // draining an unknown shard is the caller's error
+        let router2 = Arc::new(FederationRouter::new(&[addr_a.as_str(), "x:1"]));
+        let front2 = serve(router2, "127.0.0.1:0", 2).unwrap();
+        let client2 = Client::new(&front2.addr().to_string());
+        let resp = client2
+            .post("/federation/drain", &Json::object([("addr", "nope:9".into())]))
+            .unwrap();
+        assert_eq!(resp.status, 400);
+        // joining a member shard conflicts
+        let resp = client2
+            .post("/federation/join", &Json::object([("addr", "x:1".into())]))
+            .unwrap();
+        assert_eq!(resp.status, 409);
+    }
+}

@@ -25,6 +25,7 @@
 pub mod adaptive;
 pub mod appthread;
 pub mod db;
+pub mod federation;
 pub mod healthplane;
 pub mod lifecycle;
 pub mod migrate;

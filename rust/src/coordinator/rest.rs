@@ -463,6 +463,85 @@ mod tests {
     }
 
     #[test]
+    fn panicking_app_actor_does_not_take_down_rest() {
+        // satellite of the actor refactor: a panic inside one app's
+        // command handler (here: its serialize hook) used to poison the
+        // global service lock and 500 every later request.  The shard
+        // locks recover from poisoning and the actor pool isolates the
+        // panic, so REST keeps serving every other route.
+        use crate::dckpt::{CounterApp, DistributedApp};
+
+        struct PanicOnSerialize(CounterApp);
+        impl DistributedApp for PanicOnSerialize {
+            fn nprocs(&self) -> usize {
+                self.0.nprocs()
+            }
+            fn step(&mut self) -> anyhow::Result<()> {
+                self.0.step()
+            }
+            fn serialize_proc(&self, _i: usize) -> anyhow::Result<Vec<u8>> {
+                panic!("serialize hook exploded")
+            }
+            fn restore_proc(&mut self, i: usize, payload: &[u8]) -> anyhow::Result<()> {
+                self.0.restore_proc(i, payload)
+            }
+            fn proc_healthy(&self, i: usize) -> bool {
+                self.0.proc_healthy(i)
+            }
+            fn kill_proc(&mut self, i: usize) {
+                self.0.kill_proc(i)
+            }
+            fn iteration(&self) -> u64 {
+                self.0.iteration()
+            }
+            fn metric(&self) -> f64 {
+                self.0.metric()
+            }
+            fn kind(&self) -> &'static str {
+                "panicky"
+            }
+        }
+
+        let (_server, client, svc) = start();
+        let healthy = submit_dmtcp1(&client);
+        wait_iter(&client, &healthy, 1);
+        let bad = svc
+            .submit_with_factory(
+                Asr::new("panicky", crate::coordinator::types::WorkloadSpec::Counter {
+                    blob_bytes: 64,
+                }, 1),
+                Box::new(|| {
+                    Ok(Box::new(PanicOnSerialize(CounterApp::new(1, 64)))
+                        as Box<dyn DistributedApp>)
+                }),
+            )
+            .unwrap();
+        // the checkpoint panics inside the actor: a prompt 400, not a
+        // worker hang and not a poisoned-lock panic
+        let t0 = std::time::Instant::now();
+        let resp = client
+            .post(&format!("/coordinators/{bad}/checkpoints"), &Json::Null)
+            .unwrap();
+        assert_eq!(resp.status, 400, "{}", String::from_utf8_lossy(&resp.body));
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        // REST stays fully live: list, the healthy app's info and a
+        // checkpoint on it all still work
+        assert_eq!(client.get("/coordinators").unwrap().status, 200);
+        wait_iter(&client, &healthy, 1);
+        let ck = client
+            .post(&format!("/coordinators/{healthy}/checkpoints"), &Json::Null)
+            .unwrap();
+        assert_eq!(ck.status, 201, "{}", String::from_utf8_lossy(&ck.body));
+        // the panicked app is still visible (in ERROR, per the failed
+        // checkpoint's lifecycle landing), with its actor gauges served
+        let info = client.get(&format!("/coordinators/{bad}")).unwrap();
+        assert_eq!(info.status, 200);
+        let j = info.json().unwrap();
+        assert_eq!(j.get("state").as_str(), Some("ERROR"));
+        assert!(j.get("actor").get("pool_workers").as_u64().unwrap() >= 1);
+    }
+
+    #[test]
     fn health_endpoint_reports_structured_verdict_and_latency() {
         let (_server, client, svc) = start();
         let id = submit_dmtcp1(&client);

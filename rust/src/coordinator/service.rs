@@ -26,7 +26,9 @@
 //!   construct-failed app reports all procs unreachable, not healthy.
 
 use crate::coordinator::adaptive::AdaptiveCkptConfig;
-use crate::coordinator::appthread::{AppFactory, AppHandle, CTRL_PROBE_TIMEOUT};
+use crate::coordinator::appthread::{
+    self, ActorPool, AppEvent, AppFactory, AppHandle, PoolStats, CTRL_PROBE_TIMEOUT,
+};
 use crate::coordinator::db::Db;
 use crate::coordinator::healthplane::{heartbeat_pool, AppMonitor};
 use crate::coordinator::lifecycle::AppState;
@@ -37,7 +39,7 @@ use crate::dckpt::{CounterApp, DistributedApp};
 use crate::monitor::{HealthProbe, HealthReport};
 use crate::runtime::Engine;
 use crate::storage::ObjectStore;
-use crate::util::ids::{AppId, CkptId};
+use crate::util::ids::{AppId, CkptId, IdGen};
 use crate::util::json::Json;
 use crate::workloads::{dmtcp1::Dmtcp1App, lu, ns3};
 use anyhow::{Context, Result};
@@ -81,6 +83,19 @@ pub struct ServiceConfig {
     /// the measured cut cost and observed MTBF (§5.2 mode 2 stays the
     /// fallback until the controller has data).
     pub adaptive: AdaptiveCkptConfig,
+    /// Actor-pool width (OS threads multiplexing every app actor);
+    /// 0 = derive from available parallelism.  Apps scale independently
+    /// of thread count: 1k apps on 8 workers is the designed regime.
+    pub actor_workers: usize,
+    /// First app id this instance allocates, minus one.  Federated
+    /// deployments give each shard a disjoint base (e.g. `k × 10⁹`) so
+    /// ids allocated independently never collide at the router.
+    pub id_base: u64,
+    /// Build a §6.3 broadcast tree (and its per-node daemon threads)
+    /// per app.  Disable for huge fleets driven without the monitor
+    /// (e.g. the 1k-app scale bench): health endpoints then serve
+    /// "no evidence" verdicts and `monitor_round` is a no-op.
+    pub health_trees: bool,
     /// Test seam: sleep this long in the off-lock spawn phase of
     /// submit, proving the service lock is not held across provisioning.
     #[cfg(test)]
@@ -100,6 +115,9 @@ impl Default for ServiceConfig {
             delta: DeltaPolicy::default(),
             ckpt_keep: 2,
             adaptive: AdaptiveCkptConfig::default(),
+            actor_workers: 0,
+            id_base: 0,
+            health_trees: true,
             #[cfg(test)]
             submit_spawn_delay: Duration::ZERO,
         }
@@ -149,14 +167,17 @@ pub(crate) struct MigrationTicket {
     pub with_overhead: bool,
 }
 
+/// One registry shard.  App state proper lives inside the actors; a
+/// shard only tracks the record database, the actor handles and the
+/// recovery/monitor bookkeeping for the apps hashed onto it.
 struct Inner {
     db: Db,
     // Arc so bulk operations (checkpoint/restore image transfers, health
-    // round-trips) can clone the handle out and run WITHOUT the service
+    // round-trips) can clone the handle out and run WITHOUT any registry
     // lock — the Monitoring Manager must stay live while images move
     handles: BTreeMap<AppId, Arc<AppHandle>>,
-    // one §6.3 broadcast tree per application; outlives the app's host
-    // thread (kill_vm drops the handle, the tree then reports the procs
+    // one §6.3 broadcast tree per application; outlives the app's actor
+    // (kill_vm drops the handle, the tree then reports the procs
     // unreachable) and is rewired to the replacement host on recovery
     monitors: BTreeMap<AppId, Arc<AppMonitor>>,
     // apps a monitor round has claimed for recovery: a concurrent round
@@ -164,12 +185,38 @@ struct Inner {
     recovering: BTreeSet<AppId>,
 }
 
+impl Inner {
+    fn empty() -> Inner {
+        Inner {
+            db: Db::new(),
+            handles: BTreeMap::new(),
+            monitors: BTreeMap::new(),
+            recovering: BTreeSet::new(),
+        }
+    }
+}
+
+/// Registry shard count.  Ids are allocated round-robin so consecutive
+/// submits land on different shards; 16 keeps lock contention negligible
+/// at 10k apps while cross-shard scans stay cheap.
+const N_SHARDS: usize = 16;
+
 /// The service.  Share via `Arc`; [`start_monitor`](CacsService::start_monitor)
 /// runs the Monitoring Manager until the service drops.
 pub struct CacsService {
     cfg: ServiceConfig,
     store: Arc<dyn ObjectStore>,
-    inner: Mutex<Inner>,
+    /// Service-wide id allocator (ids span shards, so allocation cannot
+    /// live inside any one shard's `Db`).
+    ids: IdGen,
+    /// Sharded registry: per-app operations lock only `shards[id % N]`,
+    /// so checkpoints, health rounds, migration and REST on different
+    /// apps no longer serialize against each other.  Declared before
+    /// `actors` so every `AppHandle` drops before the worker pool does.
+    shards: Vec<Mutex<Inner>>,
+    /// Bounded worker pool multiplexing every app actor; replaces the
+    /// old one-OS-thread-per-app model.
+    actors: ActorPool,
     epoch: Instant,
     /// Monotonic monitor-round counter; rotates the probe order so apps
     /// deferred by one round's deadline are probed first the next round
@@ -179,18 +226,45 @@ pub struct CacsService {
 
 impl CacsService {
     pub fn new(store: Arc<dyn ObjectStore>, cfg: ServiceConfig) -> Arc<CacsService> {
+        let workers = if cfg.actor_workers == 0 {
+            appthread::default_workers()
+        } else {
+            cfg.actor_workers
+        };
+        let ids = IdGen::starting_at(cfg.id_base + 1);
         Arc::new(CacsService {
             cfg,
             store,
-            inner: Mutex::new(Inner {
-                db: Db::new(),
-                handles: BTreeMap::new(),
-                monitors: BTreeMap::new(),
-                recovering: BTreeSet::new(),
-            }),
+            ids,
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Inner::empty())).collect(),
+            actors: ActorPool::new(workers),
             epoch: Instant::now(),
             round_counter: std::sync::atomic::AtomicUsize::new(0),
         })
+    }
+
+    /// Lock the registry shard owning `id`.  A poisoned shard is
+    /// recovered, not propagated: a panic inside one critical section
+    /// must not brick every later operation on the apps sharing the
+    /// shard (the panicking operation's app lands in ERROR via the
+    /// normal lifecycle paths).
+    fn shard(&self, id: AppId) -> std::sync::MutexGuard<'_, Inner> {
+        self.shard_at(id.0 as usize % self.shards.len())
+    }
+
+    fn shard_at(&self, idx: usize) -> std::sync::MutexGuard<'_, Inner> {
+        self.shards[idx].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Live actor-pool gauges (worker count, actor count, queued
+    /// commands) — saturation is observable before it becomes a timeout.
+    pub fn actor_stats(&self) -> PoolStats {
+        self.actors.stats()
+    }
+
+    /// Subscribe to the unified per-app lifecycle event stream.
+    pub fn events(&self) -> std::sync::mpsc::Receiver<AppEvent> {
+        self.actors.subscribe()
     }
 
     fn now(&self) -> f64 {
@@ -218,40 +292,45 @@ impl CacsService {
         validate_asr(&asr)?;
         let n_vms = asr.n_vms;
         let now = self.now();
-        // phase 1: reserve the id + record under the lock (PROVISION)
-        let id = {
-            let mut inner = self.inner.lock().unwrap();
-            let id = inner.db.ids.app();
+        // phase 1: reserve the id + record under the owning shard's
+        // lock (PROVISION)
+        let id = self.ids.app();
+        {
+            let mut inner = self.shard(id);
             let mut rec = AppRecord::new(id, asr, now, 0);
             rec.lifecycle.to(now, AppState::Provisioning);
             inner.db.insert(rec);
-            id
-        };
-        // phase 2: provisioning — host-thread + daemon-tree creation —
-        // runs OFF the lock.  v1 held the service lock across the spawn,
-        // so one slow thread creation stalled every other REST call.
+        }
+        // phase 2: provisioning — actor + daemon-tree creation — runs
+        // OFF the lock.  v1 held the service lock across the spawn, so
+        // one slow provisioning stalled every other REST call.
         #[cfg(test)]
         std::thread::sleep(self.cfg.submit_spawn_delay);
-        let handle = Arc::new(AppHandle::spawn_with(
+        let handle = Arc::new(self.actors.spawn(
             &id.to_string(),
             factory,
             self.store.clone(),
             self.cfg.step_interval,
             self.cfg.delta.clone(),
         ));
-        let monitor = Arc::new(AppMonitor::start(
-            n_vms,
-            self.cfg.heartbeat_hop,
-            self.cfg.heartbeat_arity,
-        ));
-        monitor.rewire(&handle);
+        let monitor = if self.cfg.health_trees {
+            let monitor = Arc::new(AppMonitor::start(
+                n_vms,
+                self.cfg.heartbeat_hop,
+                self.cfg.heartbeat_arity,
+            ));
+            monitor.rewire(&handle);
+            Some(monitor)
+        } else {
+            None
+        };
         // phase 3: publish.  A §5.4 DELETE may have raced the spawn —
-        // then the record is gone and the fresh host is torn down again.
-        let mut inner = self.inner.lock().unwrap();
+        // then the record is gone and the fresh actor is retired again.
+        let mut inner = self.shard(id);
         let now = self.now();
         let Some(rec) = inner.db.get_mut(id) else {
             drop(inner);
-            drop(handle); // joins the just-spawned host thread
+            drop(handle); // retires the just-spawned actor
             anyhow::bail!("coordinator deleted during submit");
         };
         rec.lifecycle.to(now, AppState::Ready);
@@ -261,20 +340,29 @@ impl CacsService {
             rec.periodic_due = Some(now + period);
         }
         inner.handles.insert(id, handle);
-        inner.monitors.insert(id, monitor);
+        if let Some(monitor) = monitor {
+            inner.monitors.insert(id, monitor);
+        }
         Ok(id)
     }
 
-    /// Clone the app's host-thread handle out of the lock (bulk calls on
-    /// it must not serialize the whole service).
+    /// Clone the app's actor handle out of the shard lock (bulk calls on
+    /// it must not serialize the registry).
     fn handle(&self, id: AppId) -> Option<Arc<AppHandle>> {
-        self.inner.lock().unwrap().handles.get(&id).cloned()
+        self.shard(id).handles.get(&id).cloned()
     }
 
-    /// GET /coordinators.
+    /// GET /coordinators.  Records are snapshotted under each shard lock
+    /// and serialized afterwards, so JSON encoding of a 10k-app list
+    /// never holds a registry lock.
     pub fn list(&self) -> Vec<Json> {
-        let inner = self.inner.lock().unwrap();
-        inner.db.iter().map(|r| r.to_json()).collect()
+        let mut recs: Vec<AppRecord> = Vec::new();
+        for i in 0..self.shards.len() {
+            let inner = self.shard_at(i);
+            recs.extend(inner.db.iter().cloned());
+        }
+        recs.sort_by_key(|r| r.id);
+        recs.iter().map(|r| r.to_json()).collect()
     }
 
     /// GET /coordinators/:id (with live progress attached when the host
@@ -282,9 +370,13 @@ impl CacsService {
     /// host degrades to the cached record instead of hanging the REST
     /// worker for the 120 s data-plane timeout).
     pub fn info(&self, id: AppId) -> Result<Json> {
-        let progress = self.handle(id).and_then(|h| h.try_progress(CTRL_PROBE_TIMEOUT));
-        let inner = self.inner.lock().unwrap();
-        let rec = inner.db.get(id).context("unknown coordinator")?;
+        let handle = self.handle(id);
+        let progress = handle.as_ref().and_then(|h| h.try_progress(CTRL_PROBE_TIMEOUT));
+        // snapshot under the shard lock, serialize off it
+        let rec = {
+            let inner = self.shard(id);
+            inner.db.get(id).context("unknown coordinator")?.clone()
+        };
         let mut j = rec.to_json();
         // the Young/Daly controller's live interval and its inputs
         if let Some(a) = rec.adaptive.to_json(&self.cfg.adaptive) {
@@ -296,6 +388,20 @@ impl CacsService {
                 j.set("metric", metric.into());
             }
         }
+        // actor-plane gauges: per-app mailbox depth plus pool-wide
+        // saturation, so backpressure shows up here before it turns
+        // into command timeouts
+        let stats = self.actors.stats();
+        j.set(
+            "actor",
+            Json::object([
+                ("mailbox_depth", handle.map_or(0, |h| h.mailbox_depth()).into()),
+                ("pool_workers", stats.workers.into()),
+                ("pool_actors", stats.actors.into()),
+                ("pool_mailbox_depth", stats.mailbox_depth.into()),
+                ("pool_mailbox_max", stats.mailbox_max.into()),
+            ]),
+        );
         Ok(j)
     }
 
@@ -312,7 +418,7 @@ impl CacsService {
         // retention legible).  The CHECKPOINTING lifecycle gate is what
         // makes the un-incremented reservation race-free.
         let seq = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
             anyhow::ensure!(
                 rec.lifecycle.state().can_checkpoint(),
@@ -338,7 +444,7 @@ impl CacsService {
         // Young/Daly controller (the host thread blocks stepping for
         // the whole quiesce + image pipeline)
         let cut_cost = cut_clock.elapsed().as_secs_f64();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         let now = self.now();
         let Some(rec) = inner.db.get_mut(id) else {
             drop(inner);
@@ -387,9 +493,12 @@ impl CacsService {
 
     /// GET /coordinators/:id/checkpoints.
     pub fn checkpoints(&self, id: AppId) -> Result<Vec<Json>> {
-        let inner = self.inner.lock().unwrap();
-        let rec = inner.db.get(id).context("unknown coordinator")?;
-        Ok(rec.ckpts.iter().map(|c| c.to_json()).collect())
+        // snapshot under the shard lock, serialize off it
+        let ckpts = {
+            let inner = self.shard(id);
+            inner.db.get(id).context("unknown coordinator")?.ckpts.clone()
+        };
+        Ok(ckpts.iter().map(|c| c.to_json()).collect())
     }
 
     /// One §5.2 mode-2 ticker round: cut a checkpoint for every RUNNING
@@ -413,24 +522,27 @@ impl CacsService {
     /// ever needs independent periodic cadences under huge full cuts.
     pub fn periodic_round(&self) -> Vec<AppId> {
         let now = self.now();
-        let due: Vec<AppId> = {
-            let mut inner = self.inner.lock().unwrap();
-            inner
-                .db
-                .iter_mut()
-                .filter(|rec| {
-                    rec.lifecycle.state() == AppState::Running
-                        && rec.asr.ckpt_period.is_some()
-                        && rec.periodic_due.map(|at| at <= now).unwrap_or(false)
-                })
-                .map(|rec| {
-                    // reschedule first: a failed cut must wait a period
-                    let period = rec.asr.ckpt_period.expect("filtered on Some");
-                    rec.periodic_due = Some(now + period);
-                    rec.id
-                })
-                .collect()
-        };
+        let mut due: Vec<AppId> = Vec::new();
+        for i in 0..self.shards.len() {
+            let mut inner = self.shard_at(i);
+            due.extend(
+                inner
+                    .db
+                    .iter_mut()
+                    .filter(|rec| {
+                        rec.lifecycle.state() == AppState::Running
+                            && rec.asr.ckpt_period.is_some()
+                            && rec.periodic_due.map(|at| at <= now).unwrap_or(false)
+                    })
+                    .map(|rec| {
+                        // reschedule first: a failed cut must wait a period
+                        let period = rec.asr.ckpt_period.expect("filtered on Some");
+                        rec.periodic_due = Some(now + period);
+                        rec.id
+                    }),
+            );
+        }
+        due.sort();
         let mut cut = Vec::new();
         for id in due {
             match self.checkpoint(id) {
@@ -447,7 +559,7 @@ impl CacsService {
                     // Failed cuts keep that fixed-period retry.
                     if self.cfg.adaptive.enabled {
                         let now = self.now();
-                        let mut inner = self.inner.lock().unwrap();
+                        let mut inner = self.shard(id);
                         if let Some(rec) = inner.db.get_mut(id) {
                             if let Some(fixed) = rec.asr.ckpt_period {
                                 let next =
@@ -479,7 +591,7 @@ impl CacsService {
             return;
         }
         let doomed: Vec<u64> = {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.shard(id);
             let Some(rec) = inner.db.get(id) else { return };
             let mut keep: BTreeSet<u64> = BTreeSet::new();
             let mut fulls = 0usize;
@@ -531,7 +643,7 @@ impl CacsService {
     /// POST /coordinators/:id/checkpoints/:seq — restart (§5.3).
     pub fn restart(&self, id: AppId, seq: Option<u64>) -> Result<u64> {
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
             let now = self.now();
             anyhow::ensure!(
@@ -551,7 +663,7 @@ impl CacsService {
             Some(handle) => handle.restore(seq),
             None => Err(anyhow::anyhow!("no app thread")),
         };
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         let now = self.now();
         let rec = inner.db.get_mut(id).context("unknown coordinator")?;
         match result {
@@ -580,7 +692,7 @@ impl CacsService {
     /// the leftover images remain deletable by retry or app DELETE.
     pub fn delete_checkpoint(&self, id: AppId, seq: u64) -> Result<usize> {
         let was_latest = {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.shard(id);
             let rec = inner.db.get(id).context("unknown coordinator")?;
             // a cut in flight may be a delta chaining to exactly this
             // seq: its record lands only after the pipeline finishes, so
@@ -631,7 +743,7 @@ impl CacsService {
                 // silently orphan a possibly fully intact image set
                 Err(_) => true,
                 Ok(keys) => {
-                    let inner = self.inner.lock().unwrap();
+                    let inner = self.shard(id);
                     inner
                         .db
                         .get(id)
@@ -644,7 +756,7 @@ impl CacsService {
         if !intact {
             // drop the record (the digest reset already happened before
             // the store delete, while the guard knew seq was the latest)
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             if let Some(rec) = inner.db.get_mut(id) {
                 rec.ckpts.retain(|c| c.seq != seq);
             }
@@ -662,7 +774,7 @@ impl CacsService {
     /// can survive the race in either order.
     pub fn delete(&self, id: AppId) -> Result<()> {
         let (handle, monitor) = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
             let now = self.now();
             rec.lifecycle.to(now, AppState::Terminating);
@@ -705,7 +817,7 @@ impl CacsService {
         body: &mut dyn std::io::Read,
     ) -> Result<u64> {
         {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.shard(id);
             anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
         }
         let key = ckptsvc::image_key(&id.to_string(), seq, proc);
@@ -741,7 +853,7 @@ impl CacsService {
         // gone we remove the just-written orphan ourselves.
         let delta_img_bytes = if is_delta_img { n } else { 0 };
         let img_base_seq = if is_delta_img { base_seq } else { None };
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         let now = self.now();
         let Some(rec) = inner.db.get_mut(id) else {
             drop(inner);
@@ -803,7 +915,7 @@ impl CacsService {
         id: AppId,
     ) -> Result<MigrationTicket, MigrateStartError> {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         let inner = &mut *inner;
         let Some(rec) = inner.db.get_mut(id) else {
             return Err(MigrateStartError::UnknownCoordinator);
@@ -831,7 +943,7 @@ impl CacsService {
     /// app still runs, once at the quiesced barrier).  The MIGRATING
     /// gate keeps user checkpoints out, so the increment cannot race.
     pub(crate) fn reserve_migration_seq(&self, id: AppId) -> Result<u64> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         let rec = inner
             .db
             .get_mut(id)
@@ -854,7 +966,7 @@ impl CacsService {
         report: &ckptsvc::CheckpointReport,
     ) -> Result<CkptRecord> {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         let rec = inner
             .db
             .get_mut(id)
@@ -879,7 +991,7 @@ impl CacsService {
     /// of this cut-level chain (a proc that fell back to a full image
     /// mid-chain simply stops walking earlier).
     pub(crate) fn ckpt_chain(&self, id: AppId, seq: u64) -> Result<Vec<CkptRecord>> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.shard(id);
         let rec = inner.db.get(id).context("unknown coordinator")?;
         let mut chain = Vec::new();
         let mut cur = Some(seq);
@@ -907,7 +1019,7 @@ impl CacsService {
     pub(crate) fn abort_migration(&self, id: AppId) {
         let handle = {
             let now = self.now();
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             let inner = &mut *inner;
             if let Some(rec) = inner.db.get_mut(id) {
                 if rec.lifecycle.state() == AppState::Migrating {
@@ -929,7 +1041,7 @@ impl CacsService {
     pub(crate) fn complete_migration(&self, id: AppId, migrated_to: String) -> Result<()> {
         let (handle, monitor) = {
             let now = self.now();
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             let inner = &mut *inner;
             let rec = inner
                 .db
@@ -943,7 +1055,7 @@ impl CacsService {
         drop(monitor); // the tombstone needs no monitoring tree
         let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         if let Some(rec) = inner.db.get_mut(id) {
             rec.lifecycle.to(now, AppState::Terminated);
         }
@@ -955,7 +1067,7 @@ impl CacsService {
     #[cfg(test)]
     pub(crate) fn force_state(&self, id: AppId, next: AppState) -> bool {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         inner
             .db
             .get_mut(id)
@@ -971,7 +1083,7 @@ impl CacsService {
     /// dead app as perfectly healthy.
     pub fn health(&self, id: AppId) -> Result<Vec<bool>> {
         let (n, handle) = {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.shard(id);
             let rec = inner.db.get(id).context("unknown coordinator")?;
             (rec.asr.n_vms, inner.handles.get(&id).cloned())
         };
@@ -992,7 +1104,7 @@ impl CacsService {
     /// it stops servicing commands entirely, the "guest froze" failure
     /// the §6.3 monitor must detect within the heartbeat budget.
     pub fn wedge_vm(&self, id: AppId) -> Result<()> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.shard(id);
         let handle = inner.handles.get(&id).context("unknown coordinator")?;
         handle.wedge();
         Ok(())
@@ -1000,7 +1112,7 @@ impl CacsService {
 
     /// Fault injection (examples/tests): kill process `proc`.
     pub fn kill_proc(&self, id: AppId, proc: usize) -> Result<()> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.shard(id);
         let handle = inner.handles.get(&id).context("unknown coordinator")?;
         handle.kill_proc(proc);
         Ok(())
@@ -1008,24 +1120,29 @@ impl CacsService {
 
     /// Pause/resume (oversubscription example).
     pub fn pause(&self, id: AppId) -> Result<()> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.shard(id);
         inner.handles.get(&id).context("unknown coordinator")?.pause();
         Ok(())
     }
 
     pub fn resume(&self, id: AppId) -> Result<()> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.shard(id);
         inner.handles.get(&id).context("unknown coordinator")?.resume();
         Ok(())
     }
 
-    /// App ids currently registered.
+    /// App ids currently registered (all shards, ascending).
     pub fn app_ids(&self) -> Vec<AppId> {
-        self.inner.lock().unwrap().db.ids_sorted()
+        let mut ids = Vec::new();
+        for i in 0..self.shards.len() {
+            ids.extend(self.shard_at(i).db.ids_sorted());
+        }
+        ids.sort();
+        ids
     }
 
     pub fn state(&self, id: AppId) -> Option<AppState> {
-        self.inner.lock().unwrap().db.get(id).map(|r| r.lifecycle.state())
+        self.shard(id).db.get(id).map(|r| r.lifecycle.state())
     }
 
     /// One §6.3 health report for an app, produced by a heartbeat over
@@ -1050,7 +1167,7 @@ impl CacsService {
     /// with `live: false` instead.
     pub fn health_status(&self, id: AppId) -> Result<HealthStatus> {
         let (n, state, monitor) = {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.shard(id);
             let rec = inner.db.get(id).context("unknown coordinator")?;
             (rec.asr.n_vms, rec.lifecycle.state(), inner.monitors.get(&id).cloned())
         };
@@ -1099,26 +1216,34 @@ impl CacsService {
     /// per app, so concurrent rounds never double-recover one app.
     pub fn monitor_round(&self) -> Vec<AppId> {
         let mut recovered = vec![];
+        if !self.cfg.health_trees {
+            // no broadcast trees exist: every probe would read
+            // "unreachable" and spiral the whole fleet into recovery
+            return recovered;
+        }
         type Target = (AppId, AppState, bool, usize, Option<Arc<AppMonitor>>);
-        let mut targets: Vec<Target> = {
-            let inner = self.inner.lock().unwrap();
-            inner
-                .db
-                .iter()
-                .filter(|r| {
-                    matches!(r.lifecycle.state(), AppState::Running | AppState::Error)
-                })
-                .map(|r| {
-                    (
-                        r.id,
-                        r.lifecycle.state(),
-                        r.latest_ckpt().is_some(),
-                        r.asr.n_vms,
-                        inner.monitors.get(&r.id).cloned(),
-                    )
-                })
-                .collect()
-        };
+        let mut targets: Vec<Target> = Vec::new();
+        for i in 0..self.shards.len() {
+            let inner = self.shard_at(i);
+            targets.extend(
+                inner
+                    .db
+                    .iter()
+                    .filter(|r| {
+                        matches!(r.lifecycle.state(), AppState::Running | AppState::Error)
+                    })
+                    .map(|r| {
+                        (
+                            r.id,
+                            r.lifecycle.state(),
+                            r.latest_ckpt().is_some(),
+                            r.asr.n_vms,
+                            inner.monitors.get(&r.id).cloned(),
+                        )
+                    }),
+            );
+        }
+        targets.sort_by_key(|t| t.0);
         if targets.is_empty() {
             return recovered;
         }
@@ -1274,7 +1399,7 @@ impl CacsService {
             return;
         }
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         if let Some(rec) = inner.db.get_mut(id) {
             rec.adaptive.observe_failure(&self.cfg.adaptive, now);
         }
@@ -1282,16 +1407,16 @@ impl CacsService {
 
     /// Claim `id` for recovery; false if another round holds it.
     fn claim_recovery(&self, id: AppId) -> bool {
-        self.inner.lock().unwrap().recovering.insert(id)
+        self.shard(id).recovering.insert(id)
     }
 
     fn release_recovery(&self, id: AppId) {
-        self.inner.lock().unwrap().recovering.remove(&id);
+        self.shard(id).recovering.remove(&id);
     }
 
     fn set_error(&self, id: AppId) {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(id);
         if let Some(rec) = inner.db.get_mut(id) {
             if rec.lifecycle.state() != AppState::Error {
                 rec.lifecycle.to(now, AppState::Error);
@@ -1305,7 +1430,7 @@ impl CacsService {
     /// the latest image.
     fn reprovision_and_restore(&self, id: AppId) -> Result<u64> {
         let asr = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             let rec = inner.db.get_mut(id).context("unknown coordinator")?;
             let state = rec.lifecycle.state();
             anyhow::ensure!(
@@ -1319,7 +1444,7 @@ impl CacsService {
             rec.asr.clone()
         };
         let factory = build_factory(&asr, &self.cfg)?;
-        let handle = Arc::new(AppHandle::spawn_with(
+        let handle = Arc::new(self.actors.spawn(
             &id.to_string(),
             factory,
             self.store.clone(),
@@ -1327,7 +1452,7 @@ impl CacsService {
             self.cfg.delta.clone(),
         ));
         let (old, monitor) = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             // a DELETE may have raced the spawn: publishing the fresh
             // handle for a removed record would leak a stepping zombie
             // thread in the map with no path that ever removes it
@@ -1355,7 +1480,7 @@ impl CacsService {
     /// losing the VMs out from under a running app (§6.3 VM failure).
     pub fn kill_vm(&self, id: AppId) -> Result<()> {
         let handle = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.shard(id);
             anyhow::ensure!(inner.db.get(id).is_some(), "unknown coordinator");
             inner.handles.remove(&id)
         };

@@ -7,11 +7,13 @@
 
 use std::collections::BTreeMap;
 
-/// A single named time series of (t, value) points plus counters.
+/// A single named time series of (t, value) points plus counters and
+/// point-in-time gauges.
 #[derive(Debug, Default)]
 pub struct Recorder {
     series: BTreeMap<String, Vec<(f64, f64)>>,
     counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
 }
 
 impl Recorder {
@@ -31,6 +33,21 @@ impl Recorder {
 
     pub fn counter(&self, name: &str) -> f64 {
         self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Set a point-in-time gauge (saturation metrics: mailbox depth,
+    /// worker-pool queue length).  Unlike counters, a set replaces the
+    /// previous value — gauges answer "how full is it right now".
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn gauge_names(&self) -> Vec<&str> {
+        self.gauges.keys().map(|s| s.as_str()).collect()
     }
 
     pub fn series(&self, name: &str) -> &[(f64, f64)] {
@@ -99,6 +116,10 @@ impl Recorder {
         for (k, v) in other.counters {
             *self.counters.entry(k).or_insert(0.0) += v;
         }
+        // a gauge is a point-in-time reading: the newer recorder wins
+        for (k, v) in other.gauges {
+            self.gauges.insert(k, v);
+        }
     }
 }
 
@@ -166,5 +187,20 @@ mod tests {
         a.absorb(b);
         assert_eq!(a.series("s").len(), 2);
         assert_eq!(a.counter("c"), 3.0);
+    }
+
+    #[test]
+    fn gauges_replace_not_accumulate() {
+        let mut r = Recorder::new();
+        r.set_gauge("mailbox_depth", 7.0);
+        r.set_gauge("mailbox_depth", 3.0);
+        assert_eq!(r.gauge("mailbox_depth"), 3.0);
+        assert_eq!(r.gauge("missing"), 0.0);
+        assert_eq!(r.gauge_names(), vec!["mailbox_depth"]);
+        // absorb: the absorbed (newer) reading wins
+        let mut other = Recorder::new();
+        other.set_gauge("mailbox_depth", 11.0);
+        r.absorb(other);
+        assert_eq!(r.gauge("mailbox_depth"), 11.0);
     }
 }

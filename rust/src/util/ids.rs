@@ -61,6 +61,13 @@ impl IdGen {
         IdGen { next: AtomicU64::new(1) }
     }
 
+    /// Allocator whose first id is `first` (clamped to ≥ 1).  Federated
+    /// deployments give each CACS shard a disjoint base offset so ids
+    /// allocated independently by N shards never collide at the router.
+    pub fn starting_at(first: u64) -> IdGen {
+        IdGen { next: AtomicU64::new(first.max(1)) }
+    }
+
     pub fn next(&self) -> u64 {
         self.next.fetch_add(1, Ordering::Relaxed)
     }
@@ -103,6 +110,15 @@ mod tests {
         let b = g.ckpt();
         let c = g.vm();
         assert!(a.0 < b.0 && b.0 < c.0);
+    }
+
+    #[test]
+    fn idgen_starting_at_offsets_the_space() {
+        let g = IdGen::starting_at(1_000_000_000);
+        assert_eq!(g.app().0, 1_000_000_000);
+        assert_eq!(g.next(), 1_000_000_001);
+        // 0 clamps to the normal first id
+        assert_eq!(IdGen::starting_at(0).next(), 1);
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Federation integration: N real CACS shards (service + REST + store)
+//! behind the consistent-hash router, exercising the Table 1 surface
+//! through the front and both rebalance primitives (shard join, shard
+//! drain) built on the one-call migration orchestrator.
+
+use cacs::coordinator::federation::{self, FederationRouter, HashRing};
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::storage::mem::MemStore;
+use cacs::util::http::{Client, Server};
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One real shard: in-memory store, no background monitor, ids offset by
+/// `k * 1e9` so ids stay unique across the federation.
+fn shard(k: u64) -> (Arc<CacsService>, Server) {
+    let svc = CacsService::new(
+        Arc::new(MemStore::new()),
+        ServiceConfig {
+            monitor_period: None,
+            id_base: k * 1_000_000_000,
+            ..ServiceConfig::default()
+        },
+    );
+    let server = rest::serve(svc.clone(), "127.0.0.1:0", 4).unwrap();
+    (svc, server)
+}
+
+fn wait_for(what: &str, f: impl Fn() -> bool) {
+    for _ in 0..600 {
+        if f() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+fn iter_of(client: &Client, id: &str) -> u64 {
+    client
+        .get(&format!("/coordinators/{id}"))
+        .ok()
+        .and_then(|r| r.json().ok())
+        .and_then(|j| j.get("iteration").as_u64())
+        .unwrap_or(0)
+}
+
+fn counter_asr(name: &str) -> Json {
+    Json::object([
+        ("name", name.into()),
+        (
+            "workload",
+            Json::object([("kind", "counter".into()), ("blob_bytes", 65536u64.into())]),
+        ),
+        ("n_vms", 1u64.into()),
+    ])
+}
+
+/// Pick `per_shard` app names that the ring places on each shard, so the
+/// tests cover both routing directions whatever the ephemeral ports
+/// hashed to.
+fn names_on_both(ring: &HashRing, per_shard: usize) -> Vec<String> {
+    let shards = ring.shards().to_vec();
+    let mut picked: Vec<String> = Vec::new();
+    let mut count = vec![0usize; shards.len()];
+    for i in 0..10_000 {
+        let n = format!("fed-{i}");
+        let owner = ring.place(&n).unwrap();
+        let idx = shards.iter().position(|s| s == owner).unwrap();
+        if count[idx] < per_shard {
+            count[idx] += 1;
+            picked.push(n);
+        }
+        if picked.len() == per_shard * shards.len() {
+            return picked;
+        }
+    }
+    panic!("could not spread names over {} shards", shards.len());
+}
+
+#[test]
+fn two_shard_federation_serves_table1_through_the_router() {
+    let (_svc_a, srv_a) = shard(0);
+    let (_svc_b, srv_b) = shard(1);
+    let addr_a = srv_a.addr().to_string();
+    let addr_b = srv_b.addr().to_string();
+    let router = Arc::new(FederationRouter::new(&[addr_a.as_str(), addr_b.as_str()]));
+    let ring = router.ring();
+    let front = federation::serve(router, "127.0.0.1:0", 4).unwrap();
+    let client = Client::new(&front.addr().to_string());
+
+    // submit: 2 apps per shard, placed by name
+    let names = names_on_both(&ring, 2);
+    let mut ids: Vec<String> = Vec::new();
+    for name in &names {
+        let resp = client.post("/coordinators", &counter_asr(name)).unwrap();
+        assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+        ids.push(resp.json().unwrap().get("id").as_str().unwrap().to_string());
+    }
+    // the id spaces really are disjoint: both shards' bases show up
+    assert!(ids.iter().any(|i| i.starts_with("app-1000000")), "{ids:?}");
+    assert!(ids.iter().any(|i| !i.starts_with("app-1000000")), "{ids:?}");
+
+    // list through the front merges both shards
+    let list = client.get("/coordinators").unwrap().json().unwrap();
+    assert_eq!(list.as_arr().unwrap().len(), ids.len());
+
+    // info / checkpoint / restart / delete, all through the front
+    for id in &ids {
+        wait_for("app progress through router", || iter_of(&client, id) >= 2);
+    }
+    let ck = client
+        .post(&format!("/coordinators/{}/checkpoints", ids[0]), &Json::Null)
+        .unwrap();
+    assert_eq!(ck.status, 201, "{}", String::from_utf8_lossy(&ck.body));
+    let seq = ck.json().unwrap().get("seq").as_u64().unwrap();
+    let cks = client
+        .get(&format!("/coordinators/{}/checkpoints", ids[0]))
+        .unwrap()
+        .json()
+        .unwrap();
+    assert_eq!(cks.as_arr().unwrap().len(), 1);
+    let rs = client
+        .post(&format!("/coordinators/{}/checkpoints/{seq}", ids[0]), &Json::Null)
+        .unwrap();
+    assert_eq!(rs.status, 200, "{}", String::from_utf8_lossy(&rs.body));
+    assert_eq!(
+        client.delete(&format!("/coordinators/{}", ids[1])).unwrap().status,
+        204
+    );
+    let list = client.get("/coordinators").unwrap().json().unwrap();
+    assert_eq!(list.as_arr().unwrap().len(), ids.len() - 1);
+
+    // federation status reflects the membership
+    let st = client.get("/federation").unwrap().json().unwrap();
+    assert_eq!(st.get("shards").as_arr().map(|a| a.len()), Some(2));
+}
+
+#[test]
+fn shard_drain_migrates_every_app_without_losing_acked_checkpoints() {
+    let (_svc_a, srv_a) = shard(0);
+    let (_svc_b, srv_b) = shard(1);
+    let addr_a = srv_a.addr().to_string();
+    let addr_b = srv_b.addr().to_string();
+    let router = Arc::new(FederationRouter::new(&[addr_a.as_str(), addr_b.as_str()]));
+    let ring = router.ring();
+    let front = federation::serve(router, "127.0.0.1:0", 4).unwrap();
+    let client = Client::new(&front.addr().to_string());
+    let direct_a = Client::new(&addr_a);
+
+    // 2 apps per shard; checkpoint each through the front and record the
+    // acked cut — the invariant under test is that a drain never loses it
+    let names = names_on_both(&ring, 2);
+    let mut acked: Vec<(String, u64, u64)> = Vec::new(); // (id, seq, iteration)
+    for name in &names {
+        let resp = client.post("/coordinators", &counter_asr(name)).unwrap();
+        assert_eq!(resp.status, 201);
+        let id = resp.json().unwrap().get("id").as_str().unwrap().to_string();
+        wait_for("app progress", || iter_of(&client, &id) >= 2);
+        let ck = client
+            .post(&format!("/coordinators/{id}/checkpoints"), &Json::Null)
+            .unwrap();
+        assert_eq!(ck.status, 201, "{}", String::from_utf8_lossy(&ck.body));
+        let j = ck.json().unwrap();
+        acked.push((
+            id,
+            j.get("seq").as_u64().unwrap(),
+            j.get("iteration").as_u64().unwrap(),
+        ));
+    }
+    let on_a: Vec<&(String, u64, u64)> =
+        acked.iter().filter(|(id, _, _)| shard_of(&direct_a, id)).collect();
+    assert_eq!(on_a.len(), 2, "placement should put 2 apps on shard A");
+
+    // drain shard A: every app it hosts migrates to the survivor
+    let resp = client
+        .post("/federation/drain", &Json::object([("addr", addr_a.as_str().into())]))
+        .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let rep = resp.json().unwrap();
+    assert_eq!(rep.get("failed").as_u64(), Some(0), "{rep:?}");
+    let moves = rep.get("moved").as_arr().unwrap().to_vec();
+    assert_eq!(moves.len(), on_a.len(), "{rep:?}");
+    for m in &moves {
+        assert_eq!(m.get("to").as_str(), Some(addr_b.as_str()), "{m:?}");
+    }
+
+    // the drained shard holds only tombstones now
+    let a_list = direct_a.get("/coordinators").unwrap().json().unwrap();
+    for e in a_list.as_arr().unwrap() {
+        assert_eq!(e.get("state").as_str(), Some("TERMINATED"), "{e:?}");
+    }
+
+    // no acked checkpoint lost: each migrated app is RUNNING on the
+    // survivor at ≥ its acked iteration, holds a cut at ≥ the acked seq,
+    // and that cut actually restores through the front
+    for (src_id, acked_seq, acked_iter) in &acked {
+        let (live_id, min_iter) = match moves
+            .iter()
+            .find(|m| m.get("id").as_str() == Some(src_id.as_str()))
+        {
+            Some(m) => (m.get("new_id").as_str().unwrap().to_string(), *acked_iter),
+            None => (src_id.clone(), *acked_iter), // stayed on shard B
+        };
+        let info = client
+            .get(&format!("/coordinators/{live_id}"))
+            .unwrap()
+            .json()
+            .unwrap();
+        assert_eq!(info.get("state").as_str(), Some("RUNNING"), "{info:?}");
+        assert!(info.get("iteration").as_u64().unwrap() >= min_iter, "{info:?}");
+        let cks = client
+            .get(&format!("/coordinators/{live_id}/checkpoints"))
+            .unwrap()
+            .json()
+            .unwrap();
+        let best = cks
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|c| c.get("seq").as_u64())
+            .max()
+            .expect("survivor must hold at least one cut");
+        assert!(best >= *acked_seq, "cut regressed: {best} < {acked_seq}");
+        let rs = client
+            .post(&format!("/coordinators/{live_id}/checkpoints/{best}"), &Json::Null)
+            .unwrap();
+        assert_eq!(rs.status, 200, "{}", String::from_utf8_lossy(&rs.body));
+        wait_for("restored app to run past the acked cut", || {
+            iter_of(&client, &live_id) >= min_iter
+        });
+    }
+}
+
+#[test]
+fn shard_join_rehashes_and_migrates_only_the_remap_set() {
+    let (_svc_a, srv_a) = shard(0);
+    let addr_a = srv_a.addr().to_string();
+    let router = Arc::new(FederationRouter::new(&[addr_a.as_str()]));
+    let front = federation::serve(router, "127.0.0.1:0", 4).unwrap();
+    let client = Client::new(&front.addr().to_string());
+
+    let n = 4;
+    let mut ids: Vec<String> = Vec::new();
+    for i in 0..n {
+        let resp = client
+            .post("/coordinators", &counter_asr(&format!("join-{i}")))
+            .unwrap();
+        assert_eq!(resp.status, 201);
+        ids.push(resp.json().unwrap().get("id").as_str().unwrap().to_string());
+    }
+    for id in &ids {
+        wait_for("app progress", || iter_of(&client, id) >= 1);
+    }
+
+    // bring up shard B and join it: exactly the apps whose name now
+    // hashes to B migrate; the rest stay put
+    let (_svc_b, srv_b) = shard(1);
+    let addr_b = srv_b.addr().to_string();
+    let resp = client
+        .post("/federation/join", &Json::object([("addr", addr_b.as_str().into())]))
+        .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let rep = resp.json().unwrap();
+    assert_eq!(rep.get("failed").as_u64(), Some(0), "{rep:?}");
+    let moves = rep.get("moved").as_arr().unwrap().to_vec();
+    let expected: usize = {
+        let ring = HashRing::new(&[addr_a.as_str(), addr_b.as_str()]);
+        (0..n)
+            .filter(|i| ring.place(&format!("join-{i}")) == Some(addr_b.as_str()))
+            .count()
+    };
+    assert_eq!(moves.len(), expected, "{rep:?}");
+    for m in &moves {
+        assert_eq!(m.get("to").as_str(), Some(addr_b.as_str()), "{m:?}");
+    }
+
+    // every app is still served through the front, RUNNING count intact
+    let list = client.get("/coordinators").unwrap().json().unwrap();
+    let running = list
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("state").as_str() == Some("RUNNING"))
+        .count();
+    assert_eq!(running, n, "{list:?}");
+}
+
+/// Does this shard's own database have `id` (any state)?
+fn shard_of(direct: &Client, id: &str) -> bool {
+    direct
+        .get(&format!("/coordinators/{id}"))
+        .map(|r| r.status == 200)
+        .unwrap_or(false)
+}
