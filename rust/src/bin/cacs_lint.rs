@@ -1,0 +1,57 @@
+//! `cacs-lint` — static analysis for the repo's concurrency and
+//! determinism invariants (see `docs/static-analysis.md`).
+//!
+//! Usage:
+//!   cargo run --release --bin cacs-lint            # lint the repo
+//!   cargo run --release --bin cacs-lint -- <root>  # lint another tree
+//!
+//! Emits `file:line rule message` per finding and exits nonzero when
+//! anything is found.  `// cacs-lint: allow(<rule>) — <reason>`
+//! suppresses one line's finding; the reason is mandatory and unused
+//! pragmas are themselves errors, so the suppression list can't rot.
+
+#![deny(unused_must_use)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use cacs::lintpass;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            // the binary runs from the workspace root under `cargo run`
+            std::env::var("CARGO_MANIFEST_DIR")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| PathBuf::from("."))
+        });
+
+    let findings = match lintpass::check_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("cacs-lint: cannot walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut n = 0usize;
+    for (file, diags) in &findings {
+        for d in diags {
+            println!("{file}:{} {} {}", d.line, d.rule, d.msg);
+            n += 1;
+        }
+    }
+    if n > 0 {
+        eprintln!(
+            "cacs-lint: {n} finding{} — fix, or annotate with \
+             `// cacs-lint: allow(<rule>) — <reason>`",
+            if n == 1 { "" } else { "s" }
+        );
+        ExitCode::FAILURE
+    } else {
+        println!("cacs-lint: clean");
+        ExitCode::SUCCESS
+    }
+}

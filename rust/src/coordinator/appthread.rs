@@ -32,7 +32,7 @@ use anyhow::Result;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, Weak};
 use std::time::{Duration, Instant};
 
@@ -81,7 +81,7 @@ pub enum Cmd {
         seq: u64,
         with_overhead: bool,
         allow_delta: bool,
-        reply: Sender<Result<CheckpointReport>>,
+        reply: SyncSender<Result<CheckpointReport>>,
     },
     /// Forget the delta tracker's digests (the base checkpoint was
     /// deleted): the next cut re-roots the chain with a full image.
@@ -89,12 +89,12 @@ pub enum Cmd {
     /// Restore from `seq` (None = latest).
     Restore {
         seq: Option<u64>,
-        reply: Sender<Result<u64>>,
+        reply: SyncSender<Result<u64>>,
     },
     /// Per-process health snapshot (§6.3 hook results).
-    Health { reply: Sender<Vec<bool>> },
+    Health { reply: SyncSender<Vec<bool>> },
     /// Progress: (iteration, metric).
-    Progress { reply: Sender<(u64, f64)> },
+    Progress { reply: SyncSender<(u64, f64)> },
     /// Fault injection: kill process `i`.
     Kill { proc: usize },
     /// Fault injection: wedge the actor — it stops servicing commands
@@ -142,10 +142,15 @@ pub enum AppEventKind {
     Stopped,
 }
 
+/// Per-subscriber buffer on the event stream.  A subscriber that falls
+/// this far behind starts losing events (newest dropped) rather than
+/// growing an unbounded queue inside the worker's emit path.
+const EVENT_SUB_CAP: usize = MAILBOX_CAP;
+
 /// Fan-out hub for [`AppEvent`]s: one stream carries every actor's
 /// lifecycle, so observers subscribe once instead of tapping N apps.
 pub struct EventHub {
-    subs: Mutex<Vec<Sender<AppEvent>>>,
+    subs: Mutex<Vec<SyncSender<AppEvent>>>,
 }
 
 impl EventHub {
@@ -154,7 +159,7 @@ impl EventHub {
     }
 
     pub fn subscribe(&self) -> Receiver<AppEvent> {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(EVENT_SUB_CAP);
         lock_unpoisoned(&self.subs).push(tx);
         rx
     }
@@ -165,8 +170,17 @@ impl EventHub {
             return;
         }
         let ev = AppEvent { app: app.to_string(), kind };
-        // dropped receivers unsubscribe implicitly
-        subs.retain(|s| s.send(ev.clone()).is_ok());
+        // dropped receivers unsubscribe implicitly; a full buffer sheds
+        // this event for that subscriber (events are observability, the
+        // emitting worker must never block on a slow observer)
+        subs.retain(|s| match s.try_send(ev.clone()) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                log::debug!("{app}: event subscriber lagging; event dropped");
+                true
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        });
     }
 }
 
@@ -182,7 +196,7 @@ struct ActorShared {
     depth: AtomicUsize,
     stop: AtomicBool,
     alive: AtomicBool,
-    wake: Sender<WorkerMsg>,
+    wake: SyncSender<WorkerMsg>,
 }
 
 /// Messages on a worker's inbox (distinct from per-actor mailboxes):
@@ -248,7 +262,7 @@ pub struct PoolStats {
 /// threads.  Placement is least-loaded at spawn time and sticky for the
 /// actor's lifetime (apps may hold `!Send` state).
 pub struct ActorPool {
-    inboxes: Vec<Sender<WorkerMsg>>,
+    inboxes: Vec<SyncSender<WorkerMsg>>,
     loads: Vec<Arc<AtomicUsize>>,
     registry: Mutex<Vec<Weak<ActorShared>>>,
     hub: Arc<EventHub>,
@@ -263,13 +277,17 @@ impl ActorPool {
         let mut loads = Vec::with_capacity(workers);
         let mut joins = Vec::with_capacity(workers);
         for i in 0..workers {
-            let (tx, rx) = channel();
+            // Spawn/Shutdown block when full (true backpressure on actor
+            // placement); Wake is lossy try_send, so a burst of command
+            // pushes can never wedge a caller on a busy worker's inbox.
+            let (tx, rx) = sync_channel(MAILBOX_CAP);
             let load = Arc::new(AtomicUsize::new(0));
             let wload = load.clone();
             let whub = hub.clone();
             let join = std::thread::Builder::new()
                 .name(format!("cacs-actor-{i}"))
                 .spawn(move || worker_loop(rx, wload, whub))
+                // cacs-lint: allow(panic-path) — pool construction runs before any actor exists; a failed worker-thread spawn (OS thread limit) is unrecoverable at this layer
                 .expect("spawn actor worker");
             inboxes.push(tx);
             loads.push(load);
@@ -440,7 +458,10 @@ impl AppHandle {
             mb.push_back(cmd);
             self.shared.depth.store(mb.len(), Ordering::Relaxed);
         }
-        let _ = self.shared.wake.send(WorkerMsg::Wake);
+        // lossy wake: a full inbox means the worker already has wake-ups
+        // queued (it drains the mailbox on the next pass; IDLE_WAIT
+        // bounds staleness even if every wake is shed)
+        let _ = self.shared.wake.try_send(WorkerMsg::Wake);
         Ok(())
     }
 
@@ -452,12 +473,14 @@ impl AppHandle {
         }
     }
 
-    fn call_within<T, F: FnOnce(Sender<T>) -> Cmd>(
+    fn call_within<T, F: FnOnce(SyncSender<T>) -> Cmd>(
         &self,
         timeout: Duration,
         make: F,
     ) -> Result<T> {
-        let (tx, rx) = channel();
+        // a reply port carries exactly one message, so capacity 1 makes
+        // the handler's send non-blocking while keeping the port bounded
+        let (tx, rx) = sync_channel(1);
         self.send(make(tx))?;
         // Disconnected (reply sender dropped: handler panicked, actor
         // wedged/retired) surfaces here as a prompt error rather than
@@ -466,7 +489,7 @@ impl AppHandle {
             .map_err(|_| anyhow::anyhow!("app actor did not answer within {timeout:?}"))
     }
 
-    fn call<T, F: FnOnce(Sender<T>) -> Cmd>(&self, make: F) -> Result<T> {
+    fn call<T, F: FnOnce(SyncSender<T>) -> Cmd>(&self, make: F) -> Result<T> {
         self.call_within(DATA_CALL_TIMEOUT, make)
     }
 

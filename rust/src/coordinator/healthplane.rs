@@ -83,13 +83,13 @@ impl HandleTap {
         // the snap lock is held across the refresh on purpose: hooks
         // racing here wait for the one in-flight round-trip (bounded by
         // probe_timeout) instead of stacking n probes on the host
-        let mut snap = self.snap.lock().unwrap();
+        let mut snap = self.snap.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(at) = snap.at {
             if at.elapsed() < self.freshness {
                 return snap.flags.clone();
             }
         }
-        let handle = self.handle.lock().unwrap().upgrade();
+        let handle = self.handle.lock().unwrap_or_else(|e| e.into_inner()).upgrade();
         let flags = handle
             .and_then(|h| h.try_health(self.probe_timeout))
             .map(Arc::new);
@@ -99,11 +99,11 @@ impl HandleTap {
     }
 
     fn invalidate(&self) {
-        self.snap.lock().unwrap().at = None;
+        self.snap.lock().unwrap_or_else(|e| e.into_inner()).at = None;
     }
 
     fn rewire(&self, handle: &Arc<AppHandle>) {
-        *self.handle.lock().unwrap() = Arc::downgrade(handle);
+        *self.handle.lock().unwrap_or_else(|e| e.into_inner()) = Arc::downgrade(handle);
         self.invalidate();
     }
 }
@@ -152,13 +152,13 @@ impl AppMonitor {
     pub fn probe(&self) -> HealthProbe {
         self.tap.invalidate();
         let probe = self.monitor.heartbeat_probe();
-        *self.last.lock().unwrap() = Some(probe.clone());
+        *self.last.lock().unwrap_or_else(|e| e.into_inner()) = Some(probe.clone());
         probe
     }
 
     /// The most recent completed probe, if any round ran yet.
     pub fn last_probe(&self) -> Option<HealthProbe> {
-        self.last.lock().unwrap().clone()
+        self.last.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// The tree's whole-heartbeat deadline budget.

@@ -35,6 +35,12 @@
 //! Everything runs in one of two modes (DESIGN.md §1): **sim** (discrete-
 //! event virtual time; used by the figure-reproduction benches) and
 //! **real** (threads, sockets, disk, PJRT compute; used by `examples/`).
+//!
+//! The concurrency/determinism invariants these modules rely on are
+//! machine-checked by [`lintpass`] (`cargo run --release --bin
+//! cacs-lint`; see `docs/static-analysis.md`).
+
+#![deny(unused_must_use)]
 
 pub mod util;
 pub mod simexec;
@@ -49,6 +55,7 @@ pub mod runtime;
 pub mod workloads;
 pub mod chaos;
 pub mod coordinator;
+pub mod lintpass;
 
 /// Crate version (mirrors Cargo.toml).
 pub fn version() -> &'static str {

@@ -1,0 +1,357 @@
+//! Hand-rolled Rust lexer for `cacs-lint` (see [`super`]).
+//!
+//! Deliberately *not* a full Rust grammar: the lint rules only need a
+//! comment/string-stripped token stream with line numbers, plus two
+//! side channels — `// cacs-lint: allow(...)` pragmas and the line
+//! ranges covered by `#[cfg(test)]` items.  The same philosophy as the
+//! repo's own JSON parser: small, dependency-free, total (never panics
+//! on weird input — worst case it tokenizes garbage as punctuation).
+
+/// One lexed token.  Punctuation is single-character except `::`,
+/// which is coalesced so paths (`thread::sleep`) match as triples.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub line: u32,
+    pub text: String,
+    pub is_ident: bool,
+}
+
+impl Tok {
+    pub fn is(&self, s: &str) -> bool {
+        self.text == s
+    }
+}
+
+/// A `// cacs-lint: allow(rule, ...) — reason` pragma.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// Line the pragma comment sits on.
+    pub line: u32,
+    /// Line the pragma governs: its own line when it trails code,
+    /// otherwise the next line holding a code token.
+    pub target_line: u32,
+    pub rules: Vec<String>,
+    /// Text after the rule list (the written justification).
+    pub reason: String,
+    /// Set when the comment failed to parse as `allow(...)`.
+    pub malformed: bool,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct LexFile {
+    pub toks: Vec<Tok>,
+    pub pragmas: Vec<Pragma>,
+    /// Inclusive line ranges covered by `#[cfg(test)]` items.
+    pub test_ranges: Vec<(u32, u32)>,
+}
+
+impl LexFile {
+    pub fn in_test_code(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+const PRAGMA_KEY: &str = "cacs-lint:";
+
+pub fn lex(src: &str) -> LexFile {
+    let bytes = src.as_bytes();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    // does the current line already hold a code token?  (decides
+    // whether a pragma trails code or stands alone)
+    let mut code_on_line = false;
+
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                line += 1;
+                code_on_line = false;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if bytes.get(i + 1) == Some(&b'/') => {
+                // line comment: may carry a pragma
+                let start = i + 2;
+                let end = src[start..]
+                    .find('\n')
+                    .map(|n| start + n)
+                    .unwrap_or(bytes.len());
+                let body = src[start..end].trim();
+                if let Some(rest) = body.strip_prefix(PRAGMA_KEY).map(str::trim) {
+                    pragmas.push(parse_pragma(line, code_on_line, rest));
+                }
+                i = end;
+            }
+            '/' if bytes.get(i + 1) == Some(&b'*') => {
+                // block comment, nesting per Rust
+                let mut depth = 1;
+                i += 2;
+                while i < bytes.len() && depth > 0 {
+                    if bytes[i] == b'\n' {
+                        line += 1;
+                        code_on_line = false;
+                        i += 1;
+                    } else if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                i = skip_string(src, i, &mut line);
+                code_on_line = true;
+            }
+            'r' | 'b' if starts_string_prefix(bytes, i) => {
+                i = skip_prefixed_string(src, i, &mut line);
+                code_on_line = true;
+            }
+            '\'' => {
+                // char literal vs lifetime: a lifetime is '<ident> with
+                // no closing quote right after
+                i = skip_char_or_lifetime(src, i, &mut line, &mut toks);
+                code_on_line = true;
+            }
+            // ASCII-only idents: a non-ASCII byte falls through to the
+            // punct arm one byte at a time, so byte-indexed slicing
+            // below never lands inside a UTF-8 sequence
+            c if c.is_ascii_alphanumeric() || c == '_' => {
+                let start = i;
+                while i < bytes.len() {
+                    let d = bytes[i] as char;
+                    if d.is_ascii_alphanumeric() || d == '_' {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Tok {
+                    line,
+                    text: src[start..i].to_string(),
+                    is_ident: !(src.as_bytes()[start] as char).is_ascii_digit(),
+                });
+                code_on_line = true;
+            }
+            ':' if bytes.get(i + 1) == Some(&b':') => {
+                toks.push(Tok { line, text: "::".into(), is_ident: false });
+                code_on_line = true;
+                i += 2;
+            }
+            _ => {
+                toks.push(Tok { line, text: c.to_string(), is_ident: false });
+                code_on_line = true;
+                i += 1;
+            }
+        }
+    }
+
+    // resolve each standalone pragma's target to the next code line
+    for p in &mut pragmas {
+        if p.target_line == 0 {
+            p.target_line = toks
+                .iter()
+                .find(|t| t.line > p.line)
+                .map(|t| t.line)
+                .unwrap_or(p.line);
+        }
+    }
+
+    let test_ranges = find_test_ranges(&toks);
+    LexFile { toks, pragmas, test_ranges }
+}
+
+fn parse_pragma(line: u32, trailing: bool, rest: &str) -> Pragma {
+    let target_line = if trailing { line } else { 0 }; // 0 = resolve later
+    let Some(inner_start) = rest.strip_prefix("allow(") else {
+        return Pragma {
+            line,
+            target_line: if target_line == 0 { line } else { target_line },
+            rules: vec![],
+            reason: String::new(),
+            malformed: true,
+        };
+    };
+    let Some(close) = inner_start.find(')') else {
+        return Pragma {
+            line,
+            target_line: if target_line == 0 { line } else { target_line },
+            rules: vec![],
+            reason: String::new(),
+            malformed: true,
+        };
+    };
+    let rules = inner_start[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let reason = inner_start[close + 1..]
+        .trim_start_matches([' ', '\t'])
+        .trim_start_matches(['—', '-', ':', '–'])
+        .trim()
+        .to_string();
+    Pragma { line, target_line, rules, reason, malformed: false }
+}
+
+fn starts_string_prefix(bytes: &[u8], i: usize) -> bool {
+    // r"..."  r#"..."#  b"..."  br"..."  br#"..."#
+    let mut j = i;
+    if bytes[j] == b'b' {
+        j += 1;
+    }
+    if bytes.get(j) == Some(&b'r') {
+        j += 1;
+        while bytes.get(j) == Some(&b'#') {
+            j += 1;
+        }
+    }
+    j > i && bytes.get(j) == Some(&b'"')
+}
+
+fn skip_string(src: &str, start: usize, line: &mut u32) -> usize {
+    let bytes = src.as_bytes();
+    let mut i = start + 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn skip_prefixed_string(src: &str, start: usize, line: &mut u32) -> usize {
+    let bytes = src.as_bytes();
+    let mut i = start;
+    if bytes[i] == b'b' {
+        i += 1;
+    }
+    let raw = bytes.get(i) == Some(&b'r');
+    if raw {
+        i += 1;
+        let mut hashes = 0;
+        while bytes.get(i) == Some(&b'#') {
+            hashes += 1;
+            i += 1;
+        }
+        i += 1; // opening quote
+        let closer: String = format!("\"{}", "#".repeat(hashes));
+        loop {
+            if i >= bytes.len() {
+                return i;
+            }
+            if bytes[i] == b'\n' {
+                *line += 1;
+                i += 1;
+                continue;
+            }
+            if src[i..].starts_with(&closer) {
+                return i + closer.len();
+            }
+            i += 1;
+        }
+    } else {
+        skip_string(src, i, line)
+    }
+}
+
+fn skip_char_or_lifetime(
+    src: &str,
+    start: usize,
+    line: &mut u32,
+    toks: &mut Vec<Tok>,
+) -> usize {
+    let bytes = src.as_bytes();
+    // escaped char 'x' / '\n' / '\u{...}'
+    if bytes.get(start + 1) == Some(&b'\\') {
+        let mut i = start + 2;
+        while i < bytes.len() && bytes[i] != b'\'' {
+            i += 1;
+        }
+        return i + 1;
+    }
+    // plain char 'c'
+    if let Some(ch) = src[start + 1..].chars().next() {
+        let after = start + 1 + ch.len_utf8();
+        if bytes.get(after) == Some(&b'\'') {
+            return after + 1;
+        }
+    }
+    // lifetime: emit as a single token so generics still tokenize
+    let mut i = start + 1;
+    while i < bytes.len() {
+        let d = bytes[i] as char;
+        if d.is_ascii_alphanumeric() || d == '_' {
+            i += 1;
+        } else {
+            break;
+        }
+    }
+    toks.push(Tok { line: *line, text: src[start..i].to_string(), is_ident: false });
+    i
+}
+
+/// Line ranges of `#[cfg(test)]` items: the attribute plus the item it
+/// decorates (brace-matched for `mod`/`fn`, through `;` for bare
+/// statements like gated `use`).
+fn find_test_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let hit = toks[i].is("#")
+            && toks[i + 1].is("[")
+            && toks[i + 2].is("cfg")
+            && toks[i + 3].is("(")
+            && toks[i + 4].is("test")
+            && toks[i + 5].is(")")
+            && toks[i + 6].is("]");
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 7;
+        // scan to the item's opening brace or terminating semicolon
+        let mut end_line = start_line;
+        while j < toks.len() {
+            if toks[j].is(";") {
+                end_line = toks[j].line;
+                break;
+            }
+            if toks[j].is("{") {
+                let mut depth = 1;
+                j += 1;
+                while j < toks.len() && depth > 0 {
+                    if toks[j].is("{") {
+                        depth += 1;
+                    } else if toks[j].is("}") {
+                        depth -= 1;
+                    }
+                    j += 1;
+                }
+                end_line = toks[j.saturating_sub(1).min(toks.len() - 1)].line;
+                break;
+            }
+            j += 1;
+        }
+        if j >= toks.len() {
+            end_line = toks.last().map(|t| t.line).unwrap_or(start_line);
+        }
+        ranges.push((start_line, end_line));
+        i = j.max(i + 7);
+    }
+    ranges
+}

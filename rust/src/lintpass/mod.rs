@@ -1,0 +1,93 @@
+//! `cacs-lint`: in-repo static analysis for the project's concurrency
+//! and determinism invariants.
+//!
+//! The control plane rests on hand-rolled concurrency — slot-pinned
+//! actors, a 16-shard registry with poison recovery, federation that
+//! must never hold a lock across a network call, and a chaos harness
+//! whose bit-reproducibility depends on sim code never touching wall
+//! clocks.  These invariants are documented in `docs/architecture.md`
+//! and `docs/chaos.md`; this module enforces them mechanically.  See
+//! `docs/static-analysis.md` for the rule catalogue and the
+//! `// cacs-lint: allow(<rule>) — <reason>` escape hatch.
+//!
+//! Run it with `cargo run --release --bin cacs-lint` (CI gates on it).
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Diag, Scope, GUARD_FNS, RULE_NAMES};
+
+/// Directories walked relative to the repo root.
+pub const LINT_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Derive which rule families apply to a repo-relative path.
+pub fn scope_for(rel: &str) -> Scope {
+    let rel = rel.replace('\\', "/");
+    let sim = rel.contains("src/chaos/")
+        || rel.contains("src/simcloud/")
+        || rel.ends_with("src/monitor/sim.rs")
+        || rel.ends_with("src/coordinator/simdrv.rs")
+        || rel.ends_with("src/storage/sim.rs");
+    Scope {
+        test_file: rel.starts_with("rust/tests/"),
+        sim,
+        coordinator: rel.contains("src/coordinator/"),
+        http: rel.ends_with("src/util/http.rs"),
+        // L4 scope: the REST dispatch surface and the actor runtime.
+        // A panic in rest.rs kills a connection thread mid-response; a
+        // panic in appthread.rs poisons every app pinned to the slot.
+        panic_path: rel.ends_with("src/coordinator/rest.rs")
+            || rel.ends_with("src/coordinator/appthread.rs"),
+    }
+}
+
+/// Lint one file's source text under the scope for `rel`.
+pub fn check_source(rel: &str, src: &str) -> Vec<Diag> {
+    let lex = lexer::lex(src);
+    rules::check(&lex, scope_for(rel))
+}
+
+/// Lint every `.rs` file under the standard roots of `repo_root`.
+/// Returns `(file, diagnostics)` pairs for files with findings, in
+/// path order.
+pub fn check_tree(repo_root: &Path) -> io::Result<Vec<(String, Vec<Diag>)>> {
+    let mut files = Vec::new();
+    for root in LINT_ROOTS {
+        let dir = repo_root.join(root);
+        if dir.is_dir() {
+            walk(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(repo_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        let diags = check_source(&rel, &src);
+        if !diags.is_empty() {
+            out.push((rel, diags));
+        }
+    }
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,676 @@
+//! Lint rules for `cacs-lint`.
+//!
+//! Each rule is a pure function from a lexed file ([`LexFile`]) plus a
+//! path-derived [`Scope`] to a list of [`Diag`]s.  Pragma suppression
+//! happens in one place, after all rules have run, so every rule stays
+//! oblivious to `allow(...)` handling.
+//!
+//! Rule names (used in diagnostics and pragmas):
+//!
+//! | rule                | invariant                                        |
+//! |---------------------|--------------------------------------------------|
+//! | `lock-poison`       | L1: lock sites use `unwrap_or_else(into_inner)`  |
+//! | `lock-across-io`    | L1: no guard held across network/store I/O       |
+//! | `sim-determinism`   | L2: no wall clock / OS entropy in sim modules    |
+//! | `unbounded-channel` | L3: `sync_channel` only inside `coordinator/`    |
+//! | `uncapped-read`     | L3: no uncapped `read_to_end`/`read_line` (http) |
+//! | `panic-path`        | L4: no `unwrap`/`expect` in REST/actor paths     |
+//! | `pragma`            | meta: pragmas must parse, be used, give a reason |
+
+use super::lexer::{LexFile, Tok};
+
+/// All rule names a pragma may reference.
+pub const RULE_NAMES: &[&str] = &[
+    "lock-poison",
+    "lock-across-io",
+    "sim-determinism",
+    "unbounded-channel",
+    "uncapped-read",
+    "panic-path",
+];
+
+/// Functions that return a lock guard without a lexical `.lock()` at
+/// the call site.  `lock-across-io` must treat calls to these as guard
+/// births; keep in sync with the helpers in `coordinator/service.rs`
+/// (`shard`, `shard_at`) and `coordinator/appthread.rs`
+/// (`lock_unpoisoned`).  `FederationRouter::lock` needs no entry: its
+/// call sites end in `.lock()`, which the chain matcher already treats
+/// as a guard birth.
+pub const GUARD_FNS: &[&str] = &["shard", "shard_at", "lock_unpoisoned"];
+
+/// Idents that mark a network or store I/O call for `lock-across-io`.
+const IO_TYPES: &[&str] = &["TcpStream", "Client"];
+const IO_METHODS: &[&str] = &["put_writer", "get_into", "post_stream"];
+
+/// One diagnostic: `file:line rule message`.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Which rule families apply to a file, derived from its repo-relative
+/// path by [`super::scope_for`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Scope {
+    /// `rust/tests/` fixture file: only `lock-poison` still applies.
+    pub test_file: bool,
+    /// L2 module (`chaos/`, `simcloud/`, `monitor/sim.rs`,
+    /// `coordinator/simdrv.rs`, `storage/sim.rs`).
+    pub sim: bool,
+    /// L3 channel scope: `coordinator/`.
+    pub coordinator: bool,
+    /// L3 read scope: `util/http.rs`.
+    pub http: bool,
+    /// L4 scope: REST handlers + actor loops.
+    pub panic_path: bool,
+}
+
+/// Run every applicable rule, then apply pragma suppression.  Returns
+/// surviving diagnostics in line order.
+pub fn check(lex: &LexFile, scope: Scope) -> Vec<Diag> {
+    let mut diags = Vec::new();
+
+    // L1 applies everywhere, including test code: a poisoned-in-test
+    // mutex is exactly how panic-survival bugs hide.
+    diags.extend(lock_poison(lex));
+    if !scope.test_file {
+        diags.extend(lock_across_io(lex));
+    }
+    if scope.sim {
+        diags.extend(sim_determinism(lex));
+    }
+    if scope.coordinator && !scope.test_file {
+        diags.extend(unbounded_channel(lex));
+    }
+    if scope.http && !scope.test_file {
+        diags.extend(uncapped_read(lex));
+    }
+    if scope.panic_path && !scope.test_file {
+        diags.extend(panic_path(lex));
+    }
+
+    apply_pragmas(lex, &mut diags);
+    diags.sort_by_key(|d| d.line);
+    diags
+}
+
+// ---------------------------------------------------------------------------
+// pragma handling
+// ---------------------------------------------------------------------------
+
+fn apply_pragmas(lex: &LexFile, diags: &mut Vec<Diag>) {
+    let mut used = vec![false; lex.pragmas.len()];
+
+    diags.retain(|d| {
+        for (i, p) in lex.pragmas.iter().enumerate() {
+            if !p.malformed
+                && p.target_line == d.line
+                && p.rules.iter().any(|r| r == d.rule)
+            {
+                used[i] = true;
+                return false;
+            }
+        }
+        true
+    });
+
+    for (i, p) in lex.pragmas.iter().enumerate() {
+        if p.malformed {
+            diags.push(Diag {
+                line: p.line,
+                rule: "pragma",
+                msg: "malformed pragma: expected `cacs-lint: allow(<rule>, ...) — <reason>`"
+                    .into(),
+            });
+            continue;
+        }
+        if p.reason.is_empty() {
+            diags.push(Diag {
+                line: p.line,
+                rule: "pragma",
+                msg: "pragma missing written justification after the rule list".into(),
+            });
+        }
+        for r in &p.rules {
+            if !RULE_NAMES.contains(&r.as_str()) {
+                diags.push(Diag {
+                    line: p.line,
+                    rule: "pragma",
+                    msg: format!("unknown rule `{r}` in pragma"),
+                });
+            }
+        }
+        if !used[i] && p.rules.iter().all(|r| RULE_NAMES.contains(&r.as_str())) {
+            diags.push(Diag {
+                line: p.line,
+                rule: "pragma",
+                msg: format!(
+                    "unused pragma: no `{}` diagnostic on line {}",
+                    p.rules.join(", "),
+                    p.target_line
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L1a: lock-poison
+// ---------------------------------------------------------------------------
+
+/// A lock site is `.lock()`, `.read()` or `.write()` with an *empty*
+/// argument list (which is what separates `RwLock::read` from
+/// `io::Read::read(&mut buf)`).  It must be immediately followed by the
+/// poison-recovery idiom `.unwrap_or_else(|e| e.into_inner())`.
+fn lock_poison(lex: &LexFile) -> Vec<Diag> {
+    let t = &lex.toks;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 3 < t.len() {
+        if t[i].is(".")
+            && t[i + 1].is_ident
+            && matches!(t[i + 1].text.as_str(), "lock" | "read" | "write")
+            && t[i + 2].is("(")
+            && t[i + 3].is(")")
+        {
+            let method = t[i + 1].text.clone();
+            let line = t[i + 1].line;
+            // `.write()` with empty parens is also `flush`-adjacent
+            // writer APIs; require the receiver chain to look like a
+            // lock by checking what follows: a LockResult must be
+            // consumed by `unwrap*`/`expect`/`map*`/`?` — raw `.write()`
+            // on an io object is never followed by those.
+            let j = i + 4;
+            if has_poison_recovery(t, j) {
+                i = j;
+                continue;
+            }
+            if let Some(consumer) = lockresult_consumer(t, j) {
+                out.push(Diag {
+                    line,
+                    rule: "lock-poison",
+                    msg: format!(
+                        "`.{method}()` consumed by `{consumer}` — use \
+                         `.unwrap_or_else(|e| e.into_inner())` so a panicking \
+                         holder cannot wedge every later access"
+                    ),
+                });
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Does `toks[j..]` start with `.unwrap_or_else(|e| e.into_inner())`
+/// (modulo the closure variable name)?
+fn has_poison_recovery(t: &[Tok], j: usize) -> bool {
+    // . unwrap_or_else ( | e | e . into_inner ( ) )
+    let pat_ok = j + 11 < t.len()
+        && t[j].is(".")
+        && t[j + 1].is("unwrap_or_else")
+        && t[j + 2].is("(")
+        && t[j + 3].is("|")
+        && t[j + 4].is_ident
+        && t[j + 5].is("|")
+        && t[j + 6].is_ident
+        && t[j + 7].is(".")
+        && t[j + 8].is("into_inner")
+        && t[j + 9].is("(")
+        && t[j + 10].is(")")
+        && t[j + 11].is(")");
+    pat_ok && t[j + 4].text == t[j + 6].text
+}
+
+/// If the LockResult is consumed by a panicking/ignoring combinator,
+/// return its name.  `match`/`if let`/`?` handling is considered fine.
+fn lockresult_consumer(t: &[Tok], j: usize) -> Option<String> {
+    if j + 1 < t.len() && t[j].is(".") && t[j + 1].is_ident {
+        let name = t[j + 1].text.as_str();
+        if matches!(name, "unwrap" | "expect" | "unwrap_or_default" | "ok") {
+            return Some(name.to_string());
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// L1b: lock-across-io
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct LiveGuard {
+    name: String,
+    depth: usize,
+    born_line: u32,
+}
+
+/// Track `let`-bound guards (direct lock sites plus the registered
+/// [`GUARD_FNS`] helpers) through brace depth and explicit `drop()`,
+/// and flag any network/store I/O token while one is live.
+///
+/// Guard birth is deliberately conservative: only a `let [mut] name =`
+/// whose initializer *ends* at the lock site (or its poison-recovery
+/// tail) binds a guard.  `let n = self.shard(id).handles.len();` binds
+/// a `usize` — the temporary guard dies at the statement's semicolon —
+/// so it is not tracked.
+fn lock_across_io(lex: &LexFile) -> Vec<Diag> {
+    let t = &lex.toks;
+    let mut out = Vec::new();
+    let mut guards: Vec<LiveGuard> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0;
+    while i < t.len() {
+        if t[i].is("{") {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t[i].is("}") {
+            depth = depth.saturating_sub(1);
+            guards.retain(|g| g.depth <= depth);
+            i += 1;
+            continue;
+        }
+        // drop(name)
+        if t[i].is("drop")
+            && i + 3 < t.len()
+            && t[i + 1].is("(")
+            && t[i + 2].is_ident
+            && t[i + 3].is(")")
+        {
+            let name = &t[i + 2].text;
+            guards.retain(|g| &g.name != name);
+            i += 4;
+            continue;
+        }
+        // let [mut] name ... = <expr> ;
+        if t[i].is("let") {
+            if let Some((name, stmt_end, is_guard, born_line)) =
+                guard_binding(t, i, depth)
+            {
+                // scan the initializer for I/O *before* the new guard
+                // is born (prior guards are still live across it), and
+                // track braces the statement may contain.
+                scan_io_span(t, i, stmt_end, &guards, lex, &mut out);
+                // shadowing: a re-`let` of the same name at any depth
+                // replaces the old guard (the old value drops).
+                guards.retain(|g| g.name != name);
+                if is_guard {
+                    guards.push(LiveGuard { name, depth, born_line });
+                }
+                for k in i..stmt_end.min(t.len()) {
+                    if t[k].is("{") {
+                        depth += 1;
+                    } else if t[k].is("}") {
+                        depth = depth.saturating_sub(1);
+                        guards.retain(|g| g.depth <= depth);
+                    }
+                }
+                i = stmt_end;
+                continue;
+            }
+        }
+        if let Some(d) = io_at(t, i, &guards, lex) {
+            out.push(d);
+            // one diagnostic per I/O site is enough
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse a `let` statement starting at `t[i]`.  Returns
+/// `(bound_name, index_after_semicolon, binds_guard, born_line)`, or
+/// `None` when the pattern is not a simple identifier.
+fn guard_binding(t: &[Tok], i: usize, _depth: usize) -> Option<(String, usize, bool, u32)> {
+    let mut j = i + 1;
+    if j < t.len() && t[j].is("mut") {
+        j += 1;
+    }
+    if j >= t.len() || !t[j].is_ident {
+        return None; // destructuring / `let (a, b) =` — not tracked
+    }
+    let name = t[j].text.clone();
+    let born_line = t[j].line;
+    j += 1;
+    // tuple-struct / enum patterns (`let Some(x) = ...`) bind through a
+    // pattern, not a plain name — not tracked.
+    if j >= t.len() || !(t[j].is("=") || t[j].is(":")) {
+        return None;
+    }
+    // skip an optional `: Type` annotation up to `=`
+    let mut angle = 0i32;
+    while j < t.len() && !(t[j].is("=") && angle == 0) {
+        match t[j].text.as_str() {
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            ";" | "{" => return None, // `let x;` or let-else weirdness
+            _ => {}
+        }
+        j += 1;
+    }
+    if j >= t.len() {
+        return None;
+    }
+    let expr_start = j + 1;
+    // find the terminating `;` at balanced nesting
+    let mut k = expr_start;
+    let (mut par, mut brk, mut brc) = (0i32, 0i32, 0i32);
+    while k < t.len() {
+        match t[k].text.as_str() {
+            "(" => par += 1,
+            ")" => par -= 1,
+            "[" => brk += 1,
+            "]" => brk -= 1,
+            "{" => brc += 1,
+            "}" => brc -= 1,
+            ";" if par == 0 && brk == 0 && brc == 0 => break,
+            _ => {}
+        }
+        k += 1;
+    }
+    let semi = k;
+    let is_guard = initializer_ends_at_lock(t, expr_start, semi);
+    Some((name, semi + 1, is_guard, born_line))
+}
+
+/// Does the initializer `t[start..semi]` end with a guard-producing
+/// call — a direct lock site plus optional poison tail, or one of the
+/// [`GUARD_FNS`] helpers?
+fn initializer_ends_at_lock(t: &[Tok], start: usize, semi: usize) -> bool {
+    if semi <= start {
+        return false;
+    }
+    // walk backwards over the poison-recovery tail if present:
+    // ... .unwrap_or_else ( | e | e . into_inner ( ) )
+    let mut end = semi; // exclusive
+    if end >= 12
+        && t[end - 12].is(".")
+        && t[end - 11].is("unwrap_or_else")
+        && has_poison_recovery(t, end - 12)
+    {
+        end -= 12;
+    }
+    // now expect `... . lock ( )` / `. read ( )` / `. write ( )`
+    if end >= 4
+        && t[end - 4].is(".")
+        && t[end - 3].is_ident
+        && matches!(t[end - 3].text.as_str(), "lock" | "read" | "write")
+        && t[end - 2].is("(")
+        && t[end - 1].is(")")
+        && end - 4 > start
+    {
+        return true;
+    }
+    // or a guard-helper call: `name ( <args> )` ending at `end`
+    if end >= 1 && t[end - 1].is(")") {
+        // balance backwards to the matching `(`
+        let mut depth = 0i32;
+        let mut k = end - 1;
+        loop {
+            match t[k].text.as_str() {
+                ")" => depth += 1,
+                "(" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            if k == start {
+                return false;
+            }
+            k -= 1;
+        }
+        if k > start && t[k - 1].is_ident && GUARD_FNS.contains(&t[k - 1].text.as_str()) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Scan `t[from..to]` for I/O while `guards` are live (used for the
+/// initializer span of a tracked `let`).
+fn scan_io_span(
+    t: &[Tok],
+    from: usize,
+    to: usize,
+    guards: &[LiveGuard],
+    lex: &LexFile,
+    out: &mut Vec<Diag>,
+) {
+    let mut k = from;
+    while k < to.min(t.len()) {
+        if let Some(d) = io_at(t, k, guards, lex) {
+            out.push(d);
+            k += 2;
+            continue;
+        }
+        k += 1;
+    }
+}
+
+/// Is `t[i]` an I/O marker while a guard is live (outside test code)?
+fn io_at(t: &[Tok], i: usize, guards: &[LiveGuard], lex: &LexFile) -> Option<Diag> {
+    let g = guards.last()?;
+    let line = t[i].line;
+    if lex.in_test_code(line) {
+        return None;
+    }
+    let hit = if t[i].is_ident && IO_TYPES.contains(&t[i].text.as_str()) {
+        // `Client::new(...)`, `TcpStream::connect(...)` — require a
+        // following `::` so a doc-ish mention of the type in a generic
+        // bound does not fire.
+        i + 1 < t.len() && t[i + 1].is("::")
+    } else if t[i].is(".")
+        && i + 2 < t.len()
+        && t[i + 1].is_ident
+        && IO_METHODS.contains(&t[i + 1].text.as_str())
+        && t[i + 2].is("(")
+    {
+        true
+    } else {
+        false
+    };
+    if !hit {
+        return None;
+    }
+    let what = if t[i].is(".") { t[i + 1].text.clone() } else { t[i].text.clone() };
+    Some(Diag {
+        line,
+        rule: "lock-across-io",
+        msg: format!(
+            "network/store I/O (`{what}`) while lock guard `{}` (line {}) is live — \
+             clone what you need and drop the guard first",
+            g.name, g.born_line
+        ),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// L2: sim-determinism
+// ---------------------------------------------------------------------------
+
+/// Wall clocks, OS sleep, process spawning and OS entropy are banned in
+/// sim/chaos modules: replay must be a pure function of the seed.
+fn sim_determinism(lex: &LexFile) -> Vec<Diag> {
+    let t = &lex.toks;
+    let mut out = Vec::new();
+    let mut push = |line: u32, what: &str| {
+        out.push(Diag {
+            line,
+            rule: "sim-determinism",
+            msg: format!(
+                "`{what}` in a sim/chaos module breaks seed determinism — \
+                 use the DES clock / `util::rng`"
+            ),
+        });
+    };
+    let mut i = 0;
+    while i < t.len() {
+        // Path pairs: X :: y
+        if i + 2 < t.len() && t[i].is_ident && t[i + 1].is("::") && t[i + 2].is_ident {
+            let a = t[i].text.as_str();
+            let b = t[i + 2].text.as_str();
+            match (a, b) {
+                ("SystemTime", "now")
+                | ("Instant", "now")
+                | ("thread", "sleep")
+                | ("std", "process")
+                | ("rand", _)
+                | ("process", "Command") => {
+                    push(t[i].line, &format!("{a}::{b}"));
+                    i += 3;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        // bare `sleep(...)` from `use std::thread::sleep` — but not a
+        // method call `.sleep(...)` (a sim clock may model sleeping).
+        if t[i].is_ident && t[i].is("sleep") {
+            let prev_dot = i > 0 && (t[i - 1].is(".") || t[i - 1].is("fn"));
+            let called = i + 1 < t.len() && t[i + 1].is("(");
+            if !prev_dot && called {
+                push(t[i].line, "sleep");
+            }
+        }
+        // OS entropy sources
+        if t[i].is_ident
+            && matches!(
+                t[i].text.as_str(),
+                "thread_rng" | "OsRng" | "getrandom" | "from_entropy" | "RandomState"
+            )
+        {
+            push(t[i].line, &t[i].text);
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// L3a: unbounded-channel
+// ---------------------------------------------------------------------------
+
+/// Inside `coordinator/`, only bounded `sync_channel` is allowed: an
+/// unbounded `mpsc::channel()` turns backpressure into unbounded
+/// memory growth under the 10k-app load the scale bench exercises.
+fn unbounded_channel(lex: &LexFile) -> Vec<Diag> {
+    let t = &lex.toks;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        if t[i].is_ident
+            && t[i].is("channel")
+            && is_called(t, i + 1)
+            && !lex.in_test_code(t[i].line)
+        {
+            out.push(Diag {
+                line: t[i].line,
+                rule: "unbounded-channel",
+                msg: "unbounded `mpsc::channel()` in coordinator/ — use \
+                      `sync_channel` (reply ports: capacity 1; mailboxes: \
+                      MAILBOX_CAP) so backpressure is bounded"
+                    .into(),
+            });
+        }
+    }
+    out
+}
+
+/// Does a call's argument list open at `t[j]`, allowing an optional
+/// turbofish (`::<T>`) between the function name and the `(`?
+fn is_called(t: &[Tok], mut j: usize) -> bool {
+    if j + 1 < t.len() && t[j].is("::") && t[j + 1].is("<") {
+        let mut angle = 0i32;
+        j += 1;
+        while j < t.len() {
+            match t[j].text.as_str() {
+                "<" => angle += 1,
+                ">" => {
+                    angle -= 1;
+                    if angle == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                ";" | "{" => return false,
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    j < t.len() && t[j].is("(")
+}
+
+// ---------------------------------------------------------------------------
+// L3b: uncapped-read
+// ---------------------------------------------------------------------------
+
+/// In `util/http.rs`, `read_to_end`/`read_line` without a preceding
+/// `.take(...)` cap lets a malicious peer OOM the server.
+fn uncapped_read(lex: &LexFile) -> Vec<Diag> {
+    let t = &lex.toks;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        if t[i].is(".")
+            && i + 2 < t.len()
+            && t[i + 1].is_ident
+            && matches!(t[i + 1].text.as_str(), "read_to_end" | "read_line")
+            && t[i + 2].is("(")
+            && !lex.in_test_code(t[i + 1].line)
+        {
+            out.push(Diag {
+                line: t[i + 1].line,
+                rule: "uncapped-read",
+                msg: format!(
+                    "`.{}()` without a byte cap in util/http.rs — wrap the \
+                     reader in `.take(limit)` or use a capped byte loop",
+                    t[i + 1].text
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// L4: panic-path
+// ---------------------------------------------------------------------------
+
+/// REST handlers and actor loops must degrade, not die: a panic in a
+/// handler kills one connection thread, a panic in an actor worker
+/// poisons shared state for every app pinned to that slot.
+fn panic_path(lex: &LexFile) -> Vec<Diag> {
+    let t = &lex.toks;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        if t[i].is(".")
+            && i + 2 < t.len()
+            && t[i + 1].is_ident
+            && matches!(t[i + 1].text.as_str(), "unwrap" | "expect")
+            && t[i + 2].is("(")
+            && !lex.in_test_code(t[i + 1].line)
+        {
+            // `.unwrap_or_else(|e| e.into_inner())` is a different
+            // ident (`unwrap_or_else`), so the poison idiom never
+            // trips this.
+            out.push(Diag {
+                line: t[i + 1].line,
+                rule: "panic-path",
+                msg: format!(
+                    "`.{}()` in a REST/actor code path — return an error \
+                     (or use a default) instead of panicking",
+                    t[i + 1].text
+                ),
+            });
+        }
+    }
+    out
+}

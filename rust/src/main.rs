@@ -9,6 +9,8 @@
 //!   cacs serve --addr 127.0.0.1:7070 --store /tmp/cacs-store --artifacts artifacts
 //!   cacs demo  --addr 127.0.0.1:7070
 
+#![deny(unused_must_use)]
+
 use cacs::coordinator::rest;
 use cacs::coordinator::service::{CacsService, ServiceConfig};
 use cacs::storage::local::LocalStore;

@@ -94,41 +94,41 @@ impl FaultStore {
 
     /// Probability in [0, 1] that each put/get/delete errors.
     pub fn set_error_rate(&self, p: f64) {
-        self.state.lock().unwrap().error_rate = p.clamp(0.0, 1.0);
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).error_rate = p.clamp(0.0, 1.0);
     }
 
     /// Sleep injected before every op (slow-disk mode; zero disables).
     pub fn set_latency(&self, d: Duration) {
-        self.state.lock().unwrap().latency = d;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).latency = d;
     }
 
     /// When on, every `put` commits only a prefix then errors.
     pub fn set_torn_writes(&self, on: bool) {
-        self.state.lock().unwrap().torn_writes = on;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).torn_writes = on;
     }
 
     /// After `n` more successful deletes, deletes fail until re-armed
     /// with [`Self::disarm_deletes`] (the old `FailingStore::arm`).
     pub fn arm_delete_failures(&self, n: usize) {
-        self.state.lock().unwrap().deletes_until_fail = n;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).deletes_until_fail = n;
     }
 
     pub fn disarm_deletes(&self) {
-        self.state.lock().unwrap().deletes_until_fail = DISARMED;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).deletes_until_fail = DISARMED;
     }
 
     /// After `n` more successful gets, gets fail until re-armed.
     pub fn arm_get_failures(&self, n: usize) {
-        self.state.lock().unwrap().gets_until_fail = n;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).gets_until_fail = n;
     }
 
     pub fn disarm_gets(&self) {
-        self.state.lock().unwrap().gets_until_fail = DISARMED;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).gets_until_fail = DISARMED;
     }
 
     /// Turn every fault mode off (countdowns disarmed, rates zeroed).
     pub fn heal(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         st.error_rate = 0.0;
         st.latency = Duration::ZERO;
         st.torn_writes = false;
@@ -138,7 +138,7 @@ impl FaultStore {
 
     /// How many failures this wrapper has injected so far.
     pub fn injected_failures(&self) -> u64 {
-        self.state.lock().unwrap().injected
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).injected
     }
 
     fn injected_err() -> StoreError {
@@ -149,7 +149,7 @@ impl FaultStore {
     /// whether this op fails probabilistically.  Returns `Err` if so.
     fn gate(&self) -> Result<(), StoreError> {
         let (latency, fail) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
             let fail = st.error_rate > 0.0 && st.rng.chance(st.error_rate);
             if fail {
                 st.injected += 1;
@@ -183,7 +183,7 @@ impl ObjectStore for FaultStore {
     fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
         self.gate()?;
         let torn = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
             if st.torn_writes {
                 st.injected += 1;
                 // leave between one byte and just-under-all of the
@@ -210,7 +210,7 @@ impl ObjectStore for FaultStore {
     fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
         self.gate()?;
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
             let st = &mut *st;
             if Self::countdown(&mut st.gets_until_fail, &mut st.injected) {
                 return Err(Self::injected_err());
@@ -222,7 +222,7 @@ impl ObjectStore for FaultStore {
     fn delete(&self, key: &str) -> Result<(), StoreError> {
         self.gate()?;
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
             let st = &mut *st;
             if Self::countdown(&mut st.deletes_until_fail, &mut st.injected) {
                 return Err(Self::injected_err());

@@ -20,14 +20,14 @@ impl MemStore {
     pub fn total_bytes(&self) -> u64 {
         self.objects
             .read()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .values()
             .map(|v| v.len() as u64)
             .sum()
     }
 
     pub fn object_count(&self) -> usize {
-        self.objects.read().unwrap().len()
+        self.objects.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 }
 
@@ -36,7 +36,7 @@ impl ObjectStore for MemStore {
         validate_key(key)?;
         self.objects
             .write()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(key.to_string(), data.to_vec());
         Ok(())
     }
@@ -44,7 +44,7 @@ impl ObjectStore for MemStore {
     fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
         self.objects
             .read()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .get(key)
             .cloned()
             .ok_or_else(|| StoreError::NotFound(key.to_string()))
@@ -53,7 +53,7 @@ impl ObjectStore for MemStore {
     fn delete(&self, key: &str) -> Result<(), StoreError> {
         self.objects
             .write()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .remove(key)
             .map(|_| ())
             .ok_or_else(|| StoreError::NotFound(key.to_string()))
@@ -63,7 +63,7 @@ impl ObjectStore for MemStore {
         Ok(self
             .objects
             .read()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .keys()
             .filter(|k| k.starts_with(prefix))
             .cloned()
@@ -73,7 +73,7 @@ impl ObjectStore for MemStore {
     fn size(&self, key: &str) -> Result<u64, StoreError> {
         self.objects
             .read()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .get(key)
             .map(|v| v.len() as u64)
             .ok_or_else(|| StoreError::NotFound(key.to_string()))
@@ -89,7 +89,7 @@ impl ObjectStore for MemStore {
 
     /// Copy straight out of the map under the read lock (no clone).
     fn get_into(&self, key: &str, out: &mut dyn Write) -> Result<u64, StoreError> {
-        let objects = self.objects.read().unwrap();
+        let objects = self.objects.read().unwrap_or_else(|e| e.into_inner());
         let data = objects
             .get(key)
             .ok_or_else(|| StoreError::NotFound(key.to_string()))?;
@@ -118,7 +118,7 @@ impl Write for MemPutWriter<'_> {
 impl PutWriter for MemPutWriter<'_> {
     fn finish(self: Box<Self>) -> Result<u64, StoreError> {
         let n = self.buf.len() as u64;
-        self.store.objects.write().unwrap().insert(self.key, self.buf);
+        self.store.objects.write().unwrap_or_else(|e| e.into_inner()).insert(self.key, self.buf);
         Ok(n)
     }
 }

@@ -193,13 +193,16 @@ mod tests {
     impl ObjectStore for TinyStore {
         fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
             validate_key(key)?;
-            self.objects.lock().unwrap().insert(key.to_string(), data.to_vec());
+            self.objects
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert(key.to_string(), data.to_vec());
             Ok(())
         }
         fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
             self.objects
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .get(key)
                 .cloned()
                 .ok_or_else(|| StoreError::NotFound(key.to_string()))
@@ -207,7 +210,7 @@ mod tests {
         fn delete(&self, key: &str) -> Result<(), StoreError> {
             self.objects
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .remove(key)
                 .map(|_| ())
                 .ok_or_else(|| StoreError::NotFound(key.to_string()))
@@ -216,7 +219,7 @@ mod tests {
             Ok(self
                 .objects
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .keys()
                 .filter(|k| k.starts_with(prefix))
                 .cloned()
@@ -225,7 +228,7 @@ mod tests {
         fn size(&self, key: &str) -> Result<u64, StoreError> {
             self.objects
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .get(key)
                 .map(|v| v.len() as u64)
                 .ok_or_else(|| StoreError::NotFound(key.to_string()))

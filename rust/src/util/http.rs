@@ -116,6 +116,7 @@ impl Request {
             };
             let mut buf = Vec::new();
             let mut capped = reader.take(MAX_BODY_BYTES as u64 + 1);
+            // cacs-lint: allow(uncapped-read) — reader is wrapped in .take(MAX_BODY_BYTES + 1) one line up; overflow turns into 413
             capped.read_to_end(&mut buf)?;
             if buf.len() > MAX_BODY_BYTES {
                 return Err(RequestError::TooLarge(buf.len()));
@@ -331,12 +332,45 @@ impl From<std::io::Error> for RequestError {
     }
 }
 
+/// Hard cap on one request/status/header line.  8 KB matches common
+/// server defaults; a peer streaming an endless header line gets an
+/// error instead of an unbounded `String`.
+const MAX_HEADER_LINE: usize = 8 * 1024;
+
+/// Read one `\n`-terminated line (CR stripped) with a hard length cap —
+/// the header-plane analog of `ChunkedReader::read_line_capped`.  EOF
+/// before the terminator returns the partial line, matching
+/// `BufRead::read_line`; callers treat an empty line as end-of-headers.
+fn read_capped_line<R: BufRead>(reader: &mut R) -> std::io::Result<String> {
+    let mut line = Vec::with_capacity(64);
+    loop {
+        let mut byte = [0u8; 1];
+        if reader.read(&mut byte)? == 0 {
+            break;
+        }
+        if byte[0] == b'\n' {
+            break;
+        }
+        line.push(byte[0]);
+        if line.len() > MAX_HEADER_LINE {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "header line too long",
+            ));
+        }
+    }
+    while line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    String::from_utf8(line)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "header not utf-8"))
+}
+
 /// Parse the request line and headers, leaving the body on the reader.
 fn read_head<R: BufRead>(
     reader: &mut R,
 ) -> Result<(Method, String, BTreeMap<String, String>), RequestError> {
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+    let line = read_capped_line(reader)?;
     let mut parts = line.trim_end().split_whitespace();
     let method = parts
         .next()
@@ -350,8 +384,7 @@ fn read_head<R: BufRead>(
 
     let mut headers = BTreeMap::new();
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        let h = read_capped_line(reader)?;
         let h = h.trim_end();
         if h.is_empty() {
             break;
@@ -385,6 +418,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, RequestError>
     let body = if is_chunked(&headers) {
         let mut buf = Vec::new();
         let mut capped = ChunkedReader::new(&mut *reader).take(MAX_BODY_BYTES as u64 + 1);
+        // cacs-lint: allow(uncapped-read) — reader is wrapped in .take(MAX_BODY_BYTES + 1) one line up; overflow turns into 413
         capped.read_to_end(&mut buf)?;
         if buf.len() > MAX_BODY_BYTES {
             return Err(RequestError::TooLarge(buf.len()));
@@ -697,8 +731,7 @@ impl ClientResponse {
 
 /// Parse one response off a connection: status line, headers, body.
 fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<ClientResponse> {
-    let mut status_line = String::new();
-    reader.read_line(&mut status_line)?;
+    let status_line = read_capped_line(reader)?;
     let status: u16 = status_line
         .split_whitespace()
         .nth(1)
@@ -706,8 +739,7 @@ fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<ClientResponse> 
         .ok_or_else(|| bad("bad status line"))?;
     let mut headers = BTreeMap::new();
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        let h = read_capped_line(reader)?;
         let h = h.trim_end();
         if h.is_empty() {
             break;

@@ -110,9 +110,9 @@ impl ThreadPool {
     /// Submit a job; blocks while the queue is at capacity.
     /// Returns false if the pool is shutting down.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) -> bool {
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
         while q.jobs.len() >= q.capacity && !q.shutdown {
-            q = self.shared.not_full.wait(q).unwrap();
+            q = self.shared.not_full.wait(q).unwrap_or_else(|e| e.into_inner());
         }
         if q.shutdown {
             return false;
@@ -126,9 +126,9 @@ impl ThreadPool {
 
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
         while self.shared.in_flight.load(Ordering::SeqCst) > 0 || !q.jobs.is_empty() {
-            q = self.shared.idle.wait(q).unwrap();
+            q = self.shared.idle.wait(q).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -146,7 +146,7 @@ impl ThreadPool {
         impl Drop for Slot {
             fn drop(&mut self) {
                 let (lock, cv) = &*self.0;
-                let mut n = lock.lock().unwrap();
+                let mut n = lock.lock().unwrap_or_else(|e| e.into_inner());
                 *n -= 1;
                 if *n == 0 {
                     cv.notify_all();
@@ -158,7 +158,7 @@ impl ThreadPool {
         for item in items {
             let f = f.clone();
             {
-                *pending.0.lock().unwrap() += 1;
+                *pending.0.lock().unwrap_or_else(|e| e.into_inner()) += 1;
             }
             let slot = Slot(pending.clone());
             // if submit rejects (shutdown) it drops the closure, which
@@ -169,9 +169,9 @@ impl ThreadPool {
             });
         }
         let (lock, cv) = &*pending;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock.lock().unwrap_or_else(|e| e.into_inner());
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = cv.wait(n).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -191,9 +191,9 @@ impl ThreadPool {
         let o2 = out.clone();
         self.scatter(items, move |item| {
             let r = f(item);
-            o2.lock().unwrap().push(r);
+            o2.lock().unwrap_or_else(|e| e.into_inner()).push(r);
         });
-        let mut guard = out.lock().unwrap();
+        let mut guard = out.lock().unwrap_or_else(|e| e.into_inner());
         std::mem::take(&mut *guard)
     }
 }
@@ -201,7 +201,7 @@ impl ThreadPool {
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if let Some(job) = q.jobs.pop_front() {
                     shared.not_full.notify_one();
@@ -210,7 +210,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 if q.shutdown {
                     return;
                 }
-                q = shared.not_empty.wait(q).unwrap();
+                q = shared.not_empty.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
         // Panic isolation: a failing job must not take the worker down
@@ -227,7 +227,7 @@ fn worker_loop(shared: Arc<Shared>) {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             q.shutdown = true;
         }
         self.shared.not_empty.notify_all();

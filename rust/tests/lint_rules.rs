@@ -1,0 +1,465 @@
+//! Fixture tests for the `cacs-lint` engine (`cacs::lintpass`): one
+//! true-positive and one true-negative snippet per rule, plus pragma
+//! handling, guard-lifetime tracking across blocks, and module scoping.
+//! These pin the linter's behavior so it can't silently rot — a lint
+//! pass that stops firing is worse than none.
+//!
+//! Every fixture lives in a raw string, so the outer file stays clean
+//! under the tree-wide lint run.
+
+use cacs::lintpass::{check_source, scope_for};
+
+/// Paths chosen so exactly one rule family scope applies per fixture.
+const COORD: &str = "rust/src/coordinator/fixture.rs";
+const SIM: &str = "rust/src/chaos/fixture.rs";
+const HTTP: &str = "rust/src/util/http.rs";
+const REST: &str = "rust/src/coordinator/rest.rs";
+const PLAIN: &str = "rust/src/storage/fixture.rs";
+
+fn rules_at(rel: &str, src: &str) -> Vec<(u32, String)> {
+    check_source(rel, src)
+        .into_iter()
+        .map(|d| (d.line, d.rule.to_string()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// L1a: lock-poison
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lock_poison_flags_unwrap() {
+    let src = r#"
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+"#;
+    assert_eq!(rules_at(PLAIN, src), vec![(3, "lock-poison".into())]);
+}
+
+#[test]
+fn lock_poison_flags_expect_and_rwlock() {
+    let src = r#"
+fn f(m: &std::sync::RwLock<u32>) -> u32 {
+    let a = *m.read().expect("poisoned");
+    let b = *m.write().unwrap();
+    a + b
+}
+"#;
+    let got = rules_at(PLAIN, src);
+    assert_eq!(
+        got,
+        vec![(3, "lock-poison".into()), (4, "lock-poison".into())]
+    );
+}
+
+#[test]
+fn lock_poison_accepts_recovery_idiom() {
+    let src = r#"
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(|e| e.into_inner())
+}
+fn g(m: &std::sync::RwLock<u32>) -> u32 {
+    *m.read().unwrap_or_else(|e| e.into_inner())
+}
+"#;
+    assert!(rules_at(PLAIN, src).is_empty());
+}
+
+#[test]
+fn lock_poison_ignores_io_read_with_args() {
+    // `Read::read(&mut buf)` has arguments — not a lock site.
+    let src = r#"
+fn f(r: &mut dyn std::io::Read) -> std::io::Result<usize> {
+    let mut buf = [0u8; 16];
+    r.read(&mut buf)
+}
+"#;
+    assert!(rules_at(PLAIN, src).is_empty());
+}
+
+#[test]
+fn lock_poison_applies_even_in_test_modules() {
+    // a poisoned mutex in test helper code still wedges later tests
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let m = std::sync::Mutex::new(1u32);
+        let _ = *m.lock().unwrap();
+    }
+}
+"#;
+    assert_eq!(rules_at(PLAIN, src), vec![(7, "lock-poison".into())]);
+}
+
+// ---------------------------------------------------------------------------
+// L1b: lock-across-io
+// ---------------------------------------------------------------------------
+
+#[test]
+fn guard_across_client_io_flagged() {
+    let src = r#"
+fn f(s: &S) {
+    let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+    let c = Client::new(&st.addr);
+    drop(st);
+}
+"#;
+    assert_eq!(rules_at(COORD, src), vec![(4, "lock-across-io".into())]);
+}
+
+#[test]
+fn guard_helper_across_store_io_flagged() {
+    // guard-returning helpers (`shard`) hide the lexical `.lock()` but
+    // must still count as guard births
+    let src = r#"
+fn f(&self, id: &str) {
+    let inner = self.shard(id);
+    self.store.put_writer(&inner.key);
+}
+"#;
+    assert_eq!(rules_at(COORD, src), vec![(4, "lock-across-io".into())]);
+}
+
+#[test]
+fn guard_dropped_before_io_ok() {
+    let src = r#"
+fn f(&self, id: &str) {
+    let addr = {
+        let inner = self.shard(id);
+        inner.addr.clone()
+    };
+    let c = Client::new(&addr);
+}
+"#;
+    assert!(rules_at(COORD, src).is_empty());
+}
+
+#[test]
+fn explicit_drop_releases_guard() {
+    let src = r#"
+fn f(&self, id: &str) {
+    let inner = self.shard(id);
+    let addr = inner.addr.clone();
+    drop(inner);
+    let c = Client::new(&addr);
+}
+"#;
+    assert!(rules_at(COORD, src).is_empty());
+}
+
+#[test]
+fn temporary_guard_projection_not_tracked() {
+    // the guard is a statement-lifetime temporary here: the binding
+    // holds a usize, not the guard
+    let src = r#"
+fn f(&self, id: &str) {
+    let n = self.shard(id).handles.len();
+    let c = Client::new("addr");
+}
+"#;
+    assert!(rules_at(COORD, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// L2: sim-determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wall_clock_in_sim_module_flagged() {
+    let src = r#"
+fn now_ms() -> u128 {
+    std::time::Instant::now();
+    SystemTime::now();
+    0
+}
+"#;
+    let got = rules_at(SIM, src);
+    assert_eq!(
+        got,
+        vec![(3, "sim-determinism".into()), (4, "sim-determinism".into())]
+    );
+}
+
+#[test]
+fn sleep_and_entropy_in_sim_module_flagged() {
+    let src = r#"
+fn f() {
+    thread::sleep(Duration::from_millis(1));
+    let h = std::collections::hash_map::RandomState::new();
+}
+"#;
+    let got = rules_at(SIM, src);
+    assert_eq!(
+        got,
+        vec![(3, "sim-determinism".into()), (4, "sim-determinism".into())]
+    );
+}
+
+#[test]
+fn sim_clock_method_named_sleep_ok() {
+    // a DES clock may model sleeping; only the OS sleep is banned
+    let src = r#"
+fn f(clock: &SimClock) {
+    clock.sleep(Ticks(5));
+}
+"#;
+    assert!(rules_at(SIM, src).is_empty());
+}
+
+#[test]
+fn wall_clock_outside_sim_scope_ok() {
+    // same tokens, non-sim path: L2 does not apply
+    let src = r#"
+fn f() {
+    let t = std::time::Instant::now();
+}
+"#;
+    assert!(rules_at(PLAIN, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// L3a: unbounded-channel
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unbounded_channel_in_coordinator_flagged() {
+    let src = r#"
+fn f() {
+    let (tx, rx) = std::sync::mpsc::channel::<u32>();
+}
+"#;
+    assert_eq!(rules_at(COORD, src), vec![(3, "unbounded-channel".into())]);
+}
+
+#[test]
+fn sync_channel_ok_and_scope_is_module_wide() {
+    let bounded = r#"
+fn f() {
+    let (tx, rx) = std::sync::mpsc::sync_channel::<u32>(8);
+}
+"#;
+    assert!(rules_at(COORD, bounded).is_empty());
+
+    // the same unbounded channel outside coordinator/ is allowed
+    let unbounded = r#"
+fn f() {
+    let (tx, rx) = std::sync::mpsc::channel::<u32>();
+}
+"#;
+    assert!(rules_at(PLAIN, unbounded).is_empty());
+}
+
+#[test]
+fn unbounded_channel_in_coordinator_test_mod_ok() {
+    // test code is exempt: a test harness channel can't grow unbounded
+    // past the test's own lifetime
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+    }
+}
+"#;
+    assert!(rules_at(COORD, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// L3b: uncapped-read
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uncapped_reads_in_http_flagged() {
+    let src = r#"
+fn f<R: BufRead>(r: &mut R) -> std::io::Result<()> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    Ok(())
+}
+"#;
+    let got = rules_at(HTTP, src);
+    assert_eq!(
+        got,
+        vec![(4, "uncapped-read".into()), (6, "uncapped-read".into())]
+    );
+}
+
+#[test]
+fn uncapped_read_outside_http_ok() {
+    let src = r#"
+fn f<R: std::io::Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+"#;
+    assert!(rules_at(PLAIN, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// L4: panic-path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unwrap_in_rest_handler_flagged() {
+    let src = r#"
+fn route(req: &Request) -> Response {
+    let id = req.param("id").unwrap();
+    let n: u64 = id.parse().expect("numeric id");
+    Response::ok()
+}
+"#;
+    let got = rules_at(REST, src);
+    assert_eq!(
+        got,
+        vec![(3, "panic-path".into()), (4, "panic-path".into())]
+    );
+}
+
+#[test]
+fn unwrap_in_rest_test_mod_ok() {
+    let src = r#"
+fn route(req: &Request) -> Response {
+    Response::ok()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let r = super::route(&Request::get("/x"));
+        assert_eq!(r.body().unwrap().len(), 0);
+    }
+}
+"#;
+    assert!(rules_at(REST, src).is_empty());
+}
+
+#[test]
+fn poison_recovery_idiom_not_a_panic_site() {
+    // `.unwrap_or_else(...)` is a different identifier: the L1 idiom
+    // must not trip L4 in panic-path files
+    let src = r#"
+fn route(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(|e| e.into_inner())
+}
+"#;
+    assert!(rules_at(REST, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// pragmas
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trailing_pragma_suppresses_same_line() {
+    let src = r#"
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // cacs-lint: allow(lock-poison) — fixture: poison cannot reach this lock
+}
+"#;
+    assert!(rules_at(PLAIN, src).is_empty());
+}
+
+#[test]
+fn standalone_pragma_suppresses_next_line() {
+    let src = r#"
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    // cacs-lint: allow(lock-poison) — fixture: poison cannot reach this lock
+    *m.lock().unwrap()
+}
+"#;
+    assert!(rules_at(PLAIN, src).is_empty());
+}
+
+#[test]
+fn pragma_without_reason_rejected() {
+    let src = r#"
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // cacs-lint: allow(lock-poison)
+}
+"#;
+    // the violation is suppressed, but the reasonless pragma is itself
+    // a finding — a justification is part of the contract
+    assert_eq!(rules_at(PLAIN, src), vec![(3, "pragma".into())]);
+}
+
+#[test]
+fn unused_pragma_rejected() {
+    let src = r#"
+fn f() -> u32 {
+    // cacs-lint: allow(lock-poison) — stale: the lock below was removed
+    41 + 1
+}
+"#;
+    assert_eq!(rules_at(PLAIN, src), vec![(3, "pragma".into())]);
+}
+
+#[test]
+fn unknown_rule_in_pragma_rejected() {
+    let src = r#"
+fn f() {
+    // cacs-lint: allow(no-such-rule) — typo'd rule names must not pass silently
+    let x = 1;
+}
+"#;
+    assert_eq!(rules_at(PLAIN, src), vec![(3, "pragma".into())]);
+}
+
+#[test]
+fn pragma_for_wrong_rule_does_not_suppress() {
+    let src = r#"
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // cacs-lint: allow(uncapped-read) — wrong rule on purpose
+}
+"#;
+    let got = rules_at(PLAIN, src);
+    // the lock-poison finding survives AND the pragma reports unused
+    assert_eq!(
+        got,
+        vec![(3, "lock-poison".into()), (3, "pragma".into())]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// scope plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scope_derivation_matches_layout() {
+    assert!(scope_for("rust/src/chaos/inject.rs").sim);
+    assert!(scope_for("rust/src/simcloud/snooze.rs").sim);
+    assert!(scope_for("rust/src/monitor/sim.rs").sim);
+    assert!(scope_for("rust/src/coordinator/simdrv.rs").sim);
+    assert!(scope_for("rust/src/storage/sim.rs").sim);
+    assert!(!scope_for("rust/src/monitor/mod.rs").sim);
+
+    assert!(scope_for("rust/src/coordinator/service.rs").coordinator);
+    assert!(!scope_for("rust/src/storage/mem.rs").coordinator);
+
+    assert!(scope_for("rust/src/util/http.rs").http);
+    assert!(scope_for("rust/src/coordinator/rest.rs").panic_path);
+    assert!(scope_for("rust/src/coordinator/appthread.rs").panic_path);
+    assert!(!scope_for("rust/src/coordinator/service.rs").panic_path);
+
+    assert!(scope_for("rust/tests/service_integration.rs").test_file);
+}
+
+#[test]
+fn lexer_ignores_strings_and_comments() {
+    // tokens inside strings/comments must never fire rules
+    let src = r##"
+fn f() -> &'static str {
+    // .lock().unwrap() in a comment
+    /* Instant::now() in a block comment */
+    "m.lock().unwrap() and Instant::now() in a string"
+}
+"##;
+    assert!(rules_at(SIM, src).is_empty());
+}
