@@ -3,83 +3,130 @@
 //! stable storage when higher-priority work arrives, and swap them back
 //! in when CPU is idle again — opportunistic leases à la Marshall et al.
 //!
-//! Scenario: three low-priority LU jobs fill the "cluster".  A
-//! high-priority job arrives: CACS checkpoints the low-priority jobs,
-//! suspends them (releasing their resources), runs the urgent job, then
-//! restores the preempted jobs from their images — all making progress
-//! from exactly where they stopped.
+//! Scenario: the service owns 3 host slots and three low-priority LU
+//! jobs fill them.  A high-priority job arrives *over capacity*: the
+//! built-in scheduler checkpoints the youngest low-priority job, parks
+//! it SWAPPED_OUT with its image chain demoted to the cold tier, and
+//! gives the slot to the urgent job — no manual choreography.  When the
+//! urgent job finishes, the scheduler's ticker swaps the parked job
+//! back in (chain promoted to hot) and it continues from exactly the
+//! cut it was parked at.
 //!
 //!   cargo run --release --example oversubscription
 
 use cacs::coordinator::service::{CacsService, ServiceConfig};
 use cacs::coordinator::types::{Asr, WorkloadSpec};
-use cacs::storage::mem::MemStore;
+use cacs::storage::tiered::TieredStore;
 use cacs::util::ids::AppId;
+use cacs::util::json::Json;
 use std::sync::Arc;
 use std::time::Duration;
 
+fn info(svc: &CacsService, id: AppId) -> Json {
+    svc.info(id).unwrap_or_else(|_| Json::obj())
+}
+
+fn state(svc: &CacsService, id: AppId) -> String {
+    info(svc, id).get("state").as_str().unwrap_or_default().to_string()
+}
+
 fn iteration(svc: &CacsService, id: AppId) -> u64 {
-    svc.info(id)
-        .map(|j| j.get("iteration").as_u64().unwrap_or(0))
-        .unwrap_or(0)
+    info(svc, id).get("iteration").as_u64().unwrap_or(0)
+}
+
+fn wait_until(mut f: impl FnMut() -> bool) -> bool {
+    for _ in 0..400 {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    false
 }
 
 fn main() -> anyhow::Result<()> {
-    let svc = CacsService::new(Arc::new(MemStore::new()), ServiceConfig::default());
+    let tiers = Arc::new(TieredStore::in_memory());
+    let svc = CacsService::new_tiered(
+        tiers.clone(),
+        ServiceConfig { capacity_slots: 3, ..ServiceConfig::default() },
+    );
     svc.start_monitor();
 
-    // three low-priority jobs
+    // three low-priority jobs fill every slot
     let mut low = vec![];
     for k in 0..3 {
         let id = svc.submit(
-            Asr::new(
-                &format!("low-{k}"),
-                WorkloadSpec::Lu { nz: 8, ny: 16, nx: 16 },
-                2,
-            ),
+            Asr::new(&format!("low-{k}"), WorkloadSpec::Lu { nz: 8, ny: 16, nx: 16 }, 2)
+                .with_priority(9),
         )?;
         low.push(id);
     }
-    std::thread::sleep(Duration::from_millis(300));
-
-    // high-priority job arrives: swap the low-priority jobs out
-    println!("high-priority job arrives — preempting {} low-priority jobs", low.len());
-    let mut parked = vec![];
     for &id in &low {
-        let ck = svc.checkpoint(id)?;
-        svc.pause(id)?; // release "CPU" (the app thread idles)
-        parked.push((id, ck.seq, ck.iteration));
-        println!("  parked {id} at iteration {} (ckpt seq {})", ck.iteration, ck.seq);
+        anyhow::ensure!(
+            wait_until(|| iteration(&svc, id) >= 2),
+            "{id} never made progress"
+        );
     }
 
-    let urgent = svc.submit(Asr::new("urgent", WorkloadSpec::Dmtcp1 { n: 4096 }, 1))?;
-    std::thread::sleep(Duration::from_millis(400));
+    // a high-priority job arrives over capacity: by the time submit
+    // returns, the scheduler has parked the most-preemptible low job
+    println!("urgent job arrives over capacity — the scheduler picks a victim");
+    let urgent =
+        svc.submit(Asr::new("urgent", WorkloadSpec::Dmtcp1 { n: 4096 }, 1).with_priority(0))?;
+    let victims: Vec<AppId> =
+        low.iter().copied().filter(|&id| state(&svc, id) == "SWAPPED_OUT").collect();
+    anyhow::ensure!(victims.len() == 1, "expected exactly one victim, got {victims:?}");
+    let victim = victims[0];
+    let parked_seq = info(&svc, victim)
+        .get("scheduler")
+        .get("parked_seq")
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("{victim} parked without a recorded cut"))?;
+    // the iteration the victim will resume from is stamped on its cut
+    let parked_iter = info(&svc, victim)
+        .get("checkpoints")
+        .as_arr()
+        .and_then(|cks| {
+            cks.iter()
+                .find(|c| c.get("seq").as_u64() == Some(parked_seq))
+                .and_then(|c| c.get("iteration").as_u64())
+        })
+        .unwrap_or(0);
+    let stats = tiers.stats();
+    println!(
+        "  parked {victim} at cut {parked_seq} (iteration {parked_iter}); \
+         cold tier now holds {} objects",
+        stats.cold_objects
+    );
+    anyhow::ensure!(stats.cold_objects > 0, "parked chain must sit in the cold tier");
+
+    // the urgent job runs in the freed slot while the victim stays
+    // frozen — it has no thread, so its progress cannot move
+    anyhow::ensure!(wait_until(|| iteration(&svc, urgent) > 0), "urgent job never ran");
+    std::thread::sleep(Duration::from_millis(300));
+    anyhow::ensure!(state(&svc, victim) == "SWAPPED_OUT", "victim resumed too early");
     let urgent_iters = iteration(&svc, urgent);
     println!("urgent job ran to iteration {urgent_iters}");
-    anyhow::ensure!(urgent_iters > 0);
     svc.delete(urgent)?;
 
-    // low-priority jobs must not have progressed while parked
-    for &(id, _seq, it) in &parked {
-        let now = iteration(&svc, id);
-        anyhow::ensure!(now == it, "{id} progressed while parked: {it} -> {now}");
-    }
+    // capacity returns: the scheduler ticker swaps the victim back in
+    println!("cluster idle — waiting for the scheduler to resume {victim}");
+    anyhow::ensure!(
+        wait_until(|| state(&svc, victim) == "RUNNING"),
+        "victim was never swapped back in"
+    );
+    anyhow::ensure!(
+        wait_until(|| iteration(&svc, victim) > parked_iter),
+        "victim must progress past its parked cut"
+    );
+    println!(
+        "  resumed {victim}: iteration {parked_iter} -> {}",
+        iteration(&svc, victim)
+    );
 
-    // idle again: swap everything back in from the images
-    println!("cluster idle — resuming preempted jobs from their checkpoints");
-    for &(id, seq, it) in &parked {
-        svc.resume(id)?;
-        let used = svc.restart(id, Some(seq))?;
-        anyhow::ensure!(used == seq);
-        std::thread::sleep(Duration::from_millis(150));
-        let now = iteration(&svc, id);
-        anyhow::ensure!(now > it, "{id} must progress after resume ({it} -> {now})");
-        println!("  resumed {id}: iteration {it} -> {now}");
-    }
-
-    for &(id, ..) in &parked {
+    for &id in &low {
         svc.delete(id)?;
     }
-    println!("oversubscription OK — preempt, run urgent, resume from images");
+    println!("oversubscription OK — service-driven preempt, run urgent, auto-resume");
     Ok(())
 }

@@ -1,0 +1,185 @@
+//! Fig 7 (extension): priority-aware oversubscription on the real-mode
+//! service (§2.2 use case 4) — swap-out latency (final cut + park +
+//! cold-tier demote), swap-in latency (hot-tier promote + respawn +
+//! restore), and slot utilization while a preemption episode runs.
+//!
+//! `--json <path>` additionally writes the rows as machine-readable
+//! JSON (the repo's `BENCH_*.json` perf-trajectory format).
+
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::coordinator::types::{Asr, WorkloadSpec};
+use cacs::storage::tiered::TieredStore;
+use cacs::util::args::Args;
+use cacs::util::benchkit::{fmt_secs, Stats, Table};
+use cacs::util::ids::AppId;
+use cacs::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn json_row(scenario: &str, metric: &str, value: f64, unit: &str) -> Json {
+    Json::object([
+        ("scenario", scenario.into()),
+        ("metric", metric.into()),
+        ("value", value.into()),
+        ("unit", unit.into()),
+    ])
+}
+
+fn svc_with_slots(slots: usize) -> (Arc<CacsService>, Arc<TieredStore>) {
+    let tiers = Arc::new(TieredStore::in_memory());
+    let svc = CacsService::new_tiered(
+        tiers.clone(),
+        ServiceConfig { monitor_period: None, capacity_slots: slots, ..ServiceConfig::default() },
+    );
+    (svc, tiers)
+}
+
+fn state(svc: &CacsService, id: AppId) -> String {
+    svc.info(id)
+        .ok()
+        .and_then(|j| j.get("state").as_str().map(str::to_string))
+        .unwrap_or_default()
+}
+
+fn wait_until(mut f: impl FnMut() -> bool) -> bool {
+    for _ in 0..400 {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    false
+}
+
+fn wait_progress(svc: &CacsService, id: AppId, min: u64) -> bool {
+    wait_until(|| {
+        svc.info(id)
+            .ok()
+            .and_then(|j| j.get("iteration").as_u64())
+            .unwrap_or(0)
+            >= min
+    })
+}
+
+fn main() {
+    let args = Args::from_env();
+    println!("# Fig 7: oversubscription swap latency + utilization\n");
+    let mut t = Table::new(["scenario", "metric", "value"]);
+    let mut rows: Vec<Json> = vec![];
+
+    // --- swap-out / swap-in latency over repeated cycles -------------
+    // capacity_slots = 0: the scheduler is off and the bench drives the
+    // swaps directly, so each sample times exactly one transition
+    let (svc, _tiers) = svc_with_slots(0);
+    let id = svc
+        .submit(Asr::new("cycler", WorkloadSpec::Counter { blob_bytes: 256 * 1024 }, 1))
+        .expect("submit");
+    assert!(wait_progress(&svc, id, 2), "cycler never made progress");
+
+    let cycles = 20usize;
+    let mut outs = Vec::with_capacity(cycles);
+    let mut ins = Vec::with_capacity(cycles);
+    for _ in 0..cycles {
+        let t0 = Instant::now();
+        svc.swap_out(id).expect("swap_out");
+        outs.push(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        svc.swap_in(id).expect("swap_in");
+        ins.push(t0.elapsed().as_secs_f64());
+        // let the app run a little so the next cut has fresh progress
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    svc.delete(id).expect("delete cycler");
+
+    let so = Stats::from_samples(outs);
+    let si = Stats::from_samples(ins);
+    t.row(["swap-out".into(), "mean".into(), fmt_secs(so.mean)]);
+    t.row(["swap-out".into(), "p95".into(), fmt_secs(so.p95)]);
+    t.row(["swap-in".into(), "mean".into(), fmt_secs(si.mean)]);
+    t.row(["swap-in".into(), "p95".into(), fmt_secs(si.p95)]);
+    rows.push(json_row("swap-out", "mean", so.mean, "s"));
+    rows.push(json_row("swap-out", "p95", so.p95, "s"));
+    rows.push(json_row("swap-in", "mean", si.mean, "s"));
+    rows.push(json_row("swap-in", "p95", si.p95, "s"));
+
+    // --- utilization through a preemption episode --------------------
+    // 3 slots, 3 low-priority fillers, one urgent arrival: the slots
+    // should stay occupied through park and resume — swap-out is what
+    // keeps utilization high while honoring the priority
+    let (svc, _tiers) = svc_with_slots(3);
+    let mut low = vec![];
+    for k in 0..3 {
+        let id = svc
+            .submit(
+                Asr::new(&format!("low-{k}"), WorkloadSpec::Counter { blob_bytes: 64 * 1024 }, 1)
+                    .with_priority(9),
+            )
+            .expect("submit low");
+        low.push(id);
+    }
+    for &id in &low {
+        assert!(wait_progress(&svc, id, 2), "{id} never made progress");
+    }
+
+    let mut samples: Vec<f64> = vec![];
+    let mut sample = |svc: &CacsService, probe: AppId, samples: &mut Vec<f64>| {
+        if let Ok(j) = svc.info(probe) {
+            if let Some(o) = j.get("scheduler").get("occupied").as_u64() {
+                samples.push((o.min(3)) as f64 / 3.0);
+            }
+        }
+    };
+
+    let urgent = svc
+        .submit(Asr::new("urgent", WorkloadSpec::Counter { blob_bytes: 64 * 1024 }, 1))
+        .expect("submit urgent");
+    let victim = low
+        .iter()
+        .copied()
+        .find(|&id| state(&svc, id) == "SWAPPED_OUT")
+        .expect("over-capacity submit must park a victim");
+    for _ in 0..40 {
+        sample(&svc, urgent, &mut samples);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    svc.delete(urgent).expect("delete urgent");
+    let t0 = Instant::now();
+    svc.scheduler_round();
+    let resumed = wait_until(|| state(&svc, victim) == "RUNNING");
+    let resume_latency = t0.elapsed().as_secs_f64();
+    assert!(resumed, "victim was never swapped back in");
+    for _ in 0..40 {
+        sample(&svc, victim, &mut samples);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for &id in &low {
+        svc.delete(id).expect("delete low");
+    }
+
+    let util = if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<f64>() / samples.len() as f64
+    };
+    t.row(["preemption episode".into(), "mean utilization".into(), format!("{util:.3}")]);
+    t.row(["preemption episode".into(), "resume latency".into(), fmt_secs(resume_latency)]);
+    rows.push(json_row("preemption episode", "mean utilization", util, "fraction"));
+    rows.push(json_row("preemption episode", "resume latency", resume_latency, "s"));
+
+    t.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::object([
+            ("bench", "fig7_oversubscription".into()),
+            ("rows", Json::Arr(rows)),
+        ]);
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => {
+                eprintln!("error: writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

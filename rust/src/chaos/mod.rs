@@ -10,8 +10,10 @@
 //!   network partitions that split an app's monitor broadcast tree
 //!   (split-brain), asymmetric link degradation, slow storage back
 //!   ends, clock skew between CACS instances, straight app/VM crashes,
-//!   and crash points parked inside every multi-step protocol
-//!   (checkpoint, delta-chain restore, migration);
+//!   spot-revocation warnings that race a final cut against a reclaim
+//!   deadline and park the app SWAPPED_OUT (§2.2 use case 4), and
+//!   crash points parked inside every multi-step protocol (checkpoint,
+//!   delta-chain restore, migration);
 //! * [`plan`] — seeded, weighted generation of an event schedule;
 //! * [`sim::run_plan`] — executes a schedule against a freshly built
 //!   two-cloud world and returns a [`sim::ChaosReport`] carrying the
@@ -59,6 +61,11 @@ pub enum ChaosKind {
     Migrate { app: usize, to_cloud: usize },
     /// DELETE /coordinators/:id (§5.4).
     Terminate { app: usize },
+    /// §2.2 use case 4: a spot-revocation warning.  CACS races a final
+    /// cut against the `deadline_s` reclaim deadline; a cut that lands
+    /// parks the app SWAPPED_OUT with its VMs released, and the harness
+    /// swaps it back in `park_s` seconds after the deadline.
+    SpotRevocation { app: usize, deadline_s: f64, park_s: f64 },
     /// Crash point: start a checkpoint, then fail the app `after_s`
     /// seconds in — mid local cut or mid upload.
     CrashDuringCheckpoint { app: usize, after_s: f64 },
@@ -138,8 +145,19 @@ pub fn plan(cfg: &ChaosConfig, n_events: usize) -> Vec<ChaosEvent> {
             ChaosKind::SlowStore { factor: rng.uniform(0.1, 0.5), for_s: rng.uniform(20.0, 120.0) }
         } else if roll < 0.46 {
             ChaosKind::ClockSkew { cloud: rng.pick(2), skew_s: rng.uniform(-300.0, 300.0) }
-        } else if roll < 0.71 {
+        } else if roll < 0.66 {
             ChaosKind::Checkpoint { app }
+        } else if roll < 0.71 {
+            // parameters derive from the roll itself (uniform within
+            // the band) instead of fresh draws, so every other event in
+            // a seeded plan sits exactly where it did before this
+            // variant was carved out of the checkpoint band
+            let frac = (roll - 0.66) / 0.05;
+            ChaosKind::SpotRevocation {
+                app,
+                deadline_s: 5.0 + 55.0 * frac,
+                park_s: 30.0 + 270.0 * (1.0 - frac),
+            }
         } else if roll < 0.79 {
             ChaosKind::Restart { app }
         } else if roll < 0.83 {

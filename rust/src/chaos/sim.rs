@@ -17,8 +17,13 @@
 //! Sim-mode mapping of the fault vocabulary: partitions and link
 //! degradation reshape NIC capacities in the fluid network (floored,
 //! never zero, so stalled flows resume on heal) and make the monitor's
-//! broadcast tree unreachable; slow stores scale the storage server
-//! links; failing/torn stores are a real-mode concern covered by
+//! broadcast tree unreachable; spot revocations race a final cut
+//! against the reclaim deadline, park the app SWAPPED_OUT with its VMs
+//! released, and swap it back in once the park window passes — the
+//! settle invariant therefore also proves no app is ever stranded in
+//! the parked state, and the acked-cut invariant covers parked chains
+//! because the revocation cut is acknowledged like any other; slow
+//! stores scale the storage server links; failing/torn stores are a real-mode concern covered by
 //! `storage::fault::FaultStore`.  After *any* capacity change the
 //! network pump must be re-armed ([`simdrv::pump_net`]) because the
 //! generation bump invalidates scheduled wake-ups.
@@ -166,6 +171,15 @@ fn apply(sim: &mut Sim<SimWorld>, w: &mut SimWorld, reg: &Rc<RefCell<Vec<AppId>>
         ChaosKind::Terminate { app } => {
             let id = reg.borrow()[app];
             simdrv::terminate(sim, w, id);
+        }
+        ChaosKind::SpotRevocation { app, deadline_s, park_s } => {
+            let id = reg.borrow()[app];
+            simdrv::spot_revocation_now(sim, w, id, deadline_s);
+            // capacity returns park_s after the reclaim deadline: the
+            // harness swaps the app back in (a no-op unless this very
+            // revocation parked it, so every park has a pending resume
+            // and no app can end the run SWAPPED_OUT)
+            sim.after(deadline_s + park_s, move |sim, w| simdrv::swap_in_now(sim, w, id));
         }
         ChaosKind::CrashDuringCheckpoint { app, after_s } => {
             let id = reg.borrow()[app];
@@ -394,6 +408,36 @@ mod tests {
         // the migrated slot ended as a clone beyond the initial set
         assert!(r.apps_total > cfg.n_apps, "migration should have cloned");
         assert!(r.apps_terminated >= 1, "migration source should be torn down");
+    }
+
+    #[test]
+    fn spot_revocation_parks_then_resumes() {
+        // one revocation with a generous deadline: the final cut lands,
+        // the app parks SWAPPED_OUT, and the scheduled swap-in must
+        // return it to RUNNING inside the grace window — with the
+        // revocation cut still on record (acked-cut invariant over the
+        // parked chain)
+        let cfg = ChaosConfig::sized(33, 0);
+        let evs = vec![ChaosEvent {
+            at: 10.0,
+            kind: ChaosKind::SpotRevocation { app: 0, deadline_s: 60.0, park_s: 120.0 },
+        }];
+        let r = run_plan(&cfg, &evs);
+        assert!(r.ok(), "violations: {:?}", r.violations);
+        assert_eq!(r.ckpts_held, r.ckpts_acked, "parked chain must stay acknowledged");
+    }
+
+    #[test]
+    fn spot_revocation_that_loses_the_race_still_settles() {
+        // a deadline no cut can meet: the VMs are reclaimed mid-cut and
+        // ordinary §6.3 recovery restores from the previous image
+        let cfg = ChaosConfig::sized(34, 0);
+        let evs = vec![ChaosEvent {
+            at: 10.0,
+            kind: ChaosKind::SpotRevocation { app: 0, deadline_s: 1e-6, park_s: 60.0 },
+        }];
+        let r = run_plan(&cfg, &evs);
+        assert!(r.ok(), "violations: {:?}", r.violations);
     }
 
     #[test]

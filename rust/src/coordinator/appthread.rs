@@ -140,6 +140,12 @@ pub enum AppEventKind {
     Restored { seq: u64 },
     Wedged,
     Stopped,
+    /// The oversubscription scheduler swapped the app out: checkpointed
+    /// at `seq`, actor slot released, image chain parked cold.  Emitted
+    /// by the scheduler (not the actor) via [`ActorPool::emit`].
+    SwappedOut { seq: u64 },
+    /// The scheduler swapped the app back in from its parked cut.
+    SwappedIn { seq: u64 },
 }
 
 /// Per-subscriber buffer on the event stream.  A subscriber that falls
@@ -356,6 +362,14 @@ impl ActorPool {
         self.hub.subscribe()
     }
 
+    /// Publish a control-plane event on the unified stream.  Actors
+    /// emit their own lifecycle; this is for decisions made *about* an
+    /// app from outside its actor (the oversubscription scheduler's
+    /// swap-out/swap-in), so observers see one ordered feed.
+    pub(crate) fn emit(&self, app: &str, kind: AppEventKind) {
+        self.hub.emit(app, kind);
+    }
+
     pub fn stats(&self) -> PoolStats {
         let mut stats = PoolStats { workers: self.inboxes.len(), ..PoolStats::default() };
         let mut reg = lock_unpoisoned(&self.registry);
@@ -567,6 +581,25 @@ impl AppHandle {
     pub fn quiesce(&self) -> Result<(u64, f64)> {
         self.send(Cmd::Pause)?;
         self.call(|reply| Cmd::Progress { reply })
+    }
+
+    /// Retire the actor and free its worker slot *now*, without
+    /// consuming the handle.  `pause` keeps the worker pinned (the slot
+    /// stays occupied); swap-out must actually release the resource, so
+    /// the scheduler calls this after the victim's checkpoint lands.
+    /// Uses the out-of-band stop flag (honored even by a wedged actor)
+    /// and waits up to the drop grace period; returns whether the actor
+    /// was observed retired.  Every later command on this handle fails
+    /// with "app actor gone"; swap-in re-acquires a slot by spawning a
+    /// fresh actor from the app's factory.
+    pub fn release_slot(&self) -> bool {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let _ = self.shared.wake.try_send(WorkerMsg::Wake);
+        let deadline = Instant::now() + JOIN_GRACE;
+        while self.shared.alive.load(Ordering::SeqCst) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        !self.shared.alive.load(Ordering::SeqCst)
     }
 }
 
@@ -1219,6 +1252,45 @@ mod tests {
             h.pause();
         }
         assert!(h.mailbox_depth() <= 5);
+    }
+
+    #[test]
+    fn release_slot_frees_worker_slot_without_dropping_handle() {
+        // the pause-semantics fix: pause keeps the slot pinned, so
+        // parked jobs used to starve runnable ones.  release_slot frees
+        // the slot while the handle (and the app's record) live on.
+        let pool = ActorPool::new(2);
+        let store: Arc<dyn ObjectStore> = Arc::new(MemStore::new());
+        let handles: Vec<AppHandle> = (0..4)
+            .map(|i| {
+                pool.spawn(
+                    &format!("app-r{i}"),
+                    Box::new(|| Ok(Box::new(CounterApp::new(1, 16)) as Box<dyn DistributedApp>)),
+                    store.clone(),
+                    Duration::from_millis(1),
+                    DeltaPolicy::default(),
+                )
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(pool.stats().actors, 4);
+        for h in &handles {
+            assert!(h.release_slot(), "{}: actor did not retire", h.app_name);
+        }
+        wait_for(|| pool.stats().actors == 0);
+        // the released handle answers nothing but is still droppable
+        assert!(handles[0].progress().is_err());
+        // freed slots are re-acquirable: a fresh spawn runs fine
+        let h2 = pool.spawn(
+            "app-r-again",
+            Box::new(|| Ok(Box::new(CounterApp::new(1, 16)) as Box<dyn DistributedApp>)),
+            store.clone(),
+            Duration::from_millis(1),
+            DeltaPolicy::default(),
+        );
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(h2.progress().unwrap().0 > 0);
+        drop(handles);
     }
 
     fn wait_for(f: impl Fn() -> bool) {

@@ -418,8 +418,16 @@ impl FederationRouter {
         }
         let mut moved: Vec<Move> = Vec::new();
         let mut skipped = 0u64;
+        let mut parked = 0u64;
         let mut failed = 0u64;
         for (id, name, state) in shard_apps(&addr) {
+            if state == "SWAPPED_OUT" {
+                // placeable-but-idle: a parked app holds no slot, only
+                // its cold image chain — it stays with its shard until
+                // the oversubscription scheduler resumes it
+                parked += 1;
+                continue;
+            }
             if state != "RUNNING" {
                 skipped += 1; // tombstones and in-flight lifecycles stay put
                 continue;
@@ -440,6 +448,7 @@ impl FederationRouter {
             ("drained", addr.as_str().into()),
             ("moved", moves_json(&moved)),
             ("skipped", skipped.into()),
+            ("parked", parked.into()),
             ("failed", failed.into()),
         ]))
     }
@@ -453,6 +462,9 @@ impl FederationRouter {
         for src in &shards {
             for (id, name, state) in shard_apps(src) {
                 if state != "RUNNING" {
+                    // SWAPPED_OUT included: a parked app is placeable
+                    // but idle — it holds no slot, so there is nothing
+                    // to move until its scheduler resumes it
                     continue;
                 }
                 let Some(want) = self.lock().ring.place(&name).map(str::to_string) else {

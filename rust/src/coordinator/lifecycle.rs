@@ -41,6 +41,10 @@ pub enum AppState {
     Terminated,
     /// Unrecoverable failure; only termination remains.
     Error,
+    /// Swapped out by the oversubscription scheduler (§2.2 use case 4):
+    /// checkpointed, actor slot released, image chain parked in the
+    /// cold tier.  Swap-in goes back through RESTARTING.
+    SwappedOut,
 }
 
 impl fmt::Display for AppState {
@@ -56,6 +60,7 @@ impl fmt::Display for AppState {
             AppState::Terminating => "TERMINATING",
             AppState::Terminated => "TERMINATED",
             AppState::Error => "ERROR",
+            AppState::SwappedOut => "SWAPPED_OUT",
         };
         f.write_str(s)
     }
@@ -93,6 +98,9 @@ impl AppState {
                 | (Restarting, Terminating)
                 | (Migrating, Terminating)    // migration done: source teardown
                 | (Error, Terminating)
+                | (Running, SwappedOut)       // scheduler swap-out (§2.2 use case 4)
+                | (SwappedOut, Restarting)    // scheduler swap-in
+                | (SwappedOut, Terminating)   // DELETE of a parked job
                 | (Terminating, Terminated)
         )
     }
@@ -103,9 +111,13 @@ impl AppState {
         self == AppState::Running
     }
 
-    /// Can the application be restarted from an image (§5.3)?
+    /// Can the application be restarted from an image (§5.3)?  A
+    /// swapped-out job resumes through the same RESTARTING path.
     pub fn can_restart(self) -> bool {
-        matches!(self, AppState::Running | AppState::Ready | AppState::Error)
+        matches!(
+            self,
+            AppState::Running | AppState::Ready | AppState::Error | AppState::SwappedOut
+        )
     }
 
     /// Can a cross-CACS migration start right now (§5.3)?  Only from
@@ -113,6 +125,18 @@ impl AppState {
     /// (the REST layer answers 409 for those).
     pub fn can_migrate(self) -> bool {
         self == AppState::Running
+    }
+
+    /// Can the oversubscription scheduler swap this app out (§2.2 use
+    /// case 4)?  Only from RUNNING — a checkpoint, restart, or
+    /// migration in flight owns the lifecycle.
+    pub fn can_swap_out(self) -> bool {
+        self == AppState::Running
+    }
+
+    /// Is this app parked and eligible for swap-in?
+    pub fn can_swap_in(self) -> bool {
+        self == AppState::SwappedOut
     }
 
     pub fn is_terminal(self) -> bool {
@@ -224,9 +248,9 @@ mod tests {
         assert_eq!(lc.state(), Running);
     }
 
-    const ALL: [AppState; 10] = [
+    const ALL: [AppState; 11] = [
         Creating, Provisioning, Ready, Running, Checkpointing, Restarting,
-        Migrating, Terminating, Terminated, Error,
+        Migrating, Terminating, Terminated, Error, SwappedOut,
     ];
 
     #[test]
@@ -251,7 +275,41 @@ mod tests {
                 s.can_transition_to(Migrating),
                 "can_migrate vs table for {s}"
             );
+            assert_eq!(
+                s.can_swap_out(),
+                s.can_transition_to(SwappedOut),
+                "can_swap_out vs table for {s}"
+            );
+            assert_eq!(
+                s.can_swap_in(),
+                s == SwappedOut && s.can_transition_to(Restarting),
+                "can_swap_in vs table for {s}"
+            );
         }
+    }
+
+    #[test]
+    fn swap_out_roundtrip() {
+        // scheduler swap-out: RUNNING → SWAPPED_OUT, resume via
+        // RESTARTING, and a parked job is deletable
+        let mut lc = Lifecycle::new(0.0);
+        lc.to(1.0, Provisioning);
+        lc.to(2.0, Ready);
+        lc.to(3.0, Running);
+        assert!(lc.state().can_swap_out());
+        assert!(lc.to(4.0, SwappedOut));
+        // nothing but swap-in or DELETE may act on a parked job
+        assert!(!lc.state().can_checkpoint());
+        assert!(!lc.state().can_migrate());
+        assert!(!lc.state().can_swap_out());
+        assert!(lc.state().can_swap_in());
+        assert!(lc.state().is_active());
+        assert!(lc.to(5.0, Restarting));
+        assert!(lc.to(6.0, Running));
+        // DELETE path
+        assert!(lc.to(7.0, SwappedOut));
+        assert!(lc.to(8.0, Terminating));
+        assert!(lc.to(9.0, Terminated));
     }
 
     #[test]
@@ -321,7 +379,7 @@ mod tests {
         use crate::util::propcheck::{forall, Gen};
         let states = vec![
             Creating, Provisioning, Ready, Running, Checkpointing, Restarting,
-            Migrating, Terminating, Terminated, Error,
+            Migrating, Terminating, Terminated, Error, SwappedOut,
         ];
         let s2 = states.clone();
         forall(

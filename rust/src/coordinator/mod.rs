@@ -30,6 +30,7 @@ pub mod healthplane;
 pub mod lifecycle;
 pub mod migrate;
 pub mod rest;
+pub mod scheduler;
 pub mod service;
 pub mod simdrv;
 pub mod types;

@@ -12,6 +12,8 @@
 //! | GET    /coordinators/:id/checkpoints/:seq | checkpoint info; `?proc=i` downloads that image (400 for an unparsable `proc`, 404 for a missing image) |
 //! | POST   /coordinators/:id/checkpoints/:seq | restart from the checkpoint |
 //! | DELETE /coordinators/:id/checkpoints/:seq | delete the checkpoint |
+//! | POST   /coordinators/:id/preempt          | spot-revocation warning (§2.2 use case 4): checkpoint + swap the app out within the deadline budget (body = `{"deadline_s": f64}`, default 30); 404 unknown, 409 when the lifecycle refuses |
+//! | POST   /coordinators/:id/resume           | swap a SWAPPED_OUT app back in at its parked cut (the scheduler also does this automatically as capacity returns); 404 unknown, 409 when not parked |
 //!
 //! Plus diagnostics the paper's CLI would expose: GET
 //! /coordinators/:id/health — one §6.3 broadcast-tree heartbeat over
@@ -97,6 +99,37 @@ fn route(svc: &Arc<CacsService>, req: &mut Request) -> Response {
             },
             None => Response::bad_request("bad coordinator id"),
         },
+        (Method::Post, ["coordinators", id, "preempt"]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            // the revocation deadline rides the (optional) body
+            let deadline_s = req
+                .json()
+                .ok()
+                .and_then(|j| j.get("deadline_s").as_f64())
+                .filter(|s| s.is_finite() && *s > 0.0)
+                .unwrap_or(30.0);
+            match svc.preempt(id, std::time::Duration::from_secs_f64(deadline_s)) {
+                Ok(report) => Response::ok_json(&report.to_json()),
+                Err(e) if e.to_string().contains("unknown coordinator") => {
+                    Response::not_found()
+                }
+                Err(e) => Response::conflict(&e.to_string()),
+            }
+        }
+        (Method::Post, ["coordinators", id, "resume"]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            match svc.swap_in(id) {
+                Ok(seq) => Response::ok_json(&Json::object([("resumed_from", seq.into())])),
+                Err(e) if e.to_string().contains("unknown coordinator") => {
+                    Response::not_found()
+                }
+                Err(e) => Response::conflict(&e.to_string()),
+            }
+        }
         (Method::Post, ["coordinators", id, "migrate"]) => {
             let Some(id) = parse_app(id) else {
                 return Response::bad_request("bad coordinator id");
@@ -539,6 +572,47 @@ mod tests {
         let j = info.json().unwrap();
         assert_eq!(j.get("state").as_str(), Some("ERROR"));
         assert!(j.get("actor").get("pool_workers").as_u64().unwrap() >= 1);
+    }
+
+    #[test]
+    fn preempt_and_resume_endpoints() {
+        let (_server, client, _svc) = start();
+        let id = submit_dmtcp1(&client);
+        wait_iter(&client, &id, 2);
+        // a spot-revocation warning parks the app within the deadline
+        let resp = client
+            .post(
+                &format!("/coordinators/{id}/preempt"),
+                &Json::object([("deadline_s", 30.0f64.into())]),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let j = resp.json().unwrap();
+        assert_eq!(j.get("met_deadline").as_bool(), Some(true));
+        let seq = j.get("seq").as_u64().unwrap();
+        let info = client.get(&format!("/coordinators/{id}")).unwrap();
+        assert_eq!(info.json().unwrap().get("state").as_str(), Some("SWAPPED_OUT"));
+        // a second warning for a parked app is a 409, an unknown app 404
+        let again = client
+            .post(&format!("/coordinators/{id}/preempt"), &Json::Null)
+            .unwrap();
+        assert_eq!(again.status, 409, "{}", String::from_utf8_lossy(&again.body));
+        let nf = client.post("/coordinators/app-99/preempt", &Json::Null).unwrap();
+        assert_eq!(nf.status, 404);
+        let nf = client.post("/coordinators/app-99/resume", &Json::Null).unwrap();
+        assert_eq!(nf.status, 404);
+        // explicit resume restores at exactly the parked cut
+        let resp = client
+            .post(&format!("/coordinators/{id}/resume"), &Json::Null)
+            .unwrap();
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        assert_eq!(resp.json().unwrap().get("resumed_from").as_u64(), Some(seq));
+        wait_iter(&client, &id, 1);
+        // resuming an app that is not parked is a 409
+        let resp = client
+            .post(&format!("/coordinators/{id}/resume"), &Json::Null)
+            .unwrap();
+        assert_eq!(resp.status, 409, "{}", String::from_utf8_lossy(&resp.body));
     }
 
     #[test]

@@ -1,0 +1,355 @@
+//! Priority-aware oversubscription scheduler (§2.2 use case 4).
+//!
+//! With [`ServiceConfig::capacity_slots`](super::service::ServiceConfig::capacity_slots)
+//! set, the service admits more applications than it has slots and keeps
+//! the overflow *parked*: a swap-out is `checkpoint → release the actor
+//! slot → demote the image chain to the cold tier`, a swap-in is the
+//! reverse (`promote → re-provision → restore at the parked cut`).  Both
+//! halves live on [`CacsService`] ([`swap_out`](CacsService::swap_out) /
+//! [`swap_in`](CacsService::swap_in)); this module owns the *policy*:
+//!
+//! * **Victim selection** ([`pick_victims`]): lowest priority first
+//!   (priority `0` is the most urgent, so the numerically highest value
+//!   goes first), youngest first within a priority — long-running
+//!   high-priority work is the last thing the scheduler ever parks.
+//! * **Resume order** ([`resume_order`]): most urgent first, FIFO within
+//!   a priority, applied whenever slots free up.
+//! * **The round** ([`CacsService::scheduler_round`]): over capacity →
+//!   swap victims out; under capacity → swap parked apps back in.  An
+//!   over-capacity submit runs a round inline, and a ticker thread
+//!   (`cacs-scheduler`, started by
+//!   [`start_monitor`](CacsService::start_monitor)) re-runs it so apps
+//!   parked while the cluster was full auto-resume with no client call.
+//! * **Spot preemption** ([`CacsService::preempt`]): a revocation
+//!   warning with a deadline budget — the service checkpoints and parks
+//!   the named app immediately and reports whether the cut beat the
+//!   deadline, the §5.3 "migration under revocation" fast path.
+//!
+//! Rounds are serialized by a try-claim flag: the submit hook and the
+//! ticker never double-pick victims for the same overflow.
+
+use crate::coordinator::service::CacsService;
+use crate::util::ids::AppId;
+use crate::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::sync::Weak;
+use std::time::{Duration, Instant};
+
+/// One schedulable app as the policy functions see it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Candidate {
+    pub id: AppId,
+    /// ASR priority: 0 is the most urgent, 255 the most preemptible.
+    pub priority: u8,
+}
+
+/// Over capacity by `need` slots: the apps to swap out, most
+/// preemptible first — numerically highest priority value, then the
+/// youngest (highest id) within a priority.
+pub(crate) fn pick_victims(running: &[Candidate], need: usize) -> Vec<AppId> {
+    let mut v = running.to_vec();
+    v.sort_by(|a, b| b.priority.cmp(&a.priority).then(b.id.cmp(&a.id)));
+    v.into_iter().take(need).map(|c| c.id).collect()
+}
+
+/// Free slots exist: the order parked apps swap back in — most urgent
+/// first (lowest priority value), FIFO (lowest id) within a priority.
+pub(crate) fn resume_order(parked: &[Candidate]) -> Vec<AppId> {
+    let mut v = parked.to_vec();
+    v.sort_by_key(|c| (c.priority, c.id));
+    v.into_iter().map(|c| c.id).collect()
+}
+
+/// Outcome of a [`CacsService::preempt`] spot-revocation warning.
+#[derive(Debug, Clone)]
+pub struct PreemptReport {
+    /// Seq of the cut the app was parked at.
+    pub seq: u64,
+    /// Wall time from the warning to the app being parked.
+    pub elapsed: Duration,
+    /// The revocation deadline the caller announced.
+    pub deadline: Duration,
+    /// Whether the park beat the deadline (the cut is only safe if the
+    /// images were out before the VMs vanished).
+    pub met_deadline: bool,
+}
+
+impl PreemptReport {
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            ("seq", self.seq.into()),
+            ("elapsed_s", self.elapsed.as_secs_f64().into()),
+            ("deadline_s", self.deadline.as_secs_f64().into()),
+            ("met_deadline", self.met_deadline.into()),
+        ])
+    }
+}
+
+impl CacsService {
+    /// One scheduler round: swap victims out while over capacity, swap
+    /// parked apps back in while under.  Returns the ids that moved
+    /// (in either direction).  A round already in flight (the submit
+    /// hook racing the ticker) makes this call a no-op.
+    pub fn scheduler_round(&self) -> Vec<AppId> {
+        if self.capacity_slots() == 0 {
+            return Vec::new();
+        }
+        if self.scheduler_busy.swap(true, Ordering::SeqCst) {
+            return Vec::new();
+        }
+        let moved = self.scheduler_round_inner();
+        self.scheduler_busy.store(false, Ordering::SeqCst);
+        moved
+    }
+
+    fn scheduler_round_inner(&self) -> Vec<AppId> {
+        let cap = self.capacity_slots();
+        let (occupied, running, parked) = self.scheduler_snapshot();
+        let mut moved = Vec::new();
+        if occupied > cap {
+            for id in pick_victims(&running, occupied - cap) {
+                match self.swap_out(id) {
+                    Ok(seq) => {
+                        log::info!("scheduler: swapped {id} out at seq {seq}");
+                        moved.push(id);
+                    }
+                    // a raced lifecycle (the app checkpointed or died
+                    // under us) is not fatal: the next round re-picks
+                    Err(e) => log::warn!("scheduler: swap-out of {id} failed: {e}"),
+                }
+            }
+        } else {
+            let mut free = cap - occupied;
+            for id in resume_order(&parked) {
+                if free == 0 {
+                    break;
+                }
+                match self.swap_in(id) {
+                    Ok(seq) => {
+                        log::info!("scheduler: swapped {id} back in at seq {seq}");
+                        moved.push(id);
+                        free -= 1;
+                    }
+                    Err(e) => log::warn!("scheduler: swap-in of {id} failed: {e}"),
+                }
+            }
+        }
+        moved
+    }
+
+    /// POST /coordinators/:id/preempt — a spot-revocation warning: the
+    /// named app's host is going away in `deadline`.  The service
+    /// checkpoints and parks it *now* and reports whether the park beat
+    /// the budget; once capacity returns the scheduler resumes the app
+    /// from that exact cut with no further client involvement.
+    pub fn preempt(&self, id: AppId, deadline: Duration) -> anyhow::Result<PreemptReport> {
+        let t0 = Instant::now();
+        let seq = self.swap_out(id)?;
+        let elapsed = t0.elapsed();
+        let met_deadline = elapsed <= deadline;
+        if !met_deadline {
+            log::warn!(
+                "{id}: preemption cut took {elapsed:?}, past the {deadline:?} revocation deadline"
+            );
+        }
+        Ok(PreemptReport { seq, elapsed, deadline, met_deadline })
+    }
+
+    /// Start the `cacs-scheduler` ticker driving
+    /// [`scheduler_round`](Self::scheduler_round) at `period`, so apps
+    /// parked while the cluster was full auto-resume as capacity
+    /// returns.  Holds only a weak reference; stops when the service
+    /// drops.  [`start_monitor`](Self::start_monitor) calls this when
+    /// `capacity_slots > 0`.
+    pub fn start_scheduler(self: &std::sync::Arc<Self>, period: Duration) {
+        let weak: Weak<CacsService> = std::sync::Arc::downgrade(self);
+        std::thread::Builder::new()
+            .name("cacs-scheduler".into())
+            .spawn(move || loop {
+                std::thread::sleep(period);
+                match weak.upgrade() {
+                    Some(svc) => {
+                        let _ = svc.scheduler_round();
+                    }
+                    None => return,
+                }
+            })
+            .expect("spawn scheduler thread");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::lifecycle::AppState;
+    use crate::coordinator::service::{CacsService, ServiceConfig};
+    use crate::coordinator::types::{Asr, WorkloadSpec};
+    use crate::storage::tiered::{Tier, TieredStore};
+    use crate::storage::ObjectStore;
+    use std::sync::Arc;
+
+    fn tiered_svc(capacity: usize) -> (Arc<CacsService>, Arc<TieredStore>) {
+        let tiers = Arc::new(TieredStore::in_memory());
+        let svc = CacsService::new_tiered(
+            tiers.clone(),
+            ServiceConfig {
+                monitor_period: None,
+                capacity_slots: capacity,
+                ..ServiceConfig::default()
+            },
+        );
+        (svc, tiers)
+    }
+
+    fn counter() -> WorkloadSpec {
+        WorkloadSpec::Counter { blob_bytes: 4096 }
+    }
+
+    fn wait_until(what: &str, f: impl Fn() -> bool) {
+        for _ in 0..400 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    fn wait_progress(svc: &CacsService, id: AppId, min_iter: u64) {
+        wait_until(&format!("app {id} to reach iteration {min_iter}"), || {
+            svc.info(id)
+                .map(|j| j.get("iteration").as_u64().unwrap_or(0) >= min_iter)
+                .unwrap_or(false)
+        });
+    }
+
+    #[test]
+    fn victim_and_resume_order_tables() {
+        let c = |id: u64, priority: u8| Candidate { id: AppId(id), priority };
+        let running = [c(1, 5), c(2, 9), c(3, 9), c(4, 0)];
+        // most preemptible first: highest priority value, youngest
+        // breaking ties — and the urgent app is picked dead last
+        assert_eq!(pick_victims(&running, 1), vec![AppId(3)]);
+        assert_eq!(pick_victims(&running, 2), vec![AppId(3), AppId(2)]);
+        assert_eq!(pick_victims(&running, 3), vec![AppId(3), AppId(2), AppId(1)]);
+        assert_eq!(pick_victims(&running, 9).last(), Some(&AppId(4)));
+        assert!(pick_victims(&[], 3).is_empty());
+        // resume: most urgent first, FIFO within a priority
+        let parked = [c(7, 9), c(5, 0), c(6, 9), c(8, 3)];
+        assert_eq!(resume_order(&parked), vec![AppId(5), AppId(8), AppId(6), AppId(7)]);
+    }
+
+    #[test]
+    fn over_capacity_submit_parks_a_victim_and_capacity_returns_it() {
+        let (svc, tiers) = tiered_svc(3);
+        let low: Vec<AppId> = (0..3)
+            .map(|i| {
+                svc.submit(Asr::new(&format!("low-{i}"), counter(), 1).with_priority(9))
+                    .unwrap()
+            })
+            .collect();
+        for &id in &low {
+            wait_progress(&svc, id, 2);
+        }
+        // the urgent submit itself triggers the swap — the service
+        // decides, no client choreography
+        let urgent = svc
+            .submit(Asr::new("urgent", counter(), 1).with_priority(0))
+            .unwrap();
+        let victim = *low.last().unwrap(); // youngest of the lowest-priority apps
+        assert_eq!(svc.state(victim), Some(AppState::SwappedOut));
+        assert_eq!(svc.state(urgent), Some(AppState::Running));
+        assert_eq!(svc.state(low[0]), Some(AppState::Running));
+        assert_eq!(svc.state(low[1]), Some(AppState::Running));
+        // the victim's whole chain is parked cold, as a unit
+        let seq = svc.parked_seq(victim).unwrap();
+        let keys = tiers.list(&format!("{victim}/ckpt-{seq}/")).unwrap();
+        assert!(!keys.is_empty());
+        for k in &keys {
+            assert_eq!(tiers.tier_of(k), Some(Tier::Cold), "{k} not parked cold");
+        }
+        let (occupied, _, parked) = svc.scheduler_snapshot();
+        assert_eq!((occupied, parked.len()), (3, 1));
+        // GET /coordinators/:id reports the scheduler's view
+        let j = svc.info(victim).unwrap();
+        let s = j.get("scheduler");
+        assert_eq!(s.get("capacity_slots").as_u64(), Some(3));
+        assert_eq!(s.get("occupied").as_u64(), Some(3));
+        assert_eq!(s.get("swapped").as_u64(), Some(1));
+        assert_eq!(s.get("parked_seq").as_u64(), Some(seq));
+        assert!(s.get("tiers").get("cold").get("objects").as_u64().unwrap() >= 1);
+        // the parked cut's iteration: the exact point the app resumes at
+        let cks = svc.checkpoints(victim).unwrap();
+        let cut_iter = cks
+            .iter()
+            .find(|c| c.get("seq").as_u64() == Some(seq))
+            .and_then(|c| c.get("iteration").as_u64())
+            .unwrap();
+        // capacity returns: the next round swaps the victim back in at
+        // exactly the parked cut, promoted hot first
+        svc.delete(urgent).unwrap();
+        let moved = svc.scheduler_round();
+        assert_eq!(moved, vec![victim]);
+        assert_eq!(svc.state(victim), Some(AppState::Running));
+        assert_eq!(svc.parked_seq(victim), None);
+        for k in tiers.list(&format!("{victim}/ckpt-{seq}/")).unwrap() {
+            assert_eq!(tiers.tier_of(&k), Some(Tier::Hot), "{k} not promoted");
+        }
+        // it resumed from the cut — not from scratch — and keeps going
+        let j = svc.info(victim).unwrap();
+        assert!(j.get("iteration").as_u64().unwrap() >= cut_iter);
+        wait_progress(&svc, victim, cut_iter + 2);
+    }
+
+    #[test]
+    fn swapped_jobs_leave_every_slot_free() {
+        let (svc, _tiers) = tiered_svc(2);
+        let a = svc.submit(Asr::new("a", counter(), 1)).unwrap();
+        let b = svc.submit(Asr::new("b", counter(), 1)).unwrap();
+        wait_progress(&svc, a, 2);
+        wait_progress(&svc, b, 2);
+        svc.swap_out(a).unwrap();
+        svc.swap_out(b).unwrap();
+        // capacity_slots worth of swapped jobs pins NOTHING: pause
+        // would have kept the workers pinned, release_slot frees them
+        wait_until("all actor slots to free", || svc.actor_stats().actors == 0);
+        // a fresh submit takes a free slot immediately, and its inline
+        // round auto-resumes the older parked app into the other slot
+        let c = svc.submit(Asr::new("c", counter(), 1)).unwrap();
+        assert_eq!(svc.state(c), Some(AppState::Running));
+        assert_eq!(svc.state(a), Some(AppState::Running), "FIFO resume of {a}");
+        assert_eq!(svc.state(b), Some(AppState::SwappedOut));
+        assert_eq!(svc.actor_stats().actors, 2);
+    }
+
+    #[test]
+    fn preempt_parks_within_deadline_and_round_resumes() {
+        let (svc, _tiers) = tiered_svc(1);
+        let id = svc.submit(Asr::new("spot", counter(), 1)).unwrap();
+        wait_progress(&svc, id, 2);
+        let report = svc.preempt(id, Duration::from_secs(30)).unwrap();
+        assert!(report.met_deadline, "cut took {:?}", report.elapsed);
+        assert_eq!(svc.state(id), Some(AppState::SwappedOut));
+        assert!(report.to_json().get("met_deadline").as_bool().unwrap());
+        // a second warning for a parked app is a clean refusal
+        assert!(svc.preempt(id, Duration::from_secs(30)).is_err());
+        // the slot is free again: the next round auto-resumes the app
+        let moved = svc.scheduler_round();
+        assert_eq!(moved, vec![id]);
+        assert_eq!(svc.state(id), Some(AppState::Running));
+    }
+
+    #[test]
+    fn delete_of_a_parked_app_purges_the_cold_chain() {
+        let (svc, tiers) = tiered_svc(0); // scheduler off: manual swap
+        let id = svc.submit(Asr::new("d", counter(), 1)).unwrap();
+        wait_progress(&svc, id, 2);
+        let seq = svc.swap_out(id).unwrap();
+        assert_eq!(svc.state(id), Some(AppState::SwappedOut));
+        assert!(!tiers.list(&format!("{id}/ckpt-{seq}/")).unwrap().is_empty());
+        // DELETE of a parked job purges the whole cold-parked chain
+        svc.delete(id).unwrap();
+        assert!(tiers.list(&format!("{id}/")).unwrap().is_empty());
+        assert_eq!(tiers.stats().cold_objects, 0);
+    }
+}

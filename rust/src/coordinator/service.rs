@@ -32,6 +32,7 @@ use crate::coordinator::appthread::{
 use crate::coordinator::db::Db;
 use crate::coordinator::healthplane::{heartbeat_pool, AppMonitor};
 use crate::coordinator::lifecycle::AppState;
+use crate::coordinator::scheduler;
 use crate::coordinator::types::{AppRecord, Asr, CkptRecord, HealthStatus, WorkloadSpec};
 use crate::dckpt::delta::DeltaPolicy;
 use crate::dckpt::service as ckptsvc;
@@ -96,6 +97,13 @@ pub struct ServiceConfig {
     /// (e.g. the 1k-app scale bench): health endpoints then serve
     /// "no evidence" verdicts and `monitor_round` is a no-op.
     pub health_trees: bool,
+    /// §2.2 use case 4 oversubscription: how many apps may hold a live
+    /// host slot at once.  0 = unlimited (the scheduler is off, the
+    /// pre-existing behavior).  When the occupied count exceeds this,
+    /// the [`scheduler`](crate::coordinator::scheduler) swaps the
+    /// lowest-priority victims out (checkpoint → release slot → park
+    /// the image chain cold) and swaps them back in as slots free up.
+    pub capacity_slots: usize,
     /// Test seam: sleep this long in the off-lock spawn phase of
     /// submit, proving the service lock is not held across provisioning.
     #[cfg(test)]
@@ -118,6 +126,7 @@ impl Default for ServiceConfig {
             actor_workers: 0,
             id_base: 0,
             health_trees: true,
+            capacity_slots: 0,
             #[cfg(test)]
             submit_spawn_delay: Duration::ZERO,
         }
@@ -183,6 +192,10 @@ struct Inner {
     // apps a monitor round has claimed for recovery: a concurrent round
     // (or a round racing the tail of this one) must not double-recover
     recovering: BTreeSet<AppId>,
+    // SWAPPED_OUT apps hashed onto this shard → the seq of the cut they
+    // were parked at; swap-in restores exactly this cut, so the victim
+    // resumes at the iteration it was preempted at
+    swapped: BTreeMap<AppId, u64>,
 }
 
 impl Inner {
@@ -192,6 +205,7 @@ impl Inner {
             handles: BTreeMap::new(),
             monitors: BTreeMap::new(),
             recovering: BTreeSet::new(),
+            swapped: BTreeMap::new(),
         }
     }
 }
@@ -206,6 +220,12 @@ const N_SHARDS: usize = 16;
 pub struct CacsService {
     cfg: ServiceConfig,
     store: Arc<dyn ObjectStore>,
+    /// Present when the store is a [`TieredStore`]: the scheduler then
+    /// demotes a swapped-out app's image chain to the cold tier and
+    /// promotes it back on swap-in.  `store` is the same object as
+    /// `tiers` (the trait-object view), so every existing checkpoint /
+    /// restore / delete path routes through the tiers unchanged.
+    tiers: Option<Arc<crate::storage::tiered::TieredStore>>,
     /// Service-wide id allocator (ids span shards, so allocation cannot
     /// live inside any one shard's `Db`).
     ids: IdGen,
@@ -222,10 +242,34 @@ pub struct CacsService {
     /// deferred by one round's deadline are probed first the next round
     /// instead of being structurally starved at the tail.
     round_counter: std::sync::atomic::AtomicUsize,
+    /// One scheduler round at a time: the submit hook and the ticker
+    /// both call [`scheduler_round`](Self::scheduler_round); a round in
+    /// flight makes the other a no-op instead of double-picking victims.
+    pub(crate) scheduler_busy: std::sync::atomic::AtomicBool,
 }
 
 impl CacsService {
     pub fn new(store: Arc<dyn ObjectStore>, cfg: ServiceConfig) -> Arc<CacsService> {
+        Self::new_inner(store, None, cfg)
+    }
+
+    /// Construct over a [`TieredStore`]: identical to [`Self::new`] with
+    /// the tiers as the object store, plus the scheduler's demote /
+    /// promote hooks armed so swapped-out image chains park in the cold
+    /// tier as a unit.
+    pub fn new_tiered(
+        tiers: Arc<crate::storage::tiered::TieredStore>,
+        cfg: ServiceConfig,
+    ) -> Arc<CacsService> {
+        let store: Arc<dyn ObjectStore> = tiers.clone();
+        Self::new_inner(store, Some(tiers), cfg)
+    }
+
+    fn new_inner(
+        store: Arc<dyn ObjectStore>,
+        tiers: Option<Arc<crate::storage::tiered::TieredStore>>,
+        cfg: ServiceConfig,
+    ) -> Arc<CacsService> {
         let workers = if cfg.actor_workers == 0 {
             appthread::default_workers()
         } else {
@@ -235,11 +279,13 @@ impl CacsService {
         Arc::new(CacsService {
             cfg,
             store,
+            tiers,
             ids,
             shards: (0..N_SHARDS).map(|_| Mutex::new(Inner::empty())).collect(),
             actors: ActorPool::new(workers),
             epoch: Instant::now(),
             round_counter: std::sync::atomic::AtomicUsize::new(0),
+            scheduler_busy: std::sync::atomic::AtomicBool::new(false),
         })
     }
 
@@ -343,6 +389,17 @@ impl CacsService {
         if let Some(monitor) = monitor {
             inner.monitors.insert(id, monitor);
         }
+        drop(inner);
+        // §2.2 use case 4: an over-capacity submit triggers the
+        // scheduler inline — by the time submit returns, either a
+        // lower-priority victim is parked or this submit itself was
+        // (when the new app is the lowest-priority one)
+        if self.cfg.capacity_slots > 0 {
+            let moved = self.scheduler_round();
+            if !moved.is_empty() {
+                log::info!("submit {id}: scheduler rebalanced {moved:?}");
+            }
+        }
         Ok(id)
     }
 
@@ -402,6 +459,24 @@ impl CacsService {
                 ("pool_mailbox_max", stats.mailbox_max.into()),
             ]),
         );
+        // oversubscription status: slot occupancy, parked-app count and
+        // (for a parked app) the cut it will resume from, plus the tier
+        // placement gauges when a TieredStore backs the service
+        if self.cfg.capacity_slots > 0 || self.tiers.is_some() {
+            let (occupied, _, parked) = self.scheduler_snapshot();
+            let mut s = Json::object([
+                ("capacity_slots", self.cfg.capacity_slots.into()),
+                ("occupied", occupied.into()),
+                ("swapped", parked.len().into()),
+            ]);
+            if let Some(seq) = self.parked_seq(id) {
+                s.set("parked_seq", seq.into());
+            }
+            if let Some(t) = &self.tiers {
+                s.set("tiers", t.stats().to_json());
+            }
+            j.set("scheduler", s);
+        }
         Ok(j)
     }
 
@@ -780,10 +855,14 @@ impl CacsService {
             rec.lifecycle.to(now, AppState::Terminating);
             rec.lifecycle.to(now, AppState::Terminated);
             inner.db.remove(id);
+            inner.swapped.remove(&id); // a parked app's bookkeeping goes too
             (inner.handles.remove(&id), inner.monitors.remove(&id))
         };
         drop(handle); // joins the app thread when last ref (releases the "VMs")
         drop(monitor); // shuts the app's monitoring tree down
+        // with a TieredStore underneath, list/delete route through the
+        // tier metadata — a swapped app's cold-parked chain is purged
+        // by the same call that empties a running app's hot images
         let _ = ckptsvc::delete_all(self.store.as_ref(), &id.to_string());
         Ok(())
     }
@@ -1129,6 +1208,189 @@ impl CacsService {
         let inner = self.shard(id);
         inner.handles.get(&id).context("unknown coordinator")?.resume();
         Ok(())
+    }
+
+    // --- §2.2 use case 4: oversubscription swap-out / swap-in --------
+
+    /// Swap a RUNNING app out: checkpoint it, release its actor slot
+    /// and park the image chain (demoted to the cold tier when the
+    /// service runs over a [`crate::storage::tiered::TieredStore`]).
+    /// The app lands in SWAPPED_OUT with progress frozen at the cut;
+    /// [`Self::swap_in`] — or the scheduler, once capacity frees up —
+    /// resumes it at exactly that iteration.  Returns the parked seq.
+    pub fn swap_out(&self, id: AppId) -> Result<u64> {
+        {
+            let inner = self.shard(id);
+            let rec = inner.db.get(id).context("unknown coordinator")?;
+            let state = rec.lifecycle.state();
+            anyhow::ensure!(state.can_swap_out(), "cannot swap out in state {state}");
+        }
+        // the cut reuses the full checkpoint pipeline (seq reservation,
+        // delta chains, Young/Daly accounting) — and its CHECKPOINTING
+        // gate, so no user checkpoint can race the swap cut
+        let ck = self.checkpoint(id)?;
+        // park: transition + unpublish the handle under the shard lock
+        let handle = {
+            let now = self.now();
+            let mut inner = self.shard(id);
+            let inner = &mut *inner;
+            let rec = inner
+                .db
+                .get_mut(id)
+                .context("coordinator deleted during swap-out")?;
+            let state = rec.lifecycle.state();
+            // a user operation may have claimed the app between the cut
+            // committing and this lock: the cut stays as an ordinary
+            // checkpoint and the swap is refused
+            anyhow::ensure!(state.can_swap_out(), "swap-out raced: app moved to {state}");
+            rec.lifecycle.to(now, AppState::SwappedOut);
+            inner.swapped.insert(id, ck.seq);
+            inner.handles.remove(&id)
+        };
+        // release the slot OFF the lock: stop the actor and wait
+        // (bounded) for the worker slot to free — pause would keep the
+        // worker pinned, which is exactly what oversubscription must
+        // not do
+        if let Some(h) = handle {
+            if !h.release_slot() {
+                log::warn!("{id}: swapped-out actor did not release its slot within grace");
+            }
+            drop(h);
+        }
+        // demote the whole delta chain newest-link-first, so the parked
+        // base is never colder than a delta that chains to it
+        if let Some(tiers) = &self.tiers {
+            match self.ckpt_chain(id, ck.seq) {
+                Ok(chain) => {
+                    for c in chain.iter().rev() {
+                        let prefix = format!("{id}/ckpt-{}/", c.seq);
+                        if let Err(e) =
+                            tiers.demote(&prefix, crate::storage::tiered::Tier::Cold)
+                        {
+                            // the park is still valid: reads route via
+                            // the tier metadata wherever the images sit
+                            log::warn!("{id}: demoting {prefix} failed: {e}");
+                        }
+                    }
+                }
+                Err(e) => log::warn!("{id}: swap-out chain walk failed: {e}"),
+            }
+        }
+        self.actors
+            .emit(&id.to_string(), appthread::AppEventKind::SwappedOut { seq: ck.seq });
+        Ok(ck.seq)
+    }
+
+    /// Swap a parked app back in: re-provision a host from the stored
+    /// ASR, promote the parked image chain out of the cold tier
+    /// (oldest-link-first: the rooting full image must be hot before
+    /// the deltas that resolve against it) and restore at exactly the
+    /// parked cut.  Returns the seq the app resumed from.
+    pub fn swap_in(&self, id: AppId) -> Result<u64> {
+        let (asr, seq) = {
+            let now = self.now();
+            let mut inner = self.shard(id);
+            let inner = &mut *inner;
+            let rec = inner.db.get_mut(id).context("unknown coordinator")?;
+            let state = rec.lifecycle.state();
+            anyhow::ensure!(state.can_swap_in(), "cannot swap in from state {state}");
+            let seq = inner
+                .swapped
+                .remove(&id)
+                .context("swapped app has no parked cut")?;
+            rec.lifecycle.to(now, AppState::Restarting);
+            (rec.asr.clone(), seq)
+        };
+        // promote oldest-first; a failed promote is non-fatal — the
+        // TieredStore read path serves (and read-through promotes)
+        // images from whatever tier they are in
+        if let Some(tiers) = &self.tiers {
+            match self.ckpt_chain(id, seq) {
+                Ok(chain) => {
+                    for c in &chain {
+                        let prefix = format!("{id}/ckpt-{}/", c.seq);
+                        if let Err(e) =
+                            tiers.promote(&prefix, crate::storage::tiered::Tier::Hot)
+                        {
+                            log::warn!("{id}: promoting {prefix} failed: {e}");
+                        }
+                    }
+                }
+                Err(e) => log::warn!("{id}: swap-in chain walk failed: {e}"),
+            }
+        }
+        // re-provision + publish, the §6.3 case-1 pattern: spawn
+        // off-lock, re-check the record against a racing DELETE before
+        // publishing the fresh handle
+        let factory = match build_factory(&asr, &self.cfg) {
+            Ok(f) => f,
+            Err(e) => {
+                self.set_error(id);
+                return Err(e);
+            }
+        };
+        let handle = Arc::new(self.actors.spawn(
+            &id.to_string(),
+            factory,
+            self.store.clone(),
+            self.cfg.step_interval,
+            self.cfg.delta.clone(),
+        ));
+        let monitor = {
+            let mut inner = self.shard(id);
+            if inner.db.get(id).is_none() {
+                drop(inner);
+                drop(handle);
+                anyhow::bail!("coordinator deleted during swap-in");
+            }
+            inner.handles.insert(id, handle.clone());
+            inner.monitors.get(&id).cloned()
+        };
+        if let Some(m) = monitor {
+            m.rewire(&handle);
+        }
+        let used = self.restart(id, Some(seq))?;
+        self.actors
+            .emit(&id.to_string(), appthread::AppEventKind::SwappedIn { seq: used });
+        Ok(used)
+    }
+
+    /// The seq a SWAPPED_OUT app was parked at, if any.
+    pub fn parked_seq(&self, id: AppId) -> Option<u64> {
+        self.shard(id).swapped.get(&id).copied()
+    }
+
+    /// The configured slot capacity (0 = unlimited, scheduler off).
+    pub(crate) fn capacity_slots(&self) -> usize {
+        self.cfg.capacity_slots
+    }
+
+    /// Scheduler snapshot: (occupied slots, RUNNING candidates, parked
+    /// candidates).  Occupancy is the number of live actor handles —
+    /// the ground truth for "holds a slot": paused apps keep theirs,
+    /// swapped apps gave theirs up.
+    pub(crate) fn scheduler_snapshot(
+        &self,
+    ) -> (usize, Vec<scheduler::Candidate>, Vec<scheduler::Candidate>) {
+        let mut occupied = 0usize;
+        let mut running = Vec::new();
+        let mut parked = Vec::new();
+        for i in 0..self.shards.len() {
+            let inner = self.shard_at(i);
+            for rec in inner.db.iter() {
+                let has_handle = inner.handles.contains_key(&rec.id);
+                if has_handle {
+                    occupied += 1;
+                }
+                let c = scheduler::Candidate { id: rec.id, priority: rec.asr.priority };
+                match rec.lifecycle.state() {
+                    AppState::Running if has_handle => running.push(c),
+                    AppState::SwappedOut => parked.push(c),
+                    _ => {}
+                }
+            }
+        }
+        (occupied, running, parked)
     }
 
     /// App ids currently registered (all shards, ascending).
@@ -1526,6 +1788,9 @@ impl CacsService {
                 }
             })
             .expect("spawn checkpoint ticker thread");
+        if self.cfg.capacity_slots > 0 {
+            self.start_scheduler(period);
+        }
     }
 }
 

@@ -148,6 +148,9 @@ pub struct SimAppExt {
     pub app_unhealthy: bool,
     /// Passive-recovery retries consumed while parked in ERROR.
     pub recovery_retries: usize,
+    /// §2.2 use case 4: the cut the app was parked at when a spot
+    /// revocation swapped it out; swap-in restores exactly this cut.
+    pub parked_seq: Option<u64>,
     /// Chaos: while `now < partitioned_until` the monitor cannot reach
     /// any of the app's daemons — a network partition has split the
     /// whole broadcast tree even though the VMs themselves are healthy
@@ -371,6 +374,21 @@ impl SimCacs {
     /// Kill a random server hosting the app's VMs (fault injection).
     pub fn inject_vm_failure(&mut self, app: AppId) {
         self.sim.after(0.0, move |sim, w| vm_failure_now(sim, w, app));
+    }
+
+    /// Spot-revocation warning (§2.2 use case 4): the cloud will
+    /// reclaim the app's VMs in `deadline_s` seconds.  CACS races a
+    /// final cut against the deadline; if it lands in time the app
+    /// parks SWAPPED_OUT with its VMs released, otherwise the VMs die
+    /// mid-cut and recovery restores from the previous image.
+    pub fn inject_spot_revocation(&mut self, app: AppId, deadline_s: f64) {
+        self.sim.after(0.0, move |sim, w| spot_revocation_now(sim, w, app, deadline_s));
+    }
+
+    /// Swap a parked app back in: re-provision a fresh virtual cluster
+    /// and restore the cut it was parked at.
+    pub fn trigger_swap_in(&mut self, app: AppId) {
+        self.sim.after(0.0, move |sim, w| swap_in_now(sim, w, app));
     }
 
     /// Run until no events remain; returns final virtual time.
@@ -629,7 +647,9 @@ fn schedule_periodic_ckpt(sim: &mut Sim<SimWorld>, app: AppId, period: f64) {
                 start_checkpoint(sim, w, app);
                 schedule_periodic_ckpt(sim, app, next);
             }
-            AppState::Checkpointing | AppState::Restarting => {
+            AppState::Checkpointing | AppState::Restarting | AppState::SwappedOut => {
+                // a parked app takes no cuts, but the timer survives the
+                // park so periodic checkpoints resume after swap-in
                 schedule_periodic_ckpt(sim, app, next);
             }
             _ => {} // terminated / error: stop the timer
@@ -643,6 +663,11 @@ fn schedule_heartbeat(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
         let Some(rec) = w.db.get(app) else { return };
         let state = rec.lifecycle.state();
         if !state.is_active() {
+            return;
+        }
+        if state == AppState::SwappedOut {
+            // a parked app has no daemons to probe; the timer dies here
+            // and swap-in re-arms it when the app reaches RUNNING again
             return;
         }
         let n = rec.asr.n_vms;
@@ -1027,6 +1052,128 @@ pub(crate) fn terminate(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
             rec.lifecycle.to(now, AppState::Terminated);
         }
     });
+}
+
+/// §2.2 use case 4 (spot-revocation body): race a final cut against the
+/// revocation deadline.  The app enters CHECKPOINTING for the cut; if
+/// the cut lands inside the deadline [`park_swapped_out`] records it
+/// and parks the app, otherwise [`revoke_vms`] reclaims the VMs mid-cut
+/// and ordinary §6.3 recovery restores from the previous image.
+pub(crate) fn spot_revocation_now(
+    sim: &mut Sim<SimWorld>,
+    w: &mut SimWorld,
+    app: AppId,
+    deadline_s: f64,
+) {
+    let now = sim.now();
+    let Some(rec) = w.db.get(app) else { return };
+    if !rec.lifecycle.state().can_swap_out() {
+        return;
+    }
+    let n = rec.asr.n_vms;
+    let image_bytes = w.image_bytes(app);
+    let rec = w.db.get_mut(app).unwrap();
+    if !rec.lifecycle.to(now, AppState::Checkpointing) {
+        return;
+    }
+    let local = protocol::checkpoint_local(&w.params.dckpt, &mut w.rng, n, image_bytes);
+    let cut = local.total();
+    w.ext.get_mut(&app).unwrap().ckpt_timings.push(CkptTiming {
+        started: now,
+        ..Default::default()
+    });
+    if cut <= deadline_s {
+        sim.after(cut, move |sim, w| park_swapped_out(sim, w, app));
+    } else {
+        // the final cut loses the race: the cloud reclaims the VMs at
+        // the deadline and the unfinished image dies with them
+        sim.after(deadline_s, move |sim, w| revoke_vms(sim, w, app));
+    }
+}
+
+/// The revocation cut landed in time: record it, park the app
+/// SWAPPED_OUT, and release its VMs (a parked app holds no slot).
+fn park_swapped_out(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let image_bytes = w.image_bytes(app);
+    let Some(rec) = w.db.get_mut(app) else { return };
+    if rec.lifecycle.state() != AppState::Checkpointing {
+        return; // a crash beat the cut; recovery owns the app now
+    }
+    let n = rec.asr.n_vms;
+    let seq = rec.next_ckpt_seq;
+    rec.next_ckpt_seq += 1;
+    let skew = w.clock_skew.get(rec.cloud_idx).copied().unwrap_or(0.0);
+    rec.ckpts.push(CkptRecord {
+        id: CkptId(seq),
+        seq,
+        taken_at: now + skew,
+        iteration: 0,
+        total_bytes: (image_bytes * n as f64) as u64,
+        per_proc_bytes: vec![image_bytes as u64; n],
+        base_seq: None,
+        delta_bytes: 0,
+    });
+    // the lifecycle only parks from RUNNING, mirroring the real
+    // service: the cut completes, then the park decision lands
+    rec.lifecycle.to(now, AppState::Running);
+    if !rec.lifecycle.to(now, AppState::SwappedOut) {
+        return;
+    }
+    let vms = std::mem::take(&mut rec.vms);
+    let cloud_idx = rec.cloud_idx;
+    w.clouds[cloud_idx].terminate_vms(now, &vms);
+    if let Some(t) = w.ext.get_mut(&app).and_then(|e| e.ckpt_timings.last_mut()) {
+        t.local_done = now;
+        t.uploaded = now;
+    }
+    w.ext.get_mut(&app).unwrap().parked_seq = Some(seq);
+    w.rec.incr("ckpt.uploads", 1.0);
+    w.rec.incr("apps.swapped_out", 1.0);
+}
+
+/// The revocation cut lost the race: the cloud reclaims the VMs at the
+/// deadline and the app recovers from its previous acknowledged image.
+fn revoke_vms(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get(app) else { return };
+    if rec.lifecycle.state() != AppState::Checkpointing {
+        return;
+    }
+    let cloud_idx = rec.cloud_idx;
+    let vms = rec.vms.clone();
+    w.clouds[cloud_idx].terminate_vms(now, &vms);
+    w.db.get_mut(app).unwrap().vms.clear();
+    recover(sim, w, app);
+}
+
+/// Swap a parked app back in (§2.2 use case 4 body): SWAPPED_OUT →
+/// RESTARTING, re-provision a fresh virtual cluster through the
+/// replacement path, and restore from the parked cut.
+pub(crate) fn swap_in_now(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId) {
+    let now = sim.now();
+    let Some(rec) = w.db.get_mut(app) else { return };
+    if !rec.lifecycle.state().can_swap_in() {
+        return;
+    }
+    if !rec.lifecycle.to(now, AppState::Restarting) {
+        return;
+    }
+    let cloud_idx = rec.cloud_idx;
+    let n_vms = rec.asr.n_vms;
+    let template = rec.asr.template.clone();
+    w.ext.get_mut(&app).unwrap().parked_seq = None;
+    match w.clouds[cloud_idx].request_vms(now, n_vms, &template) {
+        Ok(rsv) => {
+            w.rsv_map.insert((cloud_idx, rsv.0), (app, RsvPurpose::Replacement));
+            schedule_poll(sim, w, cloud_idx);
+        }
+        Err(e) => {
+            log::warn!("{app}: swap-in VMs unavailable: {e}");
+            w.db.get_mut(app).unwrap().lifecycle.to(now, AppState::Error);
+            schedule_recovery_retry(sim, w, app);
+        }
+    }
 }
 
 /// Watch for an app reaching RUNNING, then fire `f` (migration helper).
@@ -1430,6 +1577,53 @@ mod tests {
         cacs.run_until(cacs.sim.now() + 1800.0);
         assert_eq!(cacs.state(app), Some(AppState::Running));
         assert_eq!(cacs.world.db.get(app).unwrap().adaptive.failures, 1);
+    }
+
+    #[test]
+    fn spot_revocation_parks_and_swap_in_restores() {
+        let mut cacs = SimCacs::new(20);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(4));
+        let free_before = cacs.world.clouds[cloud].free_slots(&Default::default());
+        cacs.inject_spot_revocation(app, 60.0);
+        cacs.run_until(cacs.sim.now() + 300.0);
+        assert_eq!(cacs.state(app), Some(AppState::SwappedOut));
+        let rec = cacs.world.db.get(app).unwrap();
+        assert_eq!(rec.ckpts.len(), 1, "the revocation cut must be on record");
+        assert!(rec.vms.is_empty(), "a parked app holds no slot");
+        let seq = cacs.ext(app).unwrap().parked_seq.expect("parked seq recorded");
+        assert_eq!(seq, rec.ckpts.last().unwrap().seq);
+        // the released VMs returned their capacity to the cloud
+        assert_eq!(
+            cacs.world.clouds[cloud].free_slots(&Default::default()),
+            free_before + 4
+        );
+        cacs.trigger_swap_in(app);
+        cacs.run_until(cacs.sim.now() + 3600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        assert_eq!(cacs.world.db.get(app).unwrap().vms.len(), 4);
+        assert!(cacs.ext(app).unwrap().parked_seq.is_none());
+        // the resume went through a full restore download
+        assert_eq!(cacs.ext(app).unwrap().restart_timings.len(), 1);
+    }
+
+    #[test]
+    fn spot_revocation_losing_the_race_recovers_from_prior_cut() {
+        let mut cacs = SimCacs::new(21);
+        let cloud = cacs.add_snooze(24);
+        let app = run_app(&mut cacs, cloud, lu_asr(4));
+        cacs.trigger_checkpoint(app);
+        cacs.run_until(cacs.sim.now() + 600.0);
+        assert_eq!(cacs.world.db.get(app).unwrap().ckpts.len(), 1);
+        // a deadline no cut can meet: the VMs are reclaimed mid-cut and
+        // the app restores from the earlier acknowledged image
+        cacs.inject_spot_revocation(app, 1e-6);
+        cacs.run_until(cacs.sim.now() + 3600.0);
+        assert_eq!(cacs.state(app), Some(AppState::Running));
+        let rec = cacs.world.db.get(app).unwrap();
+        assert_eq!(rec.ckpts.len(), 1, "the lost cut must not be recorded");
+        assert_eq!(rec.vms.len(), 4);
+        assert!(cacs.ext(app).unwrap().parked_seq.is_none());
     }
 
     #[test]

@@ -96,7 +96,13 @@ pub struct Asr {
     /// this submission was cloned from (the migration orchestrator
     /// stamps it on the ASR it submits to the destination CACS).
     pub cloned_from: Option<String>,
+    /// Scheduling priority for the oversubscription scheduler (§2.2
+    /// use case 4): 0 = highest.  Defaults to [`DEFAULT_PRIORITY`].
+    pub priority: u8,
 }
+
+/// Middle-of-the-road priority assigned when an ASR does not say.
+pub const DEFAULT_PRIORITY: u8 = 5;
 
 impl Asr {
     pub fn new(name: &str, workload: WorkloadSpec, n_vms: usize) -> Asr {
@@ -107,11 +113,17 @@ impl Asr {
             template: VmTemplate::default(),
             ckpt_period: None,
             cloned_from: None,
+            priority: DEFAULT_PRIORITY,
         }
     }
 
     pub fn with_period(mut self, secs: f64) -> Asr {
         self.ckpt_period = Some(secs);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> Asr {
+        self.priority = priority;
         self
     }
 
@@ -126,6 +138,7 @@ impl Asr {
         if let Some(src) = &self.cloned_from {
             o.set("cloned_from", src.as_str().into());
         }
+        o.set("priority", (self.priority as u64).into());
         o
     }
 
@@ -136,6 +149,13 @@ impl Asr {
         anyhow::ensure!(n_vms >= 1, "asr: n_vms must be >= 1");
         let ckpt_period = j.get("ckpt_period").as_f64();
         let cloned_from = j.get("cloned_from").as_str().map(str::to_string);
+        let priority = match j.get("priority").as_u64() {
+            Some(p) => {
+                anyhow::ensure!(p <= u8::MAX as u64, "asr: priority must be 0..=255");
+                p as u8
+            }
+            None => DEFAULT_PRIORITY,
+        };
         Ok(Asr {
             name,
             workload,
@@ -143,6 +163,7 @@ impl Asr {
             template: VmTemplate::default(),
             ckpt_period,
             cloned_from,
+            priority,
         })
     }
 }
@@ -307,6 +328,7 @@ impl AppRecord {
         if let Some(dst) = &self.migrated_to {
             j.set("migrated_to", dst.as_str().into());
         }
+        j.set("priority", (self.asr.priority as u64).into());
         j
     }
 }
@@ -322,6 +344,28 @@ mod tests {
         let j = asr.to_json();
         let back = Asr::from_json(&j).unwrap();
         assert_eq!(back, asr);
+    }
+
+    #[test]
+    fn asr_priority_roundtrip() {
+        // explicit priority survives the JSON roundtrip; absent priority
+        // lands on the default; out-of-range is rejected
+        let asr = Asr::new("p0", WorkloadSpec::Dmtcp1 { n: 8 }, 1).with_priority(0);
+        let j = asr.to_json();
+        assert_eq!(j.get("priority").as_u64(), Some(0));
+        assert_eq!(Asr::from_json(&j).unwrap().priority, 0);
+
+        let j = crate::util::json::parse(
+            r#"{"name":"x","workload":{"kind":"dmtcp1"},"n_vms":1}"#,
+        )
+        .unwrap();
+        assert_eq!(Asr::from_json(&j).unwrap().priority, DEFAULT_PRIORITY);
+
+        let j = crate::util::json::parse(
+            r#"{"name":"x","workload":{"kind":"dmtcp1"},"n_vms":1,"priority":300}"#,
+        )
+        .unwrap();
+        assert!(Asr::from_json(&j).is_err());
     }
 
     #[test]

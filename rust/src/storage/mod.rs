@@ -26,6 +26,7 @@ pub mod fault;
 pub mod local;
 pub mod mem;
 pub mod sim;
+pub mod tiered;
 
 use std::fmt;
 use std::io::Write;

@@ -1,0 +1,504 @@
+//! Tiered checkpoint storage: hot → warm → cold placement (§2.2 use
+//! case 4 / ROADMAP oversubscription item).
+//!
+//! [`TieredStore`] composes three [`ObjectStore`] backends — hot (fast,
+//! scarce: typically [`crate::storage::mem::MemStore`]), warm (local
+//! disk), cold (anything, e.g. a second `LocalStore` or a
+//! [`crate::storage::fault::FaultStore`]-wrapped remote stand-in) — and
+//! keeps per-key tier metadata so every key lives in exactly one
+//! backend at a time.  New objects land hot; the oversubscription
+//! scheduler parks a swapped-out app's image chain in the cold tier
+//! with [`TieredStore::demote`] and brings it back with
+//! [`TieredStore::promote`].
+//!
+//! **Chain-unit placement rule.**  A delta chain is only restorable if
+//! its base is at least as warm as its deltas — a demoted base under
+//! hot deltas would mean the cheap-looking links are unreadable without
+//! a cold fetch anyway, and a retention pass could drop a cold base
+//! while hot deltas still chain to it.  The store itself is
+//! chain-agnostic (chains are coordinator metadata), so the *callers*
+//! keep the rule by ordering per-cut moves: demote walks the chain
+//! **newest-link-first** (deltas before their base), promote walks
+//! **oldest-first** (base before its deltas).  Either way a crash
+//! mid-walk leaves the base no colder than any surviving delta.
+//! `coordinator/scheduler.rs` drives both walks off `ckpt_chain`.
+//!
+//! **Torn moves.**  A move copies to the destination tier, then deletes
+//! the source copy, then flips the metadata — in that order.  A failed
+//! destination write (see the `FaultStore`-backed torn-demote test)
+//! leaves the source copy and metadata untouched: readers keep working
+//! and the move can simply be retried.  A partial destination object is
+//! best-effort deleted and is unreachable regardless, because reads
+//! route through the metadata.
+
+use crate::metrics::Recorder;
+use crate::storage::{validate_key, ObjectStore, StoreError};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Placement tier, warmest first.  `Hot < Warm < Cold` so "colder"
+/// compares with `>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    Hot,
+    Warm,
+    Cold,
+}
+
+impl Tier {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::Hot => "hot",
+            Tier::Warm => "warm",
+            Tier::Cold => "cold",
+        }
+    }
+}
+
+/// Point-in-time placement census, one (objects, bytes) pair per tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierStats {
+    pub hot_objects: usize,
+    pub hot_bytes: u64,
+    pub warm_objects: usize,
+    pub warm_bytes: u64,
+    pub cold_objects: usize,
+    pub cold_bytes: u64,
+}
+
+impl TierStats {
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            (
+                "hot",
+                Json::object([
+                    ("objects", self.hot_objects.into()),
+                    ("bytes", self.hot_bytes.into()),
+                ]),
+            ),
+            (
+                "warm",
+                Json::object([
+                    ("objects", self.warm_objects.into()),
+                    ("bytes", self.warm_bytes.into()),
+                ]),
+            ),
+            (
+                "cold",
+                Json::object([
+                    ("objects", self.cold_objects.into()),
+                    ("bytes", self.cold_bytes.into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Per-key record: which backend owns the bytes and how many there are
+/// (tracked here so a census never needs backend I/O).
+#[derive(Debug, Clone, Copy)]
+struct Placement {
+    tier: Tier,
+    bytes: u64,
+}
+
+/// An [`ObjectStore`] composing hot/warm/cold backends with per-key
+/// placement metadata.  See the module docs for the placement and
+/// torn-move rules.
+pub struct TieredStore {
+    hot: Arc<dyn ObjectStore>,
+    warm: Arc<dyn ObjectStore>,
+    cold: Arc<dyn ObjectStore>,
+    placement: Mutex<BTreeMap<String, Placement>>,
+}
+
+impl TieredStore {
+    pub fn new(
+        hot: Arc<dyn ObjectStore>,
+        warm: Arc<dyn ObjectStore>,
+        cold: Arc<dyn ObjectStore>,
+    ) -> TieredStore {
+        TieredStore { hot, warm, cold, placement: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Three in-memory backends — the test/sim configuration.
+    pub fn in_memory() -> TieredStore {
+        use crate::storage::mem::MemStore;
+        TieredStore::new(
+            Arc::new(MemStore::new()),
+            Arc::new(MemStore::new()),
+            Arc::new(MemStore::new()),
+        )
+    }
+
+    fn backend(&self, tier: Tier) -> &dyn ObjectStore {
+        match tier {
+            Tier::Hot => self.hot.as_ref(),
+            Tier::Warm => self.warm.as_ref(),
+            Tier::Cold => self.cold.as_ref(),
+        }
+    }
+
+    fn lock_placement(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Placement>> {
+        self.placement.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Current tier of `key`, if stored.
+    pub fn tier_of(&self, key: &str) -> Option<Tier> {
+        self.lock_placement().get(key).map(|p| p.tier)
+    }
+
+    /// Move one key between backends: copy to `to`, delete the source
+    /// copy, then flip the metadata.  On a failed destination write the
+    /// source copy and metadata are untouched (retryable); a partial
+    /// destination object is best-effort removed.
+    fn move_key(&self, key: &str, from: Tier, to: Tier) -> Result<(), StoreError> {
+        let data = self.backend(from).get(key)?;
+        if let Err(e) = self.backend(to).put(key, &data) {
+            let _ = self.backend(to).delete(key); // sweep a torn partial
+            return Err(e);
+        }
+        // source copy is now redundant; a failed delete leaves garbage
+        // in the old tier but reads stay correct (metadata routes)
+        let _ = self.backend(from).delete(key);
+        let mut map = self.lock_placement();
+        if let Some(p) = map.get_mut(key).filter(|p| p.tier == from) {
+            p.tier = to;
+            p.bytes = data.len() as u64;
+        }
+        Ok(())
+    }
+
+    /// Move every key under `prefix` that currently sits warmer than
+    /// `to` down to `to`.  Returns how many keys moved; a missing
+    /// prefix (or one already at/below `to`) is a no-op `Ok(0)`.
+    /// Callers demote a delta chain newest-link-first (see module docs)
+    /// so a mid-walk failure never strands a base colder than a delta;
+    /// the error from the first failed move is returned and the keys
+    /// already moved stay moved (the walk is retryable).
+    pub fn demote(&self, prefix: &str, to: Tier) -> Result<usize, StoreError> {
+        let victims: Vec<(String, Tier)> = {
+            let map = self.lock_placement();
+            map.range(prefix.to_string()..)
+                .take_while(|(k, _)| k.starts_with(prefix))
+                .filter(|(_, p)| p.tier < to)
+                .map(|(k, p)| (k.clone(), p.tier))
+                .collect()
+        };
+        let mut moved = 0usize;
+        for (key, from) in victims {
+            self.move_key(&key, from, to)?;
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Move every key under `prefix` that currently sits colder than
+    /// `to` up to `to`.  Same contract as [`demote`](Self::demote);
+    /// callers promote a chain oldest-first (base before deltas).
+    pub fn promote(&self, prefix: &str, to: Tier) -> Result<usize, StoreError> {
+        let victims: Vec<(String, Tier)> = {
+            let map = self.lock_placement();
+            map.range(prefix.to_string()..)
+                .take_while(|(k, _)| k.starts_with(prefix))
+                .filter(|(_, p)| p.tier > to)
+                .map(|(k, p)| (k.clone(), p.tier))
+                .collect()
+        };
+        let mut moved = 0usize;
+        for (key, from) in victims {
+            self.move_key(&key, from, to)?;
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Placement census from metadata alone (no backend I/O).
+    pub fn stats(&self) -> TierStats {
+        let map = self.lock_placement();
+        let mut s = TierStats::default();
+        for p in map.values() {
+            match p.tier {
+                Tier::Hot => {
+                    s.hot_objects += 1;
+                    s.hot_bytes += p.bytes;
+                }
+                Tier::Warm => {
+                    s.warm_objects += 1;
+                    s.warm_bytes += p.bytes;
+                }
+                Tier::Cold => {
+                    s.cold_objects += 1;
+                    s.cold_bytes += p.bytes;
+                }
+            }
+        }
+        s
+    }
+
+    /// Export the census as `tier.<name>.objects` / `tier.<name>.bytes`
+    /// gauges.
+    pub fn record_gauges(&self, rec: &mut Recorder) {
+        let s = self.stats();
+        rec.set_gauge("tier.hot.objects", s.hot_objects as f64);
+        rec.set_gauge("tier.hot.bytes", s.hot_bytes as f64);
+        rec.set_gauge("tier.warm.objects", s.warm_objects as f64);
+        rec.set_gauge("tier.warm.bytes", s.warm_bytes as f64);
+        rec.set_gauge("tier.cold.objects", s.cold_objects as f64);
+        rec.set_gauge("tier.cold.bytes", s.cold_bytes as f64);
+    }
+}
+
+impl ObjectStore for TieredStore {
+    /// New bytes always land hot; an overwrite of a demoted key retires
+    /// the stale colder copy.
+    fn put(&self, key: &str, data: &[u8]) -> Result<(), StoreError> {
+        validate_key(key)?;
+        self.hot.put(key, data)?;
+        let old = {
+            let mut map = self.lock_placement();
+            let old = map.get(key).map(|p| p.tier);
+            map.insert(key.to_string(), Placement { tier: Tier::Hot, bytes: data.len() as u64 });
+            old
+        };
+        if let Some(t) = old.filter(|&t| t != Tier::Hot) {
+            let _ = self.backend(t).delete(key); // stale colder copy
+        }
+        Ok(())
+    }
+
+    /// Reads route through the metadata and **promote on access**: a
+    /// warm/cold hit is copied up to the hot tier after the read
+    /// (read-through promotion).  Chain restores read oldest-link-first,
+    /// so the base is promoted before any of its deltas and the
+    /// chain-unit rule holds throughout.
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+        let tier = self
+            .tier_of(key)
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))?;
+        let data = self.backend(tier).get(key)?;
+        // best-effort read-through: a failed promotion must not fail
+        // the read
+        if tier != Tier::Hot && self.hot.put(key, &data).is_ok() {
+            let _ = self.backend(tier).delete(key);
+            let mut map = self.lock_placement();
+            if let Some(p) = map.get_mut(key).filter(|p| p.tier == tier) {
+                p.tier = Tier::Hot;
+            }
+        }
+        Ok(data)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), StoreError> {
+        let tier = self
+            .tier_of(key)
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))?;
+        self.backend(tier).delete(key)?;
+        self.lock_placement().remove(key);
+        Ok(())
+    }
+
+    /// Listing is metadata-only: one sorted pass, no backend I/O, and
+    /// it spans all tiers (a parked chain stays visible to retention
+    /// and DELETE).
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        let map = self.lock_placement();
+        Ok(map
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect())
+    }
+
+    fn size(&self, key: &str) -> Result<u64, StoreError> {
+        self.lock_placement()
+            .get(key)
+            .map(|p| p.bytes)
+            .ok_or_else(|| StoreError::NotFound(key.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::fault::FaultStore;
+    use crate::storage::mem::MemStore;
+
+    fn chain_keys() -> Vec<String> {
+        // one app, one delta chain: full base at seq 1, deltas at 2..=3,
+        // two procs each — the shape the scheduler demotes as a unit
+        let mut keys = vec![];
+        for seq in 1..=3u64 {
+            for proc in 0..2 {
+                keys.push(format!("app-1/ckpt-{seq}/proc-{proc}.img"));
+            }
+        }
+        keys
+    }
+
+    #[test]
+    fn put_lands_hot_and_routes_reads() {
+        let ts = TieredStore::in_memory();
+        ts.put("a/k1", b"one").unwrap();
+        assert_eq!(ts.tier_of("a/k1"), Some(Tier::Hot));
+        assert_eq!(ts.get("a/k1").unwrap(), b"one");
+        assert_eq!(ts.size("a/k1").unwrap(), 3);
+        assert!(ts.exists("a/k1"));
+        assert!(matches!(ts.get("a/missing"), Err(StoreError::NotFound(_))));
+    }
+
+    #[test]
+    fn chain_demotes_as_a_unit() {
+        let ts = TieredStore::in_memory();
+        for k in chain_keys() {
+            ts.put(&k, b"img-bytes").unwrap();
+        }
+        ts.put("app-2/ckpt-1/proc-0.img", b"other-app").unwrap();
+        // scheduler walks cuts newest-first; per-cut prefixes arrive in
+        // that order but the whole app prefix works too
+        let moved = ts.demote("app-1/", Tier::Cold).unwrap();
+        assert_eq!(moved, 6, "every link of the chain moved");
+        for k in chain_keys() {
+            assert_eq!(ts.tier_of(&k), Some(Tier::Cold), "{k}");
+        }
+        // the unrelated app stayed hot
+        assert_eq!(ts.tier_of("app-2/ckpt-1/proc-0.img"), Some(Tier::Hot));
+        // list spans tiers: the parked chain is still fully visible
+        assert_eq!(ts.list("app-1/").unwrap().len(), 6);
+        // a second demote is a no-op, not an error
+        assert_eq!(ts.demote("app-1/", Tier::Cold).unwrap(), 0);
+    }
+
+    #[test]
+    fn promote_brings_the_chain_back() {
+        let ts = TieredStore::in_memory();
+        for k in chain_keys() {
+            ts.put(&k, b"img-bytes").unwrap();
+        }
+        ts.demote("app-1/", Tier::Cold).unwrap();
+        let moved = ts.promote("app-1/", Tier::Hot).unwrap();
+        assert_eq!(moved, 6);
+        for k in chain_keys() {
+            assert_eq!(ts.tier_of(&k), Some(Tier::Hot), "{k}");
+            assert_eq!(ts.get(&k).unwrap(), b"img-bytes");
+        }
+        assert_eq!(ts.promote("app-1/", Tier::Hot).unwrap(), 0);
+    }
+
+    #[test]
+    fn demote_of_missing_prefix_is_a_noop() {
+        let ts = TieredStore::in_memory();
+        assert_eq!(ts.demote("never-seen/", Tier::Cold).unwrap(), 0);
+        assert_eq!(ts.promote("never-seen/", Tier::Hot).unwrap(), 0);
+    }
+
+    #[test]
+    fn read_through_promotion() {
+        let ts = TieredStore::in_memory();
+        ts.put("a/k", b"payload").unwrap();
+        ts.demote("a/", Tier::Cold).unwrap();
+        assert_eq!(ts.tier_of("a/k"), Some(Tier::Cold));
+        // the read itself promotes
+        assert_eq!(ts.get("a/k").unwrap(), b"payload");
+        assert_eq!(ts.tier_of("a/k"), Some(Tier::Hot));
+        // and the bytes really moved backends (not duplicated)
+        let again = ts.get("a/k").unwrap();
+        assert_eq!(again, b"payload");
+        let s = ts.stats();
+        assert_eq!((s.hot_objects, s.warm_objects, s.cold_objects), (1, 0, 0));
+    }
+
+    #[test]
+    fn overwrite_of_demoted_key_retires_cold_copy() {
+        let cold = Arc::new(MemStore::new());
+        let ts = TieredStore::new(
+            Arc::new(MemStore::new()),
+            Arc::new(MemStore::new()),
+            cold.clone(),
+        );
+        ts.put("a/k", b"v1").unwrap();
+        ts.demote("a/", Tier::Cold).unwrap();
+        assert_eq!(cold.object_count(), 1);
+        ts.put("a/k", b"v2-longer").unwrap();
+        assert_eq!(ts.tier_of("a/k"), Some(Tier::Hot));
+        assert_eq!(ts.get("a/k").unwrap(), b"v2-longer");
+        assert_eq!(cold.object_count(), 0, "stale cold copy retired");
+    }
+
+    #[test]
+    fn delete_routes_to_owning_tier() {
+        let ts = TieredStore::in_memory();
+        ts.put("a/k1", b"one").unwrap();
+        ts.put("a/k2", b"two").unwrap();
+        ts.demote("a/k1", Tier::Cold).unwrap();
+        ts.delete("a/k1").unwrap();
+        assert!(!ts.exists("a/k1"));
+        assert!(matches!(ts.delete("a/k1"), Err(StoreError::NotFound(_))));
+        // delete_prefix spans tiers
+        ts.put("a/k3", b"three").unwrap();
+        ts.demote("a/k3", Tier::Warm).unwrap();
+        assert_eq!(ts.delete_prefix("a/").unwrap(), 2);
+        assert!(ts.list("a/").unwrap().is_empty());
+    }
+
+    #[test]
+    fn torn_demote_leaves_source_readable_and_is_retryable() {
+        // cold tier wrapped in a FaultStore with torn writes: the copy
+        // into cold commits a partial object then errors.  The demote
+        // must fail without losing the warm/hot copy, and a retry after
+        // heal() must succeed.
+        let cold = Arc::new(FaultStore::wrapping(MemStore::new(), 0xC0FFEE).with_torn_writes());
+        let ts = TieredStore::new(
+            Arc::new(MemStore::new()),
+            Arc::new(MemStore::new()),
+            cold.clone(),
+        );
+        ts.put("app-1/ckpt-1/proc-0.img", b"base-image-bytes").unwrap();
+        let err = ts.demote("app-1/", Tier::Cold).unwrap_err();
+        assert!(err.to_string().contains("injected store failure"), "{err}");
+        // metadata still points at the hot copy; reads keep working
+        assert_eq!(ts.tier_of("app-1/ckpt-1/proc-0.img"), Some(Tier::Hot));
+        assert_eq!(ts.get("app-1/ckpt-1/proc-0.img").unwrap(), b"base-image-bytes");
+        // retry after the cold tier heals
+        cold.heal();
+        assert_eq!(ts.demote("app-1/", Tier::Cold).unwrap(), 1);
+        assert_eq!(ts.tier_of("app-1/ckpt-1/proc-0.img"), Some(Tier::Cold));
+        assert_eq!(ts.get("app-1/ckpt-1/proc-0.img").unwrap(), b"base-image-bytes");
+    }
+
+    #[test]
+    fn stats_and_gauges_track_placement() {
+        let ts = TieredStore::in_memory();
+        ts.put("a/k1", b"12345").unwrap();
+        ts.put("a/k2", b"123").unwrap();
+        ts.put("b/k1", b"12").unwrap();
+        ts.demote("a/k2", Tier::Warm).unwrap();
+        ts.demote("b/", Tier::Cold).unwrap();
+        let s = ts.stats();
+        assert_eq!((s.hot_objects, s.warm_objects, s.cold_objects), (1, 1, 1));
+        assert_eq!((s.hot_bytes, s.warm_bytes, s.cold_bytes), (5, 3, 2));
+        let mut rec = Recorder::new();
+        ts.record_gauges(&mut rec);
+        assert_eq!(rec.gauge("tier.hot.objects"), 1.0);
+        assert_eq!(rec.gauge("tier.warm.bytes"), 3.0);
+        assert_eq!(rec.gauge("tier.cold.objects"), 1.0);
+        let j = s.to_json();
+        assert_eq!(j.get("cold").get("bytes").as_u64(), Some(2));
+    }
+
+    #[test]
+    fn streaming_defaults_route_through_tiers() {
+        use std::io::Write;
+        let ts = TieredStore::in_memory();
+        let mut w = ts.put_writer("s/k").unwrap();
+        w.write_all(b"streamed").unwrap();
+        w.finish().unwrap();
+        assert_eq!(ts.tier_of("s/k"), Some(Tier::Hot));
+        ts.demote("s/", Tier::Warm).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(ts.get_into("s/k", &mut out).unwrap(), 8);
+        assert_eq!(out, b"streamed");
+        assert_eq!(ts.tier_of("s/k"), Some(Tier::Hot), "get_into promotes too");
+    }
+}
