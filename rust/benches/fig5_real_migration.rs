@@ -3,24 +3,41 @@
 //!
 //! Two live CACS instances with distinct in-memory stores run on
 //! loopback ("CACS-Snooze" → "CACS-OpenStack" in the paper's §7.3.2
-//! scenario).  N applications are submitted to the source, run to a
-//! few iterations, and migrated one call each; the bench reports the
-//! per-application migration time (quiesce + checkpoint + clone +
-//! streamed image transfer + clone restart + source teardown) and the
-//! aggregate streamed bytes/s.
+//! scenario).  Three scenarios run back to back:
+//!
+//! 1. **push** — N applications migrate with the default streamed-push
+//!    transfer (the paper's §7.3.2 flow).
+//! 2. **pull over a lossy link** — a second fleet with larger images
+//!    migrates in `{"mode":"pull"}` through a [`FlakyProxy`] that
+//!    severs the connection every 8 MB of download traffic; the
+//!    destination's resumable range fetches must complete anyway, with
+//!    re-transfer bounded well under 15% of the image bytes.
+//! 3. **shared-base dedup** — two ranks whose images share 90% of their
+//!    chunks (plus realistic zero pages) pull through the
+//!    content-addressed chunk index; shared chunks cross the wire once
+//!    and the dedup ratio must reach ≥ 2x.
+//!
+//! Every row reports `retransmitted_bytes` and `dedup_ratio` (push
+//! rows: 0 and 1.0 — push restarts whole images and has no chunk
+//! index on the send path).
 //!
 //!   cargo bench --bench fig5_real_migration -- [--apps 4]
-//!       [--floats 262144] [--json BENCH_migration.json]
+//!       [--floats 262144] [--lossy-apps 2] [--lossy-floats 2097152]
+//!       [--json BENCH_migration.json]
 
 use cacs::coordinator::rest;
 use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::dckpt::delta::{chunk_digest, DEFAULT_CHUNK_SIZE};
 use cacs::storage::mem::MemStore;
 use cacs::util::args::Args;
 use cacs::util::benchkit::{fmt_bytes, fmt_secs, Table};
-use cacs::util::http::{Client, Server};
+use cacs::util::flaky::FlakyProxy;
+use cacs::util::http::{ranged_response, Client, Handler, Request, Response, Server};
 use cacs::util::json::Json;
+use cacs::util::rng::Rng;
+use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn start_cacs(name: &str) -> (Server, Client) {
     let svc = CacsService::new(
@@ -35,6 +52,20 @@ fn start_cacs(name: &str) -> (Server, Client) {
     let client = Client::new(&server.addr().to_string());
     println!("# {name}: http://{}", server.addr());
     (server, client)
+}
+
+fn submit_dmtcp1(client: &Client, name: &str, floats: usize) -> String {
+    let asr = Json::object([
+        ("name", name.into()),
+        (
+            "workload",
+            Json::object([("kind", "dmtcp1".into()), ("n", floats.into())]),
+        ),
+        ("n_vms", 1u64.into()),
+    ]);
+    let resp = client.post("/coordinators", &asr).expect("submit");
+    assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+    resp.json().unwrap().get("id").as_str().unwrap().to_string()
 }
 
 fn wait_iter(client: &Client, id: &str, min: u64) {
@@ -56,37 +87,69 @@ fn wait_iter(client: &Client, id: &str, min: u64) {
     panic!("{id} never reached RUNNING at iteration {min}");
 }
 
+/// One table + JSON row per transfer; retrans/dedup ride on every row.
+#[allow(clippy::too_many_arguments)]
+fn record(
+    t: &mut Table,
+    rows: &mut Vec<Json>,
+    path: &str,
+    work: &str,
+    images: usize,
+    bytes: u64,
+    secs: f64,
+    retrans: u64,
+    dedup: f64,
+) {
+    t.row([
+        work.to_string(),
+        images.to_string(),
+        fmt_bytes(bytes as f64),
+        fmt_secs(secs),
+        format!("{}/s", fmt_bytes(bytes as f64 / secs)),
+        fmt_bytes(retrans as f64),
+        format!("{dedup:.2}x"),
+    ]);
+    rows.push(Json::object([
+        ("path", path.into()),
+        ("work", work.into()),
+        ("time_s", secs.into()),
+        ("throughput", (bytes as f64 / secs).into()),
+        ("unit", "B/s".into()),
+        ("retransmitted_bytes", retrans.into()),
+        ("dedup_ratio", dedup.into()),
+    ]));
+}
+
+fn rand_chunk(rng: &mut Rng) -> Vec<u8> {
+    let mut out = Vec::with_capacity(DEFAULT_CHUNK_SIZE);
+    while out.len() < DEFAULT_CHUNK_SIZE {
+        out.extend(rng.next_u64().to_le_bytes());
+    }
+    out
+}
+
 fn main() {
     let args = Args::from_env();
     let n_apps = args.usize_or("apps", 4);
     let floats = args.usize_or("floats", 1 << 18); // ~1 MiB images
+    let lossy_apps = args.usize_or("lossy-apps", 2);
+    let lossy_floats = args.usize_or("lossy-floats", 1 << 21); // ~8 MiB images
 
     println!("# Fig 5 (real mode): one-call cross-CACS migration\n");
-    let (_src_server, src) = start_cacs("CACS-Snooze (source)");
+    let (src_server, src) = start_cacs("CACS-Snooze (source)");
     let (_dst_server, dst) = start_cacs("CACS-OpenStack (destination)");
 
-    // submit + warm up the source fleet
+    let mut t = Table::new(["app", "images", "bytes", "time", "throughput", "retrans", "dedup"]);
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- scenario 1: streamed push (the paper's §7.3.2 flow) ---------
     let mut apps = Vec::with_capacity(n_apps);
     for k in 0..n_apps {
-        let asr = Json::object([
-            ("name", format!("dmtcp1-{k}").into()),
-            (
-                "workload",
-                Json::object([("kind", "dmtcp1".into()), ("n", floats.into())]),
-            ),
-            ("n_vms", 1u64.into()),
-        ]);
-        let resp = src.post("/coordinators", &asr).expect("submit");
-        assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
-        apps.push(resp.json().unwrap().get("id").as_str().unwrap().to_string());
+        apps.push(submit_dmtcp1(&src, &format!("dmtcp1-{k}"), floats));
     }
     for id in &apps {
         wait_iter(&src, id, 3);
     }
-
-    // migrate each app with one call and collect the service's report
-    let mut t = Table::new(["app", "images", "bytes", "time", "throughput"]);
-    let mut rows: Vec<Json> = Vec::new();
     let (mut total_bytes, mut total_time) = (0u64, 0f64);
     for id in &apps {
         let resp = src
@@ -95,61 +158,216 @@ fn main() {
                 &Json::object([("dst", dst.base().into())]),
             )
             .expect("migrate call");
-        assert_eq!(
-            resp.status,
-            200,
-            "migrate {id}: {}",
-            String::from_utf8_lossy(&resp.body)
-        );
+        assert_eq!(resp.status, 200, "migrate {id}: {}", String::from_utf8_lossy(&resp.body));
         let rep = resp.json().unwrap();
         let bytes = rep.get("bytes_moved").as_u64().unwrap();
         let secs = rep.get("duration_s").as_f64().unwrap();
         let images = rep.get("per_proc_bytes").as_arr().unwrap().len();
         total_bytes += bytes;
         total_time += secs;
-        t.row([
-            id.clone(),
-            images.to_string(),
-            fmt_bytes(bytes as f64),
-            fmt_secs(secs),
-            format!("{}/s", fmt_bytes(bytes as f64 / secs)),
-        ]);
-        rows.push(Json::object([
-            ("path", "migrate".into()),
-            ("work", rep.get("src").as_str().unwrap_or(id.as_str()).into()),
-            ("time_s", secs.into()),
-            ("throughput", (bytes as f64 / secs).into()),
-            ("unit", "B/s".into()),
-        ]));
+        record(
+            &mut t,
+            &mut rows,
+            "migrate",
+            id,
+            images,
+            bytes,
+            secs,
+            rep.get("retransmitted_bytes").as_u64().unwrap_or(0),
+            rep.get("dedup_ratio").as_f64().unwrap_or(1.0),
+        );
     }
     let agg = total_bytes as f64 / total_time;
-    t.row([
-        "TOTAL".into(),
-        n_apps.to_string(),
-        fmt_bytes(total_bytes as f64),
-        fmt_secs(total_time),
-        format!("{}/s", fmt_bytes(agg)),
-    ]);
-    rows.push(Json::object([
-        ("path", "migrate (aggregate)".into()),
-        ("work", format!("{n_apps} apps").into()),
-        ("time_s", total_time.into()),
-        ("throughput", agg.into()),
-        ("unit", "B/s".into()),
-    ]));
-    t.print();
+    record(
+        &mut t,
+        &mut rows,
+        "migrate (aggregate)",
+        &format!("{n_apps} apps"),
+        n_apps,
+        total_bytes,
+        total_time,
+        0,
+        1.0,
+    );
+
+    // --- scenario 2: pull mode over a link dropping every 8 MB -------
+    let px = FlakyProxy::start(&src_server.addr().to_string(), 8 * 1024 * 1024)
+        .expect("start flaky proxy");
+    let mut lossy = Vec::with_capacity(lossy_apps);
+    for k in 0..lossy_apps {
+        lossy.push(submit_dmtcp1(&src, &format!("wan-{k}"), lossy_floats));
+    }
+    for id in &lossy {
+        wait_iter(&src, id, 3);
+    }
+    let (mut wan_img, mut wan_bytes, mut wan_retrans, mut wan_time) = (0u64, 0u64, 0u64, 0f64);
+    for (k, id) in lossy.iter().enumerate() {
+        let body = Json::object([
+            ("dst", dst.base().into()),
+            ("mode", "pull".into()),
+            ("pull_from", px.addr().to_string().into()),
+            ("seed", (k as u64).into()),
+            (
+                "retry",
+                Json::object([
+                    ("max_attempts", 10u64.into()),
+                    ("base_backoff_ms", 5u64.into()),
+                    ("max_backoff_ms", 50u64.into()),
+                ]),
+            ),
+        ]);
+        let resp = src
+            .post(&format!("/coordinators/{id}/migrate"), &body)
+            .expect("pull-mode migrate call");
+        assert_eq!(resp.status, 200, "pull {id}: {}", String::from_utf8_lossy(&resp.body));
+        let rep = resp.json().unwrap();
+        let bytes = rep.get("bytes_moved").as_u64().unwrap();
+        let secs = rep.get("duration_s").as_f64().unwrap();
+        let retrans = rep.get("retransmitted_bytes").as_u64().unwrap();
+        let per_proc = rep.get("per_proc_bytes").as_arr().unwrap();
+        wan_img += per_proc.iter().filter_map(|b| b.as_u64()).sum::<u64>();
+        wan_bytes += bytes;
+        wan_retrans += retrans;
+        wan_time += secs;
+        record(
+            &mut t,
+            &mut rows,
+            "migrate (pull, lossy link)",
+            id,
+            per_proc.len(),
+            bytes,
+            secs,
+            retrans,
+            rep.get("dedup_ratio").as_f64().unwrap_or(1.0),
+        );
+    }
+    let drops = px.killed();
+    println!(
+        "# lossy link: {drops} drops over {} of image bytes, {} re-transferred",
+        fmt_bytes(wan_img as f64),
+        fmt_bytes(wan_retrans as f64)
+    );
+    assert!(drops >= 1, "the 8 MB drop boundary never hit — images too small?");
+    // each drop costs at most one resume window (a chunk's unverified tail)
+    assert!(
+        wan_retrans <= drops * DEFAULT_CHUNK_SIZE as u64,
+        "re-transfer {wan_retrans} B exceeds {drops} drops x one chunk window"
+    );
+    assert!(
+        (wan_retrans as f64) < 0.15 * wan_img as f64,
+        "re-transfer {wan_retrans} B is >= 15% of {wan_img} image bytes"
+    );
+    record(
+        &mut t,
+        &mut rows,
+        "migrate (pull, lossy aggregate)",
+        &format!("{lossy_apps} apps, {drops} drops"),
+        lossy_apps,
+        wan_bytes,
+        wan_time,
+        wan_retrans,
+        wan_img as f64 / wan_bytes.max(1) as f64,
+    );
 
     // sanity: everything arrived, nothing left running at the source
     let arrived = dst.get("/coordinators").unwrap().json().unwrap();
-    assert_eq!(arrived.as_arr().unwrap().len(), n_apps);
+    assert_eq!(arrived.as_arr().unwrap().len(), n_apps + lossy_apps);
     let remaining = src.get("/coordinators").unwrap().json().unwrap();
     for rec in remaining.as_arr().unwrap() {
         assert_eq!(rec.get("state").as_str(), Some("TERMINATED"));
         assert!(!rec.get("migrated_to").is_null());
     }
+
+    // --- scenario 3: shared-base two-rank pull through the CAS -------
+    // Rank images mix distinct random chunks with zero pages (as real
+    // checkpoint images do), and rank 1 shares 90% of rank 0's chunks.
+    let cs = DEFAULT_CHUNK_SIZE;
+    let mut rng = Rng::new(5);
+    let mut rank0 = Vec::with_capacity(40 * cs);
+    for i in 0..40 {
+        if i % 10 < 3 {
+            rank0.resize(rank0.len() + cs, 0); // zero page
+        } else {
+            rank0.extend(rand_chunk(&mut rng));
+        }
+    }
+    let mut rank1 = rank0.clone();
+    for i in [5usize, 15, 25, 35] {
+        rank1[i * cs..(i + 1) * cs].copy_from_slice(&rand_chunk(&mut rng));
+    }
+    let images = BTreeMap::from([
+        ("/coordinators/shared-base/checkpoints/1?proc=0".to_string(), rank0.clone()),
+        ("/coordinators/shared-base/checkpoints/1?proc=1".to_string(), rank1.clone()),
+    ]);
+    let handler: Handler = Arc::new(move |req: &mut Request| match images.get(&req.path) {
+        Some(body) => {
+            let range = req.headers.get("range").map(|s| s.as_str());
+            ranged_response(range, body, "application/octet-stream")
+        }
+        None => Response::not_found(),
+    });
+    let stub = Server::start("127.0.0.1:0", 4, handler).expect("start stub source");
+    let vessel = submit_dmtcp1(&dst, "dedup-vessel", 64);
+    wait_iter(&dst, &vessel, 1);
+    let digests = |img: &[u8]| {
+        Json::Arr(img.chunks(cs).map(|c| format!("{:016x}", chunk_digest(c)).into()).collect())
+    };
+    let manifest = Json::object([
+        ("src_app", "shared-base".into()),
+        ("pull_from", stub.addr().to_string().into()),
+        ("compress", false.into()),
+        ("seed", 9u64.into()),
+        ("chunk_size", (cs as u64).into()),
+        (
+            "cuts",
+            Json::Arr(vec![Json::object([
+                ("seq", 1u64.into()),
+                (
+                    "procs",
+                    Json::Arr(vec![
+                        Json::object([
+                            ("len", (rank0.len() as u64).into()),
+                            ("digests", digests(&rank0)),
+                        ]),
+                        Json::object([
+                            ("len", (rank1.len() as u64).into()),
+                            ("digests", digests(&rank1)),
+                        ]),
+                    ]),
+                ),
+            ])]),
+        ),
+    ]);
+    let t0 = Instant::now();
+    let resp = dst
+        .post(&format!("/coordinators/{vessel}/pull"), &manifest)
+        .expect("shared-base pull");
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let stats = resp.json().unwrap();
+    let dedup = stats.get("dedup_ratio").as_f64().unwrap();
+    assert!(
+        dedup >= 2.0,
+        "shared-base two-rank dedup ratio {dedup:.2} < 2.0 ({stats:?})"
+    );
+    record(
+        &mut t,
+        &mut rows,
+        "pull (shared-base dedup)",
+        "2 ranks, 90% shared",
+        2,
+        stats.get("bytes_fetched").as_u64().unwrap(),
+        secs,
+        stats.get("retransmitted_bytes").as_u64().unwrap_or(0),
+        dedup,
+    );
+
+    t.print();
     println!(
-        "\nmigrated {n_apps} apps, {} streamed at {}/s aggregate",
-        fmt_bytes(total_bytes as f64),
+        "\nmigrated {} apps ({n_apps} push, {lossy_apps} pull/lossy), {} streamed at {}/s \
+         aggregate push throughput; shared-base dedup {dedup:.2}x",
+        n_apps + lossy_apps,
+        fmt_bytes((total_bytes + wan_bytes) as f64),
         fmt_bytes(agg)
     );
 

@@ -48,6 +48,12 @@ pub enum ChaosKind {
     /// Asymmetric degradation: the app's NIC capacities are scaled by
     /// `factor` for `for_s` seconds.
     DegradeLink { app: usize, factor: f64, for_s: f64 },
+    /// Lossy WAN link: the app's NICs flap — `flaps` cycles of a
+    /// `down_s`-second near-total outage followed by `up_s` seconds of
+    /// healthy link.  Each outage kills whatever transfer is in flight,
+    /// which is exactly what pull-mode migration's resumable range
+    /// fetches are built to survive.
+    LinkFlap { app: usize, flaps: usize, down_s: f64, up_s: f64 },
     /// The storage back end's server links slow down by `factor`.
     SlowStore { factor: f64, for_s: f64 },
     /// One cloud's CACS instance drifts `skew_s` seconds off true time
@@ -145,8 +151,19 @@ pub fn plan(cfg: &ChaosConfig, n_events: usize) -> Vec<ChaosEvent> {
             ChaosKind::SlowStore { factor: rng.uniform(0.1, 0.5), for_s: rng.uniform(20.0, 120.0) }
         } else if roll < 0.46 {
             ChaosKind::ClockSkew { cloud: rng.pick(2), skew_s: rng.uniform(-300.0, 300.0) }
-        } else if roll < 0.66 {
+        } else if roll < 0.62 {
             ChaosKind::Checkpoint { app }
+        } else if roll < 0.66 {
+            // carved from the checkpoint band; like SpotRevocation below,
+            // parameters derive from the roll itself so older seeded
+            // plans keep every other event exactly where it was
+            let frac = (roll - 0.62) / 0.04;
+            ChaosKind::LinkFlap {
+                app,
+                flaps: 1 + (frac * 3.0) as usize,
+                down_s: 2.0 + 10.0 * frac,
+                up_s: 5.0 + 20.0 * (1.0 - frac),
+            }
         } else if roll < 0.71 {
             // parameters derive from the roll itself (uniform within
             // the band) instead of fresh draws, so every other event in
@@ -257,6 +274,26 @@ mod tests {
             .filter(|e| matches!(e.kind, ChaosKind::Terminate { .. }))
             .count();
         assert!(terms <= (cfg.n_apps / 4).max(1), "terms={terms}");
+    }
+
+    #[test]
+    fn plan_carves_link_flaps_with_roll_derived_parameters() {
+        let cfg = ChaosConfig::sized(13, 2000);
+        let evs = plan(&cfg, 2000);
+        let flaps: Vec<_> = evs
+            .iter()
+            .filter_map(|e| match e.kind {
+                ChaosKind::LinkFlap { flaps, down_s, up_s, .. } => Some((flaps, down_s, up_s)),
+                _ => None,
+            })
+            .collect();
+        // the band is 4% wide: a 2000-event plan all but surely hits it
+        assert!(!flaps.is_empty(), "no LinkFlap in a 2000-event plan");
+        for (n, down_s, up_s) in flaps {
+            assert!((1..=4).contains(&n), "flaps={n}");
+            assert!((2.0..12.0).contains(&down_s), "down_s={down_s}");
+            assert!((5.0..=25.0).contains(&up_s), "up_s={up_s}");
+        }
     }
 
     #[test]

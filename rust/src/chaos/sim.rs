@@ -14,8 +14,8 @@
 //!   must produce identical digests, which is how CI detects
 //!   non-determinism sneaking into the models.
 //!
-//! Sim-mode mapping of the fault vocabulary: partitions and link
-//! degradation reshape NIC capacities in the fluid network (floored,
+//! Sim-mode mapping of the fault vocabulary: partitions, link flaps and
+//! link degradation reshape NIC capacities in the fluid network (floored,
 //! never zero, so stalled flows resume on heal) and make the monitor's
 //! broadcast tree unreachable; spot revocations race a final cut
 //! against the reclaim deadline, park the app SWAPPED_OUT with its VMs
@@ -148,6 +148,10 @@ fn apply(sim: &mut Sim<SimWorld>, w: &mut SimWorld, reg: &Rc<RefCell<Vec<AppId>>
             let id = reg.borrow()[app];
             scale_nics(sim, w, id, factor, for_s);
         }
+        ChaosKind::LinkFlap { app, flaps, down_s, up_s } => {
+            let id = reg.borrow()[app];
+            link_flap(sim, w, id, flaps, down_s, up_s);
+        }
         ChaosKind::SlowStore { factor, for_s } => slow_store(sim, w, factor, for_s),
         ChaosKind::ClockSkew { cloud, skew_s } => {
             if let Some(s) = w.clock_skew.get_mut(cloud) {
@@ -215,6 +219,32 @@ fn partition(sim: &mut Sim<SimWorld>, w: &mut SimWorld, app: AppId, for_s: f64) 
     let saved = set_nic_caps(w, now, app, |_| 0.0);
     simdrv::pump_net(sim, w);
     sim.after(for_s, move |sim, w| heal(sim, w, saved));
+}
+
+/// Lossy WAN link: `flaps` cycles of a `down_s`-second outage (NICs cut
+/// to the capacity floor, like a partition — every in-flight transfer
+/// stalls) followed by `up_s` seconds of healthy link.  Stalled flows
+/// resume on each heal, so an app mid-transfer rides the flaps out.
+fn link_flap(
+    sim: &mut Sim<SimWorld>,
+    w: &mut SimWorld,
+    app: AppId,
+    flaps: usize,
+    down_s: f64,
+    up_s: f64,
+) {
+    if flaps == 0 {
+        return;
+    }
+    let now = sim.now();
+    let saved = set_nic_caps(w, now, app, |_| 0.0);
+    simdrv::pump_net(sim, w);
+    sim.after(down_s, move |sim, w| {
+        heal(sim, w, saved);
+        if flaps > 1 {
+            sim.after(up_s, move |sim, w| link_flap(sim, w, app, flaps - 1, down_s, up_s));
+        }
+    });
 }
 
 /// Scale the app's NIC capacities by `factor` for `for_s` seconds.
@@ -408,6 +438,26 @@ mod tests {
         // the migrated slot ended as a clone beyond the initial set
         assert!(r.apps_total > cfg.n_apps, "migration should have cloned");
         assert!(r.apps_terminated >= 1, "migration source should be torn down");
+    }
+
+    #[test]
+    fn link_flaps_kill_transfers_but_the_run_settles() {
+        // three outage/heal cycles thrown right on top of a checkpoint:
+        // each flap stalls the in-flight upload, each heal resumes it,
+        // and the acked-cut invariant must hold at the end
+        let cfg = ChaosConfig::sized(17, 0);
+        let evs = vec![
+            ChaosEvent { at: 5.0, kind: ChaosKind::Checkpoint { app: 0 } },
+            ChaosEvent {
+                at: 6.0,
+                kind: ChaosKind::LinkFlap { app: 0, flaps: 3, down_s: 8.0, up_s: 10.0 },
+            },
+        ];
+        let a = run_plan(&cfg, &evs);
+        assert!(a.ok(), "violations: {:?}", a.violations);
+        assert_eq!(a.ckpts_held, a.ckpts_acked, "no acked cut may be lost to a flap");
+        let b = run_plan(&cfg, &evs);
+        assert_eq!(a.digest, b.digest, "flap scheduling must stay deterministic");
     }
 
     #[test]

@@ -324,6 +324,20 @@ impl FederationRouter {
                 Err(e) => shard_unreachable(&addr, &e),
             };
         }
+        if req.method == Method::Get {
+            // Pull-mode fetches ride plain GETs: keep the `Range` and
+            // encoding-negotiation headers intact across the hop.
+            let mut headers: Vec<(&str, String)> = Vec::new();
+            for k in ["range", "x-cacs-accept-encoding"] {
+                if let Some(v) = req.headers.get(k) {
+                    headers.push((k, v.clone()));
+                }
+            }
+            return match client.get_with(full_path, &headers) {
+                Ok(resp) => relay(resp),
+                Err(e) => shard_unreachable(&addr, &e),
+            };
+        }
         let body = match req.body() {
             Ok(b) => b.to_vec(),
             Err(e) => return Response::bad_request(&e.to_string()),
@@ -567,7 +581,13 @@ fn relay(resp: ClientResponse) -> Response {
     } else {
         "text/plain"
     };
-    Response { status: resp.status, body: resp.body, content_type }
+    // Forward the headers a ranged / compressed image download depends on,
+    // so pull-mode fetches work unchanged through the federation front.
+    let headers = ["content-range", "accept-ranges", "x-cacs-encoding"]
+        .iter()
+        .filter_map(|k| resp.headers.get(*k).map(|v| (k.to_string(), v.clone())))
+        .collect();
+    Response { status: resp.status, body: resp.body, content_type, headers }
 }
 
 fn shard_unreachable(addr: &str, e: &dyn std::fmt::Display) -> Response {

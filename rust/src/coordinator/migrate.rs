@@ -56,14 +56,17 @@
 
 use crate::coordinator::service::{CacsService, MigrateStartError, MigrationTicket};
 use crate::coordinator::types::CkptRecord;
+use crate::dckpt::delta::{chunk_digest, DEFAULT_CHUNK_SIZE};
 use crate::dckpt::service as ckptsvc;
+use crate::storage::cas::{CasSession, ZrleDecoder};
 use crate::storage::ObjectStore;
-use crate::util::http::Client;
+use crate::util::http::{Client, RetryPolicy};
 use crate::util::ids::AppId;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use anyhow::{Context, Result};
 use std::collections::BTreeSet;
+use std::io::Write;
 use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -111,6 +114,14 @@ pub struct MigrationReport {
     pub downtime_s: f64,
     /// "full" or "delta" — what the final (quiesced) cut was.
     pub final_kind: &'static str,
+    /// Whether the destination pulled the images (WAN-resilient flow).
+    pub pull: bool,
+    /// Wire bytes fetched but discarded before verification succeeded —
+    /// the cost of link flaps (0 for push transfers, which restart whole
+    /// images instead of resuming and don't track this).
+    pub retransmitted_bytes: u64,
+    /// Manifest bytes ÷ wire bytes actually fetched (1.0 for push).
+    pub dedup_ratio: f64,
 }
 
 impl MigrationReport {
@@ -133,6 +144,9 @@ impl MigrationReport {
             ("downtime_bytes", self.downtime_bytes.into()),
             ("downtime_s", self.downtime_s.into()),
             ("final_kind", self.final_kind.into()),
+            ("pull", self.pull.into()),
+            ("retransmitted_bytes", self.retransmitted_bytes.into()),
+            ("dedup_ratio", self.dedup_ratio.into()),
         ])
     }
 }
@@ -149,6 +163,10 @@ pub enum MigrateError {
     /// The transfer or the destination failed; the source was rolled
     /// back to RUNNING — 502.
     Failed(anyhow::Error),
+    /// A pull transfer burned its whole retry budget; the source was
+    /// rolled back — 502 with a structured body saying how far the
+    /// destination got (attempts, resume offset, verified bytes).
+    PullExhausted(PullExhaustedInfo),
 }
 
 impl std::fmt::Display for MigrateError {
@@ -157,22 +175,127 @@ impl std::fmt::Display for MigrateError {
             MigrateError::UnknownCoordinator => write!(f, "unknown coordinator"),
             MigrateError::Conflict(m) => write!(f, "{m}"),
             MigrateError::Failed(e) => write!(f, "migration failed: {e:#}"),
+            MigrateError::PullExhausted(i) => write!(f, "{i}"),
         }
     }
 }
 
 impl std::error::Error for MigrateError {}
 
-/// Run one full migration of `id` to the CACS at `dst_base`
-/// ("host:port"; an `http://` prefix and trailing slashes are
-/// tolerated).  `precopy` enables the two-phase delta-aware flow.
-/// Blocking; returns once the clone runs and the source is terminated,
-/// or after rolling back.
+/// How far a failed pull transfer got before its retry budget ran out —
+/// the structured 502 body the REST layer returns (callers can see the
+/// failure was progress-starved rather than instant, and where a later
+/// attempt would resume).
+#[derive(Debug, Clone)]
+pub struct PullExhaustedInfo {
+    /// Range-fetch attempts spent across the whole transfer.
+    pub attempts: u64,
+    /// Image-space byte offset the next attempt would resume from.
+    pub last_offset: u64,
+    /// Bytes digest-verified (fetched + reused) before giving up.
+    pub bytes_verified: u64,
+    pub msg: String,
+}
+
+impl PullExhaustedInfo {
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            ("error", self.msg.as_str().into()),
+            ("attempts", self.attempts.into()),
+            ("last_offset", self.last_offset.into()),
+            ("bytes_verified", self.bytes_verified.into()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<PullExhaustedInfo> {
+        Some(PullExhaustedInfo {
+            attempts: j.get("attempts").as_u64()?,
+            last_offset: j.get("last_offset").as_u64().unwrap_or(0),
+            bytes_verified: j.get("bytes_verified").as_u64().unwrap_or(0),
+            msg: j.get("error").as_str().unwrap_or("pull retry budget exhausted").to_string(),
+        })
+    }
+}
+
+impl std::fmt::Display for PullExhaustedInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pull retry budget exhausted after {} attempts at offset {} ({} bytes verified): {}",
+            self.attempts, self.last_offset, self.bytes_verified, self.msg
+        )
+    }
+}
+
+impl std::error::Error for PullExhaustedInfo {}
+
+/// Knobs of the `{"mode":"pull"}` flow, parsed off the migrate body by
+/// the REST layer.  Everything except `pull_from` has a sane default.
+#[derive(Debug, Clone)]
+pub struct PullOpts {
+    /// Address the destination fetches images from ("host:port") —
+    /// normally the source CACS itself; tests and the lossy-link bench
+    /// point it at a flaky proxy in front of the source.
+    pub pull_from: String,
+    /// Negotiate zrle wire compression per transfer.
+    pub compress: bool,
+    /// Seed for the destination's backoff jitter (replayable schedules).
+    pub seed: u64,
+    /// Overrides for the destination's [`RetryPolicy`]; `None` keeps the
+    /// policy default.
+    pub max_attempts: Option<u32>,
+    pub base_backoff_ms: Option<u64>,
+    pub max_backoff_ms: Option<u64>,
+    pub connect_timeout_ms: Option<u64>,
+    pub attempt_timeout_ms: Option<u64>,
+    pub overall_deadline_ms: Option<u64>,
+}
+
+impl PullOpts {
+    pub fn new(pull_from: &str) -> PullOpts {
+        PullOpts {
+            pull_from: pull_from.to_string(),
+            compress: false,
+            seed: 0,
+            max_attempts: None,
+            base_backoff_ms: None,
+            max_backoff_ms: None,
+            connect_timeout_ms: None,
+            attempt_timeout_ms: None,
+            overall_deadline_ms: None,
+        }
+    }
+}
+
+/// Which transfer shape a migration uses.
+#[derive(Debug, Clone)]
+pub enum MigrateMode {
+    /// Classic source-driven streaming (optionally two-phase pre-copy).
+    Push { precopy: bool },
+    /// Destination-driven resumable range fetches with CAS dedup.
+    Pull(PullOpts),
+}
+
+/// Classic push-mode entry point (kept for existing callers); see
+/// [`migrate_with`].
 pub fn migrate(
     svc: &Arc<CacsService>,
     id: AppId,
     dst_base: &str,
     precopy: bool,
+) -> Result<MigrationReport, MigrateError> {
+    migrate_with(svc, id, dst_base, &MigrateMode::Push { precopy })
+}
+
+/// Run one full migration of `id` to the CACS at `dst_base`
+/// ("host:port"; an `http://` prefix and trailing slashes are
+/// tolerated).  Blocking; returns once the clone runs and the source is
+/// terminated, or after rolling back.
+pub fn migrate_with(
+    svc: &Arc<CacsService>,
+    id: AppId,
+    dst_base: &str,
+    mode: &MigrateMode,
 ) -> Result<MigrationReport, MigrateError> {
     let dst_base = dst_base
         .trim_start_matches("http://")
@@ -180,6 +303,11 @@ pub fn migrate(
         .to_string();
     if dst_base.is_empty() {
         return Err(MigrateError::Conflict("empty destination".into()));
+    }
+    if let MigrateMode::Pull(opts) = mode {
+        if opts.pull_from.is_empty() {
+            return Err(MigrateError::Conflict("pull mode needs a pull_from address".into()));
+        }
     }
     let t0 = Instant::now();
     let ticket = svc.begin_migration(id).map_err(|e| match e {
@@ -192,7 +320,7 @@ pub fn migrate(
     // latest-cut rule) — and the clone once it exists
     let mut created: Vec<u64> = Vec::new();
     let mut clone_id: Option<String> = None;
-    match run(svc, id, &ticket, &dst_base, precopy, &mut created, &mut clone_id) {
+    match run(svc, id, &ticket, &dst_base, mode, &mut created, &mut clone_id) {
         Ok(mut report) => {
             // step 5: the clone runs — terminate the source
             let migrated_to = format!("{dst_base}/coordinators/{}", report.dst_id);
@@ -226,7 +354,12 @@ pub fn migrate(
                 ticket.handle.reset_delta();
             }
             svc.abort_migration(id);
-            Err(MigrateError::Failed(e))
+            // a pull that burned its retry budget carries resume
+            // accounting — surface it structured instead of as prose
+            match e.downcast::<PullExhaustedInfo>() {
+                Ok(info) => Err(MigrateError::PullExhausted(info)),
+                Err(e) => Err(MigrateError::Failed(e)),
+            }
         }
     }
 }
@@ -238,11 +371,12 @@ fn run(
     id: AppId,
     ticket: &MigrationTicket,
     dst_base: &str,
-    precopy: bool,
+    mode: &MigrateMode,
     created: &mut Vec<u64>,
     clone_slot: &mut Option<String>,
 ) -> Result<MigrationReport> {
     let client = Client::new(dst_base);
+    let precopy = matches!(mode, MigrateMode::Push { precopy: true });
     let mut precopy_bytes = 0u64;
 
     // --- phase A (pre-copy, optional): full cut + transfer while the
@@ -299,11 +433,22 @@ fn run(
         }
     };
 
-    // --- step 3: ship the chain of the final cut, minus whatever the
-    //     destination already holds for this lineage (after pre-copy:
-    //     everything but the delta)
+    // --- step 3: move the chain of the final cut, minus whatever the
+    //     destination already holds for this lineage.  Push streams the
+    //     images out; pull publishes a digest manifest and has the
+    //     destination range-fetch (and dedup) the bytes itself.
     let chain = svc.ckpt_chain(id, ck.seq)?;
-    let (downtime_bytes, per_proc) = transfer_missing(svc, id, &client, &dst_id, &chain)?;
+    let (downtime_bytes, per_proc, retransmitted_bytes, dedup_ratio) = match mode {
+        MigrateMode::Push { .. } => {
+            let (bytes, per_proc) = transfer_missing(svc, id, &client, &dst_id, &chain)?;
+            (bytes, per_proc, 0, 1.0)
+        }
+        MigrateMode::Pull(opts) => {
+            let stats = pull_transfer(svc, id, dst_base, &dst_id, &chain, opts)?;
+            let per_proc = chain.last().map(|c| c.per_proc_bytes.clone()).unwrap_or_default();
+            (stats.bytes_fetched, per_proc, stats.retransmitted_bytes, stats.dedup_ratio())
+        }
+    };
 
     // --- step 4: restart the clone from the uploaded cut and poll it
     //     to RUNNING at ≥ the cut iteration
@@ -324,6 +469,9 @@ fn run(
         downtime_bytes,
         downtime_s,
         final_kind,
+        pull: matches!(mode, MigrateMode::Pull(_)),
+        retransmitted_bytes,
+        dedup_ratio,
     })
 }
 
@@ -517,5 +665,518 @@ fn restart_and_await(client: &Client, dst_id: &str, seq: u64, min_iter: u64) -> 
 fn delete_clone(client: &Client, dst_id: &str) {
     if let Err(e) = client.delete(&format!("/coordinators/{dst_id}")) {
         log::warn!("failed to clean up clone {dst_id}: {e}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pull-mode transfer: manifest publication (source) + resumable
+// range-fetch executor (destination)
+// ---------------------------------------------------------------------------
+
+/// What one pull transfer moved (the destination's `POST /pull` 200
+/// body; the source folds it into the [`MigrationReport`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PullStats {
+    /// Manifest bytes of every image actually pulled (skipped cuts and
+    /// the unfinished image of a failed pull excluded).
+    pub bytes_total: u64,
+    /// Wire bytes fetched *and* digest-verified.
+    pub bytes_fetched: u64,
+    /// Bytes satisfied from the destination's chunk index (no wire).
+    pub bytes_reused: u64,
+    /// Wire bytes fetched but discarded before verification — the cost
+    /// of link flaps and corrupted segments.
+    pub retransmitted_bytes: u64,
+    /// Range-fetch attempts across the whole transfer.
+    pub attempts: u64,
+    pub chunks_added: u64,
+    pub chunks_reused: u64,
+    pub cuts_pulled: u64,
+    /// Cuts the destination already held (idempotent re-pull).
+    pub cuts_skipped: u64,
+}
+
+impl PullStats {
+    /// Manifest bytes ÷ wire bytes fetched — ≥ 1; high when cross-rank
+    /// base state, cross-cut chunks, or zero pages dedup away.
+    pub fn dedup_ratio(&self) -> f64 {
+        self.bytes_total.max(1) as f64 / self.bytes_fetched.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object([
+            ("bytes_total", self.bytes_total.into()),
+            ("bytes_fetched", self.bytes_fetched.into()),
+            ("bytes_reused", self.bytes_reused.into()),
+            ("retransmitted_bytes", self.retransmitted_bytes.into()),
+            ("attempts", self.attempts.into()),
+            ("chunks_added", self.chunks_added.into()),
+            ("chunks_reused", self.chunks_reused.into()),
+            ("cuts_pulled", self.cuts_pulled.into()),
+            ("cuts_skipped", self.cuts_skipped.into()),
+            ("dedup_ratio", self.dedup_ratio().into()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<PullStats> {
+        Some(PullStats {
+            bytes_total: j.get("bytes_total").as_u64()?,
+            bytes_fetched: j.get("bytes_fetched").as_u64()?,
+            bytes_reused: j.get("bytes_reused").as_u64().unwrap_or(0),
+            retransmitted_bytes: j.get("retransmitted_bytes").as_u64().unwrap_or(0),
+            attempts: j.get("attempts").as_u64().unwrap_or(0),
+            chunks_added: j.get("chunks_added").as_u64().unwrap_or(0),
+            chunks_reused: j.get("chunks_reused").as_u64().unwrap_or(0),
+            cuts_pulled: j.get("cuts_pulled").as_u64().unwrap_or(0),
+            cuts_skipped: j.get("cuts_skipped").as_u64().unwrap_or(0),
+        })
+    }
+}
+
+/// Source side of step 3 in pull mode: publish the digest manifest and
+/// have the destination range-fetch the images itself.  A structured
+/// failure body from the destination (attempts / resume offset /
+/// verified bytes) comes back as [`PullExhaustedInfo`] inside the error
+/// so the REST layer can return it structured.
+fn pull_transfer(
+    svc: &Arc<CacsService>,
+    id: AppId,
+    dst_base: &str,
+    dst_id: &str,
+    chain: &[CkptRecord],
+    opts: &PullOpts,
+) -> Result<PullStats> {
+    let manifest = build_manifest(svc, id, chain, opts)?;
+    // the pull runs under the destination's overall retry deadline; this
+    // request's read timeout must outlive it
+    let overall = Duration::from_millis(opts.overall_deadline_ms.unwrap_or(600_000));
+    let mut client = Client::new(dst_base);
+    client.set_read_timeout(overall + Duration::from_secs(30));
+    let resp = client
+        .post(&format!("/coordinators/{dst_id}/pull"), &manifest)
+        .context("pull request to destination")?;
+    if resp.status == 200 {
+        let j = resp.json().context("destination pull stats")?;
+        return PullStats::from_json(&j).context("malformed destination pull stats");
+    }
+    if let Ok(j) = resp.json() {
+        if let Some(info) = PullExhaustedInfo::from_json(&j) {
+            return Err(anyhow::Error::new(info));
+        }
+    }
+    anyhow::bail!(
+        "destination pull failed ({}): {}",
+        resp.status,
+        String::from_utf8_lossy(&resp.body)
+    );
+}
+
+/// Streaming per-chunk digester: images flow through it straight off
+/// [`ObjectStore::get_into`], so manifest building never materializes a
+/// whole image in memory.
+struct ChunkDigester {
+    chunk_size: usize,
+    buf: Vec<u8>,
+    digests: Vec<u64>,
+    len: u64,
+}
+
+impl ChunkDigester {
+    fn new(chunk_size: usize) -> ChunkDigester {
+        ChunkDigester { chunk_size, buf: Vec::new(), digests: Vec::new(), len: 0 }
+    }
+
+    fn finish(mut self) -> (u64, Vec<u64>) {
+        if !self.buf.is_empty() {
+            self.digests.push(chunk_digest(&self.buf));
+        }
+        (self.len, self.digests)
+    }
+}
+
+impl Write for ChunkDigester {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.len += data.len() as u64;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let take = (self.chunk_size - self.buf.len()).min(rest.len());
+            self.buf.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+            if self.buf.len() == self.chunk_size {
+                self.digests.push(chunk_digest(&self.buf));
+                self.buf.clear();
+            }
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Per-proc transfer manifest for the chain of the final cut: sequence,
+/// image length and 64-bit chunk digests (hex strings — [`Json`]
+/// numbers are f64 and would corrupt them past 2^53).
+fn build_manifest(
+    svc: &Arc<CacsService>,
+    id: AppId,
+    chain: &[CkptRecord],
+    opts: &PullOpts,
+) -> Result<Json> {
+    let store = svc.store().clone();
+    let mut cuts = Vec::with_capacity(chain.len());
+    for ck in chain {
+        let mut procs = Vec::with_capacity(ck.per_proc_bytes.len());
+        for proc in 0..ck.per_proc_bytes.len() {
+            let mut dg = ChunkDigester::new(DEFAULT_CHUNK_SIZE);
+            ckptsvc::copy_image_to(store.as_ref(), &id.to_string(), ck.seq, proc, &mut dg)
+                .with_context(|| format!("digest image seq {} proc {proc}", ck.seq))?;
+            let (len, digests) = dg.finish();
+            let hex: Vec<Json> = digests.iter().map(|d| format!("{d:016x}").into()).collect();
+            procs.push(Json::object([("len", len.into()), ("digests", Json::Arr(hex))]));
+        }
+        let mut cut = Json::object([("seq", ck.seq.into()), ("procs", Json::Arr(procs))]);
+        if let Some(base) = ck.base_seq {
+            cut.set("base_seq", base.into());
+        }
+        cuts.push(cut);
+    }
+    let mut manifest = Json::object([
+        ("src_app", id.to_string().into()),
+        ("pull_from", opts.pull_from.as_str().into()),
+        ("compress", opts.compress.into()),
+        ("seed", opts.seed.into()),
+        ("chunk_size", (DEFAULT_CHUNK_SIZE as u64).into()),
+        ("cuts", Json::Arr(cuts)),
+    ]);
+    let mut retry = Json::obj();
+    if let Some(v) = opts.max_attempts {
+        retry.set("max_attempts", (v as u64).into());
+    }
+    if let Some(v) = opts.base_backoff_ms {
+        retry.set("base_backoff_ms", v.into());
+    }
+    if let Some(v) = opts.max_backoff_ms {
+        retry.set("max_backoff_ms", v.into());
+    }
+    if let Some(v) = opts.connect_timeout_ms {
+        retry.set("connect_timeout_ms", v.into());
+    }
+    if let Some(v) = opts.attempt_timeout_ms {
+        retry.set("attempt_timeout_ms", v.into());
+    }
+    if let Some(v) = opts.overall_deadline_ms {
+        retry.set("overall_deadline_ms", v.into());
+    }
+    manifest.set("retry", retry);
+    Ok(manifest)
+}
+
+/// Why a destination-side pull refused or failed (the REST layer picks
+/// status codes off these).
+#[derive(Debug)]
+pub enum PullFailure {
+    /// The manifest did not parse — 400.
+    BadManifest(String),
+    /// No such coordinator on this CACS — 404.
+    UnknownCoordinator,
+    /// The retry budget ran out; partial CAS state was rolled back —
+    /// 502 with the structured resume accounting.
+    Exhausted(PullExhaustedInfo),
+    /// A non-retryable failure (source refused, store error) — 502.
+    Failed(anyhow::Error),
+}
+
+struct ProcManifest {
+    len: u64,
+    digests: Vec<u64>,
+}
+
+struct CutManifest {
+    seq: u64,
+    base_seq: Option<u64>,
+    procs: Vec<ProcManifest>,
+}
+
+struct Manifest {
+    src_app: String,
+    pull_from: String,
+    compress: bool,
+    chunk_size: usize,
+    cuts: Vec<CutManifest>,
+}
+
+fn parse_manifest(j: &Json) -> Result<(Manifest, RetryPolicy), &'static str> {
+    let src_app = j.get("src_app").as_str().ok_or("manifest missing src_app")?.to_string();
+    let pull_from = j.get("pull_from").as_str().ok_or("manifest missing pull_from")?.to_string();
+    let compress = j.get("compress").as_bool().unwrap_or(false);
+    let chunk_size = j
+        .get("chunk_size")
+        .as_usize()
+        .filter(|&c| c > 0)
+        .ok_or("manifest missing chunk_size")?;
+    let mut cuts = Vec::new();
+    for c in j.get("cuts").as_arr().ok_or("manifest missing cuts")? {
+        let seq = c.get("seq").as_u64().ok_or("cut missing seq")?;
+        let base_seq = c.get("base_seq").as_u64();
+        let mut procs = Vec::new();
+        for p in c.get("procs").as_arr().ok_or("cut missing procs")? {
+            let len = p.get("len").as_u64().ok_or("proc missing len")?;
+            let mut digests = Vec::new();
+            for d in p.get("digests").as_arr().ok_or("proc missing digests")? {
+                let s = d.as_str().ok_or("digest must be a hex string")?;
+                digests.push(u64::from_str_radix(s, 16).map_err(|_| "bad digest hex")?);
+            }
+            procs.push(ProcManifest { len, digests });
+        }
+        cuts.push(CutManifest { seq, base_seq, procs });
+    }
+    let mut policy = RetryPolicy::new(j.get("seed").as_u64().unwrap_or(0));
+    let r = j.get("retry");
+    if let Some(v) = r.get("max_attempts").as_u64() {
+        policy.max_attempts = v as u32;
+    }
+    if let Some(v) = r.get("base_backoff_ms").as_u64() {
+        policy.base_backoff_ms = v;
+    }
+    if let Some(v) = r.get("max_backoff_ms").as_u64() {
+        policy.max_backoff_ms = v;
+    }
+    if let Some(v) = r.get("connect_timeout_ms").as_u64() {
+        policy.connect_timeout = Duration::from_millis(v);
+    }
+    if let Some(v) = r.get("attempt_timeout_ms").as_u64() {
+        policy.attempt_timeout = Duration::from_millis(v);
+    }
+    if let Some(v) = r.get("overall_deadline_ms").as_u64() {
+        policy.overall_deadline = Duration::from_millis(v);
+    }
+    Ok((Manifest { src_app, pull_from, compress, chunk_size, cuts }, policy))
+}
+
+/// Destination side of `{"mode":"pull"}` (`POST /coordinators/:id/pull`):
+/// fetch every image the manifest describes with resumable range
+/// requests, dedup through the content-addressed chunk index, verify
+/// every chunk digest, and commit each image through the same streaming
+/// upload path push-mode uses.  On failure every CAS chunk this
+/// transfer added is rolled back (committed images of a failed
+/// migration go away with the clone, and must not leave orphans).
+pub fn execute_pull(
+    svc: &Arc<CacsService>,
+    id: AppId,
+    manifest: &Json,
+) -> Result<PullStats, PullFailure> {
+    let (m, mut policy) =
+        parse_manifest(manifest).map_err(|e| PullFailure::BadManifest(e.to_string()))?;
+    let held: BTreeSet<u64> = match svc.checkpoints(id) {
+        Ok(cks) => cks.iter().filter_map(|c| c.get("seq").as_u64()).collect(),
+        Err(_) => return Err(PullFailure::UnknownCoordinator),
+    };
+    let client = policy.client(&m.pull_from);
+    let store = svc.store().clone();
+    let mut cas = CasSession::new(store.as_ref());
+    let mut stats = PullStats::default();
+    let mut failure: Option<anyhow::Error> = None;
+    'cuts: for cut in &m.cuts {
+        if held.contains(&cut.seq) {
+            stats.cuts_skipped += 1;
+            continue; // idempotent re-pull: the cut is already acked here
+        }
+        for (proc, pm) in cut.procs.iter().enumerate() {
+            let ctx = FetchCtx {
+                client: &client,
+                path: format!("/coordinators/{}/checkpoints/{}?proc={proc}", m.src_app, cut.seq),
+                chunk_size: m.chunk_size,
+                compress: m.compress,
+            };
+            let image = match fetch_image(&mut policy, &mut cas, &mut stats, &ctx, pm) {
+                Ok(img) => img,
+                Err(e) => {
+                    failure = Some(e.context(format!("pull image seq {} proc {proc}", cut.seq)));
+                    break 'cuts;
+                }
+            };
+            if let Err(e) =
+                svc.upload_image_stream(id, cut.seq, proc, cut.base_seq, &mut image.as_slice())
+            {
+                failure =
+                    Some(e.context(format!("commit pulled image seq {} proc {proc}", cut.seq)));
+                break 'cuts;
+            }
+            stats.bytes_total += pm.len;
+        }
+        stats.cuts_pulled += 1;
+    }
+    if let Some(e) = failure {
+        let orphans = cas.rollback();
+        log::warn!("{id}: pull failed, deleted {orphans} orphaned cas chunks: {e:#}");
+        return Err(match e.downcast::<PullExhaustedInfo>() {
+            Ok(info) => PullFailure::Exhausted(info),
+            Err(other) => PullFailure::Failed(other),
+        });
+    }
+    stats.bytes_reused = cas.stats.bytes_reused;
+    stats.chunks_added = cas.stats.chunks_added;
+    stats.chunks_reused = cas.stats.chunks_reused;
+    Ok(stats)
+}
+
+/// Immutable parameters of one image fetch (bundled so the helpers stay
+/// small-signatured).
+struct FetchCtx<'a> {
+    client: &'a Client,
+    path: String,
+    chunk_size: usize,
+    compress: bool,
+}
+
+fn chunk_len(pm: &ProcManifest, chunk_size: usize, i: usize) -> usize {
+    (pm.len as usize - i * chunk_size).min(chunk_size)
+}
+
+/// Assemble one image: chunks already in the index are reused; runs of
+/// missing chunks are range-fetched (resumably) and verified
+/// chunk-by-chunk.  A digest repeated within an image is fetched once —
+/// the run breaks at the repeat and the next occurrence hits the index.
+fn fetch_image(
+    policy: &mut RetryPolicy,
+    cas: &mut CasSession<'_>,
+    stats: &mut PullStats,
+    ctx: &FetchCtx<'_>,
+    pm: &ProcManifest,
+) -> Result<Vec<u8>> {
+    let n = pm.digests.len();
+    let expected = (pm.len as usize).div_ceil(ctx.chunk_size);
+    anyhow::ensure!(n == expected, "manifest has {n} digests for {} bytes", pm.len);
+    let mut assembled = vec![0u8; pm.len as usize];
+    let mut ci = 0;
+    while ci < n {
+        let d = pm.digests[ci];
+        let hit = cas.lookup(d).map_err(|e| anyhow::anyhow!("cas lookup {d:016x}: {e}"))?;
+        if let Some(bytes) = hit {
+            let cl = chunk_len(pm, ctx.chunk_size, ci);
+            anyhow::ensure!(
+                bytes.len() == cl,
+                "cas chunk {d:016x} is {} bytes, image expects {cl}",
+                bytes.len()
+            );
+            let at = ci * ctx.chunk_size;
+            assembled[at..at + cl].copy_from_slice(&bytes);
+            ci += 1;
+            continue;
+        }
+        // run of consecutive missing chunks with pairwise-distinct
+        // digests: one range request covers all of them; repeats and
+        // locally-known chunks end the run and resolve as index hits on
+        // the next pass
+        let mut seen = BTreeSet::new();
+        let mut cj = ci;
+        while cj < n
+            && !seen.contains(&pm.digests[cj])
+            && (cj == ci || !cas.contains(pm.digests[cj]))
+        {
+            seen.insert(pm.digests[cj]);
+            cj += 1;
+        }
+        fetch_run(policy, cas, stats, ctx, pm, &mut assembled, (ci, cj))?;
+        ci = cj;
+    }
+    Ok(assembled)
+}
+
+/// Fetch chunks `[ci, cj)` of the image with one resumable ranged GET.
+/// Every retry resumes from the verified frontier (chunk-aligned), so a
+/// link flap costs at most the un-verified tail of the attempt it
+/// killed.  Bounded by consecutive no-progress attempts *and* the
+/// overall wall-clock deadline.
+fn fetch_run(
+    policy: &mut RetryPolicy,
+    cas: &mut CasSession<'_>,
+    stats: &mut PullStats,
+    ctx: &FetchCtx<'_>,
+    pm: &ProcManifest,
+    assembled: &mut [u8],
+    run: (usize, usize),
+) -> Result<()> {
+    let (ci, cj) = run;
+    let run_start = (ci * ctx.chunk_size) as u64;
+    let run_end = ((cj * ctx.chunk_size) as u64).min(pm.len);
+    let t0 = Instant::now();
+    let mut verified = 0u64;
+    let mut next_chunk = ci;
+    // consecutive attempts without verified progress — the bounded
+    // retry budget of this loop
+    let mut attempts = 0u32;
+    loop {
+        if attempts > 0 {
+            std::thread::sleep(policy.backoff(attempts - 1));
+        }
+        stats.attempts += 1;
+        let offset = run_start + verified;
+        let range = format!("bytes={offset}-{}", run_end - 1);
+        let mut headers: Vec<(&str, String)> = vec![("range", range)];
+        if ctx.compress {
+            headers.push(("x-cacs-accept-encoding", "zrle".to_string()));
+        }
+        // the sink keeps whatever arrived before a connection died —
+        // the resume primitive; zrle decodes incrementally for the same
+        // reason
+        let mut plain = Vec::new();
+        let mut zd = ZrleDecoder::new(run_end - offset);
+        let outcome = if ctx.compress {
+            ctx.client.get_stream(&ctx.path, &headers, &mut zd)
+        } else {
+            ctx.client.get_stream(&ctx.path, &headers, &mut plain)
+        };
+        let wire_error = match outcome {
+            Ok(resp) if resp.status == 206 => None,
+            Ok(resp) => anyhow::bail!(
+                "source refused range fetch ({}): {}",
+                resp.status,
+                String::from_utf8_lossy(&resp.body)
+            ),
+            Err(e) => Some(e),
+        };
+        let received: &[u8] = if ctx.compress { zd.decoded() } else { &plain };
+        // verify whole chunks off the front; the unverified tail is
+        // discarded and re-fetched (the resume window is one chunk)
+        let mut consumed = 0usize;
+        while next_chunk < cj {
+            let cl = chunk_len(pm, ctx.chunk_size, next_chunk);
+            if received.len() - consumed < cl {
+                break;
+            }
+            let piece = &received[consumed..consumed + cl];
+            if chunk_digest(piece) != pm.digests[next_chunk] {
+                break; // corrupted segment: re-fetch from here
+            }
+            cas.insert(pm.digests[next_chunk], piece)
+                .map_err(|e| anyhow::anyhow!("cas insert: {e}"))?;
+            let at = next_chunk * ctx.chunk_size;
+            assembled[at..at + cl].copy_from_slice(piece);
+            consumed += cl;
+            next_chunk += 1;
+        }
+        verified += consumed as u64;
+        stats.bytes_fetched += consumed as u64;
+        stats.retransmitted_bytes += (received.len() - consumed) as u64;
+        if verified == run_end - run_start {
+            return Ok(());
+        }
+        // progress resets the consecutive-failure budget (down to 1 so
+        // the next attempt still backs off briefly)
+        attempts = if consumed > 0 { 1 } else { attempts + 1 };
+        if attempts >= policy.max_attempts.max(1) || t0.elapsed() >= policy.overall_deadline {
+            let msg = wire_error
+                .map(|e| e.to_string())
+                .unwrap_or_else(|| "chunk digest mismatch on resumed segment".to_string());
+            return Err(anyhow::Error::new(PullExhaustedInfo {
+                attempts: stats.attempts,
+                last_offset: run_start + verified,
+                bytes_verified: stats.bytes_fetched + cas.stats.bytes_reused,
+                msg,
+            }));
+        }
     }
 }

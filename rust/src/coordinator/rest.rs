@@ -6,10 +6,11 @@
 //! | POST   /coordinators                      | add a new coordinator (body = ASR) |
 //! | GET    /coordinators/:id                  | coordinator info |
 //! | DELETE /coordinators/:id                  | delete the coordinator (true empty 204) |
-//! | POST   /coordinators/:id/migrate          | migrate to another CACS (body = `{"dst": "host:port", "precopy": bool?}`, §5.3 / Fig 5); `precopy` streams a full cut while the app runs and ships only the dirty-chunk delta at the quiesced barrier; 409 while a checkpoint/restart/migration is in flight |
+//! | POST   /coordinators/:id/migrate          | migrate to another CACS (body = `{"dst": "host:port", "precopy": bool?}`, §5.3 / Fig 5); `precopy` streams a full cut while the app runs and ships only the dirty-chunk delta at the quiesced barrier; `{"mode": "pull", "pull_from": "host:port"}` switches to the WAN-resilient destination-driven flow (resumable range fetches, CAS dedup, optional `"compress": true` zrle wire encoding, `"retry"` overrides); a pull that exhausts its retry budget answers 502 with `{error, attempts, last_offset, bytes_verified}`; 409 while a checkpoint/restart/migration is in flight |
+//! | POST   /coordinators/:id/pull             | destination side of pull-mode migration: body = the source's transfer manifest; fetches, dedups and commits every image, answering the transfer stats (400 bad manifest, 404 unknown clone, 502 structured retry-exhaustion) |
 //! | GET    /coordinators/:id/checkpoints      | list checkpoints — each cut says `kind` (full/delta), `base_seq` and `delta_bytes` |
 //! | POST   /coordinators/:id/checkpoints      | trigger a checkpoint, **or** upload an image (octet-stream body + `x-ckpt-seq`/`x-proc-index` headers, optional `x-base-seq` for delta images; the body streams straight into the store) |
-//! | GET    /coordinators/:id/checkpoints/:seq | checkpoint info; `?proc=i` downloads that image (400 for an unparsable `proc`, 404 for a missing image) |
+//! | GET    /coordinators/:id/checkpoints/:seq | checkpoint info; `?proc=i` downloads that image (400 for an unparsable `proc`, 404 for a missing image) — honors `Range` (206/416) and `x-cacs-accept-encoding: zrle` for resumable compressed pulls |
 //! | POST   /coordinators/:id/checkpoints/:seq | restart from the checkpoint |
 //! | DELETE /coordinators/:id/checkpoints/:seq | delete the checkpoint |
 //! | POST   /coordinators/:id/preempt          | spot-revocation warning (§2.2 use case 4): checkpoint + swap the app out within the deadline budget (body = `{"deadline_s": f64}`, default 30); 404 unknown, 409 when the lifecycle refuses |
@@ -29,10 +30,11 @@
 //! TERMINATING → TERMINATED` once the clone runs on the destination,
 //! `MIGRATING → RUNNING` if the transfer fails (the source rolls back).
 
-use super::migrate::{self, MigrateError};
+use super::migrate::{self, MigrateError, PullFailure};
 use super::service::CacsService;
 use super::types::Asr;
-use crate::util::http::{Handler, Method, Request, Response, Server};
+use crate::storage::cas;
+use crate::util::http::{ranged_response, Handler, Method, Request, Response, Server};
 use crate::util::ids::AppId;
 use crate::util::json::Json;
 use std::sync::Arc;
@@ -143,14 +145,59 @@ fn route(svc: &Arc<CacsService>, req: &mut Request) -> Response {
                     "migrate needs a destination: {\"dst\": \"host:port\"}",
                 );
             };
-            let precopy = body.get("precopy").as_bool().unwrap_or(false);
-            match migrate::migrate(svc, id, dst, precopy) {
+            let mode = match body.get("mode").as_str() {
+                Some("pull") => {
+                    let Some(pull_from) = body.get("pull_from").as_str() else {
+                        return Response::bad_request(
+                            "pull mode needs a source address: {\"pull_from\": \"host:port\"}",
+                        );
+                    };
+                    let mut opts = migrate::PullOpts::new(pull_from);
+                    opts.compress = body.get("compress").as_bool().unwrap_or(false);
+                    opts.seed = body.get("seed").as_u64().unwrap_or(0);
+                    let r = body.get("retry");
+                    opts.max_attempts = r.get("max_attempts").as_u64().map(|v| v as u32);
+                    opts.base_backoff_ms = r.get("base_backoff_ms").as_u64();
+                    opts.max_backoff_ms = r.get("max_backoff_ms").as_u64();
+                    opts.connect_timeout_ms = r.get("connect_timeout_ms").as_u64();
+                    opts.attempt_timeout_ms = r.get("attempt_timeout_ms").as_u64();
+                    opts.overall_deadline_ms = r.get("overall_deadline_ms").as_u64();
+                    migrate::MigrateMode::Pull(opts)
+                }
+                Some("push") | None => migrate::MigrateMode::Push {
+                    precopy: body.get("precopy").as_bool().unwrap_or(false),
+                },
+                Some(other) => {
+                    return Response::bad_request(&format!("unknown migrate mode {other:?}"))
+                }
+            };
+            match migrate::migrate_with(svc, id, dst, &mode) {
                 Ok(report) => Response::ok_json(&report.to_json()),
                 Err(MigrateError::UnknownCoordinator) => Response::not_found(),
                 Err(MigrateError::Conflict(m)) => Response::conflict(&m),
+                Err(MigrateError::PullExhausted(info)) => Response::json(502, &info.to_json()),
                 Err(e) => Response::json(
                     502,
                     &Json::object([("error", e.to_string().into())]),
+                ),
+            }
+        }
+        (Method::Post, ["coordinators", id, "pull"]) => {
+            let Some(id) = parse_app(id) else {
+                return Response::bad_request("bad coordinator id");
+            };
+            let manifest = match req.json() {
+                Ok(j) => j,
+                Err(e) => return Response::bad_request(&e.to_string()),
+            };
+            match migrate::execute_pull(svc, id, &manifest) {
+                Ok(stats) => Response::ok_json(&stats.to_json()),
+                Err(PullFailure::BadManifest(m)) => Response::bad_request(&m),
+                Err(PullFailure::UnknownCoordinator) => Response::not_found(),
+                Err(PullFailure::Exhausted(info)) => Response::json(502, &info.to_json()),
+                Err(PullFailure::Failed(e)) => Response::json(
+                    502,
+                    &Json::object([("error", format!("{e:#}").into())]),
                 ),
             }
         }
@@ -217,11 +264,24 @@ fn route(svc: &Arc<CacsService>, req: &mut Request) -> Response {
                     return Response::bad_request("bad proc index");
                 };
                 return match svc.download_image(id, seq, proc) {
-                    Ok(bytes) => Response {
-                        status: 200,
-                        body: bytes,
-                        content_type: "application/octet-stream",
-                    },
+                    Ok(bytes) => {
+                        // the pull path resumes via Range and may ask
+                        // for zrle wire compression; the content-range
+                        // stays in decoded byte space
+                        let range = req.headers.get("range").map(|s| s.as_str());
+                        let mut resp =
+                            ranged_response(range, &bytes, "application/octet-stream");
+                        let zrle_ok = req
+                            .headers
+                            .get("x-cacs-accept-encoding")
+                            .map(|v| v.contains("zrle"))
+                            .unwrap_or(false);
+                        if zrle_ok && (resp.status == 200 || resp.status == 206) {
+                            resp.body = cas::zrle_encode(&resp.body);
+                            resp = resp.with_header("x-cacs-encoding", "zrle");
+                        }
+                        resp
+                    }
                     Err(_) => Response::not_found(),
                 };
             }

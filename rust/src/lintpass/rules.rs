@@ -14,6 +14,7 @@
 //! | `sim-determinism`   | L2: no wall clock / OS entropy in sim modules    |
 //! | `unbounded-channel` | L3: `sync_channel` only inside `coordinator/`    |
 //! | `uncapped-read`     | L3: no uncapped `read_to_end`/`read_line` (http) |
+//! | `unbounded-retry`   | L3: client retry loops carry an attempt/deadline |
 //! | `panic-path`        | L4: no `unwrap`/`expect` in REST/actor paths     |
 //! | `pragma`            | meta: pragmas must parse, be used, give a reason |
 
@@ -26,6 +27,7 @@ pub const RULE_NAMES: &[&str] = &[
     "sim-determinism",
     "unbounded-channel",
     "uncapped-read",
+    "unbounded-retry",
     "panic-path",
 ];
 
@@ -86,6 +88,9 @@ pub fn check(lex: &LexFile, scope: Scope) -> Vec<Diag> {
     }
     if scope.http && !scope.test_file {
         diags.extend(uncapped_read(lex));
+    }
+    if (scope.coordinator || scope.http) && !scope.test_file {
+        diags.extend(unbounded_retry(lex));
     }
     if scope.panic_path && !scope.test_file {
         diags.extend(panic_path(lex));
@@ -636,6 +641,84 @@ fn uncapped_read(lex: &LexFile) -> Vec<Diag> {
                 ),
             });
         }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// L3c: unbounded-retry
+// ---------------------------------------------------------------------------
+
+/// Idents whose presence inside a retry loop marks it as bounded.  A
+/// substring match (case-insensitive) keeps `max_attempts`,
+/// `overall_deadline`, `retries_left`, `budget_remaining` etc. passing
+/// without enumerating every spelling.
+const RETRY_BOUNDS: &[&str] = &["attempt", "deadline", "budget", "remaining", "tries"];
+
+/// In `coordinator/` and `util/http.rs`, a `loop`/`while` whose body
+/// issues HTTP client calls must reference a bounded attempt counter or
+/// deadline: a WAN peer that never answers correctly must exhaust a
+/// budget, not spin forever.  `for` loops are inherently bounded by
+/// their iterator and are not scanned.
+fn unbounded_retry(lex: &LexFile) -> Vec<Diag> {
+    let t = &lex.toks;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < t.len() {
+        if !(t[i].is("loop") || t[i].is("while")) {
+            i += 1;
+            continue;
+        }
+        // the span runs from the keyword (a `while` condition counts as
+        // part of the loop) to the body's matching close brace
+        let mut j = i + 1;
+        while j < t.len() && !t[j].is("{") {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        let mut k = j;
+        while k < t.len() {
+            if t[k].is("{") {
+                depth += 1;
+            } else if t[k].is("}") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let mut marker: Option<(u32, String)> = None;
+        let mut bounded = false;
+        for m in i..k.min(t.len()) {
+            if !t[m].is_ident {
+                continue;
+            }
+            let low = t[m].text.to_lowercase();
+            if RETRY_BOUNDS.iter().any(|b| low.contains(b)) {
+                bounded = true;
+            }
+            // a client call: the `Client` type itself, or a receiver
+            // whose name says client (`client.get(...)`, `ctx.client.…`)
+            let is_client = t[m].is("Client")
+                || (low.contains("client") && m + 1 < t.len() && t[m + 1].is("."));
+            if is_client && marker.is_none() && !lex.in_test_code(t[m].line) {
+                marker = Some((t[m].line, t[m].text.clone()));
+            }
+        }
+        if let (Some((line, what)), false) = (marker, bounded) {
+            out.push(Diag {
+                line,
+                rule: "unbounded-retry",
+                msg: format!(
+                    "`{what}` call inside a `loop`/`while` with no attempt \
+                     counter or deadline in scope — bound the retry (e.g. \
+                     `RetryPolicy`) so a dead peer cannot spin this loop \
+                     forever"
+                ),
+            });
+        }
+        i += 1;
     }
     out
 }

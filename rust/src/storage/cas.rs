@@ -1,0 +1,383 @@
+//! Content-addressed chunk index for pull-mode migration dedup.
+//!
+//! The pull transfer path already knows every image as a list of 64-bit
+//! chunk digests ([`crate::dckpt::delta::chunk_digest`]).  This module
+//! stores each distinct chunk **once** in the destination's object
+//! store, under `cas/<16-hex-digest>`, so chunks shared across cuts of
+//! one app *and* across sibling ranks sharing base state (the NERSC
+//! shapes: huge images, common runtime pages) are fetched and stored a
+//! single time.  A [`CasSession`] scopes one transfer: it tracks which
+//! chunks the transfer added so a failed pull can delete exactly what it
+//! orphaned, never touching chunks acked by earlier transfers.
+//!
+//! The zero-run-length (`zrle`) codec below is the optional per-transfer
+//! wire compression: checkpoint images carry megabytes of zero padding
+//! (runtime overhead pages), which this encodes as `(literal, zero-run)`
+//! records with no external dependencies.  [`ZrleDecoder`] decodes
+//! **incrementally**, so a connection killed mid-response still yields
+//! every complete record received — exactly what chunk-verified resume
+//! needs.
+
+use super::{ObjectStore, StoreError};
+use crate::dckpt::delta::chunk_digest;
+use std::collections::BTreeSet;
+use std::io::Write;
+
+/// Store key for a chunk digest: `cas/<16 hex digits>`.
+pub fn chunk_key(digest: u64) -> String {
+    format!("cas/{digest:016x}")
+}
+
+/// Dedup accounting for one transfer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CasStats {
+    /// Chunks this transfer put into the index.
+    pub chunks_added: u64,
+    /// Chunk lookups satisfied locally (no wire fetch).
+    pub chunks_reused: u64,
+    pub bytes_added: u64,
+    pub bytes_reused: u64,
+}
+
+/// One pull transfer's view of the destination chunk index.  Inserts
+/// are recorded so [`CasSession::rollback`] can delete exactly the
+/// chunks this transfer orphaned; chunks that were already present
+/// (acked by an earlier transfer or a sibling rank) are never deleted.
+pub struct CasSession<'s> {
+    store: &'s dyn ObjectStore,
+    added: BTreeSet<u64>,
+    pub stats: CasStats,
+}
+
+impl<'s> CasSession<'s> {
+    pub fn new(store: &'s dyn ObjectStore) -> CasSession<'s> {
+        CasSession { store, added: BTreeSet::new(), stats: CasStats::default() }
+    }
+
+    /// Fetch a chunk from the local index, counting the reuse.  A miss
+    /// is `Ok(None)` — the caller fetches over the wire and inserts.
+    pub fn lookup(&mut self, digest: u64) -> Result<Option<Vec<u8>>, StoreError> {
+        match self.store.get(&chunk_key(digest)) {
+            Ok(b) => {
+                self.stats.chunks_reused += 1;
+                self.stats.bytes_reused += b.len() as u64;
+                Ok(Some(b))
+            }
+            Err(StoreError::NotFound(_)) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Probe for presence without fetching or counting a reuse (used to
+    /// decide fetch-run boundaries).
+    pub fn contains(&self, digest: u64) -> bool {
+        self.store.exists(&chunk_key(digest))
+    }
+
+    /// Verify and insert a fetched chunk.  The digest is recomputed
+    /// here — a corrupted wire segment must never enter the index.  An
+    /// already-present chunk is left untouched (content-addressed puts
+    /// are idempotent) and is *not* recorded as this session's to roll
+    /// back.
+    pub fn insert(&mut self, digest: u64, data: &[u8]) -> Result<(), StoreError> {
+        if chunk_digest(data) != digest {
+            return Err(StoreError::Corrupt(format!("cas chunk {digest:016x} digest mismatch")));
+        }
+        let key = chunk_key(digest);
+        if self.store.exists(&key) {
+            return Ok(());
+        }
+        self.store.put(&key, data)?;
+        if self.added.insert(digest) {
+            self.stats.chunks_added += 1;
+            self.stats.bytes_added += data.len() as u64;
+        }
+        Ok(())
+    }
+
+    /// Delete every chunk this session added (failed-transfer cleanup);
+    /// returns how many were removed.  Chunks from earlier transfers
+    /// survive — they may back committed images.
+    pub fn rollback(self) -> usize {
+        let mut n = 0;
+        for d in &self.added {
+            if self.store.delete(&chunk_key(*d)).is_ok() {
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// zrle: zero-run-length wire codec
+// ---------------------------------------------------------------------------
+
+/// Zero runs shorter than this ride along inside the literal — framing a
+/// tiny run would cost more than it saves.
+const MIN_ZERO_RUN: usize = 32;
+
+/// Encode `data` as a sequence of `[lit_len: u32 LE][lit][zeros: u32 LE]`
+/// records.  Worst case (no zero runs) adds 8 bytes per 4 GiB literal;
+/// checkpoint images with their zero overhead pages shrink dramatically.
+pub fn zrle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 8 + 16);
+    let mut lit_start = 0;
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let run_start = i;
+            while i < data.len() && data[i] == 0 {
+                i += 1;
+            }
+            if i - run_start >= MIN_ZERO_RUN {
+                push_record(&mut out, &data[lit_start..run_start], (i - run_start) as u64);
+                lit_start = i;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    if lit_start < data.len() {
+        push_record(&mut out, &data[lit_start..], 0);
+    }
+    out
+}
+
+fn push_record(out: &mut Vec<u8>, mut lit: &[u8], mut zeros: u64) {
+    // oversized literals split at the u32 frame limit rather than
+    // silently truncating (images stay far below it in practice)
+    while lit.len() > u32::MAX as usize {
+        let (head, rest) = lit.split_at(u32::MAX as usize);
+        out.extend_from_slice(&u32::MAX.to_le_bytes());
+        out.extend_from_slice(head);
+        out.extend_from_slice(&0u32.to_le_bytes());
+        lit = rest;
+    }
+    loop {
+        let z = zeros.min(u32::MAX as u64) as u32;
+        out.extend_from_slice(&(lit.len() as u32).to_le_bytes());
+        out.extend_from_slice(lit);
+        out.extend_from_slice(&z.to_le_bytes());
+        zeros -= z as u64;
+        if zeros == 0 {
+            break;
+        }
+        lit = &[];
+    }
+}
+
+/// Incremental zrle decoder: feed encoded bytes through [`Write`];
+/// decoded bytes accumulate and are readable at any point.  A record
+/// that is still partial simply stays pending, so a transfer killed
+/// mid-response keeps every complete record it received.
+pub struct ZrleDecoder {
+    out: Vec<u8>,
+    buf: Vec<u8>,
+    /// Hard cap on decoded size — a hostile `zeros` field must not be
+    /// able to allocate unboundedly.
+    limit: u64,
+}
+
+impl ZrleDecoder {
+    pub fn new(limit: u64) -> ZrleDecoder {
+        ZrleDecoder { out: Vec::new(), buf: Vec::new(), limit }
+    }
+
+    /// Bytes decoded so far (complete records only).
+    pub fn decoded(&self) -> &[u8] {
+        &self.out
+    }
+
+    pub fn into_decoded(self) -> Vec<u8> {
+        self.out
+    }
+
+    /// True when no partial record is pending — a cleanly terminated
+    /// stream ends drained.
+    pub fn is_drained(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    fn read_u32(&self, at: usize) -> u32 {
+        u32::from_le_bytes([self.buf[at], self.buf[at + 1], self.buf[at + 2], self.buf[at + 3]])
+    }
+
+    fn drain(&mut self) -> std::io::Result<()> {
+        let mut pos = 0;
+        loop {
+            let avail = self.buf.len() - pos;
+            if avail < 4 {
+                break;
+            }
+            let lit_len = self.read_u32(pos) as usize;
+            if avail < lit_len + 8 {
+                break;
+            }
+            let zpos = pos + 4 + lit_len;
+            let zeros = self.read_u32(zpos) as u64;
+            if self.out.len() as u64 + lit_len as u64 + zeros > self.limit {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "zrle decoded size exceeds limit",
+                ));
+            }
+            self.out.extend_from_slice(&self.buf[pos + 4..pos + 4 + lit_len]);
+            self.out.resize(self.out.len() + zeros as usize, 0);
+            pos = zpos + 4;
+        }
+        if pos > 0 {
+            self.buf.drain(..pos);
+        }
+        Ok(())
+    }
+}
+
+impl Write for ZrleDecoder {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(buf);
+        self.drain()?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One-shot decode of a complete stream; the declared length pins both
+/// the allocation bound and the completeness check.
+pub fn zrle_decode(data: &[u8], expect_len: u64) -> std::io::Result<Vec<u8>> {
+    let mut d = ZrleDecoder::new(expect_len);
+    d.write_all(data)?;
+    if !d.is_drained() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "truncated zrle stream",
+        ));
+    }
+    let out = d.into_decoded();
+    if out.len() as u64 != expect_len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("zrle decoded {} bytes, expected {expect_len}", out.len()),
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::mem::MemStore;
+    use crate::util::rng::Rng;
+
+    fn random_bytes(seed: u64, n: usize) -> Vec<u8> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.next_u64() & 0xff) as u8).collect()
+    }
+
+    #[test]
+    fn chunk_key_is_stable_hex() {
+        assert_eq!(chunk_key(0xdead_beef), "cas/00000000deadbeef");
+    }
+
+    #[test]
+    fn session_dedups_and_counts() {
+        let store = MemStore::new();
+        let mut s = CasSession::new(&store);
+        let data = random_bytes(1, 4096);
+        let d = chunk_digest(&data);
+        assert!(s.lookup(d).unwrap().is_none());
+        s.insert(d, &data).unwrap();
+        // second insert of the same content is a no-op
+        s.insert(d, &data).unwrap();
+        assert_eq!(s.stats.chunks_added, 1);
+        assert_eq!(s.stats.bytes_added, 4096);
+        assert_eq!(s.lookup(d).unwrap().unwrap(), data);
+        assert_eq!(s.stats.chunks_reused, 1);
+        assert_eq!(s.stats.bytes_reused, 4096);
+    }
+
+    #[test]
+    fn insert_rejects_corrupt_chunk() {
+        let store = MemStore::new();
+        let mut s = CasSession::new(&store);
+        let data = random_bytes(2, 128);
+        let err = s.insert(chunk_digest(&data) ^ 1, &data).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt(_)), "{err}");
+        assert_eq!(s.stats.chunks_added, 0);
+    }
+
+    #[test]
+    fn rollback_removes_only_this_sessions_chunks() {
+        let store = MemStore::new();
+        let old = random_bytes(3, 256);
+        let old_d = chunk_digest(&old);
+        {
+            // an earlier, committed transfer
+            let mut s = CasSession::new(&store);
+            s.insert(old_d, &old).unwrap();
+        }
+        let new = random_bytes(4, 256);
+        let new_d = chunk_digest(&new);
+        let mut s = CasSession::new(&store);
+        // re-encountering the old chunk must not claim it
+        s.insert(old_d, &old).unwrap();
+        s.insert(new_d, &new).unwrap();
+        assert_eq!(s.rollback(), 1, "only the newly added chunk is deleted");
+        assert!(store.exists(&chunk_key(old_d)), "acked chunk survives rollback");
+        assert!(!store.exists(&chunk_key(new_d)));
+    }
+
+    #[test]
+    fn zrle_roundtrips() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            b"abc".to_vec(),
+            vec![0u8; 100_000],
+            random_bytes(5, 64 * 1024),
+            {
+                let mut v = vec![0u8; 10_000];
+                v.extend_from_slice(&random_bytes(6, 5_000));
+                v.resize(v.len() + 31, 0); // below MIN_ZERO_RUN: stays literal
+                v.extend_from_slice(b"tail");
+                v
+            },
+        ];
+        for (i, case) in cases.iter().enumerate() {
+            let enc = zrle_encode(case);
+            let dec = zrle_decode(&enc, case.len() as u64).unwrap();
+            assert_eq!(&dec, case, "case {i}");
+        }
+        // zeros really compress
+        let big = vec![0u8; 1 << 20];
+        let enc = zrle_encode(&big);
+        assert!(enc.len() < 64, "1 MiB of zeros became {} bytes", enc.len());
+    }
+
+    #[test]
+    fn zrle_decoder_keeps_complete_records_from_a_cut_stream() {
+        let mut payload = random_bytes(7, 3_000);
+        payload.resize(payload.len() + 5_000, 0);
+        payload.extend_from_slice(&random_bytes(8, 2_000));
+        let enc = zrle_encode(&payload);
+        let cut = enc.len() / 2;
+        let mut d = ZrleDecoder::new(payload.len() as u64);
+        d.write_all(&enc[..cut]).unwrap();
+        let got = d.decoded().len();
+        assert!(payload.starts_with(d.decoded()), "partial decode is a prefix");
+        d.write_all(&enc[cut..]).unwrap();
+        assert!(d.is_drained());
+        assert!(d.decoded().len() >= got);
+        assert_eq!(d.into_decoded(), payload);
+    }
+
+    #[test]
+    fn zrle_decode_enforces_the_length_bound() {
+        let payload = vec![0u8; 10_000];
+        let enc = zrle_encode(&payload);
+        assert!(zrle_decode(&enc, 999).is_err(), "over-limit decode must fail");
+        assert!(zrle_decode(&enc[..enc.len() - 1], 10_000).is_err(), "truncated stream");
+    }
+}

@@ -22,6 +22,7 @@
 //! unchanged; the real backends override them so checkpoint images flow
 //! to disk without ever being materialized as one contiguous buffer.
 
+pub mod cas;
 pub mod fault;
 pub mod local;
 pub mod mem;

@@ -1,0 +1,224 @@
+//! Lossy-link TCP proxy for WAN chaos in real mode.
+//!
+//! [`FlakyProxy`] sits between a pull-mode destination and the source
+//! coordinator and kills the connection every `kill_every` forwarded
+//! download bytes — the real-mode twin of the sim harness's
+//! `ChaosKind::LinkFlap`.  The cut is abrupt (`shutdown(2)` on both
+//! sides mid-body), exactly what a flapping WAN link does to an HTTP
+//! transfer, so the puller's resumable range fetches and digest
+//! re-verification are exercised end to end.  The byte counter is
+//! global across connections: reconnecting does not reset the clock to
+//! the next drop, so a transfer that only ever restarts from zero never
+//! finishes — progress requires genuine resume-from-offset.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A TCP proxy that forwards `downstream <-> upstream` byte streams and
+/// severs the connection whenever the cumulative forwarded download
+/// byte count crosses a multiple of `kill_every` (0 disables killing).
+pub struct FlakyProxy {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    killed: Arc<AtomicU64>,
+    forwarded: Arc<AtomicU64>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FlakyProxy {
+    /// Listen on an ephemeral loopback port and proxy every accepted
+    /// connection to `upstream` (an `addr:port` string), dropping the
+    /// link at each `kill_every`-byte boundary of download traffic.
+    pub fn start(upstream: &str, kill_every: u64) -> std::io::Result<FlakyProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let killed = Arc::new(AtomicU64::new(0));
+        let forwarded = Arc::new(AtomicU64::new(0));
+        let upstream = upstream.to_string();
+        let (stop2, killed2, forwarded2) = (stop.clone(), killed.clone(), forwarded.clone());
+        let join = std::thread::Builder::new()
+            .name("cacs-flaky-accept".into())
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok((down, _peer)) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break; // the Drop wake-up connection
+                        }
+                        let upstream = upstream.clone();
+                        let (killed, forwarded) = (killed2.clone(), forwarded2.clone());
+                        std::thread::spawn(move || {
+                            proxy_conn(down, &upstream, kill_every, &killed, &forwarded)
+                        });
+                    }
+                    Err(_) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                }
+            })?;
+        Ok(FlakyProxy { addr, stop, killed, forwarded, join: Some(join) })
+    }
+
+    /// The proxy's bound address — point the puller here.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Connections severed at a byte boundary so far.
+    pub fn killed(&self) -> u64 {
+        self.killed.load(Ordering::SeqCst)
+    }
+
+    /// Download bytes forwarded (headers included) across all
+    /// connections, severed or not.
+    pub fn forwarded(&self) -> u64 {
+        self.forwarded.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for FlakyProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept so the loop observes the flag
+        let woke =
+            TcpStream::connect_timeout(&self.addr, std::time::Duration::from_secs(1)).is_ok();
+        if let Some(j) = self.join.take() {
+            if woke {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Pump one proxied connection: uploads relay verbatim on a side
+/// thread; downloads relay through the global byte counter and get cut
+/// at the first `kill_every` boundary they cross.
+fn proxy_conn(
+    down: TcpStream,
+    upstream: &str,
+    kill_every: u64,
+    killed: &AtomicU64,
+    forwarded: &AtomicU64,
+) {
+    let Ok(up) = TcpStream::connect(upstream) else {
+        let _ = down.shutdown(Shutdown::Both);
+        return;
+    };
+    let _ = down.set_nodelay(true);
+    let _ = up.set_nodelay(true);
+    let (Ok(mut down_rd), Ok(up_wr)) = (down.try_clone(), up.try_clone()) else {
+        return;
+    };
+    // client -> upstream: verbatim; half-close upstream on client EOF
+    let uploader = std::thread::spawn(move || {
+        let mut up_wr = up_wr;
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match down_rd.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    if up_wr.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        let _ = up_wr.shutdown(Shutdown::Write);
+    });
+    pump_download(&up, &down, kill_every, killed, forwarded);
+    let _ = uploader.join();
+}
+
+/// upstream -> client, counted; returns after EOF, error, or a kill.
+fn pump_download(
+    up: &TcpStream,
+    down: &TcpStream,
+    kill_every: u64,
+    killed: &AtomicU64,
+    forwarded: &AtomicU64,
+) {
+    let (mut up_rd, mut down_wr) = (up, down);
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        let n = match up_rd.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        let start = forwarded.fetch_add(n as u64, Ordering::SeqCst);
+        let end = start + n as u64;
+        // crossed (or landed on) a boundary: forward up to it, then cut
+        let cut = kill_every > 0 && start / kill_every != end / kill_every;
+        let keep = if cut { ((end / kill_every) * kill_every - start) as usize } else { n };
+        forwarded.fetch_sub((n - keep) as u64, Ordering::SeqCst);
+        if down_wr.write_all(&buf[..keep]).is_err() {
+            break;
+        }
+        if cut {
+            killed.fetch_add(1, Ordering::SeqCst);
+            let _ = down.shutdown(Shutdown::Both);
+            let _ = up.shutdown(Shutdown::Both);
+            return;
+        }
+    }
+    let _ = down.shutdown(Shutdown::Write);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::http::{Client, Handler, Request, Response, Server};
+    use std::sync::Arc;
+
+    const BODY_LEN: usize = 100_000;
+
+    fn payload_server() -> Server {
+        let handler: Handler = Arc::new(|_req: &mut Request| Response {
+            status: 200,
+            body: vec![0xAB; BODY_LEN],
+            content_type: "application/octet-stream",
+            headers: vec![],
+        });
+        Server::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn passthrough_when_killing_is_disabled() {
+        let srv = payload_server();
+        let px = FlakyProxy::start(&srv.addr().to_string(), 0).unwrap();
+        let resp = Client::new(&px.addr().to_string()).get("/img").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body.len(), BODY_LEN);
+        assert_eq!(px.killed(), 0);
+        assert!(px.forwarded() as usize >= BODY_LEN, "forwarded={}", px.forwarded());
+    }
+
+    #[test]
+    fn kills_the_connection_at_the_byte_boundary() {
+        let srv = payload_server();
+        let px = FlakyProxy::start(&srv.addr().to_string(), 64 * 1024).unwrap();
+        let client = Client::new(&px.addr().to_string());
+        // 100 kB body behind a 64 kB drop boundary: the first fetch is
+        // severed mid-body and must surface as a read error
+        assert!(client.get("/img").is_err(), "fetch should be cut mid-body");
+        assert_eq!(px.killed(), 1);
+        assert!(px.forwarded() <= 64 * 1024);
+    }
+
+    #[test]
+    fn the_drop_clock_spans_connections() {
+        let srv = payload_server();
+        let px = FlakyProxy::start(&srv.addr().to_string(), 150_000).unwrap();
+        let client = Client::new(&px.addr().to_string());
+        // first fetch fits under the boundary...
+        assert_eq!(client.get("/img").unwrap().body.len(), BODY_LEN);
+        assert_eq!(px.killed(), 0);
+        // ...the second crosses it and dies: no per-connection reset
+        assert!(client.get("/img").is_err());
+        assert_eq!(px.killed(), 1);
+    }
+}

@@ -15,11 +15,13 @@
 
 use crate::util::json::{self, Json};
 use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// HTTP request methods used by Table 1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -207,6 +209,9 @@ pub struct Response {
     pub status: u16,
     pub body: Vec<u8>,
     pub content_type: &'static str,
+    /// Extra response headers (e.g. `content-range` on a 206); names
+    /// should be lowercase to match what clients index on.
+    pub headers: Vec<(String, String)>,
 }
 
 impl Response {
@@ -215,6 +220,7 @@ impl Response {
             status,
             body: body.to_string().into_bytes(),
             content_type: "application/json",
+            headers: vec![],
         }
     }
 
@@ -227,12 +233,19 @@ impl Response {
             status,
             body: body.as_bytes().to_vec(),
             content_type: "text/plain",
+            headers: vec![],
         }
     }
 
     /// A true RFC 9110 204: no body, no Content-Type, no Content-Length.
     pub fn no_content() -> Response {
-        Response { status: 204, body: vec![], content_type: "" }
+        Response { status: 204, body: vec![], content_type: "", headers: vec![] }
+    }
+
+    /// Attach an extra response header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
     }
 
     pub fn not_found() -> Response {
@@ -253,11 +266,13 @@ impl Response {
             201 => "Created",
             202 => "Accepted",
             204 => "No Content",
+            206 => "Partial Content",
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
             409 => "Conflict",
             413 => "Payload Too Large",
+            416 => "Range Not Satisfiable",
             500 => "Internal Server Error",
             502 => "Bad Gateway",
             503 => "Service Unavailable",
@@ -274,19 +289,96 @@ impl Response {
                 Response::status_text(self.status)
             )
         } else {
-            format!(
-                "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            let mut h = format!(
+                "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n",
                 self.status,
                 Response::status_text(self.status),
                 self.content_type,
                 self.body.len()
-            )
+            );
+            for (k, v) in &self.headers {
+                h.push_str(k);
+                h.push_str(": ");
+                h.push_str(v);
+                h.push_str("\r\n");
+            }
+            h.push_str("\r\n");
+            h
         };
         stream.write_all(head.as_bytes())?;
         if self.status != 204 {
             stream.write_all(&self.body)?;
         }
         stream.flush()
+    }
+}
+
+/// Outcome of applying a `Range: bytes=a-b` request header to a body of
+/// `total` bytes.  Only single ranges are supported (all the pull path
+/// sends); anything unrecognized degrades to serving the whole body,
+/// which is always a correct answer for an idempotent GET.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RangeSpec {
+    /// No usable Range header: serve the whole body with 200.
+    Whole,
+    /// Serve bytes `[start, end]` (inclusive) with 206 + Content-Range.
+    Slice { start: u64, end: u64 },
+    /// First byte at/past the end: 416 with `Content-Range: bytes */total`.
+    Unsatisfiable,
+}
+
+/// Parse a `Range` header value against a known body length.
+pub fn parse_range(header: Option<&str>, total: u64) -> RangeSpec {
+    let Some(h) = header else { return RangeSpec::Whole };
+    let Some(spec) = h.trim().strip_prefix("bytes=") else { return RangeSpec::Whole };
+    let Some((a, b)) = spec.split_once('-') else { return RangeSpec::Whole };
+    // suffix ranges ("-500") are not produced by our client; whole-body
+    let Ok(start) = a.trim().parse::<u64>() else { return RangeSpec::Whole };
+    if start >= total {
+        return RangeSpec::Unsatisfiable;
+    }
+    let end = match b.trim() {
+        "" => total - 1,
+        s => match s.parse::<u64>() {
+            Ok(e) if e >= start => e.min(total - 1),
+            _ => return RangeSpec::Whole,
+        },
+    };
+    RangeSpec::Slice { start, end }
+}
+
+/// Build a (possibly partial) response for `body` honoring the request's
+/// Range header: 200 for whole-body, 206 + `Content-Range` for a slice,
+/// 416 when the range starts past the end.  `accept-ranges: bytes`
+/// advertises resumability either way.
+pub fn ranged_response(
+    range_header: Option<&str>,
+    body: &[u8],
+    content_type: &'static str,
+) -> Response {
+    let total = body.len() as u64;
+    match parse_range(range_header, total) {
+        RangeSpec::Whole => Response {
+            status: 200,
+            body: body.to_vec(),
+            content_type,
+            headers: vec![("accept-ranges".into(), "bytes".into())],
+        },
+        RangeSpec::Slice { start, end } => Response {
+            status: 206,
+            body: body[start as usize..=end as usize].to_vec(),
+            content_type,
+            headers: vec![
+                ("accept-ranges".into(), "bytes".into()),
+                ("content-range".into(), format!("bytes {start}-{end}/{total}")),
+            ],
+        },
+        RangeSpec::Unsatisfiable => Response {
+            status: 416,
+            body: vec![],
+            content_type: "text/plain",
+            headers: vec![("content-range".into(), format!("bytes */{total}"))],
+        },
     }
 }
 
@@ -705,6 +797,12 @@ fn serve_conn(mut stream: TcpStream, handler: Handler) {
 /// server's connection-close policy).
 pub struct Client {
     base: String,
+    /// Connection-attempt bound.  `None` preserves the historical
+    /// blocking `connect(2)` (the OS default can be minutes against a
+    /// blackholed peer — the pull path always sets this).
+    connect_timeout: Option<Duration>,
+    /// Per-request read bound on the established connection.
+    read_timeout: Duration,
 }
 
 /// A client-side response.
@@ -760,7 +858,56 @@ fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<ClientResponse> 
 impl Client {
     /// `base` like "127.0.0.1:8080" (no scheme; localhost service).
     pub fn new(base: &str) -> Client {
-        Client { base: base.to_string() }
+        Client {
+            base: base.to_string(),
+            connect_timeout: None,
+            // generous: long service-side operations answer on this same
+            // connection (POST .../migrate runs a whole §5.3 cycle — up
+            // to a 60 s clone poll plus the image transfer — before
+            // replying)
+            read_timeout: Duration::from_secs(180),
+        }
+    }
+
+    /// Bound how long one connection attempt may block.  Without this a
+    /// blackholed destination (dropped SYNs, no RST) parks the calling
+    /// thread until the OS connect timeout — minutes on Linux.
+    pub fn set_connect_timeout(&mut self, t: Duration) {
+        self.connect_timeout = Some(t);
+    }
+
+    /// Bound how long one request may wait on response bytes.
+    pub fn set_read_timeout(&mut self, t: Duration) {
+        self.read_timeout = t;
+    }
+
+    /// Open one configured connection: nodelay, read timeout, and the
+    /// connect timeout when set (resolving `base` and racing addresses
+    /// sequentially, first success wins).
+    fn connect(&self) -> std::io::Result<TcpStream> {
+        let stream = match self.connect_timeout {
+            None => TcpStream::connect(&self.base)?,
+            Some(t) => {
+                let mut last: Option<std::io::Error> = None;
+                let mut found = None;
+                for addr in self.base.to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&addr, t) {
+                        Ok(s) => {
+                            found = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match found {
+                    Some(s) => s,
+                    None => return Err(last.unwrap_or_else(|| bad("address did not resolve"))),
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        Ok(stream)
     }
 
     /// The address this client targets.
@@ -770,6 +917,18 @@ impl Client {
 
     pub fn get(&self, path: &str) -> std::io::Result<ClientResponse> {
         self.request(Method::Get, path, None)
+    }
+
+    /// GET with extra request headers — the pull path sends `Range` and
+    /// encoding-negotiation headers through this.
+    pub fn get_with(
+        &self,
+        path: &str,
+        headers: &[(&str, String)],
+    ) -> std::io::Result<ClientResponse> {
+        let mut stream = self.send_head(Method::Get, path, headers, 0)?;
+        stream.flush()?;
+        read_response(&mut BufReader::new(stream))
     }
 
     pub fn post(&self, path: &str, body: &Json) -> std::io::Result<ClientResponse> {
@@ -786,24 +945,98 @@ impl Client {
         path: &str,
         body: Option<&Json>,
     ) -> std::io::Result<ClientResponse> {
-        let mut stream = TcpStream::connect(&self.base)?;
-        stream.set_nodelay(true)?;
-        // generous: long service-side operations answer on this same
-        // connection (POST .../migrate runs a whole §5.3 cycle — up to
-        // a 60 s clone poll plus the image transfer — before replying)
-        stream.set_read_timeout(Some(std::time::Duration::from_secs(180)))?;
         let body_bytes = body.map(|b| b.to_string().into_bytes()).unwrap_or_default();
-        let head = format!(
-            "{} {} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
-            method.as_str(),
-            path,
-            self.base,
-            body_bytes.len()
-        );
-        stream.write_all(head.as_bytes())?;
+        let mut stream = self.send_head(method, path, &[], body_bytes.len())?;
         stream.write_all(&body_bytes)?;
         stream.flush()?;
         read_response(&mut BufReader::new(stream))
+    }
+
+    /// Write the request head (JSON content-type, explicit
+    /// Content-Length, `extra` headers appended) on a fresh configured
+    /// connection and hand the stream back for the body.
+    fn send_head(
+        &self,
+        method: Method,
+        path: &str,
+        extra: &[(&str, String)],
+        content_length: usize,
+    ) -> std::io::Result<TcpStream> {
+        let mut stream = self.connect()?;
+        let mut head = format!(
+            "{} {} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n",
+            method.as_str(),
+            path,
+            self.base,
+            content_length
+        );
+        for (k, v) in extra {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        Ok(stream)
+    }
+
+    /// Streaming GET: the head is parsed up front, then 200/206 body
+    /// bytes flow into `sink` **as they arrive**.  On a mid-body
+    /// transport error the sink keeps everything received before the
+    /// drop — the resumable pull path verifies chunk digests over that
+    /// prefix and re-requests only past it, instead of refetching the
+    /// range from zero.  Non-2xx bodies are buffered into the returned
+    /// response as usual.
+    pub fn get_stream(
+        &self,
+        path: &str,
+        headers: &[(&str, String)],
+        sink: &mut dyn Write,
+    ) -> std::io::Result<ClientResponse> {
+        let mut stream = self.send_head(Method::Get, path, headers, 0)?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let status_line = read_capped_line(&mut reader)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad("bad status line"))?;
+        let mut resp_headers = BTreeMap::new();
+        loop {
+            let h = read_capped_line(&mut reader)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                resp_headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let content_len: u64 = resp_headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        if !(200..300).contains(&status) && content_len > MAX_BODY_BYTES as u64 {
+            return Err(bad("error body exceeds buffering cap"));
+        }
+        if (200..300).contains(&status) {
+            // stream to the sink; a short copy is a hard error so the
+            // caller can distinguish "link died" from "range done"
+            let copied = std::io::copy(&mut (&mut reader).take(content_len), sink)?;
+            if copied < content_len {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!("body truncated ({copied} of {content_len} bytes)"),
+                ));
+            }
+            Ok(ClientResponse { status, headers: resp_headers, body: vec![] })
+        } else {
+            let mut body = vec![0u8; content_len as usize];
+            reader.read_exact(&mut body)?;
+            Ok(ClientResponse { status, headers: resp_headers, body })
+        }
     }
 
     /// POST with a **streamed** chunked body (no Content-Length, no
@@ -821,9 +1054,7 @@ impl Client {
     where
         F: FnOnce(&mut dyn Write) -> std::io::Result<u64>,
     {
-        let mut stream = TcpStream::connect(&self.base)?;
-        stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(std::time::Duration::from_secs(180)))?;
+        let mut stream = self.connect()?;
         let mut head = format!(
             "POST {} HTTP/1.1\r\nhost: {}\r\ncontent-type: {}\r\ntransfer-encoding: chunked\r\nconnection: close\r\n",
             path, self.base, content_type
@@ -845,6 +1076,113 @@ impl Client {
         read_response(&mut BufReader::new(stream))
     }
 }
+
+/// Bounded retry with exponential backoff and **seeded** jitter, for
+/// idempotent requests only (ranged GETs — the pull transfer path).
+/// Every knob is a bound: an attempt budget, per-attempt connect/read
+/// timeouts, and an overall wall-clock deadline, so a flapping WAN link
+/// can slow a transfer down but never wedge the thread driving it.
+pub struct RetryPolicy {
+    /// Consecutive no-progress attempts allowed (including the first).
+    pub max_attempts: u32,
+    /// First backoff; doubles per failed attempt up to `max_backoff_ms`.
+    pub base_backoff_ms: u64,
+    pub max_backoff_ms: u64,
+    /// Per-attempt connection bound — a blackholed peer fails fast
+    /// instead of hanging until the OS gives up.
+    pub connect_timeout: Duration,
+    /// Per-attempt bound on waiting for response bytes.
+    pub attempt_timeout: Duration,
+    /// Wall-clock budget across all attempts and backoffs.
+    pub overall_deadline: Duration,
+    rng: Rng,
+}
+
+impl RetryPolicy {
+    /// Defaults sized for a WAN pull: 8 attempts, 20 ms → 2 s backoff,
+    /// 5 s connects, 60 s reads, 10 min overall.  `seed` drives the
+    /// jitter — same seed, same backoff schedule (chaos replays stay
+    /// deterministic).
+    pub fn new(seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 8,
+            base_backoff_ms: 20,
+            max_backoff_ms: 2_000,
+            connect_timeout: Duration::from_secs(5),
+            attempt_timeout: Duration::from_secs(60),
+            overall_deadline: Duration::from_secs(600),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// A client for `base` carrying this policy's per-attempt timeouts.
+    pub fn client(&self, base: &str) -> Client {
+        let mut c = Client::new(base);
+        c.set_connect_timeout(self.connect_timeout);
+        c.set_read_timeout(self.attempt_timeout);
+        c
+    }
+
+    /// Backoff before the retry after failed attempt `attempt` (0-based):
+    /// `base × 2^attempt`, capped, scaled by jitter in [0.5, 1.5) so
+    /// pullers that failed together don't retry in lockstep.
+    pub fn backoff(&mut self, attempt: u32) -> Duration {
+        let exp = self
+            .base_backoff_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.max_backoff_ms.max(self.base_backoff_ms));
+        let jitter = 0.5 + self.rng.f64();
+        Duration::from_millis((exp as f64 * jitter) as u64)
+    }
+
+    /// Run `op` (an idempotent request; it receives the 0-based attempt
+    /// index) under the attempt and deadline budget.  Callers that can
+    /// make partial progress (resume-from-offset) drive the loop
+    /// themselves and use [`RetryPolicy::backoff`] directly.
+    pub fn run<T>(
+        &mut self,
+        mut op: impl FnMut(u32) -> std::io::Result<T>,
+    ) -> Result<T, RetryExhausted> {
+        let t0 = Instant::now();
+        let budget = self.max_attempts.max(1);
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..budget {
+            if attempt > 0 {
+                std::thread::sleep(self.backoff(attempt - 1));
+            }
+            if t0.elapsed() >= self.overall_deadline {
+                return Err(RetryExhausted {
+                    attempts: attempt,
+                    last_error: last
+                        .unwrap_or_else(|| bad("retry deadline exhausted before first attempt")),
+                });
+            }
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(RetryExhausted {
+            attempts: budget,
+            last_error: last.unwrap_or_else(|| bad("no attempts recorded")),
+        })
+    }
+}
+
+/// Terminal retry failure: the attempt or deadline budget is spent.
+#[derive(Debug)]
+pub struct RetryExhausted {
+    pub attempts: u32,
+    pub last_error: std::io::Error,
+}
+
+impl std::fmt::Display for RetryExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "retry budget exhausted after {} attempts: {}", self.attempts, self.last_error)
+    }
+}
+
+impl std::error::Error for RetryExhausted {}
 
 #[cfg(test)]
 mod tests {
@@ -1086,5 +1424,120 @@ mod tests {
             vec![],
         );
         assert_eq!(req.segments(), vec!["coordinators", "app-3", "checkpoints", "ckpt-7"]);
+    }
+
+    #[test]
+    fn parse_range_specs() {
+        assert_eq!(parse_range(None, 100), RangeSpec::Whole);
+        assert_eq!(parse_range(Some("bytes=0-49"), 100), RangeSpec::Slice { start: 0, end: 49 });
+        assert_eq!(parse_range(Some("bytes=10-"), 100), RangeSpec::Slice { start: 10, end: 99 });
+        // an over-long end is clamped, not rejected (RFC 9110 §14.1.2)
+        assert_eq!(parse_range(Some("bytes=90-200"), 100), RangeSpec::Slice { start: 90, end: 99 });
+        assert_eq!(parse_range(Some("bytes=100-"), 100), RangeSpec::Unsatisfiable);
+        assert_eq!(parse_range(Some("bytes=5-3"), 100), RangeSpec::Whole);
+        assert_eq!(parse_range(Some("lines=1-2"), 100), RangeSpec::Whole);
+        assert_eq!(parse_range(Some("bytes=0-"), 0), RangeSpec::Unsatisfiable);
+    }
+
+    fn ranged_server(payload: Vec<u8>) -> Server {
+        let handler: Handler = Arc::new(move |req: &mut Request| {
+            ranged_response(
+                req.headers.get("range").map(|s| s.as_str()),
+                &payload,
+                "application/octet-stream",
+            )
+        });
+        Server::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn ranged_get_roundtrip() {
+        let payload: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let server = ranged_server(payload.clone());
+        let client = Client::new(&server.addr().to_string());
+        // whole body advertises resumability
+        let r = client.get("/img").unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, payload);
+        assert_eq!(r.headers.get("accept-ranges").map(|s| s.as_str()), Some("bytes"));
+        // a middle slice comes back 206 with its exact coordinates
+        let r = client.get_with("/img", &[("range", "bytes=100-199".into())]).unwrap();
+        assert_eq!(r.status, 206);
+        assert_eq!(r.body, &payload[100..200]);
+        assert_eq!(
+            r.headers.get("content-range").map(|s| s.as_str()),
+            Some("bytes 100-199/1000")
+        );
+        // open-ended resume from an offset
+        let r = client.get_with("/img", &[("range", "bytes=900-".into())]).unwrap();
+        assert_eq!(r.status, 206);
+        assert_eq!(r.body, &payload[900..]);
+        // past the end
+        let r = client.get_with("/img", &[("range", "bytes=1000-".into())]).unwrap();
+        assert_eq!(r.status, 416);
+        assert_eq!(r.headers.get("content-range").map(|s| s.as_str()), Some("bytes */1000"));
+    }
+
+    #[test]
+    fn get_stream_flows_body_into_sink() {
+        let payload: Vec<u8> = (0..5000u32).map(|i| (i % 241) as u8).collect();
+        let server = ranged_server(payload.clone());
+        let client = Client::new(&server.addr().to_string());
+        let mut sink = Vec::new();
+        let r = client
+            .get_stream("/img", &[("range", "bytes=0-499".into())], &mut sink)
+            .unwrap();
+        assert_eq!(r.status, 206);
+        assert!(r.body.is_empty(), "2xx bodies go to the sink, not the response");
+        assert_eq!(sink, &payload[..500]);
+    }
+
+    #[test]
+    fn retry_policy_is_bounded_and_reports_attempts() {
+        let mut p = RetryPolicy::new(7);
+        p.max_attempts = 3;
+        p.base_backoff_ms = 1;
+        p.max_backoff_ms = 2;
+        let mut calls = 0u32;
+        let err = p
+            .run::<()>(|_a| {
+                calls += 1;
+                Err(bad("down"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 3, "exactly max_attempts calls");
+        assert_eq!(err.attempts, 3);
+        // a transient failure heals within the budget
+        let mut p = RetryPolicy::new(7);
+        p.base_backoff_ms = 1;
+        p.max_backoff_ms = 2;
+        let v = p.run(|a| if a < 2 { Err(bad("flap")) } else { Ok(42) }).unwrap();
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn retry_backoff_is_seeded_and_capped() {
+        let mut p = RetryPolicy::new(11);
+        p.base_backoff_ms = 100;
+        p.max_backoff_ms = 400;
+        for a in 0..10 {
+            let b = p.backoff(a).as_millis() as u64;
+            // cap 400 ms × jitter [0.5, 1.5) ⇒ [50, 600)
+            assert!((50..600).contains(&b), "attempt {a}: {b}ms");
+        }
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut p = RetryPolicy::new(seed);
+            (0..4).map(|a| p.backoff(a)).collect()
+        };
+        assert_eq!(schedule(5), schedule(5), "same seed, same jitter");
+        assert_ne!(schedule(5), schedule(6), "different seeds diverge");
+    }
+
+    #[test]
+    fn connect_timeout_keeps_the_happy_path_working() {
+        let server = echo_server();
+        let mut c = Client::new(&server.addr().to_string());
+        c.set_connect_timeout(Duration::from_millis(500));
+        assert_eq!(c.get("/x").unwrap().status, 200);
     }
 }

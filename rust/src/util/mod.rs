@@ -10,6 +10,7 @@
 
 pub mod args;
 pub mod benchkit;
+pub mod flaky;
 pub mod http;
 pub mod ids;
 pub mod json;

@@ -303,6 +303,97 @@ fn f<R: std::io::Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
 }
 
 // ---------------------------------------------------------------------------
+// L3c: unbounded-retry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn client_retry_loop_without_bound_flagged() {
+    let src = r#"
+fn f(client: &Client) {
+    loop {
+        if client.get("/x").is_ok() {
+            return;
+        }
+    }
+}
+"#;
+    assert_eq!(rules_at(COORD, src), vec![(4, "unbounded-retry".into())]);
+}
+
+#[test]
+fn client_loop_with_attempt_budget_ok() {
+    let src = r#"
+fn f(client: &Client, max_attempts: u32) {
+    let mut attempts = 0;
+    while attempts < max_attempts {
+        if client.get("/x").is_ok() {
+            return;
+        }
+        attempts += 1;
+    }
+}
+"#;
+    assert!(rules_at(COORD, src).is_empty());
+}
+
+#[test]
+fn client_loop_with_deadline_ok_in_http_scope() {
+    let src = r#"
+fn await_up(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if Client::new(addr).get("/ping").is_ok() || Instant::now() >= deadline {
+            return;
+        }
+    }
+}
+"#;
+    assert!(rules_at(HTTP, src).is_empty());
+}
+
+#[test]
+fn for_loops_and_out_of_scope_files_not_scanned() {
+    // `for` is bounded by its iterator; storage/ is outside the rule's
+    // coordinator//http scope
+    let bounded = r#"
+fn f(client: &Client) {
+    for _ in 0..3 {
+        let _ = client.get("/x");
+    }
+}
+"#;
+    assert!(rules_at(COORD, bounded).is_empty());
+    let spin = r#"
+fn f(client: &Client) {
+    loop {
+        if client.get("/x").is_ok() {
+            return;
+        }
+    }
+}
+"#;
+    assert!(rules_at(PLAIN, spin).is_empty());
+}
+
+#[test]
+fn client_spin_loop_in_test_mod_ok() {
+    // test helpers may poll freely; the harness bounds their lifetime
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    fn wait_up(client: &Client) {
+        loop {
+            if client.get("/ping").is_ok() {
+                return;
+            }
+        }
+    }
+}
+"#;
+    assert!(rules_at(COORD, src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
 // L4: panic-path
 // ---------------------------------------------------------------------------
 

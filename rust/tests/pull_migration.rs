@@ -1,0 +1,429 @@
+//! WAN-resilient pull-mode migration, end to end: resumable range
+//! fetches through a lossy link ([`FlakyProxy`]), content-addressed
+//! dedup across ranks, zrle wire compression, and the structured-502 /
+//! rollback contract of a pull that exhausts its retry budget.
+
+use cacs::coordinator::rest;
+use cacs::coordinator::service::{CacsService, ServiceConfig};
+use cacs::dckpt::delta::{chunk_digest, DEFAULT_CHUNK_SIZE};
+use cacs::storage::mem::MemStore;
+use cacs::storage::ObjectStore;
+use cacs::util::flaky::FlakyProxy;
+use cacs::util::http::{ranged_response, Client, Handler, Request, Response, Server};
+use cacs::util::json::Json;
+use cacs::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start_cacs() -> (Server, Client, Arc<MemStore>) {
+    let store = Arc::new(MemStore::new());
+    let svc = CacsService::new(
+        store.clone(),
+        ServiceConfig { monitor_period: None, ..ServiceConfig::default() },
+    );
+    let srv = rest::serve(svc, "127.0.0.1:0", 4).unwrap();
+    let client = Client::new(&srv.addr().to_string());
+    (srv, client, store)
+}
+
+fn submit_dmtcp1(client: &Client, name: &str, n: u64) -> String {
+    let asr = Json::object([
+        ("name", name.into()),
+        ("workload", Json::object([("kind", "dmtcp1".into()), ("n", n.into())])),
+        ("n_vms", 1u64.into()),
+    ]);
+    let resp = client.post("/coordinators", &asr).unwrap();
+    assert_eq!(resp.status, 201, "{}", String::from_utf8_lossy(&resp.body));
+    resp.json().unwrap().get("id").as_str().unwrap().to_string()
+}
+
+/// Bounded poll on the observable REST state (no bare sleeps).
+fn wait_iter(client: &Client, id: &str, min: u64) {
+    for _ in 0..400 {
+        let ok = client
+            .get(&format!("/coordinators/{id}"))
+            .ok()
+            .and_then(|r| r.json().ok())
+            .map(|j| {
+                j.get("state").as_str() == Some("RUNNING")
+                    && j.get("iteration").as_u64().unwrap_or(0) >= min
+            })
+            .unwrap_or(false);
+        if ok {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("{id} never reached RUNNING at iteration {min}");
+}
+
+fn rand_payload(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(len + 8);
+    while out.len() < len {
+        out.extend(rng.next_u64().to_le_bytes());
+    }
+    out.truncate(len);
+    out
+}
+
+fn hex_digests(payload: &[u8], chunk_size: usize) -> Vec<Json> {
+    payload
+        .chunks(chunk_size)
+        .map(|c| format!("{:016x}", chunk_digest(c)).into())
+        .collect()
+}
+
+fn proc_entry(payload: &[u8], chunk_size: usize) -> Json {
+    Json::object([
+        ("len", (payload.len() as u64).into()),
+        ("digests", Json::Arr(hex_digests(payload, chunk_size))),
+    ])
+}
+
+/// A hand-built pull manifest for one cut (the shape
+/// `migrate::build_manifest` emits), with a fast default retry budget.
+fn manifest(src_app: &str, pull_from: &str, chunk_size: usize, seq: u64, procs: Vec<Json>) -> Json {
+    let cut = Json::object([("seq", seq.into()), ("procs", Json::Arr(procs))]);
+    let mut m = Json::object([
+        ("src_app", src_app.into()),
+        ("pull_from", pull_from.into()),
+        ("compress", false.into()),
+        ("seed", 11u64.into()),
+        ("chunk_size", (chunk_size as u64).into()),
+        ("cuts", Json::Arr(vec![cut])),
+    ]);
+    m.set(
+        "retry",
+        Json::object([
+            ("max_attempts", 12u64.into()),
+            ("base_backoff_ms", 1u64.into()),
+            ("max_backoff_ms", 4u64.into()),
+            ("overall_deadline_ms", 60_000u64.into()),
+        ]),
+    );
+    m
+}
+
+/// A stub source coordinator: serves fixed image bytes (keyed by the
+/// exact request path, query included) through the real
+/// [`ranged_response`] Range/206 logic.
+fn stub_source(images: BTreeMap<String, Vec<u8>>) -> Server {
+    let handler: Handler = Arc::new(move |req: &mut Request| match images.get(&req.path) {
+        Some(body) => {
+            let range = req.headers.get("range").map(|s| s.as_str());
+            ranged_response(range, body, "application/octet-stream")
+        }
+        None => Response::not_found(),
+    });
+    Server::start("127.0.0.1:0", 4, handler).unwrap()
+}
+
+#[test]
+fn pull_migration_survives_a_link_dropping_every_96k() {
+    // two live CACS; the destination pulls a ~1 MiB image through a
+    // proxy that severs the connection every 96 kB of download traffic.
+    // The global drop clock means restart-from-zero never finishes:
+    // completing at all proves genuine resume-from-offset.
+    let (srv_a, ca, src_store) = start_cacs();
+    let (_srv_b, cb, dst_store) = start_cacs();
+    let src = submit_dmtcp1(&ca, "wan-d1", 1 << 18); // 4·2^18 + 8 B image
+    wait_iter(&ca, &src, 3);
+    let px = FlakyProxy::start(&srv_a.addr().to_string(), 96 * 1024).unwrap();
+
+    let body = Json::object([
+        ("dst", cb.base().into()),
+        ("mode", "pull".into()),
+        ("pull_from", px.addr().to_string().into()),
+        ("seed", 7u64.into()),
+        (
+            "retry",
+            Json::object([
+                ("max_attempts", 10u64.into()),
+                ("base_backoff_ms", 1u64.into()),
+                ("max_backoff_ms", 5u64.into()),
+                ("overall_deadline_ms", 120_000u64.into()),
+            ]),
+        ),
+    ]);
+    let resp = ca.post(&format!("/coordinators/{src}/migrate"), &body).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let rep = resp.json().unwrap();
+    assert_eq!(rep.get("migrated").as_bool(), Some(true));
+    assert_eq!(rep.get("pull").as_bool(), Some(true));
+    assert!(rep.get("bytes_moved").as_u64().unwrap() > 0);
+
+    // the link really flapped, and every flap cost at most one resume
+    // window (the unverified tail of the attempt it killed)
+    let killed = px.killed();
+    assert!(killed >= 5, "a 1 MiB pull over 96 kB drops saw only {killed} cuts");
+    let retrans = rep.get("retransmitted_bytes").as_u64().unwrap();
+    assert!(retrans > 0, "drops mid-body must discard some unverified bytes");
+    assert!(
+        retrans <= killed * DEFAULT_CHUNK_SIZE as u64,
+        "retransmitted {retrans} B > {killed} drops x one {DEFAULT_CHUNK_SIZE} B resume window"
+    );
+
+    // no acked checkpoint lost: the migrated cut is held on the
+    // destination, the clone runs from it, the source is a tombstone
+    let dst_id = rep.get("dst").as_str().unwrap().to_string();
+    let cut_seq = rep.get("seq").as_u64().unwrap();
+    let cut_iter = rep.get("iteration").as_u64().unwrap();
+    let held = cb.get(&format!("/coordinators/{dst_id}/checkpoints")).unwrap().json().unwrap();
+    assert!(
+        held.as_arr().unwrap().iter().any(|c| c.get("seq").as_u64() == Some(cut_seq)),
+        "migrated cut seq {cut_seq} not acked on the destination"
+    );
+    let dj = cb.get(&format!("/coordinators/{dst_id}")).unwrap().json().unwrap();
+    assert_eq!(dj.get("state").as_str(), Some("RUNNING"));
+    assert!(dj.get("iteration").as_u64().unwrap() >= cut_iter);
+    let sj = ca.get(&format!("/coordinators/{src}")).unwrap().json().unwrap();
+    assert_eq!(sj.get("state").as_str(), Some("TERMINATED"));
+    assert!(src_store.list("").unwrap().is_empty(), "source store must be empty");
+    // the chunk index survives the pull for future cross-app dedup
+    assert!(!dst_store.list("cas/").unwrap().is_empty());
+}
+
+#[test]
+fn compressed_pull_migration_moves_the_app() {
+    // zrle negotiation end to end: accept-encoding request header,
+    // encoded wire body, incremental decode on the puller
+    let (srv_a, ca, _src_store) = start_cacs();
+    let (_srv_b, cb, _dst_store) = start_cacs();
+    let src = submit_dmtcp1(&ca, "wan-z", 1 << 14);
+    wait_iter(&ca, &src, 3);
+
+    let body = Json::object([
+        ("dst", cb.base().into()),
+        ("mode", "pull".into()),
+        ("pull_from", srv_a.addr().to_string().into()),
+        ("compress", true.into()),
+        ("seed", 3u64.into()),
+    ]);
+    let resp = ca.post(&format!("/coordinators/{src}/migrate"), &body).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let rep = resp.json().unwrap();
+    assert_eq!(rep.get("pull").as_bool(), Some(true));
+    assert!(rep.get("dedup_ratio").as_f64().unwrap() >= 1.0);
+    let dst_id = rep.get("dst").as_str().unwrap().to_string();
+    let dj = cb.get(&format!("/coordinators/{dst_id}")).unwrap().json().unwrap();
+    assert_eq!(dj.get("state").as_str(), Some("RUNNING"));
+    let sj = ca.get(&format!("/coordinators/{src}")).unwrap().json().unwrap();
+    assert_eq!(sj.get("state").as_str(), Some("TERMINATED"));
+}
+
+#[test]
+fn shared_base_ranks_fetch_shared_chunks_exactly_once() {
+    // two ranks sharing 18 of 20 chunks (90%): the shared chunks cross
+    // the wire once, rank 1 assembles the rest out of the chunk index,
+    // and both committed images are byte-identical to the source's
+    let cs = DEFAULT_CHUNK_SIZE;
+    let rank0 = rand_payload(41, 20 * cs);
+    let mut rank1 = rank0.clone();
+    rank1[3 * cs..4 * cs].copy_from_slice(&rand_payload(42, cs));
+    rank1[12 * cs..13 * cs].copy_from_slice(&rand_payload(43, cs));
+
+    let src = stub_source(BTreeMap::from([
+        ("/coordinators/wan-src/checkpoints/9?proc=0".to_string(), rank0.clone()),
+        ("/coordinators/wan-src/checkpoints/9?proc=1".to_string(), rank1.clone()),
+    ]));
+    let (_srv, cd, _store) = start_cacs();
+    let id = submit_dmtcp1(&cd, "vessel", 64);
+    wait_iter(&cd, &id, 1);
+
+    let m = manifest(
+        "wan-src",
+        &src.addr().to_string(),
+        cs,
+        9,
+        vec![proc_entry(&rank0, cs), proc_entry(&rank1, cs)],
+    );
+    let resp = cd.post(&format!("/coordinators/{id}/pull"), &m).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let stats = resp.json().unwrap();
+    assert_eq!(stats.get("cuts_pulled").as_u64(), Some(1));
+    assert_eq!(stats.get("bytes_total").as_u64(), Some(40 * cs as u64));
+    // 20 chunks for rank 0 + the 2 rank-1 chunks it does not share —
+    // nothing fetched twice
+    assert_eq!(stats.get("chunks_added").as_u64(), Some(22));
+    assert_eq!(stats.get("bytes_fetched").as_u64(), Some(22 * cs as u64));
+    assert_eq!(stats.get("chunks_reused").as_u64(), Some(18));
+    assert_eq!(stats.get("bytes_reused").as_u64(), Some(18 * cs as u64));
+    assert!(stats.get("dedup_ratio").as_f64().unwrap() >= 1.8);
+
+    // committed images are byte-identical to what the source serves
+    for (proc, want) in [(0, &rank0), (1, &rank1)] {
+        let got = cd.get(&format!("/coordinators/{id}/checkpoints/9?proc={proc}")).unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(&got.body, want, "proc {proc} image differs after pull");
+    }
+
+    // re-pulling the same manifest is idempotent: the cut is already
+    // acked here, so nothing touches the wire
+    let again = cd.post(&format!("/coordinators/{id}/pull"), &m).unwrap();
+    assert_eq!(again.status, 200);
+    let s2 = again.json().unwrap();
+    assert_eq!(s2.get("cuts_skipped").as_u64(), Some(1));
+    assert_eq!(s2.get("cuts_pulled").as_u64(), Some(0));
+    assert_eq!(s2.get("bytes_fetched").as_u64(), Some(0));
+}
+
+#[test]
+fn exhausted_pull_returns_structured_502_and_rolls_back_cas() {
+    // the manifest lies about the last chunk's digest, so verification
+    // can never pass: the puller must burn its budget, report where it
+    // stalled, and leave no orphaned chunks or half-committed images
+    let cs = 16 * 1024;
+    let payload = rand_payload(7, 4 * cs);
+    let src = stub_source(BTreeMap::from([(
+        "/coordinators/wan-src/checkpoints/9?proc=0".to_string(),
+        payload.clone(),
+    )]));
+    let (_srv, cd, store) = start_cacs();
+    let id = submit_dmtcp1(&cd, "vessel", 64);
+    wait_iter(&cd, &id, 1);
+
+    let mut digests = hex_digests(&payload, cs);
+    let real = chunk_digest(&payload[3 * cs..]);
+    digests[3] = format!("{:016x}", real ^ 0xdead).into();
+    let bad = Json::object([
+        ("len", (payload.len() as u64).into()),
+        ("digests", Json::Arr(digests)),
+    ]);
+    let mut m = manifest("wan-src", &src.addr().to_string(), cs, 9, vec![bad]);
+    m.set(
+        "retry",
+        Json::object([
+            ("max_attempts", 3u64.into()),
+            ("base_backoff_ms", 1u64.into()),
+            ("max_backoff_ms", 2u64.into()),
+            ("overall_deadline_ms", 5_000u64.into()),
+        ]),
+    );
+
+    let resp = cd.post(&format!("/coordinators/{id}/pull"), &m).unwrap();
+    assert_eq!(resp.status, 502, "{}", String::from_utf8_lossy(&resp.body));
+    let info = resp.json().unwrap();
+    // structured resume accounting: three verified chunks, stalled at
+    // the corrupt fourth
+    assert_eq!(info.get("attempts").as_u64(), Some(3));
+    assert_eq!(info.get("last_offset").as_u64(), Some(3 * cs as u64));
+    assert_eq!(info.get("bytes_verified").as_u64(), Some(3 * cs as u64));
+    assert!(
+        info.get("error").as_str().unwrap().contains("digest mismatch"),
+        "unexpected error body: {info:?}"
+    );
+
+    // rollback: the three verified chunks were inserted, then deleted
+    // with the failed transfer; no image record was committed
+    assert!(store.list("cas/").unwrap().is_empty(), "orphaned cas chunks after failed pull");
+    let held = cd.get(&format!("/coordinators/{id}/checkpoints")).unwrap().json().unwrap();
+    assert!(
+        held.as_arr().unwrap().iter().all(|c| c.get("seq").as_u64() != Some(9)),
+        "failed pull must not ack the cut"
+    );
+}
+
+#[test]
+fn dead_source_pull_fails_structured_and_source_recovers() {
+    // pull_from points at a dead port: the migrate call must come back
+    // as a structured 502, the source must resume RUNNING with no
+    // leftover cuts, and the destination must hold no half-made clone
+    let (_srv_a, ca, src_store) = start_cacs();
+    let (_srv_b, cb, dst_store) = start_cacs();
+    let src = submit_dmtcp1(&ca, "wan-dead", 256);
+    wait_iter(&ca, &src, 3);
+    // bind-then-drop guarantees a connection-refused port
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+
+    let body = Json::object([
+        ("dst", cb.base().into()),
+        ("mode", "pull".into()),
+        ("pull_from", dead.into()),
+        (
+            "retry",
+            Json::object([
+                ("max_attempts", 2u64.into()),
+                ("base_backoff_ms", 1u64.into()),
+                ("max_backoff_ms", 2u64.into()),
+                ("connect_timeout_ms", 200u64.into()),
+                ("overall_deadline_ms", 3_000u64.into()),
+            ]),
+        ),
+    ]);
+    let resp = ca.post(&format!("/coordinators/{src}/migrate"), &body).unwrap();
+    assert_eq!(resp.status, 502, "{}", String::from_utf8_lossy(&resp.body));
+    let info = resp.json().unwrap();
+    assert!(info.get("attempts").as_u64().unwrap() >= 2);
+    assert_eq!(info.get("last_offset").as_u64(), Some(0));
+    assert_eq!(info.get("bytes_verified").as_u64(), Some(0));
+
+    // source rolled back: RUNNING again, still stepping, and the cut
+    // this attempt made was deleted (records and image bytes both)
+    wait_iter(&ca, &src, 4);
+    let held = ca.get(&format!("/coordinators/{src}/checkpoints")).unwrap().json().unwrap();
+    assert_eq!(held, Json::Arr(vec![]), "rolled-back migrate left a cut behind");
+    assert!(src_store.list(&format!("{src}/")).unwrap().is_empty());
+
+    // destination: the half-made clone is gone, and nothing hit its store
+    let dl = cb.get("/coordinators").unwrap().json().unwrap();
+    assert_eq!(dl, Json::Arr(vec![]), "destination kept a clone of a failed pull");
+    assert!(dst_store.list("").unwrap().is_empty());
+}
+
+#[test]
+fn killed_puller_resumes_to_a_byte_identical_image() {
+    // property: for several seeds, a proxy severing the link at a
+    // seed-derived byte boundary (never chunk-aligned) still yields a
+    // committed image byte-identical to the source's, with the
+    // re-transfer bounded by drops x one resume window
+    let cs = 16 * 1024;
+    for case in 0..3u64 {
+        let mut rng = Rng::new(100 + case);
+        // > chunk + headers, else no attempt can ever verify a chunk
+        let kill_every = 20_000 + rng.below(40_000);
+        let payload = rand_payload(200 + case, 9 * cs + 5_000);
+
+        let src = stub_source(BTreeMap::from([(
+            format!("/coordinators/wan-src/checkpoints/{}?proc=0", 100 + case),
+            payload.clone(),
+        )]));
+        let px = FlakyProxy::start(&src.addr().to_string(), kill_every).unwrap();
+        let (_srv, cd, _store) = start_cacs();
+        let id = submit_dmtcp1(&cd, "vessel", 64);
+        wait_iter(&cd, &id, 1);
+
+        let m = manifest(
+            "wan-src",
+            &px.addr().to_string(),
+            cs,
+            100 + case,
+            vec![proc_entry(&payload, cs)],
+        );
+        let resp = cd.post(&format!("/coordinators/{id}/pull"), &m).unwrap();
+        assert_eq!(
+            resp.status,
+            200,
+            "case {case} (kill_every {kill_every}): {}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let stats = resp.json().unwrap();
+        let killed = px.killed();
+        assert!(killed >= 1, "case {case}: the {kill_every}-byte boundary never hit");
+        let retrans = stats.get("retransmitted_bytes").as_u64().unwrap();
+        assert!(
+            retrans <= killed * cs as u64,
+            "case {case}: retransmitted {retrans} B > {killed} drops x {cs} B window"
+        );
+
+        let got = cd
+            .get(&format!("/coordinators/{id}/checkpoints/{}?proc=0", 100 + case))
+            .unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, payload, "case {case}: committed image differs");
+    }
+}
